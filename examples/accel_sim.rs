@@ -1,0 +1,72 @@
+//! Accelerator-simulation walkthrough: run all three DeConv accelerators
+//! over the Table-I GAN zoo, print per-layer detail for one model, and
+//! demonstrate the functional simulator's bit-exactness on real tensors.
+//!
+//! Run with: `cargo run --release --example accel_sim [-- --model dcgan]`
+
+use wingan::accel::functional::{run_tdc_deconv, run_winograd_deconv};
+use wingan::accel::{simulate_model, AccelConfig};
+use wingan::cli::Args;
+use wingan::gan::workload::Method;
+use wingan::gan::zoo::{self, Scale};
+use wingan::tdc;
+use wingan::util::prng::Rng;
+use wingan::util::tensor::{Filter4, Tensor3};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let wanted = args.get_or("model", "dcgan").to_string();
+    let cfg = AccelConfig::default();
+
+    // --- headline table ----------------------------------------------------
+    println!("{}", wingan::report::fig8(&cfg));
+
+    // --- per-layer detail for one model -------------------------------------
+    let g = zoo::all(Scale::Paper)
+        .into_iter()
+        .find(|g| g.name.eq_ignore_ascii_case(&wanted))
+        .unwrap_or_else(|| zoo::dcgan(Scale::Paper));
+    println!("per-layer detail — {} (Winograd engine):", g.name);
+    let sim = simulate_model(&g, Method::Winograd, &cfg, true);
+    for (i, (l, ls)) in g.deconv_layers().zip(sim.layers.iter()).enumerate() {
+        println!(
+            "  L{i}: {}x{}x{}x{} K={} S={}  t={:.4} ms (compute {:.4}, transfer {:.4}, prologue {:.4})  {}",
+            l.c_in,
+            l.c_out,
+            l.h_in,
+            l.w_in,
+            l.k,
+            l.s,
+            ls.t_total * 1e3,
+            ls.t_compute * 1e3,
+            ls.t_transfer * 1e3,
+            ls.t_prologue * 1e3,
+            if ls.t_transfer > ls.t_compute { "transfer-bound" } else { "compute-bound" }
+        );
+    }
+
+    // --- functional simulator equivalence (Fig. 2 claim on real tensors) ---
+    println!("\nfunctional dataflow equivalence (random tensors):");
+    let mut rng = Rng::new(2024);
+    for (k, s) in [(5usize, 2usize), (4, 2), (3, 1)] {
+        let p = tdc::default_padding(k, s);
+        let x = Tensor3::from_vec(6, 10, 12, rng.normal_vec(6 * 10 * 12));
+        let w = Filter4::from_vec(6, 4, k, k, rng.normal_vec(6 * 4 * k * k));
+        let want = tdc::deconv_naive(&x, &w, s, p);
+        let win = run_winograd_deconv(&x, &w, s, p);
+        let td = run_tdc_deconv(&x, &w, s, p);
+        println!(
+            "  K={k} S={s}: |winograd - standard| = {:.2e}, |tdc - standard| = {:.2e}, \
+             mults winograd/tdc = {}/{} ({:.0}% skipped)",
+            want.max_abs_diff(&win.y),
+            want.max_abs_diff(&td.y),
+            win.events.mults,
+            td.events.mults,
+            100.0 * (1.0 - win.events.mults as f64 / td.events.mults as f64)
+        );
+        anyhow::ensure!(want.max_abs_diff(&win.y) < 1e-9);
+    }
+
+    println!("\naccel_sim OK");
+    Ok(())
+}

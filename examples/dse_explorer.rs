@@ -1,0 +1,50 @@
+//! Design-space exploration walkthrough (paper §IV.C): sweep tiling
+//! factors under the Virtex7-485T envelope, print the roof/bandwidth
+//! table, show the cross-layer optimisation picking the paper's (4, 128),
+//! and sweep the bandwidth model of eq. 7.
+//!
+//! Run with: `cargo run --release --example dse_explorer`
+
+use wingan::accel::AccelConfig;
+use wingan::dse::{self, VIRTEX7_485T};
+use wingan::gan::zoo::{self, Scale};
+
+fn main() {
+    let models = zoo::all(Scale::Paper);
+
+    println!("envelope: Virtex7-485T ({} DSP48E, {} BRAM18K)", VIRTEX7_485T.dsp48e, VIRTEX7_485T.bram18k);
+    let points = dse::sweep(&models, &VIRTEX7_485T);
+    println!("\n{}", dse::render_table(&points, 16));
+
+    let best = dse::optimal(&models, &VIRTEX7_485T);
+    println!(
+        "selected design point: (T_m, T_n) = ({}, {}) — paper chose (4, 128)",
+        best.t_m, best.t_n
+    );
+
+    // per-layer roof + bandwidth at the chosen point (the roofline pairs
+    // the paper enumerates)
+    let cfg = AccelConfig::default().with_tiles(best.t_m, best.t_n);
+    println!("\nper-layer roof / bandwidth (DCGAN, Winograd engine):");
+    for (i, l) in zoo::dcgan(Scale::Paper).deconv_layers().enumerate() {
+        println!(
+            "  L{i}: roof {:>7.1} GOP/s   bandwidth requirement {:>6.2} GB/s   C(K_C)/m^2 = {:.2}",
+            dse::computational_roof(l, &cfg),
+            dse::bandwidth_requirement(l, &cfg) / 1e9,
+            dse::eq5_constant(l.k, l.s, l.p),
+        );
+    }
+
+    // infeasible corner: show the DSP wall
+    println!("\nDSP wall (5 DSP48E per f32 MAC):");
+    for (tm, tn) in [(4, 128), (8, 128), (16, 128)] {
+        let p = dse::evaluate(tm, tn, &models, &VIRTEX7_485T);
+        println!(
+            "  (T_m, T_n) = ({:>2}, {:>3}) -> {} DSP48E  {}",
+            tm,
+            tn,
+            p.dsp,
+            if p.feasible { "fits" } else { "EXCEEDS 2800" }
+        );
+    }
+}

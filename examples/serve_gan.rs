@@ -1,0 +1,115 @@
+//! End-to-end serving driver (the repository's E2E validation run —
+//! recorded in EXPERIMENTS.md):
+//!
+//! * starts the coordinator (engine thread compiles the DCGAN-small
+//!   Winograd artifacts via PJRT),
+//! * verifies numerics against the jax goldens,
+//! * replays a Poisson request stream through the dynamic batcher at
+//!   several arrival rates, reporting latency percentiles + throughput,
+//! * A/B-compares the winograd and tdc compute paths on identical inputs
+//!   (same function, different fast algorithm — outputs must agree).
+//!
+//! Run with: `cargo run --release --example serve_gan [-- --model dcgan --requests 96]`
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+use wingan::cli::Args;
+use wingan::coordinator::{Coordinator, ServeConfig};
+use wingan::runtime::{Manifest, Runtime};
+use wingan::util::bin;
+use wingan::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let model = args.get_or("model", "dcgan").to_string();
+    let n_requests = args.get_usize("requests", 96).map_err(anyhow::Error::msg)?;
+    let dir = args.get_or("artifacts", "artifacts");
+
+    let manifest = Manifest::load(Path::new(dir))?;
+
+    // --- 0. numerics gate: PJRT vs jax goldens on this model ---------------
+    println!("== numerics gate ==");
+    {
+        let mut rt = Runtime::new()?;
+        for e in manifest.entries.iter().filter(|e| e.model == model) {
+            rt.load(e)?;
+            let diff = rt.verify_golden(&e.name)?;
+            println!("  {:<16} max|Δ| vs jax golden = {:.2e}", e.name, diff);
+            anyhow::ensure!(diff < 2e-4, "numerics gate failed for {}", e.name);
+        }
+    }
+
+    // --- 1. bring up the coordinator ---------------------------------------
+    println!("\n== coordinator bring-up ==");
+    let t0 = Instant::now();
+    let coord = Coordinator::start(
+        manifest,
+        ServeConfig {
+            max_wait: Duration::from_millis(10),
+            preload_models: Some(vec![model.clone()]),
+        },
+    )?;
+    println!("engine ready in {:?} (artifacts compiled once, cached)", t0.elapsed());
+    let route = coord.router().route(&model, "winograd").map_err(anyhow::Error::msg)?;
+    let input_len = route.sample_input_len;
+    let buckets = route.bucket_sizes();
+
+    // --- 2. Poisson load sweep ---------------------------------------------
+    println!("\n== load sweep ({n_requests} requests each, buckets {buckets:?}) ==");
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>10} {:>11} {:>10}",
+        "rate(req/s)", "p50(ms)", "p95(ms)", "p99(ms)", "img/s", "batch_eff", "batches"
+    );
+    for rate in [50.0, 200.0, 1000.0] {
+        let mut rng = Rng::new(42);
+        let t_start = Instant::now();
+        let mut pending = Vec::with_capacity(n_requests);
+        for i in 0..n_requests {
+            pending.push(
+                coord
+                    .submit(&model, "winograd", rng.normal_vec_f32(input_len))
+                    .map_err(anyhow::Error::msg)?,
+            );
+            if i + 1 < n_requests {
+                std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+            }
+        }
+        let mut lat = Vec::with_capacity(n_requests);
+        for (i, rx) in pending.into_iter().enumerate() {
+            let resp = rx.recv()?.map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(resp.output.len() == route.sample_output_len, "bad output len");
+            lat.push((i, resp.queue_time + resp.exec_time));
+        }
+        let wall = t_start.elapsed().as_secs_f64();
+        let mut ms: Vec<f64> = lat.iter().map(|(_, d)| d.as_secs_f64() * 1e3).collect();
+        ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| ms[(((p / 100.0) * ms.len() as f64) as usize).min(ms.len() - 1)];
+        let m = coord.metrics();
+        println!(
+            "{:<12} {:>10.2} {:>10.2} {:>10.2} {:>10.1} {:>11.2} {:>10}",
+            rate,
+            pct(50.0),
+            pct(95.0),
+            pct(99.0),
+            n_requests as f64 / wall,
+            m.batch_efficiency(),
+            m.batches
+        );
+    }
+
+    // --- 3. winograd vs tdc A/B on identical inputs -------------------------
+    println!("\n== method A/B (same input through both compute paths) ==");
+    let mut rng = Rng::new(1234);
+    let input = rng.normal_vec_f32(input_len);
+    let a = coord.generate(&model, "winograd", input.clone()).map_err(anyhow::Error::msg)?;
+    let b = coord.generate(&model, "tdc", input).map_err(anyhow::Error::msg)?;
+    let diff = bin::max_abs_diff(&a.output, &b.output);
+    println!("  max |winograd - tdc| = {diff:.2e} (same function, different fast algorithm)");
+    anyhow::ensure!(diff < 2e-3, "A/B mismatch");
+
+    println!("\n== final metrics ==");
+    println!("{}", coord.metrics().report());
+    coord.shutdown();
+    println!("serve_gan OK");
+    Ok(())
+}

@@ -1,0 +1,177 @@
+"""AOT compiler: lower the JAX generators to HLO *text* + golden vectors.
+
+This is the only place python touches the pipeline: ``make artifacts`` runs
+it once; afterwards the rust binary is self-contained.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (what the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``).  The HLO text parser reassigns ids and
+round-trips cleanly.  Computations are lowered with ``return_tuple=True``;
+the rust side unwraps with ``to_tuple1()``.
+
+Emits into --out-dir:
+  * ``<name>.hlo.txt``           one per (model, method, batch) and per
+                                 single-layer op
+  * ``golden/<name>.{in,out}.bin``  raw little-endian f32 tensors for the
+                                 rust integration tests
+  * ``manifest.json``            index of everything above with shapes
+
+Weights are baked into the HLO as constants, so each artifact's only runtime
+input is the latent/image batch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref, winograd_deconv as wd
+
+GENERATOR_BATCHES = (1, 4, 8)
+LAYER_OPS = (
+    # (name, c_in, c_out, k, s, h, w) -- one per Table-I kernel class
+    ("deconv_k5s2", 8, 16, 5, 2, 8, 8),
+    ("deconv_k4s2", 8, 16, 4, 2, 8, 8),
+    ("deconv_k3s1", 8, 16, 3, 1, 8, 8),
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: baked weights must survive the text round-trip
+    # (the default elides literals over ~1K elements to `constant({...})`,
+    # which the parser silently reads back as zeros!)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _write_bin(path: str, arr: np.ndarray) -> None:
+    np.asarray(arr, dtype="<f4").tofile(path)
+
+
+def emit_generators(out_dir: str, scale: str, methods, batches) -> list[dict]:
+    entries = []
+    models = M.zoo(scale)
+    for name, cfg in models.items():
+        params = M.init_params(cfg)
+        rng = np.random.default_rng(1000 + cfg.seed)
+        for method in methods:
+            fwd = M.batched_forward(cfg, params, method=method,
+                                    tile_block=M.AOT_TILE_BLOCK)
+            for b in batches:
+                tag = f"{name}_{method}_b{b}" if method != "winograd" else f"{name}_b{b}"
+                in_shape = (b,) + cfg.input_shape
+                spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+                lowered = jax.jit(fwd).lower(spec)
+                hlo = to_hlo_text(lowered)
+                hlo_rel = f"{tag}.hlo.txt"
+                with open(os.path.join(out_dir, hlo_rel), "w") as f:
+                    f.write(hlo)
+                # golden vectors
+                x = rng.standard_normal(in_shape).astype(np.float32)
+                if cfg.z_dim is None:
+                    x = np.tanh(x)  # image-ish range
+                y = np.asarray(jax.jit(fwd)(jnp.asarray(x)))
+                _write_bin(os.path.join(out_dir, "golden", f"{tag}.in.bin"), x)
+                _write_bin(os.path.join(out_dir, "golden", f"{tag}.out.bin"), y)
+                entries.append(
+                    {
+                        "name": tag,
+                        "kind": "generator",
+                        "model": name,
+                        "method": method,
+                        "batch": b,
+                        "hlo": hlo_rel,
+                        "input_shape": list(in_shape),
+                        "output_shape": [b] + list(cfg.output_shape),
+                        "golden_input": f"golden/{tag}.in.bin",
+                        "golden_output": f"golden/{tag}.out.bin",
+                    }
+                )
+                print(f"  wrote {tag}: in={list(in_shape)} out={[b] + list(cfg.output_shape)}")
+    return entries
+
+
+def emit_layer_ops(out_dir: str) -> list[dict]:
+    """Single DeConv layers (winograd path), for quickstart + runtime tests."""
+    entries = []
+    rng = np.random.default_rng(42)
+    for name, c_in, c_out, k, s, h, w_sp in LAYER_OPS:
+        p = ref.default_padding(k, s)
+        w = (rng.standard_normal((c_in, c_out, k, k)) / np.sqrt(c_in * k * k)).astype(
+            np.float32
+        )
+        fn = partial(wd.winograd_deconv, w=jnp.asarray(w), stride=s, padding=p)
+        spec = jax.ShapeDtypeStruct((c_in, h, w_sp), jnp.float32)
+        lowered = jax.jit(lambda x: fn(x)).lower(spec)
+        hlo_rel = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, hlo_rel), "w") as f:
+            f.write(to_hlo_text(lowered))
+        x = rng.standard_normal((c_in, h, w_sp)).astype(np.float32)
+        y = np.asarray(jax.jit(lambda x: fn(x))(jnp.asarray(x)))
+        _write_bin(os.path.join(out_dir, "golden", f"{name}.in.bin"), x)
+        _write_bin(os.path.join(out_dir, "golden", f"{name}.out.bin"), y)
+        entries.append(
+            {
+                "name": name,
+                "kind": "layer",
+                "model": name,
+                "method": "winograd",
+                "batch": 1,
+                "hlo": hlo_rel,
+                "input_shape": [c_in, h, w_sp],
+                "output_shape": [c_out, s * h, s * w_sp],
+                "golden_input": f"golden/{name}.in.bin",
+                "golden_output": f"golden/{name}.out.bin",
+            }
+        )
+        print(f"  wrote {name}")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--scale", default="small", choices=["small", "paper"])
+    ap.add_argument(
+        "--methods", default="winograd,tdc",
+        help="comma list of generator compute paths to AOT",
+    )
+    ap.add_argument("--batches", default=",".join(str(b) for b in GENERATOR_BATCHES))
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+    methods = tuple(args.methods.split(","))
+    batches = tuple(int(b) for b in args.batches.split(","))
+
+    print(f"[aot] generators (scale={args.scale}, methods={methods}, batches={batches})")
+    entries = emit_generators(out_dir, args.scale, methods, batches)
+    print("[aot] single-layer ops")
+    entries += emit_layer_ops(out_dir)
+
+    manifest = {
+        "version": 1,
+        "scale": args.scale,
+        "tolerance_note": "f32; rust integration tests use atol 2e-4 rel 2e-3",
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(entries)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 kernels: Pallas Winograd-DeConv engine + pure oracles.
+
+Modules:
+  ref              -- numpy oracles (ground truth)
+  tdc              -- JAX TDC decomposition + baseline deconvs
+  winograd         -- F(2x2,3x3) transforms + Pallas accelerating engine
+  winograd_deconv  -- the paper's fused fast algorithm
+"""

@@ -1,0 +1,354 @@
+"""Pure-numpy correctness oracles for the Winograd-DeConv kernel stack.
+
+Everything here is deliberately slow and obviously correct: nested loops,
+no vectorisation tricks.  These oracles are the ground truth that the JAX /
+Pallas implementations (tdc.py, winograd.py, winograd_deconv.py) are tested
+against, and they mirror the conventions used by the rust substrates
+(rust/src/tdc, rust/src/winograd).
+
+Conventions
+-----------
+* Single image, channel-first: ``x`` has shape ``[C_in, H, W]``.
+* DeConv (transposed-conv) filters use the conv-transpose layout
+  ``w[C_in, C_out, K, K]``.
+* DeConv semantics (the paper's "standard DeConv", Fig. 1a/2a)::
+
+      y[co, oy, ox] = sum_{ci, ky, kx} x[ci, iy, ix] * w[ci, co, ky, kx]
+        where  S*iy = oy + P - ky   and   S*ix = ox + P - kx,
+
+  with the output cropped to ``[C_out, S*H, S*W]``.  For the paper's layer
+  configs -- (K=5, S=2, P=2), (K=4, S=2, P=1), (K=3, S=1, P=1) -- this is
+  torch's ``ConvTranspose2d(stride=S, padding=P, output_padding=S-K+2P)``
+  and keeps ``H_O = S * H_I`` as the paper assumes throughout.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Winograd F(2x2, 3x3) transform matrices (paper eq. 3).
+# ---------------------------------------------------------------------------
+
+# BT: 4x4 input transform, G: 4x3 filter transform, AT: 2x4 inverse transform.
+BT = np.array(
+    [
+        [1.0, 0.0, -1.0, 0.0],
+        [0.0, 1.0, 1.0, 0.0],
+        [0.0, -1.0, 1.0, 0.0],
+        [0.0, 1.0, 0.0, -1.0],
+    ]
+)
+G = np.array(
+    [
+        [1.0, 0.0, 0.0],
+        [0.5, 0.5, 0.5],
+        [0.5, -0.5, 0.5],
+        [0.0, 0.0, 1.0],
+    ]
+)
+AT = np.array(
+    [
+        [1.0, 1.0, 1.0, 0.0],
+        [0.0, 1.0, -1.0, -1.0],
+    ]
+)
+
+#: Winograd tile parameters for the uniform F(2x2, 3x3) the paper uses.
+M_TILE = 2  # outputs per tile per dim (m)
+R_TAPS = 3  # filter taps per dim (r)
+N_TILE = M_TILE + R_TAPS - 1  # input tile size per dim (n = 4)
+
+
+def deconv_output_padding(k: int, s: int, p: int) -> int:
+    """output_padding that keeps H_O = S*H_I (torch convention)."""
+    return s - k + 2 * p
+
+
+def default_padding(k: int, s: int) -> int:
+    """The paper's layer configs: P=2 for K=5/S=2, P=1 for K=4/S=2 and K=3/S=1."""
+    return (k - s + 1) // 2
+
+
+def deconv_naive(x: np.ndarray, w: np.ndarray, stride: int, padding: int) -> np.ndarray:
+    """Standard DeConv by direct scatter-add (the paper's Fig. 2a)."""
+    c_in, h, wdt = x.shape
+    c_in2, c_out, k, k2 = w.shape
+    assert c_in == c_in2 and k == k2
+    s, p = stride, padding
+    ho, wo = s * h, s * wdt
+    y = np.zeros((c_out, ho, wo), dtype=np.float64)
+    for ci in range(c_in):
+        for iy in range(h):
+            for ix in range(wdt):
+                for ky in range(k):
+                    for kx in range(k):
+                        oy = s * iy + ky - p
+                        ox = s * ix + kx - p
+                        if 0 <= oy < ho and 0 <= ox < wo:
+                            y[:, oy, ox] += x[ci, iy, ix] * w[ci, :, ky, kx]
+    return y
+
+
+def zero_padded_deconv(x: np.ndarray, w: np.ndarray, stride: int, padding: int) -> np.ndarray:
+    """The zero-padded DeConv baseline (Fig. 1b): dilate the input with S-1
+    zeros, border-pad by K-1-P, then run an ordinary (flipped-filter) Conv.
+
+    Numerically identical to :func:`deconv_naive`; kept separate because the
+    baseline *accelerator* models this computation (it multiplies the padded
+    zeros unless it adds skip logic)."""
+    c_in, h, wdt = x.shape
+    _, c_out, k, _ = w.shape
+    s, p = stride, padding
+    pad = k - 1 - p
+    assert pad >= 0, "padding must satisfy P <= K-1"
+    hd = s * (h - 1) + 1 + 2 * pad
+    wd = s * (wdt - 1) + 1 + 2 * pad
+    xd = np.zeros((c_in, hd, wd), dtype=np.float64)
+    xd[:, pad : pad + s * (h - 1) + 1 : s, pad : pad + s * (wdt - 1) + 1 : s] = x
+    ho, wo = s * h, s * wdt
+    y = np.zeros((c_out, ho, wo), dtype=np.float64)
+    wf = w[:, :, ::-1, ::-1]  # flip: transposed conv == conv with flipped filter
+    for co in range(c_out):
+        for oy in range(ho):
+            for ox in range(wo):
+                acc = 0.0
+                for ci in range(c_in):
+                    for ky in range(k):
+                        for kx in range(k):
+                            iy, ix = oy + ky, ox + kx
+                            if iy < hd and ix < wd:
+                                acc += xd[ci, iy, ix] * wf[ci, co, ky, kx]
+                y[co, oy, ox] = acc
+    return y
+
+
+# ---------------------------------------------------------------------------
+# TDC: DeConv -> S^2 Conv decomposition (paper Fig. 1c / 2b, refs [14-16]).
+# ---------------------------------------------------------------------------
+
+
+def tdc_kc(k: int, s: int) -> int:
+    """Width of the converted Conv kernel, K_C = ceil(K_D / S) (Table I)."""
+    return math.ceil(k / s)
+
+
+def tdc_phase_taps_1d(k: int, s: int, p: int, phase: int):
+    """1D sub-filter tap indices and input offset for one output phase.
+
+    Output sample ``y[S*i + phase]`` equals a *correlation* of the input with
+    the phase's sub-filter::
+
+        y[S*i + phase] = sum_u  g[u] * x[i + u + d0]
+
+    Returns ``(taps, d0)`` where ``taps[u]`` indexes the *flipped* 1D kernel
+    (``wf[t] = w[K-1-t]``) for tap ``u`` (or -1 for an implicit zero-pad
+    tap), and ``d0`` is the input offset.  ``len(taps) == K_C`` always;
+    shorter phases are zero-padded at the tail -- these are the "many zeros
+    in the S^2 Conv filters" the paper exploits."""
+    pad = k - 1 - p
+    assert pad >= 0
+    t0 = (pad - phase) % s
+    kc = tdc_kc(k, s)
+    n_real = max(0, math.ceil((k - t0) / s))
+    assert n_real <= kc
+    assert (phase + t0 - pad) % s == 0
+    d0 = (phase + t0 - pad) // s
+    assert -(kc - 1) <= d0 <= 0, (
+        f"TDC offset {d0} out of range for K={k} S={s} P={p}; "
+        "padding too small for a uniform-K_C decomposition"
+    )
+    taps = [s * u + t0 if u < n_real else -1 for u in range(kc)]
+    return taps, d0
+
+
+def tdc_decompose(w: np.ndarray, stride: int, padding: int):
+    """Decompose DeConv filters into S^2 Conv sub-filter banks.
+
+    Returns ``(g, d0)`` with ``g[S, S, C_in, C_out, K_C, K_C]`` (correlation
+    filters) and ``d0[S, S, 2]`` input offsets per phase."""
+    c_in, c_out, k, _ = w.shape
+    s = stride
+    kc = tdc_kc(k, s)
+    wf = w[:, :, ::-1, ::-1]
+    g = np.zeros((s, s, c_in, c_out, kc, kc), dtype=np.float64)
+    d0 = np.zeros((s, s, 2), dtype=np.int64)
+    for py in range(s):
+        taps_y, d0y = tdc_phase_taps_1d(k, s, padding, py)
+        for px in range(s):
+            taps_x, d0x = tdc_phase_taps_1d(k, s, padding, px)
+            d0[py, px] = (d0y, d0x)
+            for uy, ty in enumerate(taps_y):
+                if ty < 0:
+                    continue
+                for ux, tx in enumerate(taps_x):
+                    if tx < 0:
+                        continue
+                    g[py, px, :, :, uy, ux] = wf[:, :, ty, tx]
+    return g, d0
+
+
+def correlate_valid(x: np.ndarray, g: np.ndarray) -> np.ndarray:
+    """Multi-channel valid correlation: x[C_in,H,W] * g[C_in,C_out,K,K]."""
+    c_in, h, wdt = x.shape
+    _, c_out, k, k2 = g.shape
+    ho, wo = h - k + 1, wdt - k2 + 1
+    y = np.zeros((c_out, ho, wo), dtype=np.float64)
+    for co in range(c_out):
+        for oy in range(ho):
+            for ox in range(wo):
+                acc = 0.0
+                for ci in range(c_in):
+                    for ky in range(k):
+                        for kx in range(k2):
+                            acc += x[ci, oy + ky, ox + kx] * g[ci, co, ky, kx]
+                y[co, oy, ox] = acc
+    return y
+
+
+def tdc_deconv(x: np.ndarray, w: np.ndarray, stride: int, padding: int) -> np.ndarray:
+    """DeConv via the TDC method: S^2 ordinary convolutions, outputs
+    interleaved into the S x S phase grid.  Identical result to
+    :func:`deconv_naive` (the paper's Fig. 2 equivalence)."""
+    c_in, h, wdt = x.shape
+    _, c_out, k, _ = w.shape
+    s = stride
+    kc = tdc_kc(k, s)
+    g, d0 = tdc_decompose(w, stride, padding)
+    y = np.zeros((c_out, s * h, s * wdt), dtype=np.float64)
+    for py in range(s):
+        for px in range(s):
+            d0y, d0x = int(d0[py, px, 0]), int(d0[py, px, 1])
+            ly, ry = -d0y, kc - 1 + d0y
+            lx, rx = -d0x, kc - 1 + d0x
+            xp = np.zeros((c_in, h + ly + ry, wdt + lx + rx), dtype=np.float64)
+            xp[:, ly : ly + h, lx : lx + wdt] = x
+            yp = correlate_valid(xp, g[py, px])
+            y[:, py::s, px::s] = yp
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Winograd F(2x2, 3x3) reference (dense, paper eq. 4) + sparsity analysis.
+# ---------------------------------------------------------------------------
+
+
+def winograd_filter_transform(g: np.ndarray) -> np.ndarray:
+    """U = G f G^T for a bank g[C_in, C_out, r, r] with r <= 3 (zero-padded
+    to 3x3 first, as the paper does for K_C = 2).  Returns [C_in,C_out,4,4]."""
+    c_in, c_out, r, r2 = g.shape
+    assert r <= R_TAPS and r2 <= R_TAPS
+    gp = np.zeros((c_in, c_out, R_TAPS, R_TAPS), dtype=np.float64)
+    gp[:, :, :r, :r2] = g
+    return np.einsum("ij,cojk,lk->coil", G, gp, G)
+
+
+def winograd_input_transform(z: np.ndarray) -> np.ndarray:
+    """V = B^T Z B for tiles z[..., 4, 4]."""
+    return np.einsum("ij,...jk,lk->...il", BT, z, BT)
+
+
+def winograd_inverse_transform(mm: np.ndarray) -> np.ndarray:
+    """Y = A^T M A for tiles m[..., 4, 4] -> [..., 2, 2]."""
+    return np.einsum("ij,...jk,lk->...il", AT, mm, AT)
+
+
+def winograd_conv2d(x: np.ndarray, g: np.ndarray) -> np.ndarray:
+    """Valid correlation via F(2x2,3x3): x[C_in,H,W], g[C_in,C_out,r,r] with
+    r<=3 zero-padded to 3.  Output [C_out, H-2, W-2] (3-tap valid size);
+    H-2 and W-2 must be even (callers tile-align)."""
+    c_in, h, wdt = x.shape
+    _, c_out, _, _ = g.shape
+    ho, wo = h - (R_TAPS - 1), wdt - (R_TAPS - 1)
+    assert ho % M_TILE == 0 and wo % M_TILE == 0, "tile-align inputs first"
+    u = winograd_filter_transform(g)  # [ci, co, 4, 4]
+    y = np.zeros((c_out, ho, wo), dtype=np.float64)
+    for ty in range(ho // M_TILE):
+        for tx in range(wo // M_TILE):
+            z = x[:, 2 * ty : 2 * ty + N_TILE, 2 * tx : 2 * tx + N_TILE]
+            v = winograd_input_transform(z)  # [ci, 4, 4]
+            mm = np.einsum("coij,cij->oij", u, v)  # channel sum in Winograd domain
+            y[:, 2 * ty : 2 * ty + 2, 2 * tx : 2 * tx + 2] = winograd_inverse_transform(mm)
+    return y
+
+
+def sparsity_pattern(r_y: int, r_x: int) -> np.ndarray:
+    """Structural non-zero mask (4x4 bool) of G f G^T for a filter whose real
+    support is r_y x r_x taps (top-left), zero-padded to 3x3.
+
+    G row 3 is [0,0,1]: it only touches tap index 2, so a 2-tap dimension
+    zeroes the 4th row/column of the transformed filter.  r=3 in both dims
+    -> all 16 non-zero (Case 1); one dim with r=2 -> one zero line, 12
+    non-zero (Case 2); both dims r=2 -> 9 non-zero (Case 3).  Fig. 3/6."""
+    assert 1 <= r_y <= 3 and 1 <= r_x <= 3
+    mask_y = np.array([True, True, True, r_y >= 3])
+    mask_x = np.array([True, True, True, r_x >= 3])
+    return np.outer(mask_y, mask_x)
+
+
+def winograd_tdc_deconv(x: np.ndarray, w: np.ndarray, stride: int, padding: int) -> np.ndarray:
+    """The paper's full fast algorithm: TDC -> zero-pad sub-filters to 3x3 ->
+    F(2x2,3x3) Winograd per phase -> interleave phases into mS x mS output
+    blocks.  Ground-truth oracle for the fused Pallas kernel and for the rust
+    functional simulator."""
+    c_in, h, wdt = x.shape
+    _, c_out, k, _ = w.shape
+    s = stride
+    g, d0 = tdc_decompose(w, stride, padding)
+    y = np.zeros((c_out, s * h, s * wdt), dtype=np.float64)
+    # tile-align: each phase produces an h x w map; pad input so Winograd
+    # produces ceil(h/m)*m rows, then crop.
+    ho_t = ((h + M_TILE - 1) // M_TILE) * M_TILE
+    wo_t = ((wdt + M_TILE - 1) // M_TILE) * M_TILE
+    for py in range(s):
+        for px in range(s):
+            d0y, d0x = int(d0[py, px, 0]), int(d0[py, px, 1])
+            ly, lx = -d0y, -d0x
+            ry = (ho_t + R_TAPS - 1) - h - ly
+            rx = (wo_t + R_TAPS - 1) - wdt - lx
+            xp = np.zeros((c_in, h + ly + ry, wdt + lx + rx), dtype=np.float64)
+            xp[:, ly : ly + h, lx : lx + wdt] = x
+            yp = winograd_conv2d(xp, g[py, px])[:, :h, :wdt]
+            y[:, py::s, px::s] = yp
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Multiplication-count models (Fig. 4) -- mirrored by rust gan::workload.
+# ---------------------------------------------------------------------------
+
+
+def mults_zero_padded(m_out: int, n_in: int, h_i: int, w_i: int, k: int, s: int) -> int:
+    """Zero-padded DeConv multiplications: full conv over the up-scaled map."""
+    return m_out * n_in * (s * h_i) * (s * w_i) * k * k
+
+
+def mults_tdc(m_out: int, n_in: int, h_i: int, w_i: int, k: int, s: int) -> int:
+    """TDC DeConv multiplications: S^2 convs with K_C^2 taps on the input map."""
+    kc = tdc_kc(k, s)
+    return s * s * m_out * n_in * h_i * w_i * kc * kc
+
+
+def winograd_nonzero_count(k: int, s: int, p: int) -> int:
+    """C(K_C): total non-zero Winograd-domain weights across the S^2
+    sub-filters for one (c_in, c_out) pair and one m x m tile.  49 for
+    K_C=3 (K=5,S=2), 36 for K_C=2 (K=4,S=2), 16 for K=3,S=1 (eq. 5)."""
+    total = 0
+    for py in range(s):
+        taps_y, _ = tdc_phase_taps_1d(k, s, p, py)
+        ry = sum(1 for t in taps_y if t >= 0)
+        for px in range(s):
+            taps_x, _ = tdc_phase_taps_1d(k, s, p, px)
+            rx = sum(1 for t in taps_x if t >= 0)
+            total += int(sparsity_pattern(ry, rx).sum())
+    return total
+
+
+def mults_winograd(
+    m_out: int, n_in: int, h_i: int, w_i: int, k: int, s: int, p: int
+) -> int:
+    """Winograd DeConv multiplications with vector-level zero skipping."""
+    tiles = math.ceil(h_i / M_TILE) * math.ceil(w_i / M_TILE)
+    return m_out * n_in * tiles * winograd_nonzero_count(k, s, p)

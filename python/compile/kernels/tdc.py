@@ -1,0 +1,134 @@
+"""TDC (transposed-Deconv-to-Conv) conversion in JAX.
+
+The TDC method (paper refs [14-16], Fig. 1c/2b) turns one DeConv layer with
+kernel K_D x K_D and stride S into S^2 ordinary Conv layers with kernel
+K_C = ceil(K_D/S), whose outputs interleave into the S x S output phase grid.
+This removes the overlapping-sum problem: each output pixel is produced by
+exactly one sub-convolution.
+
+This module is the *build-time* implementation used by the L2 model: the
+decomposition runs at trace time (weights are static), and the per-phase
+convolutions lower to plain XLA convs.  The Pallas fast path lives in
+winograd_deconv.py; both are tested against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+
+
+def tdc_kc(k: int, s: int) -> int:
+    """K_C = ceil(K_D / S) (Table I)."""
+    return math.ceil(k / s)
+
+
+def decompose(w: jax.Array, stride: int, padding: int):
+    """Decompose DeConv filters w[C_in, C_out, K, K] into S^2 Conv banks.
+
+    Returns ``(g, d0)``: ``g[S, S, C_in, C_out, K_C, K_C]`` correlation
+    filters and ``d0[S, S, 2]`` (numpy) input offsets.  Pure indexing --
+    differentiable and cheap; runs at trace time in the AOT path."""
+    c_in, c_out, k, _ = w.shape
+    s = stride
+    kc = tdc_kc(k, s)
+    wf = w[:, :, ::-1, ::-1]
+    banks = []
+    d0 = np.zeros((s, s, 2), dtype=np.int64)
+    for py in range(s):
+        taps_y, d0y = ref.tdc_phase_taps_1d(k, s, padding, py)
+        row = []
+        for px in range(s):
+            taps_x, d0x = ref.tdc_phase_taps_1d(k, s, padding, px)
+            d0[py, px] = (d0y, d0x)
+            cols = []
+            for ty in taps_y:
+                line = []
+                for tx in taps_x:
+                    if ty < 0 or tx < 0:
+                        line.append(jnp.zeros((c_in, c_out), w.dtype))
+                    else:
+                        line.append(wf[:, :, ty, tx])
+                cols.append(jnp.stack(line, axis=-1))  # [ci, co, kc]
+            row.append(jnp.stack(cols, axis=-2))  # [ci, co, kc, kc]
+        banks.append(jnp.stack(row))  # [s, ci, co, kc, kc]
+    g = jnp.stack(banks)  # [s, s, ci, co, kc, kc]
+    return g, d0
+
+
+def phase_pad(x: jax.Array, d0yx, kc: int) -> jax.Array:
+    """Pad x[C,H,W] so a valid K_C-tap correlation yields exactly H x W
+    outputs for the phase with input offset ``d0yx = (d0y, d0x)``."""
+    d0y, d0x = int(d0yx[0]), int(d0yx[1])
+    ly, lx = -d0y, -d0x
+    ry, rx = kc - 1 + d0y, kc - 1 + d0x
+    return jnp.pad(x, ((0, 0), (ly, ry), (lx, rx)))
+
+
+def correlate_valid(x: jax.Array, g: jax.Array) -> jax.Array:
+    """Valid correlation x[C_in,H,W] * g[C_in,C_out,K,K] -> [C_out,H',W']."""
+    lhs = x[None]  # NCHW
+    rhs = jnp.transpose(g, (1, 0, 2, 3))  # OIHW
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def interleave_phases(phases, stride: int) -> jax.Array:
+    """Assemble per-phase maps y[p_y][p_x] = [C,H,W] into [C, S*H, S*W]."""
+    s = stride
+    rows = [jnp.stack(r, axis=0) for r in phases]  # each [s, C, H, W]
+    grid = jnp.stack(rows, axis=0)  # [s, s, C, H, W]
+    c, h, w = grid.shape[2], grid.shape[3], grid.shape[4]
+    # [C, H, s_y, W, s_x] -> [C, H*s, W*s]
+    out = jnp.transpose(grid, (2, 3, 0, 4, 1))
+    return out.reshape(c, h * s, w * s)
+
+
+@partial(jax.jit, static_argnames=("stride", "padding"))
+def tdc_deconv(x: jax.Array, w: jax.Array, stride: int, padding: int) -> jax.Array:
+    """DeConv of x[C_in,H,W] with w[C_in,C_out,K,K] via the TDC method.
+
+    Bit-for-bit the same function as the standard DeConv (Fig. 2); the
+    S^2 sub-convolutions have no output dependencies."""
+    s = stride
+    kc = tdc_kc(w.shape[2], s)
+    g, d0 = decompose(w, s, padding)
+    phases = []
+    for py in range(s):
+        row = []
+        for px in range(s):
+            xp = phase_pad(x, d0[py, px], kc)
+            row.append(correlate_valid(xp, g[py, px]))
+        phases.append(row)
+    return interleave_phases(phases, s)
+
+
+@partial(jax.jit, static_argnames=("stride", "padding"))
+def zero_padded_deconv(x: jax.Array, w: jax.Array, stride: int, padding: int) -> jax.Array:
+    """Baseline: fractionally-strided conv (input dilation + flipped filter).
+
+    Same function again; this is the computation the zero-padded baseline
+    accelerator performs (multiplying inserted zeros)."""
+    c_in, c_out, k, _ = w.shape
+    s, p = stride, padding
+    pad = k - 1 - p
+    lhs = x[None]
+    rhs = jnp.transpose(w[:, :, ::-1, ::-1], (1, 0, 2, 3))  # OIHW, flipped
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs,
+        window_strides=(1, 1),
+        padding=((pad, pad + s - 1), (pad, pad + s - 1)),
+        lhs_dilation=(s, s),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    h, wdt = x.shape[1], x.shape[2]
+    return out[0, :, : s * h, : s * wdt]

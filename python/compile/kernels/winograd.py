@@ -1,0 +1,238 @@
+"""Winograd F(2x2, 3x3) minimal filtering in JAX + the Pallas compute engine.
+
+The Pallas kernel here is the paper's accelerating-engine hot-spot (Fig. 5/7):
+element-wise multiply-accumulate in the Winograd domain over the reordered
+``n^2 x N`` filter/tile layout, with *vector-level sparsity*: whole Winograd
+positions whose transformed weights are structurally zero are skipped.  The
+skip list is static (it depends only on the sub-filter support, Fig. 3), so
+it compiles to a gather of non-zero positions -- no dynamic sparsity.
+
+Hardware adaptation (FPGA -> TPU-style):
+  * the FPGA's T_m x T_n MAC array becomes an MXU-shaped contraction
+    ``M[t, p, co] = sum_ci V[t, p, ci] * U[p, co, ci]`` batched over the
+    non-zero Winograd positions p;
+  * BRAM line-buffer ping-pong becomes BlockSpec pipelining over tile blocks
+    (HBM -> VMEM double buffering);
+  * pre-PE / post-PE transforms (B^T Z B, A^T M A) run inside the kernel on
+    the VMEM-resident block.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that the rust runtime runs.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+M_TILE = 2  # m: outputs per tile per dim
+R_TAPS = 3  # r: filter taps per dim
+N_TILE = 4  # n = m + r - 1: input tile size per dim
+
+BT = jnp.array(
+    [
+        [1.0, 0.0, -1.0, 0.0],
+        [0.0, 1.0, 1.0, 0.0],
+        [0.0, -1.0, 1.0, 0.0],
+        [0.0, 1.0, 0.0, -1.0],
+    ],
+    dtype=jnp.float32,
+)
+G = jnp.array(
+    [
+        [1.0, 0.0, 0.0],
+        [0.5, 0.5, 0.5],
+        [0.5, -0.5, 0.5],
+        [0.0, 0.0, 1.0],
+    ],
+    dtype=jnp.float32,
+)
+AT = jnp.array(
+    [
+        [1.0, 1.0, 1.0, 0.0],
+        [0.0, 1.0, -1.0, -1.0],
+    ],
+    dtype=jnp.float32,
+)
+
+#: tiles per Pallas block along the tile axis (VMEM sizing knob; see
+#: DESIGN.md section 7 and EXPERIMENTS.md section Perf for how this was chosen).
+TILE_BLOCK = 64
+
+
+def filter_transform(g: jax.Array) -> jax.Array:
+    """U = G f G^T, zero-padding r<3 supports to 3x3.  g[ci,co,r,r] -> [ci,co,4,4]."""
+    c_in, c_out, r, r2 = g.shape
+    gp = jnp.zeros((c_in, c_out, R_TAPS, R_TAPS), g.dtype)
+    gp = gp.at[:, :, :r, :r2].set(g)
+    gm = G.astype(g.dtype)
+    return jnp.einsum("ij,cojk,lk->coil", gm, gp, gm)
+
+
+def nonzero_positions(r_y: int, r_x: int) -> tuple[int, ...]:
+    """Static list of non-zero Winograd positions (row-major in the 4x4)
+    for a sub-filter with r_y x r_x real taps.  len is 16/12/9 for
+    Case 1/2/3 (Fig. 6)."""
+    pos = []
+    for i in range(N_TILE):
+        if i == 3 and r_y < 3:
+            continue
+        for j in range(N_TILE):
+            if j == 3 and r_x < 3:
+                continue
+            pos.append(i * N_TILE + j)
+    return tuple(pos)
+
+
+def sparsity_case(r_y: int, r_x: int) -> int:
+    """Paper Fig. 6 case number: 1 (dense), 2 (n zero rows), 3 (2n-1)."""
+    nz = len(nonzero_positions(r_y, r_x))
+    return {16: 1, 12: 2, 9: 3}[nz]
+
+
+def extract_tiles(x: jax.Array, tiles_h: int, tiles_w: int) -> jax.Array:
+    """x[C, H, W] -> overlapping 4x4 input tiles [T, C, 4, 4] with stride m=2.
+
+    The pre-PE window-selection step: H must be >= 2*tiles_h + 2.
+
+    Gather formulation. An alternative with n^2 = 16 strided slices (one
+    per within-tile offset) was measured and REJECTED: 330 µs vs 233 µs
+    per layer exec on the CPU PJRT backend (EXPERIMENTS.md §Perf iter. 5)
+    — XLA fuses the two gathers better than 16 slices + stack."""
+    c = x.shape[0]
+    idx_h = (2 * np.arange(tiles_h))[:, None] + np.arange(N_TILE)[None, :]
+    idx_w = (2 * np.arange(tiles_w))[:, None] + np.arange(N_TILE)[None, :]
+    # gather rows then cols
+    t = x[:, idx_h, :]  # [C, th, 4, W]
+    t = t[:, :, :, idx_w]  # [C, th, 4, tw, 4]
+    t = jnp.transpose(t, (1, 3, 0, 2, 4))  # [th, tw, C, 4, 4]
+    return t.reshape(tiles_h * tiles_w, c, N_TILE, N_TILE)
+
+
+def _bt_lines(z4):
+    """1D B^T transform along a leading list of 4 arrays (paper eq. 3):
+    [z0-z2, z1+z2, z2-z1, z1-z3].  Pure adds -- like the FPGA pre-PE."""
+    z0, z1, z2, z3 = z4
+    return [z0 - z2, z1 + z2, z2 - z1, z1 - z3]
+
+
+def _at_lines(m4):
+    """1D A^T inverse transform: [m0+m1+m2, m1-m2-m3] with None == 0
+    (structurally-zero Winograd positions are simply never summed --
+    the paper's sparse inverse transform in the post-PE)."""
+    m0, m1, m2, m3 = m4
+
+    def add(a, b):
+        if a is None:
+            return b
+        if b is None:
+            return a
+        return a + b
+
+    def sub(a, b):
+        if b is None:
+            return a
+        if a is None:
+            return -b
+        return a - b
+
+    return [add(add(m0, m1), m2), sub(sub(m1, m2), m3)]
+
+
+def _engine_kernel(nz: tuple[int, ...]):
+    """Build the Pallas kernel body for a static non-zero position list.
+
+    All transforms are hand-unrolled adds (Pallas kernels may not capture
+    constant arrays, and the FPGA pre/post-PEs are adder trees, not
+    matmuls); the sparsity gather/scatter is static python indexing, so it
+    lowers to plain slices -- no dynamic sparsity on the hot path."""
+
+    def kernel(z_ref, u_ref, y_ref):
+        # z_ref: [TB, C_in, 4, 4] input tiles (VMEM block)
+        # u_ref: [P_nz, C_out, C_in] transformed filters, zero rows gathered out
+        # y_ref: [TB, C_out, 2, 2] spatial-domain output tiles
+        z = z_ref[...]
+        u = u_ref[...]
+        # pre-PE: V = B^T Z B via explicit adder trees
+        rows = _bt_lines([z[:, :, i, :] for i in range(N_TILE)])  # each [TB,C,4]
+        v = [[None] * N_TILE for _ in range(N_TILE)]
+        for i in range(N_TILE):
+            cols = _bt_lines([rows[i][:, :, j] for j in range(N_TILE)])
+            for j in range(N_TILE):
+                v[i][j] = cols[j]  # [TB, C_in]
+        # com-PE: per-position contraction over input channels (MXU-shaped),
+        # only for the statically non-zero Winograd positions
+        m = [[None] * N_TILE for _ in range(N_TILE)]
+        for idx, p in enumerate(nz):
+            i, j = p // N_TILE, p % N_TILE
+            m[i][j] = jnp.einsum("tc,oc->to", v[i][j], u[idx])  # [TB, C_out]
+        # post-PE: sparse inverse transform Y = A^T M A (zero positions are
+        # skipped entirely -- fewer adds, exactly the paper's latency saving)
+        half = [_at_lines([m[i][j] for i in range(N_TILE)]) for j in range(N_TILE)]
+        for a in range(M_TILE):
+            out_row = _at_lines([half[j][a] for j in range(N_TILE)])
+            for b in range(M_TILE):
+                y_ref[:, :, a, b] = out_row[b]
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("nz", "tile_block"))
+def winograd_engine(z_tiles: jax.Array, u_nz: jax.Array, nz: tuple[int, ...],
+                    tile_block: int = TILE_BLOCK) -> jax.Array:
+    """Run the Pallas accelerating engine over extracted input tiles.
+
+    z_tiles: [T, C_in, 4, 4];  u_nz: [P_nz, C_out, C_in] (pre-gathered);
+    returns [T, C_out, 2, 2].  T is padded to a multiple of tile_block."""
+    t, c_in = z_tiles.shape[0], z_tiles.shape[1]
+    c_out = u_nz.shape[1]
+    tb = min(tile_block, t) if t > 0 else 1
+    t_pad = (t + tb - 1) // tb * tb
+    z = jnp.pad(z_tiles, ((0, t_pad - t), (0, 0), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _engine_kernel(nz),
+        out_shape=jax.ShapeDtypeStruct((t_pad, c_out, M_TILE, M_TILE), z_tiles.dtype),
+        grid=(t_pad // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, c_in, N_TILE, N_TILE), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((len(nz), c_out, c_in), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, c_out, M_TILE, M_TILE), lambda i: (i, 0, 0, 0)),
+        interpret=True,
+    )(z, u_nz)
+    return out[:t]
+
+
+def tiles_to_map(y_tiles: jax.Array, tiles_h: int, tiles_w: int) -> jax.Array:
+    """[T, C, 2, 2] output tiles -> feature map [C, 2*tiles_h, 2*tiles_w]."""
+    t, c = y_tiles.shape[0], y_tiles.shape[1]
+    y = y_tiles.reshape(tiles_h, tiles_w, c, M_TILE, M_TILE)
+    y = jnp.transpose(y, (2, 0, 3, 1, 4))
+    return y.reshape(c, tiles_h * M_TILE, tiles_w * M_TILE)
+
+
+@partial(jax.jit, static_argnames=("r_y", "r_x"))
+def winograd_conv2d(x: jax.Array, g: jax.Array, r_y: int | None = None,
+                    r_x: int | None = None) -> jax.Array:
+    """Valid correlation of x[C_in,H,W] with g[C_in,C_out,r,r] (r<=3) via
+    F(2x2,3x3) using the Pallas engine.  (H-2, W-2) must be even.
+
+    r_y/r_x override the *structural* support (defaults: g's shape) so
+    callers can force the dense Case-1 path for ablation."""
+    c_in, h, w = x.shape
+    r_y = g.shape[2] if r_y is None else r_y
+    r_x = g.shape[3] if r_x is None else r_x
+    ho, wo = h - (R_TAPS - 1), w - (R_TAPS - 1)
+    assert ho % M_TILE == 0 and wo % M_TILE == 0
+    tiles_h, tiles_w = ho // M_TILE, wo // M_TILE
+    u = filter_transform(g)  # [ci, co, 4, 4]
+    nz = nonzero_positions(r_y, r_x)
+    u_flat = u.reshape(c_in, g.shape[1], N_TILE * N_TILE)
+    u_nz = jnp.transpose(u_flat, (2, 1, 0))[jnp.array(nz)]  # [P, co, ci]
+    z = extract_tiles(x, tiles_h, tiles_w)
+    y_tiles = winograd_engine(z, u_nz, nz)
+    return tiles_to_map(y_tiles, tiles_h, tiles_w)

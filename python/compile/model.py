@@ -1,0 +1,283 @@
+"""L2: JAX generator models for the paper's GAN zoo (Table I).
+
+Each generator is a stack of DeConv layers executed through one of three
+interchangeable compute paths:
+
+  * ``winograd``  -- the paper's fused fast algorithm (Pallas engine,
+                     kernels/winograd_deconv.py); the system's default.
+  * ``tdc``       -- TDC-converted convs (baseline [14]).
+  * ``zero_pad``  -- fractionally-strided conv (baseline [10-12]).
+
+All three compute the same function; artifacts are AOT-lowered from here by
+``aot.py`` and executed by the rust runtime -- python never runs at serving
+time.
+
+Geometry follows Table I plus the original papers' channel configs (see
+DESIGN.md section 5).  ``scale="small"`` divides channel widths by 8 so that the
+1-core CPU box can execute full generators through the interpret-mode
+Winograd path in reasonable time; the analytic benches in rust use the
+``paper`` scale.  Weights are seeded-random: the accelerator's behaviour is
+weight-value-independent (the exploited sparsity is structural).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref, tdc as tdc_mod, winograd_deconv as wd
+
+METHODS = ("winograd", "tdc", "zero_pad")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCfg:
+    """One generator layer.  kind: 'deconv' | 'conv'."""
+
+    kind: str
+    c_in: int
+    c_out: int
+    k: int
+    s: int
+    p: int
+    h_in: int
+    w_in: int
+    act: str  # 'relu' | 'lrelu' | 'tanh' | 'none'
+    norm: bool = True
+
+    @property
+    def h_out(self) -> int:
+        if self.kind == "deconv":
+            return self.s * self.h_in
+        return self.h_in // self.s
+
+    @property
+    def w_out(self) -> int:
+        if self.kind == "deconv":
+            return self.s * self.w_in
+        return self.w_in // self.s
+
+    @property
+    def kc(self) -> int:
+        """TDC-converted kernel width (Table I's K_C)."""
+        return ref.tdc_kc(self.k, self.s) if self.kind == "deconv" else self.k
+
+
+@dataclasses.dataclass(frozen=True)
+class GanCfg:
+    """A generative network: optional latent projection + layer stack."""
+
+    name: str
+    layers: tuple
+    z_dim: int | None  # None => image-to-image (input is [3, 64, 64])
+    seed: int = 7
+
+    @property
+    def input_shape(self) -> tuple:
+        if self.z_dim is not None:
+            return (self.z_dim,)
+        l0 = self.layers[0]
+        return (l0.c_in, l0.h_in, l0.w_in)
+
+    @property
+    def output_shape(self) -> tuple:
+        ll = self.layers[-1]
+        return (ll.c_out, ll.h_out, ll.w_out)
+
+
+def _deconv_stack(channels, k, s, h0, name_final_act="tanh"):
+    """Chain of DeConv layers doubling spatial dims: channels[i]->channels[i+1]."""
+    p = ref.default_padding(k, s)
+    layers = []
+    h = h0
+    for i in range(len(channels) - 1):
+        last = i == len(channels) - 2
+        layers.append(
+            LayerCfg(
+                kind="deconv", c_in=channels[i], c_out=channels[i + 1],
+                k=k, s=s, p=p, h_in=h, w_in=h,
+                act=name_final_act if last else "relu", norm=not last,
+            )
+        )
+        h *= s
+    return layers, h
+
+
+def zoo(scale: str = "paper") -> dict:
+    """The four GANs of Table I.  scale in {'paper', 'small'}."""
+    assert scale in ("paper", "small")
+    d = 8 if scale == "small" else 1
+
+    def ch(c):
+        return max(c // d, 4) if c > 3 else c
+
+    models: dict[str, GanCfg] = {}
+
+    # DCGAN [4]: 4 DeConv, K_D=5, S=2.  z -> 4x4x1024 -> ... -> 64x64x3.
+    layers, _ = _deconv_stack([ch(1024), ch(512), ch(256), ch(128), 3], k=5, s=2, h0=4)
+    models["dcgan"] = GanCfg("dcgan", tuple(layers), z_dim=100 if d == 1 else 32)
+
+    # ArtGAN [5]: 4 DeConv K_D=4 S=2 + 1 DeConv K_D=3 S=1.
+    layers, h = _deconv_stack([ch(512), ch(256), ch(128), ch(64), ch(64)], k=4, s=2, h0=4,
+                              name_final_act="relu")
+    layers[-1] = dataclasses.replace(layers[-1], norm=True)
+    layers.append(
+        LayerCfg(kind="deconv", c_in=ch(64), c_out=3, k=3, s=1,
+                 p=ref.default_padding(3, 1), h_in=h, w_in=h, act="tanh", norm=False)
+    )
+    models["artgan"] = GanCfg("artgan", tuple(layers), z_dim=100 if d == 1 else 32)
+
+    # DiscoGAN [6]: 5 Conv encoder + 4 DeConv decoder (image-to-image).
+    enc_ch = [3, ch(64), ch(128), ch(256), ch(512)]
+    enc = []
+    h = 64
+    for i in range(4):
+        enc.append(LayerCfg(kind="conv", c_in=enc_ch[i], c_out=enc_ch[i + 1],
+                            k=4, s=2, p=1, h_in=h, w_in=h, act="lrelu", norm=i > 0))
+        h //= 2
+    enc.append(LayerCfg(kind="conv", c_in=ch(512), c_out=ch(512), k=3, s=1, p=1,
+                        h_in=h, w_in=h, act="lrelu", norm=True))
+    dec, _ = _deconv_stack([ch(512), ch(256), ch(128), ch(64), 3], k=4, s=2, h0=4)
+    models["discogan"] = GanCfg("discogan", tuple(enc + dec), z_dim=None)
+
+    # GP-GAN [7]: 4 DeConv K_D=4 S=2 from a latent bottleneck.
+    layers, _ = _deconv_stack([ch(512), ch(256), ch(128), ch(64), 3], k=4, s=2, h0=4)
+    models["gpgan"] = GanCfg("gpgan", tuple(layers), z_dim=100 if d == 1 else 32)
+
+    return models
+
+
+# ---------------------------------------------------------------------------
+# Parameters + forward pass.
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: GanCfg) -> dict:
+    """Seeded-random inference parameters (weights + folded-norm scale/shift)."""
+    rng = np.random.default_rng(cfg.seed)
+    params: dict = {"layers": []}
+    if cfg.z_dim is not None:
+        l0 = cfg.layers[0]
+        fan = cfg.z_dim
+        params["proj_w"] = jnp.asarray(
+            rng.standard_normal((cfg.z_dim, l0.c_in * l0.h_in * l0.w_in)) / np.sqrt(fan),
+            jnp.float32,
+        )
+        params["proj_b"] = jnp.zeros((l0.c_in * l0.h_in * l0.w_in,), jnp.float32)
+    for lc in cfg.layers:
+        fan = lc.c_in * lc.k * lc.k
+        if lc.kind == "deconv":
+            w = rng.standard_normal((lc.c_in, lc.c_out, lc.k, lc.k)) / np.sqrt(fan)
+        else:
+            w = rng.standard_normal((lc.c_out, lc.c_in, lc.k, lc.k)) / np.sqrt(fan)
+        gamma = rng.uniform(0.6, 1.4, lc.c_out) if lc.norm else np.ones(lc.c_out)
+        beta = rng.uniform(-0.1, 0.1, lc.c_out) if lc.norm else np.zeros(lc.c_out)
+        params["layers"].append(
+            {
+                "w": jnp.asarray(w, jnp.float32),
+                "gamma": jnp.asarray(gamma, jnp.float32),
+                "beta": jnp.asarray(beta, jnp.float32),
+            }
+        )
+    return params
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "lrelu":
+        return jax.nn.leaky_relu(x, 0.2)
+    if kind == "tanh":
+        return jnp.tanh(x)
+    return x
+
+
+def _conv(x: jax.Array, w: jax.Array, s: int, p: int) -> jax.Array:
+    out = jax.lax.conv_general_dilated(
+        x[None], w, window_strides=(s, s), padding=((p, p), (p, p)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def deconv_layer(x: jax.Array, w: jax.Array, s: int, p: int, method: str) -> jax.Array:
+    """Dispatch one DeConv through the selected compute path."""
+    if method == "winograd":
+        return wd.winograd_deconv(x, w, s, p)
+    if method == "tdc":
+        return tdc_mod.tdc_deconv(x, w, s, p)
+    if method == "zero_pad":
+        return tdc_mod.zero_padded_deconv(x, w, s, p)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def forward(cfg: GanCfg, params: dict, x: jax.Array, method: str = "winograd") -> jax.Array:
+    """Single-sample generator forward: x is [z_dim] or [3, 64, 64]."""
+    if cfg.z_dim is not None:
+        l0 = cfg.layers[0]
+        h = x @ params["proj_w"] + params["proj_b"]
+        h = jax.nn.relu(h).reshape(l0.c_in, l0.h_in, l0.w_in)
+    else:
+        h = x
+    for lc, lp in zip(cfg.layers, params["layers"]):
+        if lc.kind == "deconv":
+            h = deconv_layer(h, lp["w"], lc.s, lc.p, method)
+        else:
+            h = _conv(h, lp["w"], lc.s, lc.p)
+        h = h * lp["gamma"][:, None, None] + lp["beta"][:, None, None]
+        h = _act(h, lc.act)
+    return h
+
+
+def forward_batched(cfg: GanCfg, params: dict, xb: jax.Array,
+                    method: str = "winograd", tile_block: int | None = None) -> jax.Array:
+    """Batched generator forward: xb is [B, z_dim] or [B, 3, 64, 64].
+
+    The winograd path folds the batch into the Pallas engine's tile grid
+    (one pallas_call per phase for the WHOLE batch) instead of vmapping the
+    kernel. ``tile_block`` sizes the engine's per-grid-step block: 64 is
+    the VMEM-sized structural default for real TPU lowering; AOT CPU
+    artifacts use 1024 (interpret mode pays per-grid-step overhead, no
+    VMEM constraint — measured 65 ms -> 18.6 ms for DCGAN-small b8, see
+    EXPERIMENTS.md §Perf iter. 7). Baseline paths batch through XLA's
+    native conv batch dim."""
+    if cfg.z_dim is not None:
+        l0 = cfg.layers[0]
+        h = xb @ params["proj_w"] + params["proj_b"]
+        h = jax.nn.relu(h).reshape(-1, l0.c_in, l0.h_in, l0.w_in)
+    else:
+        h = xb
+    for lc, lp in zip(cfg.layers, params["layers"]):
+        if lc.kind == "deconv":
+            if method == "winograd":
+                h = wd.winograd_deconv_batched(
+                    h, lp["w"], lc.s, lc.p,
+                    tile_block=tile_block if tile_block else 64,
+                )
+            else:
+                h = jax.vmap(lambda hi: deconv_layer(hi, lp["w"], lc.s, lc.p, method))(h)
+        else:
+            h = jax.lax.conv_general_dilated(
+                h, lp["w"], window_strides=(lc.s, lc.s),
+                padding=((lc.p, lc.p), (lc.p, lc.p)),
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )
+        h = h * lp["gamma"][None, :, None, None] + lp["beta"][None, :, None, None]
+        h = _act(h, lc.act)
+    return h
+
+
+#: engine block size for AOT CPU artifacts (see forward_batched docstring)
+AOT_TILE_BLOCK = 1024
+
+
+def batched_forward(cfg: GanCfg, params: dict, method: str = "winograd",
+                    tile_block: int | None = None) -> Callable:
+    """Batched generator callable over a leading batch axis."""
+    return partial(forward_batched, cfg, params, method=method,
+                   tile_block=tile_block)

@@ -1,0 +1,124 @@
+"""L2 generator models: zoo geometry (Table I), forward shapes, and the
+equivalence of the three compute paths at the whole-generator level."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def test_zoo_matches_table1():
+    z = M.zoo("paper")
+    assert set(z) == {"dcgan", "artgan", "discogan", "gpgan"}
+    d = z["dcgan"]
+    deconvs = [l for l in d.layers if l.kind == "deconv"]
+    assert len(deconvs) == 4
+    assert all(l.k == 5 and l.s == 2 and l.kc == 3 for l in deconvs)
+
+    a = z["artgan"]
+    ks = [(l.k, l.s, l.kc) for l in a.layers if l.kind == "deconv"]
+    assert ks.count((4, 2, 2)) == 4
+    assert ks.count((3, 1, 3)) == 1
+
+    disco = z["discogan"]
+    assert sum(1 for l in disco.layers if l.kind == "conv") == 5
+    assert sum(1 for l in disco.layers if l.kind == "deconv") == 4
+
+    gp = z["gpgan"]
+    assert all(l.kc == 2 for l in gp.layers if l.kind == "deconv")
+
+
+def test_zoo_spatial_chains():
+    for scale in ("paper", "small"):
+        for name, cfg in M.zoo(scale).items():
+            prev = None
+            for l in cfg.layers:
+                if prev is not None:
+                    c, h, w = prev
+                    assert (c, h, w) == (l.c_in, l.h_in, l.w_in), f"{name} chain broken"
+                prev = (l.c_out, l.h_out, l.w_out)
+            assert prev == (3, 64, 64), name
+
+
+@pytest.mark.parametrize("name", ["dcgan", "gpgan"])
+def test_forward_shapes_small(name):
+    cfg = M.zoo("small")[name]
+    params = M.init_params(cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(cfg.input_shape), jnp.float32)
+    y = M.forward(cfg, params, x, method="tdc")
+    assert y.shape == cfg.output_shape
+    assert np.isfinite(np.asarray(y)).all()
+    # tanh output bounded
+    assert float(jnp.abs(y).max()) <= 1.0 + 1e-6
+
+
+def test_methods_compute_same_function_tiny():
+    # tiny custom generator (fast even through interpret-mode pallas)
+    cfg = M.GanCfg(
+        name="tiny",
+        z_dim=8,
+        layers=(
+            M.LayerCfg("deconv", 6, 4, 5, 2, 2, 4, 4, "relu"),
+            M.LayerCfg("deconv", 4, 3, 4, 2, 1, 8, 8, "tanh", norm=False),
+        ),
+    )
+    params = M.init_params(cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+    outs = {m: np.asarray(M.forward(cfg, params, x, method=m)) for m in M.METHODS}
+    np.testing.assert_allclose(outs["winograd"], outs["zero_pad"], atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(outs["tdc"], outs["zero_pad"], atol=2e-4, rtol=2e-3)
+
+
+def test_batched_forward_is_vmap_of_single():
+    cfg = M.GanCfg(
+        name="tiny2",
+        z_dim=4,
+        layers=(M.LayerCfg("deconv", 4, 3, 4, 2, 1, 4, 4, "tanh", norm=False),),
+    )
+    params = M.init_params(cfg)
+    rng = np.random.default_rng(2)
+    xb = jnp.asarray(rng.standard_normal((3, 4)), jnp.float32)
+    batched = np.asarray(M.batched_forward(cfg, params, method="tdc")(xb))
+    for i in range(3):
+        single = np.asarray(M.forward(cfg, params, xb[i], method="tdc"))
+        np.testing.assert_allclose(batched[i], single, atol=1e-5)
+
+
+def test_image_to_image_model_shapes():
+    cfg = M.zoo("small")["discogan"]
+    assert cfg.z_dim is None
+    assert cfg.input_shape == (3, 64, 64)
+    params = M.init_params(cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(np.tanh(rng.standard_normal(cfg.input_shape)), jnp.float32)
+    y = M.forward(cfg, params, x, method="tdc")
+    assert y.shape == (3, 64, 64)
+
+
+def test_init_params_deterministic():
+    cfg = M.zoo("small")["dcgan"]
+    a = M.init_params(cfg)
+    b = M.init_params(cfg)
+    np.testing.assert_array_equal(np.asarray(a["proj_w"]), np.asarray(b["proj_w"]))
+    for la, lb in zip(a["layers"], b["layers"]):
+        np.testing.assert_array_equal(np.asarray(la["w"]), np.asarray(lb["w"]))
+
+
+def test_layer_cfg_helpers():
+    l = M.LayerCfg("deconv", 8, 4, 5, 2, 2, 4, 4, "relu")
+    assert (l.h_out, l.w_out) == (8, 8)
+    assert l.kc == 3
+    c = M.LayerCfg("conv", 8, 4, 4, 2, 1, 8, 8, "lrelu")
+    assert (c.h_out, c.w_out) == (4, 4)
+
+
+def test_paddings_follow_paper():
+    for k, s in [(5, 2), (4, 2), (3, 1)]:
+        p = ref.default_padding(k, s)
+        # H_O = S*H requires output_padding S-K+2P >= 0
+        assert ref.deconv_output_padding(k, s, p) >= 0

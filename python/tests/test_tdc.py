@@ -1,0 +1,134 @@
+"""TDC decomposition: JAX implementation vs the numpy oracle, with
+hypothesis sweeps over shapes, kernel sizes, strides and paddings.
+
+The core claim under test is the paper's Fig. 2 equivalence: the TDC
+method computes exactly the standard DeConv."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, tdc
+
+PAPER_CONFIGS = [(5, 2), (4, 2), (3, 1)]
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("k,s", PAPER_CONFIGS)
+def test_kc_matches_table1(k, s):
+    expected = {(5, 2): 3, (4, 2): 2, (3, 1): 3}[(k, s)]
+    assert tdc.tdc_kc(k, s) == expected
+
+
+@pytest.mark.parametrize("k,s", PAPER_CONFIGS)
+def test_tdc_deconv_equals_oracle(k, s):
+    rng = np.random.default_rng(10)
+    p = ref.default_padding(k, s)
+    x = rand(rng, 3, 6, 5)
+    w = rand(rng, 3, 4, k, k)
+    want = ref.deconv_naive(x.astype(np.float64), w.astype(np.float64), s, p)
+    got = np.asarray(tdc.tdc_deconv(jnp.asarray(x), jnp.asarray(w), s, p))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("k,s", PAPER_CONFIGS)
+def test_zero_padded_deconv_equals_oracle(k, s):
+    rng = np.random.default_rng(11)
+    p = ref.default_padding(k, s)
+    x = rand(rng, 2, 4, 7)
+    w = rand(rng, 2, 3, k, k)
+    want = ref.deconv_naive(x.astype(np.float64), w.astype(np.float64), s, p)
+    got = np.asarray(tdc.zero_padded_deconv(jnp.asarray(x), jnp.asarray(w), s, p))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_decompose_structural_support_k5():
+    rng = np.random.default_rng(12)
+    w = rand(rng, 1, 1, 5, 5)
+    g, d0 = ref.tdc_decompose(w.astype(np.float64), 2, 2)
+    assert g.shape == (2, 2, 1, 1, 3, 3)
+    # phase (0,0) dense 3x3; (1,1) has only a 2x2 live corner
+    assert np.count_nonzero(g[0, 0]) == 9
+    assert np.count_nonzero(g[1, 1]) == 4
+    assert np.count_nonzero(g[0, 1]) == 6
+    assert (d0 <= 0).all()
+
+
+def test_phase_taps_cover_all_kernel_taps_exactly_once():
+    # every kernel tap is used by exactly one phase (partition property)
+    for k, s in PAPER_CONFIGS + [(6, 3), (7, 2)]:
+        p = ref.default_padding(k, s)
+        seen = []
+        for phase in range(s):
+            taps, _ = ref.tdc_phase_taps_1d(k, s, p, phase)
+            seen.extend(t for t in taps if t >= 0)
+        assert sorted(seen) == list(range(k)), f"K={k} S={s}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(2, 6),
+    s=st.integers(1, 3),
+    c_in=st.integers(1, 3),
+    c_out=st.integers(1, 3),
+    h=st.integers(1, 6),
+    w=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_tdc_equivalence_hypothesis(k, s, c_in, c_out, h, w, seed):
+    if s > k:
+        s = k  # degenerate: stride beyond kernel unsupported by padding rule
+    p = ref.default_padding(k, s)
+    kc = ref.tdc_kc(k, s)
+    # uniform-K_C decomposition requires the offset bound (asserted in ref)
+    pad = k - 1 - p
+    if not (0 <= pad and p <= k - 1):
+        return
+    d0_min = (0 + ((pad) % s) - pad) // s if s else 0
+    if d0_min < -(kc - 1):
+        return
+    rng = np.random.default_rng(seed)
+    x = rand(rng, c_in, h, w).astype(np.float64)
+    wt = rand(rng, c_in, c_out, k, k).astype(np.float64)
+    want = ref.deconv_naive(x, wt, s, p)
+    got = ref.tdc_deconv(x, wt, s, p)
+    np.testing.assert_allclose(got, want, atol=1e-10)
+    got_jax = np.asarray(
+        tdc.tdc_deconv(jnp.asarray(x, jnp.float32), jnp.asarray(wt, jnp.float32), s, p)
+    )
+    np.testing.assert_allclose(got_jax, want, atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c_in=st.integers(1, 3),
+    h=st.integers(2, 5),
+    seed=st.integers(0, 2**16),
+)
+def test_zero_padded_equivalence_hypothesis(c_in, h, seed):
+    rng = np.random.default_rng(seed)
+    for k, s in PAPER_CONFIGS:
+        p = ref.default_padding(k, s)
+        x = rand(rng, c_in, h, h).astype(np.float64)
+        wt = rand(rng, c_in, 2, k, k).astype(np.float64)
+        want = ref.deconv_naive(x, wt, s, p)
+        got = ref.zero_padded_deconv(x, wt, s, p)
+        np.testing.assert_allclose(got, want, atol=1e-10)
+
+
+def test_interleave_phases_layout():
+    # 2x2 phases of constant maps interleave into the right checkerboard
+    s = 2
+    phases = [
+        [jnp.full((1, 2, 2), 0.0), jnp.full((1, 2, 2), 1.0)],
+        [jnp.full((1, 2, 2), 2.0), jnp.full((1, 2, 2), 3.0)],
+    ]
+    y = np.asarray(tdc.interleave_phases(phases, s))[0]
+    assert y.shape == (4, 4)
+    assert y[0, 0] == 0.0 and y[0, 1] == 1.0
+    assert y[1, 0] == 2.0 and y[1, 1] == 3.0
+    assert y[2, 2] == 0.0 and y[3, 3] == 3.0

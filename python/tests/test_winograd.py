@@ -1,0 +1,124 @@
+"""Winograd F(2x2,3x3): transform identities, structural sparsity, and the
+Pallas accelerating engine vs direct correlation."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, winograd as wg
+
+
+def test_transform_matrices_satisfy_winograd_identity():
+    # F(2,3) 1D: A^T [(G f) ⊙ (B^T z)] == correlate(z, f), all z, f
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        z = rng.standard_normal(4)
+        f = rng.standard_normal(3)
+        lhs = ref.AT @ ((ref.G @ f) * (ref.BT @ z))
+        want = np.array([z[0]*f[0] + z[1]*f[1] + z[2]*f[2],
+                         z[1]*f[0] + z[2]*f[1] + z[3]*f[2]])
+        np.testing.assert_allclose(lhs, want, atol=1e-12)
+
+
+def test_filter_transform_pads_small_supports():
+    rng = np.random.default_rng(1)
+    g2 = rng.standard_normal((1, 1, 2, 2))
+    u = ref.winograd_filter_transform(g2)
+    assert u.shape == (1, 1, 4, 4)
+    # padded 2-tap support zeroes the 4th row and column
+    np.testing.assert_array_equal(u[0, 0, 3, :], 0.0)
+    np.testing.assert_array_equal(u[0, 0, :, 3], 0.0)
+
+
+@pytest.mark.parametrize("ry,rx,case,live", [
+    (3, 3, 1, 16), (3, 2, 2, 12), (2, 3, 2, 12), (2, 2, 3, 9),
+])
+def test_sparsity_cases(ry, rx, case, live):
+    mask = ref.sparsity_pattern(ry, rx)
+    assert int(mask.sum()) == live
+    nz = wg.nonzero_positions(ry, rx)
+    assert len(nz) == live
+    assert wg.sparsity_case(ry, rx) == case
+    # positions agree with the mask
+    flat = mask.reshape(-1)
+    assert all(flat[p] for p in nz)
+    assert sum(flat) == len(nz)
+
+
+def test_c_of_kc_constants():
+    assert ref.winograd_nonzero_count(5, 2, 2) == 49
+    assert ref.winograd_nonzero_count(4, 2, 1) == 36
+    assert ref.winograd_nonzero_count(3, 1, 1) == 16
+
+
+def test_extract_tiles_overlap():
+    x = jnp.arange(1 * 6 * 6, dtype=jnp.float32).reshape(1, 6, 6)
+    t = np.asarray(wg.extract_tiles(x, 2, 2))
+    assert t.shape == (4, 1, 4, 4)
+    # stride-2 overlapping windows
+    np.testing.assert_array_equal(t[0, 0], np.asarray(x)[0, 0:4, 0:4])
+    np.testing.assert_array_equal(t[1, 0], np.asarray(x)[0, 0:4, 2:6])
+    np.testing.assert_array_equal(t[3, 0], np.asarray(x)[0, 2:6, 2:6])
+
+
+@pytest.mark.parametrize("r", [2, 3])
+def test_pallas_winograd_conv_matches_oracle(r):
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((3, 8, 10)).astype(np.float32)
+    g = rng.standard_normal((3, 4, r, r)).astype(np.float32) * 0.4
+    got = np.asarray(wg.winograd_conv2d(jnp.asarray(x), jnp.asarray(g)))
+    g3 = np.zeros((3, 4, 3, 3))
+    g3[:, :, :r, :r] = g
+    want = ref.correlate_valid(x.astype(np.float64), g3)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+def test_engine_skips_structural_zeros_but_same_result():
+    # forcing the dense Case-1 path on a 2x2 filter must give the same
+    # output as the sparse Case-3 path (ablation hook used by the benches)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 6, 6)).astype(np.float32))
+    g = jnp.asarray(rng.standard_normal((2, 2, 2, 2)).astype(np.float32))
+    sparse = np.asarray(wg.winograd_conv2d(x, g))            # r inferred = 2
+    dense = np.asarray(wg.winograd_conv2d(x, g, r_y=3, r_x=3))  # force Case 1
+    np.testing.assert_allclose(sparse, dense, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    c_in=st.integers(1, 3),
+    c_out=st.integers(1, 4),
+    th=st.integers(1, 4),
+    tw=st.integers(1, 4),
+    r=st.integers(2, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_pallas_engine_hypothesis(c_in, c_out, th, tw, r, seed):
+    rng = np.random.default_rng(seed)
+    h, w = 2 * th + 2, 2 * tw + 2
+    x = rng.standard_normal((c_in, h, w)).astype(np.float32)
+    g = rng.standard_normal((c_in, c_out, r, r)).astype(np.float32)
+    got = np.asarray(wg.winograd_conv2d(jnp.asarray(x), jnp.asarray(g)))
+    g3 = np.zeros((c_in, c_out, 3, 3))
+    g3[:, :, :r, :r] = g
+    want = ref.correlate_valid(x.astype(np.float64), g3)
+    np.testing.assert_allclose(got, want, atol=3e-4, rtol=3e-3)
+
+
+def test_tile_block_boundary_handling():
+    # tile counts that don't divide TILE_BLOCK exercise the padding path
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((1, 12, 12)).astype(np.float32)  # 25 tiles
+    g = rng.standard_normal((1, 1, 3, 3)).astype(np.float32)
+    got = np.asarray(wg.winograd_conv2d(jnp.asarray(x), jnp.asarray(g)))
+    want = ref.correlate_valid(x.astype(np.float64), g.astype(np.float64))
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+    # and a tiny tile_block forces multiple grid steps
+    z = wg.extract_tiles(jnp.asarray(x), 5, 5)
+    u = wg.filter_transform(jnp.asarray(g))
+    nz = wg.nonzero_positions(3, 3)
+    u_nz = jnp.transpose(u.reshape(1, 1, 16), (2, 1, 0))[jnp.asarray(nz)]
+    y_small = np.asarray(wg.winograd_engine(z, u_nz, nz, tile_block=4))
+    y_big = np.asarray(wg.winograd_engine(z, u_nz, nz, tile_block=64))
+    np.testing.assert_allclose(y_small, y_big, atol=1e-6)

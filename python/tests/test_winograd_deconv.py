@@ -1,0 +1,93 @@
+"""The fused fast algorithm (TDC + Winograd + sparsity skip) vs the
+standard-DeConv oracle — the paper's central correctness claim, exercised
+through the Pallas engine."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, winograd_deconv as wd
+
+PAPER_CONFIGS = [(5, 2), (4, 2), (3, 1)]
+
+
+@pytest.mark.parametrize("k,s", PAPER_CONFIGS)
+def test_matches_oracle_paper_configs(k, s):
+    rng = np.random.default_rng(20)
+    p = ref.default_padding(k, s)
+    x = rng.standard_normal((3, 6, 8)).astype(np.float32)
+    w = (rng.standard_normal((3, 4, k, k)) * 0.4).astype(np.float32)
+    want = ref.deconv_naive(x.astype(np.float64), w.astype(np.float64), s, p)
+    got = np.asarray(wd.winograd_deconv(jnp.asarray(x), jnp.asarray(w), s, p))
+    np.testing.assert_allclose(got, want, atol=3e-4, rtol=3e-3)
+
+
+def test_phase_plan_cases():
+    # K=5/S=2 phases: (3,3) (3,2) (2,3) (2,2); K=4/S=2: all (2,2)
+    plan5 = wd.phase_plan(5, 2, 2)
+    assert [sup for _, sup, _ in plan5] == [(3, 3), (3, 2), (2, 3), (2, 2)]
+    plan4 = wd.phase_plan(4, 2, 1)
+    assert [sup for _, sup, _ in plan4] == [(2, 2)] * 4
+
+
+def test_odd_spatial_sizes():
+    rng = np.random.default_rng(21)
+    x = rng.standard_normal((2, 5, 7)).astype(np.float32)
+    w = (rng.standard_normal((2, 3, 5, 5)) * 0.4).astype(np.float32)
+    want = ref.deconv_naive(x.astype(np.float64), w.astype(np.float64), 2, 2)
+    got = np.asarray(wd.winograd_deconv(jnp.asarray(x), jnp.asarray(w), 2, 2))
+    np.testing.assert_allclose(got, want, atol=3e-4, rtol=3e-3)
+
+
+def test_single_pixel_input():
+    rng = np.random.default_rng(22)
+    x = rng.standard_normal((2, 1, 1)).astype(np.float32)
+    w = rng.standard_normal((2, 2, 4, 4)).astype(np.float32)
+    want = ref.deconv_naive(x.astype(np.float64), w.astype(np.float64), 2, 1)
+    got = np.asarray(wd.winograd_deconv(jnp.asarray(x), jnp.asarray(w), 2, 1))
+    np.testing.assert_allclose(got, want, atol=3e-4, rtol=3e-3)
+
+
+def test_oracle_self_consistency():
+    # winograd oracle in ref.py vs the Pallas path vs the naive oracle
+    rng = np.random.default_rng(23)
+    x64 = rng.standard_normal((2, 4, 4))
+    w64 = rng.standard_normal((2, 2, 4, 4))
+    naive = ref.deconv_naive(x64, w64, 2, 1)
+    orc = ref.winograd_tdc_deconv(x64, w64, 2, 1)
+    np.testing.assert_allclose(orc, naive, atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    ks=st.sampled_from(PAPER_CONFIGS),
+    c_in=st.integers(1, 3),
+    c_out=st.integers(1, 3),
+    h=st.integers(1, 6),
+    w=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_kernel_hypothesis(ks, c_in, c_out, h, w, seed):
+    k, s = ks
+    p = ref.default_padding(k, s)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((c_in, h, w)).astype(np.float32)
+    wt = (rng.standard_normal((c_in, c_out, k, k)) * 0.5).astype(np.float32)
+    want = ref.deconv_naive(x.astype(np.float64), wt.astype(np.float64), s, p)
+    got = np.asarray(wd.winograd_deconv(jnp.asarray(x), jnp.asarray(wt), s, p))
+    assert got.shape == (c_out, s * h, s * w)
+    np.testing.assert_allclose(got, want, atol=5e-4, rtol=5e-3)
+
+
+def test_dtype_bfloat16_loose():
+    # bf16 inputs run through the same kernel (MXU-friendly dtype); loose
+    # tolerance — this is a smoke-level numerics check
+    rng = np.random.default_rng(24)
+    x = jnp.asarray(rng.standard_normal((2, 4, 4)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((2, 2, 3, 3)) * 0.4, jnp.bfloat16)
+    got = np.asarray(wd.winograd_deconv(x, w, 1, 1), dtype=np.float32)
+    want = ref.deconv_naive(
+        np.asarray(x, np.float64), np.asarray(w, np.float64), 1, 1
+    )
+    np.testing.assert_allclose(got, want, atol=0.15, rtol=0.15)

@@ -1,0 +1,75 @@
+//! Bench: reproduce **Fig. 8** — DeConv performance of the zero-padded,
+//! TDC and Winograd accelerators on DCGAN / ArtGAN / DiscoGAN / GP-GAN —
+//! plus ablations (zero-skip ZP baseline, bandwidth sensitivity) and
+//! timing of the cycle simulator itself.
+
+use wingan::accel::{simulate_model, AccelConfig};
+use wingan::benchlib::{black_box, Bench};
+use wingan::gan::workload::Method;
+use wingan::gan::zoo::{self, Scale};
+use wingan::report;
+
+fn main() {
+    println!("==========================================================");
+    println!(" Fig. 8 reproduction — accelerator performance comparison");
+    println!("==========================================================");
+    let cfg = AccelConfig::default();
+    print!("{}", report::fig8(&cfg));
+
+    // ablation: GANAX-style zero-skipping for the zero-padded baseline
+    // (paper sec. V.B mentions the technique and why it still trails TDC)
+    println!("\nablation — zero-padded baseline with activation zero-skip:");
+    let skip_cfg = cfg.with_zero_skip(true);
+    for g in zoo::all(Scale::Paper) {
+        let zp = simulate_model(&g, Method::ZeroPadded, &cfg, true);
+        let zs = simulate_model(&g, Method::ZeroPadded, &skip_cfg, true);
+        let wi = simulate_model(&g, Method::Winograd, &cfg, true);
+        println!(
+            "  {:<10} plain {:>8.3} ms  skip {:>8.3} ms  ours {:>8.3} ms  (ours vs skip: {:.2}x)",
+            g.name,
+            zp.t_total * 1e3,
+            zs.t_total * 1e3,
+            wi.t_total * 1e3,
+            zs.t_total / wi.t_total
+        );
+    }
+
+    // ablation: bandwidth sensitivity (eq. 6/7 — where does the winograd
+    // engine become transfer-bound?)
+    println!("\nablation — bandwidth sweep (DCGAN, Winograd):");
+    let g = zoo::dcgan(Scale::Paper);
+    for gbps in [0.5, 1.0, 2.0, 4.0, 8.0, 16.0] {
+        let c = cfg.with_bandwidth(gbps * 1e9);
+        let sim = simulate_model(&g, Method::Winograd, &c, true);
+        println!(
+            "  {:>5.1} GB/s  t={:>8.3} ms  compute {:>8.3} ms  transfer {:>8.3} ms  {}",
+            gbps,
+            sim.t_total * 1e3,
+            sim.layers.iter().map(|l| l.t_compute).sum::<f64>() * 1e3,
+            sim.layers.iter().map(|l| l.t_transfer).sum::<f64>() * 1e3,
+            if sim.layers.iter().map(|l| l.t_transfer).sum::<f64>()
+                > sim.layers.iter().map(|l| l.t_compute).sum::<f64>()
+            {
+                "transfer-bound"
+            } else {
+                "compute-bound"
+            }
+        );
+    }
+
+    println!("\n-- timings --");
+    let b = Bench::default();
+    let models = zoo::all(Scale::Paper);
+    b.run("fig8: cycle-sim one model x one method", || {
+        black_box(simulate_model(&models[0], Method::Winograd, &cfg, true).t_total)
+    });
+    b.run("fig8: full table (4 models x 3 methods)", || {
+        let mut acc = 0.0;
+        for g in &models {
+            for m in Method::ALL {
+                acc += simulate_model(g, m, &cfg, true).t_total;
+            }
+        }
+        black_box(acc)
+    });
+}

@@ -1,0 +1,69 @@
+//! Bench: reproduce **Fig. 9** — energy consumption of the DeConv layers
+//! relative to the zero-padded baseline — with the per-component breakdown
+//! and a sensitivity sweep over the energy parameters.
+
+use wingan::accel::{simulate_model, AccelConfig};
+use wingan::benchlib::{black_box, Bench};
+use wingan::energy::{energy_of, fig9_row, EnergyParams};
+use wingan::gan::workload::Method;
+use wingan::gan::zoo::{self, Scale};
+use wingan::report;
+
+fn main() {
+    println!("==========================================================");
+    println!(" Fig. 9 reproduction — DeConv energy consumption");
+    println!("==========================================================");
+    let cfg = AccelConfig::default();
+    let ep = EnergyParams::default();
+    print!("{}", report::fig9(&cfg, &ep));
+
+    println!("\nbreakdown (DCGAN, per method, mJ):");
+    let g = zoo::dcgan(Scale::Paper);
+    for m in Method::ALL {
+        let sim = simulate_model(&g, m, &cfg, true);
+        let b = energy_of(&sim, &g, &ep);
+        println!(
+            "  {:<16} compute {:>7.3}  onchip {:>7.3}  offchip {:>7.3}  rearrange {:>7.3}  total {:>7.3}",
+            m.label(),
+            b.compute * 1e3,
+            b.onchip * 1e3,
+            b.offchip * 1e3,
+            b.rearrange * 1e3,
+            b.total() * 1e3
+        );
+    }
+
+    // the paper's sec. V.C limitation: rearrangement overhead caps the saving
+    println!("\nsensitivity — mean saving vs zero-padded under parameter sweeps:");
+    for (label, mutate) in [
+        ("default", Box::new(|_: &mut EnergyParams| {}) as Box<dyn Fn(&mut EnergyParams)>),
+        ("dram 2x (DDR3 interface-heavy)", Box::new(|e: &mut EnergyParams| e.dram_word *= 2.0)),
+        ("sram 2x (small banks)", Box::new(|e: &mut EnergyParams| e.sram_word *= 2.0)),
+        ("no weight amortisation", Box::new(|e: &mut EnergyParams| e.weight_reuse_frames = 1.0)),
+        ("zero-toggle 0.0 (ideal gating)", Box::new(|e: &mut EnergyParams| e.zero_toggle_fraction = 0.0)),
+        ("zero-toggle 1.0 (no gating)", Box::new(|e: &mut EnergyParams| e.zero_toggle_fraction = 1.0)),
+    ] {
+        let mut p = EnergyParams::default();
+        mutate(&mut p);
+        let models = zoo::all(Scale::Paper);
+        let mean: f64 = models.iter().map(|g| fig9_row(g, &cfg, &p).saving_vs_zp()).sum::<f64>()
+            / models.len() as f64;
+        let mean_t: f64 = models.iter().map(|g| fig9_row(g, &cfg, &p).saving_vs_tdc()).sum::<f64>()
+            / models.len() as f64;
+        println!("  {:<34} mean vs ZP {:>5.2}x   vs TDC {:>5.2}x", label, mean, mean_t);
+    }
+
+    println!("\n-- timings --");
+    let b = Bench::default();
+    let models = zoo::all(Scale::Paper);
+    b.run("fig9: energy row, one model (3 sims)", || {
+        black_box(fig9_row(&models[0], &cfg, &ep).saving_vs_zp())
+    });
+    b.run("fig9: full table", || {
+        let mut acc = 0.0;
+        for g in &models {
+            acc += fig9_row(g, &cfg, &ep).saving_vs_zp();
+        }
+        black_box(acc)
+    });
+}

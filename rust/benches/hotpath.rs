@@ -1,0 +1,137 @@
+//! Bench: hot-path microbenchmarks for the §Perf optimisation pass —
+//! Winograd transforms, the reordered com-PE engine, the functional/cycle
+//! simulators, the batcher, JSON, and (if artifacts exist) the PJRT
+//! execute path that serves requests.
+
+use std::time::{Duration, Instant};
+use wingan::accel::functional::run_winograd_deconv;
+use wingan::accel::{simulate_model, AccelConfig};
+use wingan::benchlib::{black_box, Bench};
+use wingan::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use wingan::coordinator::request::GenRequest;
+use wingan::gan::workload::Method;
+use wingan::gan::zoo::{self, Scale};
+use wingan::tdc;
+use wingan::util::prng::Rng;
+use wingan::util::tensor::{Filter4, Tensor3};
+use wingan::winograd::layout::{engine_multiply, reorder_filter, reorder_input_tile};
+use wingan::winograd::transforms::{filter_transform, input_transform, inverse_transform};
+
+fn main() {
+    println!("==========================================================");
+    println!(" hot-path microbenchmarks (see EXPERIMENTS.md §Perf)");
+    println!("==========================================================");
+    let b = Bench::default();
+    let mut rng = Rng::new(7);
+
+    // --- L3 substrate kernels -------------------------------------------
+    let mut z = [[0.0; 4]; 4];
+    for row in z.iter_mut() {
+        for v in row.iter_mut() {
+            *v = rng.normal();
+        }
+    }
+    let f = {
+        let mut f = [[0.0; 3]; 3];
+        for row in f.iter_mut() {
+            for v in row.iter_mut() {
+                *v = rng.normal();
+            }
+        }
+        f
+    };
+    b.run("winograd: input transform B^T Z B (4x4)", || black_box(input_transform(&z)));
+    b.run("winograd: filter transform G f G^T (3x3)", || black_box(filter_transform(&f)));
+    b.run("winograd: inverse transform A^T M A", || black_box(inverse_transform(&z)));
+
+    // reordered engine: one tile, 64 channels in, 4 out (a T_m group)
+    let (c_in, c_out) = (64usize, 4usize);
+    let w4 = Filter4::from_vec(c_in, c_out, 4, 4, rng.normal_vec(c_in * c_out * 16));
+    let phases = tdc::decompose(&w4, 2, 1);
+    let rf = reorder_filter(&phases[0]);
+    let xt = Tensor3::from_vec(c_in, 4, 4, rng.normal_vec(c_in * 16));
+    let vt = reorder_input_tile(&xt, 0, 0);
+    b.run("engine: pre-PE reorder tile (64ch)", || black_box(reorder_input_tile(&xt, 0, 0)));
+    b.run("engine: com-PE sparse multiply (64x4, case3)", || {
+        black_box(engine_multiply(&rf, &vt).1)
+    });
+
+    // functional simulator, one realistic small layer
+    let x = Tensor3::from_vec(16, 16, 16, rng.normal_vec(16 * 16 * 16));
+    let w5 = Filter4::from_vec(16, 8, 5, 5, rng.normal_vec(16 * 8 * 25));
+    b.run("functional sim: 16x8 deconv K5S2 on 16x16", || {
+        black_box(run_winograd_deconv(&x, &w5, 2, 2).events.mults)
+    });
+
+    // cycle simulator
+    let cfg = AccelConfig::default();
+    let models = zoo::all(Scale::Paper);
+    b.run("cycle sim: 4 models x 3 methods", || {
+        let mut acc = 0.0;
+        for g in &models {
+            for m in Method::ALL {
+                acc += simulate_model(g, m, &cfg, true).t_total;
+            }
+        }
+        black_box(acc)
+    });
+
+    // batcher state machine
+    b.run("batcher: push+poll 256 requests (buckets 1/4/8)", || {
+        let mut batcher =
+            DynamicBatcher::new(BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(5)));
+        let t = Instant::now();
+        let mut out = 0usize;
+        for i in 0..256 {
+            batcher.push(GenRequest {
+                id: i,
+                model: "dcgan".into(),
+                method: "winograd".into(),
+                input: Vec::new(),
+                enqueued: t,
+            });
+            while let Some(ready) = batcher.poll(t) {
+                out += ready.requests.len();
+            }
+        }
+        while let Some(ready) = batcher.flush() {
+            out += ready.requests.len();
+        }
+        black_box(out)
+    });
+
+    // JSON substrate (manifest-sized doc)
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = &manifest_text {
+        b.run("json: parse artifact manifest", || {
+            black_box(wingan::util::json::parse(text).unwrap())
+        });
+    }
+
+    // PJRT execute path (only when artifacts are present)
+    match wingan::runtime::Manifest::load(std::path::Path::new("artifacts")) {
+        Ok(m) => {
+            let mut rt = wingan::runtime::Runtime::new().expect("pjrt client");
+            let entry = m.find("deconv_k5s2").expect("layer artifact").clone();
+            rt.load(&entry).expect("compile");
+            let input = rng.normal_vec_f32(entry.input_len());
+            b.run("pjrt: execute deconv_k5s2 (8->16ch, 8x8)", || {
+                black_box(rt.execute("deconv_k5s2", &input).unwrap().len())
+            });
+            if let Some(e) = m.find("dcgan_b8") {
+                let e = e.clone();
+                rt.load(&e).expect("compile");
+                let input = rng.normal_vec_f32(e.input_len());
+                let bq = Bench { budget: Duration::from_secs(2), ..Bench::default() };
+                let meas = bq.run("pjrt: execute dcgan_b8 generator", || {
+                    black_box(rt.execute("dcgan_b8", &input).unwrap().len())
+                });
+                println!(
+                    "  -> serving-side throughput ceiling: {:.1} img/s (batch 8)",
+                    8.0 / meas.median()
+                );
+            }
+        }
+        Err(e) => println!("(skipping PJRT benches: {e})"),
+    }
+}

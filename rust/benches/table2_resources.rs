@@ -1,0 +1,55 @@
+//! Bench: reproduce **Table II** — resource utilisation for DCGAN on the
+//! Virtex7-485T (ours vs the TDC baseline [14]) — plus per-model resource
+//! reports and the model-vs-paper error summary.
+
+use wingan::accel::AccelConfig;
+use wingan::benchlib::{black_box, Bench};
+use wingan::gan::workload::Method;
+use wingan::gan::zoo::{self, Scale};
+use wingan::report;
+use wingan::resource;
+
+fn main() {
+    println!("==========================================================");
+    println!(" Table II reproduction — FPGA resource utilisation");
+    println!("==========================================================");
+    let cfg = AccelConfig::default();
+    print!("{}", report::table2(&cfg));
+
+    let g = zoo::dcgan(Scale::Paper);
+    let ours = resource::report(&g, &cfg, Method::Winograd);
+    let tdc = resource::report(&g, &cfg, Method::Tdc);
+    let p14 = resource::PAPER_TABLE2_TDC;
+    let po = resource::PAPER_TABLE2_OURS;
+    let err = |m: usize, p: usize| 100.0 * (m as f64 - p as f64) / p as f64;
+    println!("\nmodel error vs paper:");
+    println!(
+        "  [14]: BRAM {:+.1}%  DSP {:+.1}%  LUT {:+.1}%  FF {:+.1}%",
+        err(tdc.bram18k, p14.bram18k),
+        err(tdc.dsp48e, p14.dsp48e),
+        err(tdc.lut, p14.lut),
+        err(tdc.ff, p14.ff)
+    );
+    println!(
+        "  ours: BRAM {:+.1}%  DSP {:+.1}%  LUT {:+.1}%  FF {:+.1}%",
+        err(ours.bram18k, po.bram18k),
+        err(ours.dsp48e, po.dsp48e),
+        err(ours.lut, po.lut),
+        err(ours.ff, po.ff)
+    );
+
+    println!("\nper-model resource estimates (Winograd design):");
+    for g in zoo::all(Scale::Paper) {
+        let r = resource::report(&g, &cfg, Method::Winograd);
+        println!(
+            "  {:<10} BRAM18K {:>5}  DSP48E {:>5}  LUT {:>7}  FF {:>7}",
+            g.name, r.bram18k, r.dsp48e, r.lut, r.ff
+        );
+    }
+
+    println!("\n-- timings --");
+    let b = Bench::default();
+    b.run("table2: full resource report", || {
+        black_box(resource::report(&g, &cfg, Method::Winograd).bram18k)
+    });
+}

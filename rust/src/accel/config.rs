@@ -1,0 +1,90 @@
+//! Accelerator configuration: the paper's testbed parameters
+//! (§V.A: Xilinx Virtex7 485T, 100 MHz, DDR3 @ 4 GB/s, f32) and the
+//! tiling factors chosen by the DSE (§IV.C: T_m = 4, T_n = 128).
+
+/// Static configuration of one simulated accelerator instance.
+#[derive(Clone, Copy, Debug)]
+pub struct AccelConfig {
+    /// output-feature-map tile factor (PE rows)
+    pub t_m: usize,
+    /// input-feature-map tile factor (PE columns)
+    pub t_n: usize,
+    /// clock frequency in Hz
+    pub freq_hz: f64,
+    /// off-chip bandwidth in bytes/second
+    pub bandwidth: f64,
+    /// word width in bytes (single-precision float)
+    pub word_bytes: usize,
+    /// zero-activation skipping for the zero-padded baseline (GANAX-style
+    /// [10]); models their "skip some of the padded zero activations" with
+    /// a control-overhead factor. Off for the plain baseline.
+    pub zp_zero_skip: bool,
+    /// fraction of ideal skip the MIMD-SIMD control actually achieves
+    /// (GANAX reports ~0.6-0.8 of ideal; only used when zp_zero_skip)
+    pub zp_skip_efficiency: f64,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            t_m: 4,
+            t_n: 128,
+            freq_hz: 100e6,
+            bandwidth: 4.0e9,
+            word_bytes: 4,
+            zp_zero_skip: false,
+            zp_skip_efficiency: 0.7,
+        }
+    }
+}
+
+impl AccelConfig {
+    /// Parallel multipliers in the com-PE array.
+    pub fn macs(&self) -> usize {
+        self.t_m * self.t_n
+    }
+
+    /// Seconds per cycle.
+    pub fn cycle_time(&self) -> f64 {
+        1.0 / self.freq_hz
+    }
+
+    pub fn with_tiles(mut self, t_m: usize, t_n: usize) -> Self {
+        self.t_m = t_m;
+        self.t_n = t_n;
+        self
+    }
+
+    pub fn with_bandwidth(mut self, bytes_per_s: f64) -> Self {
+        self.bandwidth = bytes_per_s;
+        self
+    }
+
+    pub fn with_zero_skip(mut self, on: bool) -> Self {
+        self.zp_zero_skip = on;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_testbed() {
+        let c = AccelConfig::default();
+        assert_eq!(c.t_m, 4);
+        assert_eq!(c.t_n, 128);
+        assert_eq!(c.macs(), 512);
+        assert_eq!(c.freq_hz, 100e6);
+        assert_eq!(c.bandwidth, 4.0e9);
+        assert_eq!(c.word_bytes, 4);
+    }
+
+    #[test]
+    fn builders() {
+        let c = AccelConfig::default().with_tiles(8, 64).with_bandwidth(1e9);
+        assert_eq!(c.macs(), 512);
+        assert_eq!(c.bandwidth, 1e9);
+    }
+}

@@ -1,0 +1,376 @@
+//! Cycle-level performance model of the three DeConv accelerators
+//! (paper §IV.C eqs. 5–9 generalised to per-case zero-row skipping).
+//!
+//! The model is stripe-phase-accurate: for every layer it derives the
+//! per-stripe compute time `T_C` (eq. 5), per-stripe transfer time `T_D`
+//! (eq. 6), and the prologue `T_I` (eq. 8); ping-pong line buffers overlap
+//! the two, so a stripe costs `max(T_C, T_D)` and the layer costs
+//! `T_I + stripes * max(T_C, T_D)`.
+//!
+//! For S = m = 2 (every Table-I layer) the Winograd compute expression
+//! reduces *exactly* to the paper's eq. 5 with `C(K_C)` ∈ {49, 36, 16} —
+//! see `winograd::sparsity::c_of_kc` and the tests below.
+
+use crate::accel::config::AccelConfig;
+use crate::gan::workload::{self, Method};
+use crate::gan::zoo::{Gan, Kind, Layer};
+use crate::tdc;
+use crate::winograd::sparsity::phase_cases;
+use crate::winograd::transforms::{M as M_TILE, N as N_TILE};
+
+/// Simulation result for one layer.
+#[derive(Clone, Debug)]
+pub struct LayerSim {
+    pub method: Method,
+    /// compute cycles summed over stripes
+    pub cycles_compute: u64,
+    /// seconds of pure compute (Σ T_C)
+    pub t_compute: f64,
+    /// seconds of pure transfer (Σ T_D)
+    pub t_transfer: f64,
+    /// prologue seconds (T_I, eq. 8)
+    pub t_prologue: f64,
+    /// wall-clock seconds with ping-pong overlap
+    pub t_total: f64,
+    /// row/tile-row stripes processed
+    pub stripes: u64,
+    /// multiplications issued (zero rows skipped for Winograd)
+    pub mults: u64,
+    /// off-chip traffic in bytes (in + out + weights)
+    pub offchip_bytes: u64,
+    /// off-chip activation traffic only (in + out)
+    pub offchip_activation_bytes: u64,
+    /// off-chip weight traffic only (amortisable across frames)
+    pub offchip_weight_bytes: u64,
+    /// on-chip buffer accesses (operand reads for issued mults)
+    pub onchip_accesses: u64,
+    /// pre/post-PE transform adds (Winograd only)
+    pub transform_adds: u64,
+    /// multiplications whose activation operand is a structural zero
+    /// (zero-padded baseline only: the inserted-zero products). They cost
+    /// cycles but almost no dynamic energy (no operand toggling).
+    pub zero_operand_mults: u64,
+}
+
+/// Simulation result for a whole model.
+#[derive(Clone, Debug)]
+pub struct ModelSim {
+    pub model: String,
+    pub method: Method,
+    pub layers: Vec<LayerSim>,
+    pub t_total: f64,
+    pub mults: u64,
+    pub offchip_bytes: u64,
+    pub offchip_activation_bytes: u64,
+    pub offchip_weight_bytes: u64,
+    pub onchip_accesses: u64,
+    pub transform_adds: u64,
+    pub zero_operand_mults: u64,
+}
+
+impl ModelSim {
+    /// Effective throughput in GOP/s, counting the TDC-equivalent spatial
+    /// work (2 ops per spatial multiply-accumulate) — the paper's
+    /// "computational roof" numerator (eq. 9).
+    pub fn effective_gops(&self, g: &Gan, deconv_only: bool) -> f64 {
+        let work: u64 = g
+            .layers
+            .iter()
+            .filter(|l| !deconv_only || l.kind == Kind::Deconv)
+            .map(|l| 2 * workload::layer_mults(l, Method::Tdc))
+            .sum();
+        work as f64 / self.t_total / 1e9
+    }
+}
+
+/// Per-stripe quantities for one layer under one method.
+///
+/// Weight traffic is tracked separately from the per-stripe activation
+/// traffic: weights stream into the ping-pong weight buffers overlapped
+/// with compute (the paper's eq. 6 accordingly models `T_D` from output
+/// data only), so they count toward off-chip bytes (energy, Fig. 9) but
+/// not toward the stripe-level transfer/compute race.
+struct StripePlan {
+    stripes: u64,
+    compute_cycles_per_stripe: u64,
+    in_bytes_per_stripe: u64,
+    out_bytes_per_stripe: u64,
+    /// first-n-input-rows prologue (the input part of eq. 8)
+    prologue_bytes: u64,
+    /// full-layer weight stream (overlapped; energy accounting only)
+    weight_bytes: u64,
+}
+
+fn plan_deconv(l: &Layer, method: Method, cfg: &AccelConfig) -> StripePlan {
+    let word = cfg.word_bytes as u64;
+    let (m_out, n_in) = (l.c_out as u64, l.c_in as u64);
+    let (h, w) = (l.h_in as u64, l.w_in as u64);
+    let s = l.s as u64;
+    let groups_n = n_in.div_ceil(cfg.t_n as u64);
+    match method {
+        Method::Winograd => {
+            let tiles_w = w.div_ceil(M_TILE as u64);
+            let stripes = h.div_ceil(M_TILE as u64);
+            // Σ over phases: ceil(M/T_m) filter groups × live positions.
+            // The dataflow reorganisation groups same-case filters, so a
+            // group costs its case's live count — eq. 5's C(K_C)/m² term.
+            let per_tile: u64 = phase_cases(l.k, l.s, l.p)
+                .iter()
+                .map(|c| m_out.div_ceil(cfg.t_m as u64) * c.live_positions() as u64)
+                .sum();
+            let compute = groups_n * tiles_w * per_tile;
+            // new input rows per tile-row stripe: m rows of all N maps
+            let in_b = M_TILE as u64 * w * n_in * word;
+            // output: m*S rows of all M maps at width W_O = S*W
+            let out_b = (M_TILE as u64 * s) * (s * w) * m_out * word;
+            // weights: live transformed words, streamed overlapped
+            let weights =
+                m_out * n_in * crate::winograd::sparsity::c_of_kc(l.k, l.s, l.p) as u64 * word;
+            // prologue: first n input rows (input part of eq. 8)
+            let prologue = N_TILE as u64 * w * n_in * word;
+            StripePlan {
+                stripes,
+                compute_cycles_per_stripe: compute,
+                in_bytes_per_stripe: in_b,
+                out_bytes_per_stripe: out_b,
+                prologue_bytes: prologue,
+                weight_bytes: weights,
+            }
+        }
+        Method::Tdc => {
+            let kc = tdc::kc(l.k, l.s) as u64;
+            let stripes = h;
+            let groups_m = (s * s * m_out).div_ceil(cfg.t_m as u64);
+            let compute = groups_m * groups_n * w * kc * kc;
+            let in_b = w * n_in * word;
+            let out_b = s * (s * w) * m_out * word;
+            let weights = s * s * m_out * n_in * kc * kc * word;
+            let prologue = kc * w * n_in * word;
+            StripePlan {
+                stripes,
+                compute_cycles_per_stripe: compute,
+                in_bytes_per_stripe: in_b,
+                out_bytes_per_stripe: out_b,
+                prologue_bytes: prologue,
+                weight_bytes: weights,
+            }
+        }
+        Method::ZeroPadded => {
+            let k = l.k as u64;
+            let (ho, wo) = (s * h, s * w);
+            let stripes = ho;
+            let groups_m = m_out.div_ceil(cfg.t_m as u64);
+            let mut compute = groups_m * groups_n * wo * k * k;
+            if cfg.zp_zero_skip {
+                // GANAX-style: ideally only 1/S² of dilated pixels are
+                // non-zero; control overhead keeps part of the zero work.
+                let ideal = compute / (s * s);
+                let skipped = ((compute - ideal) as f64 * cfg.zp_skip_efficiency) as u64;
+                compute -= skipped;
+            }
+            // the zero-padded flow materialises the up-scaled map ([9];
+            // GANAX's motivating inefficiency): the dilation stage writes
+            // the S^2-larger map out once (prologue) and the conv engine
+            // reads it back row by row, zeros included.
+            let in_b = wo * n_in * word;
+            let out_b = wo * m_out * word;
+            let weights = m_out * n_in * k * k * word;
+            let prologue = s * s * h * w * n_in * word // dilated-map write
+                + k * wo * n_in * word; // first K dilated rows
+            StripePlan {
+                stripes,
+                compute_cycles_per_stripe: compute,
+                in_bytes_per_stripe: in_b,
+                out_bytes_per_stripe: out_b,
+                prologue_bytes: prologue,
+                weight_bytes: weights,
+            }
+        }
+    }
+}
+
+fn plan_conv(l: &Layer, cfg: &AccelConfig) -> StripePlan {
+    // DiscoGAN's encoder convs run identically on every accelerator
+    // (spatial conv on the T_m x T_n array).
+    let word = cfg.word_bytes as u64;
+    let (m_out, n_in) = (l.c_out as u64, l.c_in as u64);
+    let (ho, wo) = (l.h_out() as u64, l.w_out() as u64);
+    let k = l.k as u64;
+    let compute =
+        m_out.div_ceil(cfg.t_m as u64) * n_in.div_ceil(cfg.t_n as u64) * wo * k * k;
+    StripePlan {
+        stripes: ho,
+        compute_cycles_per_stripe: compute,
+        in_bytes_per_stripe: l.s as u64 * l.w_in as u64 * n_in * word,
+        out_bytes_per_stripe: wo * m_out * word,
+        prologue_bytes: k * l.w_in as u64 * n_in * word,
+        weight_bytes: m_out * n_in * k * k * word,
+    }
+}
+
+/// Simulate one layer under one method.
+pub fn simulate_layer(l: &Layer, method: Method, cfg: &AccelConfig) -> LayerSim {
+    let plan = match l.kind {
+        Kind::Deconv => plan_deconv(l, method, cfg),
+        Kind::Conv => plan_conv(l, cfg),
+    };
+    let t_c_stripe = plan.compute_cycles_per_stripe as f64 * cfg.cycle_time();
+    let t_d_stripe =
+        (plan.in_bytes_per_stripe + plan.out_bytes_per_stripe) as f64 / cfg.bandwidth;
+    let t_i = plan.prologue_bytes as f64 / cfg.bandwidth;
+    let t_total = t_i + plan.stripes as f64 * t_c_stripe.max(t_d_stripe);
+    // off-chip activation traffic: prologue input rows + steady-state
+    // stripes (minus the stripes whose input arrived in the prologue)
+    let act_bytes = plan.prologue_bytes
+        + plan.stripes * (plan.in_bytes_per_stripe + plan.out_bytes_per_stripe)
+        - (N_TILE as u64 / M_TILE as u64).min(plan.stripes) * plan.in_bytes_per_stripe;
+    let offchip = plan.weight_bytes + act_bytes;
+    LayerSim {
+        method,
+        cycles_compute: plan.stripes * plan.compute_cycles_per_stripe,
+        t_compute: plan.stripes as f64 * t_c_stripe,
+        t_transfer: plan.stripes as f64 * t_d_stripe,
+        t_prologue: t_i,
+        t_total,
+        stripes: plan.stripes,
+        mults: workload::layer_mults(l, method),
+        offchip_bytes: offchip,
+        offchip_activation_bytes: act_bytes,
+        offchip_weight_bytes: plan.weight_bytes,
+        onchip_accesses: workload::layer_onchip_accesses(l, method),
+        transform_adds: workload::layer_transform_adds(l, method),
+        zero_operand_mults: if l.kind == Kind::Deconv && method == Method::ZeroPadded {
+            // all products beyond the real (TDC-equivalent) taps hit an
+            // inserted zero
+            workload::layer_mults(l, Method::ZeroPadded)
+                - workload::layer_mults(l, Method::Tdc)
+        } else {
+            0
+        },
+    }
+}
+
+/// Simulate a whole model. `deconv_only` mirrors the paper's Fig. 8 scope
+/// ("we focused on DeConv performance").
+pub fn simulate_model(g: &Gan, method: Method, cfg: &AccelConfig, deconv_only: bool) -> ModelSim {
+    let layers: Vec<LayerSim> = g
+        .layers
+        .iter()
+        .filter(|l| !deconv_only || l.kind == Kind::Deconv)
+        .map(|l| simulate_layer(l, method, cfg))
+        .collect();
+    ModelSim {
+        model: g.name.to_string(),
+        method,
+        t_total: layers.iter().map(|l| l.t_total).sum(),
+        mults: layers.iter().map(|l| l.mults).sum(),
+        offchip_bytes: layers.iter().map(|l| l.offchip_bytes).sum(),
+        offchip_activation_bytes: layers.iter().map(|l| l.offchip_activation_bytes).sum(),
+        offchip_weight_bytes: layers.iter().map(|l| l.offchip_weight_bytes).sum(),
+        onchip_accesses: layers.iter().map(|l| l.onchip_accesses).sum(),
+        transform_adds: layers.iter().map(|l| l.transform_adds).sum(),
+        zero_operand_mults: layers.iter().map(|l| l.zero_operand_mults).sum(),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gan::zoo::{self, Scale};
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::default()
+    }
+
+    #[test]
+    fn winograd_compute_matches_paper_eq5() {
+        // For S = m = 2 our per-case sum must equal eq. 5:
+        // ceil(S²M/T_m)·ceil(N/T_n)·ceil(W_I/m)·C(K_C)/m² cycles per stripe.
+        let g = zoo::dcgan(Scale::Paper);
+        let l = &g.layers[1]; // 512 -> 256, K=5, S=2, 8x8
+        let sim = simulate_layer(l, Method::Winograd, &cfg());
+        let c = cfg();
+        let eq5_per_stripe = ((l.s * l.s * l.c_out) as u64).div_ceil(c.t_m as u64)
+            * (l.c_in as u64).div_ceil(c.t_n as u64)
+            * (l.w_in as u64).div_ceil(2)
+            * 49
+            / 4;
+        assert_eq!(
+            sim.cycles_compute,
+            sim.stripes * eq5_per_stripe,
+            "per-case sum should reduce to eq. 5 for S=m=2"
+        );
+    }
+
+    #[test]
+    fn method_ordering_per_model() {
+        for g in zoo::all(Scale::Paper) {
+            let zp = simulate_model(&g, Method::ZeroPadded, &cfg(), true);
+            let td = simulate_model(&g, Method::Tdc, &cfg(), true);
+            let wi = simulate_model(&g, Method::Winograd, &cfg(), true);
+            assert!(wi.t_total < td.t_total, "{}: winograd < tdc", g.name);
+            assert!(td.t_total < zp.t_total, "{}: tdc < zero-padded", g.name);
+        }
+    }
+
+    #[test]
+    fn dcgan_speedups_in_paper_band() {
+        // Paper Fig. 8: DCGAN 8.38x vs zero-padded, 2.85x vs TDC. Our
+        // simulator reproduces the shape; accept a band around the claims.
+        let g = zoo::dcgan(Scale::Paper);
+        let zp = simulate_model(&g, Method::ZeroPadded, &cfg(), true);
+        let td = simulate_model(&g, Method::Tdc, &cfg(), true);
+        let wi = simulate_model(&g, Method::Winograd, &cfg(), true);
+        let s_zp = zp.t_total / wi.t_total;
+        let s_td = td.t_total / wi.t_total;
+        assert!(s_zp > 6.0 && s_zp < 10.0, "ZP speedup {s_zp}");
+        assert!(s_td > 2.2 && s_td < 3.4, "TDC speedup {s_td}");
+    }
+
+    #[test]
+    fn zero_skip_helps_zero_padded_but_not_past_tdc() {
+        let g = zoo::dcgan(Scale::Paper);
+        let plain = simulate_model(&g, Method::ZeroPadded, &cfg(), true);
+        let skip = simulate_model(
+            &g,
+            Method::ZeroPadded,
+            &cfg().with_zero_skip(true),
+            true,
+        );
+        let td = simulate_model(&g, Method::Tdc, &cfg(), true);
+        assert!(skip.t_total < plain.t_total);
+        assert!(td.t_total <= skip.t_total, "TDC has no skip overhead");
+    }
+
+    #[test]
+    fn cycles_scale_with_workload() {
+        // monotonicity: doubling channels should not reduce time
+        let mut l = zoo::dcgan(Scale::Paper).layers[0];
+        let base = simulate_layer(&l, Method::Winograd, &cfg()).t_total;
+        l.c_in *= 2;
+        let bigger = simulate_layer(&l, Method::Winograd, &cfg()).t_total;
+        assert!(bigger >= base);
+    }
+
+    #[test]
+    fn bandwidth_bound_when_starved() {
+        // at tiny bandwidth the layer becomes transfer-bound: total ≈ T_D
+        let g = zoo::dcgan(Scale::Paper);
+        let l = &g.layers[3];
+        let starved = cfg().with_bandwidth(1e6);
+        let sim = simulate_layer(l, Method::Winograd, &starved);
+        assert!(sim.t_transfer > sim.t_compute * 10.0);
+        assert!((sim.t_total - (sim.t_prologue + sim.t_transfer)).abs() / sim.t_total < 1e-9);
+    }
+
+    #[test]
+    fn deconv_only_excludes_encoder() {
+        let g = zoo::discogan(Scale::Paper);
+        let dec = simulate_model(&g, Method::Winograd, &cfg(), true);
+        let full = simulate_model(&g, Method::Winograd, &cfg(), false);
+        assert_eq!(dec.layers.len(), 4);
+        assert_eq!(full.layers.len(), 9);
+        assert!(full.t_total > dec.t_total);
+    }
+}

@@ -1,0 +1,174 @@
+//! Line buffers (paper §IV.B): simple-dual-port on-chip row buffers that
+//! overlap PE compute with DDR transfer (ping-pong).
+//!
+//! Two roles here:
+//! * a *functional* ring-of-rows buffer used by the functional simulator
+//!   (windows are read out of it exactly as the hardware would), with
+//!   access counting for the energy model;
+//! * *geometry* helpers (`bram18k_for`) shared with the resource model:
+//!   the paper stores `n+m` lines of `T_n` input maps and `2*m*S` lines of
+//!   `T_m` output maps.
+
+/// Functional line buffer: holds the most recent `depth` rows of a
+/// `channels x width` feature-map slab. Rows are pushed whole (modelling a
+/// DDR burst into one bank) and read through 2D windows.
+#[derive(Clone, Debug)]
+pub struct LineBuffer {
+    pub channels: usize,
+    pub width: usize,
+    pub depth: usize,
+    /// ring of rows; rows[r][c * width + x] with r relative to `first_row`
+    rows: Vec<Vec<f64>>,
+    /// absolute index of the oldest row held
+    first_row: usize,
+    n_rows_pushed: usize,
+    /// counted accesses for the energy model
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl LineBuffer {
+    pub fn new(channels: usize, width: usize, depth: usize) -> Self {
+        LineBuffer {
+            channels,
+            width,
+            depth,
+            rows: Vec::new(),
+            first_row: 0,
+            n_rows_pushed: 0,
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    /// Push one row (all channels); evicts the oldest row when full.
+    pub fn push_row(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.channels * self.width, "row size mismatch");
+        self.writes += row.len() as u64;
+        if self.rows.len() == self.depth {
+            self.rows.remove(0);
+            self.first_row += 1;
+        }
+        self.rows.push(row);
+        self.n_rows_pushed += 1;
+    }
+
+    /// Number of rows pushed so far (absolute row cursor).
+    pub fn rows_pushed(&self) -> usize {
+        self.n_rows_pushed
+    }
+
+    /// Read element (c, absolute_row, x); panics if the row was evicted —
+    /// that would be a dataflow bug (window slid past the buffer depth).
+    pub fn read(&mut self, c: usize, abs_row: usize, x: usize) -> f64 {
+        assert!(
+            abs_row >= self.first_row && abs_row < self.first_row + self.rows.len(),
+            "row {abs_row} not resident (have {}..{})",
+            self.first_row,
+            self.first_row + self.rows.len()
+        );
+        self.reads += 1;
+        self.rows[abs_row - self.first_row][c * self.width + x]
+    }
+
+    /// Read an `RH x RW` window for one channel with a single residency
+    /// check (models the hardware's wide window-select read; still counts
+    /// every word for the energy model).
+    pub fn read_window<const RH: usize, const RW: usize>(
+        &mut self,
+        c: usize,
+        top_abs_row: usize,
+        left: usize,
+    ) -> [[f64; RW]; RH] {
+        assert!(
+            top_abs_row >= self.first_row
+                && top_abs_row + RH <= self.first_row + self.rows.len(),
+            "window rows {top_abs_row}..{} not resident (have {}..{})",
+            top_abs_row + RH,
+            self.first_row,
+            self.first_row + self.rows.len()
+        );
+        self.reads += (RH * RW) as u64;
+        let mut out = [[0.0; RW]; RH];
+        for (i, row) in out.iter_mut().enumerate() {
+            let src = &self.rows[top_abs_row - self.first_row + i]
+                [c * self.width + left..c * self.width + left + RW];
+            row.copy_from_slice(src);
+        }
+        out
+    }
+}
+
+/// BRAM18K blocks needed to hold `words` f32 words with `banks` independent
+/// ports-worth of banking. A Virtex-7 BRAM18K holds 512 x 36b = 512 words
+/// of 32 bits (with parity bits unused); simple dual port.
+pub fn bram18k_for(words: usize, banks: usize) -> usize {
+    let per_bank_words = words.div_ceil(banks.max(1));
+    let blocks_per_bank = per_bank_words.div_ceil(512);
+    blocks_per_bank * banks.max(1)
+}
+
+/// Input line-buffer geometry (paper: `n+m` lines of `T_n` maps).
+pub fn input_buffer_words(t_n: usize, width: usize, n: usize, m: usize) -> usize {
+    (n + m) * width * t_n
+}
+
+/// Output line-buffer geometry (paper: `2*m*S` lines of `T_m` maps, widths
+/// are output widths `S * W_I`).
+pub fn output_buffer_words(t_m: usize, width_out: usize, m: usize, s: usize) -> usize {
+    2 * m * s * width_out * t_m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_eviction_and_reads() {
+        let mut lb = LineBuffer::new(1, 4, 2);
+        lb.push_row(vec![0.0, 1.0, 2.0, 3.0]);
+        lb.push_row(vec![4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(lb.read(0, 0, 1), 1.0);
+        assert_eq!(lb.read(0, 1, 2), 6.0);
+        lb.push_row(vec![8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(lb.read(0, 2, 0), 8.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not resident")]
+    fn evicted_row_panics() {
+        let mut lb = LineBuffer::new(1, 2, 2);
+        lb.push_row(vec![0.0, 0.0]);
+        lb.push_row(vec![0.0, 0.0]);
+        lb.push_row(vec![0.0, 0.0]);
+        lb.read(0, 0, 0);
+    }
+
+    #[test]
+    fn access_counters() {
+        let mut lb = LineBuffer::new(2, 3, 2);
+        lb.push_row(vec![0.0; 6]);
+        lb.read(1, 0, 2);
+        lb.read(0, 0, 0);
+        assert_eq!(lb.writes, 6);
+        assert_eq!(lb.reads, 2);
+    }
+
+    #[test]
+    fn bram_geometry() {
+        // 512 words exactly fit one block
+        assert_eq!(bram18k_for(512, 1), 1);
+        assert_eq!(bram18k_for(513, 1), 2);
+        // banking multiplies block granularity
+        assert_eq!(bram18k_for(1024, 4), 4);
+        assert_eq!(bram18k_for(100, 4), 4);
+    }
+
+    #[test]
+    fn paper_buffer_shapes() {
+        // n+m = 6 lines of T_n=128 maps, width 32: 6*32*128 words
+        assert_eq!(input_buffer_words(128, 32, 4, 2), 6 * 32 * 128);
+        // 2*m*S = 8 lines of T_m=4 maps at output width 64
+        assert_eq!(output_buffer_words(4, 64, 2, 2), 8 * 64 * 4);
+    }
+}

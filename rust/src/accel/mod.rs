@@ -1,0 +1,18 @@
+//! FPGA accelerator simulator substrate (paper §IV–V).
+//!
+//! * [`config`] — testbed parameters (Virtex7-485T @ 100 MHz, 4 GB/s DDR3,
+//!   T_m = 4, T_n = 128).
+//! * [`linebuf`] — functional + geometric line-buffer models (§IV.B).
+//! * [`cycle`] — stripe-accurate performance model (eqs. 5–9) for the
+//!   zero-padded, TDC, and Winograd engines.
+//! * [`functional`] — executes the Winograd/TDC dataflows on real tensors
+//!   through the line buffers; bit-exact vs the standard DeConv and the
+//!   source of measured event counts.
+
+pub mod config;
+pub mod cycle;
+pub mod functional;
+pub mod linebuf;
+
+pub use config::AccelConfig;
+pub use cycle::{simulate_layer, simulate_model, LayerSim, ModelSim};

@@ -1,0 +1,142 @@
+//! Minimal benchmark harness (criterion is unavailable offline): warmup,
+//! calibrated iteration count, mean/stddev/min over samples, and a stable
+//! one-line report format the bench binaries share.
+//!
+//! Not a statistical match for criterion, but honest: wall-clock medians
+//! over multiple samples with an explicit black_box to defeat DCE.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-export for bench bodies.
+pub use std::hint::black_box;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    pub iters_per_sample: u32,
+}
+
+impl Measurement {
+    fn per_iter_secs(&self) -> Vec<f64> {
+        self.samples
+            .iter()
+            .map(|d| d.as_secs_f64() / self.iters_per_sample as f64)
+            .collect()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let v = self.per_iter_secs();
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let v = self.per_iter_secs();
+        let m = self.mean();
+        (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.per_iter_secs().into_iter().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut v = self.per_iter_secs();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+
+    pub fn report(&self) -> String {
+        let scale = |s: f64| {
+            if s < 1e-6 {
+                format!("{:8.1} ns", s * 1e9)
+            } else if s < 1e-3 {
+                format!("{:8.2} µs", s * 1e6)
+            } else if s < 1.0 {
+                format!("{:8.3} ms", s * 1e3)
+            } else {
+                format!("{:8.3} s ", s)
+            }
+        };
+        format!(
+            "{:<44} median {}  mean {}  ±{:<9}  min {}",
+            self.name,
+            scale(self.median()),
+            scale(self.mean()),
+            scale(self.stddev()).trim_start(),
+            scale(self.min()),
+        )
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per benchmark.
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: Duration::from_millis(100), budget: Duration::from_millis(800), samples: 10 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { warmup: Duration::from_millis(20), budget: Duration::from_millis(200), samples: 5 }
+    }
+
+    /// Run `f` repeatedly; prints and returns the measurement.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Measurement {
+        // warmup + calibration
+        let t0 = Instant::now();
+        let mut warm_iters = 0u32;
+        while t0.elapsed() < self.warmup {
+            bb(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let per_sample = self.budget.as_secs_f64() / self.samples as f64;
+        let iters = ((per_sample / per_iter).ceil() as u32).max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                bb(f());
+            }
+            samples.push(t.elapsed());
+        }
+        let m = Measurement { name: name.to_string(), samples, iters_per_sample: iters };
+        println!("{}", m.report());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench { warmup: Duration::from_millis(5), budget: Duration::from_millis(20), samples: 3 };
+        let m = b.run("noop-ish", || (0..100).sum::<u64>());
+        assert!(m.mean() > 0.0);
+        assert!(m.min() <= m.mean());
+        assert_eq!(m.samples.len(), 3);
+    }
+
+    #[test]
+    fn report_formats() {
+        let m = Measurement {
+            name: "x".into(),
+            samples: vec![Duration::from_micros(100); 4],
+            iters_per_sample: 100,
+        };
+        let r = m.report();
+        assert!(r.contains("µs") || r.contains("ns"), "{r}");
+    }
+}

@@ -1,0 +1,204 @@
+//! Dynamic batcher: packs queued generation requests into the AOT batch
+//! buckets (vLLM-style bucketed continuous batching, adapted to fixed-shape
+//! PJRT executables).
+//!
+//! Policy: a batch is released when (a) the largest bucket fills, or
+//! (b) the oldest queued request has waited `max_wait`, or (c) `flush` is
+//! forced at stream end. The released batch uses the smallest bucket that
+//! fits the ready requests; missing slots are padded with zero samples
+//! (tracked, so batch-efficiency is observable).
+//!
+//! Pure state machine — time is passed in, so tests drive it deterministically.
+
+use crate::coordinator::request::GenRequest;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// available batch buckets, ascending (from the artifact manifest)
+    pub buckets: Vec<usize>,
+    /// max time the oldest request may wait before a partial batch ships
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(mut buckets: Vec<usize>, max_wait: Duration) -> BatchPolicy {
+        assert!(!buckets.is_empty(), "need at least one batch bucket");
+        buckets.sort_unstable();
+        BatchPolicy { buckets, max_wait }
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Smallest bucket that fits n requests (n > 0), or the max bucket.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        assert!(n > 0);
+        *self.buckets.iter().find(|&&b| b >= n).unwrap_or(self.buckets.last().unwrap())
+    }
+}
+
+/// A batch ready for execution.
+#[derive(Debug)]
+pub struct ReadyBatch {
+    pub requests: Vec<GenRequest>,
+    /// bucket size the executable expects (>= requests.len())
+    pub bucket: usize,
+}
+
+impl ReadyBatch {
+    pub fn padding(&self) -> usize {
+        self.bucket - self.requests.len()
+    }
+}
+
+/// Per-(model, method) FIFO queue with deadline-based release.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    queue: VecDeque<GenRequest>,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> DynamicBatcher {
+        DynamicBatcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: GenRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Next instant at which `poll` would release a partial batch, if any.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|r| r.enqueued + self.policy.max_wait)
+    }
+
+    /// Release a batch if policy says so at time `now`.
+    pub fn poll(&mut self, now: Instant) -> Option<ReadyBatch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.policy.max_bucket();
+        let expired = now >= self.queue.front().unwrap().enqueued + self.policy.max_wait;
+        if full || expired {
+            Some(self.take_batch())
+        } else {
+            None
+        }
+    }
+
+    /// Force-release whatever is queued (stream end).
+    pub fn flush(&mut self) -> Option<ReadyBatch> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.take_batch())
+        }
+    }
+
+    fn take_batch(&mut self) -> ReadyBatch {
+        let n = self.queue.len().min(self.policy.max_bucket());
+        let bucket = self.policy.bucket_for(n);
+        let requests: Vec<GenRequest> = self.queue.drain(..n).collect();
+        ReadyBatch { requests, bucket }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: Instant) -> GenRequest {
+        GenRequest {
+            id,
+            model: "dcgan".into(),
+            method: "winograd".into(),
+            input: vec![0.0; 4],
+            enqueued: t,
+        }
+    }
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(5))
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let p = policy();
+        assert_eq!(p.bucket_for(1), 1);
+        assert_eq!(p.bucket_for(2), 4);
+        assert_eq!(p.bucket_for(4), 4);
+        assert_eq!(p.bucket_for(5), 8);
+        assert_eq!(p.bucket_for(8), 8);
+        assert_eq!(p.bucket_for(9), 8); // clamps to max
+    }
+
+    #[test]
+    fn releases_when_full() {
+        let mut b = DynamicBatcher::new(policy());
+        let t = Instant::now();
+        for i in 0..8 {
+            b.push(req(i, t));
+        }
+        let batch = b.poll(t).expect("full batch");
+        assert_eq!(batch.requests.len(), 8);
+        assert_eq!(batch.bucket, 8);
+        assert_eq!(batch.padding(), 0);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn holds_partial_until_deadline() {
+        let mut b = DynamicBatcher::new(policy());
+        let t = Instant::now();
+        b.push(req(0, t));
+        b.push(req(1, t));
+        assert!(b.poll(t).is_none(), "should wait for more work");
+        let late = t + Duration::from_millis(6);
+        let batch = b.poll(late).expect("deadline batch");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.bucket, 4);
+        assert_eq!(batch.padding(), 2);
+    }
+
+    #[test]
+    fn preserves_fifo_order_and_loses_nothing() {
+        let mut b = DynamicBatcher::new(policy());
+        let t = Instant::now();
+        for i in 0..13 {
+            b.push(req(i, t));
+        }
+        let mut ids = Vec::new();
+        while let Some(batch) = b.poll(t + Duration::from_secs(1)) {
+            ids.extend(batch.requests.iter().map(|r| r.id));
+        }
+        assert_eq!(ids, (0..13).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn flush_empties_queue() {
+        let mut b = DynamicBatcher::new(policy());
+        let t = Instant::now();
+        b.push(req(0, t));
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.bucket, 1);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = DynamicBatcher::new(policy());
+        assert!(b.next_deadline().is_none());
+        let t = Instant::now();
+        b.push(req(0, t));
+        assert_eq!(b.next_deadline(), Some(t + Duration::from_millis(5)));
+    }
+}

@@ -1,0 +1,177 @@
+//! Serving metrics: counters + latency histogram with percentile queries.
+//! No external deps; a fixed log-bucketed histogram keeps memory bounded
+//! regardless of request count, plus exact min/max/mean.
+
+use std::time::Duration;
+
+/// Log-bucketed latency histogram: buckets of 10% growth from 1 µs to ~100 s.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    bounds: Vec<f64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let mut bounds = Vec::new();
+        let mut b = 1e-6;
+        while b < 100.0 {
+            bounds.push(b);
+            b *= 1.1;
+        }
+        Histogram {
+            buckets: vec![0; bounds.len() + 1],
+            bounds,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let s = d.as_secs_f64();
+        let idx = self.bounds.partition_point(|&b| b < s);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += s;
+        self.min = self.min.min(s);
+        self.max = self.max.max(s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Percentile (0..=100) as seconds; upper bucket bound (conservative).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.count,
+            self.mean() * 1e3,
+            self.percentile(50.0) * 1e3,
+            self.percentile(95.0) * 1e3,
+            self.percentile(99.0) * 1e3,
+            if self.count > 0 { self.max * 1e3 } else { 0.0 },
+        )
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub batched_samples: u64,
+    pub padded_samples: u64,
+    pub queue_latency: Histogram,
+    pub exec_latency: Histogram,
+    pub e2e_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { queue_latency: Histogram::new(), exec_latency: Histogram::new(), e2e_latency: Histogram::new(), ..Default::default() }
+    }
+
+    /// Mean occupancy of executed batch slots (1.0 = no padding waste).
+    pub fn batch_efficiency(&self) -> f64 {
+        let total = self.batched_samples + self.padded_samples;
+        if total == 0 {
+            1.0
+        } else {
+            self.batched_samples as f64 / total as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} batch_eff={:.2}\n{}\n{}\n{}",
+            self.requests,
+            self.responses,
+            self.batches,
+            self.batch_efficiency(),
+            self.queue_latency.summary("queue"),
+            self.exec_latency.summary("exec "),
+            self.e2e_latency.summary("e2e  "),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = Histogram::new();
+        for ms in 1..=100u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99);
+        // log buckets have 10% resolution
+        assert!((p50 - 0.050).abs() / 0.050 < 0.15, "p50={p50}");
+        assert!((p95 - 0.095).abs() / 0.095 < 0.15, "p95={p95}");
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn batch_efficiency() {
+        let mut m = Metrics::new();
+        m.batched_samples = 6;
+        m.padded_samples = 2;
+        assert!((m.batch_efficiency() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_tracks_sum() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(30));
+        assert!((h.mean() - 0.020).abs() < 1e-9);
+    }
+}

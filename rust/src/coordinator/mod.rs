@@ -1,0 +1,16 @@
+//! L3 coordinator: the serving layer around the PJRT runtime — request
+//! router, dynamic batcher packing into AOT batch buckets, a single-owner
+//! engine thread, and serving metrics (vLLM-router-style architecture
+//! scaled to this system).
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use metrics::Metrics;
+pub use request::{GenRequest, GenResponse, ServeError};
+pub use router::Router;
+pub use server::{Coordinator, ServeConfig};

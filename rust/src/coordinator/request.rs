@@ -1,0 +1,57 @@
+//! Request/response types for the generation-serving coordinator.
+
+use std::time::Instant;
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// One generation request: produce an image from a latent (or input image)
+/// with a given model.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: RequestId,
+    pub model: String,
+    /// compute path ("winograd" default; "tdc" for A/B comparisons)
+    pub method: String,
+    /// flat f32 input of the model's per-sample input shape
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// The serving result for one request.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: RequestId,
+    /// flat f32 output of the model's per-sample output shape
+    pub output: Vec<f32>,
+    /// batch bucket the request was executed in
+    pub batch_size: usize,
+    /// time spent waiting in the batcher queue
+    pub queue_time: std::time::Duration,
+    /// executable run time (shared by the whole batch)
+    pub exec_time: std::time::Duration,
+}
+
+/// Failure modes a request can observe.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    UnknownModel(String),
+    BadInputLength { expected: usize, got: usize },
+    EngineShutdown,
+    Execution(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            ServeError::BadInputLength { expected, got } => {
+                write!(f, "bad input length: expected {expected}, got {got}")
+            }
+            ServeError::EngineShutdown => write!(f, "engine shut down"),
+            ServeError::Execution(e) => write!(f, "execution failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}

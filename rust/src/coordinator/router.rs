@@ -1,0 +1,140 @@
+//! Request router: validates incoming requests against the artifact
+//! manifest and resolves (model, method, batch-bucket) to a concrete
+//! compiled executable name.
+
+use crate::coordinator::request::ServeError;
+use crate::runtime::Manifest;
+use std::collections::BTreeMap;
+
+/// Routing entry for one (model, method) pair.
+#[derive(Clone, Debug)]
+pub struct Route {
+    pub model: String,
+    pub method: String,
+    pub sample_input_len: usize,
+    pub sample_output_len: usize,
+    /// bucket size -> artifact name, ascending bucket order
+    pub buckets: BTreeMap<usize, String>,
+}
+
+impl Route {
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        self.buckets.keys().copied().collect()
+    }
+
+    pub fn artifact_for_bucket(&self, bucket: usize) -> Option<&str> {
+        self.buckets.get(&bucket).map(String::as_str)
+    }
+}
+
+/// The router table, built once from the manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    routes: BTreeMap<(String, String), Route>,
+}
+
+impl Router {
+    pub fn from_manifest(m: &Manifest) -> Router {
+        let mut routes: BTreeMap<(String, String), Route> = BTreeMap::new();
+        for e in m.entries.iter().filter(|e| e.kind == "generator") {
+            let key = (e.model.clone(), e.method.clone());
+            let route = routes.entry(key).or_insert_with(|| Route {
+                model: e.model.clone(),
+                method: e.method.clone(),
+                sample_input_len: e.sample_input_len(),
+                sample_output_len: e.sample_output_len(),
+                buckets: BTreeMap::new(),
+            });
+            route.buckets.insert(e.batch, e.name.clone());
+        }
+        Router { routes }
+    }
+
+    pub fn route(&self, model: &str, method: &str) -> Result<&Route, ServeError> {
+        self.routes
+            .get(&(model.to_string(), method.to_string()))
+            .ok_or_else(|| ServeError::UnknownModel(format!("{model}/{method}")))
+    }
+
+    /// Validate a request payload; returns its route.
+    pub fn validate(
+        &self,
+        model: &str,
+        method: &str,
+        input_len: usize,
+    ) -> Result<&Route, ServeError> {
+        let r = self.route(model, method)?;
+        if input_len != r.sample_input_len {
+            return Err(ServeError::BadInputLength {
+                expected: r.sample_input_len,
+                got: input_len,
+            });
+        }
+        Ok(r)
+    }
+
+    pub fn models(&self) -> Vec<(String, String)> {
+        self.routes.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ArtifactEntry;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        let entry = |name: &str, model: &str, method: &str, batch: usize| ArtifactEntry {
+            name: name.into(),
+            kind: "generator".into(),
+            model: model.into(),
+            method: method.into(),
+            batch,
+            hlo: PathBuf::new(),
+            input_shape: vec![batch, 32],
+            output_shape: vec![batch, 3, 8, 8],
+            golden_input: PathBuf::new(),
+            golden_output: PathBuf::new(),
+        };
+        Manifest {
+            dir: PathBuf::new(),
+            scale: "small".into(),
+            entries: vec![
+                entry("dcgan_b1", "dcgan", "winograd", 1),
+                entry("dcgan_b8", "dcgan", "winograd", 8),
+                entry("dcgan_b4", "dcgan", "winograd", 4),
+                entry("dcgan_tdc_b1", "dcgan", "tdc", 1),
+            ],
+        }
+    }
+
+    #[test]
+    fn builds_routes_with_sorted_buckets() {
+        let r = Router::from_manifest(&manifest());
+        let route = r.route("dcgan", "winograd").unwrap();
+        assert_eq!(route.bucket_sizes(), vec![1, 4, 8]);
+        assert_eq!(route.artifact_for_bucket(4), Some("dcgan_b4"));
+        assert_eq!(route.sample_input_len, 32);
+        assert_eq!(route.sample_output_len, 192);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let r = Router::from_manifest(&manifest());
+        assert!(matches!(
+            r.route("nope", "winograd"),
+            Err(ServeError::UnknownModel(_))
+        ));
+    }
+
+    #[test]
+    fn validates_input_length() {
+        let r = Router::from_manifest(&manifest());
+        assert!(r.validate("dcgan", "winograd", 32).is_ok());
+        assert!(matches!(
+            r.validate("dcgan", "winograd", 31),
+            Err(ServeError::BadInputLength { expected: 32, got: 31 })
+        ));
+    }
+}

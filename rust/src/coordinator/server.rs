@@ -1,0 +1,305 @@
+//! The serving coordinator: an engine thread that owns the PJRT runtime
+//! and drains per-route dynamic batchers; callers talk to it through
+//! channels (`Coordinator::submit`). Python is never on this path.
+//!
+//! Shape:
+//!   caller -> mpsc -> engine thread [ batcher -> pack -> PJRT execute
+//!                                     -> unpack -> respond per-request ]
+//!
+//! The engine blocks on the request channel with a timeout equal to the
+//! nearest batcher deadline, so partial batches ship on time without a
+//! busy loop.
+
+use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, ReadyBatch};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{GenRequest, GenResponse, RequestId, ServeError};
+use crate::coordinator::router::Router;
+use crate::runtime::{Manifest, Runtime};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+type Reply = Sender<Result<GenResponse, ServeError>>;
+
+enum Msg {
+    Request(GenRequest, Reply),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    next_id: AtomicU64,
+    metrics: Arc<Mutex<Metrics>>,
+    router: Router,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// max time a request may wait for batch-mates
+    pub max_wait: Duration,
+    /// which artifacts to preload at startup (None = all generators)
+    pub preload_models: Option<Vec<String>>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_wait: Duration::from_millis(20), preload_models: None }
+    }
+}
+
+impl Coordinator {
+    /// Start the engine thread: compiles artifacts, then serves.
+    pub fn start(manifest: Manifest, cfg: ServeConfig) -> Result<Coordinator> {
+        let router = Router::from_manifest(&manifest);
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+
+        // The PJRT client is not Send, so the runtime lives entirely inside
+        // the engine thread; artifacts are preloaded there before the
+        // coordinator reports ready (first requests never pay compile time).
+        let engine_router = router.clone();
+        let engine_metrics = metrics.clone();
+        let engine_cfg = cfg.clone();
+        let handle = std::thread::Builder::new()
+            .name("wingan-engine".into())
+            .spawn(move || {
+                let mut runtime = match Runtime::new() {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                for e in manifest.entries.iter().filter(|e| e.kind == "generator") {
+                    if let Some(models) = &engine_cfg.preload_models {
+                        if !models.contains(&e.model) {
+                            continue;
+                        }
+                    }
+                    if let Err(e) = runtime.load(e) {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                engine_loop(runtime, engine_router, engine_metrics, engine_cfg, rx)
+            })
+            .expect("spawn engine");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))?
+            .map_err(|e| anyhow::anyhow!("engine startup failed: {e}"))?;
+
+        Ok(Coordinator {
+            tx,
+            next_id: AtomicU64::new(1),
+            metrics,
+            router,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        model: &str,
+        method: &str,
+        input: Vec<f32>,
+    ) -> Result<Receiver<Result<GenResponse, ServeError>>, ServeError> {
+        self.router.validate(model, method, input.len())?;
+        let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = GenRequest {
+            id,
+            model: model.to_string(),
+            method: method.to_string(),
+            input,
+            enqueued: Instant::now(),
+        };
+        self.metrics.lock().unwrap().requests += 1;
+        self.tx.send(Msg::Request(req, reply_tx)).map_err(|_| ServeError::EngineShutdown)?;
+        Ok(reply_rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn generate(
+        &self,
+        model: &str,
+        method: &str,
+        input: Vec<f32>,
+    ) -> Result<GenResponse, ServeError> {
+        self.submit(model, method, input)?
+            .recv()
+            .map_err(|_| ServeError::EngineShutdown)?
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Graceful shutdown: flushes pending batches first.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct RouteState {
+    batcher: DynamicBatcher,
+    replies: HashMap<RequestId, Reply>,
+}
+
+fn engine_loop(
+    runtime: Runtime,
+    router: Router,
+    metrics: Arc<Mutex<Metrics>>,
+    cfg: ServeConfig,
+    rx: Receiver<Msg>,
+) {
+    let mut states: HashMap<(String, String), RouteState> = HashMap::new();
+    loop {
+        // wait for work, but never past the nearest batch deadline
+        let deadline = states
+            .values()
+            .filter_map(|s| s.batcher.next_deadline())
+            .min();
+        let msg = match deadline {
+            Some(d) => {
+                let timeout = d.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(timeout) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => Some(Msg::Shutdown),
+                }
+            }
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => Some(Msg::Shutdown),
+            },
+        };
+
+        match msg {
+            Some(Msg::Request(req, reply)) => {
+                let key = (req.model.clone(), req.method.clone());
+                let state = states.entry(key.clone()).or_insert_with(|| {
+                    let route = router.route(&key.0, &key.1).expect("validated");
+                    RouteState {
+                        batcher: DynamicBatcher::new(BatchPolicy::new(
+                            route.bucket_sizes(),
+                            cfg.max_wait,
+                        )),
+                        replies: HashMap::new(),
+                    }
+                });
+                state.replies.insert(req.id, reply);
+                state.batcher.push(req);
+            }
+            Some(Msg::Shutdown) => {
+                // flush everything, then exit
+                for (key, state) in states.iter_mut() {
+                    while let Some(batch) = state.batcher.flush() {
+                        run_batch(&runtime, &router, &metrics, key, batch, &mut state.replies);
+                    }
+                }
+                return;
+            }
+            None => {} // deadline tick: fall through to polling
+        }
+
+        let now = Instant::now();
+        for (key, state) in states.iter_mut() {
+            while let Some(batch) = state.batcher.poll(now) {
+                run_batch(&runtime, &router, &metrics, key, batch, &mut state.replies);
+            }
+        }
+    }
+}
+
+fn run_batch(
+    runtime: &Runtime,
+    router: &Router,
+    metrics: &Arc<Mutex<Metrics>>,
+    key: &(String, String),
+    batch: ReadyBatch,
+    replies: &mut HashMap<RequestId, Reply>,
+) {
+    let route = router.route(&key.0, &key.1).expect("validated at submit");
+    let artifact = match route.artifact_for_bucket(batch.bucket) {
+        Some(a) => a,
+        None => {
+            fail_batch(&batch, replies, ServeError::UnknownModel(key.0.clone()));
+            return;
+        }
+    };
+    // pack: bucket x sample_len, zero-padded tail
+    let sample_in = route.sample_input_len;
+    let mut input = vec![0.0f32; batch.bucket * sample_in];
+    for (i, r) in batch.requests.iter().enumerate() {
+        input[i * sample_in..(i + 1) * sample_in].copy_from_slice(&r.input);
+    }
+
+    let t0 = Instant::now();
+    let out = runtime.execute(artifact, &input);
+    let exec_time = t0.elapsed();
+
+    match out {
+        Ok(out) => {
+            let sample_out = route.sample_output_len;
+            let mut m = metrics.lock().unwrap();
+            m.batches += 1;
+            m.batched_samples += batch.requests.len() as u64;
+            m.padded_samples += batch.padding() as u64;
+            m.exec_latency.record(exec_time);
+            for (i, r) in batch.requests.iter().enumerate() {
+                let queue_time = t0.duration_since(r.enqueued);
+                m.queue_latency.record(queue_time);
+                m.e2e_latency.record(r.enqueued.elapsed());
+                m.responses += 1;
+                if let Some(reply) = replies.remove(&r.id) {
+                    let _ = reply.send(Ok(GenResponse {
+                        id: r.id,
+                        output: out[i * sample_out..(i + 1) * sample_out].to_vec(),
+                        batch_size: batch.bucket,
+                        queue_time,
+                        exec_time,
+                    }));
+                }
+            }
+        }
+        Err(e) => fail_batch(&batch, replies, ServeError::Execution(e.to_string())),
+    }
+}
+
+fn fail_batch(
+    batch: &ReadyBatch,
+    replies: &mut HashMap<RequestId, Reply>,
+    err: ServeError,
+) {
+    for r in &batch.requests {
+        if let Some(reply) = replies.remove(&r.id) {
+            let _ = reply.send(Err(err.clone()));
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! GAN substrate: the Table-I model zoo and its workload characterisation.
+
+pub mod workload;
+pub mod zoo;
+
+pub use workload::Method;
+pub use zoo::{Gan, Kind, Layer, Scale};

@@ -1,0 +1,186 @@
+//! Workload characterisation: multiplication counts and data-movement
+//! volumes per layer per DeConv method (paper Fig. 4 + the inputs to the
+//! energy model of Fig. 9).
+
+use crate::gan::zoo::{Gan, Kind, Layer};
+use crate::tdc;
+use crate::winograd::sparsity::c_of_kc;
+use crate::winograd::transforms::{M as M_TILE, N as N_TILE};
+
+/// The three DeConv implementation methods the paper compares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Fig. 1b — conv over the zero-dilated, border-padded feature map.
+    ZeroPadded,
+    /// Fig. 1c — the TDC conversion of [14-16]: S^2 convs of K_C^2 taps.
+    Tdc,
+    /// The paper's contribution: TDC + F(2x2,3x3) + vector-level sparsity.
+    Winograd,
+}
+
+impl Method {
+    pub const ALL: [Method; 3] = [Method::ZeroPadded, Method::Tdc, Method::Winograd];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Method::ZeroPadded => "zero-padded",
+            Method::Tdc => "TDC",
+            Method::Winograd => "Winograd (ours)",
+        }
+    }
+}
+
+/// Multiplications for one layer under a method.
+///
+/// Conv layers (DiscoGAN's encoder) are method-independent: both baselines
+/// and ours run them as spatial convs (the paper evaluates DeConv only; we
+/// run encoder convs on the TDC conv datapath unchanged).
+pub fn layer_mults(l: &Layer, method: Method) -> u64 {
+    let (m_out, n_in) = (l.c_out as u64, l.c_in as u64);
+    let (h, w) = (l.h_in as u64, l.w_in as u64);
+    match l.kind {
+        Kind::Conv => {
+            let (ho, wo) = (l.h_out() as u64, l.w_out() as u64);
+            m_out * n_in * ho * wo * (l.k * l.k) as u64
+        }
+        Kind::Deconv => match method {
+            Method::ZeroPadded => {
+                // full conv over the up-scaled H_O x W_O map with K_D^2 taps
+                m_out * n_in * (l.s as u64 * h) * (l.s as u64 * w) * (l.k * l.k) as u64
+            }
+            Method::Tdc => {
+                let kc = tdc::kc(l.k, l.s) as u64;
+                (l.s * l.s) as u64 * m_out * n_in * h * w * kc * kc
+            }
+            Method::Winograd => {
+                let tiles = h.div_ceil(M_TILE as u64) * w.div_ceil(M_TILE as u64);
+                m_out * n_in * tiles * c_of_kc(l.k, l.s, l.p) as u64
+            }
+        },
+    }
+}
+
+/// Total DeConv multiplications for a model (paper Fig. 4 counts DeConv
+/// layers only — "most GANs consist of DeConv layers for the inference
+/// step").
+pub fn model_deconv_mults(g: &Gan, method: Method) -> u64 {
+    g.deconv_layers().map(|l| layer_mults(l, method)).sum()
+}
+
+/// Off-chip data transfer for one deconv layer, in bytes (f32 words):
+/// input map read once + output map written once + weights read once.
+/// Method-dependent weight volume: Winograd stores transformed n^2-word
+/// filters (the paper's extra BRAM cost in Table II), TDC stores K_C^2,
+/// zero-padded stores K_D^2.
+pub fn layer_offchip_bytes(l: &Layer, method: Method) -> u64 {
+    let word = 4u64;
+    let input = (l.c_in * l.h_in * l.w_in) as u64 * word;
+    let output = (l.c_out * l.h_out() * l.w_out()) as u64 * word;
+    let weights = match (l.kind, method) {
+        (Kind::Conv, _) => (l.c_in * l.c_out * l.k * l.k) as u64 * word,
+        (Kind::Deconv, Method::ZeroPadded) => (l.c_in * l.c_out * l.k * l.k) as u64 * word,
+        (Kind::Deconv, Method::Tdc) => {
+            let kc = tdc::kc(l.k, l.s);
+            (l.s * l.s * l.c_in * l.c_out * kc * kc) as u64 * word
+        }
+        (Kind::Deconv, Method::Winograd) => {
+            // live transformed weights only (zero rows are neither stored
+            // in the reordered layout nor transferred)
+            (l.c_in * l.c_out * c_of_kc(l.k, l.s, l.p)) as u64 * word
+        }
+    };
+    input + output + weights
+}
+
+/// On-chip (BRAM <-> PE) accesses for one deconv layer: every issued
+/// multiplication reads one activation operand and one weight operand;
+/// accumulators live in registers. Zero-padded reads include the inserted
+/// zeros (that is the inefficiency the paper highlights); TDC/Winograd do
+/// not.
+pub fn layer_onchip_accesses(l: &Layer, method: Method) -> u64 {
+    2 * layer_mults(l, method)
+}
+
+/// Transform-stage add operations (pre-PE B^T Z B + post-PE A^T M A) for
+/// the Winograd method; zero for the baselines. Sparse inverse transform:
+/// adds are skipped in proportion to zero positions (paper §III.A).
+pub fn layer_transform_adds(l: &Layer, method: Method) -> u64 {
+    if method != Method::Winograd || l.kind != Kind::Deconv {
+        return 0;
+    }
+    let tiles = (l.h_in as u64).div_ceil(M_TILE as u64) * (l.w_in as u64).div_ceil(M_TILE as u64);
+    // pre-PE: 2*n*(n) adds per B^T Z B per input channel per phase tile; the
+    // input transform is shared across output channels.
+    let pre_per_tile = (2 * N_TILE * N_TILE) as u64 * l.c_in as u64 * (l.s * l.s) as u64;
+    // post-PE: A^T M A costs at most 24 adds per tile; sparse skipping saves
+    // proportionally to dead positions. live/16 scaling.
+    let live: u64 = crate::winograd::sparsity::phase_cases(l.k, l.s, l.p)
+        .iter()
+        .map(|c| c.live_positions() as u64)
+        .sum();
+    let post_per_tile = 24 * l.c_out as u64 * live / 16;
+    tiles * (pre_per_tile + post_per_tile)
+}
+
+/// Fig. 4 row: total DeConv multiplications per model per method.
+pub fn fig4_row(g: &Gan) -> (u64, u64, u64) {
+    (
+        model_deconv_mults(g, Method::ZeroPadded),
+        model_deconv_mults(g, Method::Tdc),
+        model_deconv_mults(g, Method::Winograd),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gan::zoo::{self, Scale};
+
+    #[test]
+    fn dcgan_reduction_ratios_match_paper() {
+        // Paper Fig. 9 text: "the number of multiplications required was up
+        // to 8.16x greater than our design" for DCGAN; TDC/ZP = 100/36.
+        let g = zoo::dcgan(Scale::Paper);
+        let (zp, tdc_m, win) = fig4_row(&g);
+        let r_zp_win = zp as f64 / win as f64;
+        let r_zp_tdc = zp as f64 / tdc_m as f64;
+        assert!((r_zp_win - 8.16).abs() < 0.05, "ZP/Win = {r_zp_win}");
+        assert!((r_zp_tdc - 2.78).abs() < 0.05, "ZP/TDC = {r_zp_tdc}");
+    }
+
+    #[test]
+    fn k4_models_ratios() {
+        // K_D=4: ZP/Win = 64/9 ≈ 7.11, TDC/Win = 16/9 ≈ 1.78
+        let g = zoo::gpgan(Scale::Paper);
+        let (zp, tdc_m, win) = fig4_row(&g);
+        assert!(((zp as f64 / win as f64) - 64.0 / 9.0).abs() < 0.01);
+        assert!(((tdc_m as f64 / win as f64) - 16.0 / 9.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn winograd_never_more_mults() {
+        for g in zoo::all(Scale::Paper) {
+            for l in g.deconv_layers() {
+                let zp = layer_mults(l, Method::ZeroPadded);
+                let td = layer_mults(l, Method::Tdc);
+                let wi = layer_mults(l, Method::Winograd);
+                assert!(wi <= td, "{} layer {:?}", g.name, l);
+                assert!(td <= zp, "{} layer {:?}", g.name, l);
+            }
+        }
+    }
+
+    #[test]
+    fn weight_bytes_ordering() {
+        // Winograd transfers more weight data than TDC for K_C=3 (49 > 36
+        // spatial taps... actually 49 live vs S^2*K_C^2=36): Table II's
+        // extra BRAM. For K_C=2: 36 live vs 16 spatial.
+        let g = zoo::dcgan(Scale::Paper);
+        let l = g.layers[0];
+        let zp = layer_offchip_bytes(&l, Method::ZeroPadded);
+        let td = layer_offchip_bytes(&l, Method::Tdc);
+        let wi = layer_offchip_bytes(&l, Method::Winograd);
+        assert!(wi > td, "winograd stores transformed weights");
+        assert!(td > zp, "TDC stores S^2 K_C^2 >= K_D^2 taps");
+    }
+}

@@ -1,0 +1,266 @@
+//! GAN model zoo: the four generative networks of Table I with full layer
+//! geometry (channel configs follow the original papers; see DESIGN.md §5).
+//!
+//! This is the single rust-side source of truth for every analytic bench
+//! (Fig. 4 / Fig. 8 / Fig. 9 / Table II). It mirrors
+//! `python/compile/model.py::zoo` — the integration tests cross-check the
+//! two via the artifact manifest shapes.
+
+use crate::tdc;
+
+/// Layer kind: the paper evaluates DeConv; Conv layers (DiscoGAN's encoder)
+/// are modelled for completeness and run on the conv datapath.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Deconv,
+    Conv,
+}
+
+/// One generator layer's geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct Layer {
+    pub kind: Kind,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub s: usize,
+    pub p: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+}
+
+impl Layer {
+    pub fn deconv(c_in: usize, c_out: usize, k: usize, s: usize, h: usize) -> Layer {
+        Layer {
+            kind: Kind::Deconv,
+            c_in,
+            c_out,
+            k,
+            s,
+            p: tdc::default_padding(k, s),
+            h_in: h,
+            w_in: h,
+        }
+    }
+
+    pub fn conv(c_in: usize, c_out: usize, k: usize, s: usize, p: usize, h: usize) -> Layer {
+        Layer { kind: Kind::Conv, c_in, c_out, k, s, p, h_in: h, w_in: h }
+    }
+
+    pub fn h_out(&self) -> usize {
+        match self.kind {
+            Kind::Deconv => self.s * self.h_in,
+            Kind::Conv => self.h_in / self.s,
+        }
+    }
+
+    pub fn w_out(&self) -> usize {
+        match self.kind {
+            Kind::Deconv => self.s * self.w_in,
+            Kind::Conv => self.w_in / self.s,
+        }
+    }
+
+    /// Table I's K_C (TDC-converted kernel width) for deconv layers.
+    pub fn kc(&self) -> usize {
+        match self.kind {
+            Kind::Deconv => tdc::kc(self.k, self.s),
+            Kind::Conv => self.k,
+        }
+    }
+}
+
+/// A generative network.
+#[derive(Clone, Debug)]
+pub struct Gan {
+    pub name: &'static str,
+    pub year: u32,
+    pub layers: Vec<Layer>,
+}
+
+impl Gan {
+    pub fn deconv_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.kind == Kind::Deconv)
+    }
+
+    pub fn n_deconv(&self) -> usize {
+        self.deconv_layers().count()
+    }
+
+    pub fn n_conv(&self) -> usize {
+        self.layers.iter().filter(|l| l.kind == Kind::Conv).count()
+    }
+}
+
+/// Model scale: `Paper` = original channel widths (all analytic benches);
+/// `Small` = channels / 8 (matches the AOT artifacts for the CPU box).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Paper,
+    Small,
+}
+
+fn ch(c: usize, scale: Scale) -> usize {
+    match scale {
+        Scale::Paper => c,
+        Scale::Small => {
+            if c <= 3 {
+                c
+            } else {
+                (c / 8).max(4)
+            }
+        }
+    }
+}
+
+fn deconv_stack(channels: &[usize], k: usize, s: usize, h0: usize) -> Vec<Layer> {
+    let mut layers = Vec::new();
+    let mut h = h0;
+    for win in channels.windows(2) {
+        layers.push(Layer::deconv(win[0], win[1], k, s, h));
+        h *= s;
+    }
+    layers
+}
+
+/// DCGAN [4]: 4 DeConv, K_D = 5, S = 2. z -> 4x4x1024 -> ... -> 64x64x3.
+pub fn dcgan(scale: Scale) -> Gan {
+    let c = |v| ch(v, scale);
+    Gan {
+        name: "DCGAN",
+        year: 2015,
+        layers: deconv_stack(&[c(1024), c(512), c(256), c(128), 3], 5, 2, 4),
+    }
+}
+
+/// ArtGAN [5]: 4 DeConv K_D=4 S=2 plus a final DeConv K_D=3 S=1.
+pub fn artgan(scale: Scale) -> Gan {
+    let c = |v| ch(v, scale);
+    let mut layers = deconv_stack(&[c(512), c(256), c(128), c(64), c(64)], 4, 2, 4);
+    layers.push(Layer::deconv(c(64), 3, 3, 1, 64));
+    Gan { name: "ArtGAN", year: 2017, layers }
+}
+
+/// DiscoGAN [6]: 5 Conv encoder + 4 DeConv K_D=4 S=2 decoder (image-to-image).
+pub fn discogan(scale: Scale) -> Gan {
+    let c = |v| ch(v, scale);
+    let mut layers = vec![
+        Layer::conv(3, c(64), 4, 2, 1, 64),
+        Layer::conv(c(64), c(128), 4, 2, 1, 32),
+        Layer::conv(c(128), c(256), 4, 2, 1, 16),
+        Layer::conv(c(256), c(512), 4, 2, 1, 8),
+        Layer::conv(c(512), c(512), 3, 1, 1, 4),
+    ];
+    layers.extend(deconv_stack(&[c(512), c(256), c(128), c(64), 3], 4, 2, 4));
+    Gan { name: "DiscoGAN", year: 2017, layers }
+}
+
+/// GP-GAN [7]: 4 DeConv K_D=4 S=2 from a latent bottleneck.
+pub fn gpgan(scale: Scale) -> Gan {
+    let c = |v| ch(v, scale);
+    Gan {
+        name: "GP-GAN",
+        year: 2019,
+        layers: deconv_stack(&[c(512), c(256), c(128), c(64), 3], 4, 2, 4),
+    }
+}
+
+/// All four models of Table I, in paper order.
+pub fn all(scale: Scale) -> Vec<Gan> {
+    vec![dcgan(scale), artgan(scale), discogan(scale), gpgan(scale)]
+}
+
+/// Render Table I (model descriptions).
+pub fn table1() -> String {
+    let mut out = String::from(
+        "Table I — GAN model descriptions\n\
+         model     year  #conv  #deconv  K_D  S  K_C\n",
+    );
+    for g in all(Scale::Paper) {
+        // kernel classes among deconv layers
+        let mut classes: Vec<(usize, usize, usize)> = Vec::new();
+        for l in g.deconv_layers() {
+            let t = (l.k, l.s, l.kc());
+            if !classes.contains(&t) {
+                classes.push(t);
+            }
+        }
+        for (i, (k, s, kc)) in classes.iter().enumerate() {
+            if i == 0 {
+                out += &format!(
+                    "{:<9} {:<5} {:<6} {:<8} {:<4} {:<2} {:<3}\n",
+                    g.name,
+                    g.year,
+                    if g.n_conv() > 0 { g.n_conv().to_string() } else { "-".into() },
+                    g.deconv_layers().filter(|l| l.k == *k && l.s == *s).count(),
+                    k,
+                    s,
+                    kc
+                );
+            } else {
+                out += &format!(
+                    "{:<9} {:<5} {:<6} {:<8} {:<4} {:<2} {:<3}\n",
+                    "",
+                    "",
+                    "",
+                    g.deconv_layers().filter(|l| l.k == *k && l.s == *s).count(),
+                    k,
+                    s,
+                    kc
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_kernel_classes() {
+        // Table I: DCGAN K_D=5 S=2 K_C=3; ArtGAN 4/2/2 + 3/1/3; Disco & GP 4/2/2
+        let d = dcgan(Scale::Paper);
+        assert_eq!(d.n_deconv(), 4);
+        assert!(d.deconv_layers().all(|l| l.k == 5 && l.s == 2 && l.kc() == 3));
+
+        let a = artgan(Scale::Paper);
+        assert_eq!(a.n_deconv(), 5);
+        assert_eq!(a.deconv_layers().filter(|l| l.k == 4).count(), 4);
+        assert_eq!(a.deconv_layers().filter(|l| l.k == 3 && l.s == 1).count(), 1);
+
+        let di = discogan(Scale::Paper);
+        assert_eq!(di.n_conv(), 5);
+        assert_eq!(di.n_deconv(), 4);
+
+        let gp = gpgan(Scale::Paper);
+        assert_eq!(gp.n_deconv(), 4);
+        assert!(gp.deconv_layers().all(|l| l.kc() == 2));
+    }
+
+    #[test]
+    fn spatial_chain_consistency() {
+        for g in all(Scale::Paper) {
+            let mut prev: Option<(usize, usize, usize)> = None;
+            for l in &g.layers {
+                if let Some((c, h, w)) = prev {
+                    assert_eq!(c, l.c_in, "{} channel chain", g.name);
+                    assert_eq!(h, l.h_in, "{} height chain", g.name);
+                    assert_eq!(w, l.w_in, "{} width chain", g.name);
+                }
+                prev = Some((l.c_out, l.h_out(), l.w_out()));
+            }
+            // all generators end at 64x64x3
+            let (c, h, w) = prev.unwrap();
+            assert_eq!((c, h, w), (3, 64, 64), "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn small_scale_divides_channels() {
+        let d = dcgan(Scale::Small);
+        assert_eq!(d.layers[0].c_in, 128);
+        assert_eq!(d.layers[3].c_out, 3);
+    }
+}

@@ -1,0 +1,36 @@
+//! # wingan — Winograd DeConv acceleration for GANs
+//!
+//! Production-grade reproduction of *"Towards Design Methodology of
+//! Efficient Fast Algorithms for Accelerating Generative Adversarial
+//! Networks on FPGAs"* (Chang, Ahn, Kang & Kang, 2019).
+//!
+//! Three-layer architecture:
+//! * **L1/L2 (build time)** — python/compile: Pallas Winograd-DeConv kernel
+//!   + JAX generators, AOT-lowered to HLO text artifacts.
+//! * **L3 (this crate)** — loads the artifacts via PJRT ([`runtime`]),
+//!   serves generation requests ([`coordinator`]), and reproduces the
+//!   paper's entire evaluation on a cycle-level FPGA accelerator simulator
+//!   ([`accel`], [`dse`], [`resource`], [`energy`]).
+//!
+//! The algorithmic substrates ([`tdc`], [`winograd`], [`gan`]) mirror the
+//! python oracles; `rust/tests/proptests.rs` pins them to each other.
+
+
+pub mod accel;
+pub mod benchlib;
+pub mod cli;
+pub mod coordinator;
+pub mod dse;
+pub mod energy;
+pub mod gan;
+pub mod prop;
+pub mod report;
+pub mod resource;
+pub mod runtime;
+pub mod tdc;
+pub mod util;
+pub mod winograd;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

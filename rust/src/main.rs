@@ -1,0 +1,205 @@
+//! `wingan` — CLI for the Winograd-DeConv GAN acceleration system.
+//!
+//! Subcommands:
+//!   tables              reproduce the paper's tables/figures (analytic+sim)
+//!   sim                 cycle-simulate one/all GANs under all three methods
+//!   dse                 design-space exploration (eq. 5-9 roofline sweep)
+//!   verify              load every artifact, execute, check vs jax goldens
+//!   serve               run the serving coordinator on a synthetic workload
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use wingan::accel::{simulate_model, AccelConfig};
+use wingan::cli::Args;
+use wingan::coordinator::{Coordinator, ServeConfig};
+use wingan::energy::EnergyParams;
+use wingan::gan::workload::Method;
+use wingan::gan::zoo::{self, Scale};
+use wingan::report;
+use wingan::runtime::{Manifest, Runtime};
+use wingan::util::prng::Rng;
+
+const USAGE: &str = "\
+wingan — Winograd DeConv acceleration for GANs (Chang et al., 2019 reproduction)
+
+USAGE: wingan <subcommand> [flags]
+
+  tables [--table1|--fig4|--fig8|--fig9|--table2|--dse|--all]
+  sim    [--model dcgan|artgan|discogan|gpgan] [--full-model] [--zero-skip]
+  dse
+  verify [--artifacts DIR]
+  serve  [--artifacts DIR] [--model dcgan] [--method winograd]
+         [--requests 64] [--rate 200] [--max-wait-ms 20] [--seed 7]
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let rc = match args.subcommand.as_deref() {
+        Some("tables") | Some("bench-tables") => cmd_tables(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("dse") => {
+            print!("{}", report::dse_table());
+            Ok(())
+        }
+        Some("verify") => cmd_verify(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("version") => {
+            println!("wingan {}", wingan::version());
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = rc {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_tables(args: &Args) -> anyhow::Result<()> {
+    let cfg = AccelConfig::default();
+    let ep = EnergyParams::default();
+    let all = args.has("all")
+        || !["table1", "fig4", "fig8", "fig9", "table2", "dse"].iter().any(|f| args.has(f));
+    if all || args.has("table1") {
+        println!("{}", report::table1());
+    }
+    if all || args.has("fig4") {
+        println!("{}", report::fig4());
+    }
+    if all || args.has("fig8") {
+        println!("{}", report::fig8(&cfg));
+    }
+    if all || args.has("fig9") {
+        println!("{}", report::fig9(&cfg, &ep));
+    }
+    if all || args.has("table2") {
+        println!("{}", report::table2(&cfg));
+    }
+    if all || args.has("dse") {
+        println!("{}", report::dse_table());
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = AccelConfig::default();
+    if args.has("zero-skip") {
+        cfg.zp_zero_skip = true;
+    }
+    let deconv_only = !args.has("full-model");
+    let wanted = args.get_or("model", "all");
+    for g in zoo::all(Scale::Paper) {
+        if wanted != "all" && !g.name.eq_ignore_ascii_case(wanted) {
+            continue;
+        }
+        println!("== {} ({} deconv / {} conv layers) ==", g.name, g.n_deconv(), g.n_conv());
+        for m in Method::ALL {
+            let sim = simulate_model(&g, m, &cfg, deconv_only);
+            println!(
+                "  {:<16} t={:>8.3} ms   mults={:>7.2} G   DDR={:>7.1} MB   GOP/s={:>7.1}",
+                m.label(),
+                sim.t_total * 1e3,
+                sim.mults as f64 / 1e9,
+                sim.offchip_bytes as f64 / 1e6,
+                sim.effective_gops(&g, deconv_only),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = Manifest::load(Path::new(dir))?;
+    let mut rt = Runtime::new()?;
+    println!("platform: {}; {} artifacts", rt.platform(), manifest.entries.len());
+    let mut worst = 0f32;
+    for e in &manifest.entries {
+        let t0 = Instant::now();
+        rt.load(e)?;
+        let compile = t0.elapsed();
+        let t0 = Instant::now();
+        let diff = rt.verify_golden(&e.name)?;
+        worst = worst.max(diff);
+        println!(
+            "  {:<18} compile {:>7.2?}  exec {:>8.2?}  max|Δ| {:.2e}  {}",
+            e.name,
+            compile,
+            t0.elapsed(),
+            diff,
+            if diff < 2e-4 { "OK" } else { "FAIL" }
+        );
+        if diff >= 2e-4 {
+            anyhow::bail!("artifact {} exceeds tolerance: {diff:e}", e.name);
+        }
+    }
+    println!("all {} artifacts verified (worst max|Δ| = {worst:.2e})", manifest.entries.len());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let model = args.get_or("model", "dcgan").to_string();
+    let method = args.get_or("method", "winograd").to_string();
+    let n_requests = args.get_usize("requests", 64).map_err(anyhow::Error::msg)?;
+    let rate = args.get_f64("rate", 200.0).map_err(anyhow::Error::msg)?;
+    let max_wait = args.get_usize("max-wait-ms", 20).map_err(anyhow::Error::msg)?;
+    let seed = args.get_usize("seed", 7).map_err(anyhow::Error::msg)? as u64;
+
+    let manifest = Manifest::load(Path::new(dir))?;
+    println!("loading + compiling {model} artifacts...");
+    let t0 = Instant::now();
+    let coord = Coordinator::start(
+        manifest,
+        ServeConfig {
+            max_wait: Duration::from_millis(max_wait as u64),
+            preload_models: Some(vec![model.clone()]),
+        },
+    )?;
+    println!("engine ready in {:?}", t0.elapsed());
+
+    let route = coord.router().route(&model, &method).map_err(anyhow::Error::msg)?;
+    let input_len = route.sample_input_len;
+    let buckets = route.bucket_sizes();
+    println!(
+        "serving {n_requests} requests to {model}/{method} (Poisson {rate}/s, buckets {buckets:?})"
+    );
+
+    // open-loop Poisson arrivals
+    let mut rng = Rng::new(seed);
+    let mut pending = Vec::new();
+    let t_start = Instant::now();
+    for i in 0..n_requests {
+        let input = rng.normal_vec_f32(input_len);
+        pending.push(coord.submit(&model, &method, input).map_err(anyhow::Error::msg)?);
+        if i + 1 < n_requests {
+            std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+        }
+    }
+    let mut checksum = 0.0f64;
+    for rx in pending {
+        let resp = rx.recv()?.map_err(anyhow::Error::msg)?;
+        checksum += resp.output.iter().map(|v| *v as f64).sum::<f64>();
+    }
+    let wall = t_start.elapsed();
+    let m = coord.metrics();
+    println!("\n== serving report ==");
+    println!("{}", m.report());
+    println!(
+        "wall={:.3}s  throughput={:.1} img/s  output checksum={checksum:.3}",
+        wall.as_secs_f64(),
+        n_requests as f64 / wall.as_secs_f64()
+    );
+    coord.shutdown();
+    Ok(())
+}

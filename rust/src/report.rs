@@ -1,0 +1,171 @@
+//! Rendered reproductions of every table and figure in the paper's
+//! evaluation. Shared by the CLI (`wingan tables ...`), the benches, and
+//! EXPERIMENTS.md generation — one source of truth for the numbers.
+
+use crate::accel::{simulate_model, AccelConfig};
+use crate::dse;
+use crate::energy::{fig9_row, EnergyParams};
+use crate::gan::workload::{fig4_row, Method};
+use crate::gan::zoo::{self, Scale};
+use crate::resource;
+
+/// Table I: GAN model descriptions.
+pub fn table1() -> String {
+    zoo::table1()
+}
+
+/// Fig. 4: total number of (reduced) multiplications in DeConv layers.
+pub fn fig4() -> String {
+    let mut out = String::from(
+        "Fig. 4 — DeConv multiplications per model (G-ops, lower is better)\n\
+         model      zero-padded   TDC        Winograd   ZP/Win  TDC/Win\n",
+    );
+    for g in zoo::all(Scale::Paper) {
+        let (zp, td, wi) = fig4_row(&g);
+        out += &format!(
+            "{:<10} {:<13.2} {:<10.2} {:<10.2} {:<7.2} {:<7.2}\n",
+            g.name,
+            zp as f64 / 1e9,
+            td as f64 / 1e9,
+            wi as f64 / 1e9,
+            zp as f64 / wi as f64,
+            td as f64 / wi as f64
+        );
+    }
+    out += "paper: DCGAN mult ratio ZP/Win 'up to 8.16x' (sec. V.C)\n";
+    out
+}
+
+/// Fig. 8: performance comparison (speedup over baselines).
+pub fn fig8(cfg: &AccelConfig) -> String {
+    let mut out = String::from(
+        "Fig. 8 — DeConv performance (cycle simulator, 100 MHz, 4 GB/s)\n\
+         model      t_zp(ms)  t_tdc(ms)  t_win(ms)  ZP/Win  TDC/Win  GOP/s(win)\n",
+    );
+    for g in zoo::all(Scale::Paper) {
+        let zp = simulate_model(&g, Method::ZeroPadded, cfg, true);
+        let td = simulate_model(&g, Method::Tdc, cfg, true);
+        let wi = simulate_model(&g, Method::Winograd, cfg, true);
+        out += &format!(
+            "{:<10} {:<9.3} {:<10.3} {:<10.3} {:<7.2} {:<8.2} {:<9.1}\n",
+            g.name,
+            zp.t_total * 1e3,
+            td.t_total * 1e3,
+            wi.t_total * 1e3,
+            zp.t_total / wi.t_total,
+            td.t_total / wi.t_total,
+            wi.effective_gops(&g, true),
+        );
+    }
+    out += "paper: DCGAN 8.38x/2.85x, ArtGAN 7.5x/1.78x, DiscoGAN & GP-GAN 7.15x/1.85x\n";
+    out
+}
+
+/// Fig. 9: energy consumption relative to the zero-padded baseline.
+pub fn fig9(cfg: &AccelConfig, ep: &EnergyParams) -> String {
+    let mut out = String::from(
+        "Fig. 9 — DeConv energy (per-event model; savings vs baselines)\n\
+         model      E_zp(mJ)  E_tdc(mJ)  E_win(mJ)  ZP/Win  TDC/Win\n",
+    );
+    let models = zoo::all(Scale::Paper);
+    let (mut sum_zp, mut sum_td) = (0.0, 0.0);
+    for g in &models {
+        let r = fig9_row(g, cfg, ep);
+        sum_zp += r.saving_vs_zp();
+        sum_td += r.saving_vs_tdc();
+        out += &format!(
+            "{:<10} {:<9.3} {:<10.3} {:<10.3} {:<7.2} {:<7.2}\n",
+            g.name,
+            r.e_zero_padded * 1e3,
+            r.e_tdc * 1e3,
+            r.e_winograd * 1e3,
+            r.saving_vs_zp(),
+            r.saving_vs_tdc()
+        );
+    }
+    out += &format!(
+        "mean       {:<41} {:<7.2} {:<7.2}\n",
+        "",
+        sum_zp / models.len() as f64,
+        sum_td / models.len() as f64
+    );
+    out += "paper: mean 3.65x vs zero-padded, 1.74x vs TDC\n";
+    out
+}
+
+/// Table II: resource utilisation for DCGAN.
+pub fn table2(cfg: &AccelConfig) -> String {
+    let g = zoo::dcgan(Scale::Paper);
+    let ours = resource::report(&g, cfg, Method::Winograd);
+    let tdc = resource::report(&g, cfg, Method::Tdc);
+    let p14 = resource::PAPER_TABLE2_TDC;
+    let pours = resource::PAPER_TABLE2_OURS;
+    let mut out = String::from(
+        "Table II — resource utilisation for DCGAN (model vs paper)\n\
+         design              BRAM18K  DSP48E  LUT      FFs\n",
+    );
+    out += &format!(
+        "[14] (model)        {:<8} {:<7} {:<8} {:<8}\n",
+        tdc.bram18k, tdc.dsp48e, tdc.lut, tdc.ff
+    );
+    out += &format!(
+        "[14] (paper)        {:<8} {:<7} {:<8} {:<8}\n",
+        p14.bram18k, p14.dsp48e, p14.lut, p14.ff
+    );
+    out += &format!(
+        "ours (model)        {:<8} {:<7} {:<8} {:<8}\n",
+        ours.bram18k, ours.dsp48e, ours.lut, ours.ff
+    );
+    out += &format!(
+        "ours (paper)        {:<8} {:<7} {:<8} {:<8}\n",
+        pours.bram18k, pours.dsp48e, pours.lut, pours.ff
+    );
+    out
+}
+
+/// DSE table (§IV.C roof/bandwidth pairs).
+pub fn dse_table() -> String {
+    let models = zoo::all(Scale::Paper);
+    let pts = dse::sweep(&models, &dse::VIRTEX7_485T);
+    let mut out = String::from("DSE — roof/bandwidth pairs (paper sec. IV.C)\n");
+    out += &dse::render_table(&pts, 12);
+    let best = dse::optimal(&models, &dse::VIRTEX7_485T);
+    out += &format!(
+        "selected: (T_m, T_n) = ({}, {})   [paper: (4, 128)]\n",
+        best.t_m, best.t_n
+    );
+    out
+}
+
+/// Everything, for `wingan tables --all` / EXPERIMENTS.md.
+pub fn all_tables() -> String {
+    let cfg = AccelConfig::default();
+    let ep = EnergyParams::default();
+    format!(
+        "{}\n{}\n{}\n{}\n{}",
+        table1(),
+        fig4(),
+        fig8(&cfg),
+        fig9(&cfg, &ep),
+        table2(&cfg)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_render() {
+        let s = all_tables();
+        assert!(s.contains("DCGAN"));
+        assert!(s.contains("Fig. 8"));
+        assert!(s.contains("Table II"));
+    }
+
+    #[test]
+    fn dse_table_selects_paper_point() {
+        let s = dse_table();
+        assert!(s.contains("(4, 128)"), "{s}");
+    }
+}

@@ -1,0 +1,247 @@
+//! FPGA resource model (paper Table II): DSP48E, BRAM18K, LUT, FF estimates
+//! for the Winograd accelerator and the TDC baseline [14] on a Virtex7-485T.
+//!
+//! Structure-derived where the architecture dictates it, calibrated once
+//! against Table II's [14] row where only HLS implementation constants can
+//! decide (per-MAC LUT/FF control cost). Calibration constants are
+//! documented inline; the Table II bench prints model vs paper side by side.
+//!
+//! Derivations (see DESIGN.md §1):
+//! * one f32 MAC = 3 DSP (multiplier) + 2 DSP (adder) = **5 DSP48E**, so
+//!   the T_m x T_n array costs 5·T_m·T_n = 2560 — Table II's DSP row for
+//!   both designs.
+//! * BRAM: input line buffer (n+m lines, T_n banks), output line buffer
+//!   (2mS lines, T_m banks), double-buffered weight banks (2·T_n), and —
+//!   only for the Winograd design — the n²xN rearrangement buffer the
+//!   paper's §III.B/§V.C discusses. These land on 388 vs Table II's 384
+//!   for [14] and 516 vs 520 for ours, within ~1% each.
+
+use crate::accel::config::AccelConfig;
+use crate::accel::linebuf::bram18k_for;
+use crate::gan::workload::Method;
+use crate::gan::zoo::{Gan, Kind};
+use crate::tdc;
+use crate::winograd::sparsity::c_of_kc;
+use crate::winograd::transforms::{M as M_TILE, N as N_TILE};
+
+/// Resource report for one design.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Resources {
+    pub bram18k: usize,
+    pub dsp48e: usize,
+    pub lut: usize,
+    pub ff: usize,
+}
+
+/// DSP usage: 5 DSP48E per f32 MAC lane (3 fmul + 2 fadd), same for every
+/// method — the paper keeps tiling (and hence DSP count) identical to [14].
+pub fn dsp48e(cfg: &AccelConfig) -> usize {
+    5 * cfg.t_m * cfg.t_n
+}
+
+/// BRAM18K for running `g` with `method` at `cfg` tiling.
+pub fn bram18k(g: &Gan, cfg: &AccelConfig, method: Method) -> usize {
+    // widest input/output feature maps across deconv layers
+    let w_in_max = g
+        .layers
+        .iter()
+        .filter(|l| l.kind == Kind::Deconv)
+        .map(|l| l.w_in)
+        .max()
+        .unwrap_or(0);
+    let w_out_max = g
+        .layers
+        .iter()
+        .filter(|l| l.kind == Kind::Deconv)
+        .map(|l| l.w_out())
+        .max()
+        .unwrap_or(0);
+    let max_kc = g
+        .layers
+        .iter()
+        .filter(|l| l.kind == Kind::Deconv)
+        .map(|l| l.kc())
+        .max()
+        .unwrap_or(3);
+    let max_s = g
+        .layers
+        .iter()
+        .filter(|l| l.kind == Kind::Deconv)
+        .map(|l| l.s)
+        .max()
+        .unwrap_or(2);
+
+    match method {
+        Method::Winograd => {
+            // input: n+m lines of T_n maps, one bank per lane
+            let input = bram18k_for((N_TILE + M_TILE) * w_in_max * cfg.t_n, cfg.t_n);
+            // output: 2mS lines of T_m maps
+            let output =
+                bram18k_for(2 * M_TILE * max_s * w_out_max * cfg.t_m, cfg.t_m);
+            // weights: double-buffered transformed filters, 2*T_n banks,
+            // depth = T_m * C(K_C) live words per group
+            let c = c_of_kc(
+                max_kc * max_s.min(2), // K_D back-of-envelope: K_C*S covers 4/5
+                max_s,
+                tdc::default_padding(max_kc * max_s.min(2), max_s),
+            );
+            let weights = bram18k_for(2 * c * cfg.t_m * cfg.t_n, 2 * cfg.t_n);
+            // the n^2 x N rearrangement buffer (transformed input tiles),
+            // ping-pong, one tile-row stripe deep
+            let tiles_w = w_in_max.div_ceil(M_TILE);
+            let rearrange = bram18k_for(
+                N_TILE * N_TILE * cfg.t_n * 2 * tiles_w,
+                cfg.t_n,
+            );
+            input + output + weights + rearrange
+        }
+        Method::Tdc => {
+            let input = bram18k_for((max_kc + 1) * w_in_max * cfg.t_n, cfg.t_n);
+            let output = bram18k_for(2 * max_s * w_out_max * cfg.t_m, cfg.t_m);
+            let weights = bram18k_for(
+                2 * max_s * max_s * max_kc * max_kc * cfg.t_m * cfg.t_n,
+                2 * cfg.t_n,
+            );
+            input + output + weights
+        }
+        Method::ZeroPadded => {
+            let k = max_kc * max_s; // approx K_D
+            let input = bram18k_for((k + 1) * w_out_max * cfg.t_n, cfg.t_n);
+            let output = bram18k_for(2 * w_out_max * cfg.t_m, cfg.t_m);
+            let weights = bram18k_for(2 * k * k * cfg.t_m * cfg.t_n, 2 * cfg.t_n);
+            input + output + weights
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LUT/FF model. Calibrated constants:
+//  * per-MAC control/datapath glue: 160 LUT, 196 FF  (calibrated so the
+//    [14] row reproduces Table II exactly: 512*160 + 12344 = 94264 LUT,
+//    512*196 + 7274 = 107626 FF)
+//  * base (AXI/DDR controller, FSMs): 12344 LUT, 7274 FF
+//  * one f32 adder implemented in fabric: ~214 LUT / 227 FF (Xilinx
+//    Floating-Point Operator v7.1 tables, no-DSP configuration)
+// ---------------------------------------------------------------------------
+
+const LUT_PER_MAC: usize = 160;
+const FF_PER_MAC: usize = 196;
+const LUT_BASE: usize = 12_344;
+const FF_BASE: usize = 7_274;
+const LUT_PER_FADD: usize = 214;
+const FF_PER_FADD: usize = 227;
+
+/// Fabric adders dedicated to the pre-PE input transform per T_n lane
+/// (B^T Z B = 32 adds per tile, time-multiplexed onto 1 adder/lane across
+/// the 16+ cycles a tile spends in the engine).
+const PRE_PE_ADDERS_PER_LANE: usize = 1;
+/// Post-PE sparse inverse transform adders per T_m lane (A^T M A <= 24
+/// adds per tile over 4 output pixels).
+const POST_PE_ADDERS_PER_LANE: usize = 6;
+/// Gather/reorder muxing per T_n lane (the "additional logic elements ...
+/// to determine the inputs according to the values of the output indexes").
+const LUT_GATHER_PER_LANE: usize = 124;
+const FF_GATHER_PER_LANE: usize = 72;
+
+/// LUT/FF for the TDC baseline [14].
+pub fn lut_ff_tdc(cfg: &AccelConfig) -> (usize, usize) {
+    (
+        LUT_BASE + LUT_PER_MAC * cfg.t_m * cfg.t_n,
+        FF_BASE + FF_PER_MAC * cfg.t_m * cfg.t_n,
+    )
+}
+
+/// LUT/FF for the Winograd design: [14] plus pre-PE, post-PE and gather
+/// logic (the paper: "we implemented those PEs using LUTs and FFs").
+pub fn lut_ff_winograd(cfg: &AccelConfig) -> (usize, usize) {
+    let (base_lut, base_ff) = lut_ff_tdc(cfg);
+    let pre = PRE_PE_ADDERS_PER_LANE * cfg.t_n;
+    let post = POST_PE_ADDERS_PER_LANE * cfg.t_m;
+    let lut = base_lut + (pre + post) * LUT_PER_FADD + LUT_GATHER_PER_LANE * cfg.t_n;
+    let ff = base_ff + (pre + post) * FF_PER_FADD + FF_GATHER_PER_LANE * cfg.t_n;
+    (lut, ff)
+}
+
+/// Full Table II style report for one design/method on a model.
+pub fn report(g: &Gan, cfg: &AccelConfig, method: Method) -> Resources {
+    let (lut, ff) = match method {
+        Method::Winograd => lut_ff_winograd(cfg),
+        _ => lut_ff_tdc(cfg),
+    };
+    Resources { bram18k: bram18k(g, cfg, method), dsp48e: dsp48e(cfg), lut, ff }
+}
+
+/// Paper Table II reference values (DCGAN on Virtex7-485T).
+pub const PAPER_TABLE2_TDC: Resources =
+    Resources { bram18k: 384, dsp48e: 2560, lut: 94_264, ff: 107_626 };
+pub const PAPER_TABLE2_OURS: Resources =
+    Resources { bram18k: 520, dsp48e: 2560, lut: 142_711, ff: 151_395 };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gan::zoo::{self, Scale};
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::default()
+    }
+
+    #[test]
+    fn dsp_matches_table2_exactly() {
+        assert_eq!(dsp48e(&cfg()), 2560);
+    }
+
+    #[test]
+    fn tdc_lut_ff_match_table2_exactly() {
+        let (lut, ff) = lut_ff_tdc(&cfg());
+        assert_eq!(lut, PAPER_TABLE2_TDC.lut);
+        assert_eq!(ff, PAPER_TABLE2_TDC.ff);
+    }
+
+    #[test]
+    fn winograd_bram_within_5pct_of_table2() {
+        let g = zoo::dcgan(Scale::Paper);
+        let b = bram18k(&g, &cfg(), Method::Winograd) as f64;
+        let rel = (b - 520.0).abs() / 520.0;
+        assert!(rel < 0.05, "model {b} vs paper 520");
+    }
+
+    #[test]
+    fn tdc_bram_within_5pct_of_table2() {
+        let g = zoo::dcgan(Scale::Paper);
+        let b = bram18k(&g, &cfg(), Method::Tdc) as f64;
+        let rel = (b - 384.0).abs() / 384.0;
+        assert!(rel < 0.05, "model {b} vs paper 384");
+    }
+
+    #[test]
+    fn winograd_lut_ff_within_10pct_of_table2() {
+        let (lut, ff) = lut_ff_winograd(&cfg());
+        let rl = (lut as f64 - 142_711.0).abs() / 142_711.0;
+        let rf = (ff as f64 - 151_395.0).abs() / 151_395.0;
+        assert!(rl < 0.10, "LUT model {lut} vs paper 142711");
+        assert!(rf < 0.10, "FF model {ff} vs paper 151395");
+    }
+
+    #[test]
+    fn winograd_uses_more_bram_and_lut_than_tdc() {
+        // the structural claim of Table II
+        let g = zoo::dcgan(Scale::Paper);
+        let ours = report(&g, &cfg(), Method::Winograd);
+        let base = report(&g, &cfg(), Method::Tdc);
+        assert!(ours.bram18k > base.bram18k);
+        assert!(ours.lut > base.lut);
+        assert!(ours.ff > base.ff);
+        assert_eq!(ours.dsp48e, base.dsp48e);
+    }
+
+    #[test]
+    fn fits_485t_envelope() {
+        let g = zoo::dcgan(Scale::Paper);
+        let ours = report(&g, &cfg(), Method::Winograd);
+        assert!(ours.dsp48e <= crate::dse::VIRTEX7_485T.dsp48e);
+        assert!(ours.bram18k <= crate::dse::VIRTEX7_485T.bram18k);
+        assert!(ours.lut <= crate::dse::VIRTEX7_485T.lut);
+        assert!(ours.ff <= crate::dse::VIRTEX7_485T.ff);
+    }
+}

@@ -1,0 +1,222 @@
+//! Artifact manifest: the index `python/compile/aot.py` writes next to the
+//! HLO text files. The manifest is the only contract between the python
+//! build path and the rust serving path.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// "generator" (full model) or "layer" (single deconv op)
+    pub kind: String,
+    pub model: String,
+    /// compute path baked into the HLO: "winograd" | "tdc" | "zero_pad"
+    pub method: String,
+    pub batch: usize,
+    pub hlo: PathBuf,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub golden_input: PathBuf,
+    pub golden_output: PathBuf,
+}
+
+impl ArtifactEntry {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// Per-sample input length (shape without the leading batch dim).
+    pub fn sample_input_len(&self) -> usize {
+        if self.kind == "generator" {
+            self.input_shape[1..].iter().product()
+        } else {
+            self.input_len()
+        }
+    }
+
+    pub fn sample_output_len(&self) -> usize {
+        if self.kind == "generator" {
+            self.output_shape[1..].iter().product()
+        } else {
+            self.output_len()
+        }
+    }
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub scale: String,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn field<'a>(obj: &'a Json, key: &str, ctx: &str) -> Result<&'a Json> {
+    obj.get(key).ok_or_else(|| anyhow!("manifest entry {ctx}: missing field '{key}'"))
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let version = doc.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let scale =
+            doc.get("scale").and_then(Json::as_str).unwrap_or("unknown").to_string();
+        let mut entries = Vec::new();
+        for (i, e) in doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing 'artifacts' array"))?
+            .iter()
+            .enumerate()
+        {
+            let ctx = format!("#{i}");
+            let name = field(e, "name", &ctx)?
+                .as_str()
+                .ok_or_else(|| anyhow!("entry {ctx}: name not a string"))?
+                .to_string();
+            let get_str = |k: &str| -> Result<String> {
+                Ok(field(e, k, &name)?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("entry {name}: {k} not a string"))?
+                    .to_string())
+            };
+            let get_shape = |k: &str| -> Result<Vec<usize>> {
+                field(e, k, &name)?
+                    .as_usize_vec()
+                    .ok_or_else(|| anyhow!("entry {name}: {k} not an int array"))
+            };
+            entries.push(ArtifactEntry {
+                kind: get_str("kind")?,
+                model: get_str("model")?,
+                method: get_str("method")?,
+                batch: field(e, "batch", &name)?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("entry {name}: batch not an int"))?,
+                hlo: dir.join(get_str("hlo")?),
+                input_shape: get_shape("input_shape")?,
+                output_shape: get_shape("output_shape")?,
+                golden_input: dir.join(get_str("golden_input")?),
+                golden_output: dir.join(get_str("golden_output")?),
+                name,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), scale, entries })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Generator artifacts for one model+method, sorted by batch size —
+    /// these are the batch buckets the dynamic batcher packs into.
+    pub fn buckets(&self, model: &str, method: &str) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == "generator" && e.model == model && e.method == method)
+            .collect();
+        v.sort_by_key(|e| e.batch);
+        v
+    }
+
+    /// Distinct generator model names.
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == "generator")
+            .map(|e| e.model.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("wingan_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "scale": "small", "artifacts": [
+                {"name": "m_b1", "kind": "generator", "model": "m",
+                 "method": "winograd", "batch": 1, "hlo": "m_b1.hlo.txt",
+                 "input_shape": [1, 32], "output_shape": [1, 3, 4, 4],
+                 "golden_input": "golden/m.in.bin",
+                 "golden_output": "golden/m.out.bin"}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("m_b1").unwrap();
+        assert_eq!(e.batch, 1);
+        assert_eq!(e.sample_input_len(), 32);
+        assert_eq!(e.sample_output_len(), 48);
+        assert_eq!(m.models(), vec!["m".to_string()]);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join("wingan_manifest_test2");
+        write_manifest(&dir, r#"{"version": 9, "artifacts": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_field_is_reported_with_entry_name() {
+        let dir = std::env::temp_dir().join("wingan_manifest_test3");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "artifacts": [{"name": "x", "kind": "generator"}]}"#,
+        );
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains('x'), "{err}");
+    }
+
+    #[test]
+    fn buckets_sorted_by_batch() {
+        let dir = std::env::temp_dir().join("wingan_manifest_test4");
+        let entry = |name: &str, batch: usize| {
+            format!(
+                r#"{{"name": "{name}", "kind": "generator", "model": "m",
+                 "method": "winograd", "batch": {batch}, "hlo": "x",
+                 "input_shape": [{batch}, 2], "output_shape": [{batch}, 2],
+                 "golden_input": "g", "golden_output": "g"}}"#
+            )
+        };
+        write_manifest(
+            &dir,
+            &format!(
+                r#"{{"version": 1, "artifacts": [{}, {}, {}]}}"#,
+                entry("m_b8", 8),
+                entry("m_b1", 1),
+                entry("m_b4", 4)
+            ),
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let b: Vec<usize> = m.buckets("m", "winograd").iter().map(|e| e.batch).collect();
+        assert_eq!(b, vec![1, 4, 8]);
+    }
+}

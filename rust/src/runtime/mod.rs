@@ -1,0 +1,9 @@
+//! Runtime: PJRT execution of the AOT artifacts (HLO text -> compile ->
+//! execute). See `manifest` for the python/rust contract and `client` for
+//! the execution engine.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use manifest::{ArtifactEntry, Manifest};

@@ -1,0 +1,340 @@
+//! TDC substrate: DeConv-to-Conv conversion (paper refs [14-16], Fig. 1c/2b)
+//! plus the reference DeConv implementations all other layers are validated
+//! against.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly (same conventions, same
+//! phase/offset derivation); the python tests pin the JAX kernels to the
+//! numpy oracle, and the rust property tests pin this module to itself
+//! (TDC == standard) and the functional accelerator simulator to this module.
+//!
+//! Conventions: input `[C_in, H, W]`, deconv filters `[C_in, C_out, K, K]`
+//! (conv-transpose layout), output `[C_out, S*H, S*W]` with
+//!
+//! ```text
+//! y[co, oy, ox] = sum x[ci, iy, ix] * w[ci, co, ky, kx]
+//!                 where S*iy = oy + P - ky, S*ix = ox + P - kx.
+//! ```
+
+use crate::util::tensor::{Filter4, Tensor3};
+
+/// K_C = ceil(K_D / S): the TDC-converted Conv kernel width (Table I).
+pub fn kc(k: usize, s: usize) -> usize {
+    k.div_ceil(s)
+}
+
+/// The paper's layer paddings: P=2 for (K=5,S=2); P=1 for (K=4,S=2), (K=3,S=1).
+pub fn default_padding(k: usize, s: usize) -> usize {
+    (k - s + 1) / 2
+}
+
+/// 1D sub-filter plan for one output phase: which taps of the *flipped*
+/// kernel it uses and its input offset `d0`:
+///
+/// `y[S*i + phase] = sum_u g[u] * x[i + u + d0]`, `g[u] = w_flipped[taps[u]]`
+/// (taps\[u\] == None for implicit zero-pad taps).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseTaps {
+    pub taps: Vec<Option<usize>>,
+    pub d0: isize,
+}
+
+impl PhaseTaps {
+    /// Number of real (non-padded) taps; this is the structural support
+    /// that determines the Winograd sparsity case.
+    pub fn real_taps(&self) -> usize {
+        self.taps.iter().filter(|t| t.is_some()).count()
+    }
+}
+
+/// Derive the 1D tap plan for `phase` of a (K, S, P) deconv.
+///
+/// Panics if the decomposition would need an offset outside
+/// `[-(K_C-1), 0]` — i.e. the padding is too small for a uniform-K_C
+/// conversion (never the case for the paper's configs).
+pub fn phase_taps_1d(k: usize, s: usize, p: usize, phase: usize) -> PhaseTaps {
+    assert!(phase < s);
+    assert!(p <= k - 1, "padding must satisfy P <= K-1");
+    let pad = k - 1 - p;
+    let t0 = (pad as isize - phase as isize).rem_euclid(s as isize) as usize;
+    let kc_ = kc(k, s);
+    let n_real = if t0 >= k { 0 } else { (k - t0).div_ceil(s) };
+    assert!(n_real <= kc_);
+    let num = phase as isize + t0 as isize - pad as isize;
+    assert_eq!(num.rem_euclid(s as isize), 0);
+    let d0 = num / s as isize;
+    assert!(
+        -(kc_ as isize - 1) <= d0 && d0 <= 0,
+        "TDC offset {d0} out of range for K={k} S={s} P={p}"
+    );
+    let taps = (0..kc_)
+        .map(|u| if u < n_real { Some(s * u + t0) } else { None })
+        .collect();
+    PhaseTaps { taps, d0 }
+}
+
+/// One phase of the 2D decomposition: a K_C x K_C correlation filter bank
+/// plus its (d0y, d0x) input offset and structural support (r_y, r_x).
+#[derive(Clone, Debug)]
+pub struct PhaseFilter {
+    pub g: Filter4,
+    pub d0y: isize,
+    pub d0x: isize,
+    /// real taps per dim — drives the Winograd sparsity case (Fig. 3/6)
+    pub ry: usize,
+    pub rx: usize,
+}
+
+/// Full TDC decomposition: S^2 phase filters, row-major over (p_y, p_x).
+pub fn decompose(w: &Filter4, s: usize, p: usize) -> Vec<PhaseFilter> {
+    assert_eq!(w.kh, w.kw, "square kernels only");
+    let k = w.kh;
+    let kc_ = kc(k, s);
+    let mut phases = Vec::with_capacity(s * s);
+    for py in 0..s {
+        let ty = phase_taps_1d(k, s, p, py);
+        for px in 0..s {
+            let tx = phase_taps_1d(k, s, p, px);
+            let mut g = Filter4::zeros(w.c_in, w.c_out, kc_, kc_);
+            for (uy, t_y) in ty.taps.iter().enumerate() {
+                let Some(t_y) = t_y else { continue };
+                for (ux, t_x) in tx.taps.iter().enumerate() {
+                    let Some(t_x) = t_x else { continue };
+                    // flipped kernel: wf[t] = w[K-1-t]
+                    let ky = k - 1 - t_y;
+                    let kx = k - 1 - t_x;
+                    for ci in 0..w.c_in {
+                        for co in 0..w.c_out {
+                            *g.at_mut(ci, co, uy, ux) = w.at(ci, co, ky, kx);
+                        }
+                    }
+                }
+            }
+            phases.push(PhaseFilter {
+                g,
+                d0y: ty.d0,
+                d0x: tx.d0,
+                ry: ty.real_taps(),
+                rx: tx.real_taps(),
+            });
+        }
+    }
+    phases
+}
+
+/// Standard DeConv by direct scatter-add (paper Fig. 2a). Reference for
+/// everything else.
+pub fn deconv_naive(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
+    assert_eq!(x.c, w.c_in);
+    let k = w.kh;
+    let (ho, wo) = (s * x.h, s * x.w);
+    let mut y = Tensor3::zeros(w.c_out, ho, wo);
+    for ci in 0..x.c {
+        for iy in 0..x.h {
+            for ix in 0..x.w {
+                let v = x.at(ci, iy, ix);
+                if v == 0.0 {
+                    // still correct to skip: multiply-by-zero adds nothing
+                }
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let oy = (s * iy + ky) as isize - p as isize;
+                        let ox = (s * ix + kx) as isize - p as isize;
+                        if oy >= 0 && (oy as usize) < ho && ox >= 0 && (ox as usize) < wo {
+                            for co in 0..w.c_out {
+                                *y.at_mut(co, oy as usize, ox as usize) +=
+                                    v * w.at(ci, co, ky, kx);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Multi-channel valid correlation: `x[C_in,H,W] * g[C_in,C_out,K,K]`.
+pub fn correlate_valid(x: &Tensor3, g: &Filter4) -> Tensor3 {
+    assert_eq!(x.c, g.c_in);
+    let (ho, wo) = (x.h + 1 - g.kh, x.w + 1 - g.kw);
+    let mut y = Tensor3::zeros(g.c_out, ho, wo);
+    for co in 0..g.c_out {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = 0.0;
+                for ci in 0..x.c {
+                    for ky in 0..g.kh {
+                        for kx in 0..g.kw {
+                            acc += x.at(ci, oy + ky, ox + kx) * g.at(ci, co, ky, kx);
+                        }
+                    }
+                }
+                *y.at_mut(co, oy, ox) = acc;
+            }
+        }
+    }
+    y
+}
+
+/// Pad `x` so a valid K_C-tap correlation for phase offset (d0y, d0x)
+/// produces exactly H x W outputs.
+pub fn phase_pad(x: &Tensor3, d0y: isize, d0x: isize, kc_: usize) -> Tensor3 {
+    let ly = (-d0y) as usize;
+    let lx = (-d0x) as usize;
+    let ry = (kc_ as isize - 1 + d0y) as usize;
+    let rx = (kc_ as isize - 1 + d0x) as usize;
+    x.pad(ly, ry, lx, rx)
+}
+
+/// DeConv via the TDC method: S^2 valid correlations, phase-interleaved.
+/// Identical function to [`deconv_naive`] (the Fig. 2 equivalence).
+pub fn tdc_deconv(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
+    let k = w.kh;
+    let kc_ = kc(k, s);
+    let phases = decompose(w, s, p);
+    let mut y = Tensor3::zeros(w.c_out, s * x.h, s * x.w);
+    for (idx, ph) in phases.iter().enumerate() {
+        let (py, px) = (idx / s, idx % s);
+        let xp = phase_pad(x, ph.d0y, ph.d0x, kc_);
+        let yp = correlate_valid(&xp, &ph.g);
+        debug_assert_eq!((yp.h, yp.w), (x.h, x.w));
+        for co in 0..w.c_out {
+            for iy in 0..x.h {
+                for ix in 0..x.w {
+                    *y.at_mut(co, s * iy + py, s * ix + px) = yp.at(co, iy, ix);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Zero-padded DeConv baseline (Fig. 1b): dilate input, border-pad, conv
+/// with the flipped filter. Same function; the baseline accelerator models
+/// this computation including the wasted zero multiplications.
+pub fn zero_padded_deconv(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
+    let k = w.kh;
+    assert!(p <= k - 1);
+    let pad = k - 1 - p; // left/top border
+    let rpad = s + p - 1; // right/bottom border (covers the output_padding region)
+    // dilated + padded input: size = S*(H-1)+1 + pad + rpad = S*H + K - 1,
+    // so the valid correlation below yields exactly S*H outputs.
+    let hd = s * (x.h - 1) + 1 + pad + rpad;
+    let wd = s * (x.w - 1) + 1 + pad + rpad;
+    let mut xd = Tensor3::zeros(x.c, hd, wd);
+    for c in 0..x.c {
+        for iy in 0..x.h {
+            for ix in 0..x.w {
+                *xd.at_mut(c, pad + s * iy, pad + s * ix) = x.at(c, iy, ix);
+            }
+        }
+    }
+    // flipped filter as a correlation bank
+    let mut g = Filter4::zeros(w.c_in, w.c_out, k, k);
+    for ci in 0..w.c_in {
+        for co in 0..w.c_out {
+            for ky in 0..k {
+                for kx in 0..k {
+                    *g.at_mut(ci, co, ky, kx) = w.at(ci, co, k - 1 - ky, k - 1 - kx);
+                }
+            }
+        }
+    }
+    let y = correlate_valid(&xd, &g);
+    debug_assert_eq!((y.h, y.w), (s * x.h, s * x.w));
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, c: usize, h: usize, w: usize) -> Tensor3 {
+        Tensor3::from_vec(c, h, w, rng.normal_vec(c * h * w))
+    }
+
+    fn rand_filter(rng: &mut Rng, ci: usize, co: usize, k: usize) -> Filter4 {
+        Filter4::from_vec(ci, co, k, k, rng.normal_vec(ci * co * k * k))
+    }
+
+    #[test]
+    fn kc_matches_table1() {
+        assert_eq!(kc(5, 2), 3);
+        assert_eq!(kc(4, 2), 2);
+        assert_eq!(kc(3, 1), 3);
+    }
+
+    #[test]
+    fn default_paddings() {
+        assert_eq!(default_padding(5, 2), 2);
+        assert_eq!(default_padding(4, 2), 1);
+        assert_eq!(default_padding(3, 1), 1);
+    }
+
+    #[test]
+    fn phase_taps_k5s2() {
+        // K=5, S=2, P=2: phase 0 -> 3 real taps, phase 1 -> 2 real taps.
+        let t0 = phase_taps_1d(5, 2, 2, 0);
+        let t1 = phase_taps_1d(5, 2, 2, 1);
+        assert_eq!(t0.real_taps(), 3);
+        assert_eq!(t1.real_taps(), 2);
+        assert_eq!(t0.d0, -1);
+        assert_eq!(t1.d0, 0);
+    }
+
+    #[test]
+    fn phase_taps_k4s2_all_two_tap() {
+        for phase in 0..2 {
+            let t = phase_taps_1d(4, 2, 1, phase);
+            assert_eq!(t.real_taps(), 2, "phase {phase}");
+        }
+    }
+
+    #[test]
+    fn tdc_equals_naive_all_paper_configs() {
+        let mut rng = Rng::new(100);
+        for &(k, s) in &[(5, 2), (4, 2), (3, 1)] {
+            let p = default_padding(k, s);
+            let x = rand_tensor(&mut rng, 3, 5, 7);
+            let w = rand_filter(&mut rng, 3, 2, k);
+            let y0 = deconv_naive(&x, &w, s, p);
+            let y1 = tdc_deconv(&x, &w, s, p);
+            assert!(y0.max_abs_diff(&y1) < 1e-12, "K={k} S={s}");
+        }
+    }
+
+    #[test]
+    fn zero_padded_equals_naive() {
+        let mut rng = Rng::new(101);
+        for &(k, s) in &[(5, 2), (4, 2), (3, 1)] {
+            let p = default_padding(k, s);
+            let x = rand_tensor(&mut rng, 2, 4, 6);
+            let w = rand_filter(&mut rng, 2, 3, k);
+            let y0 = deconv_naive(&x, &w, s, p);
+            let y1 = zero_padded_deconv(&x, &w, s, p);
+            assert!(y0.max_abs_diff(&y1) < 1e-12, "K={k} S={s}");
+        }
+    }
+
+    #[test]
+    fn stride3_also_works() {
+        // beyond the paper's configs: K=6, S=3, P=2 satisfies the offset bound
+        let mut rng = Rng::new(102);
+        let (k, s, p) = (6, 3, 2);
+        let x = rand_tensor(&mut rng, 2, 4, 4);
+        let w = rand_filter(&mut rng, 2, 2, k);
+        let y0 = deconv_naive(&x, &w, s, p);
+        let y1 = tdc_deconv(&x, &w, s, p);
+        assert!(y0.max_abs_diff(&y1) < 1e-12);
+    }
+
+    #[test]
+    fn decompose_structural_support() {
+        let mut rng = Rng::new(103);
+        let w = rand_filter(&mut rng, 1, 1, 5);
+        let phases = decompose(&w, 2, 2);
+        let supports: Vec<(usize, usize)> = phases.iter().map(|p| (p.ry, p.rx)).collect();
+        assert_eq!(supports, vec![(3, 3), (3, 2), (2, 3), (2, 2)]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared substrates: tensors, PRNG, JSON, binary tensor I/O.
+//!
+//! The offline build has no third-party crates beyond `xla`/`anyhow`, so the
+//! pieces a production service would pull from serde/rand/etc. are
+//! implemented here, small and fully tested.
+
+pub mod bin;
+pub mod json;
+pub mod prng;
+pub mod tensor;

@@ -1,0 +1,138 @@
+//! Minimal dense tensor types used across the substrates.
+//!
+//! The numeric substrates (reference deconv, TDC, Winograd, the functional
+//! accelerator simulator) use `f64` so that algorithm-equivalence tests can
+//! assert tight tolerances; the PJRT runtime hot path uses raw `f32` buffers
+//! and never touches these types.
+
+/// Channel-first 3-D tensor `[C, H, W]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor3 {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f64>,
+}
+
+impl Tensor3 {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Tensor3 { c, h, w, data: vec![0.0; c * h * w] }
+    }
+
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), c * h * w, "tensor3 shape/data mismatch");
+        Tensor3 { c, h, w, data }
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> f64 {
+        debug_assert!(c < self.c && y < self.h && x < self.w);
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, c: usize, y: usize, x: usize) -> &mut f64 {
+        debug_assert!(c < self.c && y < self.h && x < self.w);
+        &mut self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Zero-pad spatially: `l`/`r` rows above/below, `t`/`b`... columns
+    /// left/right. Returns a new tensor of shape `[C, H+top+bot, W+left+right]`.
+    pub fn pad(&self, top: usize, bot: usize, left: usize, right: usize) -> Tensor3 {
+        let mut out = Tensor3::zeros(self.c, self.h + top + bot, self.w + left + right);
+        for c in 0..self.c {
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    *out.at_mut(c, y + top, x + left) = self.at(c, y, x);
+                }
+            }
+        }
+        out
+    }
+
+    /// Max absolute element-wise difference; shapes must match.
+    pub fn max_abs_diff(&self, other: &Tensor3) -> f64 {
+        assert_eq!((self.c, self.h, self.w), (other.c, other.h, other.w));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// DeConv / Conv filter bank in conv-transpose layout `[C_in, C_out, K_h, K_w]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Filter4 {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub data: Vec<f64>,
+}
+
+impl Filter4 {
+    pub fn zeros(c_in: usize, c_out: usize, kh: usize, kw: usize) -> Self {
+        Filter4 { c_in, c_out, kh, kw, data: vec![0.0; c_in * c_out * kh * kw] }
+    }
+
+    pub fn from_vec(c_in: usize, c_out: usize, kh: usize, kw: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), c_in * c_out * kh * kw, "filter4 shape/data mismatch");
+        Filter4 { c_in, c_out, kh, kw, data }
+    }
+
+    #[inline]
+    pub fn at(&self, ci: usize, co: usize, ky: usize, kx: usize) -> f64 {
+        debug_assert!(ci < self.c_in && co < self.c_out && ky < self.kh && kx < self.kw);
+        self.data[((ci * self.c_out + co) * self.kh + ky) * self.kw + kx]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, ci: usize, co: usize, ky: usize, kx: usize) -> &mut f64 {
+        debug_assert!(ci < self.c_in && co < self.c_out && ky < self.kh && kx < self.kw);
+        &mut self.data[((ci * self.c_out + co) * self.kh + ky) * self.kw + kx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor3_indexing_roundtrip() {
+        let mut t = Tensor3::zeros(2, 3, 4);
+        *t.at_mut(1, 2, 3) = 5.0;
+        assert_eq!(t.at(1, 2, 3), 5.0);
+        assert_eq!(t.at(0, 0, 0), 0.0);
+        assert_eq!(t.numel(), 24);
+    }
+
+    #[test]
+    fn tensor3_pad_places_content() {
+        let t = Tensor3::from_vec(1, 1, 2, vec![1.0, 2.0]);
+        let p = t.pad(1, 0, 2, 1);
+        assert_eq!((p.h, p.w), (2, 5));
+        assert_eq!(p.at(0, 1, 2), 1.0);
+        assert_eq!(p.at(0, 1, 3), 2.0);
+        assert_eq!(p.at(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn filter4_layout() {
+        let mut f = Filter4::zeros(2, 3, 4, 4);
+        *f.at_mut(1, 2, 3, 0) = 7.0;
+        assert_eq!(f.at(1, 2, 3, 0), 7.0);
+        assert_eq!(f.data.len(), 2 * 3 * 16);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        let a = Tensor3::from_vec(1, 1, 2, vec![1.0, 2.0]);
+        let b = Tensor3::from_vec(1, 1, 2, vec![1.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

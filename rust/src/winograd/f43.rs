@@ -1,0 +1,353 @@
+//! F(4x4, 3x3) Winograd ablation — why the paper fixes uniform F(2x2,3x3).
+//!
+//! Larger tiles (m=4, n=6) cut Winograd-domain multiplications further
+//! (C' = 121 vs an F(2,3)-equivalent 196 for K_D=5: another ~1.6x), but:
+//!   * the transforms need real multipliers (G has 1/6, 1/12, 1/24 terms;
+//!     B^T has 4, 5 — no longer shift/add-only adder trees), growing the
+//!     pre/post-PE fabric cost that Table II already shows dominating;
+//!   * f32 numerical error grows by roughly an order of magnitude (the
+//!     transform matrices are worse conditioned), which the tests here
+//!     quantify;
+//!   * the padded-sub-filter sparsity is relatively weaker: a 2-tap
+//!     dimension kills 1 line of 6 (17%) instead of 1 of 4 (25%).
+//! This module implements the F(4,3) math and exposes the comparison used
+//! by the fig4 bench ablation.
+
+use crate::tdc;
+use crate::util::tensor::{Filter4, Tensor3};
+
+pub const M4: usize = 4;
+pub const N6: usize = 6;
+
+/// B^T (6x6) — Lavin & Gray (2016), F(4x4, 3x3).
+pub const BT6: [[f64; 6]; 6] = [
+    [4.0, 0.0, -5.0, 0.0, 1.0, 0.0],
+    [0.0, -4.0, -4.0, 1.0, 1.0, 0.0],
+    [0.0, 4.0, -4.0, -1.0, 1.0, 0.0],
+    [0.0, -2.0, -1.0, 2.0, 1.0, 0.0],
+    [0.0, 2.0, -1.0, -2.0, 1.0, 0.0],
+    [0.0, 4.0, 0.0, -5.0, 0.0, 1.0],
+];
+
+/// G (6x3).
+pub const G6: [[f64; 3]; 6] = [
+    [1.0 / 4.0, 0.0, 0.0],
+    [-1.0 / 6.0, -1.0 / 6.0, -1.0 / 6.0],
+    [-1.0 / 6.0, 1.0 / 6.0, -1.0 / 6.0],
+    [1.0 / 24.0, 1.0 / 12.0, 1.0 / 6.0],
+    [1.0 / 24.0, -1.0 / 12.0, 1.0 / 6.0],
+    [0.0, 0.0, 1.0],
+];
+
+/// A^T (4x6).
+pub const AT6: [[f64; 6]; 4] = [
+    [1.0, 1.0, 1.0, 1.0, 1.0, 0.0],
+    [0.0, 1.0, -1.0, 2.0, -2.0, 0.0],
+    [0.0, 1.0, 1.0, 4.0, 4.0, 0.0],
+    [0.0, 1.0, -1.0, 8.0, -8.0, 1.0],
+];
+
+pub type Tile6 = [[f64; N6]; N6];
+
+/// U = G f G^T with r<=3 support zero-padded to 3x3.
+pub fn filter_transform6(f: &[[f64; 3]; 3]) -> Tile6 {
+    let mut tmp = [[0.0; 3]; 6];
+    for i in 0..6 {
+        for j in 0..3 {
+            tmp[i][j] = (0..3).map(|t| G6[i][t] * f[t][j]).sum();
+        }
+    }
+    let mut u = [[0.0; N6]; N6];
+    for i in 0..6 {
+        for j in 0..6 {
+            u[i][j] = (0..3).map(|t| tmp[i][t] * G6[j][t]).sum();
+        }
+    }
+    u
+}
+
+/// V = B^T z B.
+pub fn input_transform6(z: &Tile6) -> Tile6 {
+    let mut tmp = [[0.0; N6]; N6];
+    for i in 0..6 {
+        for j in 0..6 {
+            tmp[i][j] = (0..6).map(|t| BT6[i][t] * z[t][j]).sum();
+        }
+    }
+    let mut v = [[0.0; N6]; N6];
+    for i in 0..6 {
+        for j in 0..6 {
+            v[i][j] = (0..6).map(|t| tmp[i][t] * BT6[j][t]).sum();
+        }
+    }
+    v
+}
+
+/// Y = A^T M A : 6x6 -> 4x4.
+pub fn inverse_transform6(m: &Tile6) -> [[f64; M4]; M4] {
+    let mut tmp = [[0.0; N6]; M4];
+    for i in 0..4 {
+        for j in 0..6 {
+            tmp[i][j] = (0..6).map(|t| AT6[i][t] * m[t][j]).sum();
+        }
+    }
+    let mut y = [[0.0; M4]; M4];
+    for i in 0..4 {
+        for j in 0..4 {
+            y[i][j] = (0..6).map(|t| tmp[i][t] * AT6[j][t]).sum();
+        }
+    }
+    y
+}
+
+/// Structural live positions in the 6x6 transformed tile for a sub-filter
+/// with (ry, rx) real taps: G6 row 5 = [0,0,1] only touches tap 2, so a
+/// 2-tap dimension zeroes 1 line of 6.
+pub fn live_positions6(ry: usize, rx: usize) -> usize {
+    let ly = if ry >= 3 { 6 } else { 5 };
+    let lx = if rx >= 3 { 6 } else { 5 };
+    ly * lx
+}
+
+/// C'(K_C): total live F(4,3)-domain multiplications across the S^2
+/// sub-filters per (c_in, c_out) per 4x4 output tile.
+pub fn c43_of_kc(k: usize, s: usize, p: usize) -> usize {
+    let mut total = 0;
+    for py in 0..s {
+        let ty = tdc::phase_taps_1d(k, s, p, py);
+        for px in 0..s {
+            let tx = tdc::phase_taps_1d(k, s, p, px);
+            total += live_positions6(ty.real_taps().clamp(1, 3), tx.real_taps().clamp(1, 3));
+        }
+    }
+    total
+}
+
+/// Multiplications per deconv output pixel under each algorithm, for the
+/// fig4 ablation table: (TDC spatial, F(2,3), F(4,3)).
+///
+/// Each input tile yields `S^2 * m^2` deconv outputs (m^2 per phase), so
+/// the per-output costs are `K_C^2`, `C/(S^2*4)` and `C'/(S^2*16)`.
+pub fn mults_per_output(k: usize, s: usize, p: usize) -> (f64, f64, f64) {
+    let kc = tdc::kc(k, s) as f64;
+    (
+        kc * kc,
+        crate::winograd::sparsity::c_of_kc(k, s, p) as f64 / (s * s * 4) as f64,
+        c43_of_kc(k, s, p) as f64 / (s * s * 16) as f64,
+    )
+}
+
+/// Dense F(4,3) valid correlation (reference for the numerics comparison).
+/// (H-2, W-2) must be divisible by 4.
+pub fn winograd43_conv2d(x: &Tensor3, g: &Filter4) -> Tensor3 {
+    let (ho, wo) = (x.h - 2, x.w - 2);
+    assert!(ho % M4 == 0 && wo % M4 == 0);
+    let mut y = Tensor3::zeros(g.c_out, ho, wo);
+    // transform the filter bank
+    let mut u = Vec::with_capacity(g.c_in * g.c_out);
+    for ci in 0..g.c_in {
+        for co in 0..g.c_out {
+            let mut f = [[0.0; 3]; 3];
+            for ky in 0..g.kh.min(3) {
+                for kx in 0..g.kw.min(3) {
+                    f[ky][kx] = g.at(ci, co, ky, kx);
+                }
+            }
+            u.push(filter_transform6(&f));
+        }
+    }
+    for ty in 0..ho / M4 {
+        for tx in 0..wo / M4 {
+            let mut m_acc = vec![[[0.0; N6]; N6]; g.c_out];
+            for ci in 0..x.c {
+                let mut z = [[0.0; N6]; N6];
+                for i in 0..N6 {
+                    for j in 0..N6 {
+                        z[i][j] = x.at(ci, M4 * ty + i, M4 * tx + j);
+                    }
+                }
+                let v = input_transform6(&z);
+                for co in 0..g.c_out {
+                    let ut = &u[ci * g.c_out + co];
+                    for i in 0..N6 {
+                        for j in 0..N6 {
+                            m_acc[co][i][j] += ut[i][j] * v[i][j];
+                        }
+                    }
+                }
+            }
+            for co in 0..g.c_out {
+                let yt = inverse_transform6(&m_acc[co]);
+                for a in 0..M4 {
+                    for b in 0..M4 {
+                        *y.at_mut(co, M4 * ty + a, M4 * tx + b) = yt[a][b];
+                    }
+                }
+            }
+        }
+    }
+    y
+}
+
+/// f32-precision error comparison on a single tile: run the same 3x3
+/// correlation through F(2,3) and F(4,3) with ALL arithmetic in f32, and
+/// report the max abs error of each vs the exact f64 direct result.
+/// F(4,3)'s worse-conditioned transforms (entries up to 8, fractions
+/// 1/24) amplify rounding — the numerics half of the ablation.
+pub fn f32_error_comparison(seed: u64) -> (f64, f64) {
+    use crate::util::prng::Rng;
+    let mut rng = Rng::new(seed);
+    // one 6x6 input patch covers both: F(4,3) uses all of it, F(2,3) tiles it
+    let z: Vec<f32> = rng.normal_vec(36).iter().map(|&v| v as f32).collect();
+    let f: Vec<f32> = rng.normal_vec(9).iter().map(|&v| v as f32).collect();
+
+    // exact f64 valid correlation (4x4 outputs)
+    let x64 = Tensor3::from_vec(1, 6, 6, z.iter().map(|&v| v as f64).collect());
+    let g64 = Filter4::from_vec(1, 1, 3, 3, f.iter().map(|&v| v as f64).collect());
+    let exact = crate::tdc::correlate_valid(&x64, &g64);
+
+    // generic f32 matrix helpers
+    fn mat_f32(a: &[Vec<f32>], b: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let (n, k, m) = (a.len(), b.len(), b[0].len());
+        let mut out = vec![vec![0f32; m]; n];
+        for i in 0..n {
+            for j in 0..m {
+                let mut acc = 0f32;
+                for t in 0..k {
+                    acc += a[i][t] * b[t][j];
+                }
+                out[i][j] = acc;
+            }
+        }
+        let _ = k;
+        out
+    }
+    fn tr(a: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        (0..a[0].len()).map(|j| a.iter().map(|r| r[j]).collect()).collect()
+    }
+    let grid = |v: &[f32], n: usize| -> Vec<Vec<f32>> {
+        (0..n).map(|i| v[i * n..(i + 1) * n].to_vec()).collect()
+    };
+    let f_grid = grid(&f, 3);
+
+    // F(4,3) in f32 on the whole 6x6 patch -> 4x4 outputs
+    let bt6: Vec<Vec<f32>> = BT6.iter().map(|r| r.iter().map(|&v| v as f32).collect()).collect();
+    let g6: Vec<Vec<f32>> = G6.iter().map(|r| r.iter().map(|&v| v as f32).collect()).collect();
+    let at6: Vec<Vec<f32>> = AT6.iter().map(|r| r.iter().map(|&v| v as f32).collect()).collect();
+    let z6 = grid(&z, 6);
+    let v6 = mat_f32(&mat_f32(&bt6, &z6), &tr(&bt6));
+    let u6 = mat_f32(&mat_f32(&g6, &f_grid), &tr(&g6));
+    let m6: Vec<Vec<f32>> =
+        (0..6).map(|i| (0..6).map(|j| u6[i][j] * v6[i][j]).collect()).collect();
+    let y43 = mat_f32(&mat_f32(&at6, &m6), &tr(&at6));
+
+    // F(2,3) in f32, tiling the 4x4 output into four 2x2 tiles
+    let btm: Vec<Vec<f32>> = crate::winograd::transforms::BT
+        .iter()
+        .map(|r| r.iter().map(|&v| v as f32).collect())
+        .collect();
+    let gm: Vec<Vec<f32>> = crate::winograd::transforms::G
+        .iter()
+        .map(|r| r.iter().map(|&v| v as f32).collect())
+        .collect();
+    let atm: Vec<Vec<f32>> = crate::winograd::transforms::AT
+        .iter()
+        .map(|r| r.iter().map(|&v| v as f32).collect())
+        .collect();
+    let u4 = mat_f32(&mat_f32(&gm, &f_grid), &tr(&gm));
+    let mut y23 = vec![vec![0f32; 4]; 4];
+    for ty in 0..2 {
+        for tx in 0..2 {
+            let z4: Vec<Vec<f32>> = (0..4)
+                .map(|i| (0..4).map(|j| z[(2 * ty + i) * 6 + 2 * tx + j]).collect())
+                .collect();
+            let v4 = mat_f32(&mat_f32(&btm, &z4), &tr(&btm));
+            let m4: Vec<Vec<f32>> =
+                (0..4).map(|i| (0..4).map(|j| u4[i][j] * v4[i][j]).collect()).collect();
+            let t = mat_f32(&mat_f32(&atm, &m4), &tr(&atm));
+            for a in 0..2 {
+                for b in 0..2 {
+                    y23[2 * ty + a][2 * tx + b] = t[a][b];
+                }
+            }
+        }
+    }
+
+    let mut e23 = 0f64;
+    let mut e43 = 0f64;
+    for i in 0..4 {
+        for j in 0..4 {
+            let want = exact.at(0, i, j);
+            e23 = e23.max((y23[i][j] as f64 - want).abs());
+            e43 = e43.max((y43[i][j] as f64 - want).abs());
+        }
+    }
+    (e23, e43)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tdc::correlate_valid;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn f43_identity_1d() {
+        // F(4,3) on a known 1D signal embedded in 2D
+        let mut rng = Rng::new(1);
+        let x = Tensor3::from_vec(1, 6, 6, rng.normal_vec(36));
+        let g = Filter4::from_vec(1, 1, 3, 3, rng.normal_vec(9));
+        let want = correlate_valid(&x, &g);
+        let got = winograd43_conv2d(&x, &g);
+        assert!(want.max_abs_diff(&got) < 1e-9, "{}", want.max_abs_diff(&got));
+    }
+
+    #[test]
+    fn f43_multichannel() {
+        let mut rng = Rng::new(2);
+        let x = Tensor3::from_vec(3, 10, 14, rng.normal_vec(3 * 10 * 14));
+        let g = Filter4::from_vec(3, 2, 3, 3, rng.normal_vec(3 * 2 * 9));
+        let want = correlate_valid(&x, &g);
+        let got = winograd43_conv2d(&x, &g);
+        assert!(want.max_abs_diff(&got) < 1e-8);
+    }
+
+    #[test]
+    fn c43_constants() {
+        // K5S2: 36 + 30 + 30 + 25 = 121; K4S2: 4 * 25 = 100; K3S1: 36
+        assert_eq!(c43_of_kc(5, 2, 2), 121);
+        assert_eq!(c43_of_kc(4, 2, 1), 100);
+        assert_eq!(c43_of_kc(3, 1, 1), 36);
+    }
+
+    #[test]
+    fn f43_reduces_mults_further_than_f23() {
+        for (k, s) in [(5usize, 2usize), (4, 2), (3, 1)] {
+            let p = tdc::default_padding(k, s);
+            let (td, f23, f43) = mults_per_output(k, s, p);
+            assert!(f43 < f23, "K={k}: f43 {f43} vs f23 {f23}");
+            assert!(f23 < td, "K={k}");
+        }
+    }
+
+    #[test]
+    fn f43_numerics_are_worse_than_f23() {
+        // the ablation's point: larger tiles trade accuracy for mults
+        let mut worse = 0;
+        for seed in 0..8 {
+            let (e23, e43) = f32_error_comparison(seed);
+            if e43 > e23 {
+                worse += 1;
+            }
+            assert!(e23 < 5e-5, "F(2,3) f32 error unexpectedly large: {e23}");
+        }
+        assert!(worse >= 6, "F(4,3) should usually have larger f32 error ({worse}/8)");
+    }
+
+    #[test]
+    fn live_positions_structure() {
+        assert_eq!(live_positions6(3, 3), 36);
+        assert_eq!(live_positions6(3, 2), 30);
+        assert_eq!(live_positions6(2, 2), 25);
+    }
+}

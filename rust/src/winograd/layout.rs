@@ -1,0 +1,167 @@
+//! The paper's dataflow reorganisation (Fig. 5): flatten transformed 4x4
+//! filters/tiles into an `n^2 x N` matrix layout so that structural zeros
+//! become whole zero *rows* shared by every channel — vector-level sparsity
+//! the com-PE array can skip without any per-element predication.
+//!
+//! This module owns the reordered representations used by both the
+//! functional accelerator simulator (`accel::functional`) and the cycle
+//! model (`accel::cycle`).
+
+use crate::tdc::PhaseFilter;
+use crate::util::tensor::Tensor3;
+use crate::winograd::sparsity::{classify, nonzero_positions, Case};
+use crate::winograd::transforms::{filter_bank_transform, input_transform, Tile4, M, N};
+
+/// One TDC phase's filters in the Winograd domain, reordered with zero rows
+/// removed: `u[p][co][ci]` for p over the *live* positions only.
+#[derive(Clone, Debug)]
+pub struct ReorderedFilter {
+    pub case: Case,
+    /// live position indices into the row-major 4x4 (len 16/12/9)
+    pub live: Vec<usize>,
+    pub c_in: usize,
+    pub c_out: usize,
+    /// `[live.len() * c_out * c_in]`, position-major
+    pub u: Vec<f64>,
+    /// phase input offsets (from the TDC decomposition)
+    pub d0y: isize,
+    pub d0x: isize,
+}
+
+impl ReorderedFilter {
+    #[inline]
+    pub fn at(&self, p: usize, co: usize, ci: usize) -> f64 {
+        self.u[(p * self.c_out + co) * self.c_in + ci]
+    }
+
+    /// Multiplications per (tile, c_in, c_out): the live position count.
+    pub fn mults_per_tile(&self) -> usize {
+        self.live.len()
+    }
+}
+
+/// Build the reordered Winograd-domain filter for one TDC phase.
+pub fn reorder_filter(ph: &PhaseFilter) -> ReorderedFilter {
+    let case = classify(ph.ry.clamp(1, 3), ph.rx.clamp(1, 3));
+    let live = nonzero_positions(ph.ry.clamp(1, 3), ph.rx.clamp(1, 3));
+    let bank = filter_bank_transform(&ph.g); // [ci*c_out] of Tile4
+    let (c_in, c_out) = (ph.g.c_in, ph.g.c_out);
+    let mut u = vec![0.0; live.len() * c_out * c_in];
+    for (pi, &pos) in live.iter().enumerate() {
+        let (i, j) = (pos / N, pos % N);
+        for co in 0..c_out {
+            for ci in 0..c_in {
+                u[(pi * c_out + co) * c_in + ci] = bank[ci * c_out + co][i][j];
+            }
+        }
+    }
+    ReorderedFilter { case, live, c_in, c_out, u, d0y: ph.d0y, d0x: ph.d0x }
+}
+
+/// Transformed input tiles for one tile position, reordered: `v[pos][ci]`
+/// over all 16 positions (the pre-PE computes all of V; the *gather* of
+/// live rows happens when feeding the com-PEs).
+#[derive(Clone, Debug)]
+pub struct ReorderedTile {
+    pub c_in: usize,
+    /// `[16 * c_in]`, position-major
+    pub v: Vec<f64>,
+}
+
+impl ReorderedTile {
+    #[inline]
+    pub fn at(&self, pos: usize, ci: usize) -> f64 {
+        self.v[pos * self.c_in + ci]
+    }
+}
+
+/// Extract + transform + reorder the 4x4 input tile at (tile_y, tile_x)
+/// (stride m = 2) from a padded feature map. This is the pre-PE.
+pub fn reorder_input_tile(x: &Tensor3, ty: usize, tx: usize) -> ReorderedTile {
+    let mut v = vec![0.0; 16 * x.c];
+    for ci in 0..x.c {
+        let mut z: Tile4 = [[0.0; N]; N];
+        for i in 0..N {
+            for j in 0..N {
+                z[i][j] = x.at(ci, M * ty + i, M * tx + j);
+            }
+        }
+        let vt = input_transform(&z);
+        for i in 0..N {
+            for j in 0..N {
+                v[(i * N + j) * x.c + ci] = vt[i][j];
+            }
+        }
+    }
+    ReorderedTile { c_in: x.c, v }
+}
+
+/// com-PE array: multiply-accumulate over live rows only.
+/// Returns the Winograd-domain accumulator `m[co] -> Tile4` (zeros at
+/// skipped positions) and the number of multiplications actually issued.
+pub fn engine_multiply(rf: &ReorderedFilter, vt: &ReorderedTile) -> (Vec<Tile4>, usize) {
+    assert_eq!(rf.c_in, vt.c_in);
+    let mut m_acc = vec![[[0.0; N]; N]; rf.c_out];
+    let mut mults = 0;
+    for (pi, &pos) in rf.live.iter().enumerate() {
+        let (i, j) = (pos / N, pos % N);
+        // slice-based dot products: bounds checks hoisted, autovectorised
+        let v_row = &vt.v[pos * rf.c_in..(pos + 1) * rf.c_in];
+        for co in 0..rf.c_out {
+            let u_row = &rf.u[(pi * rf.c_out + co) * rf.c_in..][..rf.c_in];
+            let acc: f64 = u_row.iter().zip(v_row).map(|(u, v)| u * v).sum();
+            m_acc[co][i][j] = acc;
+            mults += rf.c_in;
+        }
+    }
+    (m_acc, mults)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tdc::{decompose, default_padding};
+    use crate::util::prng::Rng;
+    use crate::util::tensor::Filter4;
+    use crate::winograd::transforms::inverse_transform;
+
+    #[test]
+    fn reordered_filter_shapes_and_cases() {
+        let mut rng = Rng::new(400);
+        let w = Filter4::from_vec(2, 3, 5, 5, rng.normal_vec(2 * 3 * 25));
+        let phases = decompose(&w, 2, default_padding(5, 2));
+        let rf: Vec<ReorderedFilter> = phases.iter().map(reorder_filter).collect();
+        assert_eq!(rf[0].case, Case::Dense);
+        assert_eq!(rf[0].live.len(), 16);
+        assert_eq!(rf[1].case, Case::OneLine);
+        assert_eq!(rf[3].case, Case::TwoLines);
+        assert_eq!(rf[3].live.len(), 9);
+        // C(K_C): sum of live positions across phases == 49
+        let total: usize = rf.iter().map(|r| r.live.len()).sum();
+        assert_eq!(total, 49);
+    }
+
+    #[test]
+    fn engine_multiply_equals_dense_math() {
+        // sparse engine on one tile == dense winograd conv on that tile
+        let mut rng = Rng::new(401);
+        let w = Filter4::from_vec(3, 2, 4, 4, rng.normal_vec(3 * 2 * 16));
+        let phases = decompose(&w, 2, default_padding(4, 2));
+        let ph = &phases[0];
+        let rf = reorder_filter(ph);
+        let x = Tensor3::from_vec(3, 4, 4, rng.normal_vec(3 * 16));
+        let vt = reorder_input_tile(&x, 0, 0);
+        let (m_acc, mults) = engine_multiply(&rf, &vt);
+        assert_eq!(mults, 9 * 2 * 3); // case 3: 9 live positions
+        // dense reference: winograd_conv2d on the same tile
+        let y_ref = crate::winograd::transforms::winograd_conv2d(&x, &ph.g);
+        for co in 0..2 {
+            let yt = inverse_transform(&m_acc[co]);
+            for a in 0..2 {
+                for b in 0..2 {
+                    assert!((yt[a][b] - y_ref.at(co, a, b)).abs() < 1e-10);
+                }
+            }
+        }
+    }
+}

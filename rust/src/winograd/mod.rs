@@ -1,0 +1,11 @@
+//! Winograd minimal-filtering substrate: F(2x2,3x3) transforms, structural
+//! sparsity analysis of TDC sub-filters, and the reordered `n^2 x N`
+//! dataflow layout (paper §II.B, §III).
+
+pub mod f43;
+pub mod layout;
+pub mod sparsity;
+pub mod transforms;
+
+pub use sparsity::{c_of_kc, classify, phase_cases, Case};
+pub use transforms::{M, N, R};

@@ -1,0 +1,177 @@
+//! Structural sparsity of Winograd-transformed TDC sub-filters
+//! (paper Fig. 3 + Fig. 6).
+//!
+//! A TDC sub-filter with `r < 3` real taps in a dimension, zero-padded to
+//! 3 taps before `G f G^T`, produces a transformed tile whose 4th line in
+//! that dimension is *structurally* zero (G row 3 = [0,0,1] touches only
+//! the padded tap). In the reordered `n^2 x N` layout those become whole
+//! zero rows — "vector-level sparsity" — that the accelerating engine skips.
+
+use crate::winograd::transforms::N;
+
+/// Paper Fig. 6 case taxonomy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Case {
+    /// 3x3 support: no structural zeros (16 live positions).
+    Dense,
+    /// one dim has 2 taps: n = 4 zero rows (12 live positions).
+    OneLine,
+    /// both dims have 2 taps: 2n-1 = 7 zero rows (9 live positions).
+    TwoLines,
+}
+
+impl Case {
+    pub fn number(self) -> usize {
+        match self {
+            Case::Dense => 1,
+            Case::OneLine => 2,
+            Case::TwoLines => 3,
+        }
+    }
+
+    /// Live (non-zero) Winograd positions out of n^2 = 16.
+    pub fn live_positions(self) -> usize {
+        match self {
+            Case::Dense => 16,
+            Case::OneLine => 12,
+            Case::TwoLines => 9,
+        }
+    }
+
+    /// Structurally-zero rows in the n^2 x N layout.
+    pub fn zero_rows(self) -> usize {
+        16 - self.live_positions()
+    }
+}
+
+/// Classify a sub-filter by its structural support (real taps per dim).
+pub fn classify(ry: usize, rx: usize) -> Case {
+    assert!((1..=3).contains(&ry) && (1..=3).contains(&rx));
+    match (ry >= 3, rx >= 3) {
+        (true, true) => Case::Dense,
+        (true, false) | (false, true) => Case::OneLine,
+        (false, false) => Case::TwoLines,
+    }
+}
+
+/// Row-major list of live Winograd positions in the 4x4 tile for a
+/// sub-filter with (ry, rx) real taps. len == classify(ry,rx).live_positions().
+pub fn nonzero_positions(ry: usize, rx: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(16);
+    for i in 0..N {
+        if i == 3 && ry < 3 {
+            continue;
+        }
+        for j in 0..N {
+            if j == 3 && rx < 3 {
+                continue;
+            }
+            out.push(i * N + j);
+        }
+    }
+    out
+}
+
+/// Total live Winograd-domain multiplications across the S^2 sub-filters of
+/// a (K, S, P) deconv, per (c_in, c_out) pair per m x m tile — the paper's
+/// `C(K_C)`: 49 for (5,2), 36 for (4,2), 16 for (3,1).
+pub fn c_of_kc(k: usize, s: usize, p: usize) -> usize {
+    let mut total = 0;
+    for py in 0..s {
+        let ty = crate::tdc::phase_taps_1d(k, s, p, py);
+        for px in 0..s {
+            let tx = crate::tdc::phase_taps_1d(k, s, p, px);
+            total += classify(ty.real_taps().clamp(1, 3), tx.real_taps().clamp(1, 3))
+                .live_positions();
+        }
+    }
+    total
+}
+
+/// Per-phase sparsity cases of a (K, S, P) deconv, row-major over (py, px).
+///
+/// The paper's three kernel classes are answered from a precomputed table
+/// (the cycle model calls this in its inner sweep); everything else falls
+/// through to the structural derivation.
+pub fn phase_cases(k: usize, s: usize, p: usize) -> Vec<Case> {
+    match (k, s, p) {
+        (5, 2, 2) => return vec![Case::Dense, Case::OneLine, Case::OneLine, Case::TwoLines],
+        (4, 2, 1) => return vec![Case::TwoLines; 4],
+        (3, 1, 1) => return vec![Case::Dense],
+        _ => {}
+    }
+    let mut out = Vec::with_capacity(s * s);
+    for py in 0..s {
+        let ty = crate::tdc::phase_taps_1d(k, s, p, py);
+        for px in 0..s {
+            let tx = crate::tdc::phase_taps_1d(k, s, p, px);
+            out.push(classify(ty.real_taps().clamp(1, 3), tx.real_taps().clamp(1, 3)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tdc::default_padding;
+    use crate::util::prng::Rng;
+    use crate::util::tensor::Filter4;
+    use crate::winograd::transforms::filter_bank_transform;
+
+    #[test]
+    fn case_counts() {
+        assert_eq!(classify(3, 3), Case::Dense);
+        assert_eq!(classify(3, 2), Case::OneLine);
+        assert_eq!(classify(2, 3), Case::OneLine);
+        assert_eq!(classify(2, 2), Case::TwoLines);
+        assert_eq!(Case::Dense.live_positions(), 16);
+        assert_eq!(Case::OneLine.live_positions(), 12);
+        assert_eq!(Case::TwoLines.live_positions(), 9);
+        assert_eq!(Case::OneLine.zero_rows(), 4); // n
+        assert_eq!(Case::TwoLines.zero_rows(), 7); // 2n - 1
+    }
+
+    #[test]
+    fn c_of_kc_matches_paper_eq5() {
+        assert_eq!(c_of_kc(5, 2, default_padding(5, 2)), 49);
+        assert_eq!(c_of_kc(4, 2, default_padding(4, 2)), 36);
+        assert_eq!(c_of_kc(3, 1, default_padding(3, 1)), 16);
+    }
+
+    #[test]
+    fn k4_all_phases_case3() {
+        // the paper: "when K_D is 4 ... all transformed filters operate in Case 3"
+        let cases = phase_cases(4, 2, 1);
+        assert_eq!(cases, vec![Case::TwoLines; 4]);
+    }
+
+    #[test]
+    fn k5_phase_case_mix() {
+        let cases = phase_cases(5, 2, 2);
+        assert_eq!(
+            cases,
+            vec![Case::Dense, Case::OneLine, Case::OneLine, Case::TwoLines]
+        );
+    }
+
+    #[test]
+    fn nonzero_positions_agree_with_actual_transform_zeros() {
+        // transform random sub-filters and check the predicted mask is exact
+        let mut rng = Rng::new(300);
+        for &(ry, rx) in &[(3usize, 3usize), (3, 2), (2, 3), (2, 2)] {
+            let g = Filter4::from_vec(1, 1, ry, rx, rng.normal_vec(ry * rx));
+            let u = &filter_bank_transform(&g)[0];
+            let live = nonzero_positions(ry, rx);
+            for pos in 0..16 {
+                let (i, j) = (pos / 4, pos % 4);
+                if live.contains(&pos) {
+                    // generically non-zero (random filter)
+                    assert!(u[i][j].abs() > 1e-12, "({ry},{rx}) pos {pos} unexpectedly zero");
+                } else {
+                    assert_eq!(u[i][j], 0.0, "({ry},{rx}) pos {pos} should be structural zero");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Winograd F(2x2, 3x3) minimal-filtering transforms (paper eq. 3/4).
+//!
+//! `m = 2` outputs per dim, `r = 3` taps per dim, `n = m + r - 1 = 4`.
+//! Filters with fewer than 3 real taps (the TDC sub-filters of a K_D=4 or
+//! K_D=5 deconv) are zero-padded to 3x3 before the `G f G^T` transform,
+//! which is what creates the structural zero patterns of Fig. 3.
+
+use crate::util::tensor::{Filter4, Tensor3};
+
+pub const M: usize = 2;
+pub const R: usize = 3;
+pub const N: usize = 4;
+
+/// B^T: 4x4 input transform.
+pub const BT: [[f64; 4]; 4] = [
+    [1.0, 0.0, -1.0, 0.0],
+    [0.0, 1.0, 1.0, 0.0],
+    [0.0, -1.0, 1.0, 0.0],
+    [0.0, 1.0, 0.0, -1.0],
+];
+
+/// G: 4x3 filter transform.
+pub const G: [[f64; 3]; 3 + 1] = [
+    [1.0, 0.0, 0.0],
+    [0.5, 0.5, 0.5],
+    [0.5, -0.5, 0.5],
+    [0.0, 0.0, 1.0],
+];
+
+/// A^T: 2x4 inverse (output) transform.
+pub const AT: [[f64; 4]; 2] = [
+    [1.0, 1.0, 1.0, 0.0],
+    [0.0, 1.0, -1.0, -1.0],
+];
+
+/// A transformed 4x4 tile.
+pub type Tile4 = [[f64; N]; N];
+
+/// `U = G f G^T` for a single 2D filter, zero-padding r<3 supports to 3x3.
+pub fn filter_transform(f: &[[f64; 3]; 3]) -> Tile4 {
+    // tmp = G f : 4x3
+    let mut tmp = [[0.0; 3]; 4];
+    for i in 0..4 {
+        for j in 0..3 {
+            let mut acc = 0.0;
+            for t in 0..3 {
+                acc += G[i][t] * f[t][j];
+            }
+            tmp[i][j] = acc;
+        }
+    }
+    // U = tmp G^T : 4x4
+    let mut u = [[0.0; N]; N];
+    for i in 0..4 {
+        for j in 0..4 {
+            let mut acc = 0.0;
+            for t in 0..3 {
+                acc += tmp[i][t] * G[j][t];
+            }
+            u[i][j] = acc;
+        }
+    }
+    u
+}
+
+/// `V = B^T z B` for a 4x4 input tile, via the adder-tree formulation the
+/// FPGA pre-PE uses (rows then columns; 32 adds, no multiplies).
+pub fn input_transform(z: &Tile4) -> Tile4 {
+    #[inline]
+    fn bt_lines(a: [f64; 4]) -> [f64; 4] {
+        [a[0] - a[2], a[1] + a[2], a[2] - a[1], a[1] - a[3]]
+    }
+    let mut rows = [[0.0; N]; N];
+    for j in 0..N {
+        let col = bt_lines([z[0][j], z[1][j], z[2][j], z[3][j]]);
+        for i in 0..N {
+            rows[i][j] = col[i];
+        }
+    }
+    let mut v = [[0.0; N]; N];
+    for i in 0..N {
+        let line = bt_lines(rows[i]);
+        v[i] = line;
+    }
+    v
+}
+
+/// `Y = A^T M A`: 4x4 Winograd-domain accumulator -> 2x2 spatial outputs.
+pub fn inverse_transform(m: &Tile4) -> [[f64; M]; M] {
+    #[inline]
+    fn at_lines(a: [f64; 4]) -> [f64; 2] {
+        [a[0] + a[1] + a[2], a[1] - a[2] - a[3]]
+    }
+    let mut half = [[0.0; 2]; N]; // half[j] = A^T applied down column j
+    for j in 0..N {
+        half[j] = at_lines([m[0][j], m[1][j], m[2][j], m[3][j]]);
+    }
+    let mut y = [[0.0; M]; M];
+    for a in 0..M {
+        y[a] = at_lines([half[0][a], half[1][a], half[2][a], half[3][a]]);
+    }
+    y
+}
+
+/// Transform a filter bank `[C_in, C_out, r, r]` (r <= 3, zero-padded) into
+/// Winograd-domain tiles, flattened index `[ci][co] -> Tile4`.
+pub fn filter_bank_transform(g: &Filter4) -> Vec<Tile4> {
+    assert!(g.kh <= R && g.kw <= R);
+    let mut out = Vec::with_capacity(g.c_in * g.c_out);
+    for ci in 0..g.c_in {
+        for co in 0..g.c_out {
+            let mut f = [[0.0; 3]; 3];
+            for ky in 0..g.kh {
+                for kx in 0..g.kw {
+                    f[ky][kx] = g.at(ci, co, ky, kx);
+                }
+            }
+            out.push(filter_transform(&f));
+        }
+    }
+    out
+}
+
+/// Dense Winograd valid correlation of `x[C_in,H,W]` with
+/// `g[C_in,C_out,r,r]` (r<=3): reference for the sparse engine and the
+/// functional simulator. (H-2, W-2) must be tile-aligned (even).
+pub fn winograd_conv2d(x: &Tensor3, g: &Filter4) -> Tensor3 {
+    let (ho, wo) = (x.h - (R - 1), x.w - (R - 1));
+    assert!(ho % M == 0 && wo % M == 0, "tile-align inputs first");
+    let u = filter_bank_transform(g);
+    let mut y = Tensor3::zeros(g.c_out, ho, wo);
+    for ty in 0..ho / M {
+        for tx in 0..wo / M {
+            // accumulate in the Winograd domain over input channels
+            let mut m_acc = vec![[[0.0; N]; N]; g.c_out];
+            for ci in 0..x.c {
+                let mut z = [[0.0; N]; N];
+                for i in 0..N {
+                    for j in 0..N {
+                        z[i][j] = x.at(ci, M * ty + i, M * tx + j);
+                    }
+                }
+                let v = input_transform(&z);
+                for co in 0..g.c_out {
+                    let ut = &u[ci * g.c_out + co];
+                    let acc = &mut m_acc[co];
+                    for i in 0..N {
+                        for j in 0..N {
+                            acc[i][j] += ut[i][j] * v[i][j];
+                        }
+                    }
+                }
+            }
+            for co in 0..g.c_out {
+                let yt = inverse_transform(&m_acc[co]);
+                for a in 0..M {
+                    for b in 0..M {
+                        *y.at_mut(co, M * ty + a, M * tx + b) = yt[a][b];
+                    }
+                }
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tdc::correlate_valid;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn f23_1d_identity_check() {
+        // F(2,3) on a known signal: y = correlate(z, f)
+        let z = [1.0, 2.0, 3.0, 4.0];
+        let f = [0.5, -1.0, 2.0];
+        let expect = [
+            z[0] * f[0] + z[1] * f[1] + z[2] * f[2],
+            z[1] * f[0] + z[2] * f[1] + z[3] * f[2],
+        ];
+        // build as 2D with the second dim trivial (tap 0 = 1)
+        let mut f2 = [[0.0; 3]; 3];
+        f2[0] = [f[0], 0.0, 0.0];
+        f2[1] = [f[1], 0.0, 0.0];
+        f2[2] = [f[2], 0.0, 0.0];
+        let u = filter_transform(&f2);
+        let mut z2 = [[0.0; 4]; 4];
+        for i in 0..4 {
+            z2[i][0] = z[i];
+        }
+        let v = input_transform(&z2);
+        let mut m = [[0.0; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                m[i][j] = u[i][j] * v[i][j];
+            }
+        }
+        let y = inverse_transform(&m);
+        assert!((y[0][0] - expect[0]).abs() < 1e-12);
+        assert!((y[1][0] - expect[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn padded_2tap_filter_zeroes_last_line() {
+        // 2x2 support zero-padded to 3x3 -> transformed row 3 and col 3 zero
+        let f = [[1.0, 2.0, 0.0], [3.0, 4.0, 0.0], [0.0, 0.0, 0.0]];
+        let u = filter_transform(&f);
+        for t in 0..4 {
+            assert_eq!(u[3][t], 0.0, "row 3 position {t}");
+            assert_eq!(u[t][3], 0.0, "col 3 position {t}");
+        }
+        // and the 3x3 interior is generically non-zero
+        assert!(u[0][0] != 0.0);
+    }
+
+    #[test]
+    fn dense_winograd_matches_direct_correlation() {
+        let mut rng = Rng::new(200);
+        let x = Tensor3::from_vec(3, 8, 10, rng.normal_vec(3 * 8 * 10));
+        for r in [2usize, 3] {
+            let g = Filter4::from_vec(3, 4, r, r, rng.normal_vec(3 * 4 * r * r));
+            // pad the filter bank to 3x3 for the direct reference
+            let mut g3 = Filter4::zeros(3, 4, 3, 3);
+            for ci in 0..3 {
+                for co in 0..4 {
+                    for ky in 0..r {
+                        for kx in 0..r {
+                            *g3.at_mut(ci, co, ky, kx) = g.at(ci, co, ky, kx);
+                        }
+                    }
+                }
+            }
+            let y_ref = correlate_valid(&x, &g3);
+            let y_win = winograd_conv2d(&x, &g);
+            assert!(y_ref.max_abs_diff(&y_win) < 1e-10, "r={r}");
+        }
+    }
+
+    #[test]
+    fn input_transform_matches_matrix_form() {
+        let mut rng = Rng::new(201);
+        let mut z = [[0.0; 4]; 4];
+        for row in z.iter_mut() {
+            for v in row.iter_mut() {
+                *v = rng.normal();
+            }
+        }
+        let fast = input_transform(&z);
+        // slow: V = BT z BT^T(applied as B on the right)
+        let mut tmp = [[0.0; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut acc = 0.0;
+                for t in 0..4 {
+                    acc += BT[i][t] * z[t][j];
+                }
+                tmp[i][j] = acc;
+            }
+        }
+        let mut slow = [[0.0; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut acc = 0.0;
+                for t in 0..4 {
+                    acc += tmp[i][t] * BT[j][t];
+                }
+                slow[i][j] = acc;
+            }
+        }
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((fast[i][j] - slow[i][j]).abs() < 1e-12);
+            }
+        }
+    }
+}

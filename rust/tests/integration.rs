@@ -1,0 +1,180 @@
+//! Integration tests across modules that don't need the PJRT artifacts
+//! (those live in runtime_e2e.rs): zoo ↔ workload ↔ simulator ↔ energy ↔
+//! resource ↔ dse consistency, and the report/CLI surfaces.
+
+use wingan::accel::functional::run_winograd_deconv;
+use wingan::accel::{simulate_model, AccelConfig};
+use wingan::cli::Args;
+use wingan::energy::{energy_of, EnergyParams};
+use wingan::gan::workload::Method;
+use wingan::gan::zoo::{self, Scale};
+use wingan::report;
+use wingan::tdc;
+use wingan::util::prng::Rng;
+use wingan::util::tensor::{Filter4, Tensor3};
+
+#[test]
+fn fig8_speedup_shape_matches_paper() {
+    // who wins, by roughly what factor (paper: DCGAN 8.38/2.85,
+    // ArtGAN 7.5/1.78, DiscoGAN & GP-GAN 7.15/1.85)
+    let cfg = AccelConfig::default();
+    let expect = [
+        ("DCGAN", 8.38, 2.85),
+        ("ArtGAN", 7.5, 1.78),
+        ("DiscoGAN", 7.15, 1.85),
+        ("GP-GAN", 7.15, 1.85),
+    ];
+    for (g, (name, zp_claim, tdc_claim)) in zoo::all(Scale::Paper).iter().zip(expect) {
+        assert_eq!(g.name, name);
+        let zp = simulate_model(g, Method::ZeroPadded, &cfg, true);
+        let td = simulate_model(g, Method::Tdc, &cfg, true);
+        let wi = simulate_model(g, Method::Winograd, &cfg, true);
+        let s_zp = zp.t_total / wi.t_total;
+        let s_td = td.t_total / wi.t_total;
+        // within 25% of the paper's claims — same substrate shape
+        assert!((s_zp / zp_claim - 1.0).abs() < 0.25, "{name}: ZP speedup {s_zp} vs {zp_claim}");
+        assert!((s_td / tdc_claim - 1.0).abs() < 0.25, "{name}: TDC speedup {s_td} vs {tdc_claim}");
+    }
+}
+
+#[test]
+fn fig9_energy_shape_matches_paper() {
+    let cfg = AccelConfig::default();
+    let ep = EnergyParams::default();
+    let models = zoo::all(Scale::Paper);
+    let mean_zp: f64 = models
+        .iter()
+        .map(|g| wingan::energy::fig9_row(g, &cfg, &ep).saving_vs_zp())
+        .sum::<f64>()
+        / models.len() as f64;
+    let mean_td: f64 = models
+        .iter()
+        .map(|g| wingan::energy::fig9_row(g, &cfg, &ep).saving_vs_tdc())
+        .sum::<f64>()
+        / models.len() as f64;
+    // paper: 3.65x mean vs zero-padded, 1.74x vs TDC
+    assert!((mean_zp / 3.65 - 1.0).abs() < 0.25, "mean ZP saving {mean_zp}");
+    assert!((mean_td / 1.74 - 1.0).abs() < 0.25, "mean TDC saving {mean_td}");
+}
+
+#[test]
+fn table2_model_tracks_paper_within_tolerance() {
+    let cfg = AccelConfig::default();
+    let g = zoo::dcgan(Scale::Paper);
+    let ours = wingan::resource::report(&g, &cfg, Method::Winograd);
+    let base = wingan::resource::report(&g, &cfg, Method::Tdc);
+    let po = wingan::resource::PAPER_TABLE2_OURS;
+    let p14 = wingan::resource::PAPER_TABLE2_TDC;
+    let close = |m: usize, p: usize, tol: f64| (m as f64 - p as f64).abs() / p as f64 <= tol;
+    assert_eq!(ours.dsp48e, po.dsp48e);
+    assert_eq!(base.dsp48e, p14.dsp48e);
+    assert!(close(ours.bram18k, po.bram18k, 0.05));
+    assert!(close(base.bram18k, p14.bram18k, 0.05));
+    assert!(close(ours.lut, po.lut, 0.10));
+    assert!(close(ours.ff, po.ff, 0.10));
+    assert_eq!(base.lut, p14.lut);
+    assert_eq!(base.ff, p14.ff);
+}
+
+#[test]
+fn dse_selects_paper_tiling() {
+    let best = wingan::dse::optimal(&zoo::all(Scale::Paper), &wingan::dse::VIRTEX7_485T);
+    assert_eq!((best.t_m, best.t_n), (4, 128));
+    assert!(best.feasible);
+}
+
+#[test]
+fn functional_and_cycle_sims_agree_on_mult_counts() {
+    // the measured event counts of the functional simulator must equal the
+    // analytic counts the cycle/energy models consume — on a real
+    // (small-scale) DCGAN layer geometry
+    let g = zoo::dcgan(Scale::Small);
+    let l = g.layers[2]; // 32 -> 16 at 16x16 (small scale)
+    let mut rng = Rng::new(5);
+    let x = Tensor3::from_vec(l.c_in, l.h_in, l.w_in, rng.normal_vec(l.c_in * l.h_in * l.w_in));
+    let w = Filter4::from_vec(l.c_in, l.c_out, l.k, l.k, rng.normal_vec(l.c_in * l.c_out * l.k * l.k));
+    let run = run_winograd_deconv(&x, &w, l.s, l.p);
+    assert_eq!(run.events.mults, wingan::gan::workload::layer_mults(&l, Method::Winograd));
+    // and the dataflow computes the right answer on that geometry
+    let want = tdc::deconv_naive(&x, &w, l.s, l.p);
+    assert!(want.max_abs_diff(&run.y) < 1e-9);
+}
+
+#[test]
+fn energy_breakdown_consistent_with_totals() {
+    let cfg = AccelConfig::default();
+    let ep = EnergyParams::default();
+    for g in zoo::all(Scale::Paper) {
+        for m in Method::ALL {
+            let sim = simulate_model(&g, m, &cfg, true);
+            let b = energy_of(&sim, &g, &ep);
+            let sum = b.compute + b.onchip + b.offchip + b.rearrange;
+            assert!((b.total() - sum).abs() < 1e-15);
+            assert!(b.total() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn small_scale_zoo_matches_python_artifact_shapes() {
+    // python/compile/model.py zoo('small') must agree with rust Scale::Small
+    // — the manifest records python's shapes; here we check the rust side
+    // derives the same output geometry (64x64x3 generators).
+    for g in zoo::all(Scale::Small) {
+        let last = g.layers.last().unwrap();
+        assert_eq!((last.c_out, last.h_out(), last.w_out()), (3, 64, 64), "{}", g.name);
+    }
+    // channel scaling: /8 with floor 4
+    assert_eq!(zoo::dcgan(Scale::Small).layers[0].c_in, 1024 / 8);
+    assert_eq!(zoo::artgan(Scale::Small).layers[0].c_in, 512 / 8);
+}
+
+#[test]
+fn reports_render_and_contain_key_claims() {
+    let s = report::all_tables();
+    for needle in [
+        "DCGAN",
+        "ArtGAN",
+        "DiscoGAN",
+        "GP-GAN",
+        "ZP/Win",
+        "2560",       // Table II DSP row
+        "8.38x/2.85x", // paper claim cited in fig8 footer
+    ] {
+        assert!(s.contains(needle), "missing {needle:?} in:\n{s}");
+    }
+}
+
+#[test]
+fn cli_roundtrip_for_documented_commands() {
+    for cmd in [
+        "tables --fig8",
+        "sim --model dcgan --zero-skip",
+        "serve --model dcgan --requests 64 --rate 200 --max-wait-ms 20",
+        "verify --artifacts artifacts",
+    ] {
+        let args = Args::parse(cmd.split_whitespace().map(String::from)).unwrap();
+        assert!(args.subcommand.is_some(), "{cmd}");
+    }
+}
+
+#[test]
+fn table1_reproduces_kernel_classes() {
+    let t = report::table1();
+    assert!(t.contains("DCGAN"));
+    // K_D=5 S=2 K_C=3 row for DCGAN, 4/2/2 for the K4 models
+    assert!(t.contains('5'), "{t}");
+    let zoo_paper = zoo::all(Scale::Paper);
+    assert_eq!(zoo_paper.iter().map(|g| g.n_deconv()).collect::<Vec<_>>(), vec![4, 5, 4, 4]);
+}
+
+#[test]
+fn deconv_only_flag_consistency() {
+    // full-model sim includes the encoder and is strictly slower
+    let cfg = AccelConfig::default();
+    let g = zoo::discogan(Scale::Paper);
+    let dec = simulate_model(&g, Method::Winograd, &cfg, true);
+    let full = simulate_model(&g, Method::Winograd, &cfg, false);
+    assert!(full.t_total > dec.t_total);
+    assert_eq!(full.layers.len() - dec.layers.len(), g.n_conv());
+}

@@ -1,0 +1,354 @@
+//! Property-based tests over the algorithmic substrates (own `prop`
+//! harness; see rust/src/prop.rs). These pin the paper's core claims on
+//! randomized inputs:
+//!   * TDC DeConv == standard DeConv (Fig. 2)
+//!   * zero-padded DeConv == standard DeConv (Fig. 1b)
+//!   * the Winograd dataflow through line buffers == standard DeConv
+//!   * sparse engine's skipped work == the structural zero count
+//!   * the cycle model's invariants (monotonicity, bandwidth-boundedness)
+//!   * batcher conservation (no loss, no dup, FIFO)
+
+use std::time::{Duration, Instant};
+use wingan::accel::functional::{run_tdc_deconv, run_winograd_deconv};
+use wingan::accel::{simulate_layer, AccelConfig};
+use wingan::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use wingan::coordinator::request::GenRequest;
+use wingan::gan::workload::{layer_mults, Method};
+use wingan::gan::zoo::{Kind, Layer};
+use wingan::prop::forall;
+use wingan::tdc;
+use wingan::util::prng::Rng;
+use wingan::util::tensor::{Filter4, Tensor3};
+use wingan::winograd;
+
+/// Random deconv problem drawn from the paper's kernel classes plus a few
+/// off-paper (K, S) combos that still satisfy the TDC offset bound.
+#[derive(Debug)]
+struct DeconvCase {
+    x: Tensor3,
+    w: Filter4,
+    s: usize,
+    p: usize,
+}
+
+fn gen_case(rng: &mut Rng) -> DeconvCase {
+    let configs = [(5usize, 2usize), (4, 2), (3, 1), (6, 3), (2, 2), (6, 2)];
+    let (k, s) = configs[rng.below(configs.len())];
+    let p = tdc::default_padding(k, s);
+    let c_in = rng.int_in(1, 4);
+    let c_out = rng.int_in(1, 3);
+    let h = rng.int_in(1, 7);
+    let w = rng.int_in(1, 7);
+    DeconvCase {
+        x: Tensor3::from_vec(c_in, h, w, rng.normal_vec(c_in * h * w)),
+        w: Filter4::from_vec(c_in, c_out, k, k, rng.normal_vec(c_in * c_out * k * k)),
+        s,
+        p,
+    }
+}
+
+#[test]
+fn prop_tdc_equals_standard_deconv() {
+    forall("tdc == standard", 48, 0xA11CE, gen_case, |c| {
+        let want = tdc::deconv_naive(&c.x, &c.w, c.s, c.p);
+        let got = tdc::tdc_deconv(&c.x, &c.w, c.s, c.p);
+        let d = want.max_abs_diff(&got);
+        if d < 1e-10 {
+            Ok(())
+        } else {
+            Err(format!("max diff {d} for K={} S={}", c.w.kh, c.s))
+        }
+    });
+}
+
+#[test]
+fn prop_zero_padded_equals_standard_deconv() {
+    forall("zero-padded == standard", 48, 0xB0B, gen_case, |c| {
+        let want = tdc::deconv_naive(&c.x, &c.w, c.s, c.p);
+        let got = tdc::zero_padded_deconv(&c.x, &c.w, c.s, c.p);
+        let d = want.max_abs_diff(&got);
+        if d < 1e-10 {
+            Ok(())
+        } else {
+            Err(format!("max diff {d}"))
+        }
+    });
+}
+
+#[test]
+fn prop_winograd_dataflow_equals_standard_deconv() {
+    // the paper's headline equivalence, through the full line-buffered
+    // architecture simulation (only K_C <= 3 classes are Winograd-able)
+    forall(
+        "winograd dataflow == standard",
+        32,
+        0xF00D,
+        |rng| loop {
+            let c = gen_case(rng);
+            if tdc::kc(c.w.kh, c.s) <= 3 {
+                return c;
+            }
+        },
+        |c| {
+            let want = tdc::deconv_naive(&c.x, &c.w, c.s, c.p);
+            let got = run_winograd_deconv(&c.x, &c.w, c.s, c.p);
+            let d = want.max_abs_diff(&got.y);
+            if d < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("max diff {d} for K={} S={}", c.w.kh, c.s))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_engine_work_matches_structural_zero_count() {
+    forall(
+        "skipped mults == structural zeros",
+        32,
+        0x5EED,
+        |rng| loop {
+            let c = gen_case(rng);
+            // tile-aligned so the analytic count is exact
+            if tdc::kc(c.w.kh, c.s) <= 3 && c.x.h % 2 == 0 && c.x.w % 2 == 0 {
+                return c;
+            }
+        },
+        |c| {
+            let win = run_winograd_deconv(&c.x, &c.w, c.s, c.p);
+            let l = Layer {
+                kind: Kind::Deconv,
+                c_in: c.x.c,
+                c_out: c.w.c_out,
+                k: c.w.kh,
+                s: c.s,
+                p: c.p,
+                h_in: c.x.h,
+                w_in: c.x.w,
+            };
+            let want = layer_mults(&l, Method::Winograd);
+            if win.events.mults == want {
+                Ok(())
+            } else {
+                Err(format!("measured {} != analytic {}", win.events.mults, want))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_tdc_dataflow_equals_standard() {
+    forall("tdc dataflow == standard", 32, 0xCAFE, gen_case, |c| {
+        let want = tdc::deconv_naive(&c.x, &c.w, c.s, c.p);
+        let got = run_tdc_deconv(&c.x, &c.w, c.s, c.p);
+        let d = want.max_abs_diff(&got.y);
+        if d < 1e-10 {
+            Ok(())
+        } else {
+            Err(format!("max diff {d}"))
+        }
+    });
+}
+
+#[test]
+fn prop_winograd_transform_linearity() {
+    // G (a f + b g) G^T == a GfG^T + b GgG^T — the transform is linear, so
+    // transformed-weight reuse across channel tiles is sound
+    forall(
+        "filter transform linear",
+        64,
+        0x11EA,
+        |rng| {
+            let mut f = [[0.0; 3]; 3];
+            let mut g = [[0.0; 3]; 3];
+            for i in 0..3 {
+                for j in 0..3 {
+                    f[i][j] = rng.normal();
+                    g[i][j] = rng.normal();
+                }
+            }
+            (f, g, rng.normal(), rng.normal())
+        },
+        |&(f, g, a, b)| {
+            let mut fg = [[0.0; 3]; 3];
+            for i in 0..3 {
+                for j in 0..3 {
+                    fg[i][j] = a * f[i][j] + b * g[i][j];
+                }
+            }
+            let lhs = winograd::transforms::filter_transform(&fg);
+            let uf = winograd::transforms::filter_transform(&f);
+            let ug = winograd::transforms::filter_transform(&g);
+            for i in 0..4 {
+                for j in 0..4 {
+                    let rhs = a * uf[i][j] + b * ug[i][j];
+                    if (lhs[i][j] - rhs).abs() > 1e-9 {
+                        return Err(format!("nonlinear at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cycle_model_monotone_in_workload() {
+    forall(
+        "cycle time monotone in channels",
+        32,
+        0x7135,
+        |rng| {
+            let (k, s) = [(5usize, 2usize), (4, 2), (3, 1)][rng.below(3)];
+            Layer {
+                kind: Kind::Deconv,
+                c_in: rng.int_in(8, 256),
+                c_out: rng.int_in(8, 256),
+                k,
+                s,
+                p: tdc::default_padding(k, s),
+                h_in: rng.int_in(4, 32),
+                w_in: rng.int_in(4, 32),
+            }
+        },
+        |l| {
+            let cfg = AccelConfig::default();
+            for m in Method::ALL {
+                let base = simulate_layer(l, m, &cfg).t_total;
+                let mut big = *l;
+                big.c_in *= 2;
+                let t2 = simulate_layer(&big, m, &cfg).t_total;
+                if t2 < base {
+                    return Err(format!("{m:?}: doubling C_in reduced time"));
+                }
+                let mut wide = *l;
+                wide.w_in *= 2;
+                let t3 = simulate_layer(&wide, m, &cfg).t_total;
+                if t3 < base {
+                    return Err(format!("{m:?}: doubling W reduced time"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cycle_model_never_beats_both_bounds() {
+    // wall-clock >= max(compute-only, transfer-only) per layer
+    forall(
+        "t_total >= max(T_C, T_D)",
+        32,
+        0xB0047,
+        |rng| {
+            let (k, s) = [(5usize, 2usize), (4, 2), (3, 1)][rng.below(3)];
+            Layer {
+                kind: Kind::Deconv,
+                c_in: rng.int_in(8, 512),
+                c_out: rng.int_in(8, 512),
+                k,
+                s,
+                p: tdc::default_padding(k, s),
+                h_in: rng.int_in(4, 64),
+                w_in: rng.int_in(4, 64),
+            }
+        },
+        |l| {
+            let cfg = AccelConfig::default();
+            for m in Method::ALL {
+                let sim = simulate_layer(l, m, &cfg);
+                let bound = sim.t_compute.max(sim.t_transfer);
+                if sim.t_total + 1e-12 < bound {
+                    return Err(format!(
+                        "{m:?}: total {} < max(compute {}, transfer {})",
+                        sim.t_total, sim.t_compute, sim.t_transfer
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_conserves_requests_in_fifo_order() {
+    forall(
+        "batcher conservation + FIFO",
+        48,
+        0xBA7C4,
+        |rng| {
+            let n = rng.int_in(1, 64);
+            let buckets = match rng.below(3) {
+                0 => vec![1, 4, 8],
+                1 => vec![2, 16],
+                _ => vec![1],
+            };
+            (n, buckets)
+        },
+        |(n, buckets)| {
+            let mut b = DynamicBatcher::new(BatchPolicy::new(
+                buckets.clone(),
+                Duration::from_millis(1),
+            ));
+            let t = Instant::now();
+            let mut out = Vec::new();
+            for i in 0..*n as u64 {
+                b.push(GenRequest {
+                    id: i,
+                    model: "m".into(),
+                    method: "w".into(),
+                    input: Vec::new(),
+                    enqueued: t,
+                });
+                while let Some(batch) = b.poll(t) {
+                    if batch.requests.len() > batch.bucket {
+                        return Err("batch exceeds bucket".into());
+                    }
+                    out.extend(batch.requests.iter().map(|r| r.id));
+                }
+            }
+            while let Some(batch) = b.flush() {
+                out.extend(batch.requests.iter().map(|r| r.id));
+            }
+            if out != (0..*n as u64).collect::<Vec<_>>() {
+                return Err(format!("ids out of order or lost: {out:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use wingan::util::json::{self, Json};
+    forall(
+        "json roundtrip",
+        64,
+        0x15031,
+        |rng| gen_json(rng, 3),
+        |v| {
+            let text = json::to_string_pretty(v);
+            match json::parse(&text) {
+                Ok(back) if &back == v => Ok(()),
+                Ok(back) => Err(format!("roundtrip changed value: {back:?}")),
+                Err(e) => Err(format!("reparse failed: {e}")),
+            }
+        },
+    );
+
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 100.0).round()),
+            3 => Json::Str(format!("s{}-\"quoted\"\n", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+}

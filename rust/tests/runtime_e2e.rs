@@ -1,0 +1,158 @@
+//! End-to-end tests over the PJRT runtime + serving coordinator using the
+//! real AOT artifacts. Requires `make artifacts` to have run; tests skip
+//! (with a loud message) when the manifest is absent so plain `cargo test`
+//! works on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+use wingan::coordinator::{Coordinator, ServeConfig};
+use wingan::runtime::{Manifest, Runtime};
+use wingan::util::bin;
+use wingan::util::prng::Rng;
+
+const TOL: f32 = 2e-4;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    // tests run from the crate root
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p.to_path_buf())
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn layer_artifacts_match_jax_goldens() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    for e in m.entries.iter().filter(|e| e.kind == "layer") {
+        rt.load(e).unwrap();
+        let diff = rt.verify_golden(&e.name).unwrap();
+        assert!(diff < TOL, "{}: max|Δ| {diff}", e.name);
+    }
+}
+
+#[test]
+fn generator_artifacts_match_jax_goldens_b1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    for e in m.entries.iter().filter(|e| e.kind == "generator" && e.batch == 1) {
+        rt.load(e).unwrap();
+        let diff = rt.verify_golden(&e.name).unwrap();
+        assert!(diff < TOL, "{}: max|Δ| {diff}", e.name);
+    }
+}
+
+#[test]
+fn winograd_and_tdc_artifacts_compute_same_function() {
+    // the paper's equivalence claim at the whole-generator level, executed
+    // by the rust runtime on fresh random inputs
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    let win = m.find("dcgan_b1").unwrap().clone();
+    let tdc = m.find("dcgan_tdc_b1").unwrap().clone();
+    rt.load(&win).unwrap();
+    rt.load(&tdc).unwrap();
+    let mut rng = Rng::new(99);
+    for _ in 0..3 {
+        let x = rng.normal_vec_f32(win.input_len());
+        let a = rt.execute("dcgan_b1", &x).unwrap();
+        let b = rt.execute("dcgan_tdc_b1", &x).unwrap();
+        let diff = bin::max_abs_diff(&a, &b);
+        assert!(diff < 2e-3, "winograd vs tdc generator outputs differ: {diff}");
+    }
+}
+
+#[test]
+fn runtime_rejects_bad_input_length() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    let e = m.find("deconv_k5s2").unwrap().clone();
+    rt.load(&e).unwrap();
+    assert!(rt.execute("deconv_k5s2", &[0.0; 3]).is_err());
+    assert!(rt.execute("not_loaded", &[0.0; 3]).is_err());
+}
+
+#[test]
+fn batched_execution_is_consistent_with_single() {
+    // executing [x; 4] through the b4 bucket must reproduce the b1 outputs
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    let b1 = m.find("dcgan_b1").unwrap().clone();
+    let b4 = m.find("dcgan_b4").unwrap().clone();
+    rt.load(&b1).unwrap();
+    rt.load(&b4).unwrap();
+    let mut rng = Rng::new(7);
+    let sample = rng.normal_vec_f32(b1.input_len());
+    let single = rt.execute("dcgan_b1", &sample).unwrap();
+    let mut batched_in = Vec::new();
+    for _ in 0..4 {
+        batched_in.extend_from_slice(&sample);
+    }
+    let batched = rt.execute("dcgan_b4", &batched_in).unwrap();
+    let n = single.len();
+    for i in 0..4 {
+        let diff = bin::max_abs_diff(&batched[i * n..(i + 1) * n], &single);
+        assert!(diff < 1e-4, "batch lane {i} diverges: {diff}");
+    }
+}
+
+#[test]
+fn coordinator_serves_and_matches_direct_execution() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+
+    // direct execution for reference
+    let mut rt = Runtime::new().unwrap();
+    let b1 = manifest.find("dcgan_b1").unwrap().clone();
+    rt.load(&b1).unwrap();
+    let mut rng = Rng::new(21);
+    let inputs: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec_f32(b1.input_len())).collect();
+    let reference: Vec<Vec<f32>> =
+        inputs.iter().map(|x| rt.execute("dcgan_b1", x).unwrap()).collect();
+    drop(rt);
+
+    // serve the same inputs through the coordinator (batching allowed)
+    let coord = Coordinator::start(
+        manifest,
+        ServeConfig {
+            max_wait: Duration::from_millis(2),
+            preload_models: Some(vec!["dcgan".into()]),
+        },
+    )
+    .unwrap();
+    let pending: Vec<_> = inputs
+        .iter()
+        .map(|x| coord.submit("dcgan", "winograd", x.clone()).unwrap())
+        .collect();
+    for (rx, want) in pending.into_iter().zip(&reference) {
+        let resp = rx.recv().unwrap().unwrap();
+        let diff = bin::max_abs_diff(&resp.output, want);
+        assert!(diff < 1e-4, "served output diverges from direct execution: {diff}");
+    }
+    let metrics = coord.metrics();
+    assert_eq!(metrics.responses, 6);
+    assert!(metrics.batches >= 1);
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_rejects_invalid_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let coord = Coordinator::start(
+        manifest,
+        ServeConfig { max_wait: Duration::from_millis(1), preload_models: Some(vec![]) },
+    )
+    .unwrap();
+    assert!(coord.submit("nope", "winograd", vec![0.0; 4]).is_err());
+    assert!(coord.submit("dcgan", "winograd", vec![0.0; 3]).is_err());
+    coord.shutdown();
+}
