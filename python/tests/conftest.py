@@ -1,0 +1,28 @@
+"""Collection gate for offline environments.
+
+The JAX/Pallas kernel tests need ``jax`` and ``hypothesis``; the build
+container used for the rust tier-1 gate has neither. Skip collecting the
+jax-backed modules when the imports are missing so ``python -m pytest
+python/tests -q`` passes everywhere — ``test_ref_numpy.py`` (pure numpy)
+always runs and keeps the oracle layer pinned.
+"""
+
+import importlib.util
+import os
+import sys
+
+# make `compile.*` importable when pytest is run from the repo root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+_HAVE_JAX = importlib.util.find_spec("jax") is not None
+_HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+collect_ignore = []
+if not (_HAVE_JAX and _HAVE_HYPOTHESIS):
+    collect_ignore = [
+        "test_model.py",
+        "test_sparsity.py",
+        "test_tdc.py",
+        "test_winograd.py",
+        "test_winograd_deconv.py",
+    ]

@@ -1,0 +1,106 @@
+"""Pure-numpy oracle tests — no jax, no hypothesis, always collected.
+
+These mirror the rust golden-vector suite (rust/tests/golden_winograd.rs)
+value for value, so the python oracle and the rust substrates are pinned to
+the same hard-coded constants from both sides of the language boundary.
+"""
+
+import numpy as np
+
+from compile.kernels import ref
+
+
+def _rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+PAPER_CLASSES = [(5, 2, 2), (4, 2, 1), (3, 1, 1)]
+
+
+def test_tdc_equals_naive_all_paper_classes():
+    rng = _rng()
+    for k, s, p in PAPER_CLASSES:
+        x = rng.standard_normal((3, 5, 7))
+        w = rng.standard_normal((3, 2, k, k))
+        want = ref.deconv_naive(x, w, s, p)
+        np.testing.assert_allclose(ref.tdc_deconv(x, w, s, p), want, atol=1e-12)
+
+
+def test_zero_padded_equals_naive():
+    rng = _rng()
+    for k, s, p in PAPER_CLASSES:
+        x = rng.standard_normal((2, 4, 6))
+        w = rng.standard_normal((2, 3, k, k))
+        want = ref.deconv_naive(x, w, s, p)
+        np.testing.assert_allclose(ref.zero_padded_deconv(x, w, s, p), want, atol=1e-12)
+
+
+def test_winograd_tdc_deconv_equals_naive():
+    rng = _rng()
+    for k, s, p in PAPER_CLASSES:
+        x = rng.standard_normal((2, 6, 8))
+        w = rng.standard_normal((2, 2, k, k))
+        want = ref.deconv_naive(x, w, s, p)
+        np.testing.assert_allclose(ref.winograd_tdc_deconv(x, w, s, p), want, atol=1e-9)
+
+
+def test_filter_transform_golden_matches_rust_suite():
+    # same golden as rust/tests/golden_winograd.rs::f23_filter_transform_golden
+    f = np.arange(1.0, 10.0).reshape(1, 1, 3, 3)
+    u = ref.winograd_filter_transform(f)[0, 0]
+    want = np.array(
+        [
+            [1.0, 3.0, 1.0, 3.0],
+            [6.0, 11.25, 3.75, 9.0],
+            [2.0, 3.75, 1.25, 3.0],
+            [7.0, 12.0, 4.0, 9.0],
+        ]
+    )
+    np.testing.assert_array_equal(u, want)
+
+
+def test_input_transform_golden_matches_rust_suite():
+    z = np.arange(1.0, 17.0).reshape(4, 4)
+    v = ref.winograd_input_transform(z)
+    want = np.array(
+        [
+            [0.0, -16.0, 0.0, 0.0],
+            [-4.0, 34.0, 2.0, -4.0],
+            [0.0, 8.0, 0.0, 0.0],
+            [0.0, -16.0, 0.0, 0.0],
+        ]
+    )
+    np.testing.assert_array_equal(v, want)
+
+
+def test_full_pipeline_golden_matches_rust_suite():
+    z = np.arange(1.0, 17.0).reshape(4, 4)
+    f = np.arange(1.0, 10.0).reshape(3, 3)
+    u = ref.winograd_filter_transform(f.reshape(1, 1, 3, 3))[0, 0]
+    v = ref.winograd_input_transform(z)
+    y = ref.winograd_inverse_transform(u * v)
+    np.testing.assert_array_equal(y, np.array([[348.0, 393.0], [528.0, 573.0]]))
+
+
+def test_sparsity_pattern_counts():
+    assert int(ref.sparsity_pattern(3, 3).sum()) == 16
+    assert int(ref.sparsity_pattern(3, 2).sum()) == 12
+    assert int(ref.sparsity_pattern(2, 3).sum()) == 12
+    assert int(ref.sparsity_pattern(2, 2).sum()) == 9
+
+
+def test_winograd_nonzero_counts_match_paper_eq5():
+    assert ref.winograd_nonzero_count(5, 2, 2) == 49
+    assert ref.winograd_nonzero_count(4, 2, 1) == 36
+    assert ref.winograd_nonzero_count(3, 1, 1) == 16
+
+
+def test_phase_taps_match_rust_structure():
+    # K=5 S=2 P=2: phase 0 has 3 real taps at offset -1, phase 1 has 2 at 0
+    taps0, d0 = ref.tdc_phase_taps_1d(5, 2, 2, 0)
+    taps1, d1 = ref.tdc_phase_taps_1d(5, 2, 2, 1)
+    assert sum(t >= 0 for t in taps0) == 3 and d0 == -1
+    assert sum(t >= 0 for t in taps1) == 2 and d1 == 0
+    assert ref.tdc_kc(5, 2) == 3
+    assert ref.tdc_kc(4, 2) == 2
+    assert ref.default_padding(5, 2) == 2

@@ -9,6 +9,8 @@ use wingan::accel::{simulate_model, AccelConfig};
 use wingan::benchlib::{black_box, Bench};
 use wingan::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use wingan::coordinator::request::GenRequest;
+use wingan::engine::plan::seeded_weights;
+use wingan::engine::{Engine, Planner};
 use wingan::gan::workload::Method;
 use wingan::gan::zoo::{self, Scale};
 use wingan::tdc;
@@ -63,6 +65,43 @@ fn main() {
         black_box(run_winograd_deconv(&x, &w5, 2, 2).events.mults)
     });
 
+    // --- engine: precompiled plans + parallel tiles vs the seed path -----
+    // the seed served layers through run_winograd_deconv, which re-derives
+    // phase filters + G g G^T transforms + reordered layouts on EVERY call;
+    // the engine compiles a whole-model plan once and only executes.
+    let g_small = zoo::dcgan(Scale::Small);
+    let planner = Planner::default();
+    let plan = planner.compile_seeded(&g_small, 7);
+    let weights = seeded_weights(&g_small, 7);
+    let (ci0, h0, w0) = plan.input_shape;
+    let x0 = Tensor3::from_vec(ci0, h0, w0, rng.normal_vec(ci0 * h0 * w0));
+    b.run("engine: plan compile DCGAN-small (once per model)", || {
+        black_box(planner.compile_seeded(&g_small, 7).layers.len())
+    });
+    let e1 = Engine::with_workers(plan.clone(), 1);
+    let en = Engine::new(plan.clone());
+    let m_seed = b.run("seed path: DCGAN-small, per-call functional (re-derives)", || {
+        let mut cur = x0.clone();
+        for (l, w) in g_small.layers.iter().zip(&weights) {
+            cur = run_winograd_deconv(&cur, w, l.s, l.p).y;
+        }
+        black_box(cur.data.len())
+    });
+    let m_e1 = b.run("engine: DCGAN-small, precompiled plan, 1 worker", || {
+        black_box(e1.run(&x0).y.data.len())
+    });
+    let m_en = b.run(
+        &format!("engine: DCGAN-small, precompiled plan, {} workers", en.workers()),
+        || black_box(en.run(&x0).y.data.len()),
+    );
+    println!(
+        "  -> plan-cache win: {:.2}x (1 worker vs seed per-call)   parallel win: {:.2}x \
+         ({} workers vs seed per-call)",
+        m_seed.median() / m_e1.median(),
+        m_seed.median() / m_en.median(),
+        en.workers()
+    );
+
     // cycle simulator
     let cfg = AccelConfig::default();
     let models = zoo::all(Scale::Paper);
@@ -108,10 +147,11 @@ fn main() {
         });
     }
 
-    // PJRT execute path (only when artifacts are present)
-    match wingan::runtime::Manifest::load(std::path::Path::new("artifacts")) {
-        Ok(m) => {
-            let mut rt = wingan::runtime::Runtime::new().expect("pjrt client");
+    // PJRT execute path (only when artifacts AND the backend are present)
+    match wingan::runtime::Manifest::load(std::path::Path::new("artifacts"))
+        .and_then(|m| wingan::runtime::Runtime::new().map(|rt| (m, rt)))
+    {
+        Ok((m, mut rt)) => {
             let entry = m.find("deconv_k5s2").expect("layer artifact").clone();
             rt.load(&entry).expect("compile");
             let input = rng.normal_vec_f32(entry.input_len());

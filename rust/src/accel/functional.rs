@@ -17,13 +17,25 @@ use crate::winograd::layout::{engine_multiply, reorder_filter, ReorderedTile};
 use crate::winograd::transforms::{input_transform, inverse_transform, Tile4, M, N};
 
 /// Measured events from a functional run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Events {
     pub mults: u64,
     pub linebuf_reads: u64,
     pub linebuf_writes: u64,
     pub tiles: u64,
     pub stripes: u64,
+}
+
+impl Events {
+    /// Accumulate another event count into this one (used by the engine's
+    /// per-layer / per-worker aggregation).
+    pub fn merge(&mut self, other: &Events) {
+        self.mults += other.mults;
+        self.linebuf_reads += other.linebuf_reads;
+        self.linebuf_writes += other.linebuf_writes;
+        self.tiles += other.tiles;
+        self.stripes += other.stripes;
+    }
 }
 
 /// Result of simulating one DeConv layer functionally.
@@ -33,8 +45,11 @@ pub struct FunctionalRun {
     pub events: Events,
 }
 
-/// Phase-padded input view dimensions for tile-aligned Winograd.
-fn phase_padded(x: &Tensor3, ph: &PhaseFilter, ho_t: usize, wo_t: usize) -> Tensor3 {
+/// Phase-padded input view for tile-aligned Winograd: shift by the phase's
+/// TDC input offset and zero-pad to `(ho_t + R - 1) x (wo_t + R - 1)`.
+/// Shared with the precompiled-plan engine (`crate::engine`) so the two
+/// datapaths stay bit-identical by construction.
+pub fn phase_padded(x: &Tensor3, ph: &PhaseFilter, ho_t: usize, wo_t: usize) -> Tensor3 {
     let ly = (-ph.d0y) as usize;
     let lx = (-ph.d0x) as usize;
     let ry = (ho_t + crate::winograd::R - 1) - x.h - ly;

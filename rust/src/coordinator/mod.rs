@@ -1,7 +1,8 @@
-//! L3 coordinator: the serving layer around the PJRT runtime — request
-//! router, dynamic batcher packing into AOT batch buckets, a single-owner
-//! engine thread, and serving metrics (vLLM-router-style architecture
-//! scaled to this system).
+//! L3 coordinator: the serving layer — request router, dynamic batcher
+//! packing into batch buckets, a single-owner engine thread over a
+//! pluggable execution backend (native precompiled-plan engine or PJRT),
+//! and serving metrics (vLLM-router-style architecture scaled to this
+//! system).
 
 pub mod batcher;
 pub mod metrics;
@@ -13,4 +14,4 @@ pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use metrics::Metrics;
 pub use request::{GenRequest, GenResponse, ServeError};
 pub use router::Router;
-pub use server::{Coordinator, ServeConfig};
+pub use server::{Coordinator, ExecBackend, ServeConfig};

@@ -1,10 +1,16 @@
-//! The serving coordinator: an engine thread that owns the PJRT runtime
-//! and drains per-route dynamic batchers; callers talk to it through
-//! channels (`Coordinator::submit`). Python is never on this path.
+//! The serving coordinator: an engine thread that owns an execution
+//! backend and drains per-route dynamic batchers; callers talk to it
+//! through channels (`Coordinator::submit`). Python is never on this path.
 //!
 //! Shape:
-//!   caller -> mpsc -> engine thread [ batcher -> pack -> PJRT execute
+//!   caller -> mpsc -> engine thread [ batcher -> pack -> execute backend
 //!                                     -> unpack -> respond per-request ]
+//!
+//! Two backends implement the same [`ExecBackend`] contract:
+//! * **PJRT** ([`Coordinator::start`]) — AOT artifacts compiled and
+//!   executed via the `xla` runtime (gated off in offline builds);
+//! * **native** ([`Coordinator::start_native`]) — whole generators run
+//!   through precompiled [`crate::engine`] plans, no artifacts needed.
 //!
 //! The engine blocks on the request channel with a timeout equal to the
 //! nearest batcher deadline, so partial batches ship on time without a
@@ -14,6 +20,7 @@ use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, ReadyBatch};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{GenRequest, GenResponse, RequestId, ServeError};
 use crate::coordinator::router::Router;
+use crate::engine::serve::{native_manifest, NativeConfig, NativeRuntime};
 use crate::runtime::{Manifest, Runtime};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -21,6 +28,24 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// What the engine thread needs from an execution backend: run one packed
+/// batch buffer against a named route artifact.
+pub trait ExecBackend {
+    fn execute_artifact(&self, name: &str, input: &[f32]) -> std::result::Result<Vec<f32>, String>;
+}
+
+impl ExecBackend for Runtime {
+    fn execute_artifact(&self, name: &str, input: &[f32]) -> std::result::Result<Vec<f32>, String> {
+        self.execute(name, input).map_err(|e| format!("{e:#}"))
+    }
+}
+
+impl ExecBackend for NativeRuntime {
+    fn execute_artifact(&self, name: &str, input: &[f32]) -> std::result::Result<Vec<f32>, String> {
+        self.execute(name, input)
+    }
+}
 
 type Reply = Sender<Result<GenResponse, ServeError>>;
 
@@ -106,6 +131,55 @@ impl Coordinator {
         })
     }
 
+    /// Start the engine thread on the native execution backend: every
+    /// route's [`crate::engine`] plan is compiled before the coordinator
+    /// reports ready, then generation requests batch and execute through
+    /// the precompiled plans — no PJRT, no artifacts on disk.
+    ///
+    /// `cfg.preload_models`, when set, restricts which zoo models get
+    /// compiled (same semantics as the PJRT path).
+    pub fn start_native(mut native: NativeConfig, cfg: ServeConfig) -> Result<Coordinator> {
+        if let Some(models) = &cfg.preload_models {
+            native.models = Some(models.clone());
+        }
+        let manifest = native_manifest(&native);
+        anyhow::ensure!(
+            !manifest.entries.is_empty(),
+            "native backend: no routes to serve (model filter {:?})",
+            native.models
+        );
+        let router = Router::from_manifest(&manifest);
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+
+        let engine_router = router.clone();
+        let engine_metrics = metrics.clone();
+        let engine_cfg = cfg.clone();
+        let handle = std::thread::Builder::new()
+            .name("wingan-engine".into())
+            .spawn(move || {
+                // plan compilation happens here, once, before ready — the
+                // request path only ever executes precompiled plans
+                let runtime = NativeRuntime::build(&native);
+                let _ = ready_tx.send(Ok(()));
+                engine_loop(runtime, engine_router, engine_metrics, engine_cfg, rx)
+            })
+            .expect("spawn engine");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))?
+            .map_err(|e| anyhow::anyhow!("engine startup failed: {e}"))?;
+
+        Ok(Coordinator {
+            tx,
+            next_id: AtomicU64::new(1),
+            metrics,
+            router,
+            handle: Some(handle),
+        })
+    }
+
     pub fn router(&self) -> &Router {
         &self.router
     }
@@ -171,8 +245,8 @@ struct RouteState {
     replies: HashMap<RequestId, Reply>,
 }
 
-fn engine_loop(
-    runtime: Runtime,
+fn engine_loop<E: ExecBackend>(
+    runtime: E,
     router: Router,
     metrics: Arc<Mutex<Metrics>>,
     cfg: ServeConfig,
@@ -237,8 +311,8 @@ fn engine_loop(
     }
 }
 
-fn run_batch(
-    runtime: &Runtime,
+fn run_batch<E: ExecBackend>(
+    runtime: &E,
     router: &Router,
     metrics: &Arc<Mutex<Metrics>>,
     key: &(String, String),
@@ -261,7 +335,7 @@ fn run_batch(
     }
 
     let t0 = Instant::now();
-    let out = runtime.execute(artifact, &input);
+    let out = runtime.execute_artifact(artifact, &input);
     let exec_time = t0.elapsed();
 
     match out {

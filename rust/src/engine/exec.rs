@@ -1,0 +1,438 @@
+//! Whole-generator execution of precompiled plans (the "execute" half of
+//! the plan-compile / execute split).
+//!
+//! The [`Engine`] walks a [`ModelPlan`] layer by layer, handing each
+//! layer's activation tensor to the next, and parallelises every layer
+//! across output stripes (tile rows on the Winograd datapath, output rows
+//! on the TDC/conv datapaths) on a scoped worker pool. Each output pixel is
+//! produced by exactly one worker with a fixed accumulation order, so the
+//! result is **bitwise independent of the worker count**, and the TDC
+//! datapath is **bit-identical (f64) to the layer-composed standard-DeConv
+//! reference** ([`crate::engine::reference_forward`]).
+//!
+//! Event accounting mirrors `accel::functional` exactly: for a deconv layer
+//! the engine's per-layer [`Events`] equal what `run_winograd_deconv` /
+//! `run_tdc_deconv` would have measured through the line-buffered dataflow
+//! (the tests pin this), without paying the per-call re-derivation the seed
+//! simulator did.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::accel::functional::Events;
+use crate::engine::plan::{LayerPlan, ModelPlan};
+use crate::engine::pool::{default_workers, run_chunked};
+use crate::gan::workload::Method;
+use crate::gan::zoo::Kind;
+use crate::tdc;
+use crate::util::tensor::Tensor3;
+use crate::winograd::layout::{engine_multiply, ReorderedTile};
+use crate::winograd::transforms::{input_transform, inverse_transform, Tile4, M, N};
+
+/// Result of running one model through the engine.
+#[derive(Debug)]
+pub struct EngineRun {
+    pub y: Tensor3,
+    /// measured events per layer, in layer order
+    pub per_layer: Vec<Events>,
+    /// aggregate over all layers
+    pub events: Events,
+    /// wall-clock execution time for this run
+    pub elapsed: Duration,
+}
+
+/// Executes precompiled [`ModelPlan`]s with stripe-level parallelism.
+#[derive(Clone, Debug)]
+pub struct Engine {
+    plan: Arc<ModelPlan>,
+    workers: usize,
+}
+
+impl Engine {
+    /// One worker per available core.
+    pub fn new(plan: ModelPlan) -> Engine {
+        Engine::with_workers(plan, default_workers())
+    }
+
+    pub fn with_workers(plan: ModelPlan, workers: usize) -> Engine {
+        Engine { plan: Arc::new(plan), workers: workers.max(1) }
+    }
+
+    pub fn plan(&self) -> &ModelPlan {
+        &self.plan
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run the whole generator on one input activation tensor.
+    pub fn run(&self, x: &Tensor3) -> EngineRun {
+        let t0 = Instant::now();
+        assert_eq!(
+            (x.c, x.h, x.w),
+            self.plan.input_shape,
+            "engine input shape mismatch for {}",
+            self.plan.model
+        );
+        let mut cur = x.clone();
+        let mut per_layer = Vec::with_capacity(self.plan.layers.len());
+        let mut total = Events::default();
+        for lp in &self.plan.layers {
+            let (y, ev) = self.run_layer(lp, &cur);
+            total.merge(&ev);
+            per_layer.push(ev);
+            cur = y;
+        }
+        EngineRun { y: cur, per_layer, events: total, elapsed: t0.elapsed() }
+    }
+
+    /// Run a batch of samples sequentially (each sample parallel inside).
+    pub fn run_batch(&self, xs: &[Tensor3]) -> Vec<EngineRun> {
+        xs.iter().map(|x| self.run(x)).collect()
+    }
+
+    fn run_layer(&self, lp: &LayerPlan, x: &Tensor3) -> (Tensor3, Events) {
+        match lp.layer.kind {
+            Kind::Conv => self.run_conv(lp, x),
+            Kind::Deconv => match lp.method {
+                Method::Winograd => self.run_deconv_winograd(lp, x),
+                _ => self.run_deconv_tdc(lp, x),
+            },
+        }
+    }
+
+    /// TDC datapath: S² phase correlations over phase-padded inputs.
+    /// Per-pixel accumulation order matches `tdc::correlate_valid`, so the
+    /// output is bit-identical to `tdc::tdc_deconv` regardless of workers.
+    fn run_deconv_tdc(&self, lp: &LayerPlan, x: &Tensor3) -> (Tensor3, Events) {
+        let l = &lp.layer;
+        let (s, kc) = (l.s, lp.kc);
+        let mut y = Tensor3::zeros(l.c_out, s * x.h, s * x.w);
+        let mut ev = Events::default();
+        for (idx, ph) in lp.phases.iter().enumerate() {
+            let (py, px) = (idx / s, idx % s);
+            let xp = tdc::phase_pad(x, ph.d0y, ph.d0x, kc);
+            let chunks = run_chunked(self.workers, x.h, |oy_s, oy_e| {
+                let mut part = Tensor3::zeros(l.c_out, oy_e - oy_s, x.w);
+                let mut pev = Events::default();
+                for co in 0..l.c_out {
+                    for oy in oy_s..oy_e {
+                        for ox in 0..x.w {
+                            let mut acc = 0.0;
+                            for ci in 0..xp.c {
+                                for ky in 0..kc {
+                                    for kx in 0..kc {
+                                        acc += xp.at(ci, oy + ky, ox + kx)
+                                            * ph.g.at(ci, co, ky, kx);
+                                    }
+                                }
+                            }
+                            *part.at_mut(co, oy - oy_s, ox) = acc;
+                        }
+                    }
+                }
+                pev.mults += (l.c_out * (oy_e - oy_s) * x.w * xp.c * kc * kc) as u64;
+                pev.stripes += (oy_e - oy_s) as u64;
+                (part, pev)
+            });
+            let mut oy_base = 0;
+            for (part, pev) in chunks {
+                for co in 0..l.c_out {
+                    for r in 0..part.h {
+                        let oy = oy_base + r;
+                        for ox in 0..x.w {
+                            *y.at_mut(co, s * oy + py, s * ox + px) = part.at(co, r, ox);
+                        }
+                    }
+                }
+                oy_base += part.h;
+                ev.merge(&pev);
+            }
+            // line-buffer model (matches accel::functional::run_tdc_deconv):
+            // every issued multiply reads one buffered activation word, and
+            // the buffer ingests kc prologue rows + one row per stripe
+            ev.linebuf_reads += (l.c_out * x.h * x.w * xp.c * kc * kc) as u64;
+            ev.linebuf_writes += ((x.h + kc - 1) * xp.c * xp.w) as u64;
+        }
+        (y, ev)
+    }
+
+    /// Winograd datapath: precompiled reordered filters, pre-PE transform,
+    /// com-PE sparse multiply over live rows only, post-PE inverse
+    /// transform, phase interleave. Numerically identical to
+    /// `accel::functional::run_winograd_deconv` (same kernels, same order).
+    fn run_deconv_winograd(&self, lp: &LayerPlan, x: &Tensor3) -> (Tensor3, Events) {
+        let l = &lp.layer;
+        let s = l.s;
+        let mut y = Tensor3::zeros(l.c_out, s * x.h, s * x.w);
+        let mut ev = Events::default();
+
+        let ho_t = x.h.div_ceil(M) * M;
+        let wo_t = x.w.div_ceil(M) * M;
+        let tiles_h = ho_t / M;
+        let tiles_w = wo_t / M;
+
+        for (idx, rf) in lp.reordered.iter().enumerate() {
+            let ph = &lp.phases[idx];
+            let (py, px) = (idx / s, idx % s);
+            // same phase-padded, tile-aligned view the functional simulator
+            // reads through its line buffers — shared helper keeps the two
+            // datapaths bit-identical by construction
+            let xp = crate::accel::functional::phase_padded(x, ph, ho_t, wo_t);
+
+            let chunks = run_chunked(self.workers, tiles_h, |ty_s, ty_e| {
+                let mut part = Tensor3::zeros(l.c_out, M * (ty_e - ty_s), wo_t);
+                let mut pev = Events::default();
+                let mut v = vec![0.0; (N * N) * xp.c];
+                for ty in ty_s..ty_e {
+                    pev.stripes += 1;
+                    for tx in 0..tiles_w {
+                        pev.tiles += 1;
+                        // pre-PE: window select + B^T Z B + n² x N reorder
+                        for ci in 0..xp.c {
+                            let mut z: Tile4 = [[0.0; N]; N];
+                            for (i, row) in z.iter_mut().enumerate() {
+                                for (j, val) in row.iter_mut().enumerate() {
+                                    *val = xp.at(ci, M * ty + i, M * tx + j);
+                                }
+                            }
+                            let vt = input_transform(&z);
+                            for i in 0..N {
+                                for j in 0..N {
+                                    v[(i * N + j) * xp.c + ci] = vt[i][j];
+                                }
+                            }
+                        }
+                        pev.linebuf_reads += (N * N * xp.c) as u64;
+                        let vt = ReorderedTile { c_in: xp.c, v: std::mem::take(&mut v) };
+                        // com-PE: live rows only
+                        let (m_acc, mults) = engine_multiply(rf, &vt);
+                        v = vt.v;
+                        pev.mults += mults as u64;
+                        // post-PE: inverse transform into the local stripe
+                        for co in 0..l.c_out {
+                            let yt = inverse_transform(&m_acc[co]);
+                            for (a, row) in yt.iter().enumerate() {
+                                for (b, val) in row.iter().enumerate() {
+                                    *part.at_mut(co, M * (ty - ty_s) + a, M * tx + b) = *val;
+                                }
+                            }
+                        }
+                    }
+                }
+                (part, pev)
+            });
+            let mut ty_base = 0;
+            for (part, pev) in chunks {
+                let rows = part.h / M;
+                for co in 0..l.c_out {
+                    for r in 0..part.h {
+                        let oy = M * ty_base + r;
+                        if oy >= x.h {
+                            continue;
+                        }
+                        for ox in 0..x.w {
+                            *y.at_mut(co, s * oy + py, s * ox + px) = part.at(co, r, ox);
+                        }
+                    }
+                }
+                ty_base += rows;
+                ev.merge(&pev);
+            }
+            // line-buffer ingest (matches run_winograd_deconv): n prologue
+            // rows + m rows per stripe of the phase-padded map
+            ev.linebuf_writes += ((ho_t - M + N) * xp.c * xp.w) as u64;
+        }
+        (y, ev)
+    }
+
+    /// Spatial conv datapath (DiscoGAN's encoder): strided valid
+    /// correlation over the border-padded input; accumulation order matches
+    /// `tdc::conv2d` bit for bit.
+    fn run_conv(&self, lp: &LayerPlan, x: &Tensor3) -> (Tensor3, Events) {
+        let l = &lp.layer;
+        let (k, s, p) = (l.k, l.s, l.p);
+        // same output geometry as the tdc::conv2d reference (coincides with
+        // Layer::h_out()/w_out() for every zoo encoder layer)
+        let (ho, wo) = ((x.h + 2 * p - k) / s + 1, (x.w + 2 * p - k) / s + 1);
+        let xp = x.pad(p, p, p, p);
+        let g = &lp.weights;
+        let chunks = run_chunked(self.workers, ho, |oy_s, oy_e| {
+            let mut part = Tensor3::zeros(l.c_out, oy_e - oy_s, wo);
+            let mut pev = Events::default();
+            for co in 0..l.c_out {
+                for oy in oy_s..oy_e {
+                    for ox in 0..wo {
+                        let mut acc = 0.0;
+                        for ci in 0..xp.c {
+                            for ky in 0..k {
+                                for kx in 0..k {
+                                    acc += xp.at(ci, s * oy + ky, s * ox + kx)
+                                        * g.at(ci, co, ky, kx);
+                                }
+                            }
+                        }
+                        *part.at_mut(co, oy - oy_s, ox) = acc;
+                    }
+                }
+            }
+            pev.mults += (l.c_out * (oy_e - oy_s) * wo * xp.c * k * k) as u64;
+            pev.stripes += (oy_e - oy_s) as u64;
+            (part, pev)
+        });
+        let mut y = Tensor3::zeros(l.c_out, ho, wo);
+        let mut ev = Events::default();
+        let mut oy_base = 0;
+        for (part, pev) in chunks {
+            for co in 0..l.c_out {
+                for r in 0..part.h {
+                    for ox in 0..wo {
+                        *y.at_mut(co, oy_base + r, ox) = part.at(co, r, ox);
+                    }
+                }
+            }
+            oy_base += part.h;
+            ev.merge(&pev);
+        }
+        ev.linebuf_reads += ev.mults;
+        ev.linebuf_writes += ((s * (ho - 1) + k).min(xp.h) * xp.c * xp.w) as u64;
+        (y, ev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::functional::{run_tdc_deconv, run_winograd_deconv};
+    use crate::engine::plan::{PlanOptions, Planner, Select};
+    use crate::engine::reference_forward;
+    use crate::gan::zoo::{self, Layer, Scale};
+    use crate::util::prng::Rng;
+    use crate::util::tensor::Filter4;
+
+    fn rand3(rng: &mut Rng, c: usize, h: usize, w: usize) -> Tensor3 {
+        Tensor3::from_vec(c, h, w, rng.normal_vec(c * h * w))
+    }
+
+    #[test]
+    fn tdc_plan_bit_identical_to_reference_any_worker_count() {
+        let mut rng = Rng::new(900);
+        let g = zoo::dcgan(Scale::Tiny);
+        let planner = Planner::new(PlanOptions {
+            select: Select::Force(Method::Tdc),
+            ..Default::default()
+        });
+        let plan = planner.compile_seeded(&g, 11);
+        let x = rand3(&mut rng, plan.input_shape.0, plan.input_shape.1, plan.input_shape.2);
+        let want = reference_forward(&plan, &x);
+        for workers in [1, 2, 5] {
+            let engine = Engine::with_workers(plan.clone(), workers);
+            let run = engine.run(&x);
+            assert_eq!(
+                run.y.max_abs_diff(&want),
+                0.0,
+                "workers={workers}: engine must be bit-identical to the reference"
+            );
+        }
+    }
+
+    #[test]
+    fn winograd_layer_events_match_functional_simulator() {
+        // one planned layer must report exactly the events the seed's
+        // per-call functional simulator measures through its line buffers
+        let mut rng = Rng::new(901);
+        for &(k, s, c_in, c_out, h, w) in
+            &[(5usize, 2usize, 3usize, 2usize, 6usize, 8usize), (4, 2, 2, 3, 5, 7)]
+        {
+            let p = tdc::default_padding(k, s);
+            let l = Layer { kind: Kind::Deconv, c_in, c_out, k, s, p, h_in: h, w_in: w };
+            let wts =
+                Filter4::from_vec(c_in, c_out, k, k, rng.normal_vec(c_in * c_out * k * k));
+            let planner = Planner::new(PlanOptions {
+                select: Select::Force(Method::Winograd),
+                ..Default::default()
+            });
+            let lp = planner.compile_layer(&l, wts.clone());
+            let x = rand3(&mut rng, c_in, h, w);
+            let engine = Engine::with_workers(
+                ModelPlan {
+                    model: "one-layer".into(),
+                    input_shape: (c_in, h, w),
+                    output_shape: (c_out, s * h, s * w),
+                    layers: vec![lp],
+                },
+                2,
+            );
+            let run = engine.run(&x);
+            let func = run_winograd_deconv(&x, &wts, s, p);
+            assert_eq!(run.y.max_abs_diff(&func.y), 0.0, "K={k}: same dataflow, same bits");
+            assert_eq!(run.events.mults, func.events.mults, "K={k}");
+            assert_eq!(run.events.tiles, func.events.tiles, "K={k}");
+            assert_eq!(run.events.stripes, func.events.stripes, "K={k}");
+            assert_eq!(run.events.linebuf_reads, func.events.linebuf_reads, "K={k}");
+            assert_eq!(run.events.linebuf_writes, func.events.linebuf_writes, "K={k}");
+        }
+    }
+
+    #[test]
+    fn tdc_layer_events_match_functional_simulator() {
+        let mut rng = Rng::new(902);
+        let (k, s, c_in, c_out, h, w) = (5usize, 2usize, 2usize, 3usize, 5usize, 7usize);
+        let p = tdc::default_padding(k, s);
+        let l = Layer { kind: Kind::Deconv, c_in, c_out, k, s, p, h_in: h, w_in: w };
+        let wts = Filter4::from_vec(c_in, c_out, k, k, rng.normal_vec(c_in * c_out * k * k));
+        let planner = Planner::new(PlanOptions {
+            select: Select::Force(Method::Tdc),
+            ..Default::default()
+        });
+        let lp = planner.compile_layer(&l, wts.clone());
+        let x = rand3(&mut rng, c_in, h, w);
+        let engine = Engine::with_workers(
+            ModelPlan {
+                model: "one-layer".into(),
+                input_shape: (c_in, h, w),
+                output_shape: (c_out, s * h, s * w),
+                layers: vec![lp],
+            },
+            3,
+        );
+        let run = engine.run(&x);
+        let func = run_tdc_deconv(&x, &wts, s, p);
+        assert_eq!(run.y.max_abs_diff(&func.y), 0.0);
+        assert_eq!(run.events.mults, func.events.mults);
+        assert_eq!(run.events.linebuf_reads, func.events.linebuf_reads);
+        assert_eq!(run.events.linebuf_writes, func.events.linebuf_writes);
+        assert_eq!(run.events.stripes, func.events.stripes);
+    }
+
+    #[test]
+    fn auto_plan_close_to_reference_and_worker_invariant() {
+        let mut rng = Rng::new(903);
+        let g = zoo::gpgan(Scale::Tiny);
+        let plan = Planner::default().compile_seeded(&g, 5);
+        assert!(plan.n_winograd_layers() > 0);
+        let x = rand3(&mut rng, plan.input_shape.0, plan.input_shape.1, plan.input_shape.2);
+        let want = reference_forward(&plan, &x);
+        let r1 = Engine::with_workers(plan.clone(), 1).run(&x);
+        let r4 = Engine::with_workers(plan, 4).run(&x);
+        // winograd arithmetic differs from the reference only in rounding
+        let scale = want.data.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1.0);
+        assert!(r1.y.max_abs_diff(&want) / scale < 1e-9);
+        // ... but across worker counts the engine is bit-stable
+        assert_eq!(r1.y.max_abs_diff(&r4.y), 0.0);
+        assert_eq!(r1.events.mults, r4.events.mults);
+    }
+
+    #[test]
+    fn conv_layers_run_and_chain() {
+        let mut rng = Rng::new(904);
+        let g = zoo::discogan(Scale::Tiny);
+        let plan = Planner::default().compile_seeded(&g, 5);
+        let x = rand3(&mut rng, plan.input_shape.0, plan.input_shape.1, plan.input_shape.2);
+        let run = Engine::with_workers(plan.clone(), 2).run(&x);
+        assert_eq!((run.y.c, run.y.h, run.y.w), plan.output_shape);
+        assert_eq!(run.per_layer.len(), g.layers.len());
+        assert!(run.per_layer.iter().all(|e| e.mults > 0));
+    }
+}

@@ -1,0 +1,55 @@
+//! End-to-end generator engine: ahead-of-time plan compilation + parallel
+//! whole-model execution (the system's native, PJRT-free serving backend).
+//!
+//! The seed's functional simulator executed one DeConv layer at a time and
+//! re-derived phase filters, Winograd filter transforms and reordered
+//! layouts on every call. This subsystem splits that work the way the
+//! paper's methodology (and the TDC/fast-algorithm literature) dictates:
+//!
+//! * **Compile once** ([`plan`]): a [`Planner`] lowers a `gan::zoo` model
+//!   into per-layer [`LayerPlan`]s — TDC phase decomposition, Winograd
+//!   `G g Gᵀ` filter transforms with vector-level sparsity reordering,
+//!   per-layer method selection raced through the `dse` cycle model, and
+//!   fixed line-buffer geometry.
+//! * **Execute many** ([`exec`]): an [`Engine`] chains the whole generator
+//!   with activation hand-off between layers, stripe/tile parallelism on a
+//!   scoped worker pool ([`pool`]), and per-layer [`Events`] aggregation
+//!   that matches the seed's line-buffered functional simulator exactly.
+//! * **Serve** ([`serve`]): a [`NativeRuntime`] exposing compiled engines
+//!   behind the coordinator's artifact-manifest contract, so generation
+//!   requests batch and execute through precompiled plans.
+//!
+//! Numerics contract: plans forced to the TDC method are **bit-identical
+//! (f64)** to [`reference_forward`], the layer-by-layer composition of the
+//! `tdc` standard-DeConv reference; Winograd-method plans agree with it to
+//! rounding (≈1e-12 relative) and are bitwise-stable across worker counts.
+//!
+//! [`Events`]: crate::accel::functional::Events
+
+pub mod exec;
+pub mod plan;
+pub mod pool;
+pub mod serve;
+
+pub use exec::{Engine, EngineRun};
+pub use plan::{LayerPlan, ModelPlan, PlanOptions, Planner, Select};
+pub use serve::{model_id, native_manifest, NativeConfig, NativeRuntime};
+
+use crate::gan::zoo::Kind;
+use crate::tdc;
+use crate::util::tensor::Tensor3;
+
+/// The layer-composed standard-DeConv reference: every deconv layer through
+/// `tdc::tdc_deconv`, every conv layer through `tdc::conv2d`, chained in
+/// plan order. This is the ground truth the engine is pinned against.
+pub fn reference_forward(plan: &ModelPlan, x: &Tensor3) -> Tensor3 {
+    let mut cur = x.clone();
+    for lp in &plan.layers {
+        let l = &lp.layer;
+        cur = match l.kind {
+            Kind::Deconv => tdc::tdc_deconv(&cur, &lp.weights, l.s, l.p),
+            Kind::Conv => tdc::conv2d(&cur, &lp.weights, l.s, l.p),
+        };
+    }
+    cur
+}

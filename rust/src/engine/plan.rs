@@ -1,0 +1,308 @@
+//! Ahead-of-time plan compilation (the "compile" half of the
+//! plan-compile / execute split).
+//!
+//! A [`Planner`] turns a [`Gan`] description plus concrete weights into a
+//! [`ModelPlan`]: per layer, everything the seed's per-call functional
+//! simulator used to re-derive on every request is now computed exactly
+//! once —
+//! * the TDC phase decomposition (S² phase filters + input offsets),
+//! * the Winograd-domain transformed filters `G g Gᵀ`, sparsity-classified
+//!   and reordered into the zero-row-free `n² x N` layout,
+//! * the per-layer method (TDC vs Winograd fast algorithm), chosen at
+//!   compile time by racing the two through the `dse` cycle model — the
+//!   Zhang-et-al. point that method selection belongs in the compiler, not
+//!   on the request path,
+//! * the line-buffer geometry (depth, width, word budget) the execution
+//!   engine's event accounting is pinned to.
+
+use crate::accel::config::AccelConfig;
+use crate::accel::cycle::simulate_layer;
+use crate::gan::workload::Method;
+use crate::gan::zoo::{Gan, Kind, Layer};
+use crate::tdc::{self, PhaseFilter};
+use crate::util::prng::Rng;
+use crate::util::tensor::Filter4;
+use crate::winograd::layout::{reorder_filter, ReorderedFilter};
+use crate::winograd::transforms::{M as M_TILE, N as N_TILE};
+
+/// Compile-time method selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Select {
+    /// Race TDC vs Winograd through the cycle model per layer (Winograd is
+    /// only eligible when `K_C <= 3`, the F(2x2,3x3) support bound).
+    Auto,
+    /// Force one method on every deconv layer. `Force(Method::Tdc)` yields
+    /// the *exact* datapath: arithmetic bit-identical (f64) to the
+    /// layer-composed standard-DeConv reference.
+    Force(Method),
+}
+
+/// Plan-compile options.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOptions {
+    pub select: Select,
+    /// accelerator config the method race + line-buffer geometry use
+    pub cfg: AccelConfig,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions { select: Select::Auto, cfg: AccelConfig::default() }
+    }
+}
+
+/// One layer's precompiled execution plan.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub layer: Layer,
+    /// compile-time method decision (Conv layers always run the spatial
+    /// conv datapath and record `Method::Tdc`)
+    pub method: Method,
+    /// raw weights: conv-transpose layout `[C_in, C_out, K, K]` for deconv,
+    /// correlation layout for conv
+    pub weights: Filter4,
+    /// TDC phase decomposition, done once (deconv only; empty for conv)
+    pub phases: Vec<PhaseFilter>,
+    /// Winograd-domain filters, transformed + sparsity-reordered once
+    /// (only populated when `method == Winograd`)
+    pub reordered: Vec<ReorderedFilter>,
+    /// TDC-converted kernel width
+    pub kc: usize,
+    /// functional line-buffer depth in rows (n+m Winograd, K_C+1 TDC)
+    pub linebuf_depth: usize,
+    /// line-buffer capacity in f32 words at this layer's geometry
+    pub linebuf_words: usize,
+}
+
+impl LayerPlan {
+    /// Winograd-domain multiplications per (tile, c_in, c_out) — the live
+    /// position count summed over phases (C(K_C) of eq. 5).
+    pub fn live_positions(&self) -> usize {
+        self.reordered.iter().map(|r| r.live.len()).sum()
+    }
+}
+
+/// A whole generator, compiled.
+#[derive(Clone, Debug)]
+pub struct ModelPlan {
+    pub model: String,
+    pub layers: Vec<LayerPlan>,
+    /// `[C, H, W]` of the model input (first layer's input geometry)
+    pub input_shape: (usize, usize, usize),
+    /// `[C, H, W]` of the model output
+    pub output_shape: (usize, usize, usize),
+}
+
+impl ModelPlan {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.0 * self.input_shape.1 * self.input_shape.2
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.0 * self.output_shape.1 * self.output_shape.2
+    }
+
+    /// Layers that will run the Winograd fast path.
+    pub fn n_winograd_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.method == Method::Winograd).count()
+    }
+}
+
+/// The plan compiler.
+#[derive(Clone, Debug, Default)]
+pub struct Planner {
+    pub opts: PlanOptions,
+}
+
+impl Planner {
+    pub fn new(opts: PlanOptions) -> Planner {
+        Planner { opts }
+    }
+
+    /// Pick the method for one deconv layer.
+    fn select_method(&self, l: &Layer) -> Method {
+        let winograd_able = tdc::kc(l.k, l.s) <= crate::winograd::R;
+        match self.opts.select {
+            Select::Force(m) => match m {
+                Method::Winograd if winograd_able => Method::Winograd,
+                // the engine has no zero-padded datapath (the cycle model
+                // covers that baseline); record the method that actually
+                // executes so Events are never mislabeled
+                _ => Method::Tdc,
+            },
+            Select::Auto => {
+                if !winograd_able {
+                    return Method::Tdc;
+                }
+                // compile-time DSE race: modelled wall-clock decides
+                let t_win = simulate_layer(l, Method::Winograd, &self.opts.cfg).t_total;
+                let t_tdc = simulate_layer(l, Method::Tdc, &self.opts.cfg).t_total;
+                if t_win <= t_tdc {
+                    Method::Winograd
+                } else {
+                    Method::Tdc
+                }
+            }
+        }
+    }
+
+    /// Compile one layer.
+    pub fn compile_layer(&self, l: &Layer, weights: Filter4) -> LayerPlan {
+        assert_eq!(weights.c_in, l.c_in, "weight/layer C_in mismatch");
+        assert_eq!(weights.c_out, l.c_out, "weight/layer C_out mismatch");
+        assert_eq!((weights.kh, weights.kw), (l.k, l.k), "weight/layer kernel mismatch");
+        match l.kind {
+            Kind::Conv => {
+                let depth = l.k + 1;
+                LayerPlan {
+                    layer: *l,
+                    method: Method::Tdc,
+                    weights,
+                    phases: Vec::new(),
+                    reordered: Vec::new(),
+                    kc: l.k,
+                    linebuf_depth: depth,
+                    linebuf_words: depth * (l.w_in + 2 * l.p) * l.c_in,
+                }
+            }
+            Kind::Deconv => {
+                let method = self.select_method(l);
+                let kc = tdc::kc(l.k, l.s);
+                let phases = tdc::decompose(&weights, l.s, l.p);
+                let reordered = if method == Method::Winograd {
+                    phases.iter().map(reorder_filter).collect()
+                } else {
+                    Vec::new()
+                };
+                let (depth, width) = if method == Method::Winograd {
+                    // n+m lines of the phase-padded map (paper §IV.B)
+                    let wo_t = l.w_in.div_ceil(M_TILE) * M_TILE;
+                    (N_TILE + M_TILE, wo_t + crate::winograd::R - 1)
+                } else {
+                    (kc + 1, l.w_in + kc - 1)
+                };
+                LayerPlan {
+                    layer: *l,
+                    method,
+                    weights,
+                    phases,
+                    reordered,
+                    kc,
+                    linebuf_depth: depth,
+                    linebuf_words: depth * width * l.c_in,
+                }
+            }
+        }
+    }
+
+    /// Compile a whole generator with explicit per-layer weights.
+    pub fn compile(&self, g: &Gan, weights: Vec<Filter4>) -> ModelPlan {
+        assert_eq!(weights.len(), g.layers.len(), "one filter bank per layer");
+        let layers: Vec<LayerPlan> = g
+            .layers
+            .iter()
+            .zip(weights)
+            .map(|(l, w)| self.compile_layer(l, w))
+            .collect();
+        let first = &g.layers[0];
+        let last = g.layers.last().unwrap();
+        ModelPlan {
+            model: g.name.to_string(),
+            input_shape: (first.c_in, first.h_in, first.w_in),
+            output_shape: (last.c_out, last.h_out(), last.w_out()),
+            layers,
+        }
+    }
+
+    /// Compile with deterministic seeded weights (He-style scaling keeps the
+    /// composed activations O(1) across the stack — the serving path hands
+    /// f32 buffers around).
+    pub fn compile_seeded(&self, g: &Gan, seed: u64) -> ModelPlan {
+        self.compile(g, seeded_weights(g, seed))
+    }
+}
+
+/// Deterministic per-(model, layer) weight banks.
+pub fn seeded_weights(g: &Gan, seed: u64) -> Vec<Filter4> {
+    g.layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| {
+            let mut s = seed ^ (li as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            for b in g.name.bytes() {
+                s = s.wrapping_mul(0x100000001B3) ^ b as u64;
+            }
+            let mut rng = Rng::new(s);
+            let n = l.c_in * l.c_out * l.k * l.k;
+            let scale = 1.0 / ((l.c_in * l.k * l.k) as f64).sqrt();
+            let data = rng.normal_vec(n).into_iter().map(|v| v * scale).collect();
+            Filter4::from_vec(l.c_in, l.c_out, l.k, l.k, data)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gan::zoo::{self, Scale};
+
+    #[test]
+    fn auto_select_prefers_winograd_on_paper_layers() {
+        // every Table-I deconv class has K_C <= 3 and a faster Winograd
+        // cycle count, so Auto must pick Winograd on all deconv layers
+        let planner = Planner::default();
+        for g in zoo::all(Scale::Paper) {
+            let plan = planner.compile_seeded(&g, 7);
+            for lp in plan.layers.iter().filter(|l| l.layer.kind == Kind::Deconv) {
+                assert_eq!(lp.method, Method::Winograd, "{} {:?}", g.name, lp.layer);
+                assert_eq!(lp.reordered.len(), lp.layer.s * lp.layer.s);
+            }
+        }
+    }
+
+    #[test]
+    fn forced_tdc_skips_winograd_precompute() {
+        let planner = Planner::new(PlanOptions {
+            select: Select::Force(Method::Tdc),
+            ..Default::default()
+        });
+        let plan = planner.compile_seeded(&zoo::dcgan(Scale::Small), 7);
+        for lp in &plan.layers {
+            assert_eq!(lp.method, Method::Tdc);
+            assert!(lp.reordered.is_empty());
+            assert!(!lp.phases.is_empty());
+        }
+    }
+
+    #[test]
+    fn live_positions_match_paper_constants() {
+        // DCGAN K=5 S=2: C(K_C) = 49; K=4 S=2 models: 36
+        let planner = Planner::default();
+        let plan = planner.compile_seeded(&zoo::dcgan(Scale::Small), 7);
+        assert_eq!(plan.layers[0].live_positions(), 49);
+        let plan4 = planner.compile_seeded(&zoo::gpgan(Scale::Small), 7);
+        assert_eq!(plan4.layers[0].live_positions(), 36);
+    }
+
+    #[test]
+    fn shapes_chain_through_plan() {
+        let planner = Planner::default();
+        for g in zoo::all(Scale::Small) {
+            let plan = planner.compile_seeded(&g, 3);
+            assert_eq!(plan.output_shape, (3, 64, 64), "{}", g.name);
+            assert_eq!(plan.layers.len(), g.layers.len());
+        }
+    }
+
+    #[test]
+    fn seeded_weights_deterministic_and_model_distinct() {
+        let g = zoo::dcgan(Scale::Small);
+        let a = seeded_weights(&g, 42);
+        let b = seeded_weights(&g, 42);
+        assert_eq!(a[0].data, b[0].data);
+        let c = seeded_weights(&zoo::gpgan(Scale::Small), 42);
+        assert_ne!(a[1].data.len(), 0);
+        // different models draw from different streams even at equal seed
+        assert_ne!(a[0].data[..4], c[0].data[..4]);
+    }
+}

@@ -1,0 +1,91 @@
+//! Stripe/tile worker pool: chunked parallel execution over row ranges.
+//!
+//! The engine parallelises each layer across *output stripes* (tile rows
+//! for the Winograd dataflow, output rows for the TDC datapath). Every
+//! stripe's pixels are computed entirely by one worker with a fixed
+//! per-pixel accumulation order, so results are bitwise independent of the
+//! worker count — parallelism never perturbs numerics.
+//!
+//! Scoped threads (`std::thread::scope`) keep this dependency-free and let
+//! workers borrow the plan + input without `Arc` plumbing.
+
+/// Split `0..n` into at most `workers` contiguous chunks and run `f(start,
+/// end)` for each, in parallel. Results come back in chunk order (ascending
+/// `start`). `workers <= 1` or `n <= 1` runs inline on the caller's thread.
+pub fn run_chunked<T: Send>(
+    workers: usize,
+    n: usize,
+    f: impl Fn(usize, usize) -> T + Sync,
+) -> Vec<T> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let n_chunks = workers.max(1).min(n);
+    if n_chunks == 1 {
+        return vec![f(0, n)];
+    }
+    // near-equal chunks: the first `rem` chunks get one extra stripe
+    let base = n / n_chunks;
+    let rem = n % n_chunks;
+    let mut bounds = Vec::with_capacity(n_chunks);
+    let mut start = 0;
+    for i in 0..n_chunks {
+        let len = base + usize::from(i < rem);
+        bounds.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = bounds
+            .iter()
+            .skip(1)
+            .map(|&(s, e)| scope.spawn(move || f(s, e)))
+            .collect();
+        // the caller's thread takes the first chunk instead of idling
+        let (s0, e0) = bounds[0];
+        let first = f(s0, e0);
+        let mut out = Vec::with_capacity(n_chunks);
+        out.push(first);
+        for h in handles {
+            out.push(h.join().expect("engine worker panicked"));
+        }
+        out
+    })
+}
+
+/// Default worker count: one per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_range_in_order() {
+        for workers in [1, 2, 3, 7, 64] {
+            for n in [0usize, 1, 2, 5, 16] {
+                let chunks = run_chunked(workers, n, |s, e| (s, e));
+                let mut expect = 0;
+                for (s, e) in &chunks {
+                    assert_eq!(*s, expect, "workers={workers} n={n}");
+                    assert!(e > s);
+                    expect = *e;
+                }
+                assert_eq!(expect, n, "workers={workers} n={n}");
+                assert!(chunks.len() <= workers.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let data: Vec<u64> = (0..1000).collect();
+        let serial: u64 = data.iter().sum();
+        let chunks = run_chunked(4, data.len(), |s, e| data[s..e].iter().sum::<u64>());
+        assert_eq!(chunks.iter().sum::<u64>(), serial);
+    }
+}

@@ -1,0 +1,253 @@
+//! Native serving backend: compiled [`Engine`]s behind the coordinator's
+//! artifact-manifest contract.
+//!
+//! The PJRT runtime is gated off in this build (see `runtime::client`), so
+//! the serving path executes generation requests on the pure-rust engine:
+//! a synthetic [`Manifest`] advertises the same `(model, method, batch)`
+//! routes the AOT artifacts would, and [`NativeRuntime::execute`] unpacks a
+//! packed batch buffer, runs each sample through the precompiled plan, and
+//! repacks f32 outputs. Route methods:
+//!
+//! * `"winograd"` — plans compiled with [`Select::Auto`] (the fast
+//!   algorithm wherever the DSE race picks it);
+//! * `"tdc"` — plans forced to the TDC datapath: arithmetic bit-identical
+//!   to the layer-composed standard-DeConv reference, the A/B anchor.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::accel::functional::Events;
+use crate::engine::exec::Engine;
+use crate::engine::plan::{PlanOptions, Planner, Select};
+use crate::gan::workload::Method;
+use crate::gan::zoo::{self, Scale};
+use crate::runtime::{ArtifactEntry, Manifest};
+use crate::util::tensor::Tensor3;
+
+/// Configuration for the native serving backend.
+#[derive(Clone, Debug)]
+pub struct NativeConfig {
+    /// zoo scale the engines are compiled at
+    pub scale: Scale,
+    /// batch buckets advertised per route (ascending)
+    pub buckets: Vec<usize>,
+    /// engine worker threads per request (0 = one per core)
+    pub workers: usize,
+    /// weight seed (deterministic per model)
+    pub seed: u64,
+    /// restrict to these lowercase model ids (None = all four zoo models)
+    pub models: Option<Vec<String>>,
+}
+
+impl Default for NativeConfig {
+    fn default() -> Self {
+        NativeConfig {
+            scale: Scale::Small,
+            buckets: vec![1, 2, 4, 8],
+            workers: 0,
+            seed: 42,
+            models: None,
+        }
+    }
+}
+
+/// Route id for a zoo model name, matching the ids `python/compile/aot.py`
+/// uses in the PJRT artifact manifest ("GP-GAN" -> "gpgan") so the same
+/// `--model` filter works on either backend.
+pub fn model_id(name: &str) -> String {
+    name.chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .map(|c| c.to_ascii_lowercase())
+        .collect()
+}
+
+const METHODS: [(&str, Select); 2] =
+    [("winograd", Select::Auto), ("tdc", Select::Force(Method::Tdc))];
+
+/// Build the synthetic manifest describing the native routes — the same
+/// contract `python/compile/aot.py` writes for the PJRT path, with no files
+/// behind it.
+pub fn native_manifest(cfg: &NativeConfig) -> Manifest {
+    let mut entries = Vec::new();
+    for g in zoo::all(cfg.scale) {
+        let id = model_id(g.name);
+        if let Some(allow) = &cfg.models {
+            if !allow.contains(&id) {
+                continue;
+            }
+        }
+        let first = &g.layers[0];
+        let last = g.layers.last().unwrap();
+        for (method, _) in METHODS {
+            for &b in &cfg.buckets {
+                entries.push(ArtifactEntry {
+                    name: format!("{id}_{method}_b{b}"),
+                    kind: "generator".into(),
+                    model: id.clone(),
+                    method: method.into(),
+                    batch: b,
+                    hlo: PathBuf::new(),
+                    input_shape: vec![b, first.c_in, first.h_in, first.w_in],
+                    output_shape: vec![b, last.c_out, last.h_out(), last.w_out()],
+                    golden_input: PathBuf::new(),
+                    golden_output: PathBuf::new(),
+                });
+            }
+        }
+    }
+    Manifest {
+        dir: PathBuf::new(),
+        scale: format!("{:?}", cfg.scale).to_ascii_lowercase(),
+        entries,
+    }
+}
+
+/// The native execution backend: one compiled [`Engine`] per
+/// `(model, method)` route plus the manifest entries for shape checking.
+pub struct NativeRuntime {
+    engines: BTreeMap<(String, String), Engine>,
+    entries: HashMap<String, ArtifactEntry>,
+    /// cumulative events across every executed sample (observability; the
+    /// e2e tests assert monotone growth with batch size)
+    events: Arc<Mutex<Events>>,
+}
+
+impl NativeRuntime {
+    /// Compile every advertised route's plan. This is the expensive,
+    /// once-per-startup step (the coordinator runs it on the engine thread
+    /// before reporting ready, like PJRT artifact compilation). The engine
+    /// set is derived from the manifest itself, so routes and engines can
+    /// never desynchronize.
+    pub fn build(cfg: &NativeConfig) -> NativeRuntime {
+        let manifest = native_manifest(cfg);
+        let workers =
+            if cfg.workers == 0 { crate::engine::pool::default_workers() } else { cfg.workers };
+        let zoo_models = zoo::all(cfg.scale);
+        let mut engines: BTreeMap<(String, String), Engine> = BTreeMap::new();
+        for e in &manifest.entries {
+            let key = (e.model.clone(), e.method.clone());
+            if engines.contains_key(&key) {
+                continue; // one engine serves every batch bucket of a route
+            }
+            let g = zoo_models
+                .iter()
+                .find(|g| model_id(g.name) == e.model)
+                .expect("manifest route without a zoo model");
+            let select = METHODS
+                .iter()
+                .find(|(m, _)| *m == e.method)
+                .expect("manifest route with unknown method")
+                .1;
+            let planner = Planner::new(PlanOptions { select, ..Default::default() });
+            let plan = planner.compile_seeded(g, cfg.seed);
+            engines.insert(key, Engine::with_workers(plan, workers));
+        }
+        let entries = manifest.entries.iter().map(|e| (e.name.clone(), e.clone())).collect();
+        NativeRuntime { engines, entries, events: Arc::new(Mutex::new(Events::default())) }
+    }
+
+    /// Handle to the cumulative event counters (cloneable across threads).
+    pub fn events_handle(&self) -> Arc<Mutex<Events>> {
+        self.events.clone()
+    }
+
+    /// Snapshot of the cumulative events.
+    pub fn events(&self) -> Events {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn engine(&self, model: &str, method: &str) -> Option<&Engine> {
+        self.engines.get(&(model.to_string(), method.to_string()))
+    }
+
+    /// Execute one packed batch buffer against a named route artifact.
+    /// Mirrors the PJRT executable contract: fixed batch shape, padded
+    /// slots are computed like real samples.
+    pub fn execute(&self, name: &str, input: &[f32]) -> Result<Vec<f32>, String> {
+        let entry = self.entries.get(name).ok_or_else(|| format!("unknown artifact {name}"))?;
+        if input.len() != entry.input_len() {
+            return Err(format!(
+                "artifact {name}: input length {} != expected {}",
+                input.len(),
+                entry.input_len()
+            ));
+        }
+        let engine = self
+            .engines
+            .get(&(entry.model.clone(), entry.method.clone()))
+            .ok_or_else(|| format!("no engine for route {}/{}", entry.model, entry.method))?;
+        let (c, h, w) = engine.plan().input_shape;
+        let sample_in = c * h * w;
+        let sample_out = engine.plan().output_len();
+        let mut out = Vec::with_capacity(entry.batch * sample_out);
+        let mut batch_events = Events::default();
+        for b in 0..entry.batch {
+            let chunk = &input[b * sample_in..(b + 1) * sample_in];
+            let x = Tensor3::from_vec(c, h, w, chunk.iter().map(|&v| v as f64).collect());
+            let run = engine.run(&x);
+            batch_events.merge(&run.events);
+            out.extend(run.y.data.iter().map(|&v| v as f32));
+        }
+        self.events.lock().unwrap().merge(&batch_events);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> NativeConfig {
+        NativeConfig {
+            scale: Scale::Tiny,
+            buckets: vec![1, 2],
+            workers: 2,
+            models: Some(vec!["dcgan".into()]),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn manifest_advertises_both_methods_and_buckets() {
+        let m = native_manifest(&NativeConfig::default());
+        // ids match python/compile/aot.py's manifest ("GP-GAN" -> "gpgan")
+        assert_eq!(m.models(), vec!["artgan", "dcgan", "discogan", "gpgan"]);
+        let buckets: Vec<usize> =
+            m.buckets("dcgan", "winograd").iter().map(|e| e.batch).collect();
+        assert_eq!(buckets, vec![1, 2, 4, 8]);
+        assert!(m.find("gpgan_tdc_b4").is_some());
+    }
+
+    #[test]
+    fn execute_batches_and_counts_events() {
+        let rt = NativeRuntime::build(&tiny_cfg());
+        let e1 = rt.entries.get("dcgan_winograd_b1").unwrap().clone();
+        let out = rt.execute(&e1.name, &vec![0.5; e1.input_len()]).unwrap();
+        assert_eq!(out.len(), e1.output_len());
+        let after_one = rt.events().mults;
+        assert!(after_one > 0);
+        let e2 = rt.entries.get("dcgan_winograd_b2").unwrap().clone();
+        rt.execute(&e2.name, &vec![0.5; e2.input_len()]).unwrap();
+        // batch-2 adds exactly twice the single-sample work
+        assert_eq!(rt.events().mults, after_one * 3);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let rt = NativeRuntime::build(&tiny_cfg());
+        assert!(rt.execute("nope", &[0.0; 4]).is_err());
+        assert!(rt.execute("dcgan_winograd_b1", &[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn winograd_and_tdc_routes_agree() {
+        let rt = NativeRuntime::build(&tiny_cfg());
+        let e = rt.entries.get("dcgan_winograd_b1").unwrap().clone();
+        let x: Vec<f32> = (0..e.input_len()).map(|i| ((i % 13) as f32 - 6.0) / 6.0).collect();
+        let a = rt.execute("dcgan_winograd_b1", &x).unwrap();
+        let b = rt.execute("dcgan_tdc_b1", &x).unwrap();
+        let diff = crate::util::bin::max_abs_diff(&a, &b);
+        assert!(diff < 1e-4, "methods diverge: {diff}");
+    }
+}

@@ -93,11 +93,14 @@ impl Gan {
 }
 
 /// Model scale: `Paper` = original channel widths (all analytic benches);
-/// `Small` = channels / 8 (matches the AOT artifacts for the CPU box).
+/// `Small` = channels / 8 (matches the AOT artifacts for the CPU box);
+/// `Tiny` = channels / 32 (rust-only: fast enough for debug-mode engine /
+/// serving tests that execute real whole-generator tensors).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scale {
     Paper,
     Small,
+    Tiny,
 }
 
 fn ch(c: usize, scale: Scale) -> usize {
@@ -108,6 +111,13 @@ fn ch(c: usize, scale: Scale) -> usize {
                 c
             } else {
                 (c / 8).max(4)
+            }
+        }
+        Scale::Tiny => {
+            if c <= 3 {
+                c
+            } else {
+                (c / 32).max(4)
             }
         }
     }

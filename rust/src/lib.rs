@@ -7,13 +7,26 @@
 //! Three-layer architecture:
 //! * **L1/L2 (build time)** — python/compile: Pallas Winograd-DeConv kernel
 //!   + JAX generators, AOT-lowered to HLO text artifacts.
-//! * **L3 (this crate)** — loads the artifacts via PJRT ([`runtime`]),
-//!   serves generation requests ([`coordinator`]), and reproduces the
-//!   paper's entire evaluation on a cycle-level FPGA accelerator simulator
-//!   ([`accel`], [`dse`], [`resource`], [`energy`]).
+//! * **L3 (this crate)** — compiles `gan::zoo` models into precompiled
+//!   per-layer plans and executes whole generators natively ([`engine`]),
+//!   serves generation requests through batched routes ([`coordinator`]),
+//!   optionally loads the AOT artifacts via PJRT ([`runtime`]; gated off in
+//!   offline builds), and reproduces the paper's entire evaluation on a
+//!   cycle-level FPGA accelerator simulator ([`accel`], [`dse`],
+//!   [`resource`], [`energy`]).
+//!
+//! The **plan-compile / execute split** is the load-bearing design: a
+//! [`engine::Planner`] does all per-model derivation once (TDC phase
+//! decomposition, Winograd `G g Gᵀ` filter transforms + sparsity
+//! reordering, DSE-raced method selection, line-buffer geometry), and the
+//! [`engine::Engine`] then runs the whole generator per request with
+//! stripe/tile parallelism — bit-identical (f64) to the layer-composed
+//! `tdc` standard-DeConv reference on the exact datapath, and
+//! worker-count-invariant everywhere.
 //!
 //! The algorithmic substrates ([`tdc`], [`winograd`], [`gan`]) mirror the
-//! python oracles; `rust/tests/proptests.rs` pins them to each other.
+//! python oracles; `rust/tests/proptests.rs` pins them to each other and
+//! pins the engine to the composed reference.
 
 
 pub mod accel;
@@ -22,6 +35,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod dse;
 pub mod energy;
+pub mod engine;
 pub mod gan;
 pub mod prop;
 pub mod report;

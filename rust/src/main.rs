@@ -29,8 +29,12 @@ USAGE: wingan <subcommand> [flags]
   sim    [--model dcgan|artgan|discogan|gpgan] [--full-model] [--zero-skip]
   dse
   verify [--artifacts DIR]
-  serve  [--artifacts DIR] [--model dcgan] [--method winograd]
-         [--requests 64] [--rate 200] [--max-wait-ms 20] [--seed 7]
+  serve  [--artifacts DIR] [--native] [--scale small|tiny] [--model dcgan]
+         [--method winograd] [--requests 64] [--rate 200] [--max-wait-ms 20]
+         [--seed 7]
+
+serve runs on the native precompiled-plan engine when --native is given or
+when the PJRT artifacts are unavailable (this offline build always is).
 ";
 
 fn main() {
@@ -149,23 +153,41 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
-    let model = args.get_or("model", "dcgan").to_string();
+    // normalize to the manifest route ids shared by both backends
+    // ("GP-GAN"/"gp-gan"/"gpgan" all mean "gpgan")
+    let model = wingan::engine::model_id(args.get_or("model", "dcgan"));
     let method = args.get_or("method", "winograd").to_string();
     let n_requests = args.get_usize("requests", 64).map_err(anyhow::Error::msg)?;
     let rate = args.get_f64("rate", 200.0).map_err(anyhow::Error::msg)?;
     let max_wait = args.get_usize("max-wait-ms", 20).map_err(anyhow::Error::msg)?;
     let seed = args.get_usize("seed", 7).map_err(anyhow::Error::msg)? as u64;
 
-    let manifest = Manifest::load(Path::new(dir))?;
-    println!("loading + compiling {model} artifacts...");
+    let serve_cfg = ServeConfig {
+        max_wait: Duration::from_millis(max_wait as u64),
+        preload_models: Some(vec![model.clone()]),
+    };
+    let use_native =
+        args.has("native") || !Path::new(dir).join("manifest.json").exists();
     let t0 = Instant::now();
-    let coord = Coordinator::start(
-        manifest,
-        ServeConfig {
-            max_wait: Duration::from_millis(max_wait as u64),
-            preload_models: Some(vec![model.clone()]),
-        },
-    )?;
+    let coord = if use_native {
+        let scale = match args.get_or("scale", "small") {
+            "tiny" => wingan::gan::zoo::Scale::Tiny,
+            "small" => wingan::gan::zoo::Scale::Small,
+            other => anyhow::bail!(
+                "--scale: '{other}' is not one of small|tiny (native serving executes \
+                 real tensors; paper-scale channels are cycle-model territory)"
+            ),
+        };
+        println!("compiling native engine plans for {model} ({scale:?} scale)...");
+        Coordinator::start_native(
+            wingan::engine::NativeConfig { scale, ..Default::default() },
+            serve_cfg,
+        )?
+    } else {
+        let manifest = Manifest::load(Path::new(dir))?;
+        println!("loading + compiling {model} artifacts...");
+        Coordinator::start(manifest, serve_cfg)?
+    };
     println!("engine ready in {:?}", t0.elapsed());
 
     let route = coord.router().route(&model, &method).map_err(anyhow::Error::msg)?;

@@ -153,6 +153,35 @@ pub fn deconv_naive(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
     y
 }
 
+/// Standard strided conv (correlation semantics) with symmetric zero
+/// padding `p`: the reference datapath for the zoo's encoder Conv layers
+/// (DiscoGAN). Output is `[C_out, (H+2P-K)/S+1, (W+2P-K)/S+1]`.
+pub fn conv2d(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
+    assert_eq!(x.c, w.c_in);
+    let k = w.kh;
+    assert!(x.h + 2 * p >= k && x.w + 2 * p >= k, "conv input smaller than kernel");
+    let ho = (x.h + 2 * p - k) / s + 1;
+    let wo = (x.w + 2 * p - k) / s + 1;
+    let xp = x.pad(p, p, p, p);
+    let mut y = Tensor3::zeros(w.c_out, ho, wo);
+    for co in 0..w.c_out {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = 0.0;
+                for ci in 0..xp.c {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            acc += xp.at(ci, s * oy + ky, s * ox + kx) * w.at(ci, co, ky, kx);
+                        }
+                    }
+                }
+                *y.at_mut(co, oy, ox) = acc;
+            }
+        }
+    }
+    y
+}
+
 /// Multi-channel valid correlation: `x[C_in,H,W] * g[C_in,C_out,K,K]`.
 pub fn correlate_valid(x: &Tensor3, g: &Filter4) -> Tensor3 {
     assert_eq!(x.c, g.c_in);

@@ -1,0 +1,208 @@
+//! End-to-end tests over the native engine serving path: plan compilation
+//! + batched request serving through `coordinator::server` for every zoo
+//! model, with deterministic Events/latency accounting checks. No PJRT, no
+//! artifacts on disk — this suite always runs.
+
+use std::time::{Duration, Instant};
+use wingan::coordinator::{Coordinator, ServeConfig};
+use wingan::engine::{native_manifest, NativeConfig, NativeRuntime};
+use wingan::gan::zoo::Scale;
+use wingan::util::bin;
+use wingan::util::prng::Rng;
+
+fn tiny_cfg() -> NativeConfig {
+    NativeConfig {
+        scale: Scale::Tiny,
+        buckets: vec![1, 2, 4],
+        workers: 2,
+        seed: 9,
+        models: None,
+    }
+}
+
+const ZOO_IDS: [&str; 4] = ["dcgan", "artgan", "discogan", "gpgan"];
+
+#[test]
+fn serves_batched_requests_for_every_zoo_model() {
+    let coord = Coordinator::start_native(
+        tiny_cfg(),
+        ServeConfig { max_wait: Duration::from_millis(10), preload_models: None },
+    )
+    .unwrap();
+    let mut rng = Rng::new(31);
+    let mut expected_responses = 0u64;
+    for model in ZOO_IDS {
+        let route = coord.router().route(model, "winograd").unwrap();
+        let (input_len, output_len) = (route.sample_input_len, route.sample_output_len);
+        let buckets = route.bucket_sizes();
+        assert_eq!(buckets, vec![1, 2, 4], "{model}");
+        // burst of 4 requests: the batcher may group them into any mix of
+        // the advertised buckets, but every response must come back with a
+        // legal bucket and the right output geometry
+        let pending: Vec<_> = (0..4)
+            .map(|_| coord.submit(model, "winograd", rng.normal_vec_f32(input_len)).unwrap())
+            .collect();
+        expected_responses += 4;
+        for rx in pending {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.output.len(), output_len, "{model}");
+            assert!(buckets.contains(&resp.batch_size), "{model}: {}", resp.batch_size);
+            assert!(resp.output.iter().all(|v| v.is_finite()), "{model}");
+        }
+    }
+    let m = coord.metrics();
+    assert_eq!(m.responses, expected_responses);
+    assert_eq!(m.requests, expected_responses);
+    assert!(m.batches >= ZOO_IDS.len() as u64);
+    // exec latency is recorded once per executed batch, queue/e2e per request
+    assert_eq!(m.exec_latency.count(), m.batches);
+    assert_eq!(m.queue_latency.count(), expected_responses);
+    assert!(m.exec_latency.mean() > 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn events_accounting_monotone_with_batch_size() {
+    // deterministic accounting: a bucket-b execution does exactly b times
+    // the single-sample work, so cumulative events are strictly monotone
+    // in total samples served
+    let cfg = NativeConfig { models: Some(vec!["dcgan".into()]), ..tiny_cfg() };
+    let rt = NativeRuntime::build(&cfg);
+    let manifest = native_manifest(&cfg);
+    let e1 = manifest.find("dcgan_winograd_b1").unwrap().clone();
+
+    let mut rng = Rng::new(5);
+    let sample = rng.normal_vec_f32(e1.input_len());
+    rt.execute("dcgan_winograd_b1", &sample).unwrap();
+    let per_sample = rt.events();
+    assert!(per_sample.mults > 0 && per_sample.tiles > 0 && per_sample.stripes > 0);
+
+    let mut cumulative = vec![per_sample.clone()];
+    for b in [2usize, 4] {
+        let entry = manifest.find(&format!("dcgan_winograd_b{b}")).unwrap().clone();
+        let mut input = Vec::new();
+        for _ in 0..b {
+            input.extend_from_slice(&sample);
+        }
+        assert_eq!(input.len(), entry.input_len());
+        rt.execute(&entry.name, &input).unwrap();
+        cumulative.push(rt.events());
+    }
+    // cumulative counters strictly increase batch over batch...
+    for w in cumulative.windows(2) {
+        assert!(w[1].mults > w[0].mults);
+        assert!(w[1].linebuf_reads > w[0].linebuf_reads);
+        assert!(w[1].linebuf_writes > w[0].linebuf_writes);
+        assert!(w[1].tiles > w[0].tiles);
+        assert!(w[1].stripes > w[0].stripes);
+    }
+    // ... and exactly linearly: after 1 + 2 + 4 samples, every counter is
+    // 7x the single-sample cost
+    let total = rt.events();
+    assert_eq!(total.mults, per_sample.mults * 7);
+    assert_eq!(total.tiles, per_sample.tiles * 7);
+    assert_eq!(total.stripes, per_sample.stripes * 7);
+}
+
+#[test]
+fn exec_latency_tracks_batch_work() {
+    // a bucket-4 batch does 4x the bucket-1 compute; after warmup its
+    // execution cannot be faster than a single-sample run
+    let cfg = NativeConfig { models: Some(vec!["dcgan".into()]), ..tiny_cfg() };
+    let rt = NativeRuntime::build(&cfg);
+    let manifest = native_manifest(&cfg);
+    let e1 = manifest.find("dcgan_winograd_b1").unwrap().clone();
+    let e4 = manifest.find("dcgan_winograd_b4").unwrap().clone();
+    let mut rng = Rng::new(6);
+    let sample = rng.normal_vec_f32(e1.input_len());
+    let mut batch4 = Vec::new();
+    for _ in 0..4 {
+        batch4.extend_from_slice(&sample);
+    }
+    // warmup both routes
+    rt.execute(&e1.name, &sample).unwrap();
+    rt.execute(&e4.name, &batch4).unwrap();
+    // best-of-3 to shrug off scheduler noise
+    let best = |f: &dyn Fn() -> ()| {
+        (0..3)
+            .map(|_| {
+                let t = Instant::now();
+                f();
+                t.elapsed()
+            })
+            .min()
+            .unwrap()
+    };
+    let t1 = best(&|| {
+        rt.execute(&e1.name, &sample).unwrap();
+    });
+    let t4 = best(&|| {
+        rt.execute(&e4.name, &batch4).unwrap();
+    });
+    assert!(
+        t4 >= t1,
+        "batch-4 exec ({t4:?}) should not beat single-sample exec ({t1:?})"
+    );
+}
+
+#[test]
+fn served_outputs_match_direct_engine_execution() {
+    // the coordinator path (batcher + packing + engine thread) must return
+    // exactly what a direct NativeRuntime execution returns
+    let cfg = NativeConfig { models: Some(vec!["gpgan".into()]), ..tiny_cfg() };
+    let direct = NativeRuntime::build(&cfg);
+    let manifest = native_manifest(&cfg);
+    let e1 = manifest.find("gpgan_winograd_b1").unwrap().clone();
+    let mut rng = Rng::new(77);
+    let inputs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec_f32(e1.input_len())).collect();
+    let reference: Vec<Vec<f32>> =
+        inputs.iter().map(|x| direct.execute(&e1.name, x).unwrap()).collect();
+
+    let coord = Coordinator::start_native(
+        cfg,
+        ServeConfig {
+            max_wait: Duration::from_millis(2),
+            preload_models: Some(vec!["gpgan".into()]),
+        },
+    )
+    .unwrap();
+    for (x, want) in inputs.iter().zip(&reference) {
+        let resp = coord.generate("gpgan", "winograd", x.clone()).unwrap();
+        // same plan, same engine arithmetic -> bitwise equal f32
+        assert_eq!(bin::max_abs_diff(&resp.output, want), 0.0);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn tdc_route_is_the_reference_anchor() {
+    // A/B the fast route against the bit-exact TDC route per model
+    let coord = Coordinator::start_native(
+        tiny_cfg(),
+        ServeConfig { max_wait: Duration::from_millis(2), preload_models: None },
+    )
+    .unwrap();
+    let mut rng = Rng::new(13);
+    for model in ZOO_IDS {
+        let route = coord.router().route(model, "winograd").unwrap();
+        let input = rng.normal_vec_f32(route.sample_input_len);
+        let a = coord.generate(model, "winograd", input.clone()).unwrap();
+        let b = coord.generate(model, "tdc", input).unwrap();
+        let diff = bin::max_abs_diff(&a.output, &b.output);
+        assert!(diff < 1e-3, "{model}: winograd vs tdc diff {diff}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_rejects_invalid_native_requests() {
+    let coord = Coordinator::start_native(
+        NativeConfig { models: Some(vec!["dcgan".into()]), ..tiny_cfg() },
+        ServeConfig { max_wait: Duration::from_millis(1), preload_models: None },
+    )
+    .unwrap();
+    assert!(coord.submit("nope", "winograd", vec![0.0; 4]).is_err());
+    assert!(coord.submit("dcgan", "winograd", vec![0.0; 3]).is_err());
+    assert!(coord.submit("dcgan", "nope", vec![0.0; 4]).is_err());
+    coord.shutdown();
+}

@@ -1,0 +1,286 @@
+//! Golden-vector tests for the Winograd transform kernels and the
+//! structural-sparsity phase-case table — hard-coded expected values
+//! (computed independently with exact rational arithmetic / numpy), so the
+//! sparse-skip bookkeeping and both transform families are pinned without
+//! reference to the engine or the functional simulator.
+//!
+//! Covers every (K_D, S, P) kernel class of the paper's Table I:
+//! (5, 2, 2), (4, 2, 1), (3, 1, 1).
+
+use wingan::tdc::{self, default_padding};
+use wingan::util::prng::Rng;
+use wingan::util::tensor::{Filter4, Tensor3};
+use wingan::winograd::f43::{
+    filter_transform6, input_transform6, inverse_transform6, live_positions6, Tile6,
+};
+use wingan::winograd::sparsity::{c_of_kc, classify, nonzero_positions, phase_cases, Case};
+use wingan::winograd::transforms::{
+    filter_transform, input_transform, inverse_transform, Tile4,
+};
+
+/// Table I kernel classes (K_D, S, P).
+const TABLE1_CLASSES: [(usize, usize, usize); 3] = [(5, 2, 2), (4, 2, 1), (3, 1, 1)];
+
+const F9: [[f64; 3]; 3] = [[1.0, 2.0, 3.0], [4.0, 5.0, 6.0], [7.0, 8.0, 9.0]];
+
+// ---------------------------------------------------------------------------
+// F(2x2, 3x3): all transform constants are dyadic rationals, so the golden
+// values are exact in f64 and the asserts are exact equality.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn f23_filter_transform_golden() {
+    // U = G f G^T for f = [[1..9]] (numpy golden, exact dyadics)
+    let want: Tile4 = [
+        [1.0, 3.0, 1.0, 3.0],
+        [6.0, 11.25, 3.75, 9.0],
+        [2.0, 3.75, 1.25, 3.0],
+        [7.0, 12.0, 4.0, 9.0],
+    ];
+    let got = filter_transform(&F9);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn f23_input_transform_golden() {
+    // V = B^T z B for z = [[1..16]] (numpy golden, exact integers)
+    let z: Tile4 = [
+        [1.0, 2.0, 3.0, 4.0],
+        [5.0, 6.0, 7.0, 8.0],
+        [9.0, 10.0, 11.0, 12.0],
+        [13.0, 14.0, 15.0, 16.0],
+    ];
+    let want: Tile4 = [
+        [0.0, -16.0, 0.0, 0.0],
+        [-4.0, 34.0, 2.0, -4.0],
+        [0.0, 8.0, 0.0, 0.0],
+        [0.0, -16.0, 0.0, 0.0],
+    ];
+    assert_eq!(input_transform(&z), want);
+}
+
+#[test]
+fn f23_full_pipeline_golden() {
+    // A^T [(G f G^T) ⊙ (B^T z B)] A == the direct 2x2 valid correlation
+    // of z with f: [[348, 393], [528, 573]] — exactly.
+    let z: Tile4 = [
+        [1.0, 2.0, 3.0, 4.0],
+        [5.0, 6.0, 7.0, 8.0],
+        [9.0, 10.0, 11.0, 12.0],
+        [13.0, 14.0, 15.0, 16.0],
+    ];
+    let u = filter_transform(&F9);
+    let v = input_transform(&z);
+    let mut m: Tile4 = [[0.0; 4]; 4];
+    for i in 0..4 {
+        for j in 0..4 {
+            m[i][j] = u[i][j] * v[i][j];
+        }
+    }
+    let y = inverse_transform(&m);
+    assert_eq!(y, [[348.0, 393.0], [528.0, 573.0]]);
+}
+
+// ---------------------------------------------------------------------------
+// F(4x4, 3x3): G6 has 1/6-family constants (not exactly representable), so
+// goldens are exact rationals asserted to 1e-12.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn f43_filter_transform_golden() {
+    // U = G6 f G6^T for f = [[1..9]], exact rationals via fractions.Fraction
+    let want: [[f64; 6]; 6] = [
+        [1.0 / 16.0, -1.0 / 4.0, -1.0 / 12.0, 17.0 / 96.0, 3.0 / 32.0, 3.0 / 4.0],
+        [-1.0 / 2.0, 5.0 / 4.0, 5.0 / 12.0, -19.0 / 24.0, -3.0 / 8.0, -3.0],
+        [-1.0 / 6.0, 5.0 / 12.0, 5.0 / 36.0, -19.0 / 72.0, -1.0 / 8.0, -1.0],
+        [37.0 / 96.0, -11.0 / 12.0, -11.0 / 36.0, 329.0 / 576.0, 17.0 / 64.0, 17.0 / 8.0],
+        [7.0 / 32.0, -1.0 / 2.0, -1.0 / 6.0, 59.0 / 192.0, 9.0 / 64.0, 9.0 / 8.0],
+        [7.0 / 4.0, -4.0, -4.0 / 3.0, 59.0 / 24.0, 9.0 / 8.0, 9.0],
+    ];
+    let got = filter_transform6(&F9);
+    for i in 0..6 {
+        for j in 0..6 {
+            assert!(
+                (got[i][j] - want[i][j]).abs() < 1e-12,
+                "U6[{i}][{j}] = {} want {}",
+                got[i][j],
+                want[i][j]
+            );
+        }
+    }
+}
+
+#[test]
+fn f43_input_transform_golden() {
+    // V = B^T z B for z = 0..35 row-major (numpy golden, exact integers —
+    // B^T is all-integer so equality is exact)
+    let mut z: Tile6 = [[0.0; 6]; 6];
+    for (i, row) in z.iter_mut().enumerate() {
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (i * 6 + j) as f64;
+        }
+    }
+    let want: Tile6 = [
+        [0.0, 216.0, 0.0, 0.0, 0.0, 0.0],
+        [36.0, 210.0, 18.0, -36.0, 12.0, 36.0],
+        [0.0, 108.0, 0.0, 0.0, 0.0, 0.0],
+        [0.0, -216.0, 0.0, 0.0, 0.0, 0.0],
+        [0.0, 72.0, 0.0, 0.0, 0.0, 0.0],
+        [0.0, 216.0, 0.0, 0.0, 0.0, 0.0],
+    ];
+    assert_eq!(input_transform6(&z), want);
+}
+
+#[test]
+fn f43_full_pipeline_golden() {
+    // whole F(4,3) tile vs the direct 4x4 valid correlation of z=0..35
+    // with f=1..9: rows [429..564], [699..834], [969..1104], [1239..1374]
+    let mut z: Tile6 = [[0.0; 6]; 6];
+    for (i, row) in z.iter_mut().enumerate() {
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (i * 6 + j) as f64;
+        }
+    }
+    let u = filter_transform6(&F9);
+    let v = input_transform6(&z);
+    let mut m: Tile6 = [[0.0; 6]; 6];
+    for i in 0..6 {
+        for j in 0..6 {
+            m[i][j] = u[i][j] * v[i][j];
+        }
+    }
+    let y = inverse_transform6(&m);
+    let want = [
+        [429.0, 474.0, 519.0, 564.0],
+        [699.0, 744.0, 789.0, 834.0],
+        [969.0, 1014.0, 1059.0, 1104.0],
+        [1239.0, 1284.0, 1329.0, 1374.0],
+    ];
+    for i in 0..4 {
+        for j in 0..4 {
+            assert!(
+                (y[i][j] - want[i][j]).abs() < 1e-9,
+                "Y[{i}][{j}] = {} want {}",
+                y[i][j],
+                want[i][j]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparsity phase-case table (paper Fig. 3/6), every Table I kernel class.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn phase_case_table_golden_all_table1_classes() {
+    // (5,2,2): phases (py,px) row-major -> Dense, OneLine, OneLine, TwoLines
+    assert_eq!(
+        phase_cases(5, 2, 2),
+        vec![Case::Dense, Case::OneLine, Case::OneLine, Case::TwoLines]
+    );
+    // (4,2,1): every phase is Case 3 (TwoLines)
+    assert_eq!(phase_cases(4, 2, 1), vec![Case::TwoLines; 4]);
+    // (3,1,1): single dense phase
+    assert_eq!(phase_cases(3, 1, 1), vec![Case::Dense]);
+}
+
+#[test]
+fn phase_case_table_matches_structural_derivation() {
+    // the precomputed table must agree with the from-scratch tap analysis
+    for &(k, s, p) in &TABLE1_CLASSES {
+        let table = phase_cases(k, s, p);
+        let mut derived = Vec::new();
+        for py in 0..s {
+            let ty = tdc::phase_taps_1d(k, s, p, py);
+            for px in 0..s {
+                let tx = tdc::phase_taps_1d(k, s, p, px);
+                derived.push(classify(
+                    ty.real_taps().clamp(1, 3),
+                    tx.real_taps().clamp(1, 3),
+                ));
+            }
+        }
+        assert_eq!(table, derived, "K={k} S={s} P={p}");
+        assert_eq!(p, default_padding(k, s), "Table I paddings");
+    }
+}
+
+#[test]
+fn live_position_counts_golden() {
+    // paper eq. 5: C(K_C) = 49 / 36 / 16
+    assert_eq!(c_of_kc(5, 2, 2), 49);
+    assert_eq!(c_of_kc(4, 2, 1), 36);
+    assert_eq!(c_of_kc(3, 1, 1), 16);
+    // per-case live positions and zero-row counts
+    assert_eq!(Case::Dense.live_positions(), 16);
+    assert_eq!(Case::OneLine.live_positions(), 12);
+    assert_eq!(Case::TwoLines.live_positions(), 9);
+    assert_eq!(Case::OneLine.zero_rows(), 4); // n
+    assert_eq!(Case::TwoLines.zero_rows(), 7); // 2n - 1
+    // F(4,3) ablation counterparts
+    assert_eq!(live_positions6(3, 3), 36);
+    assert_eq!(live_positions6(3, 2), 30);
+    assert_eq!(live_positions6(2, 2), 25);
+}
+
+#[test]
+fn nonzero_position_masks_golden() {
+    // row-major live indices in the 4x4 tile
+    assert_eq!(nonzero_positions(3, 3), (0..16).collect::<Vec<_>>());
+    assert_eq!(
+        nonzero_positions(3, 2),
+        vec![0, 1, 2, 4, 5, 6, 8, 9, 10, 12, 13, 14]
+    );
+    assert_eq!(nonzero_positions(2, 3), (0..12).collect::<Vec<_>>());
+    assert_eq!(nonzero_positions(2, 2), vec![0, 1, 2, 4, 5, 6, 8, 9, 10]);
+}
+
+#[test]
+fn transformed_subfilter_zeros_exactly_match_table_every_class() {
+    // decompose a random filter bank for each Table I class, transform every
+    // phase sub-filter, and check the *actual* zero pattern equals the
+    // table's predicted mask — the invariant the com-PE skip logic relies on
+    let mut rng = Rng::new(0x601D);
+    for &(k, s, p) in &TABLE1_CLASSES {
+        let w = Filter4::from_vec(2, 2, k, k, rng.normal_vec(2 * 2 * k * k));
+        let phases = tdc::decompose(&w, s, p);
+        let cases = phase_cases(k, s, p);
+        assert_eq!(phases.len(), cases.len(), "K={k}");
+        for (ph, case) in phases.iter().zip(&cases) {
+            let live = nonzero_positions(ph.ry.clamp(1, 3), ph.rx.clamp(1, 3));
+            assert_eq!(live.len(), case.live_positions(), "K={k}");
+            let bank = wingan::winograd::transforms::filter_bank_transform(&ph.g);
+            for tile in &bank {
+                for pos in 0..16 {
+                    let (i, j) = (pos / 4, pos % 4);
+                    if live.contains(&pos) {
+                        assert!(
+                            tile[i][j].abs() > 1e-12,
+                            "K={k}: predicted-live position {pos} is zero"
+                        );
+                    } else {
+                        assert_eq!(
+                            tile[i][j], 0.0,
+                            "K={k}: predicted-zero position {pos} is non-zero"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn winograd_deconv_golden_small_integer_case() {
+    // a fully hand-checkable deconv: 1x1 input [[2]], K=3 S=1 P=1 filter
+    // 1..9 — standard deconv output is the flipped-kernel center region
+    let x = Tensor3::from_vec(1, 1, 1, vec![2.0]);
+    let w = Filter4::from_vec(1, 1, 3, 3, (1..=9).map(f64::from).collect());
+    let y = tdc::deconv_naive(&x, &w, 1, 1);
+    assert_eq!((y.c, y.h, y.w), (1, 1, 1));
+    // oy=0, ox=0, P=1: ky=kx=1 -> w[1][1] = 5; y = 2 * 5
+    assert_eq!(y.at(0, 0, 0), 10.0);
+    let via_tdc = tdc::tdc_deconv(&x, &w, 1, 1);
+    assert_eq!(via_tdc.at(0, 0, 0), 10.0);
+}

@@ -13,8 +13,9 @@ use wingan::accel::functional::{run_tdc_deconv, run_winograd_deconv};
 use wingan::accel::{simulate_layer, AccelConfig};
 use wingan::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use wingan::coordinator::request::GenRequest;
+use wingan::engine::{self, Engine, PlanOptions, Planner, Select};
 use wingan::gan::workload::{layer_mults, Method};
-use wingan::gan::zoo::{Kind, Layer};
+use wingan::gan::zoo::{self, Gan, Kind, Layer, Scale};
 use wingan::prop::forall;
 use wingan::tdc;
 use wingan::util::prng::Rng;
@@ -317,6 +318,168 @@ fn prop_batcher_conserves_requests_in_fifo_order() {
             Ok(())
         },
     );
+}
+
+/// Random mini-generator: 1-3 chained deconv layers drawn from the paper's
+/// kernel classes, with random channel widths and a random input tensor.
+#[derive(Debug)]
+struct ModelCase {
+    gan: Gan,
+    weights: Vec<Filter4>,
+    x: Tensor3,
+}
+
+fn gen_model_case(rng: &mut Rng) -> ModelCase {
+    let n_layers = rng.int_in(1, 3);
+    let mut layers = Vec::new();
+    let mut c = rng.int_in(1, 4);
+    let mut h = rng.int_in(1, 4);
+    let c0 = c;
+    let h0 = h;
+    for _ in 0..n_layers {
+        let (k, s) = [(5usize, 2usize), (4, 2), (3, 1)][rng.below(3)];
+        let c_next = rng.int_in(1, 4);
+        layers.push(Layer::deconv(c, c_next, k, s, h));
+        c = c_next;
+        h *= s;
+    }
+    let gan = Gan { name: "prop-mini", year: 2026, layers };
+    let weights = gan
+        .layers
+        .iter()
+        .map(|l| {
+            Filter4::from_vec(
+                l.c_in,
+                l.c_out,
+                l.k,
+                l.k,
+                rng.normal_vec(l.c_in * l.c_out * l.k * l.k),
+            )
+        })
+        .collect();
+    let x = Tensor3::from_vec(c0, h0, h0, rng.normal_vec(c0 * h0 * h0));
+    ModelCase { gan, weights, x }
+}
+
+#[test]
+fn prop_engine_tdc_plans_bit_identical_to_composed_reference() {
+    // the tentpole numerics contract: whole-model execution through
+    // precompiled TDC plans reproduces the layer-composed standard-DeConv
+    // reference bit for bit, for any worker count
+    forall(
+        "engine(Tdc) == composed reference, bitwise",
+        24,
+        0xE7617E,
+        gen_model_case,
+        |c| {
+            let planner = Planner::new(PlanOptions {
+                select: Select::Force(Method::Tdc),
+                ..Default::default()
+            });
+            let plan = planner.compile(&c.gan, c.weights.clone());
+            let want = engine::reference_forward(&plan, &c.x);
+            for workers in [1usize, 3] {
+                let run = Engine::with_workers(plan.clone(), workers).run(&c.x);
+                let d = run.y.max_abs_diff(&want);
+                if d != 0.0 {
+                    return Err(format!("workers={workers}: max diff {d} (must be 0.0)"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_engine_auto_plans_match_reference_within_rounding() {
+    // Winograd-method plans change the arithmetic (that's the point); the
+    // result must still agree with the reference to f64 rounding, and be
+    // bitwise stable across worker counts
+    forall(
+        "engine(Auto) ~= composed reference",
+        16,
+        0xFA57,
+        gen_model_case,
+        |c| {
+            let plan = Planner::default().compile(&c.gan, c.weights.clone());
+            let want = engine::reference_forward(&plan, &c.x);
+            let r1 = Engine::with_workers(plan.clone(), 1).run(&c.x);
+            let r3 = Engine::with_workers(plan.clone(), 3).run(&c.x);
+            if r1.y.max_abs_diff(&r3.y) != 0.0 {
+                return Err("worker count changed the bits".into());
+            }
+            let scale = want.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            let rel = r1.y.max_abs_diff(&want) / scale;
+            if rel < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("relative diff {rel}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_engine_events_sum_per_layer() {
+    // aggregate events must equal the per-layer sum (no work lost or
+    // double-counted by the worker pool)
+    forall("engine events add up", 16, 0xAD0, gen_model_case, |c| {
+        let run = Engine::with_workers(
+            Planner::default().compile(&c.gan, c.weights.clone()),
+            2,
+        )
+        .run(&c.x);
+        let mut sum = wingan::accel::functional::Events::default();
+        for e in &run.per_layer {
+            sum.merge(e);
+        }
+        if sum == run.events && run.events.mults > 0 {
+            Ok(())
+        } else {
+            Err(format!("per-layer {:?} != total {:?}", sum, run.events))
+        }
+    });
+}
+
+#[test]
+fn engine_pinned_to_reference_on_all_four_zoo_generators() {
+    // the acceptance pin: every Table-I generator, whole-model, through the
+    // engine — TDC plans bitwise-equal to the composed reference, Auto
+    // (Winograd fast path) equal to rounding
+    let mut rng = Rng::new(0x200);
+    for g in zoo::all(Scale::Tiny) {
+        let exact_planner = Planner::new(PlanOptions {
+            select: Select::Force(Method::Tdc),
+            ..Default::default()
+        });
+        let exact_plan = exact_planner.compile_seeded(&g, 17);
+        let (c, h, w) = exact_plan.input_shape;
+        let x = Tensor3::from_vec(c, h, w, rng.normal_vec(c * h * w));
+        let want = engine::reference_forward(&exact_plan, &x);
+
+        let run = Engine::with_workers(exact_plan.clone(), 2).run(&x);
+        assert_eq!(
+            run.y.max_abs_diff(&want),
+            0.0,
+            "{}: TDC plan must be bit-identical to the composed reference",
+            g.name
+        );
+
+        let auto_plan = Planner::default().compile_seeded(&g, 17);
+        assert!(auto_plan.n_winograd_layers() > 0, "{}", g.name);
+        let fast = Engine::with_workers(auto_plan, 2).run(&x);
+        let scale = want.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        let rel = fast.y.max_abs_diff(&want) / scale;
+        assert!(rel < 1e-9, "{}: Winograd whole-model relative diff {rel}", g.name);
+        // the fast path must actually skip work: fewer multiplies than TDC
+        assert!(
+            fast.events.mults < run.events.mults,
+            "{}: winograd {} vs tdc {} multiplies",
+            g.name,
+            fast.events.mults,
+            run.events.mults
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,153 @@
+//! Minimal, API-compatible subset of the `anyhow` crate for offline builds.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the surface the workspace uses: [`Error`], [`Result`],
+//! the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and the [`Context`]
+//! extension trait. Swapping in the real `anyhow` is a one-line Cargo.toml
+//! change; nothing here depends on shim-specific behaviour.
+
+use std::fmt;
+
+/// A type-erased error with a human-readable context chain.
+///
+/// Unlike the real `anyhow::Error` this stores the rendered message chain
+/// rather than the live error values — enough for every use in this
+/// workspace (all errors end up displayed, never downcast).
+pub struct Error {
+    /// innermost cause first; contexts are pushed at the front when added
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach outer context (rendered like anyhow's `{:#}` chain).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{}` shows the outermost context; `{:#}` shows the whole chain,
+        // matching how anyhow is conventionally printed.
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`, defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+// NOTE: method generics here must match the trait declaration exactly.
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path")
+            .map(|_| ())
+            .with_context(|| "reading config".to_string())
+    }
+
+    #[test]
+    fn context_chain_renders_outermost_then_full() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        assert!(full.len() > "reading config: ".len());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let n: i32 = "not a number".parse()?;
+            Ok(n)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_compile_and_format() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative: -1");
+        assert_eq!(format!("{}", f(101).unwrap_err()), "too big: 101");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+    }
+}
