@@ -7,12 +7,16 @@
 //! 4. A/B the winograd route against the tdc route (the bit-exact
 //!    standard-DeConv reference datapath) on identical inputs.
 //!
-//! Run with: `cargo run --release --example native_serve [-- --model dcgan --requests 32]`
+//! Run with:
+//! `cargo run --release --example native_serve [-- --model dcgan --requests 32 --workers 4]`
+//!
+//! `--workers` sizes the one persistent worker pool every route's engine
+//! shares (0/absent = `WINGAN_WORKERS` env, then one thread per core).
 
 use std::time::{Duration, Instant};
 use wingan::cli::Args;
 use wingan::coordinator::{Coordinator, ServeConfig};
-use wingan::engine::{model_id, NativeConfig, Planner};
+use wingan::engine::{model_id, resolve_workers, NativeConfig, Planner};
 use wingan::gan::zoo::{self, Scale};
 use wingan::util::bin;
 use wingan::util::prng::Rng;
@@ -21,6 +25,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
     let model = model_id(args.get_or("model", "dcgan"));
     let n_requests = args.get_usize("requests", 32).map_err(anyhow::Error::msg)?;
+    let workers = args.get_workers().map_err(anyhow::Error::msg)?;
 
     // --- 0. what does the plan compiler decide? ----------------------------
     let g = zoo::all(Scale::Small)
@@ -49,13 +54,18 @@ fn main() -> anyhow::Result<()> {
     // --- 1. serving coordinator on the native backend ----------------------
     let t0 = Instant::now();
     let coord = Coordinator::start_native(
-        NativeConfig { scale: Scale::Small, ..Default::default() },
+        NativeConfig { scale: Scale::Small, workers, ..Default::default() },
         ServeConfig {
             max_wait: Duration::from_millis(5),
             preload_models: Some(vec![model.clone()]),
         },
     )?;
-    println!("\nengine ready in {:?} (plans compiled once, cached)", t0.elapsed());
+    println!(
+        "\nengine ready in {:?} (plans compiled once; persistent pool of {} workers \
+         shared by all routes)",
+        t0.elapsed(),
+        resolve_workers(workers)
+    );
 
     let route = coord.router().route(&model, "winograd")
         .map_err(anyhow::Error::msg)?;

@@ -1,12 +1,15 @@
 //! Bench: hot-path microbenchmarks for the §Perf optimisation pass —
 //! Winograd transforms, the reordered com-PE engine, the functional/cycle
-//! simulators, the batcher, JSON, and (if artifacts exist) the PJRT
-//! execute path that serves requests.
+//! simulators, the persistent worker pool (spawn-overhead elimination +
+//! batch-level scaling), the batcher, JSON, and (if artifacts exist) the
+//! PJRT execute path that serves requests.
 
 use std::time::{Duration, Instant};
 use wingan::accel::functional::run_winograd_deconv;
 use wingan::accel::{simulate_model, AccelConfig};
-use wingan::benchlib::{black_box, Bench};
+use wingan::benchlib::{black_box, speedup_line, Bench};
+use wingan::engine::pool::WorkerPool;
+use wingan::engine::BatchSchedule;
 use wingan::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use wingan::coordinator::request::GenRequest;
 use wingan::engine::plan::seeded_weights;
@@ -101,6 +104,43 @@ fn main() {
         m_seed.median() / m_en.median(),
         en.workers()
     );
+
+    // --- pool: spawn-overhead elimination --------------------------------
+    // PR 1 spawned scoped threads per phase per layer per request; the
+    // persistent pool pays thread creation once at startup. Near-empty
+    // chunks make the dispatch overhead itself the measured quantity: the
+    // baseline spawns 3 threads per call (chunk 0 runs on the caller, as
+    // the old run_chunked did), the pool queues 3 jobs per call.
+    let pool = WorkerPool::shared(4);
+    let m_spawn = b.run("dispatch: scoped spawn per call (PR-1 style)", || {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> =
+                (1..4usize).map(|i| scope.spawn(move || black_box(i * i))).collect();
+            black_box(0usize) + handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+        })
+    });
+    let m_pool = b.run("dispatch: persistent pool, same 4 chunks", || {
+        pool.run_chunked(4, 4, |s, _e| black_box(s * s)).into_iter().sum::<usize>()
+    });
+    println!("{}", speedup_line("spawn-overhead elimination", &m_spawn, &m_pool));
+
+    // --- engine: batch-level scaling vs sequential samples ---------------
+    // the serving path executes whole buckets through Engine::run_batch;
+    // sample-level scheduling keeps every worker on a whole sample (no
+    // per-layer barrier), the sequential baseline is PR 1's run_batch
+    // (samples one after another, stripes parallel inside each).
+    let batch: Vec<Tensor3> = (0..8)
+        .map(|_| Tensor3::from_vec(ci0, h0, w0, rng.normal_vec(ci0 * h0 * w0)))
+        .collect();
+    let bq = Bench::quick();
+    let m_seq = bq.run("engine: batch of 8, sequential samples (stripe-level)", || {
+        black_box(en.run_batch_with(&batch, BatchSchedule::StripeLevel).len())
+    });
+    let m_smp = bq.run("engine: batch of 8, sample-level on shared pool", || {
+        black_box(en.run_batch_with(&batch, BatchSchedule::SampleLevel).len())
+    });
+    println!("{}", speedup_line("batch-level scaling vs sequential samples", &m_seq, &m_smp));
+    println!("  -> sample-level serving throughput: {:.1} img/s (batch 8)", m_smp.throughput(8));
 
     // cycle simulator
     let cfg = AccelConfig::default();

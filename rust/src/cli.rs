@@ -63,6 +63,15 @@ impl Args {
         }
     }
 
+    /// The shared worker-pool sizing flag, `--workers N`. Returns 0 when
+    /// absent — the "no explicit request" value every consumer resolves
+    /// through [`crate::engine::resolve_workers`] (env `WINGAN_WORKERS`,
+    /// then one thread per core), so CLI, env and default sizing share one
+    /// override path.
+    pub fn get_workers(&self) -> Result<usize, String> {
+        self.get_usize("workers", 0)
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
     }
@@ -92,6 +101,13 @@ mod tests {
         assert_eq!(a.get_or("model", "all"), "all");
         assert_eq!(a.get_usize("requests", 16).unwrap(), 16);
         assert_eq!(a.get_f64("rate", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn workers_flag_defaults_to_unset() {
+        assert_eq!(parse("serve").get_workers().unwrap(), 0);
+        assert_eq!(parse("serve --workers 6").get_workers().unwrap(), 6);
+        assert!(parse("serve --workers lots").get_workers().is_err());
     }
 
     #[test]

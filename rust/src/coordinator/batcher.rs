@@ -8,6 +8,12 @@
 //! fits the ready requests; missing slots are padded with zero samples
 //! (tracked, so batch-efficiency is observable).
 //!
+//! The bucket width this batcher picks is what drives the execution-side
+//! scheduling decision downstream: on the native backend a wide bucket
+//! runs sample-parallel on the shared worker pool, a narrow one runs
+//! stripe-parallel inside each sample (see
+//! [`crate::engine::BatchSchedule`]).
+//!
 //! Pure state machine — time is passed in, so tests drive it deterministically.
 
 use crate::coordinator::request::GenRequest;

@@ -1,8 +1,24 @@
-//! L3 coordinator: the serving layer — request router, dynamic batcher
-//! packing into batch buckets, a single-owner engine thread over a
-//! pluggable execution backend (native precompiled-plan engine or PJRT),
-//! and serving metrics (vLLM-router-style architecture scaled to this
-//! system).
+//! L3 coordinator: the serving layer (vLLM-router-style architecture
+//! scaled to this system).
+//!
+//! A generation request travels:
+//!
+//! 1. [`Router`] ([`router`]) — validates `(model, method)` against the
+//!    routes the artifact manifest advertises and checks sample shapes;
+//! 2. [`DynamicBatcher`] ([`batcher`]) — per-route FIFO that packs
+//!    requests into the advertised batch buckets, shipping a batch when
+//!    the largest bucket fills or the oldest request has waited
+//!    `max_wait`;
+//! 3. [`Coordinator`] ([`server`]) — the single-owner engine thread that
+//!    drains batchers into a pluggable [`ExecBackend`]: the native
+//!    precompiled-plan engine ([`crate::engine::NativeRuntime`], whose
+//!    routes all share one persistent worker pool) or PJRT
+//!    ([`crate::runtime::Runtime`], gated off in offline builds);
+//! 4. [`Metrics`] ([`metrics`]) — queue/exec/e2e latency histograms,
+//!    batch-efficiency counters, and a one-line serving report.
+//!
+//! Requests and replies cross threads over channels ([`request`] defines
+//! the wire types); python is never on this path.
 
 pub mod batcher;
 pub mod metrics;

@@ -15,6 +15,15 @@
 //! The engine blocks on the request channel with a timeout equal to the
 //! nearest batcher deadline, so partial batches ship on time without a
 //! busy loop.
+//!
+//! On the native backend, compute threading is *not* per request: the
+//! [`crate::engine::NativeRuntime`] built at startup owns one persistent
+//! [`crate::engine::WorkerPool`] (sized by
+//! [`NativeConfig::workers`](crate::engine::NativeConfig), default one
+//! thread per core) that every route's engine dispatches to. A released
+//! batch executes via the engine's two-level scheduler — wide buckets fan
+//! out across samples, narrow ones across stripes inside each sample — so
+//! the pool stays busy without the spawn-per-phase threading of PR 1.
 
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, ReadyBatch};
 use crate::coordinator::metrics::Metrics;
@@ -132,12 +141,15 @@ impl Coordinator {
     }
 
     /// Start the engine thread on the native execution backend: every
-    /// route's [`crate::engine`] plan is compiled before the coordinator
-    /// reports ready, then generation requests batch and execute through
-    /// the precompiled plans — no PJRT, no artifacts on disk.
+    /// route's [`crate::engine`] plan is compiled — and the one worker
+    /// pool all routes share is spawned — before the coordinator reports
+    /// ready, then generation requests batch and execute through the
+    /// precompiled plans — no PJRT, no artifacts on disk, no thread
+    /// spawns on the request path.
     ///
     /// `cfg.preload_models`, when set, restricts which zoo models get
-    /// compiled (same semantics as the PJRT path).
+    /// compiled (same semantics as the PJRT path); `native.workers` sizes
+    /// the shared pool (0 = env/core default).
     pub fn start_native(mut native: NativeConfig, cfg: ServeConfig) -> Result<Coordinator> {
         if let Some(models) = &cfg.preload_models {
             native.models = Some(models.clone());

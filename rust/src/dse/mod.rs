@@ -6,6 +6,12 @@
 //! optimisation, refs [21, 22]), and returns the Pareto set plus the
 //! selected optimum. With the paper's constraints the optimiser lands on
 //! the paper's choice `(T_m, T_n) = (4, 128)` — see the tests.
+//!
+//! The same cycle model doubles as the engine's compile-time method
+//! selector: [`crate::engine::Planner`] races TDC against Winograd per
+//! layer through it (`Select::Auto`), so the method decision the paper
+//! made by hand happens in the plan compiler here. `wingan dse` prints
+//! the sweep as the paper-style table ([`crate::report::dse_table`]).
 
 use crate::accel::config::AccelConfig;
 use crate::accel::cycle::simulate_model;

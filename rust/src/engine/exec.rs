@@ -2,11 +2,19 @@
 //! the plan-compile / execute split).
 //!
 //! The [`Engine`] walks a [`ModelPlan`] layer by layer, handing each
-//! layer's activation tensor to the next, and parallelises every layer
-//! across output stripes (tile rows on the Winograd datapath, output rows
-//! on the TDC/conv datapaths) on a scoped worker pool. Each output pixel is
-//! produced by exactly one worker with a fixed accumulation order, so the
-//! result is **bitwise independent of the worker count**, and the TDC
+//! layer's activation tensor to the next, and schedules work on a
+//! persistent [`WorkerPool`] at **two levels** ([`BatchSchedule`]):
+//!
+//! * **stripe-level** — each layer is split across output stripes (tile
+//!   rows on the Winograd datapath, output rows on the TDC/conv
+//!   datapaths); this is how single requests and narrow batches run;
+//! * **sample-level** — a wide batch dispatches one pool task per sample,
+//!   each sample executing its layers single-threaded, so whole samples
+//!   stream through the workers with no per-layer synchronisation.
+//!
+//! Each output pixel is produced by exactly one task with a fixed
+//! accumulation order under *either* schedule, so the result is **bitwise
+//! independent of the worker count and of the schedule**, and the TDC
 //! datapath is **bit-identical (f64) to the layer-composed standard-DeConv
 //! reference** ([`crate::engine::reference_forward`]).
 //!
@@ -21,7 +29,7 @@ use std::time::{Duration, Instant};
 
 use crate::accel::functional::Events;
 use crate::engine::plan::{LayerPlan, ModelPlan};
-use crate::engine::pool::{default_workers, run_chunked};
+use crate::engine::pool::{resolve_workers, WorkerPool};
 use crate::gan::workload::Method;
 use crate::gan::zoo::Kind;
 use crate::tdc;
@@ -41,33 +49,76 @@ pub struct EngineRun {
     pub elapsed: Duration,
 }
 
-/// Executes precompiled [`ModelPlan`]s with stripe-level parallelism.
+/// How [`Engine::run_batch`] schedules a batch on the worker pool. Both
+/// schedules produce bitwise-identical outputs and event counts; they
+/// differ only in which axis feeds the pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchSchedule {
+    /// One pool task per sample; each sample executes its layers inline
+    /// (single-threaded). Chosen when the batch is wide enough to keep
+    /// every worker busy on whole samples — no per-layer barrier, better
+    /// cache locality per worker.
+    SampleLevel,
+    /// Samples run one after another, each layer split across output
+    /// stripes on the pool. Chosen for narrow batches, where sample-level
+    /// dispatch would leave workers idle.
+    StripeLevel,
+}
+
+/// Executes precompiled [`ModelPlan`]s with two-level (sample × stripe)
+/// parallelism on a persistent [`WorkerPool`].
+///
+/// Engines are cheap to clone (the plan and pool are shared behind `Arc`s)
+/// and may share one pool via [`Engine::with_pool`] — the configuration a
+/// native server uses so every route's requests draw from one fixed set of
+/// worker threads.
 #[derive(Clone, Debug)]
 pub struct Engine {
     plan: Arc<ModelPlan>,
-    workers: usize,
+    pool: Arc<WorkerPool>,
 }
 
 impl Engine {
-    /// One worker per available core.
+    /// Private pool sized by [`resolve_workers`]`(0)`: one worker per core
+    /// unless the `WINGAN_WORKERS` environment variable overrides it.
     pub fn new(plan: ModelPlan) -> Engine {
-        Engine::with_workers(plan, default_workers())
+        Engine::with_pool(plan, WorkerPool::shared(resolve_workers(0)))
     }
 
+    /// Private pool with exactly `workers.max(1)` threads.
     pub fn with_workers(plan: ModelPlan, workers: usize) -> Engine {
-        Engine { plan: Arc::new(plan), workers: workers.max(1) }
+        Engine::with_pool(plan, WorkerPool::shared(workers.max(1)))
     }
 
+    /// Execute on an existing (typically shared) pool.
+    pub fn with_pool(plan: ModelPlan, pool: Arc<WorkerPool>) -> Engine {
+        Engine { plan: Arc::new(plan), pool }
+    }
+
+    /// The compiled plan this engine executes.
     pub fn plan(&self) -> &ModelPlan {
         &self.plan
     }
 
-    pub fn workers(&self) -> usize {
-        self.workers
+    /// The worker pool this engine dispatches to.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
-    /// Run the whole generator on one input activation tensor.
+    /// Worker-thread count of the underlying pool.
+    pub fn workers(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Run the whole generator on one input activation tensor,
+    /// stripe-parallel across the full pool.
     pub fn run(&self, x: &Tensor3) -> EngineRun {
+        self.run_with_chunks(x, self.pool.threads())
+    }
+
+    /// Run one sample, splitting every layer into at most `chunks` stripe
+    /// ranges (`chunks == 1` executes inline on the calling thread).
+    fn run_with_chunks(&self, x: &Tensor3, chunks: usize) -> EngineRun {
         let t0 = Instant::now();
         assert_eq!(
             (x.c, x.h, x.w),
@@ -79,7 +130,7 @@ impl Engine {
         let mut per_layer = Vec::with_capacity(self.plan.layers.len());
         let mut total = Events::default();
         for lp in &self.plan.layers {
-            let (y, ev) = self.run_layer(lp, &cur);
+            let (y, ev) = self.run_layer(lp, &cur, chunks);
             total.merge(&ev);
             per_layer.push(ev);
             cur = y;
@@ -87,17 +138,50 @@ impl Engine {
         EngineRun { y: cur, per_layer, events: total, elapsed: t0.elapsed() }
     }
 
-    /// Run a batch of samples sequentially (each sample parallel inside).
-    pub fn run_batch(&self, xs: &[Tensor3]) -> Vec<EngineRun> {
-        xs.iter().map(|x| self.run(x)).collect()
+    /// Scheduling decision for a batch of `batch` samples: sample-level
+    /// once the batch alone can occupy every pool thread, stripe-level
+    /// otherwise (including the single-threaded pool, where there is
+    /// nothing to win from sample dispatch).
+    pub fn batch_schedule(&self, batch: usize) -> BatchSchedule {
+        if self.pool.threads() > 1 && batch >= self.pool.threads() {
+            BatchSchedule::SampleLevel
+        } else {
+            BatchSchedule::StripeLevel
+        }
     }
 
-    fn run_layer(&self, lp: &LayerPlan, x: &Tensor3) -> (Tensor3, Events) {
+    /// Run a batch of samples under the automatically chosen
+    /// [`BatchSchedule`]. Outputs (and event counts) are bitwise identical
+    /// under either schedule, in sample order.
+    pub fn run_batch(&self, xs: &[Tensor3]) -> Vec<EngineRun> {
+        self.run_batch_with(xs, self.batch_schedule(xs.len()))
+    }
+
+    /// Run a batch under an explicit schedule (benchmarks and the
+    /// schedule-equivalence tests force both paths).
+    pub fn run_batch_with(&self, xs: &[Tensor3], schedule: BatchSchedule) -> Vec<EngineRun> {
+        match schedule {
+            BatchSchedule::StripeLevel => xs.iter().map(|x| self.run(x)).collect(),
+            // one chunk per sample normally; honoring the full (s, e) range
+            // keeps this correct under the pool's reentrancy fallback, which
+            // may hand the whole batch to one inline chunk
+            BatchSchedule::SampleLevel => self
+                .pool
+                .run_chunked(xs.len(), xs.len(), |s, e| {
+                    xs[s..e].iter().map(|x| self.run_with_chunks(x, 1)).collect::<Vec<_>>()
+                })
+                .into_iter()
+                .flatten()
+                .collect(),
+        }
+    }
+
+    fn run_layer(&self, lp: &LayerPlan, x: &Tensor3, chunks: usize) -> (Tensor3, Events) {
         match lp.layer.kind {
-            Kind::Conv => self.run_conv(lp, x),
+            Kind::Conv => self.run_conv(lp, x, chunks),
             Kind::Deconv => match lp.method {
-                Method::Winograd => self.run_deconv_winograd(lp, x),
-                _ => self.run_deconv_tdc(lp, x),
+                Method::Winograd => self.run_deconv_winograd(lp, x, chunks),
+                _ => self.run_deconv_tdc(lp, x, chunks),
             },
         }
     }
@@ -105,7 +189,7 @@ impl Engine {
     /// TDC datapath: S² phase correlations over phase-padded inputs.
     /// Per-pixel accumulation order matches `tdc::correlate_valid`, so the
     /// output is bit-identical to `tdc::tdc_deconv` regardless of workers.
-    fn run_deconv_tdc(&self, lp: &LayerPlan, x: &Tensor3) -> (Tensor3, Events) {
+    fn run_deconv_tdc(&self, lp: &LayerPlan, x: &Tensor3, n_chunks: usize) -> (Tensor3, Events) {
         let l = &lp.layer;
         let (s, kc) = (l.s, lp.kc);
         let mut y = Tensor3::zeros(l.c_out, s * x.h, s * x.w);
@@ -113,7 +197,7 @@ impl Engine {
         for (idx, ph) in lp.phases.iter().enumerate() {
             let (py, px) = (idx / s, idx % s);
             let xp = tdc::phase_pad(x, ph.d0y, ph.d0x, kc);
-            let chunks = run_chunked(self.workers, x.h, |oy_s, oy_e| {
+            let chunks = self.pool.run_chunked(n_chunks, x.h, |oy_s, oy_e| {
                 let mut part = Tensor3::zeros(l.c_out, oy_e - oy_s, x.w);
                 let mut pev = Events::default();
                 for co in 0..l.c_out {
@@ -162,7 +246,7 @@ impl Engine {
     /// com-PE sparse multiply over live rows only, post-PE inverse
     /// transform, phase interleave. Numerically identical to
     /// `accel::functional::run_winograd_deconv` (same kernels, same order).
-    fn run_deconv_winograd(&self, lp: &LayerPlan, x: &Tensor3) -> (Tensor3, Events) {
+    fn run_deconv_winograd(&self, lp: &LayerPlan, x: &Tensor3, n_chunks: usize) -> (Tensor3, Events) {
         let l = &lp.layer;
         let s = l.s;
         let mut y = Tensor3::zeros(l.c_out, s * x.h, s * x.w);
@@ -181,7 +265,7 @@ impl Engine {
             // datapaths bit-identical by construction
             let xp = crate::accel::functional::phase_padded(x, ph, ho_t, wo_t);
 
-            let chunks = run_chunked(self.workers, tiles_h, |ty_s, ty_e| {
+            let chunks = self.pool.run_chunked(n_chunks, tiles_h, |ty_s, ty_e| {
                 let mut part = Tensor3::zeros(l.c_out, M * (ty_e - ty_s), wo_t);
                 let mut pev = Events::default();
                 let mut v = vec![0.0; (N * N) * xp.c];
@@ -250,7 +334,7 @@ impl Engine {
     /// Spatial conv datapath (DiscoGAN's encoder): strided valid
     /// correlation over the border-padded input; accumulation order matches
     /// `tdc::conv2d` bit for bit.
-    fn run_conv(&self, lp: &LayerPlan, x: &Tensor3) -> (Tensor3, Events) {
+    fn run_conv(&self, lp: &LayerPlan, x: &Tensor3, n_chunks: usize) -> (Tensor3, Events) {
         let l = &lp.layer;
         let (k, s, p) = (l.k, l.s, l.p);
         // same output geometry as the tdc::conv2d reference (coincides with
@@ -258,7 +342,7 @@ impl Engine {
         let (ho, wo) = ((x.h + 2 * p - k) / s + 1, (x.w + 2 * p - k) / s + 1);
         let xp = x.pad(p, p, p, p);
         let g = &lp.weights;
-        let chunks = run_chunked(self.workers, ho, |oy_s, oy_e| {
+        let chunks = self.pool.run_chunked(n_chunks, ho, |oy_s, oy_e| {
             let mut part = Tensor3::zeros(l.c_out, oy_e - oy_s, wo);
             let mut pev = Events::default();
             for co in 0..l.c_out {
@@ -422,6 +506,46 @@ mod tests {
         // ... but across worker counts the engine is bit-stable
         assert_eq!(r1.y.max_abs_diff(&r4.y), 0.0);
         assert_eq!(r1.events.mults, r4.events.mults);
+    }
+
+    #[test]
+    fn batch_schedules_are_bitwise_equivalent() {
+        let mut rng = Rng::new(905);
+        let g = zoo::dcgan(Scale::Tiny);
+        let plan = Planner::default().compile_seeded(&g, 7);
+        let engine = Engine::with_workers(plan.clone(), 2);
+        let xs: Vec<Tensor3> = (0..4)
+            .map(|_| rand3(&mut rng, plan.input_shape.0, plan.input_shape.1, plan.input_shape.2))
+            .collect();
+        // wide batch on a 2-thread pool: the automatic policy goes sample-level
+        assert_eq!(engine.batch_schedule(xs.len()), BatchSchedule::SampleLevel);
+        assert_eq!(engine.batch_schedule(1), BatchSchedule::StripeLevel);
+        let sample = engine.run_batch_with(&xs, BatchSchedule::SampleLevel);
+        let stripe = engine.run_batch_with(&xs, BatchSchedule::StripeLevel);
+        let auto = engine.run_batch(&xs);
+        assert_eq!(sample.len(), xs.len());
+        for i in 0..xs.len() {
+            assert_eq!(sample[i].y.max_abs_diff(&stripe[i].y), 0.0, "sample {i}");
+            assert_eq!(sample[i].y.max_abs_diff(&auto[i].y), 0.0, "sample {i}");
+            assert_eq!(sample[i].events.mults, stripe[i].events.mults, "sample {i}");
+            assert_eq!(sample[i].events.stripes, stripe[i].events.stripes, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn engines_can_share_one_pool() {
+        let mut rng = Rng::new(906);
+        let g = zoo::dcgan(Scale::Tiny);
+        let plan = Planner::default().compile_seeded(&g, 7);
+        let pool = crate::engine::pool::WorkerPool::shared(2);
+        let a = Engine::with_pool(plan.clone(), pool.clone());
+        let b = Engine::with_pool(plan.clone(), pool.clone());
+        assert!(Arc::ptr_eq(a.pool(), b.pool()));
+        assert_eq!(a.workers(), 2);
+        let x = rand3(&mut rng, plan.input_shape.0, plan.input_shape.1, plan.input_shape.2);
+        let ra = a.run(&x);
+        let rb = b.run(&x);
+        assert_eq!(ra.y.max_abs_diff(&rb.y), 0.0);
     }
 
     #[test]

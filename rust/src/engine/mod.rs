@@ -12,12 +12,19 @@
 //!   per-layer method selection raced through the `dse` cycle model, and
 //!   fixed line-buffer geometry.
 //! * **Execute many** ([`exec`]): an [`Engine`] chains the whole generator
-//!   with activation hand-off between layers, stripe/tile parallelism on a
-//!   scoped worker pool ([`pool`]), and per-layer [`Events`] aggregation
-//!   that matches the seed's line-buffered functional simulator exactly.
+//!   with activation hand-off between layers, two-level (sample × stripe)
+//!   scheduling on a persistent [`WorkerPool`] ([`pool`]), and per-layer
+//!   [`Events`] aggregation that matches the seed's line-buffered
+//!   functional simulator exactly. Wide batches dispatch one pool task per
+//!   sample ([`BatchSchedule::SampleLevel`]); single requests and narrow
+//!   batches split every layer across output stripes
+//!   ([`BatchSchedule::StripeLevel`]).
 //! * **Serve** ([`serve`]): a [`NativeRuntime`] exposing compiled engines
 //!   behind the coordinator's artifact-manifest contract, so generation
-//!   requests batch and execute through precompiled plans.
+//!   requests batch and execute through precompiled plans — every route's
+//!   engine drawing from **one shared worker pool** sized once at startup
+//!   ([`pool::resolve_workers`]), never spawning threads on the request
+//!   path.
 //!
 //! Numerics contract: plans forced to the TDC method are **bit-identical
 //! (f64)** to [`reference_forward`], the layer-by-layer composition of the
@@ -31,8 +38,9 @@ pub mod plan;
 pub mod pool;
 pub mod serve;
 
-pub use exec::{Engine, EngineRun};
+pub use exec::{BatchSchedule, Engine, EngineRun};
 pub use plan::{LayerPlan, ModelPlan, PlanOptions, Planner, Select};
+pub use pool::{resolve_workers, WorkerPool};
 pub use serve::{model_id, native_manifest, NativeConfig, NativeRuntime};
 
 use crate::gan::zoo::Kind;

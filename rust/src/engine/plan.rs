@@ -40,6 +40,7 @@ pub enum Select {
 /// Plan-compile options.
 #[derive(Clone, Copy, Debug)]
 pub struct PlanOptions {
+    /// method-selection policy (auto DSE race, or forced)
     pub select: Select,
     /// accelerator config the method race + line-buffer geometry use
     pub cfg: AccelConfig,
@@ -54,6 +55,7 @@ impl Default for PlanOptions {
 /// One layer's precompiled execution plan.
 #[derive(Clone, Debug)]
 pub struct LayerPlan {
+    /// the zoo layer this plan executes
     pub layer: Layer,
     /// compile-time method decision (Conv layers always run the spatial
     /// conv datapath and record `Method::Tdc`)
@@ -82,10 +84,13 @@ impl LayerPlan {
     }
 }
 
-/// A whole generator, compiled.
+/// A whole generator, compiled: everything [`crate::engine::Engine`] needs
+/// to execute requests with zero per-request derivation.
 #[derive(Clone, Debug)]
 pub struct ModelPlan {
+    /// zoo model name (e.g. `"DCGAN"`)
     pub model: String,
+    /// per-layer plans, in execution order
     pub layers: Vec<LayerPlan>,
     /// `[C, H, W]` of the model input (first layer's input geometry)
     pub input_shape: (usize, usize, usize),
@@ -94,10 +99,12 @@ pub struct ModelPlan {
 }
 
 impl ModelPlan {
+    /// Flat f64 element count of one input sample.
     pub fn input_len(&self) -> usize {
         self.input_shape.0 * self.input_shape.1 * self.input_shape.2
     }
 
+    /// Flat f64 element count of one output sample.
     pub fn output_len(&self) -> usize {
         self.output_shape.0 * self.output_shape.1 * self.output_shape.2
     }
@@ -115,6 +122,8 @@ pub struct Planner {
 }
 
 impl Planner {
+    /// Planner with explicit options (`Planner::default()` races methods
+    /// through the DSE cycle model at the default accelerator config).
     pub fn new(opts: PlanOptions) -> Planner {
         Planner { opts }
     }

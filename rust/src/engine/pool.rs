@@ -1,63 +1,291 @@
-//! Stripe/tile worker pool: chunked parallel execution over row ranges.
+//! Persistent stripe/tile worker pool: chunked parallel execution over row
+//! ranges on long-lived threads.
 //!
-//! The engine parallelises each layer across *output stripes* (tile rows
-//! for the Winograd dataflow, output rows for the TDC datapath). Every
-//! stripe's pixels are computed entirely by one worker with a fixed
-//! per-pixel accumulation order, so results are bitwise independent of the
-//! worker count — parallelism never perturbs numerics.
+//! PR 1 parallelised each layer with `std::thread::scope`, spawning fresh
+//! OS threads *per phase per layer per request*. That is correct but pays
+//! thread-creation latency on every hot-path call — measurable once a
+//! server pushes many requests through many layers (see
+//! `benches/hotpath.rs`, "spawn-overhead elimination"). This module
+//! replaces it with a [`WorkerPool`]: threads are spawned once, fed through
+//! a channel-backed task queue, and reused for every subsequent dispatch.
+//! One pool is shared by every engine of a native server
+//! ([`crate::engine::NativeRuntime`]), so concurrent requests contend for
+//! the same fixed set of cores instead of oversubscribing the machine.
 //!
-//! Scoped threads (`std::thread::scope`) keep this dependency-free and let
-//! workers borrow the plan + input without `Arc` plumbing.
+//! # Scope-safe dispatch
+//!
+//! [`WorkerPool::run_chunked`] lets tasks borrow the caller's stack (the
+//! plan, the input tensor) without `Arc` plumbing, exactly like the scoped
+//! threads it replaces: the call does not return — by value, panic, or pool
+//! shutdown — until every task it queued has either finished or been
+//! destroyed unexecuted, so the borrows can never dangle. Internally that
+//! is one carefully-guarded lifetime erasure at the queue boundary; see the
+//! `SAFETY` comment in the source.
+//!
+//! # Numerics
+//!
+//! Every stripe's pixels are computed entirely by one task with a fixed
+//! per-pixel accumulation order, and results are returned in chunk order
+//! (ascending `start`), so results are **bitwise independent of the worker
+//! count and of scheduling** — parallelism never perturbs numerics. The
+//! engine's two batch schedules lean on the same property (see
+//! [`crate::engine::BatchSchedule`]).
+//!
+//! # Sizing
+//!
+//! Pool sizing is resolved in exactly one place, [`resolve_workers`]:
+//! an explicit request (CLI `--workers`, [`NativeConfig::workers`]) wins,
+//! then the `WINGAN_WORKERS` environment variable, then one thread per
+//! available core.
+//!
+//! [`NativeConfig::workers`]: crate::engine::NativeConfig#structfield.workers
 
-/// Split `0..n` into at most `workers` contiguous chunks and run `f(start,
-/// end)` for each, in parallel. Results come back in chunk order (ascending
-/// `start`). `workers <= 1` or `n <= 1` runs inline on the caller's thread.
-pub fn run_chunked<T: Send>(
-    workers: usize,
-    n: usize,
-    f: impl Fn(usize, usize) -> T + Sync,
-) -> Vec<T> {
-    if n == 0 {
-        return Vec::new();
+use std::any::Any;
+use std::cell::Cell;
+use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A type-erased unit of work on the pool's queue.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Unique id per pool instance, for worker-reentrancy detection.
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Id of the pool this thread is a worker of (0 = not a pool worker).
+    static WORKER_OF: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Environment variable consulted by [`resolve_workers`] when no explicit
+/// worker count is requested.
+pub const WORKERS_ENV: &str = "WINGAN_WORKERS";
+
+/// The single source of truth for pool sizing (the `default_workers`
+/// duplication of PR 1 lived in `engine/exec.rs` *and* `engine/serve.rs`;
+/// both now route here). Resolution order:
+///
+/// 1. `requested`, when non-zero (an explicit CLI `--workers` flag or
+///    config field);
+/// 2. the [`WORKERS_ENV`] environment variable, when set to a positive
+///    integer;
+/// 3. one worker per available core.
+pub fn resolve_workers(requested: usize) -> usize {
+    resolve_with(requested, std::env::var(WORKERS_ENV).ok())
+}
+
+/// [`resolve_workers`] with the environment injected, so the precedence
+/// rules are testable without mutating process-global state.
+fn resolve_with(requested: usize, env: Option<String>) -> usize {
+    if requested > 0 {
+        return requested;
     }
-    let n_chunks = workers.max(1).min(n);
-    if n_chunks == 1 {
-        return vec![f(0, n)];
+    if let Some(v) = env {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
     }
-    // near-equal chunks: the first `rem` chunks get one extra stripe
-    let base = n / n_chunks;
-    let rem = n % n_chunks;
-    let mut bounds = Vec::with_capacity(n_chunks);
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A fixed-size pool of long-lived worker threads fed by a channel-backed
+/// task queue.
+///
+/// Construction spawns the threads once ([`WorkerPool::new`], or
+/// [`WorkerPool::shared`] for the usual `Arc`-wrapped form); dispatch
+/// ([`WorkerPool::run_chunked`]) queues borrowed closures and blocks the
+/// caller until its tasks complete, with the caller's own thread executing
+/// the first chunk instead of idling. Dropping the pool closes the queue
+/// and joins every worker.
+pub struct WorkerPool {
+    /// `None` once shutdown has begun; closing the sender ends the workers.
+    tx: Mutex<Option<Sender<Job>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    threads: usize,
+    /// unique per pool; workers tag themselves with it (reentrancy guard)
+    id: u64,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads.max(1)` long-lived workers.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let id = NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("wingan-pool-{i}"))
+                    .spawn(move || {
+                        WORKER_OF.with(|w| w.set(id));
+                        worker_loop(&rx)
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { tx: Mutex::new(Some(tx)), handles: Mutex::new(handles), threads, id }
+    }
+
+    /// `Arc`-wrapped pool, ready to share across engines (one pool serves
+    /// every route of a native server).
+    pub fn shared(threads: usize) -> Arc<WorkerPool> {
+        Arc::new(WorkerPool::new(threads))
+    }
+
+    /// Number of worker threads (fixed at construction).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `0..n` into at most `max_chunks` contiguous chunks and run
+    /// `f(start, end)` for each, in parallel on the pool. Results come back
+    /// in chunk order (ascending `start`). `max_chunks <= 1` or `n <= 1`
+    /// runs inline on the caller's thread; otherwise the caller executes
+    /// the first chunk itself and pool workers take the rest.
+    ///
+    /// `f` may borrow freely from the caller's stack: the call blocks until
+    /// every queued task has run (or been destroyed by pool shutdown), and
+    /// a panic inside any chunk is re-raised here — after all sibling
+    /// chunks have been accounted for, never before.
+    ///
+    /// **Reentrancy**: dispatching from a thread that is itself a worker of
+    /// this pool would deadlock (the dispatcher blocks a worker slot while
+    /// its sub-tasks wait behind it in the queue), so that case is detected
+    /// and runs the whole range inline as one chunk instead — results stay
+    /// bitwise identical, since chunking never affects numerics.
+    pub fn run_chunked<T: Send>(
+        &self,
+        max_chunks: usize,
+        n: usize,
+        f: impl Fn(usize, usize) -> T + Sync,
+    ) -> Vec<T> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let n_chunks = max_chunks.max(1).min(n);
+        if n_chunks == 1 || WORKER_OF.with(|w| w.get()) == self.id {
+            return vec![f(0, n)];
+        }
+        let bounds = chunk_bounds(n_chunks, n);
+
+        // one queue-lock acquisition per dispatch, not per job (Sender is
+        // Clone and send() itself needs no lock here)
+        let queue = {
+            let tx = self.tx.lock().expect("pool queue lock poisoned");
+            tx.as_ref().expect("worker pool used after shutdown").clone()
+        };
+
+        // Each queued job sends exactly one message, even when its chunk
+        // panics; the drain loop below therefore observes every job.
+        let (done_tx, done_rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
+        for (i, &(s, e)) in bounds.iter().enumerate().skip(1) {
+            let tx = done_tx.clone();
+            let f = &f;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| f(s, e)));
+                let _ = tx.send((i, r));
+            });
+            // SAFETY: the job borrows `f` (and, through `T`, possibly the
+            // caller's stack). We erase that lifetime to put it on the
+            // 'static queue, which is sound because this function does not
+            // return — normally or by unwinding — until each queued job has
+            // either completed (its message was received) or been dropped
+            // unexecuted by pool shutdown (every `done_tx` clone gone, so
+            // `recv` disconnects). In both cases no job can touch the
+            // borrow after this frame dies. The caller-side panic path
+            // below drains the channel before re-raising for the same
+            // reason.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            queue.send(job).expect("worker pool queue closed");
+        }
+        drop(queue);
+        drop(done_tx);
+
+        // the caller's thread takes the first chunk instead of idling
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n_chunks);
+        slots.resize_with(n_chunks, || None);
+        let mut panicked: Option<Box<dyn Any + Send>> = None;
+        match catch_unwind(AssertUnwindSafe(|| f(bounds[0].0, bounds[0].1))) {
+            Ok(v) => slots[0] = Some(v),
+            Err(p) => panicked = Some(p),
+        }
+        for _ in 1..n_chunks {
+            match done_rx.recv() {
+                Ok((i, Ok(v))) => slots[i] = Some(v),
+                Ok((_, Err(p))) => panicked = Some(p),
+                Err(_) => {
+                    // pool shut down and dropped jobs without running them;
+                    // nothing outstanding can borrow from this frame anymore
+                    panicked = Some(Box::new("worker pool shut down mid-dispatch"));
+                    break;
+                }
+            }
+        }
+        if let Some(p) = panicked {
+            resume_unwind(p);
+        }
+        slots.into_iter().map(|s| s.expect("missing chunk result")).collect()
+    }
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.threads).finish()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Ok(mut tx) = self.tx.lock() {
+            tx.take(); // closing the queue ends every worker's recv loop
+        }
+        if let Ok(mut handles) = self.handles.lock() {
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // hold the lock only while receiving, never while running a job
+        let job = {
+            let rx = rx.lock().expect("pool receiver lock poisoned");
+            rx.recv()
+        };
+        match job {
+            // a panicking chunk is reported to its dispatcher through the
+            // job's own completion channel; the worker itself survives
+            Ok(job) => {
+                let _ = catch_unwind(AssertUnwindSafe(move || job()));
+            }
+            Err(_) => return, // queue closed: pool is shutting down
+        }
+    }
+}
+
+/// Split `0..n` into `k` near-equal contiguous `(start, end)` ranges; the
+/// first `n % k` chunks get one extra element.
+fn chunk_bounds(k: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = n / k;
+    let rem = n % k;
+    let mut bounds = Vec::with_capacity(k);
     let mut start = 0;
-    for i in 0..n_chunks {
+    for i in 0..k {
         let len = base + usize::from(i < rem);
         bounds.push((start, start + len));
         start += len;
     }
     debug_assert_eq!(start, n);
-
-    std::thread::scope(|scope| {
-        let f = &f;
-        let handles: Vec<_> = bounds
-            .iter()
-            .skip(1)
-            .map(|&(s, e)| scope.spawn(move || f(s, e)))
-            .collect();
-        // the caller's thread takes the first chunk instead of idling
-        let (s0, e0) = bounds[0];
-        let first = f(s0, e0);
-        let mut out = Vec::with_capacity(n_chunks);
-        out.push(first);
-        for h in handles {
-            out.push(h.join().expect("engine worker panicked"));
-        }
-        out
-    })
-}
-
-/// Default worker count: one per available core.
-pub fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    bounds
 }
 
 #[cfg(test)]
@@ -66,9 +294,10 @@ mod tests {
 
     #[test]
     fn covers_range_in_order() {
+        let pool = WorkerPool::new(4);
         for workers in [1, 2, 3, 7, 64] {
             for n in [0usize, 1, 2, 5, 16] {
-                let chunks = run_chunked(workers, n, |s, e| (s, e));
+                let chunks = pool.run_chunked(workers, n, |s, e| (s, e));
                 let mut expect = 0;
                 for (s, e) in &chunks {
                     assert_eq!(*s, expect, "workers={workers} n={n}");
@@ -83,9 +312,105 @@ mod tests {
 
     #[test]
     fn parallel_sum_matches_serial() {
+        let pool = WorkerPool::new(4);
         let data: Vec<u64> = (0..1000).collect();
         let serial: u64 = data.iter().sum();
-        let chunks = run_chunked(4, data.len(), |s, e| data[s..e].iter().sum::<u64>());
+        let chunks = pool.run_chunked(4, data.len(), |s, e| data[s..e].iter().sum::<u64>());
         assert_eq!(chunks.iter().sum::<u64>(), serial);
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_dispatches() {
+        let pool = WorkerPool::new(3);
+        for round in 0..200u64 {
+            let chunks = pool.run_chunked(3, 9, |s, e| (s as u64 + round, e));
+            assert_eq!(chunks.len(), 3);
+            assert_eq!(chunks[0].0, round);
+        }
+    }
+
+    #[test]
+    fn concurrent_dispatchers_share_one_pool() {
+        let pool = WorkerPool::shared(4);
+        let data: Vec<u64> = (0..512).collect();
+        let serial: u64 = data.iter().sum();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let pool = &pool;
+                    let data = &data;
+                    s.spawn(move || {
+                        let chunks =
+                            pool.run_chunked(4, data.len(), |a, b| data[a..b].iter().sum::<u64>());
+                        chunks.iter().sum::<u64>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), serial);
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk 2 exploded")]
+    fn chunk_panic_propagates_to_dispatcher() {
+        let pool = WorkerPool::new(4);
+        pool.run_chunked(4, 4, |s, _e| {
+            if s == 2 {
+                panic!("chunk 2 exploded");
+            }
+            s
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_dispatch() {
+        let pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_chunked(2, 2, |s, _e| {
+                if s == 1 {
+                    panic!("boom");
+                }
+                s
+            })
+        }));
+        assert!(r.is_err());
+        // the workers are still alive and serving
+        let chunks = pool.run_chunked(2, 8, |s, e| e - s);
+        assert_eq!(chunks.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn resolve_workers_precedence() {
+        // injected env keeps this test free of process-global mutation
+        assert_eq!(resolve_with(5, Some("3".into())), 5, "explicit request wins");
+        assert_eq!(resolve_with(0, Some("3".into())), 3, "env fills in for 0");
+        assert_eq!(resolve_with(0, Some(" 7 ".into())), 7, "env is trimmed");
+        assert!(resolve_with(0, Some("not-a-number".into())) >= 1, "garbage env -> cores");
+        assert!(resolve_with(0, Some("0".into())) >= 1, "zero env -> cores");
+        assert!(resolve_with(0, None) >= 1, "no env -> cores");
+        assert!(resolve_workers(0) >= 1, "end-to-end default is at least one worker");
+    }
+
+    #[test]
+    fn reentrant_dispatch_from_a_worker_runs_inline() {
+        // a task running on the pool that (transitively) dispatches to the
+        // same pool must not deadlock: the inner dispatch detects it is on
+        // a worker thread and runs inline as a single chunk
+        let pool = WorkerPool::new(2);
+        let outer = pool.run_chunked(2, 2, |s, _e| {
+            let inner = pool.run_chunked(4, 8, |a, b| (b - a) as u64);
+            (s as u64, inner.iter().sum::<u64>())
+        });
+        assert_eq!(outer.len(), 2);
+        for (_, inner_sum) in outer {
+            assert_eq!(inner_sum, 8);
+        }
+        // a different pool's workers are not "this pool": cross-pool
+        // dispatch still parallelises
+        let other = WorkerPool::new(2);
+        let chunks = pool.run_chunked(2, 4, |s, _e| other.run_chunked(2, 4, |a, b| b - a).len() + s);
+        assert_eq!(chunks.len(), 2);
     }
 }

@@ -20,6 +20,7 @@ use std::sync::{Arc, Mutex};
 use crate::accel::functional::Events;
 use crate::engine::exec::Engine;
 use crate::engine::plan::{PlanOptions, Planner, Select};
+use crate::engine::pool::{resolve_workers, WorkerPool};
 use crate::gan::workload::Method;
 use crate::gan::zoo::{self, Scale};
 use crate::runtime::{ArtifactEntry, Manifest};
@@ -32,7 +33,8 @@ pub struct NativeConfig {
     pub scale: Scale,
     /// batch buckets advertised per route (ascending)
     pub buckets: Vec<usize>,
-    /// engine worker threads per request (0 = one per core)
+    /// worker threads in the one pool shared by every route's engine
+    /// (0 = resolve via [`resolve_workers`]: `WINGAN_WORKERS`, then cores)
     pub workers: usize,
     /// weight seed (deterministic per model)
     pub seed: u64,
@@ -105,24 +107,27 @@ pub fn native_manifest(cfg: &NativeConfig) -> Manifest {
 
 /// The native execution backend: one compiled [`Engine`] per
 /// `(model, method)` route plus the manifest entries for shape checking.
+/// All engines dispatch to **one persistent [`WorkerPool`]**, spawned once
+/// in [`NativeRuntime::build`] — the request path never creates threads.
 pub struct NativeRuntime {
     engines: BTreeMap<(String, String), Engine>,
     entries: HashMap<String, ArtifactEntry>,
+    /// the one pool every route's engine executes on
+    pool: Arc<WorkerPool>,
     /// cumulative events across every executed sample (observability; the
     /// e2e tests assert monotone growth with batch size)
     events: Arc<Mutex<Events>>,
 }
 
 impl NativeRuntime {
-    /// Compile every advertised route's plan. This is the expensive,
-    /// once-per-startup step (the coordinator runs it on the engine thread
-    /// before reporting ready, like PJRT artifact compilation). The engine
-    /// set is derived from the manifest itself, so routes and engines can
-    /// never desynchronize.
+    /// Compile every advertised route's plan and spawn the shared worker
+    /// pool. This is the expensive, once-per-startup step (the coordinator
+    /// runs it on the engine thread before reporting ready, like PJRT
+    /// artifact compilation). The engine set is derived from the manifest
+    /// itself, so routes and engines can never desynchronize.
     pub fn build(cfg: &NativeConfig) -> NativeRuntime {
         let manifest = native_manifest(cfg);
-        let workers =
-            if cfg.workers == 0 { crate::engine::pool::default_workers() } else { cfg.workers };
+        let pool = WorkerPool::shared(resolve_workers(cfg.workers));
         let zoo_models = zoo::all(cfg.scale);
         let mut engines: BTreeMap<(String, String), Engine> = BTreeMap::new();
         for e in &manifest.entries {
@@ -141,10 +146,15 @@ impl NativeRuntime {
                 .1;
             let planner = Planner::new(PlanOptions { select, ..Default::default() });
             let plan = planner.compile_seeded(g, cfg.seed);
-            engines.insert(key, Engine::with_workers(plan, workers));
+            engines.insert(key, Engine::with_pool(plan, pool.clone()));
         }
         let entries = manifest.entries.iter().map(|e| (e.name.clone(), e.clone())).collect();
-        NativeRuntime { engines, entries, events: Arc::new(Mutex::new(Events::default())) }
+        NativeRuntime { engines, entries, pool, events: Arc::new(Mutex::new(Events::default())) }
+    }
+
+    /// The worker pool shared by every route's engine.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
     /// Handle to the cumulative event counters (cloneable across threads).
@@ -163,7 +173,9 @@ impl NativeRuntime {
 
     /// Execute one packed batch buffer against a named route artifact.
     /// Mirrors the PJRT executable contract: fixed batch shape, padded
-    /// slots are computed like real samples.
+    /// slots are computed like real samples. The batch goes through
+    /// [`Engine::run_batch`], so wide buckets parallelise across samples
+    /// and narrow ones across stripes — bitwise identical either way.
     pub fn execute(&self, name: &str, input: &[f32]) -> Result<Vec<f32>, String> {
         let entry = self.entries.get(name).ok_or_else(|| format!("unknown artifact {name}"))?;
         if input.len() != entry.input_len() {
@@ -180,12 +192,16 @@ impl NativeRuntime {
         let (c, h, w) = engine.plan().input_shape;
         let sample_in = c * h * w;
         let sample_out = engine.plan().output_len();
+        let xs: Vec<Tensor3> = (0..entry.batch)
+            .map(|b| {
+                let chunk = &input[b * sample_in..(b + 1) * sample_in];
+                Tensor3::from_vec(c, h, w, chunk.iter().map(|&v| v as f64).collect())
+            })
+            .collect();
+        let runs = engine.run_batch(&xs);
         let mut out = Vec::with_capacity(entry.batch * sample_out);
         let mut batch_events = Events::default();
-        for b in 0..entry.batch {
-            let chunk = &input[b * sample_in..(b + 1) * sample_in];
-            let x = Tensor3::from_vec(c, h, w, chunk.iter().map(|&v| v as f64).collect());
-            let run = engine.run(&x);
+        for run in &runs {
             batch_events.merge(&run.events);
             out.extend(run.y.data.iter().map(|&v| v as f32));
         }
@@ -231,6 +247,21 @@ mod tests {
         rt.execute(&e2.name, &vec![0.5; e2.input_len()]).unwrap();
         // batch-2 adds exactly twice the single-sample work
         assert_eq!(rt.events().mults, after_one * 3);
+    }
+
+    #[test]
+    fn all_routes_share_one_worker_pool() {
+        let rt = NativeRuntime::build(&NativeConfig {
+            scale: Scale::Tiny,
+            buckets: vec![1, 2],
+            workers: 2,
+            ..Default::default()
+        });
+        let wino = rt.engine("dcgan", "winograd").unwrap();
+        let tdc = rt.engine("gpgan", "tdc").unwrap();
+        assert!(Arc::ptr_eq(wino.pool(), rt.pool()));
+        assert!(Arc::ptr_eq(tdc.pool(), rt.pool()));
+        assert_eq!(rt.pool().threads(), 2);
     }
 
     #[test]

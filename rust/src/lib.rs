@@ -15,14 +15,31 @@
 //!   cycle-level FPGA accelerator simulator ([`accel`], [`dse`],
 //!   [`resource`], [`energy`]).
 //!
+//! # Module map
+//!
+//! | Module | Role (paper anchor) |
+//! |---|---|
+//! | [`tdc`] | DeConv-to-Conv conversion + reference DeConv (§II.A, §III-A) |
+//! | [`winograd`] | F(2×2, 3×3) transforms, Table-I sparsity, reordered layout (§II.B, §III.B) |
+//! | [`gan`] | Table-I model zoo + workload characterisation |
+//! | [`engine`] | plan compile → two-level parallel execute → native serving (§IV dataflow) |
+//! | [`coordinator`] | router, dynamic batcher, serving engine thread, metrics |
+//! | [`runtime`] | PJRT artifact manifest + (offline-gated) executor |
+//! | [`accel`] | line buffers, functional dataflow, cycle model (§IV.B, §V) |
+//! | [`dse`] | design-space exploration, eqs. 5–9 (§IV.C) |
+//! | [`resource`] / [`energy`] | Table II resource + Fig. 9 energy models |
+//! | [`report`] | the paper's tables/figures as printable reports |
+//! | [`cli`] / [`benchlib`] / [`util`] / [`prop`] | flag parsing, bench harness, tensors/PRNG/JSON, property-test harness |
+//!
 //! The **plan-compile / execute split** is the load-bearing design: a
 //! [`engine::Planner`] does all per-model derivation once (TDC phase
 //! decomposition, Winograd `G g Gᵀ` filter transforms + sparsity
 //! reordering, DSE-raced method selection, line-buffer geometry), and the
-//! [`engine::Engine`] then runs the whole generator per request with
-//! stripe/tile parallelism — bit-identical (f64) to the layer-composed
-//! `tdc` standard-DeConv reference on the exact datapath, and
-//! worker-count-invariant everywhere.
+//! [`engine::Engine`] then runs the whole generator per request on a
+//! persistent [`engine::WorkerPool`] with two-level (sample × stripe)
+//! scheduling — bit-identical (f64) to the layer-composed `tdc`
+//! standard-DeConv reference on the exact datapath, and invariant, bit for
+//! bit, to worker count and batch schedule everywhere.
 //!
 //! The algorithmic substrates ([`tdc`], [`winograd`], [`gan`]) mirror the
 //! python oracles; `rust/tests/proptests.rs` pins them to each other and

@@ -31,10 +31,12 @@ USAGE: wingan <subcommand> [flags]
   verify [--artifacts DIR]
   serve  [--artifacts DIR] [--native] [--scale small|tiny] [--model dcgan]
          [--method winograd] [--requests 64] [--rate 200] [--max-wait-ms 20]
-         [--seed 7]
+         [--seed 7] [--workers N]
 
 serve runs on the native precompiled-plan engine when --native is given or
 when the PJRT artifacts are unavailable (this offline build always is).
+--workers sizes the one persistent worker pool every route's engine shares
+(0/absent = WINGAN_WORKERS env, then one thread per core).
 ";
 
 fn main() {
@@ -161,6 +163,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let rate = args.get_f64("rate", 200.0).map_err(anyhow::Error::msg)?;
     let max_wait = args.get_usize("max-wait-ms", 20).map_err(anyhow::Error::msg)?;
     let seed = args.get_usize("seed", 7).map_err(anyhow::Error::msg)? as u64;
+    let workers = args.get_workers().map_err(anyhow::Error::msg)?;
 
     let serve_cfg = ServeConfig {
         max_wait: Duration::from_millis(max_wait as u64),
@@ -178,9 +181,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                  real tensors; paper-scale channels are cycle-model territory)"
             ),
         };
-        println!("compiling native engine plans for {model} ({scale:?} scale)...");
+        println!(
+            "compiling native engine plans for {model} ({scale:?} scale, pool of {} workers)...",
+            wingan::engine::resolve_workers(workers)
+        );
         Coordinator::start_native(
-            wingan::engine::NativeConfig { scale, ..Default::default() },
+            wingan::engine::NativeConfig { scale, workers, ..Default::default() },
             serve_cfg,
         )?
     } else {

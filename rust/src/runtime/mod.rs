@@ -1,6 +1,17 @@
-//! Runtime: PJRT execution of the AOT artifacts (HLO text -> compile ->
-//! execute). See `manifest` for the python/rust contract and `client` for
-//! the execution engine.
+//! Runtime: PJRT execution of the AOT artifacts (HLO text → compile →
+//! execute).
+//!
+//! * [`manifest`] — the python/rust contract: `python/compile/aot.py`
+//!   writes a `manifest.json` describing each artifact ([`ArtifactEntry`]:
+//!   model, method, batch bucket, shapes, golden vectors); [`Manifest`]
+//!   loads and indexes it. The native backend synthesises the same
+//!   manifest shape with no files behind it
+//!   ([`crate::engine::native_manifest`]), so the coordinator's router is
+//!   backend-agnostic.
+//! * [`client`] — the execution engine. In offline builds the `xla` crate
+//!   is unavailable, so [`Runtime`] preserves the full API but reports
+//!   itself unavailable at construction; `rust/tests/runtime_e2e.rs`
+//!   un-skips automatically once a real PJRT backend is restored.
 
 pub mod client;
 pub mod manifest;

@@ -1,6 +1,21 @@
-//! Winograd minimal-filtering substrate: F(2x2,3x3) transforms, structural
-//! sparsity analysis of TDC sub-filters, and the reordered `n^2 x N`
-//! dataflow layout (paper §II.B, §III).
+//! Winograd minimal-filtering substrate (paper §II.B, §III).
+//!
+//! * [`transforms`] — the F(2×2, 3×3) matrices and transform kernels:
+//!   input `Bᵀ Z B`, filter `G g Gᵀ`, inverse `Aᵀ M A`, with tile sizes
+//!   [`M`] (output), [`N`] (input) and filter support [`R`].
+//! * [`f43`] — the F(4×3) variant used for analytic comparisons.
+//! * [`sparsity`] — Table I: TDC phase filters fall into structural
+//!   sparsity [`Case`]s in the Winograd domain; [`classify`] detects the
+//!   case, [`c_of_kc`] counts the surviving (live) positions that the
+//!   accelerator actually multiplies.
+//! * [`layout`] — the zero-row-free `n² × N` reordered filter layout
+//!   (§III.B): filters are regrouped so the com-PE array multiplies only
+//!   live rows, which is what restores PE utilization after the
+//!   TDC × Winograd combination.
+//!
+//! The python oracle (`python/tests/test_winograd.py`,
+//! `test_sparsity.py`) pins these kernels; the engine consumes them
+//! exclusively through precompiled plans.
 
 pub mod f43;
 pub mod layout;

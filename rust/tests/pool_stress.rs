@@ -1,0 +1,151 @@
+//! Pool-focused tests: the persistent worker pool under concurrent serving
+//! load, and the two-level batch scheduler's bitwise-equivalence contract.
+//!
+//! * **Stress** — many OS threads push `run_batch` calls through one shared
+//!   [`WorkerPool`] concurrently; every output must equal the serial
+//!   (1-worker) reference bit for bit.
+//! * **Regression** — batch-level (`SampleLevel`) and stripe-level
+//!   (`StripeLevel`) scheduling produce bitwise-identical outputs and event
+//!   counts for every zoo model.
+
+use std::sync::Arc;
+
+use wingan::engine::pool::WorkerPool;
+use wingan::engine::{BatchSchedule, Engine, NativeConfig, NativeRuntime, Planner};
+use wingan::gan::zoo::{self, Scale};
+use wingan::util::prng::Rng;
+use wingan::util::tensor::Tensor3;
+
+fn rand3(rng: &mut Rng, shape: (usize, usize, usize)) -> Tensor3 {
+    let (c, h, w) = shape;
+    Tensor3::from_vec(c, h, w, rng.normal_vec(c * h * w))
+}
+
+#[test]
+fn stress_concurrent_run_batch_through_one_shared_pool() {
+    let g = zoo::dcgan(Scale::Tiny);
+    let plan = Planner::default().compile_seeded(&g, 11);
+
+    // serial ground truth on a single worker (everything runs inline)
+    let serial = Engine::with_workers(plan.clone(), 1);
+
+    let pool = WorkerPool::shared(4);
+    let shared = Engine::with_pool(plan.clone(), pool.clone());
+
+    const CALLERS: usize = 8;
+    const BATCH: usize = 5;
+    const ROUNDS: usize = 3;
+
+    // per-caller deterministic inputs + their serial references
+    let mut rng = Rng::new(500);
+    let inputs: Vec<Vec<Tensor3>> = (0..CALLERS * ROUNDS)
+        .map(|_| (0..BATCH).map(|_| rand3(&mut rng, plan.input_shape)).collect())
+        .collect();
+    let want: Vec<Vec<Tensor3>> = inputs
+        .iter()
+        .map(|xs| serial.run_batch(xs).into_iter().map(|r| r.y).collect())
+        .collect();
+
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CALLERS)
+            .map(|caller| {
+                let shared = &shared;
+                let inputs = &inputs;
+                let want = &want;
+                s.spawn(move || {
+                    for round in 0..ROUNDS {
+                        let idx = caller * ROUNDS + round;
+                        let runs = shared.run_batch(&inputs[idx]);
+                        assert_eq!(runs.len(), BATCH);
+                        for (b, run) in runs.iter().enumerate() {
+                            assert_eq!(
+                                run.y.max_abs_diff(&want[idx][b]),
+                                0.0,
+                                "caller {caller} round {round} sample {b}: \
+                                 concurrent pooled output must equal serial reference"
+                            );
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("stress caller panicked");
+        }
+    });
+
+    // the pool is still healthy after the storm
+    assert_eq!(pool.threads(), 4);
+    let after = shared.run(&inputs[0][0]);
+    assert_eq!(after.y.max_abs_diff(&want[0][0]), 0.0);
+}
+
+#[test]
+fn batch_and_stripe_scheduling_bitwise_identical_for_every_zoo_model() {
+    let mut rng = Rng::new(501);
+    for g in zoo::all(Scale::Tiny) {
+        let plan = Planner::default().compile_seeded(&g, 9);
+        let engine = Engine::with_workers(plan.clone(), 3);
+        let xs: Vec<Tensor3> = (0..4).map(|_| rand3(&mut rng, plan.input_shape)).collect();
+        let sample = engine.run_batch_with(&xs, BatchSchedule::SampleLevel);
+        let stripe = engine.run_batch_with(&xs, BatchSchedule::StripeLevel);
+        assert_eq!(sample.len(), xs.len(), "{}", g.name);
+        for b in 0..xs.len() {
+            assert_eq!(
+                sample[b].y.max_abs_diff(&stripe[b].y),
+                0.0,
+                "{} sample {b}: schedules must agree bit for bit",
+                g.name
+            );
+            assert_eq!(sample[b].events.mults, stripe[b].events.mults, "{}", g.name);
+            assert_eq!(sample[b].events.stripes, stripe[b].events.stripes, "{}", g.name);
+            assert_eq!(sample[b].events.tiles, stripe[b].events.tiles, "{}", g.name);
+            assert_eq!(
+                sample[b].events.linebuf_reads, stripe[b].events.linebuf_reads,
+                "{}",
+                g.name
+            );
+            assert_eq!(
+                sample[b].events.linebuf_writes, stripe[b].events.linebuf_writes,
+                "{}",
+                g.name
+            );
+        }
+    }
+}
+
+#[test]
+fn native_runtime_serves_concurrent_batches_on_one_pool() {
+    let rt = Arc::new(NativeRuntime::build(&NativeConfig {
+        scale: Scale::Tiny,
+        buckets: vec![1, 4],
+        workers: 3,
+        models: Some(vec!["dcgan".into()]),
+        ..Default::default()
+    }));
+    let wino = rt.engine("dcgan", "winograd").expect("route");
+    assert!(Arc::ptr_eq(wino.pool(), rt.pool()), "route engines must share the server pool");
+
+    let entry_len = wino.plan().input_len() * 4;
+    let input: Vec<f32> = (0..entry_len).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+    let want = rt.execute("dcgan_winograd_b4", &input).expect("reference execute");
+
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let rt = rt.clone();
+                let input = input.clone();
+                let want = want.clone();
+                s.spawn(move || {
+                    for _ in 0..2 {
+                        let out = rt.execute("dcgan_winograd_b4", &input).expect("execute");
+                        assert_eq!(out, want, "concurrent execute must be deterministic");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("execute caller panicked");
+        }
+    });
+}
