@@ -4,29 +4,81 @@
 //! batch-level scaling), the batcher, JSON, and (if artifacts exist) the
 //! PJRT execute path that serves requests.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
-use wingan::accel::functional::run_winograd_deconv;
+use wingan::accel::functional::{phase_padded, run_winograd_deconv};
 use wingan::accel::{simulate_model, AccelConfig};
-use wingan::benchlib::{black_box, speedup_line, Bench};
+use wingan::benchlib::{black_box, speedup, speedup_line, Bench, BenchReport};
 use wingan::engine::pool::WorkerPool;
 use wingan::engine::BatchSchedule;
 use wingan::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use wingan::coordinator::request::GenRequest;
 use wingan::engine::plan::seeded_weights;
-use wingan::engine::{Engine, Planner};
+use wingan::engine::{Engine, ModelPlan, PlanOptions, Planner, Select};
 use wingan::gan::workload::Method;
 use wingan::gan::zoo::{self, Scale};
 use wingan::tdc;
 use wingan::util::prng::Rng;
 use wingan::util::tensor::{Filter4, Tensor3};
 use wingan::winograd::layout::{engine_multiply, reorder_filter, reorder_input_tile};
-use wingan::winograd::transforms::{filter_transform, input_transform, inverse_transform};
+use wingan::winograd::transforms::{filter_transform, input_transform, inverse_transform, M};
+
+/// The pre-PR3 per-tile Winograd datapath, replayed over the same
+/// precompiled plans: one GEMV + fresh `ReorderedTile`/accumulator buffers
+/// per tile, one fresh phase-padded tensor per phase, single-threaded.
+/// This is the baseline the stripe-batched GEMM engine is measured against
+/// (and asserted bit-identical to). Returns the output and the tile count.
+fn per_tile_winograd_forward(plan: &ModelPlan, x: &Tensor3) -> (Tensor3, u64) {
+    let mut tiles = 0u64;
+    let mut cur = x.clone();
+    for lp in &plan.layers {
+        let l = &lp.layer;
+        assert_eq!(lp.method, Method::Winograd, "baseline expects winograd plans");
+        let s = l.s;
+        let mut y = Tensor3::zeros(l.c_out, s * cur.h, s * cur.w);
+        let ho_t = cur.h.div_ceil(M) * M;
+        let wo_t = cur.w.div_ceil(M) * M;
+        for (idx, rf) in lp.reordered.iter().enumerate() {
+            let ph = &lp.phases[idx];
+            let (py, px) = (idx / s, idx % s);
+            let xp = phase_padded(&cur, ph, ho_t, wo_t);
+            for ty in 0..ho_t / M {
+                for tx in 0..wo_t / M {
+                    tiles += 1;
+                    let vt = reorder_input_tile(&xp, ty, tx);
+                    let (m_acc, _) = engine_multiply(rf, &vt);
+                    for co in 0..l.c_out {
+                        let yt = inverse_transform(&m_acc[co]);
+                        for (a, row) in yt.iter().enumerate() {
+                            let oy = M * ty + a;
+                            if oy >= cur.h {
+                                continue;
+                            }
+                            for (b, val) in row.iter().enumerate() {
+                                let ox = M * tx + b;
+                                if ox >= cur.w {
+                                    continue;
+                                }
+                                *y.at_mut(co, s * oy + py, s * ox + px) = *val;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cur = y;
+    }
+    (cur, tiles)
+}
 
 fn main() {
     println!("==========================================================");
     println!(" hot-path microbenchmarks (see EXPERIMENTS.md §Perf)");
     println!("==========================================================");
-    let b = Bench::default();
+    // --quick: CI smoke mode — short budgets, same structure + JSON output
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    let mut report = BenchReport::new("hotpath");
     let mut rng = Rng::new(7);
 
     // --- L3 substrate kernels -------------------------------------------
@@ -104,6 +156,70 @@ fn main() {
         m_seed.median() / m_en.median(),
         en.workers()
     );
+    report.metric("plan_cache_speedup_1w", speedup(&m_seed, &m_e1));
+
+    // --- winograd datapath: tile-batched GEMM vs the per-tile path -------
+    // PR 3 restructured the Winograd execution from per-tile GEMV into
+    // stripe-level batched GEMM backed by per-worker scratch arenas: the
+    // reordered filter slab is streamed once per stripe instead of once per
+    // tile, and the hot loop allocates nothing per tile. The baseline
+    // replays the old per-tile loop over the same precompiled plans.
+    // Paper-scale DCGAN (Table I widths): the reordered slabs are MBs per
+    // phase, so per-tile re-streaming is what actually dominates — the
+    // blocking win the DeConv/Winograd DSE literature predicts.
+    let wplanner = Planner::new(PlanOptions {
+        select: Select::Force(Method::Winograd),
+        ..Default::default()
+    });
+    let wplan = Arc::new(wplanner.compile_seeded(&zoo::dcgan(Scale::Paper), 7));
+    let (wc, wh, ww) = wplan.input_shape;
+    let wx = Tensor3::from_vec(wc, wh, ww, rng.normal_vec(wc * wh * ww));
+    let we1 = Engine::with_workers(wplan.clone(), 1);
+    let wen = Engine::new(wplan.clone());
+    let (y_base, tiles_per_run) = per_tile_winograd_forward(&wplan, &wx);
+    // the refactor's numerics contract, checked on every bench run
+    assert_eq!(
+        y_base.max_abs_diff(&we1.run(&wx).y),
+        0.0,
+        "stripe-batched datapath must be bit-identical to the per-tile path"
+    );
+    // paper-scale forwards run for hundreds of ms each: --quick keeps CI
+    // fast, full runs widen the budget so the headline trajectory metrics
+    // aren't single-iteration noise
+    let wb = if quick {
+        Bench::quick()
+    } else {
+        Bench { warmup: Duration::from_millis(200), budget: Duration::from_secs(4), samples: 8 }
+    };
+    let m_tile = wb.run("winograd: DCGAN-paper, per-tile GEMV (PR-2 path)", || {
+        black_box(per_tile_winograd_forward(&wplan, &wx).0.data.len())
+    });
+    let m_batch1 = wb.run("winograd: DCGAN-paper, stripe-batched GEMM, 1 worker", || {
+        black_box(we1.run(&wx).y.data.len())
+    });
+    let m_batchn = wb.run(
+        &format!("winograd: DCGAN-paper, stripe-batched GEMM, {} workers", wen.workers()),
+        || black_box(wen.run(&wx).y.data.len()),
+    );
+    println!("{}", speedup_line("tile-batched GEMM vs per-tile (1 worker)", &m_tile, &m_batch1));
+    println!("{}", speedup_line("tile-batched GEMM + workers vs per-tile", &m_tile, &m_batchn));
+    println!(
+        "  -> winograd throughput: {:.0} tiles/s (1 worker), {:.0} tiles/s ({} workers); \
+         {tiles_per_run} tiles/run",
+        m_batch1.throughput(tiles_per_run as usize),
+        m_batchn.throughput(tiles_per_run as usize),
+        wen.workers(),
+    );
+    report.record(&m_tile);
+    report.record(&m_batch1);
+    // stable key: the display name embeds the machine's worker count
+    report.record_as("winograd: DCGAN-paper, stripe-batched GEMM, parallel", &m_batchn);
+    report.metric("winograd_batched_speedup_1w", speedup(&m_tile, &m_batch1));
+    report.metric("winograd_batched_speedup_parallel", speedup(&m_tile, &m_batchn));
+    report.metric("winograd_tiles_per_sec_1w", m_batch1.throughput(tiles_per_run as usize));
+    report.metric("winograd_tiles_per_sec_parallel", m_batchn.throughput(tiles_per_run as usize));
+    report.metric("winograd_tiles_per_run", tiles_per_run as f64);
+    report.metric("workers", wen.workers() as f64);
 
     // --- pool: spawn-overhead elimination --------------------------------
     // PR 1 spawned scoped threads per phase per layer per request; the
@@ -214,4 +330,13 @@ fn main() {
         }
         Err(e) => println!("(skipping PJRT benches: {e})"),
     }
+
+    // machine-readable perf trajectory (ROADMAP north-star): ns/iter,
+    // tiles/sec, and the headline speedups, uploaded as a CI artifact
+    report.record(&m_seq);
+    report.record(&m_smp);
+    report.metric("batch8_sample_level_speedup", speedup(&m_seq, &m_smp));
+    let path = std::path::Path::new("BENCH_pr3.json");
+    report.write(path).expect("write bench trajectory json");
+    println!("wrote {} (perf trajectory)", path.display());
 }

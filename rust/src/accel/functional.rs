@@ -50,11 +50,28 @@ pub struct FunctionalRun {
 /// Shared with the precompiled-plan engine (`crate::engine`) so the two
 /// datapaths stay bit-identical by construction.
 pub fn phase_padded(x: &Tensor3, ph: &PhaseFilter, ho_t: usize, wo_t: usize) -> Tensor3 {
+    let mut out = Tensor3::zeros(0, 0, 0);
+    phase_padded_into(x, ph, ho_t, wo_t, &mut out);
+    out
+}
+
+/// [`phase_padded`] into a caller-owned scratch tensor: identical contents,
+/// but the scratch's allocation is reused across phases and layers. This is
+/// the variant the execution engine's per-run scratch arena uses, so the
+/// full phase-padded map is materialized without a fresh allocation per
+/// phase.
+pub fn phase_padded_into(
+    x: &Tensor3,
+    ph: &PhaseFilter,
+    ho_t: usize,
+    wo_t: usize,
+    out: &mut Tensor3,
+) {
     let ly = (-ph.d0y) as usize;
     let lx = (-ph.d0x) as usize;
     let ry = (ho_t + crate::winograd::R - 1) - x.h - ly;
     let rx = (wo_t + crate::winograd::R - 1) - x.w - lx;
-    x.pad(ly, ry, lx, rx)
+    x.pad_into(ly, ry, lx, rx, out);
 }
 
 /// Simulate one Winograd DeConv layer through the line-buffered dataflow.

@@ -5,8 +5,12 @@
 //! Not a statistical match for criterion, but honest: wall-clock medians
 //! over multiple samples with an explicit black_box to defeat DCE.
 
+use std::collections::BTreeMap;
 use std::hint::black_box as bb;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
 
 /// Re-export for bench bodies.
 pub use std::hint::black_box;
@@ -94,6 +98,73 @@ pub fn speedup_line(label: &str, base: &Measurement, new: &Measurement) -> Strin
     )
 }
 
+/// Machine-readable benchmark emitter: collects [`Measurement`]s and named
+/// scalar metrics (speedups, throughputs) and serializes them as one JSON
+/// document — the `BENCH_*.json` perf-trajectory files the ROADMAP's
+/// north-star tracks, uploaded as a CI artifact by the bench smoke step.
+///
+/// Times are recorded in integer nanoseconds per iteration (median, mean,
+/// min over samples), matching what [`Measurement::report`] prints.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    bench: String,
+    measurements: BTreeMap<String, Json>,
+    metrics: BTreeMap<String, f64>,
+}
+
+impl BenchReport {
+    /// A report for the named bench binary (e.g. `"hotpath"`).
+    pub fn new(bench: &str) -> BenchReport {
+        BenchReport { bench: bench.to_string(), ..Default::default() }
+    }
+
+    /// Record one measurement under its name.
+    pub fn record(&mut self, m: &Measurement) {
+        self.record_as(&m.name, m);
+    }
+
+    /// Record a measurement under a stable key independent of its printed
+    /// name — use when the display name embeds machine-dependent details
+    /// (worker counts, core counts) that would make trajectory files
+    /// incomparable across runners.
+    pub fn record_as(&mut self, key: &str, m: &Measurement) {
+        let fields: BTreeMap<String, Json> = [
+            ("ns_per_iter".to_string(), Json::Num((m.median() * 1e9).round())),
+            ("mean_ns".to_string(), Json::Num((m.mean() * 1e9).round())),
+            ("min_ns".to_string(), Json::Num((m.min() * 1e9).round())),
+            ("samples".to_string(), Json::Num(m.samples.len() as f64)),
+        ]
+        .into_iter()
+        .collect();
+        self.measurements.insert(key.to_string(), Json::Obj(fields));
+    }
+
+    /// Record a named scalar metric (a speedup factor, tiles/sec, ...).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.insert(name.to_string(), value);
+    }
+
+    /// The report as a JSON document.
+    pub fn to_json(&self) -> Json {
+        let metrics: BTreeMap<String, Json> =
+            self.metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+        Json::Obj(
+            [
+                ("bench".to_string(), Json::Str(self.bench.clone())),
+                ("measurements".to_string(), Json::Obj(self.measurements.clone())),
+                ("metrics".to_string(), Json::Obj(metrics)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    /// Write the pretty-printed JSON document to `path`.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, json::to_string_pretty(&self.to_json()))
+    }
+}
+
 /// Benchmark runner with a wall-clock budget per benchmark.
 pub struct Bench {
     pub warmup: Duration,
@@ -168,6 +239,34 @@ mod tests {
         assert!((fast.throughput(8) - 4000.0).abs() < 1e-6);
         let line = speedup_line("batch scaling", &base, &fast);
         assert!(line.contains("5.00x"), "{line}");
+    }
+
+    #[test]
+    fn bench_report_emits_parseable_json() {
+        let m = Measurement {
+            name: "winograd: batched stripe".into(),
+            samples: vec![Duration::from_micros(250); 4],
+            iters_per_sample: 10,
+        };
+        let mut rep = BenchReport::new("hotpath");
+        rep.record(&m);
+        rep.metric("winograd_batched_speedup_1w", 1.75);
+        let doc = json::to_string_pretty(&rep.to_json());
+        let back = json::parse(&doc).expect("report must serialize to valid JSON");
+        assert_eq!(back.get("bench").and_then(Json::as_str), Some("hotpath"));
+        let ns = back
+            .get("measurements")
+            .and_then(|ms| ms.get("winograd: batched stripe"))
+            .and_then(|m| m.get("ns_per_iter"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((ns - 25_000.0).abs() < 1.0, "ns_per_iter = {ns}");
+        let sp = back
+            .get("metrics")
+            .and_then(|m| m.get("winograd_batched_speedup_1w"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((sp - 1.75).abs() < 1e-12);
     }
 
     #[test]

@@ -29,12 +29,13 @@ use std::time::{Duration, Instant};
 
 use crate::accel::functional::Events;
 use crate::engine::plan::{LayerPlan, ModelPlan};
-use crate::engine::pool::{resolve_workers, WorkerPool};
+use crate::engine::pool::{resolve_workers, ScratchStash, WorkerPool};
+use crate::engine::scratch::Scratch;
 use crate::gan::workload::Method;
 use crate::gan::zoo::Kind;
 use crate::tdc;
 use crate::util::tensor::Tensor3;
-use crate::winograd::layout::{engine_multiply, ReorderedTile};
+use crate::winograd::layout::engine_multiply_batch;
 use crate::winograd::transforms::{input_transform, inverse_transform, Tile4, M, N};
 
 /// Result of running one model through the engine.
@@ -76,28 +77,42 @@ pub enum BatchSchedule {
 pub struct Engine {
     plan: Arc<ModelPlan>,
     pool: Arc<WorkerPool>,
+    /// reusable per-task buffers, shared by every clone of this engine so
+    /// scratch grown by one request is reused by the next
+    scratch: Arc<ScratchStash<Scratch>>,
 }
 
 impl Engine {
     /// Private pool sized by [`resolve_workers`]`(0)`: one worker per core
     /// unless the `WINGAN_WORKERS` environment variable overrides it.
-    pub fn new(plan: ModelPlan) -> Engine {
+    ///
+    /// All constructors take `impl Into<Arc<ModelPlan>>`: pass an owned
+    /// [`ModelPlan`] to wrap it, or an `Arc<ModelPlan>` to share one
+    /// compiled plan across many engines without deep-cloning it.
+    pub fn new(plan: impl Into<Arc<ModelPlan>>) -> Engine {
         Engine::with_pool(plan, WorkerPool::shared(resolve_workers(0)))
     }
 
     /// Private pool with exactly `workers.max(1)` threads.
-    pub fn with_workers(plan: ModelPlan, workers: usize) -> Engine {
+    pub fn with_workers(plan: impl Into<Arc<ModelPlan>>, workers: usize) -> Engine {
         Engine::with_pool(plan, WorkerPool::shared(workers.max(1)))
     }
 
     /// Execute on an existing (typically shared) pool.
-    pub fn with_pool(plan: ModelPlan, pool: Arc<WorkerPool>) -> Engine {
-        Engine { plan: Arc::new(plan), pool }
+    pub fn with_pool(plan: impl Into<Arc<ModelPlan>>, pool: Arc<WorkerPool>) -> Engine {
+        Engine { plan: plan.into(), pool, scratch: Arc::new(ScratchStash::new()) }
     }
 
     /// The compiled plan this engine executes.
     pub fn plan(&self) -> &ModelPlan {
         &self.plan
+    }
+
+    /// Shared handle to the compiled plan — hand this to another engine's
+    /// constructor to execute the same plan without recompiling or
+    /// deep-cloning it.
+    pub fn plan_arc(&self) -> Arc<ModelPlan> {
+        self.plan.clone()
     }
 
     /// The worker pool this engine dispatches to.
@@ -118,6 +133,10 @@ impl Engine {
 
     /// Run one sample, splitting every layer into at most `chunks` stripe
     /// ranges (`chunks == 1` executes inline on the calling thread).
+    ///
+    /// The first layer borrows `x` directly (no per-request input copy);
+    /// one [`Scratch`] is checked out for the whole run and reused across
+    /// every phase and layer for the padded-input views.
     fn run_with_chunks(&self, x: &Tensor3, chunks: usize) -> EngineRun {
         let t0 = Instant::now();
         assert_eq!(
@@ -126,16 +145,19 @@ impl Engine {
             "engine input shape mismatch for {}",
             self.plan.model
         );
-        let mut cur = x.clone();
+        let mut scratch = self.scratch.take();
+        let mut cur: Option<Tensor3> = None;
         let mut per_layer = Vec::with_capacity(self.plan.layers.len());
         let mut total = Events::default();
         for lp in &self.plan.layers {
-            let (y, ev) = self.run_layer(lp, &cur, chunks);
+            let (y, ev) = self.run_layer(lp, cur.as_ref().unwrap_or(x), chunks, &mut scratch);
             total.merge(&ev);
             per_layer.push(ev);
-            cur = y;
+            cur = Some(y);
         }
-        EngineRun { y: cur, per_layer, events: total, elapsed: t0.elapsed() }
+        self.scratch.put(scratch);
+        let y = cur.unwrap_or_else(|| x.clone());
+        EngineRun { y, per_layer, events: total, elapsed: t0.elapsed() }
     }
 
     /// Scheduling decision for a batch of `batch` samples: sample-level
@@ -176,12 +198,18 @@ impl Engine {
         }
     }
 
-    fn run_layer(&self, lp: &LayerPlan, x: &Tensor3, chunks: usize) -> (Tensor3, Events) {
+    fn run_layer(
+        &self,
+        lp: &LayerPlan,
+        x: &Tensor3,
+        chunks: usize,
+        scratch: &mut Scratch,
+    ) -> (Tensor3, Events) {
         match lp.layer.kind {
-            Kind::Conv => self.run_conv(lp, x, chunks),
+            Kind::Conv => self.run_conv(lp, x, chunks, scratch),
             Kind::Deconv => match lp.method {
-                Method::Winograd => self.run_deconv_winograd(lp, x, chunks),
-                _ => self.run_deconv_tdc(lp, x, chunks),
+                Method::Winograd => self.run_deconv_winograd(lp, x, chunks, scratch),
+                _ => self.run_deconv_tdc(lp, x, chunks, scratch),
             },
         }
     }
@@ -189,14 +217,23 @@ impl Engine {
     /// TDC datapath: S² phase correlations over phase-padded inputs.
     /// Per-pixel accumulation order matches `tdc::correlate_valid`, so the
     /// output is bit-identical to `tdc::tdc_deconv` regardless of workers.
-    fn run_deconv_tdc(&self, lp: &LayerPlan, x: &Tensor3, n_chunks: usize) -> (Tensor3, Events) {
+    /// The phase-padded view is materialized into the run's scratch arena,
+    /// reused across phases and layers.
+    fn run_deconv_tdc(
+        &self,
+        lp: &LayerPlan,
+        x: &Tensor3,
+        n_chunks: usize,
+        scratch: &mut Scratch,
+    ) -> (Tensor3, Events) {
         let l = &lp.layer;
         let (s, kc) = (l.s, lp.kc);
         let mut y = Tensor3::zeros(l.c_out, s * x.h, s * x.w);
         let mut ev = Events::default();
         for (idx, ph) in lp.phases.iter().enumerate() {
             let (py, px) = (idx / s, idx % s);
-            let xp = tdc::phase_pad(x, ph.d0y, ph.d0x, kc);
+            tdc::phase_pad_into(x, ph.d0y, ph.d0x, kc, &mut scratch.xp);
+            let xp = &scratch.xp;
             let chunks = self.pool.run_chunked(n_chunks, x.h, |oy_s, oy_e| {
                 let mut part = Tensor3::zeros(l.c_out, oy_e - oy_s, x.w);
                 let mut pev = Events::default();
@@ -242,71 +279,102 @@ impl Engine {
         (y, ev)
     }
 
-    /// Winograd datapath: precompiled reordered filters, pre-PE transform,
-    /// com-PE sparse multiply over live rows only, post-PE inverse
-    /// transform, phase interleave. Numerically identical to
-    /// `accel::functional::run_winograd_deconv` (same kernels, same order).
-    fn run_deconv_winograd(&self, lp: &LayerPlan, x: &Tensor3, n_chunks: usize) -> (Tensor3, Events) {
+    /// Winograd datapath, stripe-batched: precompiled reordered filters,
+    /// pre-PE transforms *gathered* across all `tiles_w` tiles of a stripe
+    /// into one position-major Winograd-domain matrix, one batched com-PE
+    /// GEMM per stripe over live rows only ([`engine_multiply_batch`] — the
+    /// filter slab is streamed once per stripe instead of once per tile),
+    /// post-PE inverse transform, phase interleave. The per-output
+    /// accumulation order is exactly the per-tile path's, so the result is
+    /// bit-identical to `accel::functional::run_winograd_deconv` and the
+    /// [`Events`] counters are unchanged. All intermediate buffers live in
+    /// per-worker [`Scratch`] arenas — the tile loop performs no heap
+    /// allocation.
+    fn run_deconv_winograd(
+        &self,
+        lp: &LayerPlan,
+        x: &Tensor3,
+        n_chunks: usize,
+        scratch: &mut Scratch,
+    ) -> (Tensor3, Events) {
         let l = &lp.layer;
         let s = l.s;
         let mut y = Tensor3::zeros(l.c_out, s * x.h, s * x.w);
         let mut ev = Events::default();
 
-        let ho_t = x.h.div_ceil(M) * M;
-        let wo_t = x.w.div_ceil(M) * M;
-        let tiles_h = ho_t / M;
-        let tiles_w = wo_t / M;
+        // blocking geometry precompiled on the plan (matches the runtime
+        // input by the engine's shape contract)
+        let geo = lp.tiles;
+        debug_assert_eq!((x.h, x.w), (l.h_in, l.w_in), "layer chain geometry");
+        debug_assert_eq!((geo.ho_t, geo.wo_t), (x.h.div_ceil(M) * M, x.w.div_ceil(M) * M));
+        let tiles_w = geo.tiles_w;
 
         for (idx, rf) in lp.reordered.iter().enumerate() {
             let ph = &lp.phases[idx];
             let (py, px) = (idx / s, idx % s);
             // same phase-padded, tile-aligned view the functional simulator
             // reads through its line buffers — shared helper keeps the two
-            // datapaths bit-identical by construction
-            let xp = crate::accel::functional::phase_padded(x, ph, ho_t, wo_t);
+            // datapaths bit-identical by construction; materialized into
+            // the run's scratch, not a fresh tensor per phase
+            crate::accel::functional::phase_padded_into(x, ph, geo.ho_t, geo.wo_t, &mut scratch.xp);
+            let xp = &scratch.xp;
 
-            let chunks = self.pool.run_chunked(n_chunks, tiles_h, |ty_s, ty_e| {
-                let mut part = Tensor3::zeros(l.c_out, M * (ty_e - ty_s), wo_t);
-                let mut pev = Events::default();
-                let mut v = vec![0.0; (N * N) * xp.c];
-                for ty in ty_s..ty_e {
-                    pev.stripes += 1;
-                    for tx in 0..tiles_w {
-                        pev.tiles += 1;
-                        // pre-PE: window select + B^T Z B + n² x N reorder
-                        for ci in 0..xp.c {
-                            let mut z: Tile4 = [[0.0; N]; N];
-                            for (i, row) in z.iter_mut().enumerate() {
-                                for (j, val) in row.iter_mut().enumerate() {
-                                    *val = xp.at(ci, M * ty + i, M * tx + j);
+            let chunks = self.pool.run_chunked_with(
+                &self.scratch,
+                n_chunks,
+                geo.tiles_h,
+                |scr: &mut Scratch, ty_s, ty_e| {
+                    let mut part = Tensor3::zeros(l.c_out, M * (ty_e - ty_s), geo.wo_t);
+                    let mut pev = Events::default();
+                    let c_in = xp.c;
+                    scr.ensure_winograd(c_in, l.c_out, tiles_w);
+                    for ty in ty_s..ty_e {
+                        pev.stripes += 1;
+                        // pre-PE gather: window select + B^T Z B + n² x N
+                        // reorder for every tile of the stripe, laid out
+                        // position-major [pos][c_in][tiles_w]
+                        for tx in 0..tiles_w {
+                            pev.tiles += 1;
+                            for ci in 0..c_in {
+                                let mut z: Tile4 = [[0.0; N]; N];
+                                for (i, row) in z.iter_mut().enumerate() {
+                                    for (j, val) in row.iter_mut().enumerate() {
+                                        *val = xp.at(ci, M * ty + i, M * tx + j);
+                                    }
+                                }
+                                let vt = input_transform(&z);
+                                for (i, row) in vt.iter().enumerate() {
+                                    for (j, val) in row.iter().enumerate() {
+                                        scr.v[((i * N + j) * c_in + ci) * tiles_w + tx] = *val;
+                                    }
                                 }
                             }
-                            let vt = input_transform(&z);
-                            for i in 0..N {
-                                for j in 0..N {
-                                    v[(i * N + j) * xp.c + ci] = vt[i][j];
-                                }
-                            }
+                            pev.linebuf_reads += (N * N * c_in) as u64;
                         }
-                        pev.linebuf_reads += (N * N * xp.c) as u64;
-                        let vt = ReorderedTile { c_in: xp.c, v: std::mem::take(&mut v) };
-                        // com-PE: live rows only
-                        let (m_acc, mults) = engine_multiply(rf, &vt);
-                        v = vt.v;
-                        pev.mults += mults as u64;
+                        // com-PE: one live-rows-only GEMM for the whole
+                        // stripe — filter block read once per stripe
+                        pev.mults += engine_multiply_batch(rf, &scr.v, tiles_w, &mut scr.m) as u64;
                         // post-PE: inverse transform into the local stripe
                         for co in 0..l.c_out {
-                            let yt = inverse_transform(&m_acc[co]);
-                            for (a, row) in yt.iter().enumerate() {
-                                for (b, val) in row.iter().enumerate() {
-                                    *part.at_mut(co, M * (ty - ty_s) + a, M * tx + b) = *val;
+                            for tx in 0..tiles_w {
+                                let mut m4: Tile4 = [[0.0; N]; N];
+                                for (i, row) in m4.iter_mut().enumerate() {
+                                    for (j, val) in row.iter_mut().enumerate() {
+                                        *val = scr.m[(co * N * N + i * N + j) * tiles_w + tx];
+                                    }
+                                }
+                                let yt = inverse_transform(&m4);
+                                for (a, row) in yt.iter().enumerate() {
+                                    for (b, val) in row.iter().enumerate() {
+                                        *part.at_mut(co, M * (ty - ty_s) + a, M * tx + b) = *val;
+                                    }
                                 }
                             }
                         }
                     }
-                }
-                (part, pev)
-            });
+                    (part, pev)
+                },
+            );
             let mut ty_base = 0;
             for (part, pev) in chunks {
                 let rows = part.h / M;
@@ -326,21 +394,29 @@ impl Engine {
             }
             // line-buffer ingest (matches run_winograd_deconv): n prologue
             // rows + m rows per stripe of the phase-padded map
-            ev.linebuf_writes += ((ho_t - M + N) * xp.c * xp.w) as u64;
+            ev.linebuf_writes += ((geo.ho_t - M + N) * xp.c * xp.w) as u64;
         }
         (y, ev)
     }
 
     /// Spatial conv datapath (DiscoGAN's encoder): strided valid
     /// correlation over the border-padded input; accumulation order matches
-    /// `tdc::conv2d` bit for bit.
-    fn run_conv(&self, lp: &LayerPlan, x: &Tensor3, n_chunks: usize) -> (Tensor3, Events) {
+    /// `tdc::conv2d` bit for bit. The padded input is materialized into the
+    /// run's scratch arena, like the deconv datapaths.
+    fn run_conv(
+        &self,
+        lp: &LayerPlan,
+        x: &Tensor3,
+        n_chunks: usize,
+        scratch: &mut Scratch,
+    ) -> (Tensor3, Events) {
         let l = &lp.layer;
         let (k, s, p) = (l.k, l.s, l.p);
         // same output geometry as the tdc::conv2d reference (coincides with
         // Layer::h_out()/w_out() for every zoo encoder layer)
         let (ho, wo) = ((x.h + 2 * p - k) / s + 1, (x.w + 2 * p - k) / s + 1);
-        let xp = x.pad(p, p, p, p);
+        x.pad_into(p, p, p, p, &mut scratch.xp);
+        let xp = &scratch.xp;
         let g = &lp.weights;
         let chunks = self.pool.run_chunked(n_chunks, ho, |oy_s, oy_e| {
             let mut part = Tensor3::zeros(l.c_out, oy_e - oy_s, wo);
@@ -407,7 +483,8 @@ mod tests {
             select: Select::Force(Method::Tdc),
             ..Default::default()
         });
-        let plan = planner.compile_seeded(&g, 11);
+        // one compiled plan shared by every engine (Arc clone, not deep clone)
+        let plan = Arc::new(planner.compile_seeded(&g, 11));
         let x = rand3(&mut rng, plan.input_shape.0, plan.input_shape.1, plan.input_shape.2);
         let want = reference_forward(&plan, &x);
         for workers in [1, 2, 5] {
@@ -494,7 +571,7 @@ mod tests {
     fn auto_plan_close_to_reference_and_worker_invariant() {
         let mut rng = Rng::new(903);
         let g = zoo::gpgan(Scale::Tiny);
-        let plan = Planner::default().compile_seeded(&g, 5);
+        let plan = Arc::new(Planner::default().compile_seeded(&g, 5));
         assert!(plan.n_winograd_layers() > 0);
         let x = rand3(&mut rng, plan.input_shape.0, plan.input_shape.1, plan.input_shape.2);
         let want = reference_forward(&plan, &x);
@@ -533,19 +610,44 @@ mod tests {
     }
 
     #[test]
-    fn engines_can_share_one_pool() {
+    fn engines_can_share_one_pool_and_one_plan() {
         let mut rng = Rng::new(906);
         let g = zoo::dcgan(Scale::Tiny);
-        let plan = Planner::default().compile_seeded(&g, 7);
+        let plan = Arc::new(Planner::default().compile_seeded(&g, 7));
         let pool = crate::engine::pool::WorkerPool::shared(2);
         let a = Engine::with_pool(plan.clone(), pool.clone());
-        let b = Engine::with_pool(plan.clone(), pool.clone());
+        let b = Engine::with_pool(a.plan_arc(), pool.clone());
         assert!(Arc::ptr_eq(a.pool(), b.pool()));
+        // both engines execute the *same* compiled plan, no deep clone
+        assert!(Arc::ptr_eq(&a.plan_arc(), &b.plan_arc()));
         assert_eq!(a.workers(), 2);
         let x = rand3(&mut rng, plan.input_shape.0, plan.input_shape.1, plan.input_shape.2);
         let ra = a.run(&x);
         let rb = b.run(&x);
         assert_eq!(ra.y.max_abs_diff(&rb.y), 0.0);
+    }
+
+    #[test]
+    fn scratch_arenas_reused_across_runs_without_changing_bits() {
+        let mut rng = Rng::new(907);
+        let g = zoo::dcgan(Scale::Tiny);
+        let plan = Arc::new(Planner::default().compile_seeded(&g, 7));
+        let engine = Engine::with_workers(plan.clone(), 2);
+        let x = rand3(&mut rng, plan.input_shape.0, plan.input_shape.1, plan.input_shape.2);
+        let cold = engine.run(&x);
+        // the run returned its scratches to the stash...
+        assert!(engine.scratch.idle() >= 1);
+        let before = engine.scratch.idle();
+        // ...and warm runs reuse them without changing a single bit
+        let warm = engine.run(&x);
+        assert_eq!(cold.y.max_abs_diff(&warm.y), 0.0);
+        assert_eq!(cold.events, warm.events);
+        assert!(engine.scratch.idle() >= before, "scratches must be returned, not dropped");
+        // clones share the stash and the compiled plan
+        let clone = engine.clone();
+        assert!(Arc::ptr_eq(&clone.scratch, &engine.scratch));
+        let again = clone.run(&x);
+        assert_eq!(cold.y.max_abs_diff(&again.y), 0.0);
     }
 
     #[test]

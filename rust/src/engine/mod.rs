@@ -18,7 +18,14 @@
 //!   functional simulator exactly. Wide batches dispatch one pool task per
 //!   sample ([`BatchSchedule::SampleLevel`]); single requests and narrow
 //!   batches split every layer across output stripes
-//!   ([`BatchSchedule::StripeLevel`]).
+//!   ([`BatchSchedule::StripeLevel`]). The Winograd datapath executes each
+//!   stripe as one **tile-batched Winograd-domain GEMM**
+//!   ([`crate::winograd::layout::engine_multiply_batch`]) over blocking
+//!   geometry precompiled on the plan ([`plan::TileGeometry`]), with every
+//!   intermediate buffer drawn from reusable per-worker **scratch arenas**
+//!   ([`scratch`], [`pool::ScratchStash`]) — zero per-tile heap
+//!   allocations, filter data streamed once per stripe instead of once per
+//!   tile, bit-identical outputs.
 //! * **Serve** ([`serve`]): a [`NativeRuntime`] exposing compiled engines
 //!   behind the coordinator's artifact-manifest contract, so generation
 //!   requests batch and execute through precompiled plans — every route's
@@ -36,11 +43,13 @@
 pub mod exec;
 pub mod plan;
 pub mod pool;
+pub mod scratch;
 pub mod serve;
 
 pub use exec::{BatchSchedule, Engine, EngineRun};
-pub use plan::{LayerPlan, ModelPlan, PlanOptions, Planner, Select};
-pub use pool::{resolve_workers, WorkerPool};
+pub use plan::{LayerPlan, ModelPlan, PlanOptions, Planner, Select, TileGeometry};
+pub use pool::{resolve_workers, ScratchStash, WorkerPool};
+pub use scratch::Scratch;
 pub use serve::{model_id, native_manifest, NativeConfig, NativeRuntime};
 
 use crate::gan::zoo::Kind;

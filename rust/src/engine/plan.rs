@@ -52,6 +52,28 @@ impl Default for PlanOptions {
     }
 }
 
+/// Precompiled stripe/tile geometry for a deconv layer's Winograd
+/// datapath, derived once at plan-compile time from the layer's input
+/// extent (m = 2 outputs per tile dim, so per phase the `H x W` map is
+/// covered by `tiles_h x tiles_w` tiles over a tile-aligned
+/// `ho_t x wo_t` extent).
+///
+/// The execution engine batches all `tiles_w` tiles of a stripe (one tile
+/// row) into a single Winograd-domain GEMM per live position — this struct
+/// is the blocking geometry that batching reads, instead of re-deriving it
+/// per layer call. Zeroed for layers that never run the Winograd datapath.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TileGeometry {
+    /// tile-aligned per-phase output rows: `H` rounded up to a multiple of m
+    pub ho_t: usize,
+    /// tile-aligned per-phase output cols: `W` rounded up to a multiple of m
+    pub wo_t: usize,
+    /// stripes per phase (tile rows): `ho_t / m`
+    pub tiles_h: usize,
+    /// tiles per stripe — the GEMM batch width `T`: `wo_t / m`
+    pub tiles_w: usize,
+}
+
 /// One layer's precompiled execution plan.
 #[derive(Clone, Debug)]
 pub struct LayerPlan {
@@ -70,6 +92,9 @@ pub struct LayerPlan {
     pub reordered: Vec<ReorderedFilter>,
     /// TDC-converted kernel width
     pub kc: usize,
+    /// Winograd stripe/tile blocking geometry (zeroed for conv layers and
+    /// TDC-method plans, which don't tile)
+    pub tiles: TileGeometry,
     /// functional line-buffer depth in rows (n+m Winograd, K_C+1 TDC)
     pub linebuf_depth: usize,
     /// line-buffer capacity in f32 words at this layer's geometry
@@ -170,6 +195,7 @@ impl Planner {
                     phases: Vec::new(),
                     reordered: Vec::new(),
                     kc: l.k,
+                    tiles: TileGeometry::default(),
                     linebuf_depth: depth,
                     linebuf_words: depth * (l.w_in + 2 * l.p) * l.c_in,
                 }
@@ -183,10 +209,21 @@ impl Planner {
                 } else {
                     Vec::new()
                 };
+                let tiles = if method == Method::Winograd {
+                    let ho_t = l.h_in.div_ceil(M_TILE) * M_TILE;
+                    let wo_t = l.w_in.div_ceil(M_TILE) * M_TILE;
+                    TileGeometry {
+                        ho_t,
+                        wo_t,
+                        tiles_h: ho_t / M_TILE,
+                        tiles_w: wo_t / M_TILE,
+                    }
+                } else {
+                    TileGeometry::default()
+                };
                 let (depth, width) = if method == Method::Winograd {
                     // n+m lines of the phase-padded map (paper §IV.B)
-                    let wo_t = l.w_in.div_ceil(M_TILE) * M_TILE;
-                    (N_TILE + M_TILE, wo_t + crate::winograd::R - 1)
+                    (N_TILE + M_TILE, tiles.wo_t + crate::winograd::R - 1)
                 } else {
                     (kc + 1, l.w_in + kc - 1)
                 };
@@ -197,6 +234,7 @@ impl Planner {
                     phases,
                     reordered,
                     kc,
+                    tiles,
                     linebuf_depth: depth,
                     linebuf_words: depth * width * l.c_in,
                 }
@@ -291,6 +329,28 @@ mod tests {
         assert_eq!(plan.layers[0].live_positions(), 49);
         let plan4 = planner.compile_seeded(&zoo::gpgan(Scale::Small), 7);
         assert_eq!(plan4.layers[0].live_positions(), 36);
+    }
+
+    #[test]
+    fn winograd_tile_geometry_precomputed() {
+        let plan = Planner::default().compile_seeded(&zoo::dcgan(Scale::Small), 7);
+        for lp in &plan.layers {
+            if lp.method == Method::Winograd {
+                assert_eq!(lp.tiles.ho_t, lp.layer.h_in.div_ceil(M_TILE) * M_TILE);
+                assert_eq!(lp.tiles.wo_t, lp.layer.w_in.div_ceil(M_TILE) * M_TILE);
+                assert_eq!(lp.tiles.tiles_h * M_TILE, lp.tiles.ho_t);
+                assert_eq!(lp.tiles.tiles_w * M_TILE, lp.tiles.wo_t);
+                assert!(lp.tiles.tiles_w > 0);
+            } else {
+                assert_eq!(lp.tiles, TileGeometry::default());
+            }
+        }
+        let tdc_plan = Planner::new(PlanOptions {
+            select: Select::Force(Method::Tdc),
+            ..Default::default()
+        })
+        .compile_seeded(&zoo::dcgan(Scale::Small), 7);
+        assert!(tdc_plan.layers.iter().all(|lp| lp.tiles == TileGeometry::default()));
     }
 
     #[test]

@@ -22,6 +22,15 @@
 //! is one carefully-guarded lifetime erasure at the queue boundary; see the
 //! `SAFETY` comment in the source.
 //!
+//! # Scratch-carrying dispatch
+//!
+//! [`WorkerPool::run_chunked_with`] pairs every chunk with a reusable
+//! scratch arena checked out of a [`ScratchStash`] — the engine's way of
+//! keeping the Winograd hot loop free of per-tile allocations: transform
+//! buffers, gathered-tile matrices and accumulators grown by one stripe
+//! task are handed to the next task (and the next request) instead of
+//! being reallocated.
+//!
 //! # Numerics
 //!
 //! Every stripe's pixels are computed entirely by one task with a fixed
@@ -233,6 +242,84 @@ impl WorkerPool {
         }
         slots.into_iter().map(|s| s.expect("missing chunk result")).collect()
     }
+
+    /// [`WorkerPool::run_chunked`] with a per-chunk scratch arena: every
+    /// chunk checks an `S` out of `stash`, runs `f(&mut scratch, start,
+    /// end)`, and returns the scratch for later chunks (and later
+    /// dispatches) to reuse. This is how the engine's hot loops stay free
+    /// of per-tile allocations — buffers grown by one stripe task are
+    /// handed to the next instead of being dropped.
+    ///
+    /// Chunking, ordering, panic and reentrancy semantics are exactly those
+    /// of [`WorkerPool::run_chunked`]; the scratch is a pure capacity
+    /// optimization and must never change results (the engine's
+    /// worker-count-invariance tests pin this).
+    pub fn run_chunked_with<S: Default + Send, T: Send>(
+        &self,
+        stash: &ScratchStash<S>,
+        max_chunks: usize,
+        n: usize,
+        f: impl Fn(&mut S, usize, usize) -> T + Sync,
+    ) -> Vec<T> {
+        self.run_chunked(max_chunks, n, |s, e| {
+            let mut scratch = stash.take();
+            let out = f(&mut scratch, s, e);
+            stash.put(scratch);
+            out
+        })
+    }
+}
+
+/// A free-list of reusable per-task scratch arenas.
+///
+/// [`WorkerPool::run_chunked_with`] checks one scratch out per chunk and
+/// returns it when the chunk finishes, so buffers grown by one dispatch are
+/// reused by the next — across tiles, phases, layers and requests. The
+/// stash never holds more scratches than the peak number of concurrent
+/// chunks, and a scratch checked out when a chunk panics is simply dropped
+/// (conservative, never corrupting).
+///
+/// `S` is only required to be [`Default`] (an empty scratch, grown on
+/// first use) and `Send` (scratches migrate between worker threads).
+pub struct ScratchStash<S> {
+    free: Mutex<Vec<S>>,
+}
+
+impl<S: Default> ScratchStash<S> {
+    /// An empty stash; scratches are created lazily on first checkout.
+    pub fn new() -> ScratchStash<S> {
+        ScratchStash { free: Mutex::new(Vec::new()) }
+    }
+
+    /// Check a scratch out: a previously returned one when available,
+    /// otherwise a fresh `S::default()`.
+    pub fn take(&self) -> S {
+        self.free.lock().expect("scratch stash poisoned").pop().unwrap_or_default()
+    }
+
+    /// Return a scratch for the next task to reuse.
+    pub fn put(&self, s: S) {
+        self.free.lock().expect("scratch stash poisoned").push(s);
+    }
+
+    /// Number of scratches currently parked in the stash (observability /
+    /// tests — the steady state equals the peak concurrent-task count).
+    pub fn idle(&self) -> usize {
+        self.free.lock().expect("scratch stash poisoned").len()
+    }
+}
+
+impl<S: Default> Default for ScratchStash<S> {
+    fn default() -> Self {
+        ScratchStash::new()
+    }
+}
+
+impl<S> fmt::Debug for ScratchStash<S> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let idle = self.free.lock().map(|v| v.len()).unwrap_or(0);
+        f.debug_struct("ScratchStash").field("idle", &idle).finish()
+    }
 }
 
 impl fmt::Debug for WorkerPool {
@@ -379,6 +466,26 @@ mod tests {
         // the workers are still alive and serving
         let chunks = pool.run_chunked(2, 8, |s, e| e - s);
         assert_eq!(chunks.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn scratch_stash_reuses_buffers_across_dispatches() {
+        let pool = WorkerPool::new(3);
+        let stash: ScratchStash<Vec<u64>> = ScratchStash::new();
+        let data: Vec<u64> = (0..300).collect();
+        let serial: u64 = data.iter().sum();
+        for _ in 0..20 {
+            let chunks = pool.run_chunked_with(&stash, 3, data.len(), |scratch, s, e| {
+                // grow-once buffer: later dispatches find it pre-sized
+                scratch.resize(data.len(), 0);
+                scratch[s..e].copy_from_slice(&data[s..e]);
+                scratch[s..e].iter().sum::<u64>()
+            });
+            assert_eq!(chunks.iter().sum::<u64>(), serial);
+        }
+        // every checked-out scratch came back, and no more were ever made
+        // than the peak number of concurrent chunks
+        assert!(stash.idle() >= 1 && stash.idle() <= 3, "idle = {}", stash.idle());
     }
 
     #[test]

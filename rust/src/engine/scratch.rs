@@ -1,0 +1,97 @@
+//! Per-worker scratch arenas for the execution hot loop.
+//!
+//! The PR-2 engine allocated on every tile of the Winograd datapath (a
+//! fresh `ReorderedTile` per tile, a fresh `Vec<Tile4>` accumulator inside
+//! `engine_multiply`) and materialized a fresh phase-padded input tensor
+//! per phase of every layer. A [`Scratch`] owns all of those buffers once:
+//! it is checked out of a [`ScratchStash`] for the duration of one pool
+//! task (or one whole run, for the dispatching thread), grown to the
+//! largest geometry it has seen, and returned for the next task to reuse —
+//! so the steady-state hot loop performs **zero per-tile heap
+//! allocations**, across tiles, phases and layers alike.
+//!
+//! Scratch reuse is invisible to the numerics: every buffer is either
+//! fully rewritten before it is read (`v`), zeroed by the kernel that
+//! fills it (`m` in [`engine_multiply_batch`]), or zero-filled on resize
+//! (`xp` via [`Tensor3::pad_into`]).
+//!
+//! [`engine_multiply_batch`]: crate::winograd::layout::engine_multiply_batch
+//! [`Tensor3::pad_into`]: crate::util::tensor::Tensor3::pad_into
+//! [`ScratchStash`]: crate::engine::pool::ScratchStash
+
+use crate::util::tensor::Tensor3;
+use crate::winograd::transforms::N;
+
+/// Reusable per-task buffers for the engine's three datapaths.
+///
+/// One `Scratch` is checked out of the engine's [`ScratchStash`] per pool
+/// task and per run; its buffers only ever grow, so after the first few
+/// dispatches the hot loop runs allocation-free. Fields are public so the
+/// execution loops can borrow them disjointly (`v` immutably while `m` is
+/// written).
+///
+/// [`ScratchStash`]: crate::engine::pool::ScratchStash
+pub struct Scratch {
+    /// Padded input view: the phase-padded map on the deconv datapaths, the
+    /// border-padded input on the conv datapath. Owned by the dispatching
+    /// side of a run and reused across every phase and layer.
+    pub xp: Tensor3,
+    /// Gathered Winograd-domain tile matrix for one stripe, position-major
+    /// `[pos][c_in][tiles_w]` over all 16 positions — the left operand
+    /// gather feeding [`engine_multiply_batch`].
+    ///
+    /// [`engine_multiply_batch`]: crate::winograd::layout::engine_multiply_batch
+    pub v: Vec<f64>,
+    /// Winograd-domain accumulators for one stripe, `[c_out][pos][tiles_w]`
+    /// (zeroed by the batched kernel; skipped positions stay zero for the
+    /// inverse transform).
+    pub m: Vec<f64>,
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Scratch { xp: Tensor3::zeros(0, 0, 0), v: Vec::new(), m: Vec::new() }
+    }
+}
+
+impl std::fmt::Debug for Scratch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scratch")
+            .field("xp_words", &self.xp.numel())
+            .field("v_words", &self.v.len())
+            .field("m_words", &self.m.len())
+            .finish()
+    }
+}
+
+impl Scratch {
+    /// Size `v` and `m` for one Winograd stripe of `tiles` tiles at
+    /// `c_in`/`c_out` channels. Shrinks/grows the *length* to the exact
+    /// stripe geometry (the batched kernel asserts it) while the underlying
+    /// capacity only ever grows — no reallocation once warm. Contents are
+    /// not cleared: `v` is fully rewritten by the gather and `m` is zeroed
+    /// by the kernel.
+    pub fn ensure_winograd(&mut self, c_in: usize, c_out: usize, tiles: usize) {
+        self.v.resize(N * N * c_in * tiles, 0.0);
+        self.m.resize(c_out * N * N * tiles, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_winograd_sizes_exactly_and_keeps_capacity() {
+        let mut s = Scratch::default();
+        s.ensure_winograd(8, 4, 6);
+        assert_eq!(s.v.len(), N * N * 8 * 6);
+        assert_eq!(s.m.len(), 4 * N * N * 6);
+        let cap_v = s.v.capacity();
+        // smaller geometry: exact length, no reallocation
+        s.ensure_winograd(2, 1, 3);
+        assert_eq!(s.v.len(), N * N * 2 * 3);
+        assert_eq!(s.m.len(), N * N * 3);
+        assert!(s.v.capacity() >= cap_v);
+    }
+}

@@ -145,7 +145,9 @@ impl NativeRuntime {
                 .expect("manifest route with unknown method")
                 .1;
             let planner = Planner::new(PlanOptions { select, ..Default::default() });
-            let plan = planner.compile_seeded(g, cfg.seed);
+            // one Arc'd compiled plan per route: every engine clone (and any
+            // future co-resident engine) shares it instead of deep-cloning
+            let plan = Arc::new(planner.compile_seeded(g, cfg.seed));
             engines.insert(key, Engine::with_pool(plan, pool.clone()));
         }
         let entries = manifest.entries.iter().map(|e| (e.name.clone(), e.clone())).collect();

@@ -208,11 +208,21 @@ pub fn correlate_valid(x: &Tensor3, g: &Filter4) -> Tensor3 {
 /// Pad `x` so a valid K_C-tap correlation for phase offset (d0y, d0x)
 /// produces exactly H x W outputs.
 pub fn phase_pad(x: &Tensor3, d0y: isize, d0x: isize, kc_: usize) -> Tensor3 {
+    let mut out = Tensor3::zeros(0, 0, 0);
+    phase_pad_into(x, d0y, d0x, kc_, &mut out);
+    out
+}
+
+/// [`phase_pad`] into a caller-owned scratch tensor (bit-identical
+/// contents, no fresh allocation once the scratch has grown to the layer's
+/// padded geometry). The execution engine reuses one scratch across every
+/// phase and layer of a run.
+pub fn phase_pad_into(x: &Tensor3, d0y: isize, d0x: isize, kc_: usize, out: &mut Tensor3) {
     let ly = (-d0y) as usize;
     let lx = (-d0x) as usize;
     let ry = (kc_ as isize - 1 + d0y) as usize;
     let rx = (kc_ as isize - 1 + d0x) as usize;
-    x.pad(ly, ry, lx, rx)
+    x.pad_into(ly, ry, lx, rx, out);
 }
 
 /// DeConv via the TDC method: S^2 valid correlations, phase-interleaved.

@@ -39,15 +39,31 @@ impl Tensor3 {
     /// Zero-pad spatially: `l`/`r` rows above/below, `t`/`b`... columns
     /// left/right. Returns a new tensor of shape `[C, H+top+bot, W+left+right]`.
     pub fn pad(&self, top: usize, bot: usize, left: usize, right: usize) -> Tensor3 {
-        let mut out = Tensor3::zeros(self.c, self.h + top + bot, self.w + left + right);
+        let mut out = Tensor3::zeros(0, 0, 0);
+        self.pad_into(top, bot, left, right, &mut out);
+        out
+    }
+
+    /// [`Tensor3::pad`] into a caller-owned scratch tensor: `out` is resized
+    /// (reusing its allocation once warm), zero-filled, and the interior
+    /// copied row by row. Produces bit-identical contents to `pad` — the
+    /// execution engine's scratch arenas rely on that equivalence to keep
+    /// padded-view reuse invisible to the numerics.
+    pub fn pad_into(&self, top: usize, bot: usize, left: usize, right: usize, out: &mut Tensor3) {
+        out.c = self.c;
+        out.h = self.h + top + bot;
+        out.w = self.w + left + right;
+        // clear + resize zero-fills the whole buffer without reallocating
+        // once capacity has grown to the layer's working-set high-water mark
+        out.data.clear();
+        out.data.resize(out.c * out.h * out.w, 0.0);
         for c in 0..self.c {
             for y in 0..self.h {
-                for x in 0..self.w {
-                    *out.at_mut(c, y + top, x + left) = self.at(c, y, x);
-                }
+                let src = (c * self.h + y) * self.w;
+                let dst = (c * out.h + y + top) * out.w + left;
+                out.data[dst..dst + self.w].copy_from_slice(&self.data[src..src + self.w]);
             }
         }
-        out
     }
 
     /// Max absolute element-wise difference; shapes must match.
@@ -127,6 +143,20 @@ mod tests {
         *f.at_mut(1, 2, 3, 0) = 7.0;
         assert_eq!(f.at(1, 2, 3, 0), 7.0);
         assert_eq!(f.data.len(), 2 * 3 * 16);
+    }
+
+    #[test]
+    fn pad_into_reuses_buffer_and_matches_pad() {
+        let t = Tensor3::from_vec(2, 2, 3, (0..12).map(|v| v as f64).collect());
+        let mut scratch = Tensor3::zeros(0, 0, 0);
+        // first use grows the buffer; a later smaller pad must still be
+        // fully zeroed outside the interior (no stale data)
+        t.pad_into(3, 3, 3, 3, &mut scratch);
+        assert_eq!(scratch.data, t.pad(3, 3, 3, 3).data);
+        t.pad_into(1, 0, 0, 2, &mut scratch);
+        let want = t.pad(1, 0, 0, 2);
+        assert_eq!((scratch.c, scratch.h, scratch.w), (want.c, want.h, want.w));
+        assert_eq!(scratch.data, want.data);
     }
 
     #[test]

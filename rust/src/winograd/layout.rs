@@ -117,6 +117,50 @@ pub fn engine_multiply(rf: &ReorderedFilter, vt: &ReorderedTile) -> (Vec<Tile4>,
     (m_acc, mults)
 }
 
+/// Stripe-batched com-PE array: one Winograd-domain GEMM per live position
+/// instead of one GEMV per tile.
+///
+/// `v` is the gathered tile matrix for a whole stripe of `tiles` tiles,
+/// position-major `[pos][c_in][tiles]` over all 16 positions (the layout
+/// [`crate::engine::Scratch`] builds during the pre-PE gather); `m` is the
+/// Winograd-domain accumulator `[c_out][pos][tiles]`, zeroed here so
+/// skipped (structurally zero) positions stay zero for the inverse
+/// transform. For each live position `p` this multiplies the `c_out x c_in`
+/// filter block `U_p` against the `c_in x tiles` tile-column block `V_p` —
+/// the filter slab is streamed **once per stripe** instead of once per
+/// tile, and the inner loop is a contiguous AXPY over tiles that
+/// autovectorizes.
+///
+/// Bitwise contract: each output element accumulates over `c_in` in the
+/// same order as [`engine_multiply`] (a sequential fold from 0.0), so for
+/// any tile `t`, `m[co][pos][t]` is **bit-identical** to
+/// `engine_multiply(rf, tile_t).0[co][pos/4][pos%4]`. The engine's
+/// stripe-batched datapath and the per-tile functional simulator stay
+/// exactly equal through this property (pinned by the proptests).
+///
+/// Returns the number of multiplications issued:
+/// `live.len() * c_out * c_in * tiles`, exactly `tiles` times what
+/// [`engine_multiply`] reports per tile.
+pub fn engine_multiply_batch(rf: &ReorderedFilter, v: &[f64], tiles: usize, m: &mut [f64]) -> usize {
+    assert_eq!(v.len(), N * N * rf.c_in * tiles, "gathered tile matrix shape");
+    assert_eq!(m.len(), rf.c_out * N * N * tiles, "winograd accumulator shape");
+    m.fill(0.0);
+    for (pi, &pos) in rf.live.iter().enumerate() {
+        for co in 0..rf.c_out {
+            let out = &mut m[(co * N * N + pos) * tiles..][..tiles];
+            let u_base = (pi * rf.c_out + co) * rf.c_in;
+            for ci in 0..rf.c_in {
+                let u = rf.u[u_base + ci];
+                let row = &v[(pos * rf.c_in + ci) * tiles..][..tiles];
+                for (acc, &vv) in out.iter_mut().zip(row) {
+                    *acc += u * vv;
+                }
+            }
+        }
+    }
+    rf.live.len() * rf.c_out * rf.c_in * tiles
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +184,12 @@ mod tests {
         let total: usize = rf.iter().map(|r| r.live.len()).sum();
         assert_eq!(total, 49);
     }
+
+    // the stripe-batched kernel's bitwise equivalence to per-tile
+    // `engine_multiply` is pinned by the randomized
+    // `prop_batched_gemm_bitwise_equals_per_tile_multiply` property in
+    // rust/tests/proptests.rs (48 cases over every kernel class, dirty
+    // accumulator seeding) — no duplicate fixed-case test here.
 
     #[test]
     fn engine_multiply_equals_dense_math() {

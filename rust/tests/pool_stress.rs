@@ -24,7 +24,8 @@ fn rand3(rng: &mut Rng, shape: (usize, usize, usize)) -> Tensor3 {
 #[test]
 fn stress_concurrent_run_batch_through_one_shared_pool() {
     let g = zoo::dcgan(Scale::Tiny);
-    let plan = Planner::default().compile_seeded(&g, 11);
+    // one compiled plan shared by both engines (Arc clone, no deep clone)
+    let plan = Arc::new(Planner::default().compile_seeded(&g, 11));
 
     // serial ground truth on a single worker (everything runs inline)
     let serial = Engine::with_workers(plan.clone(), 1);
@@ -84,7 +85,7 @@ fn stress_concurrent_run_batch_through_one_shared_pool() {
 fn batch_and_stripe_scheduling_bitwise_identical_for_every_zoo_model() {
     let mut rng = Rng::new(501);
     for g in zoo::all(Scale::Tiny) {
-        let plan = Planner::default().compile_seeded(&g, 9);
+        let plan = Arc::new(Planner::default().compile_seeded(&g, 9));
         let engine = Engine::with_workers(plan.clone(), 3);
         let xs: Vec<Tensor3> = (0..4).map(|_| rand3(&mut rng, plan.input_shape)).collect();
         let sample = engine.run_batch_with(&xs, BatchSchedule::SampleLevel);

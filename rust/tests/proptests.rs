@@ -8,12 +8,13 @@
 //!   * the cycle model's invariants (monotonicity, bandwidth-boundedness)
 //!   * batcher conservation (no loss, no dup, FIFO)
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 use wingan::accel::functional::{run_tdc_deconv, run_winograd_deconv};
 use wingan::accel::{simulate_layer, AccelConfig};
 use wingan::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use wingan::coordinator::request::GenRequest;
-use wingan::engine::{self, Engine, PlanOptions, Planner, Select};
+use wingan::engine::{self, Engine, ModelPlan, PlanOptions, Planner, Select};
 use wingan::gan::workload::{layer_mults, Method};
 use wingan::gan::zoo::{self, Gan, Kind, Layer, Scale};
 use wingan::prop::forall;
@@ -21,6 +22,9 @@ use wingan::tdc;
 use wingan::util::prng::Rng;
 use wingan::util::tensor::{Filter4, Tensor3};
 use wingan::winograd;
+use wingan::winograd::layout::{
+    engine_multiply, engine_multiply_batch, reorder_filter, reorder_input_tile,
+};
 
 /// Random deconv problem drawn from the paper's kernel classes plus a few
 /// off-paper (K, S) combos that still satisfy the TDC offset bound.
@@ -134,6 +138,145 @@ fn prop_sparse_engine_work_matches_structural_zero_count() {
             } else {
                 Err(format!("measured {} != analytic {}", win.events.mults, want))
             }
+        },
+    );
+}
+
+/// Random one-stripe batched-GEMM problem: a Winograd-able kernel class, a
+/// strip of `tiles` horizontally adjacent 4x4 windows, random channels.
+#[derive(Debug)]
+struct StripeCase {
+    x: Tensor3,
+    w: Filter4,
+    s: usize,
+    p: usize,
+    tiles: usize,
+}
+
+fn gen_stripe_case(rng: &mut Rng) -> StripeCase {
+    // every Winograd-able (K_C <= 3) class of the zoo plus off-paper combos
+    let configs = [(5usize, 2usize), (4, 2), (3, 1), (2, 2)];
+    let (k, s) = configs[rng.below(configs.len())];
+    let p = tdc::default_padding(k, s);
+    let c_in = rng.int_in(1, 5);
+    let c_out = rng.int_in(1, 4);
+    let tiles = rng.int_in(1, 6);
+    let wpix = 2 * tiles + 2; // m*tiles + (n - m) columns: `tiles` windows
+    StripeCase {
+        x: Tensor3::from_vec(c_in, 4, wpix, rng.normal_vec(c_in * 4 * wpix)),
+        w: Filter4::from_vec(c_in, c_out, k, k, rng.normal_vec(c_in * c_out * k * k)),
+        s,
+        p,
+        tiles,
+    }
+}
+
+#[test]
+fn prop_batched_gemm_bitwise_equals_per_tile_multiply() {
+    // the PR-3 kernel contract: for every phase of every kernel class, the
+    // stripe-batched GEMM must reproduce the per-tile com-PE multiply bit
+    // for bit at every (tile, position, channel), and issue exactly the
+    // same multiplication count
+    forall("batched GEMM == per-tile com-PE, bitwise", 48, 0x6E44, gen_stripe_case, |c| {
+        let (c_in, c_out) = (c.x.c, c.w.c_out);
+        for ph in &tdc::decompose(&c.w, c.s, c.p) {
+            let rf = reorder_filter(ph);
+            // gather the stripe into the position-major [pos][ci][tiles]
+            // layout the engine's pre-PE builds
+            let mut v = vec![0.0; 16 * c_in * c.tiles];
+            for tx in 0..c.tiles {
+                let vt = reorder_input_tile(&c.x, 0, tx);
+                for pos in 0..16 {
+                    for ci in 0..c_in {
+                        v[(pos * c_in + ci) * c.tiles + tx] = vt.at(pos, ci);
+                    }
+                }
+            }
+            let mut m = vec![1.0; c_out * 16 * c.tiles]; // dirty: kernel must zero it
+            let mults = engine_multiply_batch(&rf, &v, c.tiles, &mut m);
+            let mut want_mults = 0;
+            for tx in 0..c.tiles {
+                let vt = reorder_input_tile(&c.x, 0, tx);
+                let (m_acc, per_tile) = engine_multiply(&rf, &vt);
+                want_mults += per_tile;
+                for co in 0..c_out {
+                    for pos in 0..16 {
+                        let got = m[(co * 16 + pos) * c.tiles + tx];
+                        let want = m_acc[co][pos / 4][pos % 4];
+                        if got != want {
+                            return Err(format!(
+                                "case {:?} tile {tx} pos {pos} co {co}: {got} != {want}",
+                                rf.case
+                            ));
+                        }
+                    }
+                }
+            }
+            if mults != want_mults {
+                return Err(format!("mults {mults} != per-tile total {want_mults}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_winograd_engine_bitwise_equals_per_tile_dataflow() {
+    // the PR-3 datapath contract: the stripe-batched engine must equal the
+    // per-tile functional dataflow bit for bit — outputs *and* every
+    // Events counter — at every worker count, including ragged last
+    // stripes (odd H/W force tile padding; workers > stripes force
+    // short chunks)
+    forall(
+        "stripe-batched engine == per-tile dataflow, bitwise + events",
+        16,
+        0x57121E,
+        |rng| loop {
+            let c = gen_case(rng);
+            if tdc::kc(c.w.kh, c.s) <= 3 {
+                return c;
+            }
+        },
+        |c| {
+            let l = Layer {
+                kind: Kind::Deconv,
+                c_in: c.x.c,
+                c_out: c.w.c_out,
+                k: c.w.kh,
+                s: c.s,
+                p: c.p,
+                h_in: c.x.h,
+                w_in: c.x.w,
+            };
+            let planner = Planner::new(PlanOptions {
+                select: Select::Force(Method::Winograd),
+                ..Default::default()
+            });
+            let lp = planner.compile_layer(&l, c.w.clone());
+            if lp.method != Method::Winograd {
+                return Err("expected a winograd-method plan".into());
+            }
+            let plan = Arc::new(ModelPlan {
+                model: "prop-stripe".into(),
+                input_shape: (c.x.c, c.x.h, c.x.w),
+                output_shape: (c.w.c_out, c.s * c.x.h, c.s * c.x.w),
+                layers: vec![lp],
+            });
+            let func = run_winograd_deconv(&c.x, &c.w, c.s, c.p);
+            for workers in [1usize, 2, 5] {
+                let run = Engine::with_workers(plan.clone(), workers).run(&c.x);
+                let d = run.y.max_abs_diff(&func.y);
+                if d != 0.0 {
+                    return Err(format!("workers={workers}: diff {d} (must be bitwise 0)"));
+                }
+                if run.events != func.events {
+                    return Err(format!(
+                        "workers={workers}: events {:?} != per-tile {:?}",
+                        run.events, func.events
+                    ));
+                }
+            }
+            Ok(())
         },
     );
 }
@@ -376,7 +519,8 @@ fn prop_engine_tdc_plans_bit_identical_to_composed_reference() {
                 select: Select::Force(Method::Tdc),
                 ..Default::default()
             });
-            let plan = planner.compile(&c.gan, c.weights.clone());
+            // one compiled plan, shared across worker counts via Arc
+            let plan = Arc::new(planner.compile(&c.gan, c.weights.clone()));
             let want = engine::reference_forward(&plan, &c.x);
             for workers in [1usize, 3] {
                 let run = Engine::with_workers(plan.clone(), workers).run(&c.x);
@@ -401,7 +545,7 @@ fn prop_engine_auto_plans_match_reference_within_rounding() {
         0xFA57,
         gen_model_case,
         |c| {
-            let plan = Planner::default().compile(&c.gan, c.weights.clone());
+            let plan = Arc::new(Planner::default().compile(&c.gan, c.weights.clone()));
             let want = engine::reference_forward(&plan, &c.x);
             let r1 = Engine::with_workers(plan.clone(), 1).run(&c.x);
             let r3 = Engine::with_workers(plan.clone(), 3).run(&c.x);
