@@ -40,9 +40,7 @@ fn main() {
     for (tm, tn) in [(4, 128), (8, 128), (16, 128)] {
         let p = dse::evaluate(tm, tn, &models, &VIRTEX7_485T);
         println!(
-            "  (T_m, T_n) = ({:>2}, {:>3}) -> {} DSP48E  {}",
-            tm,
-            tn,
+            "  (T_m, T_n) = ({tm:>2}, {tn:>3}) -> {} DSP48E  {}",
             p.dsp,
             if p.feasible { "fits" } else { "EXCEEDS 2800" }
         );

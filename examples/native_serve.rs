@@ -8,10 +8,12 @@
 //!    standard-DeConv reference datapath) on identical inputs.
 //!
 //! Run with:
-//! `cargo run --release --example native_serve [-- --model dcgan --requests 32 --workers 4]`
+//! `cargo run --release --example native_serve [-- --model dcgan --requests 32 --workers 4 --precision f32]`
 //!
 //! `--workers` sizes the one persistent worker pool every route's engine
 //! shares (0/absent = `WINGAN_WORKERS` env, then one thread per core).
+//! `--precision` picks the fast routes' serving tier (f32/f64; absent =
+//! `WINGAN_PRECISION` env, then the per-model dse recommendation).
 
 use std::time::{Duration, Instant};
 use wingan::cli::Args;
@@ -26,14 +28,21 @@ fn main() -> anyhow::Result<()> {
     let model = model_id(args.get_or("model", "dcgan"));
     let n_requests = args.get_usize("requests", 32).map_err(anyhow::Error::msg)?;
     let workers = args.get_workers().map_err(anyhow::Error::msg)?;
+    let precision = args.get_precision().map_err(anyhow::Error::msg)?;
 
     // --- 0. what does the plan compiler decide? ----------------------------
     let g = zoo::all(Scale::Small)
         .into_iter()
         .find(|g| model_id(g.name) == model)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
-    let plan = Planner::default().compile_seeded(&g, 42);
-    println!("== plan ({}, small scale) ==", g.name);
+    let planner = Planner::default();
+    let plan = planner.compile_seeded(&g, 42);
+    println!(
+        "== plan ({}, small scale; fast-route precision policy {:?}, dse recommends {}) ==",
+        g.name,
+        wingan::engine::resolve_precision(precision),
+        planner.resolve_precision(&g),
+    );
     for (i, lp) in plan.layers.iter().enumerate() {
         println!(
             "  L{i}: {:?} {}x{} K={} S={}  method={:?}  phases={}  live-positions={}  \
@@ -54,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     // --- 1. serving coordinator on the native backend ----------------------
     let t0 = Instant::now();
     let coord = Coordinator::start_native(
-        NativeConfig { scale: Scale::Small, workers, ..Default::default() },
+        NativeConfig { scale: Scale::Small, workers, precision, ..Default::default() },
         ServeConfig {
             max_wait: Duration::from_millis(5),
             preload_models: Some(vec![model.clone()]),

@@ -86,8 +86,7 @@ fn main() -> anyhow::Result<()> {
         let pct = |p: f64| ms[(((p / 100.0) * ms.len() as f64) as usize).min(ms.len() - 1)];
         let m = coord.metrics();
         println!(
-            "{:<12} {:>10.2} {:>10.2} {:>10.2} {:>10.1} {:>11.2} {:>10}",
-            rate,
+            "{rate:<12} {:>10.2} {:>10.2} {:>10.2} {:>10.1} {:>11.2} {:>10}",
             pct(50.0),
             pct(95.0),
             pct(99.0),

@@ -352,3 +352,33 @@ def mults_winograd(
     """Winograd DeConv multiplications with vector-level zero skipping."""
     tiles = math.ceil(h_i / M_TILE) * math.ceil(w_i / M_TILE)
     return m_out * n_in * tiles * winograd_nonzero_count(k, s, p)
+
+
+# ---------------------------------------------------------------------------
+# Layer hand-off activations -- mirrored by rust gan::zoo::Activation.
+# ---------------------------------------------------------------------------
+
+#: activation names shared with the rust zoo ("linear" is the identity;
+#: ``model.py``'s LayerCfg spells it "none" — both are accepted below)
+ACTIVATIONS = ("linear", "relu", "lrelu", "tanh")
+
+
+def apply_activation(x: np.ndarray, kind: str) -> np.ndarray:
+    """The generator hand-off activation, numpy oracle form.
+
+    Mirrors ``rust/src/gan/zoo.rs::Activation::apply_scalar`` exactly:
+    ``relu`` clamps negatives to zero, ``lrelu`` multiplies them by 0.2
+    (DiscoGAN's encoder), ``tanh`` is the image-space output layer, and
+    ``linear`` is the identity used by single-layer plans.  ``none`` is
+    accepted as an alias for the identity so ``model.py``'s ``LayerCfg.act``
+    values feed straight in.
+    """
+    if kind in ("linear", "none"):
+        return x
+    if kind == "relu":
+        return np.where(x < 0, np.zeros_like(x), x)
+    if kind == "lrelu":
+        return np.where(x < 0, x * 0.2, x)
+    if kind == "tanh":
+        return np.tanh(x)
+    raise ValueError(f"unknown activation {kind!r}")

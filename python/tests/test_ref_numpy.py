@@ -104,3 +104,23 @@ def test_phase_taps_match_rust_structure():
     assert ref.tdc_kc(5, 2) == 3
     assert ref.tdc_kc(4, 2) == 2
     assert ref.default_padding(5, 2) == 2
+
+
+def test_activation_semantics_match_rust_goldens():
+    # same hand-checkable values as rust/src/gan/zoo.rs::activation_semantics_golden
+    x = np.array([-1.5, -1.0, 0.0, 0.5, 2.0])
+    np.testing.assert_array_equal(
+        ref.apply_activation(x, "relu"), np.array([0.0, 0.0, 0.0, 0.5, 2.0])
+    )
+    np.testing.assert_array_equal(
+        ref.apply_activation(x, "lrelu"), np.array([-1.5 * 0.2, -0.2, 0.0, 0.5, 2.0])
+    )
+    np.testing.assert_array_equal(ref.apply_activation(x, "tanh"), np.tanh(x))
+    np.testing.assert_array_equal(ref.apply_activation(x, "linear"), x)
+    assert ref.ACTIVATIONS == ("linear", "relu", "lrelu", "tanh")
+
+
+def test_activation_none_aliases_linear():
+    # model.py spells the identity "none"; the oracle accepts both
+    x = np.array([-1.0, 2.0])
+    np.testing.assert_array_equal(ref.apply_activation(x, "none"), x)

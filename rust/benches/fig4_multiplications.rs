@@ -25,9 +25,8 @@ fn main() {
         let cases = wingan::winograd::phase_cases(k, s, p);
         let live: Vec<usize> = cases.iter().map(|c| c.live_positions()).collect();
         println!(
-            "  K_D={k} S={s}: cases {:?} -> live positions {:?} (C = {})",
+            "  K_D={k} S={s}: cases {:?} -> live positions {live:?} (C = {})",
             cases.iter().map(|c| c.number()).collect::<Vec<_>>(),
-            live,
             wingan::winograd::c_of_kc(k, s, p)
         );
     }
@@ -48,12 +47,12 @@ fn main() {
         p: 2,
         h_in: h,
         w_in: w,
+        act: wingan::gan::zoo::Activation::Linear,
     };
     let analytic = layer_mults(&l, Method::Winograd);
     println!(
-        "  measured {} vs analytic {} -> {}",
+        "  measured {} vs analytic {analytic} -> {}",
         run.events.mults,
-        analytic,
         if run.events.mults == analytic { "MATCH" } else { "MISMATCH" }
     );
     assert_eq!(run.events.mults, analytic);

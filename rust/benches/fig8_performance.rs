@@ -42,8 +42,7 @@ fn main() {
         let c = cfg.with_bandwidth(gbps * 1e9);
         let sim = simulate_model(&g, Method::Winograd, &c, true);
         println!(
-            "  {:>5.1} GB/s  t={:>8.3} ms  compute {:>8.3} ms  transfer {:>8.3} ms  {}",
-            gbps,
+            "  {gbps:>5.1} GB/s  t={:>8.3} ms  compute {:>8.3} ms  transfer {:>8.3} ms  {}",
             sim.t_total * 1e3,
             sim.layers.iter().map(|l| l.t_compute).sum::<f64>() * 1e3,
             sim.layers.iter().map(|l| l.t_transfer).sum::<f64>() * 1e3,

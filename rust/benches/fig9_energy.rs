@@ -50,7 +50,7 @@ fn main() {
             / models.len() as f64;
         let mean_t: f64 = models.iter().map(|g| fig9_row(g, &cfg, &p).saving_vs_tdc()).sum::<f64>()
             / models.len() as f64;
-        println!("  {:<34} mean vs ZP {:>5.2}x   vs TDC {:>5.2}x", label, mean, mean_t);
+        println!("  {label:<34} mean vs ZP {mean:>5.2}x   vs TDC {mean_t:>5.2}x");
     }
 
     println!("\n-- timings --");

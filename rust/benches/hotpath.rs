@@ -66,6 +66,9 @@ fn per_tile_winograd_forward(plan: &ModelPlan, x: &Tensor3) -> (Tensor3, u64) {
                 }
             }
         }
+        // same hand-off activation the engine applies (zoo layers carry
+        // relu/tanh since PR 4)
+        l.act.apply(&mut y);
         cur = y;
     }
     (cur, tiles)
@@ -221,6 +224,51 @@ fn main() {
     report.metric("winograd_tiles_per_run", tiles_per_run as f64);
     report.metric("workers", wen.workers() as f64);
 
+    // --- precision tiers: f32 serving fast path vs the f64 reference -----
+    // PR 4 made the whole datapath generic over the scalar element and
+    // lowered serving plans to a precision tier: the f32 tier halves the
+    // bytes behind the reordered filter slabs (the stream that dominates
+    // at paper scale — MBs per phase) and the gathered tile matrices, and
+    // doubles the SIMD width of the blocked GEMM micro-kernel. This is the
+    // acceptance head-to-head: same model, same plan structure, same
+    // blocked kernel, f32 vs f64.
+    let wplan32 = Arc::new(wplan.lower::<f32>());
+    let wx32: Tensor3<f32> = wx.cast_to();
+    // numerics gate on every bench run: the f32 tier must track the f64
+    // tier to single-precision accumulation error
+    {
+        let y64 = we1.run(&wx).y;
+        let y32 = Engine::with_workers(wplan32.clone(), 1).run(&wx32).y;
+        let scale = y64.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        let rel = y32.cast_to::<f64>().max_abs_diff(&y64) / scale;
+        assert!(rel < 1e-3, "f32 tier diverged from the f64 tier: rel {rel}");
+    }
+    let we32_1 = Engine::with_workers(wplan32.clone(), 1);
+    let we32_n = Engine::new(wplan32.clone());
+    let m_f32_1 = wb.run("winograd: DCGAN-paper, f32 fast path, 1 worker", || {
+        black_box(we32_1.run(&wx32).y.data.len())
+    });
+    let m_f32_n = wb.run(
+        &format!("winograd: DCGAN-paper, f32 fast path, {} workers", we32_n.workers()),
+        || black_box(we32_n.run(&wx32).y.data.len()),
+    );
+    println!("{}", speedup_line("f32 fast path vs f64 reference (1 worker)", &m_batch1, &m_f32_1));
+    println!("{}", speedup_line("f32 fast path vs f64 reference (parallel)", &m_batchn, &m_f32_n));
+    println!(
+        "  -> f32 throughput: {:.0} tiles/s (1 worker), {:.0} tiles/s ({} workers)",
+        m_f32_1.throughput(tiles_per_run as usize),
+        m_f32_n.throughput(tiles_per_run as usize),
+        we32_n.workers(),
+    );
+    report.record(&m_f32_1);
+    report.record_as("winograd: DCGAN-paper, f32 fast path, parallel", &m_f32_n);
+    report.metric("f32_vs_f64_speedup_1w", speedup(&m_batch1, &m_f32_1));
+    report.metric("f32_vs_f64_speedup_parallel", speedup(&m_batchn, &m_f32_n));
+    report.metric("f32_tiles_per_sec_1w", m_f32_1.throughput(tiles_per_run as usize));
+    report.metric("f32_tiles_per_sec_parallel", m_f32_n.throughput(tiles_per_run as usize));
+    report.metric("f64_tiles_per_sec_1w", m_batch1.throughput(tiles_per_run as usize));
+    report.metric("f64_tiles_per_sec_parallel", m_batchn.throughput(tiles_per_run as usize));
+
     // --- pool: spawn-overhead elimination --------------------------------
     // PR 1 spawned scoped threads per phase per layer per request; the
     // persistent pool pays thread creation once at startup. Near-empty
@@ -336,7 +384,7 @@ fn main() {
     report.record(&m_seq);
     report.record(&m_smp);
     report.metric("batch8_sample_level_speedup", speedup(&m_seq, &m_smp));
-    let path = std::path::Path::new("BENCH_pr3.json");
+    let path = std::path::Path::new("BENCH_pr4.json");
     report.write(path).expect("write bench trajectory json");
     println!("wrote {} (perf trajectory)", path.display());
 }

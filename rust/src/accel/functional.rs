@@ -12,6 +12,7 @@
 
 use crate::accel::linebuf::LineBuffer;
 use crate::tdc::{self, PhaseFilter};
+use crate::util::elem::Elem;
 use crate::util::tensor::{Filter4, Tensor3};
 use crate::winograd::layout::{engine_multiply, reorder_filter, ReorderedTile};
 use crate::winograd::transforms::{input_transform, inverse_transform, Tile4, M, N};
@@ -48,8 +49,14 @@ pub struct FunctionalRun {
 /// Phase-padded input view for tile-aligned Winograd: shift by the phase's
 /// TDC input offset and zero-pad to `(ho_t + R - 1) x (wo_t + R - 1)`.
 /// Shared with the precompiled-plan engine (`crate::engine`) so the two
-/// datapaths stay bit-identical by construction.
-pub fn phase_padded(x: &Tensor3, ph: &PhaseFilter, ho_t: usize, wo_t: usize) -> Tensor3 {
+/// datapaths stay bit-identical by construction; generic over the element
+/// precision because the engine runs it at both tiers.
+pub fn phase_padded<E: Elem>(
+    x: &Tensor3<E>,
+    ph: &PhaseFilter<E>,
+    ho_t: usize,
+    wo_t: usize,
+) -> Tensor3<E> {
     let mut out = Tensor3::zeros(0, 0, 0);
     phase_padded_into(x, ph, ho_t, wo_t, &mut out);
     out
@@ -60,12 +67,12 @@ pub fn phase_padded(x: &Tensor3, ph: &PhaseFilter, ho_t: usize, wo_t: usize) -> 
 /// the variant the execution engine's per-run scratch arena uses, so the
 /// full phase-padded map is materialized without a fresh allocation per
 /// phase.
-pub fn phase_padded_into(
-    x: &Tensor3,
-    ph: &PhaseFilter,
+pub fn phase_padded_into<E: Elem>(
+    x: &Tensor3<E>,
+    ph: &PhaseFilter<E>,
     ho_t: usize,
     wo_t: usize,
-    out: &mut Tensor3,
+    out: &mut Tensor3<E>,
 ) {
     let ly = (-ph.d0y) as usize;
     let lx = (-ph.d0x) as usize;
@@ -260,6 +267,7 @@ mod tests {
                 p,
                 h_in: h,
                 w_in: w_sp,
+                act: crate::gan::zoo::Activation::Linear,
             };
             assert_eq!(run.events.mults, layer_mults(&l, Method::Winograd), "K={k}");
             let run_t = run_tdc_deconv(&x, &w, s, p);

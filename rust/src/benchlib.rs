@@ -67,7 +67,7 @@ impl Measurement {
             } else if s < 1.0 {
                 format!("{:8.3} ms", s * 1e3)
             } else {
-                format!("{:8.3} s ", s)
+                format!("{s:8.3} s ")
             }
         };
         format!(

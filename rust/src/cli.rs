@@ -1,6 +1,7 @@
 //! Tiny CLI argument parser (no clap offline): subcommand + `--key value`
 //! flags + `--bool-flag` switches.
 
+use crate::util::elem::Precision;
 use std::collections::BTreeMap;
 
 /// Parsed command line.
@@ -72,6 +73,20 @@ impl Args {
         self.get_usize("workers", 0)
     }
 
+    /// The serving-precision flag, `--precision f32|f64|auto`. Returns
+    /// `None` when absent or `auto` — the "no explicit request" value every
+    /// consumer resolves through
+    /// [`crate::engine::resolve_precision`] (env `WINGAN_PRECISION`, then
+    /// the per-plan dse recommendation), so CLI, env and default precision
+    /// selection share one override path, exactly like pool sizing.
+    pub fn get_precision(&self) -> Result<Option<Precision>, String> {
+        match self.get("precision") {
+            None => Ok(None),
+            Some(v) if v.eq_ignore_ascii_case("auto") => Ok(None),
+            Some(v) => Precision::parse(v).map(Some).map_err(|e| format!("--precision: {e}")),
+        }
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
     }
@@ -108,6 +123,21 @@ mod tests {
         assert_eq!(parse("serve").get_workers().unwrap(), 0);
         assert_eq!(parse("serve --workers 6").get_workers().unwrap(), 6);
         assert!(parse("serve --workers lots").get_workers().is_err());
+    }
+
+    #[test]
+    fn precision_flag_defaults_to_unset() {
+        assert_eq!(parse("serve").get_precision().unwrap(), None);
+        assert_eq!(parse("serve --precision auto").get_precision().unwrap(), None);
+        assert_eq!(
+            parse("serve --precision f32").get_precision().unwrap(),
+            Some(Precision::F32)
+        );
+        assert_eq!(
+            parse("serve --precision F64").get_precision().unwrap(),
+            Some(Precision::F64)
+        );
+        assert!(parse("serve --precision f16").get_precision().is_err());
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::accel::cycle::simulate_model;
 use crate::gan::workload::Method;
 use crate::gan::zoo::{Gan, Kind, Layer};
 use crate::resource;
+use crate::util::elem::Precision;
 use crate::winograd::sparsity::c_of_kc;
 use crate::winograd::transforms::{M as M_TILE, N as N_TILE};
 
@@ -161,6 +162,34 @@ pub fn render_table(points: &[DesignPoint], top: usize) -> String {
     out
 }
 
+/// Per-model serving-precision recommendation — the eq. 7 bandwidth
+/// analysis applied to the precision/resource trade-off the FPGA
+/// methodology papers make explicit (Ahmad & Pasha 1903.01811, Alhussain
+/// 2201.06878): reduced precision halves the bytes behind every word the
+/// datapath moves.
+///
+/// The rule: evaluate each deconv layer's eq. 7 bandwidth requirement with
+/// the word width doubled to the f64 reference tier's 8 bytes. If any
+/// layer then *needs more bandwidth than the envelope provides* — i.e. the
+/// full-precision tier would be transfer-bound somewhere — recommend
+/// [`Precision::F32`], which halves the transfer volume and converts the
+/// saved bandwidth directly into throughput. A model whose every layer
+/// hides its transfers under compute even at 8-byte words keeps the
+/// [`Precision::F64`] reference tier: it has no bandwidth to reclaim.
+///
+/// This is [`crate::engine::Planner::resolve_precision`]'s `Auto` policy;
+/// `wingan serve --precision` / `WINGAN_PRECISION` /
+/// `NativeConfig::precision` override it end to end.
+pub fn recommend_precision(g: &Gan, cfg: &AccelConfig) -> Precision {
+    let f64_words = AccelConfig { word_bytes: Precision::F64.word_bytes(), ..*cfg };
+    for l in g.deconv_layers() {
+        if bandwidth_requirement(l, &f64_words) > cfg.bandwidth {
+            return Precision::F32;
+        }
+    }
+    Precision::F64
+}
+
 /// The paper's eq. 5 `C(K_C)/m^2` cycles-per-output constant, exposed for
 /// the docs/benches.
 pub fn eq5_constant(k: usize, s: usize, p: usize) -> f64 {
@@ -183,7 +212,7 @@ mod tests {
         // the paper's (T_m, T_n) = (4, 128).
         let models = zoo::all(Scale::Paper);
         let best = optimal(&models, &VIRTEX7_485T);
-        assert_eq!((best.t_m, best.t_n), (4, 128), "got {:?}", best);
+        assert_eq!((best.t_m, best.t_n), (4, 128), "got {best:?}");
     }
 
     #[test]
@@ -218,5 +247,21 @@ mod tests {
         for l in g.deconv_layers() {
             assert!(bandwidth_requirement(l, &cfg) > 0.0);
         }
+    }
+
+    #[test]
+    fn precision_recommendation_follows_bandwidth_envelope() {
+        use crate::util::elem::Precision;
+        let g = zoo::dcgan(Scale::Paper);
+        // a starved envelope is transfer-bound everywhere -> f32 tier
+        let starved = AccelConfig::default().with_bandwidth(1.0);
+        assert_eq!(recommend_precision(&g, &starved), Precision::F32);
+        // an effectively infinite envelope hides every transfer -> the
+        // f64 reference tier (nothing to reclaim)
+        let lavish = AccelConfig::default().with_bandwidth(1e30);
+        assert_eq!(recommend_precision(&g, &lavish), Precision::F64);
+        // deterministic at any fixed config
+        let cfg = AccelConfig::default();
+        assert_eq!(recommend_precision(&g, &cfg), recommend_precision(&g, &cfg));
     }
 }

@@ -2,8 +2,9 @@
 //! the plan-compile / execute split).
 //!
 //! The [`Engine`] walks a [`ModelPlan`] layer by layer, handing each
-//! layer's activation tensor to the next, and schedules work on a
-//! persistent [`WorkerPool`] at **two levels** ([`BatchSchedule`]):
+//! layer's activation tensor (through the layer's activation function) to
+//! the next, and schedules work on a persistent [`WorkerPool`] at **two
+//! levels** ([`BatchSchedule`]):
 //!
 //! * **stripe-level** — each layer is split across output stripes (tile
 //!   rows on the Winograd datapath, output rows on the TDC/conv
@@ -12,17 +13,24 @@
 //!   each sample executing its layers single-threaded, so whole samples
 //!   stream through the workers with no per-layer synchronisation.
 //!
+//! The engine is **generic over the plan's element precision**
+//! ([`Elem`]): `Engine<f64>` is the reference tier, `Engine<f32>` the
+//! serving fast path (half the memory traffic on every hot-loop stream,
+//! double the SIMD width). [`AnyEngine`] is the runtime-precision handle
+//! the serving layer routes through.
+//!
 //! Each output pixel is produced by exactly one task with a fixed
 //! accumulation order under *either* schedule, so the result is **bitwise
-//! independent of the worker count and of the schedule**, and the TDC
-//! datapath is **bit-identical (f64) to the layer-composed standard-DeConv
-//! reference** ([`crate::engine::reference_forward`]).
+//! independent of the worker count and of the schedule at both
+//! precisions**, and the TDC datapath is **bit-identical (f64) to the
+//! layer-composed standard-DeConv reference**
+//! ([`crate::engine::reference_forward`]).
 //!
 //! Event accounting mirrors `accel::functional` exactly: for a deconv layer
 //! the engine's per-layer [`Events`] equal what `run_winograd_deconv` /
 //! `run_tdc_deconv` would have measured through the line-buffered dataflow
 //! (the tests pin this), without paying the per-call re-derivation the seed
-//! simulator did.
+//! simulator did. Event counts are precision-independent.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -34,14 +42,15 @@ use crate::engine::scratch::Scratch;
 use crate::gan::workload::Method;
 use crate::gan::zoo::Kind;
 use crate::tdc;
+use crate::util::elem::{Elem, Precision};
 use crate::util::tensor::Tensor3;
 use crate::winograd::layout::engine_multiply_batch;
 use crate::winograd::transforms::{input_transform, inverse_transform, Tile4, M, N};
 
 /// Result of running one model through the engine.
 #[derive(Debug)]
-pub struct EngineRun {
-    pub y: Tensor3,
+pub struct EngineRun<E: Elem = f64> {
+    pub y: Tensor3<E>,
     /// measured events per layer, in layer order
     pub per_layer: Vec<Events>,
     /// aggregate over all layers
@@ -67,52 +76,58 @@ pub enum BatchSchedule {
 }
 
 /// Executes precompiled [`ModelPlan`]s with two-level (sample × stripe)
-/// parallelism on a persistent [`WorkerPool`].
+/// parallelism on a persistent [`WorkerPool`], at the plan's element
+/// precision.
 ///
 /// Engines are cheap to clone (the plan and pool are shared behind `Arc`s)
 /// and may share one pool via [`Engine::with_pool`] — the configuration a
 /// native server uses so every route's requests draw from one fixed set of
 /// worker threads.
 #[derive(Clone, Debug)]
-pub struct Engine {
-    plan: Arc<ModelPlan>,
+pub struct Engine<E: Elem = f64> {
+    plan: Arc<ModelPlan<E>>,
     pool: Arc<WorkerPool>,
     /// reusable per-task buffers, shared by every clone of this engine so
     /// scratch grown by one request is reused by the next
-    scratch: Arc<ScratchStash<Scratch>>,
+    scratch: Arc<ScratchStash<Scratch<E>>>,
 }
 
-impl Engine {
+impl<E: Elem> Engine<E> {
     /// Private pool sized by [`resolve_workers`]`(0)`: one worker per core
     /// unless the `WINGAN_WORKERS` environment variable overrides it.
     ///
-    /// All constructors take `impl Into<Arc<ModelPlan>>`: pass an owned
-    /// [`ModelPlan`] to wrap it, or an `Arc<ModelPlan>` to share one
+    /// All constructors take `impl Into<Arc<ModelPlan<E>>>`: pass an owned
+    /// [`ModelPlan`] to wrap it, or an `Arc<ModelPlan<E>>` to share one
     /// compiled plan across many engines without deep-cloning it.
-    pub fn new(plan: impl Into<Arc<ModelPlan>>) -> Engine {
+    pub fn new(plan: impl Into<Arc<ModelPlan<E>>>) -> Engine<E> {
         Engine::with_pool(plan, WorkerPool::shared(resolve_workers(0)))
     }
 
     /// Private pool with exactly `workers.max(1)` threads.
-    pub fn with_workers(plan: impl Into<Arc<ModelPlan>>, workers: usize) -> Engine {
+    pub fn with_workers(plan: impl Into<Arc<ModelPlan<E>>>, workers: usize) -> Engine<E> {
         Engine::with_pool(plan, WorkerPool::shared(workers.max(1)))
     }
 
     /// Execute on an existing (typically shared) pool.
-    pub fn with_pool(plan: impl Into<Arc<ModelPlan>>, pool: Arc<WorkerPool>) -> Engine {
+    pub fn with_pool(plan: impl Into<Arc<ModelPlan<E>>>, pool: Arc<WorkerPool>) -> Engine<E> {
         Engine { plan: plan.into(), pool, scratch: Arc::new(ScratchStash::new()) }
     }
 
     /// The compiled plan this engine executes.
-    pub fn plan(&self) -> &ModelPlan {
+    pub fn plan(&self) -> &ModelPlan<E> {
         &self.plan
     }
 
     /// Shared handle to the compiled plan — hand this to another engine's
     /// constructor to execute the same plan without recompiling or
     /// deep-cloning it.
-    pub fn plan_arc(&self) -> Arc<ModelPlan> {
+    pub fn plan_arc(&self) -> Arc<ModelPlan<E>> {
         self.plan.clone()
+    }
+
+    /// The precision tier this engine executes at.
+    pub fn precision(&self) -> Precision {
+        E::PRECISION
     }
 
     /// The worker pool this engine dispatches to.
@@ -127,7 +142,7 @@ impl Engine {
 
     /// Run the whole generator on one input activation tensor,
     /// stripe-parallel across the full pool.
-    pub fn run(&self, x: &Tensor3) -> EngineRun {
+    pub fn run(&self, x: &Tensor3<E>) -> EngineRun<E> {
         self.run_with_chunks(x, self.pool.threads())
     }
 
@@ -137,7 +152,7 @@ impl Engine {
     /// The first layer borrows `x` directly (no per-request input copy);
     /// one [`Scratch`] is checked out for the whole run and reused across
     /// every phase and layer for the padded-input views.
-    fn run_with_chunks(&self, x: &Tensor3, chunks: usize) -> EngineRun {
+    fn run_with_chunks(&self, x: &Tensor3<E>, chunks: usize) -> EngineRun<E> {
         let t0 = Instant::now();
         assert_eq!(
             (x.c, x.h, x.w),
@@ -146,7 +161,7 @@ impl Engine {
             self.plan.model
         );
         let mut scratch = self.scratch.take();
-        let mut cur: Option<Tensor3> = None;
+        let mut cur: Option<Tensor3<E>> = None;
         let mut per_layer = Vec::with_capacity(self.plan.layers.len());
         let mut total = Events::default();
         for lp in &self.plan.layers {
@@ -175,13 +190,13 @@ impl Engine {
     /// Run a batch of samples under the automatically chosen
     /// [`BatchSchedule`]. Outputs (and event counts) are bitwise identical
     /// under either schedule, in sample order.
-    pub fn run_batch(&self, xs: &[Tensor3]) -> Vec<EngineRun> {
+    pub fn run_batch(&self, xs: &[Tensor3<E>]) -> Vec<EngineRun<E>> {
         self.run_batch_with(xs, self.batch_schedule(xs.len()))
     }
 
     /// Run a batch under an explicit schedule (benchmarks and the
     /// schedule-equivalence tests force both paths).
-    pub fn run_batch_with(&self, xs: &[Tensor3], schedule: BatchSchedule) -> Vec<EngineRun> {
+    pub fn run_batch_with(&self, xs: &[Tensor3<E>], schedule: BatchSchedule) -> Vec<EngineRun<E>> {
         match schedule {
             BatchSchedule::StripeLevel => xs.iter().map(|x| self.run(x)).collect(),
             // one chunk per sample normally; honoring the full (s, e) range
@@ -198,13 +213,21 @@ impl Engine {
         }
     }
 
+    /// Each datapath applies the layer's hand-off activation *inside* its
+    /// parallel stripe tasks (on the task-local `part` buffer, before the
+    /// merge), so the activation sweep is parallel and cache-warm instead
+    /// of a second serial full-tensor pass. Every output pixel is produced
+    /// by exactly one task and the activation is elementwise, so this is
+    /// bitwise identical to activating the assembled output —
+    /// worker-count/schedule invariance is untouched, and
+    /// [`crate::engine::reference_forward`] applies the same function.
     fn run_layer(
         &self,
-        lp: &LayerPlan,
-        x: &Tensor3,
+        lp: &LayerPlan<E>,
+        x: &Tensor3<E>,
         chunks: usize,
-        scratch: &mut Scratch,
-    ) -> (Tensor3, Events) {
+        scratch: &mut Scratch<E>,
+    ) -> (Tensor3<E>, Events) {
         match lp.layer.kind {
             Kind::Conv => self.run_conv(lp, x, chunks, scratch),
             Kind::Deconv => match lp.method {
@@ -221,11 +244,11 @@ impl Engine {
     /// reused across phases and layers.
     fn run_deconv_tdc(
         &self,
-        lp: &LayerPlan,
-        x: &Tensor3,
+        lp: &LayerPlan<E>,
+        x: &Tensor3<E>,
         n_chunks: usize,
-        scratch: &mut Scratch,
-    ) -> (Tensor3, Events) {
+        scratch: &mut Scratch<E>,
+    ) -> (Tensor3<E>, Events) {
         let l = &lp.layer;
         let (s, kc) = (l.s, lp.kc);
         let mut y = Tensor3::zeros(l.c_out, s * x.h, s * x.w);
@@ -240,7 +263,7 @@ impl Engine {
                 for co in 0..l.c_out {
                     for oy in oy_s..oy_e {
                         for ox in 0..x.w {
-                            let mut acc = 0.0;
+                            let mut acc = E::ZERO;
                             for ci in 0..xp.c {
                                 for ky in 0..kc {
                                     for kx in 0..kc {
@@ -255,6 +278,9 @@ impl Engine {
                 }
                 pev.mults += (l.c_out * (oy_e - oy_s) * x.w * xp.c * kc * kc) as u64;
                 pev.stripes += (oy_e - oy_s) as u64;
+                // hand-off activation on the task-local buffer (see
+                // run_layer) — only once, on the phase that owns the pixel
+                l.act.apply(&mut part);
                 (part, pev)
             });
             let mut oy_base = 0;
@@ -281,22 +307,23 @@ impl Engine {
 
     /// Winograd datapath, stripe-batched: precompiled reordered filters,
     /// pre-PE transforms *gathered* across all `tiles_w` tiles of a stripe
-    /// into one position-major Winograd-domain matrix, one batched com-PE
+    /// into one position-major Winograd-domain matrix, one blocked com-PE
     /// GEMM per stripe over live rows only ([`engine_multiply_batch`] — the
-    /// filter slab is streamed once per stripe instead of once per tile),
-    /// post-PE inverse transform, phase interleave. The per-output
-    /// accumulation order is exactly the per-tile path's, so the result is
-    /// bit-identical to `accel::functional::run_winograd_deconv` and the
+    /// filter slab is streamed once per stripe instead of once per tile,
+    /// with register/cache blocking inside the kernel), post-PE inverse
+    /// transform, phase interleave. The per-output accumulation order is
+    /// exactly the per-tile path's, so the result is bit-identical to
+    /// `accel::functional::run_winograd_deconv` (at f64) and the
     /// [`Events`] counters are unchanged. All intermediate buffers live in
     /// per-worker [`Scratch`] arenas — the tile loop performs no heap
     /// allocation.
     fn run_deconv_winograd(
         &self,
-        lp: &LayerPlan,
-        x: &Tensor3,
+        lp: &LayerPlan<E>,
+        x: &Tensor3<E>,
         n_chunks: usize,
-        scratch: &mut Scratch,
-    ) -> (Tensor3, Events) {
+        scratch: &mut Scratch<E>,
+    ) -> (Tensor3<E>, Events) {
         let l = &lp.layer;
         let s = l.s;
         let mut y = Tensor3::zeros(l.c_out, s * x.h, s * x.w);
@@ -323,7 +350,7 @@ impl Engine {
                 &self.scratch,
                 n_chunks,
                 geo.tiles_h,
-                |scr: &mut Scratch, ty_s, ty_e| {
+                |scr: &mut Scratch<E>, ty_s, ty_e| {
                     let mut part = Tensor3::zeros(l.c_out, M * (ty_e - ty_s), geo.wo_t);
                     let mut pev = Events::default();
                     let c_in = xp.c;
@@ -336,7 +363,7 @@ impl Engine {
                         for tx in 0..tiles_w {
                             pev.tiles += 1;
                             for ci in 0..c_in {
-                                let mut z: Tile4 = [[0.0; N]; N];
+                                let mut z: Tile4<E> = [[E::ZERO; N]; N];
                                 for (i, row) in z.iter_mut().enumerate() {
                                     for (j, val) in row.iter_mut().enumerate() {
                                         *val = xp.at(ci, M * ty + i, M * tx + j);
@@ -351,13 +378,13 @@ impl Engine {
                             }
                             pev.linebuf_reads += (N * N * c_in) as u64;
                         }
-                        // com-PE: one live-rows-only GEMM for the whole
-                        // stripe — filter block read once per stripe
+                        // com-PE: one live-rows-only blocked GEMM for the
+                        // whole stripe — filter block read once per stripe
                         pev.mults += engine_multiply_batch(rf, &scr.v, tiles_w, &mut scr.m) as u64;
                         // post-PE: inverse transform into the local stripe
                         for co in 0..l.c_out {
                             for tx in 0..tiles_w {
-                                let mut m4: Tile4 = [[0.0; N]; N];
+                                let mut m4: Tile4<E> = [[E::ZERO; N]; N];
                                 for (i, row) in m4.iter_mut().enumerate() {
                                     for (j, val) in row.iter_mut().enumerate() {
                                         *val = scr.m[(co * N * N + i * N + j) * tiles_w + tx];
@@ -372,6 +399,10 @@ impl Engine {
                             }
                         }
                     }
+                    // hand-off activation on the task-local stripe (see
+                    // run_layer); tile-padding rows beyond x.h are
+                    // activated too but discarded by the merge below
+                    l.act.apply(&mut part);
                     (part, pev)
                 },
             );
@@ -405,11 +436,11 @@ impl Engine {
     /// run's scratch arena, like the deconv datapaths.
     fn run_conv(
         &self,
-        lp: &LayerPlan,
-        x: &Tensor3,
+        lp: &LayerPlan<E>,
+        x: &Tensor3<E>,
         n_chunks: usize,
-        scratch: &mut Scratch,
-    ) -> (Tensor3, Events) {
+        scratch: &mut Scratch<E>,
+    ) -> (Tensor3<E>, Events) {
         let l = &lp.layer;
         let (k, s, p) = (l.k, l.s, l.p);
         // same output geometry as the tdc::conv2d reference (coincides with
@@ -424,7 +455,7 @@ impl Engine {
             for co in 0..l.c_out {
                 for oy in oy_s..oy_e {
                     for ox in 0..wo {
-                        let mut acc = 0.0;
+                        let mut acc = E::ZERO;
                         for ci in 0..xp.c {
                             for ky in 0..k {
                                 for kx in 0..k {
@@ -439,6 +470,8 @@ impl Engine {
             }
             pev.mults += (l.c_out * (oy_e - oy_s) * wo * xp.c * k * k) as u64;
             pev.stripes += (oy_e - oy_s) as u64;
+            // hand-off activation on the task-local buffer (see run_layer)
+            l.act.apply(&mut part);
             (part, pev)
         });
         let mut y = Tensor3::zeros(l.c_out, ho, wo);
@@ -461,13 +494,123 @@ impl Engine {
     }
 }
 
+/// A compiled engine at a runtime-chosen [`Precision`] — the handle the
+/// serving layer routes requests through. The fast ("winograd") routes of
+/// a native server hold whatever tier
+/// [`crate::engine::Planner::resolve_precision`] picked; the "tdc"
+/// reference routes always hold the `F64` arm.
+///
+/// [`AnyEngine::run_packed`] is the f32 serving boundary: for the `F32`
+/// arm the packed request buffer feeds the engine **without ever widening
+/// to f64** — input copy, every layer, and the output repack all stay in
+/// single precision (the fast path the precision tiers exist for).
+#[derive(Clone, Debug)]
+pub enum AnyEngine {
+    F32(Engine<f32>),
+    F64(Engine<f64>),
+}
+
+impl AnyEngine {
+    /// Wrap a compiled f64 plan at the requested serving precision (the
+    /// `F32` arm lowers it once, at build time).
+    pub fn build(plan: Arc<ModelPlan<f64>>, precision: Precision, pool: Arc<WorkerPool>) -> AnyEngine {
+        match precision {
+            Precision::F64 => AnyEngine::F64(Engine::with_pool(plan, pool)),
+            Precision::F32 => {
+                AnyEngine::F32(Engine::with_pool(Arc::new(plan.lower::<f32>()), pool))
+            }
+        }
+    }
+
+    /// The precision tier this route executes at.
+    pub fn precision(&self) -> Precision {
+        match self {
+            AnyEngine::F32(_) => Precision::F32,
+            AnyEngine::F64(_) => Precision::F64,
+        }
+    }
+
+    /// The worker pool the underlying engine dispatches to.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        match self {
+            AnyEngine::F32(e) => e.pool(),
+            AnyEngine::F64(e) => e.pool(),
+        }
+    }
+
+    /// Worker-thread count of the underlying pool.
+    pub fn workers(&self) -> usize {
+        self.pool().threads()
+    }
+
+    /// `[C, H, W]` of one input sample.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        match self {
+            AnyEngine::F32(e) => e.plan().input_shape,
+            AnyEngine::F64(e) => e.plan().input_shape,
+        }
+    }
+
+    /// Flat element count of one input sample.
+    pub fn input_len(&self) -> usize {
+        let (c, h, w) = self.input_shape();
+        c * h * w
+    }
+
+    /// Flat element count of one output sample.
+    pub fn output_len(&self) -> usize {
+        match self {
+            AnyEngine::F32(e) => e.plan().output_len(),
+            AnyEngine::F64(e) => e.plan().output_len(),
+        }
+    }
+
+    /// Execute one packed `batch x sample` f32 buffer through
+    /// [`Engine::run_batch`] and repack the f32 outputs, returning the
+    /// aggregate [`Events`] alongside. On the `F32` arm this is the
+    /// end-to-end single-precision fast path; on the `F64` arm the buffer
+    /// is widened exactly (f32 → f64 is lossless) and narrowed once on the
+    /// way out, as the pre-tiered serving path always did.
+    pub fn run_packed(&self, batch: usize, input: &[f32]) -> (Vec<f32>, Events) {
+        match self {
+            AnyEngine::F32(e) => run_packed_generic(e, batch, input),
+            AnyEngine::F64(e) => run_packed_generic(e, batch, input),
+        }
+    }
+}
+
+fn run_packed_generic<E: Elem>(
+    engine: &Engine<E>,
+    batch: usize,
+    input: &[f32],
+) -> (Vec<f32>, Events) {
+    let (c, h, w) = engine.plan().input_shape;
+    let sample_in = c * h * w;
+    let sample_out = engine.plan().output_len();
+    assert_eq!(input.len(), batch * sample_in, "packed batch length");
+    let xs: Vec<Tensor3<E>> = (0..batch)
+        .map(|b| {
+            let chunk = &input[b * sample_in..(b + 1) * sample_in];
+            Tensor3::from_vec(c, h, w, chunk.iter().map(|&v| E::from_f32(v)).collect())
+        })
+        .collect();
+    let runs = engine.run_batch(&xs);
+    let mut out = Vec::with_capacity(batch * sample_out);
+    let mut events = Events::default();
+    for run in &runs {
+        events.merge(&run.events);
+        out.extend(run.y.data.iter().map(|&v| v.to_f32()));
+    }
+    (out, events)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::accel::functional::{run_tdc_deconv, run_winograd_deconv};
     use crate::engine::plan::{PlanOptions, Planner, Select};
     use crate::engine::reference_forward;
-    use crate::gan::zoo::{self, Layer, Scale};
+    use crate::gan::zoo::{self, Activation, Layer, Scale};
     use crate::util::prng::Rng;
     use crate::util::tensor::Filter4;
 
@@ -507,7 +650,17 @@ mod tests {
             &[(5usize, 2usize, 3usize, 2usize, 6usize, 8usize), (4, 2, 2, 3, 5, 7)]
         {
             let p = tdc::default_padding(k, s);
-            let l = Layer { kind: Kind::Deconv, c_in, c_out, k, s, p, h_in: h, w_in: w };
+            let l = Layer {
+                kind: Kind::Deconv,
+                c_in,
+                c_out,
+                k,
+                s,
+                p,
+                h_in: h,
+                w_in: w,
+                act: Activation::Linear,
+            };
             let wts =
                 Filter4::from_vec(c_in, c_out, k, k, rng.normal_vec(c_in * c_out * k * k));
             let planner = Planner::new(PlanOptions {
@@ -541,7 +694,17 @@ mod tests {
         let mut rng = Rng::new(902);
         let (k, s, c_in, c_out, h, w) = (5usize, 2usize, 2usize, 3usize, 5usize, 7usize);
         let p = tdc::default_padding(k, s);
-        let l = Layer { kind: Kind::Deconv, c_in, c_out, k, s, p, h_in: h, w_in: w };
+        let l = Layer {
+            kind: Kind::Deconv,
+            c_in,
+            c_out,
+            k,
+            s,
+            p,
+            h_in: h,
+            w_in: w,
+            act: Activation::Linear,
+        };
         let wts = Filter4::from_vec(c_in, c_out, k, k, rng.normal_vec(c_in * c_out * k * k));
         let planner = Planner::new(PlanOptions {
             select: Select::Force(Method::Tdc),
@@ -660,5 +823,94 @@ mod tests {
         assert_eq!((run.y.c, run.y.h, run.y.w), plan.output_shape);
         assert_eq!(run.per_layer.len(), g.layers.len());
         assert!(run.per_layer.iter().all(|e| e.mults > 0));
+    }
+
+    #[test]
+    fn engine_applies_layer_activations() {
+        // a single-layer plan with each activation: the engine output must
+        // equal the Linear output passed through the activation elementwise
+        // (and match reference_forward, which applies the same function)
+        let mut rng = Rng::new(908);
+        let base = Layer::deconv(2, 2, 5, 2, 4);
+        let wts = Filter4::from_vec(2, 2, 5, 5, rng.normal_vec(2 * 2 * 25));
+        let x = rand3(&mut rng, 2, 4, 4);
+        let planner = Planner::new(PlanOptions {
+            select: Select::Force(Method::Tdc),
+            ..Default::default()
+        });
+        let make_plan = |act: Activation| {
+            let l = base.with_act(act);
+            Arc::new(ModelPlan {
+                model: "act-test".into(),
+                input_shape: (2, 4, 4),
+                output_shape: (2, 8, 8),
+                layers: vec![planner.compile_layer(&l, wts.clone())],
+            })
+        };
+        let linear = Engine::with_workers(make_plan(Activation::Linear), 2).run(&x);
+        for act in [Activation::Relu, Activation::LeakyRelu, Activation::Tanh] {
+            let plan = make_plan(act);
+            let run = Engine::with_workers(plan.clone(), 2).run(&x);
+            let mut want = linear.y.clone();
+            act.apply(&mut want);
+            assert_eq!(run.y.max_abs_diff(&want), 0.0, "{act:?}");
+            let reference = reference_forward(&plan, &x);
+            assert_eq!(run.y.max_abs_diff(&reference), 0.0, "{act:?} vs reference");
+            // activations never change the event accounting
+            assert_eq!(run.events, linear.events, "{act:?}");
+        }
+        // the relu plan actually clamps something (generic weights produce
+        // both signs) and tanh bounds the output
+        let relu = Engine::with_workers(make_plan(Activation::Relu), 1).run(&x);
+        assert!(relu.y.data.iter().all(|v| *v >= 0.0));
+        let tanh = Engine::with_workers(make_plan(Activation::Tanh), 1).run(&x);
+        assert!(tanh.y.data.iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn f32_engine_runs_the_same_plan_structure() {
+        // the f32 tier executes the lowered plan with identical events and
+        // agrees with the f64 tier to single-precision rounding
+        let mut rng = Rng::new(909);
+        let g = zoo::dcgan(Scale::Tiny);
+        let plan64 = Arc::new(Planner::default().compile_seeded(&g, 7));
+        let plan32 = Arc::new(plan64.lower::<f32>());
+        let x64 = rand3(&mut rng, plan64.input_shape.0, plan64.input_shape.1, plan64.input_shape.2);
+        let x32: Tensor3<f32> = x64.cast_to();
+        let r64 = Engine::with_workers(plan64.clone(), 2).run(&x64);
+        let e32 = Engine::with_workers(plan32.clone(), 2);
+        assert_eq!(e32.precision(), Precision::F32);
+        assert_eq!(e32.plan().precision(), Precision::F32);
+        let r32 = e32.run(&x32);
+        assert_eq!(r32.events, r64.events, "event accounting is precision-independent");
+        let scale = r64.y.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        let rel = r32.y.cast_to::<f64>().max_abs_diff(&r64.y) / scale;
+        assert!(rel < 1e-3, "f32 tier must track the f64 reference (rel {rel})");
+    }
+
+    #[test]
+    fn any_engine_routes_by_precision() {
+        let mut rng = Rng::new(910);
+        let g = zoo::dcgan(Scale::Tiny);
+        let plan = Arc::new(Planner::default().compile_seeded(&g, 7));
+        let pool = WorkerPool::shared(2);
+        let a32 = AnyEngine::build(plan.clone(), Precision::F32, pool.clone());
+        let a64 = AnyEngine::build(plan.clone(), Precision::F64, pool.clone());
+        assert_eq!(a32.precision(), Precision::F32);
+        assert_eq!(a64.precision(), Precision::F64);
+        assert_eq!(a32.input_len(), plan.input_len());
+        assert_eq!(a64.output_len(), plan.output_len());
+        assert!(Arc::ptr_eq(a32.pool(), a64.pool()));
+        let input = rng.normal_vec_f32(2 * plan.input_len());
+        let (y32, ev32) = a32.run_packed(2, &input);
+        let (y64, ev64) = a64.run_packed(2, &input);
+        assert_eq!(y32.len(), 2 * plan.output_len());
+        assert_eq!(y64.len(), y32.len());
+        assert_eq!(ev32, ev64, "events are precision-independent");
+        let diff = crate::util::bin::max_abs_diff(&y32, &y64);
+        assert!(diff < 1e-3, "tiers agree to f32 rounding: {diff}");
+        // determinism per tier
+        let (y32b, _) = a32.run_packed(2, &input);
+        assert_eq!(y32, y32b);
     }
 }

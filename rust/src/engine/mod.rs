@@ -10,33 +10,47 @@
 //!   into per-layer [`LayerPlan`]s — TDC phase decomposition, Winograd
 //!   `G g Gᵀ` filter transforms with vector-level sparsity reordering,
 //!   per-layer method selection raced through the `dse` cycle model, and
-//!   fixed line-buffer geometry.
-//! * **Execute many** ([`exec`]): an [`Engine`] chains the whole generator
-//!   with activation hand-off between layers, two-level (sample × stripe)
-//!   scheduling on a persistent [`WorkerPool`] ([`pool`]), and per-layer
-//!   [`Events`] aggregation that matches the seed's line-buffered
-//!   functional simulator exactly. Wide batches dispatch one pool task per
-//!   sample ([`BatchSchedule::SampleLevel`]); single requests and narrow
-//!   batches split every layer across output stripes
-//!   ([`BatchSchedule::StripeLevel`]). The Winograd datapath executes each
-//!   stripe as one **tile-batched Winograd-domain GEMM**
+//!   fixed line-buffer geometry. Compilation always runs at `f64`; the
+//!   compiled plan is then **lowered to a precision tier**
+//!   ([`ModelPlan::lower`], [`Precision`]) — the tier is picked per plan
+//!   by the `dse` bandwidth analysis
+//!   ([`crate::dse::recommend_precision`]) and overridable end to end
+//!   ([`NativeConfig::precision`], `wingan serve --precision`,
+//!   the [`plan::PRECISION_ENV`] environment variable).
+//! * **Execute many** ([`exec`]): an [`Engine`]`<E>` — generic over the
+//!   plan's element precision — chains the whole generator with
+//!   activation hand-off between layers (`gan::zoo::Activation`:
+//!   ReLU/leaky-ReLU hidden layers, `tanh` outputs), two-level
+//!   (sample × stripe) scheduling on a persistent [`WorkerPool`]
+//!   ([`pool`]), and per-layer [`Events`] aggregation that matches the
+//!   seed's line-buffered functional simulator exactly. Wide batches
+//!   dispatch one pool task per sample ([`BatchSchedule::SampleLevel`]);
+//!   single requests and narrow batches split every layer across output
+//!   stripes ([`BatchSchedule::StripeLevel`]). The Winograd datapath
+//!   executes each stripe as one **register/cache-blocked tile-batched
+//!   Winograd-domain GEMM**
 //!   ([`crate::winograd::layout::engine_multiply_batch`]) over blocking
 //!   geometry precompiled on the plan ([`plan::TileGeometry`]), with every
 //!   intermediate buffer drawn from reusable per-worker **scratch arenas**
 //!   ([`scratch`], [`pool::ScratchStash`]) — zero per-tile heap
 //!   allocations, filter data streamed once per stripe instead of once per
-//!   tile, bit-identical outputs.
+//!   tile.
 //! * **Serve** ([`serve`]): a [`NativeRuntime`] exposing compiled engines
 //!   behind the coordinator's artifact-manifest contract, so generation
 //!   requests batch and execute through precompiled plans — every route's
 //!   engine drawing from **one shared worker pool** sized once at startup
 //!   ([`pool::resolve_workers`]), never spawning threads on the request
-//!   path.
+//!   path. Fast routes hold an [`AnyEngine`] at the resolved precision
+//!   (the **f32 serving fast path** keeps request buffers in single
+//!   precision end to end); the `"tdc"` reference routes always serve
+//!   `f64`.
 //!
 //! Numerics contract: plans forced to the TDC method are **bit-identical
 //! (f64)** to [`reference_forward`], the layer-by-layer composition of the
 //! `tdc` standard-DeConv reference; Winograd-method plans agree with it to
-//! rounding (≈1e-12 relative) and are bitwise-stable across worker counts.
+//! rounding (≈1e-12 relative) — and **f32 plans agree with the f64
+//! reference to single-precision rounding** while staying bitwise-stable
+//! across worker counts and schedules, exactly like `f64` plans.
 //!
 //! [`Events`]: crate::accel::functional::Events
 
@@ -46,8 +60,12 @@ pub mod pool;
 pub mod scratch;
 pub mod serve;
 
-pub use exec::{BatchSchedule, Engine, EngineRun};
-pub use plan::{LayerPlan, ModelPlan, PlanOptions, Planner, Select, TileGeometry};
+pub use crate::util::elem::{Elem, Precision};
+pub use exec::{AnyEngine, BatchSchedule, Engine, EngineRun};
+pub use plan::{
+    resolve_precision, LayerPlan, ModelPlan, PlanOptions, Planner, PrecisionSelect, Select,
+    TileGeometry, PRECISION_ENV,
+};
 pub use pool::{resolve_workers, ScratchStash, WorkerPool};
 pub use scratch::Scratch;
 pub use serve::{model_id, native_manifest, NativeConfig, NativeRuntime};
@@ -57,9 +75,12 @@ use crate::tdc;
 use crate::util::tensor::Tensor3;
 
 /// The layer-composed standard-DeConv reference: every deconv layer through
-/// `tdc::tdc_deconv`, every conv layer through `tdc::conv2d`, chained in
-/// plan order. This is the ground truth the engine is pinned against.
-pub fn reference_forward(plan: &ModelPlan, x: &Tensor3) -> Tensor3 {
+/// `tdc::tdc_deconv`, every conv layer through `tdc::conv2d`, each followed
+/// by the layer's hand-off activation, chained in plan order. This is the
+/// ground truth the engine is pinned against, at either precision (the
+/// bit-identity contract is stated at `f64`; the `f32` tier carries a
+/// tolerance contract against the *f64* reference).
+pub fn reference_forward<E: Elem>(plan: &ModelPlan<E>, x: &Tensor3<E>) -> Tensor3<E> {
     let mut cur = x.clone();
     for lp in &plan.layers {
         let l = &lp.layer;
@@ -67,6 +88,7 @@ pub fn reference_forward(plan: &ModelPlan, x: &Tensor3) -> Tensor3 {
             Kind::Deconv => tdc::tdc_deconv(&cur, &lp.weights, l.s, l.p),
             Kind::Conv => tdc::conv2d(&cur, &lp.weights, l.s, l.p),
         };
+        l.act.apply(&mut cur);
     }
     cur
 }

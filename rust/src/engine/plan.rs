@@ -14,12 +14,28 @@
 //!   on the request path,
 //! * the line-buffer geometry (depth, width, word budget) the execution
 //!   engine's event accounting is pinned to.
+//!
+//! # Precision tiers
+//!
+//! Compilation always runs in `f64`: phase decomposition is exact tap
+//! selection, and the Winograd filter transforms are computed at full
+//! precision. A compiled plan is then **lowered** to the serving precision
+//! with [`ModelPlan::lower`] — for the f32 fast path, the reordered filter
+//! slabs, phase filter banks and raw weights are quantized *after* the
+//! exact `G g Gᵀ` transform, never before. Which tier a model serves at is
+//! decided per plan by [`Planner::resolve_precision`]: an explicit
+//! [`PrecisionSelect::Force`] wins, otherwise the `dse` bandwidth analysis
+//! recommends a tier ([`crate::dse::recommend_precision`]). End-to-end
+//! overrides ([`crate::engine::NativeConfig::precision`],
+//! `wingan serve --precision`, the [`PRECISION_ENV`] environment variable)
+//! all funnel through [`resolve_precision`].
 
 use crate::accel::config::AccelConfig;
 use crate::accel::cycle::simulate_layer;
 use crate::gan::workload::Method;
 use crate::gan::zoo::{Gan, Kind, Layer};
 use crate::tdc::{self, PhaseFilter};
+use crate::util::elem::{Elem, Precision};
 use crate::util::prng::Rng;
 use crate::util::tensor::Filter4;
 use crate::winograd::layout::{reorder_filter, ReorderedFilter};
@@ -37,18 +53,67 @@ pub enum Select {
     Force(Method),
 }
 
+/// Compile-time precision selection policy (the precision analogue of
+/// [`Select`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecisionSelect {
+    /// Per-plan recommendation from the `dse` bandwidth analysis
+    /// ([`crate::dse::recommend_precision`]): f32 when the modelled
+    /// datapath is transfer-bound at the f64 word size, f64 otherwise.
+    Auto,
+    /// Force one tier for every plan this planner lowers.
+    Force(Precision),
+}
+
+/// Environment variable consulted by [`resolve_precision`] when no
+/// explicit precision is requested (the precision analogue of
+/// `WINGAN_WORKERS`).
+pub const PRECISION_ENV: &str = "WINGAN_PRECISION";
+
+/// The single source of truth for serving-precision resolution:
+///
+/// 1. `requested`, when set (an explicit CLI `--precision` flag or
+///    [`crate::engine::NativeConfig::precision`] field);
+/// 2. the [`PRECISION_ENV`] environment variable, when it parses as a
+///    precision name;
+/// 3. [`PrecisionSelect::Auto`] — each plan asks the `dse` model.
+pub fn resolve_precision(requested: Option<Precision>) -> PrecisionSelect {
+    resolve_precision_with(requested, std::env::var(PRECISION_ENV).ok())
+}
+
+/// [`resolve_precision`] with the environment injected, so the precedence
+/// rules are testable without mutating process-global state.
+fn resolve_precision_with(requested: Option<Precision>, env: Option<String>) -> PrecisionSelect {
+    if let Some(p) = requested {
+        return PrecisionSelect::Force(p);
+    }
+    if let Some(v) = env {
+        if let Ok(p) = Precision::parse(&v) {
+            return PrecisionSelect::Force(p);
+        }
+    }
+    PrecisionSelect::Auto
+}
+
 /// Plan-compile options.
 #[derive(Clone, Copy, Debug)]
 pub struct PlanOptions {
     /// method-selection policy (auto DSE race, or forced)
     pub select: Select,
-    /// accelerator config the method race + line-buffer geometry use
+    /// precision-selection policy (auto DSE recommendation, or forced)
+    pub precision: PrecisionSelect,
+    /// accelerator config the method race + precision recommendation +
+    /// line-buffer geometry use
     pub cfg: AccelConfig,
 }
 
 impl Default for PlanOptions {
     fn default() -> Self {
-        PlanOptions { select: Select::Auto, cfg: AccelConfig::default() }
+        PlanOptions {
+            select: Select::Auto,
+            precision: PrecisionSelect::Auto,
+            cfg: AccelConfig::default(),
+        }
     }
 }
 
@@ -74,22 +139,24 @@ pub struct TileGeometry {
     pub tiles_w: usize,
 }
 
-/// One layer's precompiled execution plan.
+/// One layer's precompiled execution plan, at element precision `E`
+/// (defaults to the f64 reference tier; f32 plans come from
+/// [`LayerPlan::cast_to`] via [`ModelPlan::lower`]).
 #[derive(Clone, Debug)]
-pub struct LayerPlan {
-    /// the zoo layer this plan executes
+pub struct LayerPlan<E: Elem = f64> {
+    /// the zoo layer this plan executes (including its hand-off activation)
     pub layer: Layer,
     /// compile-time method decision (Conv layers always run the spatial
     /// conv datapath and record `Method::Tdc`)
     pub method: Method,
     /// raw weights: conv-transpose layout `[C_in, C_out, K, K]` for deconv,
     /// correlation layout for conv
-    pub weights: Filter4,
+    pub weights: Filter4<E>,
     /// TDC phase decomposition, done once (deconv only; empty for conv)
-    pub phases: Vec<PhaseFilter>,
+    pub phases: Vec<PhaseFilter<E>>,
     /// Winograd-domain filters, transformed + sparsity-reordered once
     /// (only populated when `method == Winograd`)
-    pub reordered: Vec<ReorderedFilter>,
+    pub reordered: Vec<ReorderedFilter<E>>,
     /// TDC-converted kernel width
     pub kc: usize,
     /// Winograd stripe/tile blocking geometry (zeroed for conv layers and
@@ -101,35 +168,53 @@ pub struct LayerPlan {
     pub linebuf_words: usize,
 }
 
-impl LayerPlan {
+impl<E: Elem> LayerPlan<E> {
     /// Winograd-domain multiplications per (tile, c_in, c_out) — the live
     /// position count summed over phases (C(K_C) of eq. 5).
     pub fn live_positions(&self) -> usize {
         self.reordered.iter().map(|r| r.live.len()).sum()
     }
+
+    /// The same compiled layer at another precision: weights, phase filter
+    /// banks and reordered Winograd slabs converted elementwise, every
+    /// precision-free field (geometry, method, sparsity structure) copied.
+    pub fn cast_to<T: Elem>(&self) -> LayerPlan<T> {
+        LayerPlan {
+            layer: self.layer,
+            method: self.method,
+            weights: self.weights.cast_to(),
+            phases: self.phases.iter().map(|p| p.cast_to()).collect(),
+            reordered: self.reordered.iter().map(|r| r.cast_to()).collect(),
+            kc: self.kc,
+            tiles: self.tiles,
+            linebuf_depth: self.linebuf_depth,
+            linebuf_words: self.linebuf_words,
+        }
+    }
 }
 
 /// A whole generator, compiled: everything [`crate::engine::Engine`] needs
-/// to execute requests with zero per-request derivation.
+/// to execute requests with zero per-request derivation. Generic over the
+/// element precision (`f64` reference tier by default).
 #[derive(Clone, Debug)]
-pub struct ModelPlan {
+pub struct ModelPlan<E: Elem = f64> {
     /// zoo model name (e.g. `"DCGAN"`)
     pub model: String,
     /// per-layer plans, in execution order
-    pub layers: Vec<LayerPlan>,
+    pub layers: Vec<LayerPlan<E>>,
     /// `[C, H, W]` of the model input (first layer's input geometry)
     pub input_shape: (usize, usize, usize),
     /// `[C, H, W]` of the model output
     pub output_shape: (usize, usize, usize),
 }
 
-impl ModelPlan {
-    /// Flat f64 element count of one input sample.
+impl<E: Elem> ModelPlan<E> {
+    /// Flat element count of one input sample.
     pub fn input_len(&self) -> usize {
         self.input_shape.0 * self.input_shape.1 * self.input_shape.2
     }
 
-    /// Flat f64 element count of one output sample.
+    /// Flat element count of one output sample.
     pub fn output_len(&self) -> usize {
         self.output_shape.0 * self.output_shape.1 * self.output_shape.2
     }
@@ -137,6 +222,24 @@ impl ModelPlan {
     /// Layers that will run the Winograd fast path.
     pub fn n_winograd_layers(&self) -> usize {
         self.layers.iter().filter(|l| l.method == Method::Winograd).count()
+    }
+
+    /// The precision tier this plan executes at.
+    pub fn precision(&self) -> Precision {
+        E::PRECISION
+    }
+
+    /// Lower the whole plan to another precision tier. Method decisions,
+    /// tile geometry and sparsity structure are precision-free and carry
+    /// over unchanged; only the numeric banks are converted (for
+    /// `f64 → f32`, quantized after the exact f64 transforms).
+    pub fn lower<T: Elem>(&self) -> ModelPlan<T> {
+        ModelPlan {
+            model: self.model.clone(),
+            layers: self.layers.iter().map(|l| l.cast_to()).collect(),
+            input_shape: self.input_shape,
+            output_shape: self.output_shape,
+        }
     }
 }
 
@@ -177,6 +280,17 @@ impl Planner {
                     Method::Tdc
                 }
             }
+        }
+    }
+
+    /// The precision tier this planner lowers `g`'s plan at: an explicit
+    /// [`PrecisionSelect::Force`] wins, otherwise the `dse` bandwidth
+    /// analysis recommends one per model
+    /// ([`crate::dse::recommend_precision`]).
+    pub fn resolve_precision(&self, g: &Gan) -> Precision {
+        match self.opts.precision {
+            PrecisionSelect::Force(p) => p,
+            PrecisionSelect::Auto => crate::dse::recommend_precision(g, &self.opts.cfg),
         }
     }
 
@@ -242,7 +356,8 @@ impl Planner {
         }
     }
 
-    /// Compile a whole generator with explicit per-layer weights.
+    /// Compile a whole generator with explicit per-layer weights (always at
+    /// the f64 reference tier; see [`ModelPlan::lower`] for the f32 tier).
     pub fn compile(&self, g: &Gan, weights: Vec<Filter4>) -> ModelPlan {
         assert_eq!(weights.len(), g.layers.len(), "one filter bank per layer");
         let layers: Vec<LayerPlan> = g
@@ -373,5 +488,74 @@ mod tests {
         assert_ne!(a[1].data.len(), 0);
         // different models draw from different streams even at equal seed
         assert_ne!(a[0].data[..4], c[0].data[..4]);
+    }
+
+    #[test]
+    fn lower_quantizes_after_the_exact_transform() {
+        let plan = Planner::default().compile_seeded(&zoo::dcgan(Scale::Tiny), 7);
+        assert_eq!(plan.precision(), Precision::F64);
+        let plan32: ModelPlan<f32> = plan.lower();
+        assert_eq!(plan32.precision(), Precision::F32);
+        assert_eq!(plan32.model, plan.model);
+        assert_eq!(plan32.input_shape, plan.input_shape);
+        assert_eq!(plan32.layers.len(), plan.layers.len());
+        for (l32, l64) in plan32.layers.iter().zip(&plan.layers) {
+            assert_eq!(l32.method, l64.method);
+            assert_eq!(l32.tiles, l64.tiles);
+            assert_eq!(l32.layer.act, l64.layer.act);
+            assert_eq!(l32.reordered.len(), l64.reordered.len());
+            for (r32, r64) in l32.reordered.iter().zip(&l64.reordered) {
+                assert_eq!(r32.live, r64.live);
+                // each slab entry is the f64 transform result rounded once
+                for (a, b) in r32.u.iter().zip(&r64.u) {
+                    assert_eq!(*a, *b as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn precision_resolution_precedence() {
+        // injected env keeps this test free of process-global mutation
+        assert_eq!(
+            resolve_precision_with(Some(Precision::F32), Some("f64".into())),
+            PrecisionSelect::Force(Precision::F32),
+            "explicit request wins"
+        );
+        assert_eq!(
+            resolve_precision_with(None, Some("f32".into())),
+            PrecisionSelect::Force(Precision::F32),
+            "env fills in"
+        );
+        assert_eq!(
+            resolve_precision_with(None, Some(" F64 ".into())),
+            PrecisionSelect::Force(Precision::F64),
+            "env is trimmed + case-insensitive"
+        );
+        assert_eq!(
+            resolve_precision_with(None, Some("garbage".into())),
+            PrecisionSelect::Auto,
+            "unparseable env -> auto"
+        );
+        assert_eq!(resolve_precision_with(None, None), PrecisionSelect::Auto);
+    }
+
+    #[test]
+    fn planner_resolves_precision_per_policy() {
+        let g = zoo::dcgan(Scale::Paper);
+        let forced = Planner::new(PlanOptions {
+            precision: PrecisionSelect::Force(Precision::F64),
+            ..Default::default()
+        });
+        assert_eq!(forced.resolve_precision(&g), Precision::F64);
+        let forced32 = Planner::new(PlanOptions {
+            precision: PrecisionSelect::Force(Precision::F32),
+            ..Default::default()
+        });
+        assert_eq!(forced32.resolve_precision(&g), Precision::F32);
+        // Auto delegates to the dse recommendation (whatever it says for
+        // this model, it must be deterministic)
+        let auto = Planner::default();
+        assert_eq!(auto.resolve_precision(&g), auto.resolve_precision(&g));
     }
 }

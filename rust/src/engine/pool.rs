@@ -211,6 +211,9 @@ impl WorkerPool {
             // borrow after this frame dies. The caller-side panic path
             // below drains the channel before re-raising for the same
             // reason.
+            // (annotated via the two `let` bindings above/below; the
+            // turbofish form cannot name the anonymous closure lifetime)
+            #[allow(clippy::missing_transmute_annotations)]
             let job: Job = unsafe { std::mem::transmute(job) };
             queue.send(job).expect("worker pool queue closed");
         }

@@ -10,6 +10,11 @@
 //! so the steady-state hot loop performs **zero per-tile heap
 //! allocations**, across tiles, phases and layers alike.
 //!
+//! Scratches are generic over the plan's element precision: an `f32`
+//! engine's arenas hold `f32` words (half the bytes of the reference
+//! tier), and each engine's stash only ever carries scratches of its own
+//! precision.
+//!
 //! Scratch reuse is invisible to the numerics: every buffer is either
 //! fully rewritten before it is read (`v`), zeroed by the kernel that
 //! fills it (`m` in [`engine_multiply_batch`]), or zero-filled on resize
@@ -19,10 +24,12 @@
 //! [`Tensor3::pad_into`]: crate::util::tensor::Tensor3::pad_into
 //! [`ScratchStash`]: crate::engine::pool::ScratchStash
 
+use crate::util::elem::Elem;
 use crate::util::tensor::Tensor3;
 use crate::winograd::transforms::N;
 
-/// Reusable per-task buffers for the engine's three datapaths.
+/// Reusable per-task buffers for the engine's three datapaths, at element
+/// precision `E`.
 ///
 /// One `Scratch` is checked out of the engine's [`ScratchStash`] per pool
 /// task and per run; its buffers only ever grow, so after the first few
@@ -31,30 +38,30 @@ use crate::winograd::transforms::N;
 /// written).
 ///
 /// [`ScratchStash`]: crate::engine::pool::ScratchStash
-pub struct Scratch {
+pub struct Scratch<E: Elem = f64> {
     /// Padded input view: the phase-padded map on the deconv datapaths, the
     /// border-padded input on the conv datapath. Owned by the dispatching
     /// side of a run and reused across every phase and layer.
-    pub xp: Tensor3,
+    pub xp: Tensor3<E>,
     /// Gathered Winograd-domain tile matrix for one stripe, position-major
     /// `[pos][c_in][tiles_w]` over all 16 positions — the left operand
     /// gather feeding [`engine_multiply_batch`].
     ///
     /// [`engine_multiply_batch`]: crate::winograd::layout::engine_multiply_batch
-    pub v: Vec<f64>,
+    pub v: Vec<E>,
     /// Winograd-domain accumulators for one stripe, `[c_out][pos][tiles_w]`
     /// (zeroed by the batched kernel; skipped positions stay zero for the
     /// inverse transform).
-    pub m: Vec<f64>,
+    pub m: Vec<E>,
 }
 
-impl Default for Scratch {
+impl<E: Elem> Default for Scratch<E> {
     fn default() -> Self {
         Scratch { xp: Tensor3::zeros(0, 0, 0), v: Vec::new(), m: Vec::new() }
     }
 }
 
-impl std::fmt::Debug for Scratch {
+impl<E: Elem> std::fmt::Debug for Scratch<E> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Scratch")
             .field("xp_words", &self.xp.numel())
@@ -64,7 +71,7 @@ impl std::fmt::Debug for Scratch {
     }
 }
 
-impl Scratch {
+impl<E: Elem> Scratch<E> {
     /// Size `v` and `m` for one Winograd stripe of `tiles` tiles at
     /// `c_in`/`c_out` channels. Shrinks/grows the *length* to the exact
     /// stripe geometry (the batched kernel asserts it) while the underlying
@@ -72,8 +79,8 @@ impl Scratch {
     /// not cleared: `v` is fully rewritten by the gather and `m` is zeroed
     /// by the kernel.
     pub fn ensure_winograd(&mut self, c_in: usize, c_out: usize, tiles: usize) {
-        self.v.resize(N * N * c_in * tiles, 0.0);
-        self.m.resize(c_out * N * N * tiles, 0.0);
+        self.v.resize(N * N * c_in * tiles, E::ZERO);
+        self.m.resize(c_out * N * N * tiles, E::ZERO);
     }
 }
 
@@ -83,7 +90,7 @@ mod tests {
 
     #[test]
     fn ensure_winograd_sizes_exactly_and_keeps_capacity() {
-        let mut s = Scratch::default();
+        let mut s: Scratch = Scratch::default();
         s.ensure_winograd(8, 4, 6);
         assert_eq!(s.v.len(), N * N * 8 * 6);
         assert_eq!(s.m.len(), 4 * N * N * 6);
@@ -93,5 +100,13 @@ mod tests {
         assert_eq!(s.v.len(), N * N * 2 * 3);
         assert_eq!(s.m.len(), N * N * 3);
         assert!(s.v.capacity() >= cap_v);
+    }
+
+    #[test]
+    fn f32_scratch_same_geometry_half_the_bytes() {
+        let mut s: Scratch<f32> = Scratch::default();
+        s.ensure_winograd(8, 4, 6);
+        assert_eq!(s.v.len(), N * N * 8 * 6);
+        assert_eq!(std::mem::size_of_val(&s.v[..]) * 2, N * N * 8 * 6 * 8);
     }
 }

@@ -1,5 +1,5 @@
-//! Native serving backend: compiled [`Engine`]s behind the coordinator's
-//! artifact-manifest contract.
+//! Native serving backend: compiled [`AnyEngine`]s behind the
+//! coordinator's artifact-manifest contract.
 //!
 //! The PJRT runtime is gated off in this build (see `runtime::client`), so
 //! the serving path executes generation requests on the pure-rust engine:
@@ -9,22 +9,30 @@
 //! repacks f32 outputs. Route methods:
 //!
 //! * `"winograd"` — plans compiled with [`Select::Auto`] (the fast
-//!   algorithm wherever the DSE race picks it);
-//! * `"tdc"` — plans forced to the TDC datapath: arithmetic bit-identical
-//!   to the layer-composed standard-DeConv reference, the A/B anchor.
+//!   algorithm wherever the DSE race picks it), served at the **resolved
+//!   precision tier**: [`NativeConfig::precision`] wins, then the
+//!   `WINGAN_PRECISION` environment variable, then the per-model `dse`
+//!   recommendation ([`crate::dse::recommend_precision`]). At
+//!   [`Precision::F32`] the route is the end-to-end single-precision fast
+//!   path — request buffers are never widened to f64.
+//! * `"tdc"` — plans forced to the TDC datapath, always served at
+//!   [`Precision::F64`]: arithmetic bit-identical to the layer-composed
+//!   standard-DeConv reference. This is the A/B anchor — a stable
+//!   full-precision reference tier to diff any fast route (including an
+//!   f32 one) against.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{btree_map, BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::accel::functional::Events;
-use crate::engine::exec::Engine;
-use crate::engine::plan::{PlanOptions, Planner, Select};
+use crate::engine::exec::AnyEngine;
+use crate::engine::plan::{resolve_precision, PlanOptions, Planner, Select};
 use crate::engine::pool::{resolve_workers, WorkerPool};
 use crate::gan::workload::Method;
 use crate::gan::zoo::{self, Scale};
 use crate::runtime::{ArtifactEntry, Manifest};
-use crate::util::tensor::Tensor3;
+use crate::util::elem::Precision;
 
 /// Configuration for the native serving backend.
 #[derive(Clone, Debug)]
@@ -40,6 +48,12 @@ pub struct NativeConfig {
     pub seed: u64,
     /// restrict to these lowercase model ids (None = all four zoo models)
     pub models: Option<Vec<String>>,
+    /// serving precision for the fast ("winograd") routes: `Some(p)`
+    /// forces a tier, `None` resolves via the `WINGAN_PRECISION`
+    /// environment variable and then the per-model `dse` recommendation
+    /// ([`crate::engine::plan::resolve_precision`]). The `"tdc"` reference
+    /// routes always serve f64 regardless.
+    pub precision: Option<Precision>,
 }
 
 impl Default for NativeConfig {
@@ -50,6 +64,7 @@ impl Default for NativeConfig {
             workers: 0,
             seed: 42,
             models: None,
+            precision: None,
         }
     }
 }
@@ -105,12 +120,12 @@ pub fn native_manifest(cfg: &NativeConfig) -> Manifest {
     }
 }
 
-/// The native execution backend: one compiled [`Engine`] per
+/// The native execution backend: one compiled [`AnyEngine`] per
 /// `(model, method)` route plus the manifest entries for shape checking.
 /// All engines dispatch to **one persistent [`WorkerPool`]**, spawned once
 /// in [`NativeRuntime::build`] — the request path never creates threads.
 pub struct NativeRuntime {
-    engines: BTreeMap<(String, String), Engine>,
+    engines: BTreeMap<(String, String), AnyEngine>,
     entries: HashMap<String, ArtifactEntry>,
     /// the one pool every route's engine executes on
     pool: Arc<WorkerPool>,
@@ -120,35 +135,50 @@ pub struct NativeRuntime {
 }
 
 impl NativeRuntime {
-    /// Compile every advertised route's plan and spawn the shared worker
-    /// pool. This is the expensive, once-per-startup step (the coordinator
-    /// runs it on the engine thread before reporting ready, like PJRT
-    /// artifact compilation). The engine set is derived from the manifest
-    /// itself, so routes and engines can never desynchronize.
+    /// Compile every advertised route's plan — once, in f64 — lower each
+    /// fast route to its resolved precision tier, and spawn the shared
+    /// worker pool. This is the expensive, once-per-startup step (the
+    /// coordinator runs it on the engine thread before reporting ready,
+    /// like PJRT artifact compilation). The engine set is derived from the
+    /// manifest itself, so routes and engines can never desynchronize.
     pub fn build(cfg: &NativeConfig) -> NativeRuntime {
         let manifest = native_manifest(cfg);
         let pool = WorkerPool::shared(resolve_workers(cfg.workers));
         let zoo_models = zoo::all(cfg.scale);
-        let mut engines: BTreeMap<(String, String), Engine> = BTreeMap::new();
+        // explicit config > WINGAN_PRECISION env > per-model dse Auto
+        let precision_policy = resolve_precision(cfg.precision);
+        let mut engines: BTreeMap<(String, String), AnyEngine> = BTreeMap::new();
         for e in &manifest.entries {
             let key = (e.model.clone(), e.method.clone());
-            if engines.contains_key(&key) {
-                continue; // one engine serves every batch bucket of a route
+            // one engine serves every batch bucket of a route
+            if let btree_map::Entry::Vacant(slot) = engines.entry(key) {
+                let g = zoo_models
+                    .iter()
+                    .find(|g| model_id(g.name) == e.model)
+                    .expect("manifest route without a zoo model");
+                let select = METHODS
+                    .iter()
+                    .find(|(m, _)| *m == e.method)
+                    .expect("manifest route with unknown method")
+                    .1;
+                let planner = Planner::new(PlanOptions {
+                    select,
+                    precision: precision_policy,
+                    ..Default::default()
+                });
+                // the tdc route is the bit-exact f64 reference anchor; fast
+                // routes serve at the planner-resolved tier
+                let precision = if e.method == "tdc" {
+                    Precision::F64
+                } else {
+                    planner.resolve_precision(g)
+                };
+                // one Arc'd compiled f64 plan per route: every engine clone
+                // (and any future co-resident engine) shares it; the f32
+                // tier lowers it exactly once, at build time
+                let plan = Arc::new(planner.compile_seeded(g, cfg.seed));
+                slot.insert(AnyEngine::build(plan, precision, pool.clone()));
             }
-            let g = zoo_models
-                .iter()
-                .find(|g| model_id(g.name) == e.model)
-                .expect("manifest route without a zoo model");
-            let select = METHODS
-                .iter()
-                .find(|(m, _)| *m == e.method)
-                .expect("manifest route with unknown method")
-                .1;
-            let planner = Planner::new(PlanOptions { select, ..Default::default() });
-            // one Arc'd compiled plan per route: every engine clone (and any
-            // future co-resident engine) shares it instead of deep-cloning
-            let plan = Arc::new(planner.compile_seeded(g, cfg.seed));
-            engines.insert(key, Engine::with_pool(plan, pool.clone()));
         }
         let entries = manifest.entries.iter().map(|e| (e.name.clone(), e.clone())).collect();
         NativeRuntime { engines, entries, pool, events: Arc::new(Mutex::new(Events::default())) }
@@ -169,15 +199,19 @@ impl NativeRuntime {
         self.events.lock().unwrap().clone()
     }
 
-    pub fn engine(&self, model: &str, method: &str) -> Option<&Engine> {
+    /// The route engine for `(model, method)`, at whatever precision tier
+    /// the route resolved to.
+    pub fn engine(&self, model: &str, method: &str) -> Option<&AnyEngine> {
         self.engines.get(&(model.to_string(), method.to_string()))
     }
 
     /// Execute one packed batch buffer against a named route artifact.
     /// Mirrors the PJRT executable contract: fixed batch shape, padded
     /// slots are computed like real samples. The batch goes through
-    /// [`Engine::run_batch`], so wide buckets parallelise across samples
-    /// and narrow ones across stripes — bitwise identical either way.
+    /// [`crate::engine::Engine::run_batch`], so wide buckets parallelise
+    /// across samples and narrow ones across stripes — bitwise identical
+    /// either way. On an f32 route the buffer stays in single precision
+    /// end to end.
     pub fn execute(&self, name: &str, input: &[f32]) -> Result<Vec<f32>, String> {
         let entry = self.entries.get(name).ok_or_else(|| format!("unknown artifact {name}"))?;
         if input.len() != entry.input_len() {
@@ -191,22 +225,7 @@ impl NativeRuntime {
             .engines
             .get(&(entry.model.clone(), entry.method.clone()))
             .ok_or_else(|| format!("no engine for route {}/{}", entry.model, entry.method))?;
-        let (c, h, w) = engine.plan().input_shape;
-        let sample_in = c * h * w;
-        let sample_out = engine.plan().output_len();
-        let xs: Vec<Tensor3> = (0..entry.batch)
-            .map(|b| {
-                let chunk = &input[b * sample_in..(b + 1) * sample_in];
-                Tensor3::from_vec(c, h, w, chunk.iter().map(|&v| v as f64).collect())
-            })
-            .collect();
-        let runs = engine.run_batch(&xs);
-        let mut out = Vec::with_capacity(entry.batch * sample_out);
-        let mut batch_events = Events::default();
-        for run in &runs {
-            batch_events.merge(&run.events);
-            out.extend(run.y.data.iter().map(|&v| v as f32));
-        }
+        let (out, batch_events) = engine.run_packed(entry.batch, input);
         self.events.lock().unwrap().merge(&batch_events);
         Ok(out)
     }
@@ -215,6 +234,7 @@ impl NativeRuntime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::plan::PRECISION_ENV;
 
     fn tiny_cfg() -> NativeConfig {
         NativeConfig {
@@ -281,6 +301,60 @@ mod tests {
         let a = rt.execute("dcgan_winograd_b1", &x).unwrap();
         let b = rt.execute("dcgan_tdc_b1", &x).unwrap();
         let diff = crate::util::bin::max_abs_diff(&a, &b);
-        assert!(diff < 1e-4, "methods diverge: {diff}");
+        // the fast route may serve the f32 tier (Auto policy), so the A/B
+        // tolerance is single-precision-accumulation sized, not 1e-4
+        assert!(diff < 1e-3, "methods diverge: {diff}");
+    }
+
+    #[test]
+    fn tdc_route_is_always_the_f64_reference_tier() {
+        // even when the fast routes are forced to f32, the tdc anchor
+        // stays full-precision
+        let rt = NativeRuntime::build(&NativeConfig {
+            precision: Some(Precision::F32),
+            ..tiny_cfg()
+        });
+        assert_eq!(rt.engine("dcgan", "tdc").unwrap().precision(), Precision::F64);
+        assert_eq!(rt.engine("dcgan", "winograd").unwrap().precision(), Precision::F32);
+    }
+
+    #[test]
+    fn forced_precision_applies_to_fast_routes() {
+        for p in [Precision::F32, Precision::F64] {
+            let rt = NativeRuntime::build(&NativeConfig { precision: Some(p), ..tiny_cfg() });
+            assert_eq!(rt.engine("dcgan", "winograd").unwrap().precision(), p);
+            // and both tiers execute correctly end to end
+            let e1 = rt.entries.get("dcgan_winograd_b1").unwrap().clone();
+            let out = rt.execute(&e1.name, &vec![0.25; e1.input_len()]).unwrap();
+            assert_eq!(out.len(), e1.output_len());
+            assert!(out.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn f32_route_tracks_the_f64_route() {
+        let rt32 = NativeRuntime::build(&NativeConfig {
+            precision: Some(Precision::F32),
+            ..tiny_cfg()
+        });
+        let rt64 = NativeRuntime::build(&NativeConfig {
+            precision: Some(Precision::F64),
+            ..tiny_cfg()
+        });
+        let e = rt32.entries.get("dcgan_winograd_b1").unwrap().clone();
+        let x: Vec<f32> = (0..e.input_len()).map(|i| ((i % 11) as f32 - 5.0) / 5.0).collect();
+        let a = rt32.execute(&e.name, &x).unwrap();
+        let b = rt64.execute(&e.name, &x).unwrap();
+        let diff = crate::util::bin::max_abs_diff(&a, &b);
+        assert!(diff < 1e-3, "f32 tier diverges from f64 tier: {diff}");
+        // identical event accounting across tiers
+        assert_eq!(rt32.events(), rt64.events());
+    }
+
+    #[test]
+    fn env_name_is_stable() {
+        // the documented override variable (exercised end-to-end by ops,
+        // not mutated here: tests share one process environment)
+        assert_eq!(PRECISION_ENV, "WINGAN_PRECISION");
     }
 }

@@ -7,6 +7,8 @@
 //! two via the artifact manifest shapes.
 
 use crate::tdc;
+use crate::util::elem::Elem;
+use crate::util::tensor::Tensor3;
 
 /// Layer kind: the paper evaluates DeConv; Conv layers (DiscoGAN's encoder)
 /// are modelled for completeness and run on the conv datapath.
@@ -16,7 +18,63 @@ pub enum Kind {
     Conv,
 }
 
-/// One generator layer's geometry.
+/// Per-layer activation on the generator hand-off path, mirroring the
+/// python zoo (`python/compile/model.py`'s `act` field): hidden layers run
+/// ReLU (leaky in DiscoGAN's encoder), output layers `tanh`. The execution
+/// engine applies it elementwise after each layer at the plan's precision;
+/// single-layer plans and the analytic workload models use [`Linear`].
+///
+/// [`Linear`]: Activation::Linear
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    /// Identity — the layer hands its raw accumulator output on.
+    Linear,
+    /// `max(v, 0)`.
+    Relu,
+    /// Slope-0.2 leaky ReLU (DiscoGAN's encoder convs).
+    LeakyRelu,
+    /// Hyperbolic tangent (every generator's image-space output layer).
+    Tanh,
+}
+
+impl Activation {
+    /// Apply to one scalar at the element's precision. The same comparison
+    /// and multiply sequence runs at either tier, so activations preserve
+    /// the engine's bitwise worker-count/schedule invariance.
+    #[inline]
+    pub fn apply_scalar<E: Elem>(self, v: E) -> E {
+        match self {
+            Activation::Linear => v,
+            Activation::Relu => {
+                if v < E::ZERO {
+                    E::ZERO
+                } else {
+                    v
+                }
+            }
+            Activation::LeakyRelu => {
+                if v < E::ZERO {
+                    v * E::from_f64(0.2)
+                } else {
+                    v
+                }
+            }
+            Activation::Tanh => v.tanh(),
+        }
+    }
+
+    /// Apply elementwise in place ([`Activation::Linear`] is a no-op).
+    pub fn apply<E: Elem>(self, t: &mut Tensor3<E>) {
+        if self == Activation::Linear {
+            return;
+        }
+        for v in t.data.iter_mut() {
+            *v = self.apply_scalar(*v);
+        }
+    }
+}
+
+/// One generator layer's geometry plus its hand-off activation.
 #[derive(Clone, Copy, Debug)]
 pub struct Layer {
     pub kind: Kind,
@@ -27,6 +85,8 @@ pub struct Layer {
     pub p: usize,
     pub h_in: usize,
     pub w_in: usize,
+    /// activation applied to this layer's output on the hand-off path
+    pub act: Activation,
 }
 
 impl Layer {
@@ -40,11 +100,19 @@ impl Layer {
             p: tdc::default_padding(k, s),
             h_in: h,
             w_in: h,
+            act: Activation::Linear,
         }
     }
 
     pub fn conv(c_in: usize, c_out: usize, k: usize, s: usize, p: usize, h: usize) -> Layer {
-        Layer { kind: Kind::Conv, c_in, c_out, k, s, p, h_in: h, w_in: h }
+        Layer { kind: Kind::Conv, c_in, c_out, k, s, p, h_in: h, w_in: h, act: Activation::Linear }
+    }
+
+    /// Builder-style activation override (zoo constructors use it; layers
+    /// default to [`Activation::Linear`]).
+    pub fn with_act(mut self, act: Activation) -> Layer {
+        self.act = act;
+        self
     }
 
     pub fn h_out(&self) -> usize {
@@ -123,11 +191,15 @@ fn ch(c: usize, scale: Scale) -> usize {
     }
 }
 
-fn deconv_stack(channels: &[usize], k: usize, s: usize, h0: usize) -> Vec<Layer> {
+/// DeConv stack with the zoo's standard activation pattern: hidden layers
+/// ReLU, the stack's last layer `final_act` — exactly the python mirror's
+/// `_deconv_stack(..., name_final_act=...)`.
+fn deconv_stack(channels: &[usize], k: usize, s: usize, h0: usize, final_act: Activation) -> Vec<Layer> {
     let mut layers = Vec::new();
     let mut h = h0;
-    for win in channels.windows(2) {
-        layers.push(Layer::deconv(win[0], win[1], k, s, h));
+    for (i, win) in channels.windows(2).enumerate() {
+        let act = if i + 2 == channels.len() { final_act } else { Activation::Relu };
+        layers.push(Layer::deconv(win[0], win[1], k, s, h).with_act(act));
         h *= s;
     }
     layers
@@ -139,15 +211,16 @@ pub fn dcgan(scale: Scale) -> Gan {
     Gan {
         name: "DCGAN",
         year: 2015,
-        layers: deconv_stack(&[c(1024), c(512), c(256), c(128), 3], 5, 2, 4),
+        layers: deconv_stack(&[c(1024), c(512), c(256), c(128), 3], 5, 2, 4, Activation::Tanh),
     }
 }
 
 /// ArtGAN [5]: 4 DeConv K_D=4 S=2 plus a final DeConv K_D=3 S=1.
 pub fn artgan(scale: Scale) -> Gan {
     let c = |v| ch(v, scale);
-    let mut layers = deconv_stack(&[c(512), c(256), c(128), c(64), c(64)], 4, 2, 4);
-    layers.push(Layer::deconv(c(64), 3, 3, 1, 64));
+    let mut layers =
+        deconv_stack(&[c(512), c(256), c(128), c(64), c(64)], 4, 2, 4, Activation::Relu);
+    layers.push(Layer::deconv(c(64), 3, 3, 1, 64).with_act(Activation::Tanh));
     Gan { name: "ArtGAN", year: 2017, layers }
 }
 
@@ -155,13 +228,13 @@ pub fn artgan(scale: Scale) -> Gan {
 pub fn discogan(scale: Scale) -> Gan {
     let c = |v| ch(v, scale);
     let mut layers = vec![
-        Layer::conv(3, c(64), 4, 2, 1, 64),
-        Layer::conv(c(64), c(128), 4, 2, 1, 32),
-        Layer::conv(c(128), c(256), 4, 2, 1, 16),
-        Layer::conv(c(256), c(512), 4, 2, 1, 8),
-        Layer::conv(c(512), c(512), 3, 1, 1, 4),
+        Layer::conv(3, c(64), 4, 2, 1, 64).with_act(Activation::LeakyRelu),
+        Layer::conv(c(64), c(128), 4, 2, 1, 32).with_act(Activation::LeakyRelu),
+        Layer::conv(c(128), c(256), 4, 2, 1, 16).with_act(Activation::LeakyRelu),
+        Layer::conv(c(256), c(512), 4, 2, 1, 8).with_act(Activation::LeakyRelu),
+        Layer::conv(c(512), c(512), 3, 1, 1, 4).with_act(Activation::LeakyRelu),
     ];
-    layers.extend(deconv_stack(&[c(512), c(256), c(128), c(64), 3], 4, 2, 4));
+    layers.extend(deconv_stack(&[c(512), c(256), c(128), c(64), 3], 4, 2, 4, Activation::Tanh));
     Gan { name: "DiscoGAN", year: 2017, layers }
 }
 
@@ -171,7 +244,7 @@ pub fn gpgan(scale: Scale) -> Gan {
     Gan {
         name: "GP-GAN",
         year: 2019,
-        layers: deconv_stack(&[c(512), c(256), c(128), c(64), 3], 4, 2, 4),
+        layers: deconv_stack(&[c(512), c(256), c(128), c(64), 3], 4, 2, 4, Activation::Tanh),
     }
 }
 
@@ -272,5 +345,40 @@ mod tests {
         let d = dcgan(Scale::Small);
         assert_eq!(d.layers[0].c_in, 128);
         assert_eq!(d.layers[3].c_out, 3);
+    }
+
+    #[test]
+    fn activation_pattern_mirrors_python_zoo() {
+        // python/compile/model.py: hidden deconvs relu, output tanh;
+        // DiscoGAN's encoder lrelu; ArtGAN's 4-stack ends relu before the
+        // tanh K3S1 output layer
+        for g in all(Scale::Paper) {
+            assert_eq!(g.layers.last().unwrap().act, Activation::Tanh, "{}", g.name);
+        }
+        let d = dcgan(Scale::Paper);
+        assert!(d.layers[..3].iter().all(|l| l.act == Activation::Relu));
+        let a = artgan(Scale::Paper);
+        assert!(a.layers[..4].iter().all(|l| l.act == Activation::Relu));
+        let di = discogan(Scale::Paper);
+        assert!(di.layers[..5].iter().all(|l| l.act == Activation::LeakyRelu));
+        assert!(di.layers[5..8].iter().all(|l| l.act == Activation::Relu));
+        // constructors stay Linear (single-layer plans, analytic models)
+        assert_eq!(Layer::deconv(2, 2, 5, 2, 4).act, Activation::Linear);
+    }
+
+    #[test]
+    fn activation_semantics_golden() {
+        // hand-checkable values, both precisions (mirrored by the numpy
+        // test_activation_semantics_match_rust golden)
+        assert_eq!(Activation::Relu.apply_scalar(-1.5f64), 0.0);
+        assert_eq!(Activation::Relu.apply_scalar(2.0f64), 2.0);
+        assert_eq!(Activation::LeakyRelu.apply_scalar(-1.0f64), -0.2);
+        assert_eq!(Activation::LeakyRelu.apply_scalar(3.0f32), 3.0);
+        assert_eq!(Activation::Tanh.apply_scalar(0.0f64), 0.0);
+        assert!((Activation::Tanh.apply_scalar(0.5f64) - 0.5f64.tanh()).abs() == 0.0);
+        assert_eq!(Activation::Linear.apply_scalar(-7.25f32), -7.25);
+        let mut t = Tensor3::from_vec(1, 1, 3, vec![-2.0f64, 0.0, 2.0]);
+        Activation::Relu.apply(&mut t);
+        assert_eq!(t.data, vec![0.0, 0.0, 2.0]);
     }
 }

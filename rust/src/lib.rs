@@ -41,10 +41,24 @@
 //! standard-DeConv reference on the exact datapath, and invariant, bit for
 //! bit, to worker count and batch schedule everywhere.
 //!
+//! The execution datapath is **precision-tiered** ([`util::elem::Elem`],
+//! [`engine::Precision`]): every kernel is generic over the scalar
+//! element, `f64` is the reference tier the contracts are stated at, and
+//! the `f32` tier is the serving fast path (half the memory traffic on the
+//! reordered filter slabs and gathered tile matrices, double the SIMD
+//! width) with a tolerance contract against the f64 reference and the
+//! same bitwise scheduling invariance.
+//!
 //! The algorithmic substrates ([`tdc`], [`winograd`], [`gan`]) mirror the
 //! python oracles; `rust/tests/proptests.rs` pins them to each other and
 //! pins the engine to the composed reference.
 
+// Lint policy: CI gates `cargo clippy --all-targets -- -D warnings` with
+// exactly these two style lints allowed crate-wide — the numeric kernels
+// are written index-style on purpose (i/j/tap loops mirror the paper's
+// matrix algebra), and a few serving signatures spell out nested
+// channel/result types deliberately.
+#![allow(clippy::needless_range_loop, clippy::type_complexity)]
 
 pub mod accel;
 pub mod benchlib;

@@ -31,12 +31,16 @@ USAGE: wingan <subcommand> [flags]
   verify [--artifacts DIR]
   serve  [--artifacts DIR] [--native] [--scale small|tiny] [--model dcgan]
          [--method winograd] [--requests 64] [--rate 200] [--max-wait-ms 20]
-         [--seed 7] [--workers N]
+         [--seed 7] [--workers N] [--precision f32|f64|auto]
 
 serve runs on the native precompiled-plan engine when --native is given or
 when the PJRT artifacts are unavailable (this offline build always is).
 --workers sizes the one persistent worker pool every route's engine shares
 (0/absent = WINGAN_WORKERS env, then one thread per core).
+--precision picks the serving tier for the fast routes: f32 (half the
+memory traffic), f64 (the bit-exact reference tier), or auto/absent
+(WINGAN_PRECISION env, then the per-model dse recommendation). The tdc
+reference route always serves f64.
 ";
 
 fn main() {
@@ -138,11 +142,9 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
         let diff = rt.verify_golden(&e.name)?;
         worst = worst.max(diff);
         println!(
-            "  {:<18} compile {:>7.2?}  exec {:>8.2?}  max|Δ| {:.2e}  {}",
+            "  {:<18} compile {compile:>7.2?}  exec {:>8.2?}  max|Δ| {diff:.2e}  {}",
             e.name,
-            compile,
             t0.elapsed(),
-            diff,
             if diff < 2e-4 { "OK" } else { "FAIL" }
         );
         if diff >= 2e-4 {
@@ -164,6 +166,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let max_wait = args.get_usize("max-wait-ms", 20).map_err(anyhow::Error::msg)?;
     let seed = args.get_usize("seed", 7).map_err(anyhow::Error::msg)? as u64;
     let workers = args.get_workers().map_err(anyhow::Error::msg)?;
+    let precision = args.get_precision().map_err(anyhow::Error::msg)?;
 
     let serve_cfg = ServeConfig {
         max_wait: Duration::from_millis(max_wait as u64),
@@ -182,11 +185,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             ),
         };
         println!(
-            "compiling native engine plans for {model} ({scale:?} scale, pool of {} workers)...",
-            wingan::engine::resolve_workers(workers)
+            "compiling native engine plans for {model} ({scale:?} scale, pool of {} workers, \
+             precision policy {:?})...",
+            wingan::engine::resolve_workers(workers),
+            wingan::engine::resolve_precision(precision),
         );
         Coordinator::start_native(
-            wingan::engine::NativeConfig { scale, workers, ..Default::default() },
+            wingan::engine::NativeConfig { scale, workers, precision, ..Default::default() },
             serve_cfg,
         )?
     } else {

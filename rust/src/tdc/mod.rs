@@ -15,6 +15,7 @@
 //!                 where S*iy = oy + P - ky, S*ix = ox + P - kx.
 //! ```
 
+use crate::util::elem::Elem;
 use crate::util::tensor::{Filter4, Tensor3};
 
 /// K_C = ceil(K_D / S): the TDC-converted Conv kernel width (Table I).
@@ -63,7 +64,7 @@ pub fn phase_taps_1d(k: usize, s: usize, p: usize, phase: usize) -> PhaseTaps {
     assert_eq!(num.rem_euclid(s as isize), 0);
     let d0 = num / s as isize;
     assert!(
-        -(kc_ as isize - 1) <= d0 && d0 <= 0,
+        (-(kc_ as isize - 1)..=0).contains(&d0),
         "TDC offset {d0} out of range for K={k} S={s} P={p}"
     );
     let taps = (0..kc_)
@@ -74,9 +75,11 @@ pub fn phase_taps_1d(k: usize, s: usize, p: usize, phase: usize) -> PhaseTaps {
 
 /// One phase of the 2D decomposition: a K_C x K_C correlation filter bank
 /// plus its (d0y, d0x) input offset and structural support (r_y, r_x).
+/// Generic over the element precision (defaults to the f64 reference tier;
+/// plan lowering casts whole phases with [`PhaseFilter::cast_to`]).
 #[derive(Clone, Debug)]
-pub struct PhaseFilter {
-    pub g: Filter4,
+pub struct PhaseFilter<E: Elem = f64> {
+    pub g: Filter4<E>,
     pub d0y: isize,
     pub d0x: isize,
     /// real taps per dim — drives the Winograd sparsity case (Fig. 3/6)
@@ -84,8 +87,23 @@ pub struct PhaseFilter {
     pub rx: usize,
 }
 
+impl<E: Elem> PhaseFilter<E> {
+    /// The same phase filter at another precision (taps converted
+    /// elementwise; offsets and structural support are precision-free).
+    pub fn cast_to<T: Elem>(&self) -> PhaseFilter<T> {
+        PhaseFilter {
+            g: self.g.cast_to(),
+            d0y: self.d0y,
+            d0x: self.d0x,
+            ry: self.ry,
+            rx: self.rx,
+        }
+    }
+}
+
 /// Full TDC decomposition: S^2 phase filters, row-major over (p_y, p_x).
-pub fn decompose(w: &Filter4, s: usize, p: usize) -> Vec<PhaseFilter> {
+/// Pure tap selection — no arithmetic — so it is exact at any precision.
+pub fn decompose<E: Elem>(w: &Filter4<E>, s: usize, p: usize) -> Vec<PhaseFilter<E>> {
     assert_eq!(w.kh, w.kw, "square kernels only");
     let k = w.kh;
     let kc_ = kc(k, s);
@@ -123,7 +141,7 @@ pub fn decompose(w: &Filter4, s: usize, p: usize) -> Vec<PhaseFilter> {
 
 /// Standard DeConv by direct scatter-add (paper Fig. 2a). Reference for
 /// everything else.
-pub fn deconv_naive(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
+pub fn deconv_naive<E: Elem>(x: &Tensor3<E>, w: &Filter4<E>, s: usize, p: usize) -> Tensor3<E> {
     assert_eq!(x.c, w.c_in);
     let k = w.kh;
     let (ho, wo) = (s * x.h, s * x.w);
@@ -131,10 +149,9 @@ pub fn deconv_naive(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
     for ci in 0..x.c {
         for iy in 0..x.h {
             for ix in 0..x.w {
+                // (multiply-by-zero inputs would be correct to skip; the
+                // reference keeps every product for clarity)
                 let v = x.at(ci, iy, ix);
-                if v == 0.0 {
-                    // still correct to skip: multiply-by-zero adds nothing
-                }
                 for ky in 0..k {
                     for kx in 0..k {
                         let oy = (s * iy + ky) as isize - p as isize;
@@ -156,7 +173,7 @@ pub fn deconv_naive(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
 /// Standard strided conv (correlation semantics) with symmetric zero
 /// padding `p`: the reference datapath for the zoo's encoder Conv layers
 /// (DiscoGAN). Output is `[C_out, (H+2P-K)/S+1, (W+2P-K)/S+1]`.
-pub fn conv2d(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
+pub fn conv2d<E: Elem>(x: &Tensor3<E>, w: &Filter4<E>, s: usize, p: usize) -> Tensor3<E> {
     assert_eq!(x.c, w.c_in);
     let k = w.kh;
     assert!(x.h + 2 * p >= k && x.w + 2 * p >= k, "conv input smaller than kernel");
@@ -167,7 +184,7 @@ pub fn conv2d(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
     for co in 0..w.c_out {
         for oy in 0..ho {
             for ox in 0..wo {
-                let mut acc = 0.0;
+                let mut acc = E::ZERO;
                 for ci in 0..xp.c {
                     for ky in 0..k {
                         for kx in 0..k {
@@ -183,14 +200,14 @@ pub fn conv2d(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
 }
 
 /// Multi-channel valid correlation: `x[C_in,H,W] * g[C_in,C_out,K,K]`.
-pub fn correlate_valid(x: &Tensor3, g: &Filter4) -> Tensor3 {
+pub fn correlate_valid<E: Elem>(x: &Tensor3<E>, g: &Filter4<E>) -> Tensor3<E> {
     assert_eq!(x.c, g.c_in);
     let (ho, wo) = (x.h + 1 - g.kh, x.w + 1 - g.kw);
     let mut y = Tensor3::zeros(g.c_out, ho, wo);
     for co in 0..g.c_out {
         for oy in 0..ho {
             for ox in 0..wo {
-                let mut acc = 0.0;
+                let mut acc = E::ZERO;
                 for ci in 0..x.c {
                     for ky in 0..g.kh {
                         for kx in 0..g.kw {
@@ -207,7 +224,7 @@ pub fn correlate_valid(x: &Tensor3, g: &Filter4) -> Tensor3 {
 
 /// Pad `x` so a valid K_C-tap correlation for phase offset (d0y, d0x)
 /// produces exactly H x W outputs.
-pub fn phase_pad(x: &Tensor3, d0y: isize, d0x: isize, kc_: usize) -> Tensor3 {
+pub fn phase_pad<E: Elem>(x: &Tensor3<E>, d0y: isize, d0x: isize, kc_: usize) -> Tensor3<E> {
     let mut out = Tensor3::zeros(0, 0, 0);
     phase_pad_into(x, d0y, d0x, kc_, &mut out);
     out
@@ -217,7 +234,13 @@ pub fn phase_pad(x: &Tensor3, d0y: isize, d0x: isize, kc_: usize) -> Tensor3 {
 /// contents, no fresh allocation once the scratch has grown to the layer's
 /// padded geometry). The execution engine reuses one scratch across every
 /// phase and layer of a run.
-pub fn phase_pad_into(x: &Tensor3, d0y: isize, d0x: isize, kc_: usize, out: &mut Tensor3) {
+pub fn phase_pad_into<E: Elem>(
+    x: &Tensor3<E>,
+    d0y: isize,
+    d0x: isize,
+    kc_: usize,
+    out: &mut Tensor3<E>,
+) {
     let ly = (-d0y) as usize;
     let lx = (-d0x) as usize;
     let ry = (kc_ as isize - 1 + d0y) as usize;
@@ -227,7 +250,7 @@ pub fn phase_pad_into(x: &Tensor3, d0y: isize, d0x: isize, kc_: usize, out: &mut
 
 /// DeConv via the TDC method: S^2 valid correlations, phase-interleaved.
 /// Identical function to [`deconv_naive`] (the Fig. 2 equivalence).
-pub fn tdc_deconv(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
+pub fn tdc_deconv<E: Elem>(x: &Tensor3<E>, w: &Filter4<E>, s: usize, p: usize) -> Tensor3<E> {
     let k = w.kh;
     let kc_ = kc(k, s);
     let phases = decompose(w, s, p);
@@ -251,7 +274,12 @@ pub fn tdc_deconv(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
 /// Zero-padded DeConv baseline (Fig. 1b): dilate input, border-pad, conv
 /// with the flipped filter. Same function; the baseline accelerator models
 /// this computation including the wasted zero multiplications.
-pub fn zero_padded_deconv(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Tensor3 {
+pub fn zero_padded_deconv<E: Elem>(
+    x: &Tensor3<E>,
+    w: &Filter4<E>,
+    s: usize,
+    p: usize,
+) -> Tensor3<E> {
     let k = w.kh;
     assert!(p <= k - 1);
     let pad = k - 1 - p; // left/top border

@@ -1,0 +1,209 @@
+//! Scalar element abstraction for the precision-tiered execution datapath.
+//!
+//! The execution engine is generic over [`Elem`], with exactly two
+//! instantiations:
+//!
+//! * **`f64` — the reference tier.** Bit-identity contracts (engine TDC
+//!   plans vs the layer-composed standard-DeConv reference, stripe-batched
+//!   GEMM vs the per-tile dataflow) are stated and tested at this
+//!   precision. `f64` plans compute exactly what they did before the
+//!   datapath became generic.
+//! * **`f32` — the serving fast path.** Halves the bytes every hot-loop
+//!   stream moves (the reordered filter slabs, the gathered tile matrices,
+//!   the activation maps) and doubles effective SIMD width, mirroring the
+//!   reduced-precision deployment the paper's FPGA datapath (and the
+//!   Winograd-CNN DSE literature) assumes. `f32` plans carry a *tolerance*
+//!   contract against the `f64` reference and the same bitwise
+//!   worker-count/schedule-invariance contract as `f64`.
+//!
+//! [`Precision`] is the runtime-facing tag for the two tiers: plan
+//! lowering, the serving config (`NativeConfig::precision`), the
+//! `wingan serve --precision` flag and the `WINGAN_PRECISION` environment
+//! variable all speak it.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Mul, Sub};
+
+/// Runtime tag for the two supported element precisions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Single precision: the serving fast path (half the memory traffic,
+    /// double the SIMD width of the reference tier).
+    F32,
+    /// Double precision: the reference tier every numerics contract is
+    /// anchored to.
+    F64,
+}
+
+impl Precision {
+    /// Parse a user-facing precision name (`"f32"`/`"f64"`, plus the
+    /// common aliases `float32`/`single` and `float64`/`double`).
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "float32" | "single" => Ok(Precision::F32),
+            "f64" | "float64" | "double" => Ok(Precision::F64),
+            other => Err(format!("unknown precision '{other}' (expected f32 or f64)")),
+        }
+    }
+
+    /// Canonical lowercase label (`"f32"` / `"f64"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+
+    /// Bytes per scalar word at this precision.
+    pub fn word_bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F64 => 8,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Scalar element type of the execution datapath: everything the tensors,
+/// Winograd transforms, reordered filter slabs, GEMM micro-kernel and the
+/// whole `engine` need from a float, and nothing more.
+///
+/// Implemented for `f32` and `f64` only. The arithmetic surface is kept to
+/// `+`, `-`, `*`, `+=` and ordering so that every kernel written against
+/// `Elem` performs the *same sequence of IEEE operations* at either
+/// precision — which is what makes the per-precision bitwise invariance
+/// contracts (worker count, batch schedule, blocked vs naive GEMM) hold
+/// uniformly.
+pub trait Elem:
+    Copy
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + fmt::Debug
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + AddAssign
+    + 'static
+{
+    /// Additive identity (the value buffers are zero-filled with).
+    const ZERO: Self;
+    /// The [`Precision`] tag of this element type.
+    const PRECISION: Precision;
+
+    /// Convert from `f64`, rounding to nearest for `f32`. Plan lowering
+    /// uses this: Winograd filter transforms are always computed in `f64`
+    /// and quantized *after* `G g Gᵀ`, never before.
+    fn from_f64(v: f64) -> Self;
+    /// Widen (exactly, for both implementors) to `f64`.
+    fn to_f64(self) -> f64;
+    /// Convert from an `f32` wire value (exact for both implementors —
+    /// the serving boundary speaks `f32`).
+    fn from_f32(v: f32) -> Self;
+    /// Narrow to the `f32` wire format (rounds for `f64`).
+    fn to_f32(self) -> f32;
+    /// Hyperbolic tangent at this precision (the `tanh` output layers).
+    fn tanh(self) -> Self;
+}
+
+impl Elem for f32 {
+    const ZERO: f32 = 0.0;
+    const PRECISION: Precision = Precision::F32;
+
+    #[inline]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+    #[inline]
+    fn tanh(self) -> f32 {
+        f32::tanh(self)
+    }
+}
+
+impl Elem for f64 {
+    const ZERO: f64 = 0.0;
+    const PRECISION: Precision = Precision::F64;
+
+    #[inline]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn from_f32(v: f32) -> f64 {
+        v as f64
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+    #[inline]
+    fn tanh(self) -> f64 {
+        f64::tanh(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_parse_and_labels() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse(" F64 ").unwrap(), Precision::F64);
+        assert_eq!(Precision::parse("single").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("double").unwrap(), Precision::F64);
+        assert!(Precision::parse("f16").is_err());
+        assert_eq!(Precision::F32.label(), "f32");
+        assert_eq!(format!("{}", Precision::F64), "f64");
+        assert_eq!(Precision::F32.word_bytes(), 4);
+        assert_eq!(Precision::F64.word_bytes(), 8);
+    }
+
+    #[test]
+    fn elem_roundtrips() {
+        assert_eq!(<f32 as Elem>::from_f64(0.5), 0.5f32);
+        assert_eq!(0.5f32.to_f64(), 0.5f64);
+        assert_eq!(<f64 as Elem>::from_f32(1.25), 1.25f64);
+        assert_eq!(<f32 as Elem>::PRECISION, Precision::F32);
+        assert_eq!(<f64 as Elem>::PRECISION, Precision::F64);
+        // f64 -> f32 rounds to nearest; f32 -> f64 is exact
+        let x = 0.1f64;
+        assert_eq!(<f32 as Elem>::from_f64(x), 0.1f32);
+        assert_eq!(0.1f32.to_f64() as f32, 0.1f32);
+    }
+
+    #[test]
+    fn elem_arithmetic_matches_native() {
+        fn fma_chain<E: Elem>(vals: &[E]) -> E {
+            let mut acc = E::ZERO;
+            for &v in vals {
+                acc += v * v;
+            }
+            acc
+        }
+        assert_eq!(fma_chain(&[1.0f64, 2.0, 3.0]), 14.0);
+        assert_eq!(fma_chain(&[1.0f32, 2.0, 3.0]), 14.0);
+    }
+}

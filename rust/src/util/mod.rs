@@ -5,6 +5,7 @@
 //! implemented here, small and fully tested.
 
 pub mod bin;
+pub mod elem;
 pub mod json;
 pub mod prng;
 pub mod tensor;

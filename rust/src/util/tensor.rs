@@ -1,44 +1,48 @@
-//! Minimal dense tensor types used across the substrates.
+//! Minimal dense tensor types used across the substrates, generic over the
+//! scalar element type.
 //!
-//! The numeric substrates (reference deconv, TDC, Winograd, the functional
-//! accelerator simulator) use `f64` so that algorithm-equivalence tests can
-//! assert tight tolerances; the PJRT runtime hot path uses raw `f32` buffers
-//! and never touches these types.
+//! The numeric substrates default to `E = f64` so that algorithm-equivalence
+//! tests can assert tight (often exact) tolerances; the execution engine's
+//! f32 serving fast path instantiates the same types at `E = f32` — same
+//! layout, same operation order, half the bytes. The PJRT runtime hot path
+//! uses raw `f32` buffers and never touches these types.
+
+use crate::util::elem::Elem;
 
 /// Channel-first 3-D tensor `[C, H, W]`.
 #[derive(Clone, Debug, PartialEq)]
-pub struct Tensor3 {
+pub struct Tensor3<E: Elem = f64> {
     pub c: usize,
     pub h: usize,
     pub w: usize,
-    pub data: Vec<f64>,
+    pub data: Vec<E>,
 }
 
-impl Tensor3 {
-    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
-        Tensor3 { c, h, w, data: vec![0.0; c * h * w] }
+impl<E: Elem> Tensor3<E> {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Tensor3<E> {
+        Tensor3 { c, h, w, data: vec![E::ZERO; c * h * w] }
     }
 
-    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<f64>) -> Self {
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<E>) -> Tensor3<E> {
         assert_eq!(data.len(), c * h * w, "tensor3 shape/data mismatch");
         Tensor3 { c, h, w, data }
     }
 
     #[inline]
-    pub fn at(&self, c: usize, y: usize, x: usize) -> f64 {
+    pub fn at(&self, c: usize, y: usize, x: usize) -> E {
         debug_assert!(c < self.c && y < self.h && x < self.w);
         self.data[(c * self.h + y) * self.w + x]
     }
 
     #[inline]
-    pub fn at_mut(&mut self, c: usize, y: usize, x: usize) -> &mut f64 {
+    pub fn at_mut(&mut self, c: usize, y: usize, x: usize) -> &mut E {
         debug_assert!(c < self.c && y < self.h && x < self.w);
         &mut self.data[(c * self.h + y) * self.w + x]
     }
 
-    /// Zero-pad spatially: `l`/`r` rows above/below, `t`/`b`... columns
-    /// left/right. Returns a new tensor of shape `[C, H+top+bot, W+left+right]`.
-    pub fn pad(&self, top: usize, bot: usize, left: usize, right: usize) -> Tensor3 {
+    /// Zero-pad spatially: `top`/`bot` rows above/below, `left`/`right`
+    /// columns. Returns a new tensor of shape `[C, H+top+bot, W+left+right]`.
+    pub fn pad(&self, top: usize, bot: usize, left: usize, right: usize) -> Tensor3<E> {
         let mut out = Tensor3::zeros(0, 0, 0);
         self.pad_into(top, bot, left, right, &mut out);
         out
@@ -49,14 +53,21 @@ impl Tensor3 {
     /// copied row by row. Produces bit-identical contents to `pad` — the
     /// execution engine's scratch arenas rely on that equivalence to keep
     /// padded-view reuse invisible to the numerics.
-    pub fn pad_into(&self, top: usize, bot: usize, left: usize, right: usize, out: &mut Tensor3) {
+    pub fn pad_into(
+        &self,
+        top: usize,
+        bot: usize,
+        left: usize,
+        right: usize,
+        out: &mut Tensor3<E>,
+    ) {
         out.c = self.c;
         out.h = self.h + top + bot;
         out.w = self.w + left + right;
         // clear + resize zero-fills the whole buffer without reallocating
         // once capacity has grown to the layer's working-set high-water mark
         out.data.clear();
-        out.data.resize(out.c * out.h * out.w, 0.0);
+        out.data.resize(out.c * out.h * out.w, E::ZERO);
         for c in 0..self.c {
             for y in 0..self.h {
                 let src = (c * self.h + y) * self.w;
@@ -66,51 +77,74 @@ impl Tensor3 {
         }
     }
 
-    /// Max absolute element-wise difference; shapes must match.
-    pub fn max_abs_diff(&self, other: &Tensor3) -> f64 {
+    /// Max absolute element-wise difference (computed in `f64` for either
+    /// element precision); shapes must match.
+    pub fn max_abs_diff(&self, other: &Tensor3<E>) -> f64 {
         assert_eq!((self.c, self.h, self.w), (other.c, other.h, other.w));
         self.data
             .iter()
             .zip(&other.data)
-            .map(|(a, b)| (a - b).abs())
+            .map(|(a, b)| (a.to_f64() - b.to_f64()).abs())
             .fold(0.0, f64::max)
     }
 
     pub fn numel(&self) -> usize {
         self.data.len()
     }
+
+    /// Convert every element to another precision (`f64 → f32` rounds to
+    /// nearest; `f32 → f64` is exact). Same shape, fresh buffer.
+    pub fn cast_to<T: Elem>(&self) -> Tensor3<T> {
+        Tensor3 {
+            c: self.c,
+            h: self.h,
+            w: self.w,
+            data: self.data.iter().map(|&v| T::from_f64(v.to_f64())).collect(),
+        }
+    }
 }
 
 /// DeConv / Conv filter bank in conv-transpose layout `[C_in, C_out, K_h, K_w]`.
 #[derive(Clone, Debug, PartialEq)]
-pub struct Filter4 {
+pub struct Filter4<E: Elem = f64> {
     pub c_in: usize,
     pub c_out: usize,
     pub kh: usize,
     pub kw: usize,
-    pub data: Vec<f64>,
+    pub data: Vec<E>,
 }
 
-impl Filter4 {
-    pub fn zeros(c_in: usize, c_out: usize, kh: usize, kw: usize) -> Self {
-        Filter4 { c_in, c_out, kh, kw, data: vec![0.0; c_in * c_out * kh * kw] }
+impl<E: Elem> Filter4<E> {
+    pub fn zeros(c_in: usize, c_out: usize, kh: usize, kw: usize) -> Filter4<E> {
+        Filter4 { c_in, c_out, kh, kw, data: vec![E::ZERO; c_in * c_out * kh * kw] }
     }
 
-    pub fn from_vec(c_in: usize, c_out: usize, kh: usize, kw: usize, data: Vec<f64>) -> Self {
+    pub fn from_vec(c_in: usize, c_out: usize, kh: usize, kw: usize, data: Vec<E>) -> Filter4<E> {
         assert_eq!(data.len(), c_in * c_out * kh * kw, "filter4 shape/data mismatch");
         Filter4 { c_in, c_out, kh, kw, data }
     }
 
     #[inline]
-    pub fn at(&self, ci: usize, co: usize, ky: usize, kx: usize) -> f64 {
+    pub fn at(&self, ci: usize, co: usize, ky: usize, kx: usize) -> E {
         debug_assert!(ci < self.c_in && co < self.c_out && ky < self.kh && kx < self.kw);
         self.data[((ci * self.c_out + co) * self.kh + ky) * self.kw + kx]
     }
 
     #[inline]
-    pub fn at_mut(&mut self, ci: usize, co: usize, ky: usize, kx: usize) -> &mut f64 {
+    pub fn at_mut(&mut self, ci: usize, co: usize, ky: usize, kx: usize) -> &mut E {
         debug_assert!(ci < self.c_in && co < self.c_out && ky < self.kh && kx < self.kw);
         &mut self.data[((ci * self.c_out + co) * self.kh + ky) * self.kw + kx]
+    }
+
+    /// Convert every tap to another precision (see [`Tensor3::cast_to`]).
+    pub fn cast_to<T: Elem>(&self) -> Filter4<T> {
+        Filter4 {
+            c_in: self.c_in,
+            c_out: self.c_out,
+            kh: self.kh,
+            kw: self.kw,
+            data: self.data.iter().map(|&v| T::from_f64(v.to_f64())).collect(),
+        }
     }
 }
 
@@ -164,5 +198,27 @@ mod tests {
         let a = Tensor3::from_vec(1, 1, 2, vec![1.0, 2.0]);
         let b = Tensor3::from_vec(1, 1, 2, vec![1.5, 2.0]);
         assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+
+    #[test]
+    fn f32_tensors_share_the_generic_surface() {
+        let t: Tensor3<f32> = Tensor3::from_vec(1, 2, 2, vec![1.0, -2.0, 3.0, -4.0]);
+        let p = t.pad(0, 1, 1, 0);
+        assert_eq!((p.c, p.h, p.w), (1, 3, 3));
+        assert_eq!(p.at(0, 0, 1), 1.0);
+        assert_eq!(p.at(0, 2, 2), 0.0);
+        let back: Tensor3<f64> = t.cast_to();
+        assert_eq!(back.at(0, 1, 1), -4.0);
+        // f32 -> f64 -> f32 is the identity
+        assert_eq!(back.cast_to::<f32>().data, t.data);
+    }
+
+    #[test]
+    fn cast_rounds_f64_to_nearest_f32() {
+        let t = Tensor3::from_vec(1, 1, 1, vec![0.1f64]);
+        let c: Tensor3<f32> = t.cast_to();
+        assert_eq!(c.data[0], 0.1f32);
+        let f = Filter4::from_vec(1, 1, 1, 1, vec![0.3f64]);
+        assert_eq!(f.cast_to::<f32>().data[0], 0.3f32);
     }
 }

@@ -5,9 +5,14 @@
 //!
 //! This module owns the reordered representations used by both the
 //! functional accelerator simulator (`accel::functional`) and the cycle
-//! model (`accel::cycle`).
+//! model (`accel::cycle`), plus the **register/cache-blocked GEMM
+//! micro-kernel** the execution engine's stripe-batched datapath runs on.
+//! All of it is generic over the scalar element ([`Elem`]): the f64
+//! reference tier and the f32 serving fast path execute the identical
+//! operation sequence.
 
 use crate::tdc::PhaseFilter;
+use crate::util::elem::Elem;
 use crate::util::tensor::Tensor3;
 use crate::winograd::sparsity::{classify, nonzero_positions, Case};
 use crate::winograd::transforms::{filter_bank_transform, input_transform, Tile4, M, N};
@@ -15,22 +20,22 @@ use crate::winograd::transforms::{filter_bank_transform, input_transform, Tile4,
 /// One TDC phase's filters in the Winograd domain, reordered with zero rows
 /// removed: `u[p][co][ci]` for p over the *live* positions only.
 #[derive(Clone, Debug)]
-pub struct ReorderedFilter {
+pub struct ReorderedFilter<E: Elem = f64> {
     pub case: Case,
     /// live position indices into the row-major 4x4 (len 16/12/9)
     pub live: Vec<usize>,
     pub c_in: usize,
     pub c_out: usize,
     /// `[live.len() * c_out * c_in]`, position-major
-    pub u: Vec<f64>,
+    pub u: Vec<E>,
     /// phase input offsets (from the TDC decomposition)
     pub d0y: isize,
     pub d0x: isize,
 }
 
-impl ReorderedFilter {
+impl<E: Elem> ReorderedFilter<E> {
     #[inline]
-    pub fn at(&self, p: usize, co: usize, ci: usize) -> f64 {
+    pub fn at(&self, p: usize, co: usize, ci: usize) -> E {
         self.u[(p * self.c_out + co) * self.c_in + ci]
     }
 
@@ -38,9 +43,26 @@ impl ReorderedFilter {
     pub fn mults_per_tile(&self) -> usize {
         self.live.len()
     }
+
+    /// The same reordered slab at another precision. Plan lowering uses
+    /// this so the `G g Gᵀ` transform is always computed in f64 and only
+    /// the finished Winograd-domain weights are quantized.
+    pub fn cast_to<T: Elem>(&self) -> ReorderedFilter<T> {
+        ReorderedFilter {
+            case: self.case,
+            live: self.live.clone(),
+            c_in: self.c_in,
+            c_out: self.c_out,
+            u: self.u.iter().map(|&v| T::from_f64(v.to_f64())).collect(),
+            d0y: self.d0y,
+            d0x: self.d0x,
+        }
+    }
 }
 
-/// Build the reordered Winograd-domain filter for one TDC phase.
+/// Build the reordered Winograd-domain filter for one TDC phase (f64; the
+/// f32 tier is produced by [`ReorderedFilter::cast_to`] *after* the exact
+/// transform).
 pub fn reorder_filter(ph: &PhaseFilter) -> ReorderedFilter {
     let case = classify(ph.ry.clamp(1, 3), ph.rx.clamp(1, 3));
     let live = nonzero_positions(ph.ry.clamp(1, 3), ph.rx.clamp(1, 3));
@@ -62,25 +84,25 @@ pub fn reorder_filter(ph: &PhaseFilter) -> ReorderedFilter {
 /// over all 16 positions (the pre-PE computes all of V; the *gather* of
 /// live rows happens when feeding the com-PEs).
 #[derive(Clone, Debug)]
-pub struct ReorderedTile {
+pub struct ReorderedTile<E: Elem = f64> {
     pub c_in: usize,
     /// `[16 * c_in]`, position-major
-    pub v: Vec<f64>,
+    pub v: Vec<E>,
 }
 
-impl ReorderedTile {
+impl<E: Elem> ReorderedTile<E> {
     #[inline]
-    pub fn at(&self, pos: usize, ci: usize) -> f64 {
+    pub fn at(&self, pos: usize, ci: usize) -> E {
         self.v[pos * self.c_in + ci]
     }
 }
 
 /// Extract + transform + reorder the 4x4 input tile at (tile_y, tile_x)
 /// (stride m = 2) from a padded feature map. This is the pre-PE.
-pub fn reorder_input_tile(x: &Tensor3, ty: usize, tx: usize) -> ReorderedTile {
-    let mut v = vec![0.0; 16 * x.c];
+pub fn reorder_input_tile<E: Elem>(x: &Tensor3<E>, ty: usize, tx: usize) -> ReorderedTile<E> {
+    let mut v = vec![E::ZERO; 16 * x.c];
     for ci in 0..x.c {
-        let mut z: Tile4 = [[0.0; N]; N];
+        let mut z: Tile4<E> = [[E::ZERO; N]; N];
         for i in 0..N {
             for j in 0..N {
                 z[i][j] = x.at(ci, M * ty + i, M * tx + j);
@@ -99,9 +121,12 @@ pub fn reorder_input_tile(x: &Tensor3, ty: usize, tx: usize) -> ReorderedTile {
 /// com-PE array: multiply-accumulate over live rows only.
 /// Returns the Winograd-domain accumulator `m[co] -> Tile4` (zeros at
 /// skipped positions) and the number of multiplications actually issued.
-pub fn engine_multiply(rf: &ReorderedFilter, vt: &ReorderedTile) -> (Vec<Tile4>, usize) {
+pub fn engine_multiply<E: Elem>(
+    rf: &ReorderedFilter<E>,
+    vt: &ReorderedTile<E>,
+) -> (Vec<Tile4<E>>, usize) {
     assert_eq!(rf.c_in, vt.c_in);
-    let mut m_acc = vec![[[0.0; N]; N]; rf.c_out];
+    let mut m_acc = vec![[[E::ZERO; N]; N]; rf.c_out];
     let mut mults = 0;
     for (pi, &pos) in rf.live.iter().enumerate() {
         let (i, j) = (pos / N, pos % N);
@@ -109,7 +134,10 @@ pub fn engine_multiply(rf: &ReorderedFilter, vt: &ReorderedTile) -> (Vec<Tile4>,
         let v_row = &vt.v[pos * rf.c_in..(pos + 1) * rf.c_in];
         for co in 0..rf.c_out {
             let u_row = &rf.u[(pi * rf.c_out + co) * rf.c_in..][..rf.c_in];
-            let acc: f64 = u_row.iter().zip(v_row).map(|(u, v)| u * v).sum();
+            let acc = u_row
+                .iter()
+                .zip(v_row)
+                .fold(E::ZERO, |acc, (&u, &v)| acc + u * v);
             m_acc[co][i][j] = acc;
             mults += rf.c_in;
         }
@@ -117,8 +145,19 @@ pub fn engine_multiply(rf: &ReorderedFilter, vt: &ReorderedTile) -> (Vec<Tile4>,
     (m_acc, mults)
 }
 
+/// Register-tile rows (`c_out` direction) of the blocked GEMM micro-kernel.
+pub const GEMM_MR: usize = 4;
+/// Register-tile columns (`tiles` direction) of the blocked micro-kernel:
+/// `GEMM_MR x GEMM_NR` accumulators live in registers across the whole
+/// `c_in` reduction of a cache block.
+pub const GEMM_NR: usize = 8;
+/// `c_in` cache-block depth: one block streams a `c_out x CI_BLOCK` slab
+/// panel against a `CI_BLOCK x GEMM_NR` tile panel that stays resident.
+pub const CI_BLOCK: usize = 128;
+
 /// Stripe-batched com-PE array: one Winograd-domain GEMM per live position
-/// instead of one GEMV per tile.
+/// instead of one GEMV per tile, executed by a **register/cache-blocked
+/// micro-kernel**.
 ///
 /// `v` is the gathered tile matrix for a whole stripe of `tiles` tiles,
 /// position-major `[pos][c_in][tiles]` over all 16 positions (the layout
@@ -126,39 +165,74 @@ pub fn engine_multiply(rf: &ReorderedFilter, vt: &ReorderedTile) -> (Vec<Tile4>,
 /// Winograd-domain accumulator `[c_out][pos][tiles]`, zeroed here so
 /// skipped (structurally zero) positions stay zero for the inverse
 /// transform. For each live position `p` this multiplies the `c_out x c_in`
-/// filter block `U_p` against the `c_in x tiles` tile-column block `V_p` —
-/// the filter slab is streamed **once per stripe** instead of once per
-/// tile, and the inner loop is a contiguous AXPY over tiles that
-/// autovectorizes.
+/// filter block `U_p` against the `c_in x tiles` tile-column block `V_p`.
 ///
-/// Bitwise contract: each output element accumulates over `c_in` in the
-/// same order as [`engine_multiply`] (a sequential fold from 0.0), so for
-/// any tile `t`, `m[co][pos][t]` is **bit-identical** to
-/// `engine_multiply(rf, tile_t).0[co][pos/4][pos%4]`. The engine's
-/// stripe-batched datapath and the per-tile functional simulator stay
-/// exactly equal through this property (pinned by the proptests).
+/// Blocking: the `c_in` reduction is split into cache blocks of
+/// [`CI_BLOCK`] channels (the `CI_BLOCK x GEMM_NR` tile panel stays
+/// cache-resident while the filter slab — the big stream, read once per
+/// stripe — is consumed), and inside a block a `GEMM_MR x GEMM_NR` tile of
+/// accumulators is held in registers for the whole reduction, so each
+/// tile-panel row is loaded once per `GEMM_MR` output channels instead of
+/// once per channel and the partial sums never round-trip memory inside a
+/// block. Edge tiles (`c_out % GEMM_MR`, `tiles % GEMM_NR`,
+/// `c_in % CI_BLOCK`) run the same code on short slices.
+///
+/// Bitwise contract: each output element accumulates over `c_in` in
+/// ascending order from `E::ZERO` — cache blocks resume from the exact
+/// stored partial, register tiling never reassociates the reduction — so
+/// for any tile `t`, `m[co][pos][t]` is **bit-identical** to
+/// `engine_multiply(rf, tile_t).0[co][pos/4][pos%4]` at either precision.
+/// The engine's stripe-batched datapath, the per-tile functional simulator
+/// and the pre-blocking PR-3 kernel all stay exactly equal through this
+/// property (pinned by the proptests).
 ///
 /// Returns the number of multiplications issued:
 /// `live.len() * c_out * c_in * tiles`, exactly `tiles` times what
 /// [`engine_multiply`] reports per tile.
-pub fn engine_multiply_batch(rf: &ReorderedFilter, v: &[f64], tiles: usize, m: &mut [f64]) -> usize {
+pub fn engine_multiply_batch<E: Elem>(
+    rf: &ReorderedFilter<E>,
+    v: &[E],
+    tiles: usize,
+    m: &mut [E],
+) -> usize {
     assert_eq!(v.len(), N * N * rf.c_in * tiles, "gathered tile matrix shape");
     assert_eq!(m.len(), rf.c_out * N * N * tiles, "winograd accumulator shape");
-    m.fill(0.0);
+    let (c_in, c_out) = (rf.c_in, rf.c_out);
+    m.fill(E::ZERO);
     for (pi, &pos) in rf.live.iter().enumerate() {
-        for co in 0..rf.c_out {
-            let out = &mut m[(co * N * N + pos) * tiles..][..tiles];
-            let u_base = (pi * rf.c_out + co) * rf.c_in;
-            for ci in 0..rf.c_in {
-                let u = rf.u[u_base + ci];
-                let row = &v[(pos * rf.c_in + ci) * tiles..][..tiles];
-                for (acc, &vv) in out.iter_mut().zip(row) {
-                    *acc += u * vv;
+        let u_slab = &rf.u[pi * c_out * c_in..][..c_out * c_in];
+        let v_panel = &v[pos * c_in * tiles..][..c_in * tiles];
+        for ci0 in (0..c_in).step_by(CI_BLOCK) {
+            let ci1 = (ci0 + CI_BLOCK).min(c_in);
+            for co0 in (0..c_out).step_by(GEMM_MR) {
+                let mr = GEMM_MR.min(c_out - co0);
+                for t0 in (0..tiles).step_by(GEMM_NR) {
+                    let nr = GEMM_NR.min(tiles - t0);
+                    // load the register tile with the partial sums of the
+                    // previous cache blocks (zeros for the first)
+                    let mut acc = [[E::ZERO; GEMM_NR]; GEMM_MR];
+                    for (mi, a) in acc.iter_mut().take(mr).enumerate() {
+                        let row = &m[((co0 + mi) * N * N + pos) * tiles + t0..][..nr];
+                        a[..nr].copy_from_slice(row);
+                    }
+                    for ci in ci0..ci1 {
+                        let row = &v_panel[ci * tiles + t0..][..nr];
+                        for (mi, a) in acc.iter_mut().take(mr).enumerate() {
+                            let u = u_slab[(co0 + mi) * c_in + ci];
+                            for (x, &vv) in a.iter_mut().zip(row) {
+                                *x += u * vv;
+                            }
+                        }
+                    }
+                    for (mi, a) in acc.iter().take(mr).enumerate() {
+                        let out = &mut m[((co0 + mi) * N * N + pos) * tiles + t0..][..nr];
+                        out.copy_from_slice(&a[..nr]);
+                    }
                 }
             }
         }
     }
-    rf.live.len() * rf.c_out * rf.c_in * tiles
+    rf.live.len() * c_out * c_in * tiles
 }
 
 #[cfg(test)]
@@ -185,11 +259,14 @@ mod tests {
         assert_eq!(total, 49);
     }
 
-    // the stripe-batched kernel's bitwise equivalence to per-tile
-    // `engine_multiply` is pinned by the randomized
+    // the blocked kernel's bitwise equivalence to per-tile `engine_multiply`
+    // is pinned by the randomized
     // `prop_batched_gemm_bitwise_equals_per_tile_multiply` property in
     // rust/tests/proptests.rs (48 cases over every kernel class, dirty
-    // accumulator seeding) — no duplicate fixed-case test here.
+    // accumulator seeding, both precisions) — no duplicate fixed-case test
+    // here. The geometry edge cases the register tiling must survive
+    // (c_out % GEMM_MR, tiles % GEMM_NR, c_in % CI_BLOCK all non-zero) are
+    // inside that generator's range.
 
     #[test]
     fn engine_multiply_equals_dense_math() {
@@ -212,6 +289,68 @@ mod tests {
                     assert!((yt[a][b] - y_ref.at(co, a, b)).abs() < 1e-10);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_spans_register_and_cache_edges() {
+        // deterministic wide-geometry case exercising every blocking edge:
+        // c_in crosses CI_BLOCK, c_out crosses GEMM_MR, tiles crosses
+        // GEMM_NR — the blocked kernel must equal per-tile engine_multiply
+        // bit for bit in both precisions
+        let mut rng = Rng::new(402);
+        let (c_in, c_out, tiles) = (CI_BLOCK + 3, GEMM_MR + 2, GEMM_NR + 5);
+        let w = Filter4::from_vec(c_in, c_out, 4, 4, rng.normal_vec(c_in * c_out * 16));
+        let phases = decompose(&w, 2, default_padding(4, 2));
+        let rf64 = reorder_filter(&phases[0]);
+        let rf32: ReorderedFilter<f32> = rf64.cast_to();
+        let wpix = 2 * tiles + 2;
+        let x64 = Tensor3::from_vec(c_in, 4, wpix, rng.normal_vec(c_in * 4 * wpix));
+        let x32: Tensor3<f32> = x64.cast_to();
+
+        fn check<E: Elem>(rf: &ReorderedFilter<E>, x: &Tensor3<E>, tiles: usize) {
+            let c_in = x.c;
+            let mut v = vec![E::ZERO; 16 * c_in * tiles];
+            for tx in 0..tiles {
+                let vt = reorder_input_tile(x, 0, tx);
+                for pos in 0..16 {
+                    for ci in 0..c_in {
+                        v[(pos * c_in + ci) * tiles + tx] = vt.at(pos, ci);
+                    }
+                }
+            }
+            let mut m = vec![E::ZERO; rf.c_out * 16 * tiles];
+            let mults = engine_multiply_batch(rf, &v, tiles, &mut m);
+            assert_eq!(mults, rf.live.len() * rf.c_out * c_in * tiles);
+            for tx in 0..tiles {
+                let vt = reorder_input_tile(x, 0, tx);
+                let (m_acc, _) = engine_multiply(rf, &vt);
+                for co in 0..rf.c_out {
+                    for pos in 0..16 {
+                        assert!(
+                            m[(co * 16 + pos) * tiles + tx] == m_acc[co][pos / 4][pos % 4],
+                            "tile {tx} pos {pos} co {co}"
+                        );
+                    }
+                }
+            }
+        }
+        check(&rf64, &x64, tiles);
+        check(&rf32, &x32, tiles);
+    }
+
+    #[test]
+    fn cast_to_preserves_structure_and_rounds_weights() {
+        let mut rng = Rng::new(403);
+        let w = Filter4::from_vec(2, 2, 5, 5, rng.normal_vec(2 * 2 * 25));
+        let phases = decompose(&w, 2, default_padding(5, 2));
+        let rf = reorder_filter(&phases[0]);
+        let rf32: ReorderedFilter<f32> = rf.cast_to();
+        assert_eq!(rf32.case, rf.case);
+        assert_eq!(rf32.live, rf.live);
+        assert_eq!((rf32.c_in, rf32.c_out), (rf.c_in, rf.c_out));
+        for (a, b) in rf32.u.iter().zip(&rf.u) {
+            assert_eq!(*a, *b as f32, "quantized after the f64 transform");
         }
     }
 }

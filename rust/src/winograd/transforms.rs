@@ -5,6 +5,7 @@
 //! K_D=5 deconv) are zero-padded to 3x3 before the `G f G^T` transform,
 //! which is what creates the structural zero patterns of Fig. 3.
 
+use crate::util::elem::Elem;
 use crate::util::tensor::{Filter4, Tensor3};
 
 pub const M: usize = 2;
@@ -33,8 +34,9 @@ pub const AT: [[f64; 4]; 2] = [
     [0.0, 1.0, -1.0, -1.0],
 ];
 
-/// A transformed 4x4 tile.
-pub type Tile4 = [[f64; N]; N];
+/// A transformed 4x4 tile (defaults to the f64 reference tier; the
+/// execution engine instantiates it per plan precision).
+pub type Tile4<E = f64> = [[E; N]; N];
 
 /// `U = G f G^T` for a single 2D filter, zero-padding r<3 supports to 3x3.
 pub fn filter_transform(f: &[[f64; 3]; 3]) -> Tile4 {
@@ -64,20 +66,22 @@ pub fn filter_transform(f: &[[f64; 3]; 3]) -> Tile4 {
 }
 
 /// `V = B^T z B` for a 4x4 input tile, via the adder-tree formulation the
-/// FPGA pre-PE uses (rows then columns; 32 adds, no multiplies).
-pub fn input_transform(z: &Tile4) -> Tile4 {
+/// FPGA pre-PE uses (rows then columns; 32 adds, no multiplies). Generic
+/// over the element precision: the same add/sub sequence runs at `f32` on
+/// the serving fast path and at `f64` on the reference tier.
+pub fn input_transform<E: Elem>(z: &Tile4<E>) -> Tile4<E> {
     #[inline]
-    fn bt_lines(a: [f64; 4]) -> [f64; 4] {
+    fn bt_lines<E: Elem>(a: [E; 4]) -> [E; 4] {
         [a[0] - a[2], a[1] + a[2], a[2] - a[1], a[1] - a[3]]
     }
-    let mut rows = [[0.0; N]; N];
+    let mut rows = [[E::ZERO; N]; N];
     for j in 0..N {
         let col = bt_lines([z[0][j], z[1][j], z[2][j], z[3][j]]);
         for i in 0..N {
             rows[i][j] = col[i];
         }
     }
-    let mut v = [[0.0; N]; N];
+    let mut v = [[E::ZERO; N]; N];
     for i in 0..N {
         let line = bt_lines(rows[i]);
         v[i] = line;
@@ -86,16 +90,17 @@ pub fn input_transform(z: &Tile4) -> Tile4 {
 }
 
 /// `Y = A^T M A`: 4x4 Winograd-domain accumulator -> 2x2 spatial outputs.
-pub fn inverse_transform(m: &Tile4) -> [[f64; M]; M] {
+/// Generic over the element precision like [`input_transform`].
+pub fn inverse_transform<E: Elem>(m: &Tile4<E>) -> [[E; M]; M] {
     #[inline]
-    fn at_lines(a: [f64; 4]) -> [f64; 2] {
+    fn at_lines<E: Elem>(a: [E; 4]) -> [E; 2] {
         [a[0] + a[1] + a[2], a[1] - a[2] - a[3]]
     }
-    let mut half = [[0.0; 2]; N]; // half[j] = A^T applied down column j
+    let mut half = [[E::ZERO; 2]; N]; // half[j] = A^T applied down column j
     for j in 0..N {
         half[j] = at_lines([m[0][j], m[1][j], m[2][j], m[3][j]]);
     }
-    let mut y = [[0.0; M]; M];
+    let mut y = [[E::ZERO; M]; M];
     for a in 0..M {
         y[a] = at_lines([half[0][a], half[1][a], half[2][a], half[3][a]]);
     }

@@ -17,6 +17,7 @@ fn tiny_cfg() -> NativeConfig {
         workers: 2,
         seed: 9,
         models: None,
+        ..Default::default()
     }
 }
 
@@ -123,7 +124,7 @@ fn exec_latency_tracks_batch_work() {
     rt.execute(&e1.name, &sample).unwrap();
     rt.execute(&e4.name, &batch4).unwrap();
     // best-of-3 to shrug off scheduler noise
-    let best = |f: &dyn Fn() -> ()| {
+    let best = |f: &dyn Fn()| {
         (0..3)
             .map(|_| {
                 let t = Instant::now();
@@ -191,6 +192,33 @@ fn tdc_route_is_the_reference_anchor() {
         let diff = bin::max_abs_diff(&a.output, &b.output);
         assert!(diff < 1e-3, "{model}: winograd vs tdc diff {diff}");
     }
+    coord.shutdown();
+}
+
+#[test]
+fn f32_tier_serves_end_to_end_and_tracks_the_reference() {
+    // the whole coordinator path on a forced-f32 fast route: outputs must
+    // stay finite, deterministic, and within single-precision rounding of
+    // the f64 tdc reference anchor
+    let coord = Coordinator::start_native(
+        NativeConfig {
+            precision: Some(wingan::engine::Precision::F32),
+            models: Some(vec!["dcgan".into()]),
+            ..tiny_cfg()
+        },
+        ServeConfig { max_wait: Duration::from_millis(2), preload_models: None },
+    )
+    .unwrap();
+    let mut rng = Rng::new(23);
+    let route = coord.router().route("dcgan", "winograd").unwrap();
+    let input = rng.normal_vec_f32(route.sample_input_len);
+    let fast = coord.generate("dcgan", "winograd", input.clone()).unwrap();
+    let again = coord.generate("dcgan", "winograd", input.clone()).unwrap();
+    assert_eq!(fast.output, again.output, "f32 tier must be deterministic");
+    let anchor = coord.generate("dcgan", "tdc", input).unwrap();
+    let diff = bin::max_abs_diff(&fast.output, &anchor.output);
+    assert!(diff < 1e-3, "f32 fast route vs f64 reference anchor: {diff}");
+    assert!(fast.output.iter().all(|v| v.is_finite()));
     coord.shutdown();
 }
 

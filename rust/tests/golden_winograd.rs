@@ -284,3 +284,68 @@ fn winograd_deconv_golden_small_integer_case() {
     let via_tdc = tdc::tdc_deconv(&x, &w, 1, 1);
     assert_eq!(via_tdc.at(0, 0, 0), 10.0);
 }
+
+#[test]
+fn engine_f64_golden_small_integer_case() {
+    // the pre-refactor f64 pin, as a hard-coded value rather than a
+    // cross-check: the precision-tiered engine on the same hand-checkable
+    // deconv must still produce exactly 10.0 (all constants dyadic, every
+    // datapath exact), through both a Linear and a Relu plan — and the
+    // f32 tier, whose operands are exact small integers, matches bitwise
+    use std::sync::Arc;
+    use wingan::engine::{Engine, ModelPlan, PlanOptions, Planner, Select};
+    use wingan::gan::workload::Method;
+    use wingan::gan::zoo::{Activation, Kind, Layer};
+
+    let w = Filter4::from_vec(1, 1, 3, 3, (1..=9).map(f64::from).collect());
+    let planner = Planner::new(PlanOptions {
+        select: Select::Force(Method::Tdc),
+        ..Default::default()
+    });
+    for (act, want) in [(Activation::Linear, 10.0), (Activation::Relu, 10.0)] {
+        let l = Layer {
+            kind: Kind::Deconv,
+            c_in: 1,
+            c_out: 1,
+            k: 3,
+            s: 1,
+            p: 1,
+            h_in: 1,
+            w_in: 1,
+            act,
+        };
+        let plan = Arc::new(ModelPlan {
+            model: "golden".into(),
+            input_shape: (1, 1, 1),
+            output_shape: (1, 1, 1),
+            layers: vec![planner.compile_layer(&l, w.clone())],
+        });
+        let x = Tensor3::from_vec(1, 1, 1, vec![2.0]);
+        let run = Engine::with_workers(plan.clone(), 2).run(&x);
+        assert_eq!(run.y.at(0, 0, 0), want, "{act:?}");
+        // f32 tier: exact integers at both precisions -> bitwise 10.0
+        let run32 = Engine::with_workers(Arc::new(plan.lower::<f32>()), 2)
+            .run(&Tensor3::<f32>::from_vec(1, 1, 1, vec![2.0]));
+        assert_eq!(run32.y.at(0, 0, 0), want as f32, "{act:?} f32");
+    }
+    // a negative input flips the sign and Relu clamps it to exactly 0
+    let l = Layer {
+        kind: Kind::Deconv,
+        c_in: 1,
+        c_out: 1,
+        k: 3,
+        s: 1,
+        p: 1,
+        h_in: 1,
+        w_in: 1,
+        act: Activation::Relu,
+    };
+    let plan = ModelPlan {
+        model: "golden-neg".into(),
+        input_shape: (1, 1, 1),
+        output_shape: (1, 1, 1),
+        layers: vec![planner.compile_layer(&l, w)],
+    };
+    let run = Engine::with_workers(plan, 1).run(&Tensor3::from_vec(1, 1, 1, vec![-2.0]));
+    assert_eq!(run.y.at(0, 0, 0), 0.0);
+}

@@ -127,7 +127,7 @@ fn native_runtime_serves_concurrent_batches_on_one_pool() {
     let wino = rt.engine("dcgan", "winograd").expect("route");
     assert!(Arc::ptr_eq(wino.pool(), rt.pool()), "route engines must share the server pool");
 
-    let entry_len = wino.plan().input_len() * 4;
+    let entry_len = wino.input_len() * 4;
     let input: Vec<f32> = (0..entry_len).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
     let want = rt.execute("dcgan_winograd_b4", &input).expect("reference execute");
 

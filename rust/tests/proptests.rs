@@ -16,7 +16,7 @@ use wingan::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use wingan::coordinator::request::GenRequest;
 use wingan::engine::{self, Engine, ModelPlan, PlanOptions, Planner, Select};
 use wingan::gan::workload::{layer_mults, Method};
-use wingan::gan::zoo::{self, Gan, Kind, Layer, Scale};
+use wingan::gan::zoo::{self, Activation, Gan, Kind, Layer, Scale};
 use wingan::prop::forall;
 use wingan::tdc;
 use wingan::util::prng::Rng;
@@ -131,6 +131,7 @@ fn prop_sparse_engine_work_matches_structural_zero_count() {
                 p: c.p,
                 h_in: c.x.h,
                 w_in: c.x.w,
+                act: Activation::Linear,
             };
             let want = layer_mults(&l, Method::Winograd);
             if win.events.mults == want {
@@ -247,6 +248,7 @@ fn prop_winograd_engine_bitwise_equals_per_tile_dataflow() {
                 p: c.p,
                 h_in: c.x.h,
                 w_in: c.x.w,
+                act: Activation::Linear,
             };
             let planner = Planner::new(PlanOptions {
                 select: Select::Force(Method::Winograd),
@@ -354,6 +356,7 @@ fn prop_cycle_model_monotone_in_workload() {
                 p: tdc::default_padding(k, s),
                 h_in: rng.int_in(4, 32),
                 w_in: rng.int_in(4, 32),
+                act: Activation::Linear,
             }
         },
         |l| {
@@ -396,6 +399,7 @@ fn prop_cycle_model_never_beats_both_bounds() {
                 p: tdc::default_padding(k, s),
                 h_in: rng.int_in(4, 64),
                 w_in: rng.int_in(4, 64),
+                act: Activation::Linear,
             }
         },
         |l| {
@@ -479,10 +483,18 @@ fn gen_model_case(rng: &mut Rng) -> ModelCase {
     let mut h = rng.int_in(1, 4);
     let c0 = c;
     let h0 = h;
-    for _ in 0..n_layers {
+    for li in 0..n_layers {
         let (k, s) = [(5usize, 2usize), (4, 2), (3, 1)][rng.below(3)];
         let c_next = rng.int_in(1, 4);
-        layers.push(Layer::deconv(c, c_next, k, s, h));
+        // random activations on the hand-off path (zoo-style: relu-ish
+        // hidden layers, tanh-able output layer) — every engine contract
+        // must hold with them in the chain
+        let act = if li + 1 == n_layers {
+            [Activation::Linear, Activation::Tanh][rng.below(2)]
+        } else {
+            [Activation::Linear, Activation::Relu, Activation::LeakyRelu][rng.below(3)]
+        };
+        layers.push(Layer::deconv(c, c_next, k, s, h).with_act(act));
         c = c_next;
         h *= s;
     }
@@ -580,7 +592,7 @@ fn prop_engine_events_sum_per_layer() {
         if sum == run.events && run.events.mults > 0 {
             Ok(())
         } else {
-            Err(format!("per-layer {:?} != total {:?}", sum, run.events))
+            Err(format!("per-layer {sum:?} != total {:?}", run.events))
         }
     });
 }
@@ -623,6 +635,142 @@ fn engine_pinned_to_reference_on_all_four_zoo_generators() {
             fast.events.mults,
             run.events.mults
         );
+    }
+}
+
+/// PR-4 precision-tier contract, randomized: an f32-lowered plan tracks
+/// the f64 reference within single-precision accumulation error, at every
+/// worker count, with identical Events — and stays bitwise worker-count
+/// invariant like the f64 tier.
+#[test]
+fn prop_f32_plans_track_f64_reference_and_are_worker_invariant() {
+    forall(
+        "f32 plan ~= f64 reference, bitwise across workers",
+        16,
+        0xF3270,
+        gen_model_case,
+        |c| {
+            let plan64 = Arc::new(Planner::default().compile(&c.gan, c.weights.clone()));
+            let plan32 = Arc::new(plan64.lower::<f32>());
+            let want = engine::reference_forward(&plan64, &c.x);
+            let x32: Tensor3<f32> = c.x.cast_to();
+            let r64 = Engine::with_workers(plan64.clone(), 2).run(&c.x);
+            let r1 = Engine::with_workers(plan32.clone(), 1).run(&x32);
+            let r3 = Engine::with_workers(plan32.clone(), 3).run(&x32);
+            if r1.y.max_abs_diff(&r3.y) != 0.0 {
+                return Err("f32 worker count changed the bits".into());
+            }
+            if r1.events != r3.events || r1.events != r64.events {
+                return Err(format!(
+                    "events must be precision/worker independent: {:?} vs {:?} vs {:?}",
+                    r1.events, r3.events, r64.events
+                ));
+            }
+            // f32 inputs/weights are the rounded f64 ones, so the output
+            // error is bounded by accumulation noise: scale-relative 1e-4
+            // is ~1000 ulps of headroom at these tiny channel counts
+            let scale = want.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            let rel = r1.y.cast_to::<f64>().max_abs_diff(&want) / scale;
+            if rel < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("f32 relative diff {rel}"))
+            }
+        },
+    );
+}
+
+/// The blocked GEMM micro-kernel's bitwise contract at the f32 tier: for
+/// every phase of every kernel class, the stripe-batched blocked kernel
+/// reproduces the per-tile com-PE multiply bit for bit in f32 — the same
+/// property `prop_batched_gemm_bitwise_equals_per_tile_multiply` pins in
+/// f64 (the f32 operands are the casts of the f64 ones, so both tiers of
+/// the kernel face identical inputs).
+#[test]
+fn prop_batched_gemm_bitwise_equals_per_tile_multiply_f32() {
+    forall("blocked GEMM == per-tile com-PE, bitwise, f32", 32, 0x6E32, gen_stripe_case, |c| {
+        let (c_in, c_out) = (c.x.c, c.w.c_out);
+        let x32: Tensor3<f32> = c.x.cast_to();
+        for ph in &tdc::decompose(&c.w, c.s, c.p) {
+            let rf: wingan::winograd::layout::ReorderedFilter<f32> =
+                reorder_filter(ph).cast_to();
+            let mut v = vec![0.0f32; 16 * c_in * c.tiles];
+            for tx in 0..c.tiles {
+                let vt = reorder_input_tile(&x32, 0, tx);
+                for pos in 0..16 {
+                    for ci in 0..c_in {
+                        v[(pos * c_in + ci) * c.tiles + tx] = vt.at(pos, ci);
+                    }
+                }
+            }
+            let mut m = vec![1.0f32; c_out * 16 * c.tiles]; // dirty: kernel must zero it
+            let mults = engine_multiply_batch(&rf, &v, c.tiles, &mut m);
+            let mut want_mults = 0;
+            for tx in 0..c.tiles {
+                let vt = reorder_input_tile(&x32, 0, tx);
+                let (m_acc, per_tile) = engine_multiply(&rf, &vt);
+                want_mults += per_tile;
+                for co in 0..c_out {
+                    for pos in 0..16 {
+                        let got = m[(co * 16 + pos) * c.tiles + tx];
+                        let want = m_acc[co][pos / 4][pos % 4];
+                        if got != want {
+                            return Err(format!(
+                                "f32 case {:?} tile {tx} pos {pos} co {co}: {got} != {want}",
+                                rf.case
+                            ));
+                        }
+                    }
+                }
+            }
+            if mults != want_mults {
+                return Err(format!("mults {mults} != per-tile total {want_mults}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Full-zoo f32 pin: every Table-I generator served at the f32 tier is
+/// bitwise invariant to worker count *and* batch schedule with identical
+/// Events, and tracks the f64 reference within tolerance.
+#[test]
+fn f32_zoo_bitwise_schedule_invariant_and_within_tolerance() {
+    let mut rng = Rng::new(0x320);
+    for g in zoo::all(Scale::Tiny) {
+        let plan64 = Arc::new(Planner::default().compile_seeded(&g, 17));
+        let plan32 = Arc::new(plan64.lower::<f32>());
+        let (c, h, w) = plan64.input_shape;
+        let xs64: Vec<Tensor3> =
+            (0..3).map(|_| Tensor3::from_vec(c, h, w, rng.normal_vec(c * h * w))).collect();
+        let xs32: Vec<Tensor3<f32>> = xs64.iter().map(|x| x.cast_to()).collect();
+
+        let e2 = Engine::with_workers(plan32.clone(), 2);
+        let sample = e2.run_batch_with(&xs32, wingan::engine::BatchSchedule::SampleLevel);
+        let stripe = e2.run_batch_with(&xs32, wingan::engine::BatchSchedule::StripeLevel);
+        let e5 = Engine::with_workers(plan32.clone(), 5);
+        let wide = e5.run_batch_with(&xs32, wingan::engine::BatchSchedule::StripeLevel);
+        for i in 0..xs32.len() {
+            assert_eq!(
+                sample[i].y.max_abs_diff(&stripe[i].y),
+                0.0,
+                "{} sample {i}: f32 schedules must agree bit for bit",
+                g.name
+            );
+            assert_eq!(
+                stripe[i].y.max_abs_diff(&wide[i].y),
+                0.0,
+                "{} sample {i}: f32 worker counts must agree bit for bit",
+                g.name
+            );
+            assert_eq!(sample[i].events, stripe[i].events, "{} sample {i}", g.name);
+            assert_eq!(stripe[i].events, wide[i].events, "{} sample {i}", g.name);
+
+            let want = engine::reference_forward(&plan64, &xs64[i]);
+            let scale = want.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            let rel = stripe[i].y.cast_to::<f64>().max_abs_diff(&want) / scale;
+            assert!(rel < 1e-3, "{} sample {i}: f32 vs f64 reference rel {rel}", g.name);
+        }
     }
 }
 
