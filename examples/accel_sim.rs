@@ -15,6 +15,8 @@ use wingan::util::tensor::{Filter4, Tensor3};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    // examples take flags only; a stray bare word is a forgotten flag name
+    args.reject_bare_args().map_err(anyhow::Error::msg)?;
     let wanted = args.get_or("model", "dcgan").to_string();
     let cfg = AccelConfig::default();
 

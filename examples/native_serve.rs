@@ -25,6 +25,8 @@ use wingan::util::prng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    // examples take flags only; a stray bare word is a forgotten flag name
+    args.reject_bare_args().map_err(anyhow::Error::msg)?;
     let model = model_id(args.get_or("model", "dcgan"));
     let n_requests = args.get_usize("requests", 32).map_err(anyhow::Error::msg)?;
     let workers = args.get_workers().map_err(anyhow::Error::msg)?;

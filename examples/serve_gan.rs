@@ -21,6 +21,8 @@ use wingan::util::prng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    // examples take flags only; a stray bare word is a forgotten flag name
+    args.reject_bare_args().map_err(anyhow::Error::msg)?;
     let model = args.get_or("model", "dcgan").to_string();
     let n_requests = args.get_usize("requests", 96).map_err(anyhow::Error::msg)?;
     let dir = args.get_or("artifacts", "artifacts");

@@ -8,6 +8,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 use wingan::accel::functional::{phase_padded, run_winograd_deconv};
 use wingan::accel::{simulate_model, AccelConfig};
+use wingan::artifact::{AnyPlan, PlanKey, PlanStore};
+use wingan::engine::Precision;
 use wingan::benchlib::{black_box, speedup, speedup_line, Bench, BenchReport};
 use wingan::engine::pool::WorkerPool;
 use wingan::engine::BatchSchedule;
@@ -269,6 +271,49 @@ fn main() {
     report.metric("f64_tiles_per_sec_1w", m_batch1.throughput(tiles_per_run as usize));
     report.metric("f64_tiles_per_sec_parallel", m_batchn.throughput(tiles_per_run as usize));
 
+    // --- plan artifacts: AOT compile vs warm artifact load ---------------
+    // PR 5's cold-start story: `wingan serve --plan-store` replaces the
+    // startup recompile (phase decomposition + G g Gᵀ transforms + reorder
+    // + DSE race, per route) with one file read + checksum + decode. This
+    // is the head-to-head on the same paper-scale DCGAN winograd plan the
+    // sections above execute.
+    let store_dir =
+        std::env::temp_dir().join(format!("wingan-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = PlanStore::open(&store_dir);
+    let wkey = PlanKey::new("dcgan", Scale::Paper, Precision::F64, "winograd", 7);
+    store.publish(&wkey, &*wplan).expect("publish paper-scale plan artifact");
+    // round-trip gate on every bench run: the loaded plan must execute
+    // bit-identically to the freshly compiled one
+    {
+        let loaded = match store.load_uncached(&wkey).expect("load paper-scale artifact") {
+            AnyPlan::F64(p) => p,
+            AnyPlan::F32(_) => unreachable!("published f64"),
+        };
+        let y_loaded = Engine::with_workers(loaded, 1).run(&wx).y;
+        assert_eq!(
+            y_loaded.max_abs_diff(&we1.run(&wx).y),
+            0.0,
+            "artifact round trip must be bitwise invisible"
+        );
+    }
+    let m_plan_build = wb.run("plan: cold compile DCGAN-paper (winograd route)", || {
+        black_box(wplanner.compile_seeded(&zoo::dcgan(Scale::Paper), 7).layers.len())
+    });
+    let m_plan_load = wb.run("plan: artifact load DCGAN-paper (read+checksum+decode)", || {
+        black_box(store.load_uncached(&wkey).expect("artifact load").n_layers())
+    });
+    println!(
+        "{}",
+        speedup_line("artifact load vs cold compile (startup path)", &m_plan_build, &m_plan_load)
+    );
+    report.record(&m_plan_build);
+    report.record(&m_plan_load);
+    report.metric("plan_build_ns", m_plan_build.median() * 1e9);
+    report.metric("artifact_load_ns", m_plan_load.median() * 1e9);
+    report.metric("artifact_load_speedup", speedup(&m_plan_build, &m_plan_load));
+    let _ = std::fs::remove_dir_all(&store_dir);
+
     // --- pool: spawn-overhead elimination --------------------------------
     // PR 1 spawned scoped threads per phase per layer per request; the
     // persistent pool pays thread creation once at startup. Near-empty
@@ -384,7 +429,7 @@ fn main() {
     report.record(&m_seq);
     report.record(&m_smp);
     report.metric("batch8_sample_level_speedup", speedup(&m_seq, &m_smp));
-    let path = std::path::Path::new("BENCH_pr4.json");
+    let path = std::path::Path::new("BENCH_pr5.json");
     report.write(path).expect("write bench trajectory json");
     println!("wrote {} (perf trajectory)", path.display());
 }

@@ -1,0 +1,1211 @@
+//! Self-describing binary codec for compiled plans — format v1.
+//!
+//! The paper's whole pipeline is ahead-of-time: phase decomposition,
+//! `G g Gᵀ` filter transforms, sparsity reordering and DSE method selection
+//! all finish before the first request. This codec makes that work a
+//! **deployment artifact**: a [`crate::engine::ModelPlan`] (at either
+//! precision tier) serializes to a versioned, checksummed byte stream that
+//! round-trips **bit-exactly** — a loaded plan executes identically, bit
+//! for bit, to the plan that was published (pinned by the round-trip
+//! proptests across the zoo).
+//!
+//! # Wire format (all integers little-endian)
+//!
+//! ```text
+//! [8]  magic  "WGANPLAN"
+//! [4]  u32    format version (currently 1)
+//! [1]  u8     precision tag  (1 = f32, 2 = f64)
+//! then one META section followed by exactly `layer_count` LAYR sections:
+//!   [4]  u32  section tag ("META" / "LAYR" as LE ASCII)
+//!   [8]  u64  payload byte length
+//!   [..]      payload
+//!   [8]  u64  FNV-1a 64 checksum of the payload
+//! ```
+//!
+//! The META payload carries the model/deployment metadata (model name +
+//! route id, zoo scale, route method, weight seed, input/output shapes,
+//! layer count); each LAYR payload carries one complete
+//! [`crate::engine::LayerPlan`] — layer geometry + activation, the compiled
+//! method decision, raw weights, the TDC phase filter bank, the reordered
+//! Winograd slabs with their live-position lists, tile/line-buffer
+//! geometry. Scalar words are written at the plan's native width (4 bytes
+//! f32 / 8 bytes f64), so the f32 tier's artifacts are half the size —
+//! the same bandwidth story as the serving fast path.
+//!
+//! # Safety contract
+//!
+//! [`decode`] never panics on hostile bytes: every read is bounds-checked
+//! ([`ArtifactError::Truncated`]), every section is checksummed
+//! ([`ArtifactError::ChecksumMismatch`]), every enum tag and every
+//! structural invariant the execution engine relies on (weight-bank shapes,
+//! live positions `< 16`, reordered-slab lengths, tile geometry) is
+//! validated ([`ArtifactError::Malformed`]). No external serde dependency —
+//! the build stays offline.
+
+use crate::engine::plan::{LayerPlan, ModelPlan, TileGeometry};
+use crate::engine::serve::model_id;
+use crate::gan::workload::Method;
+use crate::gan::zoo::{Activation, Kind, Layer};
+use crate::tdc::{self, PhaseFilter};
+use crate::util::elem::{Elem, Precision};
+use crate::util::tensor::Filter4;
+use crate::winograd::layout::ReorderedFilter;
+use crate::winograd::sparsity::Case;
+use crate::winograd::transforms::M as M_TILE;
+use std::fmt;
+use std::path::PathBuf;
+
+/// Leading file magic: identifies a wingan plan artifact.
+pub const MAGIC: [u8; 8] = *b"WGANPLAN";
+/// Current (and only) on-disk format version. Bump on any wire-format
+/// change; readers reject every other version with
+/// [`ArtifactError::UnsupportedVersion`] (see README "Artifacts & cold
+/// start" for the versioning policy).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Section tag for the model-metadata section ("META" as LE ASCII).
+const TAG_META: u32 = u32::from_le_bytes(*b"META");
+/// Section tag for a per-layer plan section ("LAYR" as LE ASCII).
+const TAG_LAYER: u32 = u32::from_le_bytes(*b"LAYR");
+
+/// Sanity cap on the declared layer count — no zoo generator comes close;
+/// anything larger is a corrupt or hostile header, not a model.
+const MAX_LAYERS: usize = 4096;
+/// Sanity cap on channel counts and spatial extents (paper scale tops out
+/// at 1024 channels / 64 pixels; 2²⁰ leaves generous headroom while
+/// keeping every derived product far from overflow).
+const MAX_EXTENT: usize = 1 << 20;
+/// Sanity cap on kernel width (paper kernels are 3–5).
+const MAX_KERNEL: usize = 512;
+/// Sanity cap on stride — also bounds the phase count `S²`, so a hostile
+/// stride can never drive a pre-payload allocation.
+const MAX_STRIDE: usize = 64;
+
+/// Typed error for every way loading a plan artifact can fail. The serving
+/// path treats [`ArtifactError::Missing`] as a cold store (silent fallback
+/// to in-process compilation) and every other variant as a load failure
+/// (counted, logged, then the same clean fallback).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ArtifactError {
+    /// No artifact file at the key's path — a cold store, not a failure.
+    Missing {
+        /// the path that was probed
+        path: PathBuf,
+    },
+    /// Filesystem error other than not-found while reading or publishing.
+    Io {
+        /// the path being read or written
+        path: PathBuf,
+        /// the rendered `std::io::Error`
+        detail: String,
+    },
+    /// The file does not start with [`MAGIC`] — not a plan artifact.
+    BadMagic {
+        /// the first 8 bytes found instead
+        found: [u8; 8],
+    },
+    /// The artifact was written by an incompatible format version.
+    UnsupportedVersion {
+        /// the version tag in the file
+        found: u32,
+    },
+    /// The byte stream ended before a declared structure completed.
+    Truncated {
+        /// what was being read when the bytes ran out
+        context: String,
+    },
+    /// A section's payload does not match its stored FNV-1a checksum.
+    ChecksumMismatch {
+        /// the section whose checksum failed ("META", "LAYR[i]")
+        section: String,
+    },
+    /// The artifact carries a different precision tier than requested.
+    PrecisionMismatch {
+        /// the tier tagged in the file
+        artifact: Precision,
+        /// the tier the store key asked for
+        requested: Precision,
+    },
+    /// A header field disagrees with the store key used to load it
+    /// (model id, scale, method or weight seed).
+    KeyMismatch {
+        /// which header field mismatched
+        field: &'static str,
+        /// the value in the artifact
+        artifact: String,
+        /// the value the key requested
+        requested: String,
+    },
+    /// Structurally invalid payload (bad enum tag, inconsistent shapes,
+    /// trailing bytes, ...).
+    Malformed {
+        /// human-readable description of the violation
+        detail: String,
+    },
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::Missing { path } => {
+                write!(f, "no plan artifact at {}", path.display())
+            }
+            ArtifactError::Io { path, detail } => {
+                write!(f, "plan artifact io error at {}: {detail}", path.display())
+            }
+            ArtifactError::BadMagic { found } => {
+                write!(f, "not a plan artifact (magic {found:02x?})")
+            }
+            ArtifactError::UnsupportedVersion { found } => {
+                write!(f, "unsupported plan-artifact format version {found} (this build reads v{FORMAT_VERSION})")
+            }
+            ArtifactError::Truncated { context } => {
+                write!(f, "plan artifact truncated while reading {context}")
+            }
+            ArtifactError::ChecksumMismatch { section } => {
+                write!(f, "plan artifact checksum mismatch in section {section}")
+            }
+            ArtifactError::PrecisionMismatch { artifact, requested } => {
+                write!(f, "plan artifact is {artifact}, but {requested} was requested")
+            }
+            ArtifactError::KeyMismatch { field, artifact, requested } => {
+                write!(f, "plan artifact {field} is '{artifact}', but the store key says '{requested}'")
+            }
+            ArtifactError::Malformed { detail } => {
+                write!(f, "malformed plan artifact: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+/// Shorthand result for codec/store operations.
+pub type ArtifactResult<T> = Result<T, ArtifactError>;
+
+/// FNV-1a 64-bit checksum (the section integrity check: fast, dependency
+/// free, and plenty for detecting torn writes and bit rot — artifacts are
+/// trusted local files, not an authentication boundary).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// little-endian writer primitives
+// ---------------------------------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_elems<E: Elem>(out: &mut Vec<u8>, data: &[E]) {
+    out.reserve(data.len() * E::PRECISION.word_bytes());
+    for &v in data {
+        v.write_le(out);
+    }
+}
+
+fn put_filter<E: Elem>(out: &mut Vec<u8>, f: &Filter4<E>) {
+    put_usize(out, f.c_in);
+    put_usize(out, f.c_out);
+    put_usize(out, f.kh);
+    put_usize(out, f.kw);
+    put_elems(out, &f.data);
+}
+
+fn put_section(out: &mut Vec<u8>, tag: u32, payload: &[u8]) {
+    put_u32(out, tag);
+    put_u64(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+    put_u64(out, fnv1a64(payload));
+}
+
+// ---------------------------------------------------------------------------
+// bounds-checked reader
+// ---------------------------------------------------------------------------
+
+/// Cursor over an artifact byte buffer. Every read is bounds-checked and
+/// returns a typed error instead of panicking — the whole no-panic
+/// guarantee of [`decode`] rests on this type.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, context: &str) -> ArtifactResult<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len()).ok_or_else(|| {
+            ArtifactError::Truncated { context: context.to_string() }
+        })?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self, context: &str) -> ArtifactResult<u8> {
+        Ok(self.take(1, context)?[0])
+    }
+
+    fn u32(&mut self, context: &str) -> ArtifactResult<u32> {
+        let b = self.take(4, context)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, context: &str) -> ArtifactResult<u64> {
+        let b = self.take(8, context)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn i64(&mut self, context: &str) -> ArtifactResult<i64> {
+        Ok(self.u64(context)? as i64)
+    }
+
+    fn usize(&mut self, context: &str) -> ArtifactResult<usize> {
+        usize::try_from(self.u64(context)?).map_err(|_| ArtifactError::Malformed {
+            detail: format!("{context}: value exceeds this platform's usize"),
+        })
+    }
+
+    fn string(&mut self, context: &str) -> ArtifactResult<String> {
+        let len = self.usize(context)?;
+        let bytes = self.take(len, context)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| ArtifactError::Malformed {
+            detail: format!("{context}: string is not valid UTF-8"),
+        })
+    }
+
+    /// Read `count` scalar words at `E`'s native width. The byte length is
+    /// computed with checked arithmetic and bounds-checked *before* any
+    /// allocation, so a hostile count cannot trigger an allocation bomb.
+    fn elems<E: Elem>(&mut self, count: usize, context: &str) -> ArtifactResult<Vec<E>> {
+        let word = E::PRECISION.word_bytes();
+        let n = count.checked_mul(word).ok_or_else(|| ArtifactError::Malformed {
+            detail: format!("{context}: element count overflows"),
+        })?;
+        let bytes = self.take(n, context)?;
+        Ok(bytes.chunks_exact(word).map(E::from_le).collect())
+    }
+
+    fn filter<E: Elem>(&mut self, context: &str) -> ArtifactResult<Filter4<E>> {
+        let c_in = self.usize(context)?;
+        let c_out = self.usize(context)?;
+        let kh = self.usize(context)?;
+        let kw = self.usize(context)?;
+        let numel = c_in
+            .checked_mul(c_out)
+            .and_then(|v| v.checked_mul(kh))
+            .and_then(|v| v.checked_mul(kw))
+            .ok_or_else(|| ArtifactError::Malformed {
+                detail: format!("{context}: filter shape overflows"),
+            })?;
+        let data = self.elems::<E>(numel, context)?;
+        Ok(Filter4 { c_in, c_out, kh, kw, data })
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+fn read_section<'a>(r: &mut Reader<'a>, want: u32, name: &str) -> ArtifactResult<&'a [u8]> {
+    let tag = r.u32(&format!("{name} section tag"))?;
+    if tag != want {
+        return Err(ArtifactError::Malformed {
+            detail: format!("expected {name} section, found tag {tag:#010x}"),
+        });
+    }
+    let len = r.usize(&format!("{name} section length"))?;
+    let payload = r.take(len, &format!("{name} section payload"))?;
+    let stored = r.u64(&format!("{name} section checksum"))?;
+    if stored != fnv1a64(payload) {
+        return Err(ArtifactError::ChecksumMismatch { section: name.to_string() });
+    }
+    Ok(payload)
+}
+
+// ---------------------------------------------------------------------------
+// enum tags
+// ---------------------------------------------------------------------------
+
+fn precision_tag(p: Precision) -> u8 {
+    match p {
+        Precision::F32 => 1,
+        Precision::F64 => 2,
+    }
+}
+
+fn precision_from_tag(t: u8) -> ArtifactResult<Precision> {
+    match t {
+        1 => Ok(Precision::F32),
+        2 => Ok(Precision::F64),
+        other => Err(ArtifactError::Malformed { detail: format!("unknown precision tag {other}") }),
+    }
+}
+
+fn kind_tag(k: Kind) -> u8 {
+    match k {
+        Kind::Deconv => 0,
+        Kind::Conv => 1,
+    }
+}
+
+fn kind_from_tag(t: u8) -> ArtifactResult<Kind> {
+    match t {
+        0 => Ok(Kind::Deconv),
+        1 => Ok(Kind::Conv),
+        other => Err(ArtifactError::Malformed { detail: format!("unknown layer kind tag {other}") }),
+    }
+}
+
+fn act_tag(a: Activation) -> u8 {
+    match a {
+        Activation::Linear => 0,
+        Activation::Relu => 1,
+        Activation::LeakyRelu => 2,
+        Activation::Tanh => 3,
+    }
+}
+
+fn act_from_tag(t: u8) -> ArtifactResult<Activation> {
+    match t {
+        0 => Ok(Activation::Linear),
+        1 => Ok(Activation::Relu),
+        2 => Ok(Activation::LeakyRelu),
+        3 => Ok(Activation::Tanh),
+        other => Err(ArtifactError::Malformed { detail: format!("unknown activation tag {other}") }),
+    }
+}
+
+fn method_tag(m: Method) -> u8 {
+    match m {
+        Method::ZeroPadded => 0,
+        Method::Tdc => 1,
+        Method::Winograd => 2,
+    }
+}
+
+fn method_from_tag(t: u8) -> ArtifactResult<Method> {
+    match t {
+        0 => Ok(Method::ZeroPadded),
+        1 => Ok(Method::Tdc),
+        2 => Ok(Method::Winograd),
+        other => Err(ArtifactError::Malformed { detail: format!("unknown method tag {other}") }),
+    }
+}
+
+fn case_tag(c: Case) -> u8 {
+    c.number() as u8
+}
+
+fn case_from_tag(t: u8) -> ArtifactResult<Case> {
+    match t {
+        1 => Ok(Case::Dense),
+        2 => Ok(Case::OneLine),
+        3 => Ok(Case::TwoLines),
+        other => Err(ArtifactError::Malformed { detail: format!("unknown sparsity case tag {other}") }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// encode
+// ---------------------------------------------------------------------------
+
+/// Deployment metadata stored in the artifact's META section alongside
+/// what the plan itself carries (the store key's non-derivable half).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// zoo scale label the plan was compiled at (`"tiny"` / `"small"` / ...)
+    pub scale: String,
+    /// serving route method the plan was compiled for (`"winograd"` /
+    /// `"tdc"` — i.e. which [`crate::engine::Select`] policy produced it)
+    pub method: String,
+    /// deterministic weight seed the plan was compiled from
+    pub seed: u64,
+}
+
+/// Serialize a compiled plan (at its native precision tier) plus its
+/// deployment metadata into the format-v1 byte stream. Every scalar word is
+/// written little-endian at `E`'s width; [`decode`] restores it bit-exactly.
+pub fn encode<E: Elem>(plan: &ModelPlan<E>, meta: &ArtifactMeta) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC);
+    put_u32(&mut out, FORMAT_VERSION);
+    put_u8(&mut out, precision_tag(E::PRECISION));
+
+    let mut m = Vec::new();
+    put_str(&mut m, &plan.model);
+    put_str(&mut m, &model_id(&plan.model));
+    put_str(&mut m, &meta.scale);
+    put_str(&mut m, &meta.method);
+    put_u64(&mut m, meta.seed);
+    for v in [plan.input_shape.0, plan.input_shape.1, plan.input_shape.2] {
+        put_usize(&mut m, v);
+    }
+    for v in [plan.output_shape.0, plan.output_shape.1, plan.output_shape.2] {
+        put_usize(&mut m, v);
+    }
+    put_usize(&mut m, plan.layers.len());
+    put_section(&mut out, TAG_META, &m);
+
+    for lp in &plan.layers {
+        let payload = encode_layer(lp);
+        put_section(&mut out, TAG_LAYER, &payload);
+    }
+    out
+}
+
+fn encode_layer<E: Elem>(lp: &LayerPlan<E>) -> Vec<u8> {
+    let mut p = Vec::new();
+    let l = &lp.layer;
+    put_u8(&mut p, kind_tag(l.kind));
+    for v in [l.c_in, l.c_out, l.k, l.s, l.p, l.h_in, l.w_in] {
+        put_usize(&mut p, v);
+    }
+    put_u8(&mut p, act_tag(l.act));
+    put_u8(&mut p, method_tag(lp.method));
+    put_usize(&mut p, lp.kc);
+    for v in [lp.tiles.ho_t, lp.tiles.wo_t, lp.tiles.tiles_h, lp.tiles.tiles_w] {
+        put_usize(&mut p, v);
+    }
+    put_usize(&mut p, lp.linebuf_depth);
+    put_usize(&mut p, lp.linebuf_words);
+    put_filter(&mut p, &lp.weights);
+    put_usize(&mut p, lp.phases.len());
+    for ph in &lp.phases {
+        put_filter(&mut p, &ph.g);
+        put_i64(&mut p, ph.d0y as i64);
+        put_i64(&mut p, ph.d0x as i64);
+        put_usize(&mut p, ph.ry);
+        put_usize(&mut p, ph.rx);
+    }
+    put_usize(&mut p, lp.reordered.len());
+    for rf in &lp.reordered {
+        put_u8(&mut p, case_tag(rf.case));
+        put_usize(&mut p, rf.live.len());
+        for &pos in &rf.live {
+            put_usize(&mut p, pos);
+        }
+        put_usize(&mut p, rf.c_in);
+        put_usize(&mut p, rf.c_out);
+        put_elems(&mut p, &rf.u);
+        put_i64(&mut p, rf.d0y as i64);
+        put_i64(&mut p, rf.d0x as i64);
+    }
+    p
+}
+
+// ---------------------------------------------------------------------------
+// decode
+// ---------------------------------------------------------------------------
+
+/// The parsed artifact header — everything [`decode`] learned before (and
+/// about) the plan payload. `plan inspect` renders this; the store
+/// validates it against the requested key.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactHeader {
+    /// on-disk format version (always [`FORMAT_VERSION`] after a
+    /// successful decode)
+    pub version: u32,
+    /// precision tier of every scalar word in the payload
+    pub precision: Precision,
+    /// zoo model name (e.g. `"DCGAN"`)
+    pub model: String,
+    /// route/model id (e.g. `"dcgan"`, matching the serving manifest)
+    pub model_id: String,
+    /// zoo scale label the plan was compiled at
+    pub scale: String,
+    /// serving route method the plan was compiled for
+    pub method: String,
+    /// deterministic weight seed the plan was compiled from
+    pub seed: u64,
+    /// `[C, H, W]` of one input sample
+    pub input_shape: (usize, usize, usize),
+    /// `[C, H, W]` of one output sample
+    pub output_shape: (usize, usize, usize),
+    /// number of per-layer sections (== decoded plan layers)
+    pub layers: usize,
+}
+
+/// Size record for one decoded section (`plan inspect` reports these as
+/// the artifact's payload budget).
+#[derive(Clone, Debug)]
+pub struct SectionInfo {
+    /// section name ("META", "LAYR[i]")
+    pub name: String,
+    /// payload bytes (excluding the tag/length/checksum framing)
+    pub bytes: usize,
+}
+
+/// A decoded plan at whichever precision tier the artifact was tagged
+/// with. The store wraps this in `Arc` ([`crate::artifact::AnyPlan`]) for
+/// sharing across routes.
+#[derive(Clone, Debug)]
+pub enum PlanPayload {
+    /// single-precision (serving fast tier) plan
+    F32(ModelPlan<f32>),
+    /// double-precision (reference tier) plan
+    F64(ModelPlan<f64>),
+}
+
+impl PlanPayload {
+    /// The precision tier of the decoded plan.
+    pub fn precision(&self) -> Precision {
+        match self {
+            PlanPayload::F32(_) => Precision::F32,
+            PlanPayload::F64(_) => Precision::F64,
+        }
+    }
+}
+
+/// A fully decoded artifact: header, plan, and per-section byte sizes.
+#[derive(Clone, Debug)]
+pub struct DecodedArtifact {
+    /// the parsed header/metadata
+    pub header: ArtifactHeader,
+    /// the plan, at the artifact's tagged precision
+    pub payload: PlanPayload,
+    /// per-section payload sizes, in file order (META first)
+    pub sections: Vec<SectionInfo>,
+}
+
+/// Parse the prologue: magic, format version, precision tag.
+fn decode_prologue(r: &mut Reader<'_>) -> ArtifactResult<(u32, Precision)> {
+    let magic = r.take(MAGIC.len(), "magic")?;
+    if magic != MAGIC {
+        let mut found = [0u8; 8];
+        found.copy_from_slice(magic);
+        return Err(ArtifactError::BadMagic { found });
+    }
+    let version = r.u32("format version")?;
+    if version != FORMAT_VERSION {
+        return Err(ArtifactError::UnsupportedVersion { found: version });
+    }
+    let precision = precision_from_tag(r.u8("precision tag")?)?;
+    Ok((version, precision))
+}
+
+/// Parse the checksummed META section into a header; returns the header
+/// plus the META payload's byte length (for section accounting).
+fn decode_meta(
+    r: &mut Reader<'_>,
+    version: u32,
+    precision: Precision,
+) -> ArtifactResult<(ArtifactHeader, usize)> {
+    let meta = read_section(r, TAG_META, "META")?;
+    let mut mr = Reader::new(meta);
+    let model = mr.string("model name")?;
+    let model_id_field = mr.string("model id")?;
+    let scale = mr.string("scale label")?;
+    let method = mr.string("route method")?;
+    let seed = mr.u64("weight seed")?;
+    let input_shape =
+        (mr.usize("input C")?, mr.usize("input H")?, mr.usize("input W")?);
+    let output_shape =
+        (mr.usize("output C")?, mr.usize("output H")?, mr.usize("output W")?);
+    let layer_count = mr.usize("layer count")?;
+    if !mr.done() {
+        return Err(ArtifactError::Malformed { detail: "trailing bytes in META section".into() });
+    }
+    if layer_count == 0 || layer_count > MAX_LAYERS {
+        return Err(ArtifactError::Malformed {
+            detail: format!("implausible layer count {layer_count}"),
+        });
+    }
+    let header = ArtifactHeader {
+        version,
+        precision,
+        model,
+        model_id: model_id_field,
+        scale,
+        method,
+        seed,
+        input_shape,
+        output_shape,
+        layers: layer_count,
+    };
+    Ok((header, meta.len()))
+}
+
+/// Decode only the header (prologue + checksummed META section), without
+/// touching the — potentially multi-megabyte — layer payloads. The store
+/// validates keys against this before paying for a full [`decode`], so a
+/// mismatched artifact is rejected near-free.
+pub fn decode_header(bytes: &[u8]) -> ArtifactResult<ArtifactHeader> {
+    let mut r = Reader::new(bytes);
+    let (version, precision) = decode_prologue(&mut r)?;
+    Ok(decode_meta(&mut r, version, precision)?.0)
+}
+
+/// Decode a plan artifact from its byte stream. Never panics: corrupt or
+/// hostile input yields a typed [`ArtifactError`] (see the module docs for
+/// the validation contract).
+pub fn decode(bytes: &[u8]) -> ArtifactResult<DecodedArtifact> {
+    let mut r = Reader::new(bytes);
+    let (version, precision) = decode_prologue(&mut r)?;
+    let (header, meta_len) = decode_meta(&mut r, version, precision)?;
+    match precision {
+        Precision::F32 => {
+            let (plan, sections) = decode_layers::<f32>(&mut r, &header, meta_len)?;
+            Ok(DecodedArtifact { header, payload: PlanPayload::F32(plan), sections })
+        }
+        Precision::F64 => {
+            let (plan, sections) = decode_layers::<f64>(&mut r, &header, meta_len)?;
+            Ok(DecodedArtifact { header, payload: PlanPayload::F64(plan), sections })
+        }
+    }
+}
+
+fn decode_layers<E: Elem>(
+    r: &mut Reader<'_>,
+    header: &ArtifactHeader,
+    meta_len: usize,
+) -> ArtifactResult<(ModelPlan<E>, Vec<SectionInfo>)> {
+    let mut sections = vec![SectionInfo { name: "META".into(), bytes: meta_len }];
+    let mut layers = Vec::with_capacity(header.layers);
+    for i in 0..header.layers {
+        let name = format!("LAYR[{i}]");
+        let payload = read_section(r, TAG_LAYER, &name)?;
+        let mut lr = Reader::new(payload);
+        let lp = decode_layer::<E>(&mut lr, i)?;
+        if !lr.done() {
+            return Err(ArtifactError::Malformed {
+                detail: format!("trailing bytes in layer {i} section"),
+            });
+        }
+        sections.push(SectionInfo { name, bytes: payload.len() });
+        layers.push(lp);
+    }
+    if !r.done() {
+        return Err(ArtifactError::Malformed {
+            detail: "trailing data after the last section".into(),
+        });
+    }
+
+    let (input_shape, output_shape) = (header.input_shape, header.output_shape);
+    let plan = ModelPlan { model: header.model.clone(), layers, input_shape, output_shape };
+    // the full layer-to-layer shape chain the engine walks — rejected at
+    // load time so a checksummed-but-inconsistent artifact can never index
+    // out of bounds (or panic) on the serving path
+    let mut cur = input_shape;
+    for (i, lp) in plan.layers.iter().enumerate() {
+        let l = &lp.layer;
+        if (l.c_in, l.h_in, l.w_in) != cur {
+            return Err(ArtifactError::Malformed {
+                detail: format!(
+                    "layer {i} input geometry ({}, {}, {}) breaks the shape chain (expected \
+                     ({}, {}, {}))",
+                    l.c_in, l.h_in, l.w_in, cur.0, cur.1, cur.2
+                ),
+            });
+        }
+        if l.kind == Kind::Conv {
+            // the conv datapath derives its output extent from (K, S, P);
+            // it must agree with the declared h_out/w_out the chain uses
+            if l.h_in + 2 * l.p < l.k
+                || l.w_in + 2 * l.p < l.k
+                || (l.h_in + 2 * l.p - l.k) / l.s + 1 != l.h_out()
+                || (l.w_in + 2 * l.p - l.k) / l.s + 1 != l.w_out()
+            {
+                return Err(ArtifactError::Malformed {
+                    detail: format!("layer {i}: conv geometry is inconsistent"),
+                });
+            }
+        }
+        cur = (l.c_out, l.h_out(), l.w_out());
+    }
+    if cur != output_shape {
+        return Err(ArtifactError::Malformed {
+            detail: format!(
+                "declared output shape ({}, {}, {}) disagrees with the layer chain's \
+                 ({}, {}, {})",
+                output_shape.0, output_shape.1, output_shape.2, cur.0, cur.1, cur.2
+            ),
+        });
+    }
+    Ok((plan, sections))
+}
+
+fn decode_layer<E: Elem>(r: &mut Reader<'_>, i: usize) -> ArtifactResult<LayerPlan<E>> {
+    let bad = |detail: String| ArtifactError::Malformed { detail: format!("layer {i}: {detail}") };
+
+    let kind = kind_from_tag(r.u8("layer kind")?)?;
+    let c_in = r.usize("layer c_in")?;
+    let c_out = r.usize("layer c_out")?;
+    let k = r.usize("layer k")?;
+    let s = r.usize("layer s")?;
+    let p = r.usize("layer p")?;
+    let h_in = r.usize("layer h_in")?;
+    let w_in = r.usize("layer w_in")?;
+    let act = act_from_tag(r.u8("layer activation")?)?;
+    let layer = Layer { kind, c_in, c_out, k, s, p, h_in, w_in, act };
+    if c_in == 0 || c_out == 0 || k == 0 || s == 0 || h_in == 0 || w_in == 0 {
+        return Err(bad("zero-sized layer geometry".into()));
+    }
+    // geometry sanity caps: everything derived below (S² phase counts,
+    // tile geometry, output extents) stays far from usize overflow and no
+    // hostile header can drive a large pre-payload allocation
+    if c_in > MAX_EXTENT || c_out > MAX_EXTENT || h_in > MAX_EXTENT || w_in > MAX_EXTENT {
+        return Err(bad("implausible channel/spatial extent".into()));
+    }
+    if k > MAX_KERNEL || s > MAX_STRIDE || p >= k {
+        return Err(bad(format!("implausible kernel geometry K={k} S={s} P={p}")));
+    }
+
+    let method = method_from_tag(r.u8("layer method")?)?;
+    let kc = r.usize("layer kc")?;
+    let tiles = TileGeometry {
+        ho_t: r.usize("tiles ho_t")?,
+        wo_t: r.usize("tiles wo_t")?,
+        tiles_h: r.usize("tiles tiles_h")?,
+        tiles_w: r.usize("tiles tiles_w")?,
+    };
+    let linebuf_depth = r.usize("linebuf depth")?;
+    let linebuf_words = r.usize("linebuf words")?;
+
+    let weights = r.filter::<E>("layer weights")?;
+    if (weights.c_in, weights.c_out) != (c_in, c_out) || (weights.kh, weights.kw) != (k, k) {
+        return Err(bad("weight bank shape disagrees with the layer geometry".into()));
+    }
+
+    // the structural invariants the execution engine indexes by — anything
+    // violating them could read out of bounds, so they are load errors
+    let expected_kc = match kind {
+        Kind::Deconv => tdc::kc(k, s),
+        Kind::Conv => k,
+    };
+    if kc != expected_kc {
+        return Err(bad(format!("kc {kc} != derived K_C {expected_kc}")));
+    }
+
+    let n_phases = r.usize("phase count")?;
+    let expected_phases = match kind {
+        Kind::Deconv => s * s,
+        Kind::Conv => 0,
+    };
+    if n_phases != expected_phases {
+        return Err(bad(format!("phase count {n_phases} != S² = {expected_phases}")));
+    }
+    let mut phases = Vec::with_capacity(n_phases);
+    for pi in 0..n_phases {
+        let g = r.filter::<E>("phase filter")?;
+        if (g.c_in, g.c_out) != (c_in, c_out) || (g.kh, g.kw) != (kc, kc) {
+            return Err(bad(format!("phase {pi} filter shape is not C_in x C_out x K_C x K_C")));
+        }
+        let d0y = r.i64("phase d0y")? as isize;
+        let d0x = r.i64("phase d0x")? as isize;
+        // the engine materializes phase-padded views with these offsets;
+        // out-of-range offsets would underflow the padding arithmetic
+        let lo = -(kc as isize - 1);
+        if !(lo..=0).contains(&d0y) || !(lo..=0).contains(&d0x) {
+            return Err(bad(format!("phase {pi} offset ({d0y},{d0x}) outside [{lo},0]")));
+        }
+        let ry = r.usize("phase ry")?;
+        let rx = r.usize("phase rx")?;
+        if ry > kc || rx > kc {
+            return Err(bad(format!("phase {pi} support ({ry},{rx}) exceeds K_C {kc}")));
+        }
+        phases.push(PhaseFilter { g, d0y, d0x, ry, rx });
+    }
+
+    let n_reordered = r.usize("reordered count")?;
+    if n_reordered != 0 && n_reordered != n_phases {
+        return Err(bad(format!(
+            "reordered slab count {n_reordered} is neither 0 nor the phase count {n_phases}"
+        )));
+    }
+    if method == Method::Winograd && n_reordered == 0 {
+        return Err(bad("winograd-method layer without reordered slabs".into()));
+    }
+    // the F(2x2, 3x3) support bound the planner enforces in select_method:
+    // a Winograd-method layer with K_C > R would underflow the engine's
+    // phase-padding arithmetic at request time
+    if method == Method::Winograd && kc > crate::winograd::R {
+        return Err(bad(format!(
+            "winograd-method layer with K_C {kc} > R {} (unsupported by F(2x2,3x3))",
+            crate::winograd::R
+        )));
+    }
+    let mut reordered = Vec::with_capacity(n_reordered);
+    for ri in 0..n_reordered {
+        let case = case_from_tag(r.u8("sparsity case")?)?;
+        let n_live = r.usize("live count")?;
+        if n_live != case.live_positions() {
+            return Err(bad(format!(
+                "slab {ri}: live count {n_live} != case live positions {}",
+                case.live_positions()
+            )));
+        }
+        let mut live = Vec::with_capacity(n_live);
+        for _ in 0..n_live {
+            let pos = r.usize("live position")?;
+            // the batched GEMM indexes the gathered tile matrix by pos
+            if pos >= 16 {
+                return Err(bad(format!("slab {ri}: live position {pos} outside the 4x4 tile")));
+            }
+            live.push(pos);
+        }
+        let rf_cin = r.usize("slab c_in")?;
+        let rf_cout = r.usize("slab c_out")?;
+        if (rf_cin, rf_cout) != (c_in, c_out) {
+            return Err(bad(format!("slab {ri}: channel shape disagrees with the layer")));
+        }
+        let numel = n_live
+            .checked_mul(rf_cout)
+            .and_then(|v| v.checked_mul(rf_cin))
+            .ok_or_else(|| bad(format!("slab {ri}: size overflows")))?;
+        let u = r.elems::<E>(numel, "slab weights")?;
+        let d0y = r.i64("slab d0y")? as isize;
+        let d0x = r.i64("slab d0x")? as isize;
+        // reorder_filter copies the phase's offsets verbatim; anything else
+        // is corruption (and would hand consumers an unguarded underflow)
+        if (d0y, d0x) != (phases[ri].d0y, phases[ri].d0x) {
+            return Err(bad(format!(
+                "slab {ri}: offsets ({d0y},{d0x}) disagree with the phase's ({},{})",
+                phases[ri].d0y, phases[ri].d0x
+            )));
+        }
+        reordered.push(ReorderedFilter { case, live, c_in: rf_cin, c_out: rf_cout, u, d0y, d0x });
+    }
+
+    // winograd layers execute through the precompiled tile geometry; it
+    // must be exactly what the planner derives from the layer extent
+    if method == Method::Winograd {
+        let ho_t = h_in.div_ceil(M_TILE) * M_TILE;
+        let wo_t = w_in.div_ceil(M_TILE) * M_TILE;
+        let want = TileGeometry { ho_t, wo_t, tiles_h: ho_t / M_TILE, tiles_w: wo_t / M_TILE };
+        if tiles != want {
+            return Err(bad(format!("tile geometry {tiles:?} != derived {want:?}")));
+        }
+    }
+
+    Ok(LayerPlan {
+        layer,
+        method,
+        weights,
+        phases,
+        reordered,
+        kc,
+        tiles,
+        linebuf_depth,
+        linebuf_words,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// inspect
+// ---------------------------------------------------------------------------
+
+/// Render the manifest view of one artifact's bytes — the
+/// `wingan plan inspect` output: header metadata, per-layer method +
+/// geometry rows, and per-section payload sizes.
+pub fn describe(bytes: &[u8], origin: &str) -> ArtifactResult<String> {
+    let dec = decode(bytes)?;
+    let h = &dec.header;
+    let mut out = String::new();
+    out.push_str(&format!("artifact   {origin}\n"));
+    out.push_str(&format!(
+        "format     v{} · precision {} · {} bytes on disk\n",
+        h.version,
+        h.precision,
+        bytes.len()
+    ));
+    out.push_str(&format!(
+        "model      {} ({}) · scale {} · route method {} · weight seed {}\n",
+        h.model, h.model_id, h.scale, h.method, h.seed
+    ));
+    out.push_str(&format!(
+        "shape      [{}, {}, {}] -> [{}, {}, {}] · {} layers\n",
+        h.input_shape.0,
+        h.input_shape.1,
+        h.input_shape.2,
+        h.output_shape.0,
+        h.output_shape.1,
+        h.output_shape.2,
+        h.layers
+    ));
+    match &dec.payload {
+        PlanPayload::F32(p) => describe_layers(p, &dec.sections, &mut out),
+        PlanPayload::F64(p) => describe_layers(p, &dec.sections, &mut out),
+    }
+    let total: usize = dec.sections.iter().map(|s| s.bytes).sum();
+    out.push_str(&format!(
+        "payload    {total} bytes across {} sections (META {} B)\n",
+        dec.sections.len(),
+        dec.sections[0].bytes
+    ));
+    Ok(out)
+}
+
+fn describe_layers<E: Elem>(plan: &ModelPlan<E>, sections: &[SectionInfo], out: &mut String) {
+    out.push_str(
+        "layer  kind    geometry                     method    phases  live  tiles    payload\n",
+    );
+    for (i, lp) in plan.layers.iter().enumerate() {
+        let l = &lp.layer;
+        let geo = format!(
+            "{}x{} K{} S{} {}x{}->{}x{}",
+            l.c_in,
+            l.c_out,
+            l.k,
+            l.s,
+            l.h_in,
+            l.w_in,
+            l.h_out(),
+            l.w_out()
+        );
+        let tiles = if lp.method == Method::Winograd {
+            format!("{}x{}", lp.tiles.tiles_h, lp.tiles.tiles_w)
+        } else {
+            "-".into()
+        };
+        let bytes = sections.get(i + 1).map(|s| s.bytes).unwrap_or(0);
+        out.push_str(&format!(
+            "L{i:<5} {:<7} {geo:<28} {:<9} {:<7} {:<5} {tiles:<8} {bytes} B\n",
+            format!("{:?}", l.kind).to_ascii_lowercase(),
+            format!("{:?}", lp.method).to_ascii_lowercase(),
+            lp.phases.len(),
+            lp.live_positions(),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::plan::Planner;
+    use crate::gan::zoo::{self, Scale};
+
+    fn meta() -> ArtifactMeta {
+        ArtifactMeta { scale: "tiny".into(), method: "winograd".into(), seed: 7 }
+    }
+
+    fn tiny_plan() -> ModelPlan {
+        Planner::default().compile_seeded(&zoo::dcgan(Scale::Tiny), 7)
+    }
+
+    /// Structural + bitwise equality of two plans at one precision.
+    fn assert_plans_identical<E: Elem>(a: &ModelPlan<E>, b: &ModelPlan<E>) {
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.input_shape, b.input_shape);
+        assert_eq!(a.output_shape, b.output_shape);
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.method, lb.method);
+            assert_eq!(la.kc, lb.kc);
+            assert_eq!(la.tiles, lb.tiles);
+            assert_eq!(la.linebuf_depth, lb.linebuf_depth);
+            assert_eq!(la.linebuf_words, lb.linebuf_words);
+            assert_eq!(la.layer.act, lb.layer.act);
+            assert_eq!(la.weights.data, lb.weights.data);
+            assert_eq!(la.phases.len(), lb.phases.len());
+            for (pa, pb) in la.phases.iter().zip(&lb.phases) {
+                assert_eq!(pa.g.data, pb.g.data);
+                assert_eq!((pa.d0y, pa.d0x, pa.ry, pa.rx), (pb.d0y, pb.d0x, pb.ry, pb.rx));
+            }
+            assert_eq!(la.reordered.len(), lb.reordered.len());
+            for (ra, rb) in la.reordered.iter().zip(&lb.reordered) {
+                assert_eq!(ra.case, rb.case);
+                assert_eq!(ra.live, rb.live);
+                assert_eq!(ra.u, rb.u);
+                assert_eq!((ra.d0y, ra.d0x), (rb.d0y, rb.d0x));
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_f64_is_bit_exact() {
+        let plan = tiny_plan();
+        let bytes = encode(&plan, &meta());
+        let dec = decode(&bytes).unwrap();
+        assert_eq!(dec.header.version, FORMAT_VERSION);
+        assert_eq!(dec.header.precision, Precision::F64);
+        assert_eq!(dec.header.model, "DCGAN");
+        assert_eq!(dec.header.model_id, "dcgan");
+        assert_eq!(dec.header.scale, "tiny");
+        assert_eq!(dec.header.method, "winograd");
+        assert_eq!(dec.header.seed, 7);
+        assert_eq!(dec.header.layers, plan.layers.len());
+        assert_eq!(dec.sections.len(), plan.layers.len() + 1);
+        match dec.payload {
+            PlanPayload::F64(back) => assert_plans_identical(&plan, &back),
+            PlanPayload::F32(_) => panic!("wrong tier decoded"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_f32_preserves_the_lowered_plan() {
+        let plan32: ModelPlan<f32> = tiny_plan().lower();
+        let bytes = encode(&plan32, &meta());
+        // half-width words: the f32 artifact is materially smaller
+        let bytes64 = encode(&tiny_plan(), &meta());
+        assert!(bytes.len() < bytes64.len());
+        let dec = decode(&bytes).unwrap();
+        assert_eq!(dec.header.precision, Precision::F32);
+        match dec.payload {
+            PlanPayload::F32(back) => assert_plans_identical(&plan32, &back),
+            PlanPayload::F64(_) => panic!("wrong tier decoded"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = encode(&tiny_plan(), &meta());
+        bytes[0] = b'X';
+        assert!(matches!(decode(&bytes), Err(ArtifactError::BadMagic { .. })));
+    }
+
+    #[test]
+    fn wrong_version_is_typed() {
+        let mut bytes = encode(&tiny_plan(), &meta());
+        bytes[8] = 99; // version u32 LE starts right after the magic
+        assert!(matches!(
+            decode(&bytes),
+            Err(ArtifactError::UnsupportedVersion { found: 99 })
+        ));
+    }
+
+    #[test]
+    fn truncation_is_typed_at_any_cut() {
+        let bytes = encode(&tiny_plan(), &meta());
+        // every prefix must fail with a typed error, never panic
+        for cut in [0, 3, 8, 11, 13, 40, bytes.len() / 2, bytes.len() - 1] {
+            let err = decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    ArtifactError::Truncated { .. }
+                        | ArtifactError::BadMagic { .. }
+                        | ArtifactError::ChecksumMismatch { .. }
+                ),
+                "cut {cut}: unexpected {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn payload_corruption_fails_the_section_checksum() {
+        let mut bytes = encode(&tiny_plan(), &meta());
+        // flip one bit deep inside a layer section's weight data
+        let idx = bytes.len() - 64;
+        bytes[idx] ^= 0x40;
+        assert!(matches!(decode(&bytes), Err(ArtifactError::ChecksumMismatch { .. })));
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut bytes = encode(&tiny_plan(), &meta());
+        bytes.extend_from_slice(&[0u8; 16]);
+        assert!(matches!(decode(&bytes), Err(ArtifactError::Malformed { .. })));
+    }
+
+    #[test]
+    fn unknown_precision_tag_is_malformed() {
+        let mut bytes = encode(&tiny_plan(), &meta());
+        bytes[12] = 7; // precision tag byte: magic(8) + version(4)
+        assert!(matches!(decode(&bytes), Err(ArtifactError::Malformed { .. })));
+    }
+
+    #[test]
+    fn decode_header_never_touches_the_layer_payloads() {
+        let bytes = encode(&tiny_plan(), &meta());
+        let h = decode_header(&bytes).unwrap();
+        assert_eq!(h, decode(&bytes).unwrap().header);
+        // cut the file right after the META section's checksum: the header
+        // still decodes (key validation is payload-free) while a full
+        // decode correctly fails
+        let meta_len = u64::from_le_bytes(bytes[17..25].try_into().unwrap()) as usize;
+        let cut = 25 + meta_len + 8;
+        assert_eq!(decode_header(&bytes[..cut]).unwrap(), h);
+        assert!(decode(&bytes[..cut]).is_err());
+    }
+
+    #[test]
+    fn inconsistent_shape_chain_is_rejected() {
+        // a checksummed-but-inconsistent artifact must fail at load time,
+        // never reach the engine: break the declared output shape…
+        let mut plan = tiny_plan();
+        plan.output_shape = (3, 64, 65);
+        assert!(matches!(
+            decode(&encode(&plan, &meta())),
+            Err(ArtifactError::Malformed { .. })
+        ));
+        // …and break the inter-layer chain
+        let mut plan = tiny_plan();
+        plan.layers[1].layer.c_in += 1;
+        assert!(matches!(
+            decode(&encode(&plan, &meta())),
+            Err(ArtifactError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn implausible_geometry_is_rejected_before_any_derivation() {
+        // a hostile stride may never drive S²-sized work or overflow
+        let mut plan = tiny_plan();
+        plan.layers[0].layer.s = MAX_STRIDE + 1;
+        assert!(matches!(
+            decode(&encode(&plan, &meta())),
+            Err(ArtifactError::Malformed { .. })
+        ));
+        let mut plan = tiny_plan();
+        plan.layers[0].layer.h_in = MAX_EXTENT + 1;
+        assert!(matches!(
+            decode(&encode(&plan, &meta())),
+            Err(ArtifactError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn describe_renders_the_manifest_view() {
+        let plan = tiny_plan();
+        let bytes = encode(&plan, &meta());
+        let text = describe(&bytes, "store/tiny/dcgan.winograd.f64.plan").unwrap();
+        assert!(text.contains("DCGAN"), "{text}");
+        assert!(text.contains("precision f64"), "{text}");
+        assert!(text.contains("route method winograd"), "{text}");
+        assert!(text.contains("L0"), "{text}");
+        assert!(text.contains("winograd"), "{text}");
+        // every layer row present
+        for i in 0..plan.layers.len() {
+            assert!(text.contains(&format!("L{i}")), "{text}");
+        }
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // pinned reference values (FNV-1a 64 test vectors)
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -1,0 +1,40 @@
+//! Plan-artifact subsystem: versioned serialization of compiled plans, an
+//! on-disk plan store, and the AOT compile → warm-serve workflow.
+//!
+//! Everything the paper front-loads — TDC phase decomposition, Winograd
+//! `G g Gᵀ` filter transforms, sparsity reordering, DSE method selection —
+//! lands in a [`crate::engine::ModelPlan`]. Before this subsystem, every
+//! `wingan serve` process recompiled those plans at startup; now the
+//! compiled configuration is a **persisted deployment artifact**, the way
+//! the DeConv design-methodology and Winograd-DSE literature treats it:
+//!
+//! * [`codec`] — the self-describing binary format (magic + format version
+//!   + precision tag + model metadata + checksummed payload sections),
+//!   explicit little-endian, no external serde dependency. Round trips are
+//!   **bit-exact** at both precision tiers: a loaded plan executes
+//!   identically, bit for bit, to the plan that was published.
+//! * [`store`] — [`PlanStore`]: `(model, scale, precision, method, seed)`
+//!   keys → artifact files under a store root, atomic write-then-rename
+//!   publishing, load-time checksum/version/key validation, and an
+//!   in-process `Arc` cache so repeated loads of a key through one store
+//!   handle share a single deserialized plan.
+//!
+//! Workflow: `wingan compile --store <dir>` AOT-compiles zoo models (both
+//! serving scales, both precision tiers, both route methods) into the
+//! store plus a human-readable manifest; `wingan serve --plan-store <dir>`
+//! (i.e. [`crate::engine::NativeConfig::plan_store`]) makes cold start a
+//! file read instead of a recompile, falling back to in-process
+//! compilation — and publishing the result — for any missing or invalid
+//! artifact. Warm-vs-cold behavior is observable through the plan-cache
+//! counters ([`PlanCacheStats`] → [`crate::coordinator::Metrics`]), and
+//! `wingan plan inspect <artifact>` prints one artifact's manifest view.
+
+pub mod codec;
+pub mod store;
+
+pub use codec::{
+    decode, decode_header, describe, encode, fnv1a64, ArtifactError, ArtifactHeader,
+    ArtifactMeta, ArtifactResult, DecodedArtifact, PlanPayload, SectionInfo, FORMAT_VERSION,
+    MAGIC,
+};
+pub use store::{atomic_write, AnyPlan, PlanCacheStats, PlanKey, PlanStore};

@@ -1,0 +1,512 @@
+//! On-disk plan store: `(model, scale, precision, method, seed)` keys →
+//! versioned artifact files under a store root, with atomic
+//! write-then-rename publishing and an in-process `Arc` cache.
+//!
+//! Layout: `<root>/<scale>/<model>.<method>.<precision>.plan` — one file
+//! per serving route per precision tier (the `tdc` reference route only
+//! ever exists at `f64`). `wingan compile` populates a store ahead of time
+//! and writes a human-readable `manifest.json` next to the scale
+//! directories; `wingan serve --plan-store <dir>` (via
+//! [`crate::engine::NativeConfig::plan_store`]) loads from it at startup,
+//! falling back to in-process compilation — and then publishing the result
+//! — for any key it cannot load.
+//!
+//! Publishing is **atomic**: the encoded bytes are written to a temporary
+//! file in the destination directory and `rename(2)`d into place, so a
+//! concurrent reader sees either the old artifact or the new one, never a
+//! torn write. Loading validates magic, format version, section checksums
+//! and the full key (precision tier, model id, scale, route method, weight
+//! seed) before the plan is admitted to the cache; every failure is a typed
+//! [`ArtifactError`], never a panic.
+
+use crate::artifact::codec::{self, ArtifactError, ArtifactMeta, ArtifactResult, PlanPayload};
+use crate::engine::plan::ModelPlan;
+use crate::engine::serve::model_id;
+use crate::gan::zoo::Scale;
+use crate::util::elem::{Elem, Precision};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Identity of one stored plan: everything that determines the compiled
+/// bytes. `model` is the route id (`"dcgan"`), `method` the serving route
+/// method (`"winograd"` for DSE-raced plans, `"tdc"` for the forced
+/// reference datapath), `seed` the deterministic weight seed.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// route/model id (lowercase, e.g. `"dcgan"`)
+    pub model: String,
+    /// zoo scale the plan was compiled at
+    pub scale: Scale,
+    /// precision tier of the stored plan
+    pub precision: Precision,
+    /// serving route method (`"winograd"` / `"tdc"`)
+    pub method: String,
+    /// deterministic weight seed
+    pub seed: u64,
+}
+
+impl PlanKey {
+    /// Convenience constructor (normalizes the model through
+    /// [`model_id`], so `"GP-GAN"` and `"gpgan"` name the same artifact).
+    pub fn new(
+        model: &str,
+        scale: Scale,
+        precision: Precision,
+        method: &str,
+        seed: u64,
+    ) -> PlanKey {
+        PlanKey {
+            model: model_id(model),
+            scale,
+            precision,
+            method: method.to_string(),
+            seed,
+        }
+    }
+
+    /// File name of this key's artifact (`dcgan.winograd.f64.plan`). The
+    /// seed is validated from the artifact header, not the name — one slot
+    /// per route and tier.
+    pub fn file_name(&self) -> String {
+        format!("{}.{}.{}.plan", self.model, self.method, self.precision.label())
+    }
+
+    /// Store-relative path (`tiny/dcgan.winograd.f64.plan`).
+    pub fn rel_path(&self) -> PathBuf {
+        Path::new(self.scale.label()).join(self.file_name())
+    }
+}
+
+/// A loaded plan at whichever tier its artifact was tagged with, shared
+/// behind an `Arc` — the store's cache hands the *same* allocation to every
+/// route (and every engine) that asks for the same key.
+#[derive(Clone, Debug)]
+pub enum AnyPlan {
+    /// single-precision (serving fast tier) plan
+    F32(Arc<ModelPlan<f32>>),
+    /// double-precision (reference tier) plan
+    F64(Arc<ModelPlan<f64>>),
+}
+
+impl AnyPlan {
+    /// The precision tier of the loaded plan.
+    pub fn precision(&self) -> Precision {
+        match self {
+            AnyPlan::F32(_) => Precision::F32,
+            AnyPlan::F64(_) => Precision::F64,
+        }
+    }
+
+    /// Zoo model name (e.g. `"DCGAN"`).
+    pub fn model(&self) -> &str {
+        match self {
+            AnyPlan::F32(p) => &p.model,
+            AnyPlan::F64(p) => &p.model,
+        }
+    }
+
+    /// `[C, H, W]` of one input sample.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        match self {
+            AnyPlan::F32(p) => p.input_shape,
+            AnyPlan::F64(p) => p.input_shape,
+        }
+    }
+
+    /// `[C, H, W]` of one output sample.
+    pub fn output_shape(&self) -> (usize, usize, usize) {
+        match self {
+            AnyPlan::F32(p) => p.output_shape,
+            AnyPlan::F64(p) => p.output_shape,
+        }
+    }
+
+    /// Number of compiled layers.
+    pub fn n_layers(&self) -> usize {
+        match self {
+            AnyPlan::F32(p) => p.layers.len(),
+            AnyPlan::F64(p) => p.layers.len(),
+        }
+    }
+}
+
+impl From<PlanPayload> for AnyPlan {
+    fn from(p: PlanPayload) -> AnyPlan {
+        match p {
+            PlanPayload::F32(p) => AnyPlan::F32(Arc::new(p)),
+            PlanPayload::F64(p) => AnyPlan::F64(Arc::new(p)),
+        }
+    }
+}
+
+/// Counters for one serving startup against a plan store — how many routes
+/// came up warm (artifact hit), cold (fallback compile), or found a broken
+/// artifact on the way (load failure; always followed by a clean fallback).
+/// Surfaced through [`crate::coordinator::Metrics`] so warm-vs-cold
+/// behavior is observable from the serving metrics snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// routes whose plan loaded from an artifact (no planner invocation)
+    pub artifact_hits: u64,
+    /// routes compiled in-process (cold store, or after a load failure)
+    pub fallback_compiles: u64,
+    /// artifacts that existed but failed validation (corrupt, wrong
+    /// version, key mismatch, ...)
+    pub load_failures: u64,
+    /// freshly compiled plans published back into the store
+    pub published: u64,
+}
+
+/// Write `bytes` to `path` atomically: parent directories are created, the
+/// bytes land in a same-directory temp file (unique per process *and* per
+/// call, so racing writers never share one), and a rename moves them into
+/// place — readers observe the old file or the new one, never a torn
+/// write. The temp file is removed on every failure path. Artifact
+/// publishes and `wingan compile`'s manifest both go through this.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = path.parent().unwrap_or_else(|| Path::new("."));
+    std::fs::create_dir_all(dir)?;
+    let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+    let tmp = dir.join(format!(
+        ".{name}.tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let result = std::fs::write(&tmp, bytes).and_then(|_| std::fs::rename(&tmp, path));
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// The in-process cache plus its publish generation: the counter bumps
+/// (under the same lock) whenever a publish invalidates, so a load that
+/// read its bytes *before* a concurrent publish can detect that and
+/// decline to cache the pre-publish plan.
+#[derive(Debug, Default)]
+struct CacheInner {
+    plans: HashMap<PlanKey, AnyPlan>,
+    generation: u64,
+}
+
+/// The on-disk plan store (see the module docs for layout and atomicity).
+/// Cheap to construct; directories are created lazily on first publish.
+#[derive(Debug)]
+pub struct PlanStore {
+    root: PathBuf,
+    cache: Mutex<CacheInner>,
+}
+
+impl PlanStore {
+    /// A store rooted at `root`. Nothing is touched on disk until the
+    /// first [`PlanStore::publish`].
+    pub fn open(root: impl Into<PathBuf>) -> PlanStore {
+        PlanStore { root: root.into(), cache: Mutex::new(CacheInner::default()) }
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Absolute path of `key`'s artifact file.
+    pub fn path(&self, key: &PlanKey) -> PathBuf {
+        self.root.join(key.rel_path())
+    }
+
+    /// Number of plans currently held by the in-process cache.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().plans.len()
+    }
+
+    /// Load `key`'s plan, serving repeats from the in-process cache: every
+    /// caller asking this store handle for the same key gets a clone of
+    /// the same `Arc<ModelPlan>`, so one deserialized plan is shared —
+    /// note each [`crate::engine::NativeRuntime::build`] opens its own
+    /// handle (and each route loads a distinct key), so the cache pays off
+    /// for library callers and repeated loads, not across server startups.
+    pub fn load(&self, key: &PlanKey) -> ArtifactResult<AnyPlan> {
+        let generation = {
+            let cache = self.cache.lock().unwrap();
+            if let Some(hit) = cache.plans.get(key) {
+                return Ok(hit.clone());
+            }
+            cache.generation
+        };
+        let plan = self.load_uncached(key)?;
+        let mut cache = self.cache.lock().unwrap();
+        // cache only if no publish invalidated while we were reading: a
+        // publish that raced this load may have renamed a newer artifact
+        // into place after our read, and caching the pre-publish plan
+        // would pin the stale bytes on this handle forever
+        if cache.generation == generation {
+            cache.plans.insert(key.clone(), plan.clone());
+        }
+        Ok(plan)
+    }
+
+    /// Load `key`'s plan straight from disk, bypassing (and not warming)
+    /// the cache — read, header-first key validation, then the full
+    /// checksum + decode. A mismatched artifact (wrong tier, model, scale,
+    /// method or seed) is rejected from the META section alone, before any
+    /// of the multi-megabyte layer payloads are decoded. The cold-start
+    /// benchmarks measure this path.
+    pub fn load_uncached(&self, key: &PlanKey) -> ArtifactResult<AnyPlan> {
+        let path = self.path(key);
+        let bytes = std::fs::read(&path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                ArtifactError::Missing { path: path.clone() }
+            } else {
+                ArtifactError::Io { path: path.clone(), detail: e.to_string() }
+            }
+        })?;
+        let h = codec::decode_header(&bytes)?;
+        if h.precision != key.precision {
+            return Err(ArtifactError::PrecisionMismatch {
+                artifact: h.precision,
+                requested: key.precision,
+            });
+        }
+        let checks: [(&'static str, &str, &str); 3] = [
+            ("model id", &h.model_id, &key.model),
+            ("scale", &h.scale, key.scale.label()),
+            ("route method", &h.method, &key.method),
+        ];
+        for (field, artifact, requested) in checks {
+            if artifact != requested {
+                return Err(ArtifactError::KeyMismatch {
+                    field,
+                    artifact: artifact.to_string(),
+                    requested: requested.to_string(),
+                });
+            }
+        }
+        if h.seed != key.seed {
+            return Err(ArtifactError::KeyMismatch {
+                field: "weight seed",
+                artifact: h.seed.to_string(),
+                requested: key.seed.to_string(),
+            });
+        }
+        Ok(AnyPlan::from(codec::decode(&bytes)?.payload))
+    }
+
+    /// Publish a compiled plan under `key`: encode, write to a temporary
+    /// file in the destination directory, then atomically rename into
+    /// place. Returns the artifact's final path. The plan's precision must
+    /// match `key.precision` (the one mistake this API could silently
+    /// invert is rejected as [`ArtifactError::PrecisionMismatch`]).
+    pub fn publish<E: Elem>(&self, key: &PlanKey, plan: &ModelPlan<E>) -> ArtifactResult<PathBuf> {
+        if E::PRECISION != key.precision {
+            return Err(ArtifactError::PrecisionMismatch {
+                artifact: E::PRECISION,
+                requested: key.precision,
+            });
+        }
+        if model_id(&plan.model) != key.model {
+            return Err(ArtifactError::KeyMismatch {
+                field: "model id",
+                artifact: model_id(&plan.model),
+                requested: key.model.clone(),
+            });
+        }
+        let meta = ArtifactMeta {
+            scale: key.scale.label().to_string(),
+            method: key.method.clone(),
+            seed: key.seed,
+        };
+        let bytes = codec::encode(plan, &meta);
+        let path = self.path(key);
+        atomic_write(&path, &bytes).map_err(|e| ArtifactError::Io {
+            path: path.clone(),
+            detail: e.to_string(),
+        })?;
+        // drop any cached plan for this key — and bump the generation so a
+        // load whose file read raced this publish declines to cache — so a
+        // handle that loaded before the publish can never keep serving the
+        // pre-publish bytes
+        let mut cache = self.cache.lock().unwrap();
+        cache.plans.remove(key);
+        cache.generation += 1;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::plan::{PlanOptions, Planner, Select};
+    use crate::gan::workload::Method;
+    use crate::gan::zoo::{self, Scale};
+
+    fn temp_store(tag: &str) -> PlanStore {
+        let dir = std::env::temp_dir().join(format!("wingan_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        PlanStore::open(dir)
+    }
+
+    fn key(precision: Precision) -> PlanKey {
+        PlanKey::new("dcgan", Scale::Tiny, precision, "winograd", 7)
+    }
+
+    fn plan() -> ModelPlan {
+        Planner::default().compile_seeded(&zoo::dcgan(Scale::Tiny), 7)
+    }
+
+    #[test]
+    fn publish_then_load_roundtrips_both_tiers() {
+        let store = temp_store("roundtrip");
+        let p = plan();
+        let k64 = key(Precision::F64);
+        let path = store.publish(&k64, &p).unwrap();
+        assert!(path.ends_with("tiny/dcgan.winograd.f64.plan"));
+        let loaded = store.load(&k64).unwrap();
+        assert_eq!(loaded.precision(), Precision::F64);
+        assert_eq!(loaded.model(), "DCGAN");
+        assert_eq!(loaded.input_shape(), p.input_shape);
+        assert_eq!(loaded.n_layers(), p.layers.len());
+
+        let k32 = key(Precision::F32);
+        store.publish(&k32, &p.lower::<f32>()).unwrap();
+        let loaded32 = store.load(&k32).unwrap();
+        assert_eq!(loaded32.precision(), Precision::F32);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn cache_shares_one_arc_across_loads() {
+        let store = temp_store("cache");
+        let k = key(Precision::F64);
+        store.publish(&k, &plan()).unwrap();
+        let a = store.load(&k).unwrap();
+        let b = store.load(&k).unwrap();
+        match (&a, &b) {
+            (AnyPlan::F64(pa), AnyPlan::F64(pb)) => {
+                assert!(Arc::ptr_eq(pa, pb), "cache must hand out the same allocation");
+            }
+            _ => panic!("wrong tier"),
+        }
+        assert_eq!(store.cached(), 1);
+        // republishing the key invalidates the cached plan: the next load
+        // re-reads the (possibly new) bytes instead of the old Arc
+        store.publish(&k, &plan()).unwrap();
+        assert_eq!(store.cached(), 0, "publish must invalidate the key's cache entry");
+        let c = store.load(&k).unwrap();
+        match (&a, &c) {
+            (AnyPlan::F64(pa), AnyPlan::F64(pc)) => {
+                assert!(!Arc::ptr_eq(pa, pc), "post-publish load must not reuse the old Arc");
+            }
+            _ => panic!("wrong tier"),
+        }
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn missing_artifact_is_typed_not_a_failure() {
+        let store = temp_store("missing");
+        assert!(matches!(
+            store.load(&key(Precision::F64)),
+            Err(ArtifactError::Missing { .. })
+        ));
+    }
+
+    #[test]
+    fn precision_tag_must_match_the_requested_tier() {
+        let store = temp_store("precmismatch");
+        let k64 = key(Precision::F64);
+        store.publish(&k64, &plan()).unwrap();
+        // an f64 artifact parked at the f32 key's path: the file-level
+        // precision tag wins and the mismatch is typed
+        let k32 = key(Precision::F32);
+        std::fs::create_dir_all(store.path(&k32).parent().unwrap()).unwrap();
+        std::fs::copy(store.path(&k64), store.path(&k32)).unwrap();
+        assert!(matches!(
+            store.load(&k32),
+            Err(ArtifactError::PrecisionMismatch {
+                artifact: Precision::F64,
+                requested: Precision::F32
+            })
+        ));
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn header_key_fields_are_validated() {
+        let store = temp_store("keycheck");
+        let k = key(Precision::F64);
+        store.publish(&k, &plan()).unwrap();
+        // same file requested under a different seed → typed key mismatch
+        let wrong_seed = PlanKey { seed: 8, ..k.clone() };
+        assert!(matches!(
+            store.load(&wrong_seed),
+            Err(ArtifactError::KeyMismatch { field: "weight seed", .. })
+        ));
+        // and under a different method (file copied to the tdc slot)
+        let tdc_key = PlanKey { method: "tdc".into(), ..k.clone() };
+        std::fs::copy(store.path(&k), store.path(&tdc_key)).unwrap();
+        assert!(matches!(
+            store.load(&tdc_key),
+            Err(ArtifactError::KeyMismatch { field: "route method", .. })
+        ));
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn publish_rejects_tier_and_model_mismatches() {
+        let store = temp_store("pubcheck");
+        let p = plan();
+        assert!(matches!(
+            store.publish(&key(Precision::F32), &p),
+            Err(ArtifactError::PrecisionMismatch { .. })
+        ));
+        let other = PlanKey::new("gpgan", Scale::Tiny, Precision::F64, "winograd", 7);
+        assert!(matches!(
+            store.publish(&other, &p),
+            Err(ArtifactError::KeyMismatch { field: "model id", .. })
+        ));
+        // nothing was written
+        assert!(matches!(
+            store.load(&key(Precision::F32)),
+            Err(ArtifactError::Missing { .. })
+        ));
+    }
+
+    #[test]
+    fn publish_overwrites_atomically_and_leaves_no_temp_files() {
+        let store = temp_store("atomic");
+        let k = key(Precision::F64);
+        store.publish(&k, &plan()).unwrap();
+        let first = std::fs::metadata(store.path(&k)).unwrap().len();
+        // republish (e.g. a recompile with identical inputs): same bytes,
+        // no stray temp files in the directory
+        store.publish(&k, &plan()).unwrap();
+        assert_eq!(std::fs::metadata(store.path(&k)).unwrap().len(), first);
+        let dir = store.path(&k);
+        let entries: Vec<String> = std::fs::read_dir(dir.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(entries.iter().all(|n| !n.contains(".tmp.")), "{entries:?}");
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn tdc_plans_store_under_their_route_method() {
+        let store = temp_store("tdcroute");
+        let planner = Planner::new(PlanOptions {
+            select: Select::Force(Method::Tdc),
+            ..Default::default()
+        });
+        let p = planner.compile_seeded(&zoo::gpgan(Scale::Tiny), 7);
+        let k = PlanKey::new("GP-GAN", Scale::Tiny, Precision::F64, "tdc", 7);
+        assert_eq!(k.model, "gpgan", "PlanKey::new normalizes model ids");
+        let path = store.publish(&k, &p).unwrap();
+        assert!(path.ends_with("tiny/gpgan.tdc.f64.plan"));
+        let loaded = store.load(&k).unwrap();
+        assert_eq!(loaded.model(), "GP-GAN");
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+}

@@ -10,6 +10,7 @@ pub struct Args {
     pub subcommand: Option<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
+    positionals: Vec<String>,
 }
 
 impl Args {
@@ -32,7 +33,10 @@ impl Args {
             } else if out.subcommand.is_none() {
                 out.subcommand = Some(a);
             } else {
-                return Err(format!("unexpected positional argument '{a}'"));
+                // extra positionals after the subcommand (e.g.
+                // `plan inspect <artifact>`); the consumer validates which
+                // subcommands accept them and with what arity
+                out.positionals.push(a);
             }
         }
         Ok(out)
@@ -89,6 +93,39 @@ impl Args {
 
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
+    }
+
+    /// The `i`-th positional argument after the subcommand (0-based) —
+    /// `wingan plan inspect <file>` sees `positional(0) == "inspect"` and
+    /// `positional(1) == "<file>"`.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(String::as_str)
+    }
+
+    /// Number of positional arguments after the subcommand.
+    pub fn n_positionals(&self) -> usize {
+        self.positionals.len()
+    }
+
+    /// Error if any positional argument (beyond the subcommand) was given
+    /// — the policy for every `wingan` subcommand except `plan`.
+    pub fn reject_positionals(&self) -> Result<(), String> {
+        match self.positional(0) {
+            Some(stray) => Err(format!("unexpected positional argument '{stray}'")),
+            None => Ok(()),
+        }
+    }
+
+    /// Error if any bare (non-flag) argument was given, including the
+    /// would-be subcommand — the policy for flags-only binaries (the
+    /// examples), where a stray bare word is always a forgotten flag name.
+    /// (The first bare word always lands in `subcommand`, so checking it
+    /// covers the positionals too; the delegation is belt-and-braces.)
+    pub fn reject_bare_args(&self) -> Result<(), String> {
+        match self.subcommand.as_deref() {
+            Some(stray) => Err(format!("unexpected positional argument '{stray}'")),
+            None => self.reject_positionals(),
+        }
     }
 }
 
@@ -147,8 +184,32 @@ mod tests {
     }
 
     #[test]
-    fn rejects_double_positional() {
-        assert!(Args::parse(["a".to_string(), "b".to_string()]).is_err());
+    fn collects_positionals_after_the_subcommand() {
+        let a = parse("plan inspect store/tiny/dcgan.winograd.f64.plan");
+        assert_eq!(a.subcommand.as_deref(), Some("plan"));
+        assert_eq!(a.positional(0), Some("inspect"));
+        assert_eq!(a.positional(1), Some("store/tiny/dcgan.winograd.f64.plan"));
+        assert_eq!(a.positional(2), None);
+        assert_eq!(a.n_positionals(), 2);
+        // flags still parse around positionals
+        let b = parse("plan inspect x.plan --verbose");
+        assert_eq!(b.positional(1), Some("x.plan"));
+        assert!(b.has("verbose"));
+        assert_eq!(parse("sim").n_positionals(), 0);
+    }
+
+    #[test]
+    fn positional_rejection_policies() {
+        // subcommand consumers: the subcommand itself is fine, extras fail
+        assert!(parse("serve --model dcgan").reject_positionals().is_ok());
+        let err = parse("serve dcgan").reject_positionals().unwrap_err();
+        assert!(err.contains("dcgan"), "{err}");
+        // flags-only consumers: even the would-be subcommand fails
+        assert!(parse("--model dcgan").reject_bare_args().is_ok());
+        let err = parse("dcgan --requests 4").reject_bare_args().unwrap_err();
+        assert!(err.contains("dcgan"), "{err}");
+        let err = parse("x y").reject_bare_args().unwrap_err();
+        assert!(err.contains('x'), "{err}");
     }
 
     #[test]

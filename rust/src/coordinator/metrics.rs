@@ -2,6 +2,7 @@
 //! No external deps; a fixed log-bucketed histogram keeps memory bounded
 //! regardless of request count, plus exact min/max/mean.
 
+use crate::artifact::PlanCacheStats;
 use std::time::Duration;
 
 /// Log-bucketed latency histogram: buckets of 10% growth from 1 µs to ~100 s.
@@ -98,6 +99,10 @@ pub struct Metrics {
     pub batches: u64,
     pub batched_samples: u64,
     pub padded_samples: u64,
+    /// plan-cache counters from startup (warm-vs-cold: artifact hits,
+    /// fallback compiles, load failures, republishes); all zeros when the
+    /// server was built without a plan store
+    pub plan_cache: PlanCacheStats,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub e2e_latency: Histogram,
@@ -118,9 +123,26 @@ impl Metrics {
         }
     }
 
+    /// True when any route went through a plan store at startup (the
+    /// counters are all zero when serving without one).
+    pub fn used_plan_store(&self) -> bool {
+        self.plan_cache != PlanCacheStats::default()
+    }
+
     pub fn report(&self) -> String {
+        let plans = if self.used_plan_store() {
+            format!(
+                "\nplans: artifact_hits={} fallback_compiles={} load_failures={} published={}",
+                self.plan_cache.artifact_hits,
+                self.plan_cache.fallback_compiles,
+                self.plan_cache.load_failures,
+                self.plan_cache.published,
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "requests={} responses={} batches={} batch_eff={:.2}\n{}\n{}\n{}",
+            "requests={} responses={} batches={} batch_eff={:.2}{plans}\n{}\n{}\n{}",
             self.requests,
             self.responses,
             self.batches,
@@ -165,6 +187,22 @@ mod tests {
         m.batched_samples = 6;
         m.padded_samples = 2;
         assert!((m.batch_efficiency() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_cache_counters_surface_in_the_report() {
+        let mut m = Metrics::new();
+        assert!(!m.used_plan_store());
+        assert!(!m.report().contains("plans:"));
+        m.plan_cache.artifact_hits = 3;
+        m.plan_cache.fallback_compiles = 1;
+        m.plan_cache.published = 1;
+        assert!(m.used_plan_store());
+        let r = m.report();
+        assert!(r.contains("artifact_hits=3"), "{r}");
+        assert!(r.contains("fallback_compiles=1"), "{r}");
+        assert!(r.contains("load_failures=0"), "{r}");
+        assert!(r.contains("published=1"), "{r}");
     }
 
     #[test]

@@ -172,8 +172,12 @@ impl Coordinator {
             .name("wingan-engine".into())
             .spawn(move || {
                 // plan compilation happens here, once, before ready — the
-                // request path only ever executes precompiled plans
+                // request path only ever executes precompiled plans (or,
+                // with `native.plan_store`, loads them from artifacts)
                 let runtime = NativeRuntime::build(&native);
+                // surface the warm-vs-cold startup accounting through the
+                // serving metrics snapshot
+                engine_metrics.lock().unwrap().plan_cache = runtime.plan_stats();
                 let _ = ready_tx.send(Ok(()));
                 engine_loop(runtime, engine_router, engine_metrics, engine_cfg, rx)
             })

@@ -43,7 +43,10 @@
 //!   path. Fast routes hold an [`AnyEngine`] at the resolved precision
 //!   (the **f32 serving fast path** keeps request buffers in single
 //!   precision end to end); the `"tdc"` reference routes always serve
-//!   `f64`.
+//!   `f64`. With a [`NativeConfig::plan_store`], route plans load from
+//!   on-disk artifacts ([`crate::artifact`]) instead of compiling at
+//!   startup — cold start becomes a file read, with in-process compilation
+//!   (plus publish-back) as the fallback.
 //!
 //! Numerics contract: plans forced to the TDC method are **bit-identical
 //! (f64)** to [`reference_forward`], the layer-by-layer composition of the
@@ -68,7 +71,7 @@ pub use plan::{
 };
 pub use pool::{resolve_workers, ScratchStash, WorkerPool};
 pub use scratch::Scratch;
-pub use serve::{model_id, native_manifest, NativeConfig, NativeRuntime};
+pub use serve::{model_id, native_manifest, NativeConfig, NativeRuntime, ROUTE_METHODS};
 
 use crate::gan::zoo::Kind;
 use crate::tdc;

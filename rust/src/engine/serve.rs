@@ -26,11 +26,12 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::accel::functional::Events;
-use crate::engine::exec::AnyEngine;
+use crate::artifact::{AnyPlan, ArtifactError, PlanCacheStats, PlanKey, PlanStore};
+use crate::engine::exec::{AnyEngine, Engine};
 use crate::engine::plan::{resolve_precision, PlanOptions, Planner, Select};
 use crate::engine::pool::{resolve_workers, WorkerPool};
 use crate::gan::workload::Method;
-use crate::gan::zoo::{self, Scale};
+use crate::gan::zoo::{self, Gan, Scale};
 use crate::runtime::{ArtifactEntry, Manifest};
 use crate::util::elem::Precision;
 
@@ -54,6 +55,12 @@ pub struct NativeConfig {
     /// ([`crate::engine::plan::resolve_precision`]). The `"tdc"` reference
     /// routes always serve f64 regardless.
     pub precision: Option<Precision>,
+    /// root of an on-disk [`PlanStore`] to boot from: route plans are
+    /// loaded as artifacts when present (cold start becomes a file read),
+    /// and any route that misses — or finds a corrupt/mismatched artifact
+    /// — falls back to in-process compilation and publishes the result.
+    /// `None` compiles every route in-process, as before.
+    pub plan_store: Option<PathBuf>,
 }
 
 impl Default for NativeConfig {
@@ -65,6 +72,7 @@ impl Default for NativeConfig {
             seed: 42,
             models: None,
             precision: None,
+            plan_store: None,
         }
     }
 }
@@ -79,7 +87,12 @@ pub fn model_id(name: &str) -> String {
         .collect()
 }
 
-const METHODS: [(&str, Select); 2] =
+/// The two serving route methods and the [`Select`] policy each compiles
+/// with: `"winograd"` races TDC vs the fast algorithm through the DSE
+/// cycle model per layer, `"tdc"` forces the bit-exact reference datapath.
+/// `wingan compile` iterates exactly this table so AOT artifacts and
+/// serving routes can never disagree about what a method name means.
+pub const ROUTE_METHODS: [(&str, Select); 2] =
     [("winograd", Select::Auto), ("tdc", Select::Force(Method::Tdc))];
 
 /// Build the synthetic manifest describing the native routes — the same
@@ -96,7 +109,7 @@ pub fn native_manifest(cfg: &NativeConfig) -> Manifest {
         }
         let first = &g.layers[0];
         let last = g.layers.last().unwrap();
-        for (method, _) in METHODS {
+        for (method, _) in ROUTE_METHODS {
             for &b in &cfg.buckets {
                 entries.push(ArtifactEntry {
                     name: format!("{id}_{method}_b{b}"),
@@ -132,21 +145,133 @@ pub struct NativeRuntime {
     /// cumulative events across every executed sample (observability; the
     /// e2e tests assert monotone growth with batch size)
     events: Arc<Mutex<Events>>,
+    /// warm-vs-cold startup accounting (all zeros without a plan store)
+    plan_stats: PlanCacheStats,
+}
+
+/// Whether a loaded plan's layer stack matches the generator this binary's
+/// zoo advertises for the route — every `Layer` field (geometry *and*
+/// activation; `Layer: PartialEq` is derived so future fields are tracked
+/// automatically), not just endpoint shapes, so an artifact compiled
+/// against an older zoo (whose interior layers changed) can never be
+/// served.
+fn plan_matches_zoo<E: crate::util::elem::Elem>(plan: &ModelPlan<E>, g: &Gan) -> bool {
+    plan.layers.len() == g.layers.len()
+        && plan.layers.iter().zip(&g.layers).all(|(lp, l)| lp.layer == *l)
+}
+
+/// Bring up one route's engine through the plan store: artifact hit when a
+/// valid artifact exists for the key, otherwise in-process compilation
+/// followed by a best-effort publish so the *next* startup is warm. Every
+/// load failure is typed, counted, and logged — never fatal.
+fn engine_via_store(
+    store: &PlanStore,
+    stats: &mut PlanCacheStats,
+    g: &Gan,
+    planner: &Planner,
+    key: &PlanKey,
+    pool: Arc<WorkerPool>,
+) -> AnyEngine {
+    // whether a fallback compile may publish over the existing slot: true
+    // for everything except a weight-seed mismatch — a different-seed
+    // artifact is a valid deployment for another configuration, and
+    // overwriting it would let one misconfigured server destroy (and
+    // thrash) an AOT-compiled store
+    let mut overwrite = true;
+    let loaded = match store.load(key) {
+        Ok(plan) => {
+            // a decode-valid artifact must still match — layer for layer —
+            // the generator this binary's zoo advertises for the route:
+            // zoo geometry can change without a wire-format bump, and a
+            // stale plan would serve the old architecture (or panic the
+            // engine thread at request time)
+            let matches = match &plan {
+                AnyPlan::F32(p) => plan_matches_zoo(p, g),
+                AnyPlan::F64(p) => plan_matches_zoo(p, g),
+            };
+            if matches {
+                Some(plan)
+            } else {
+                stats.load_failures += 1;
+                eprintln!(
+                    "plan-store: {} is stale for the current zoo; recompiling",
+                    key.file_name()
+                );
+                None
+            }
+        }
+        Err(err) => {
+            let seed_mismatch =
+                matches!(err, ArtifactError::KeyMismatch { field: "weight seed", .. });
+            if !matches!(err, ArtifactError::Missing { .. }) {
+                stats.load_failures += 1;
+                // the seed-mismatch arm below prints its own (more
+                // specific) message; don't log the same event twice
+                if !seed_mismatch {
+                    eprintln!("plan-store: {} unusable ({err}); recompiling", key.file_name());
+                }
+            }
+            if seed_mismatch {
+                overwrite = false;
+            }
+            None
+        }
+    };
+    match loaded {
+        Some(AnyPlan::F32(plan)) => {
+            stats.artifact_hits += 1;
+            AnyEngine::F32(Engine::with_pool(plan, pool))
+        }
+        Some(AnyPlan::F64(plan)) => {
+            stats.artifact_hits += 1;
+            AnyEngine::F64(Engine::with_pool(plan, pool))
+        }
+        None => {
+            stats.fallback_compiles += 1;
+            let plan = Arc::new(planner.compile_seeded(g, key.seed));
+            let engine = AnyEngine::build(plan, key.precision, pool);
+            if overwrite {
+                let published = match &engine {
+                    AnyEngine::F32(e) => store.publish(key, e.plan()),
+                    AnyEngine::F64(e) => store.publish(key, e.plan()),
+                };
+                match published {
+                    Ok(_) => stats.published += 1,
+                    Err(e) => {
+                        eprintln!("plan-store: publishing {} failed ({e})", key.file_name());
+                    }
+                }
+            } else {
+                eprintln!(
+                    "plan-store: {} belongs to another weight seed; serving the recompiled \
+                     plan without overwriting it",
+                    key.file_name()
+                );
+            }
+            engine
+        }
+    }
 }
 
 impl NativeRuntime {
-    /// Compile every advertised route's plan — once, in f64 — lower each
-    /// fast route to its resolved precision tier, and spawn the shared
-    /// worker pool. This is the expensive, once-per-startup step (the
-    /// coordinator runs it on the engine thread before reporting ready,
-    /// like PJRT artifact compilation). The engine set is derived from the
-    /// manifest itself, so routes and engines can never desynchronize.
+    /// Bring up every advertised route's plan and spawn the shared worker
+    /// pool. Without a [`NativeConfig::plan_store`] each plan is compiled
+    /// in-process — once, in f64, then lowered to the route's resolved
+    /// tier. With a store, plans load from artifacts (cold start becomes a
+    /// file read; no planner invocation on a warm store) and any miss or
+    /// invalid artifact falls back to compilation, publishing the result.
+    /// This is the once-per-startup step (the coordinator runs it on the
+    /// engine thread before reporting ready, like PJRT artifact
+    /// compilation). The engine set is derived from the manifest itself,
+    /// so routes and engines can never desynchronize.
     pub fn build(cfg: &NativeConfig) -> NativeRuntime {
         let manifest = native_manifest(cfg);
         let pool = WorkerPool::shared(resolve_workers(cfg.workers));
         let zoo_models = zoo::all(cfg.scale);
         // explicit config > WINGAN_PRECISION env > per-model dse Auto
         let precision_policy = resolve_precision(cfg.precision);
+        let store = cfg.plan_store.as_ref().map(|root| PlanStore::open(root.clone()));
+        let mut plan_stats = PlanCacheStats::default();
         let mut engines: BTreeMap<(String, String), AnyEngine> = BTreeMap::new();
         for e in &manifest.entries {
             let key = (e.model.clone(), e.method.clone());
@@ -156,7 +281,7 @@ impl NativeRuntime {
                     .iter()
                     .find(|g| model_id(g.name) == e.model)
                     .expect("manifest route without a zoo model");
-                let select = METHODS
+                let select = ROUTE_METHODS
                     .iter()
                     .find(|(m, _)| *m == e.method)
                     .expect("manifest route with unknown method")
@@ -173,15 +298,45 @@ impl NativeRuntime {
                 } else {
                     planner.resolve_precision(g)
                 };
-                // one Arc'd compiled f64 plan per route: every engine clone
-                // (and any future co-resident engine) shares it; the f32
-                // tier lowers it exactly once, at build time
-                let plan = Arc::new(planner.compile_seeded(g, cfg.seed));
-                slot.insert(AnyEngine::build(plan, precision, pool.clone()));
+                let engine = match &store {
+                    Some(store) => {
+                        let plan_key =
+                            PlanKey::new(g.name, cfg.scale, precision, &e.method, cfg.seed);
+                        engine_via_store(
+                            store,
+                            &mut plan_stats,
+                            g,
+                            &planner,
+                            &plan_key,
+                            pool.clone(),
+                        )
+                    }
+                    // one Arc'd compiled f64 plan per route: every engine
+                    // clone (and any future co-resident engine) shares it;
+                    // the f32 tier lowers it exactly once, at build time
+                    None => {
+                        let plan = Arc::new(planner.compile_seeded(g, cfg.seed));
+                        AnyEngine::build(plan, precision, pool.clone())
+                    }
+                };
+                slot.insert(engine);
             }
         }
         let entries = manifest.entries.iter().map(|e| (e.name.clone(), e.clone())).collect();
-        NativeRuntime { engines, entries, pool, events: Arc::new(Mutex::new(Events::default())) }
+        NativeRuntime {
+            engines,
+            entries,
+            pool,
+            events: Arc::new(Mutex::new(Events::default())),
+            plan_stats,
+        }
+    }
+
+    /// Plan-cache counters from this runtime's startup: artifact hits,
+    /// fallback compiles, load failures, publishes. All zeros when no
+    /// [`NativeConfig::plan_store`] was configured.
+    pub fn plan_stats(&self) -> PlanCacheStats {
+        self.plan_stats
     }
 
     /// The worker pool shared by every route's engine.
@@ -349,6 +504,150 @@ mod tests {
         assert!(diff < 1e-3, "f32 tier diverges from f64 tier: {diff}");
         // identical event accounting across tiers
         assert_eq!(rt32.events(), rt64.events());
+    }
+
+    fn temp_store_dir(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("wingan_serve_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn cold_build_publishes_and_warm_build_loads_without_planning() {
+        let dir = temp_store_dir("warm");
+        let cfg = NativeConfig { plan_store: Some(dir.clone()), ..tiny_cfg() };
+        // cold start: empty store — both routes (winograd + tdc) compile
+        // in-process and publish their artifacts
+        let cold = NativeRuntime::build(&cfg);
+        let s = cold.plan_stats();
+        assert_eq!(s.artifact_hits, 0);
+        assert_eq!(s.fallback_compiles, 2);
+        assert_eq!(s.published, 2);
+        assert_eq!(s.load_failures, 0);
+        // warm start: every route comes straight off disk, the planner is
+        // never invoked
+        let warm = NativeRuntime::build(&cfg);
+        let s = warm.plan_stats();
+        assert_eq!(s.artifact_hits, 2);
+        assert_eq!(s.fallback_compiles, 0);
+        assert_eq!(s.load_failures, 0);
+        // and the loaded plans execute bit-identically to the compiled ones
+        let e = cold.entries.get("dcgan_winograd_b2").unwrap().clone();
+        let x: Vec<f32> = (0..e.input_len()).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+        assert_eq!(cold.execute(&e.name, &x).unwrap(), warm.execute(&e.name, &x).unwrap());
+        let t = cold.entries.get("dcgan_tdc_b1").unwrap().clone();
+        let xt = &x[..t.input_len()];
+        assert_eq!(cold.execute(&t.name, xt).unwrap(), warm.execute(&t.name, xt).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn no_store_configured_reports_zero_plan_stats() {
+        let rt = NativeRuntime::build(&tiny_cfg());
+        assert_eq!(rt.plan_stats(), crate::artifact::PlanCacheStats::default());
+    }
+
+    #[test]
+    fn corrupt_artifacts_fall_back_cleanly_and_are_counted() {
+        let dir = temp_store_dir("corrupt");
+        let cfg = NativeConfig { plan_store: Some(dir.clone()), ..tiny_cfg() };
+        let cold = NativeRuntime::build(&cfg);
+        assert_eq!(cold.plan_stats().published, 2);
+        // truncate every published artifact to garbage
+        for entry in std::fs::read_dir(dir.join("tiny")).unwrap() {
+            let path = entry.unwrap().path();
+            std::fs::write(&path, b"WGANPLAN truncated mid-header").unwrap();
+        }
+        let rebuilt = NativeRuntime::build(&cfg);
+        let s = rebuilt.plan_stats();
+        assert_eq!(s.load_failures, 2, "both corrupt artifacts must be counted");
+        assert_eq!(s.fallback_compiles, 2, "and both routes must recompile");
+        // the fallback republished valid artifacts and still serves
+        // correct, bit-identical outputs
+        let e = cold.entries.get("dcgan_winograd_b1").unwrap().clone();
+        let x: Vec<f32> = (0..e.input_len()).map(|i| ((i % 5) as f32 - 2.0) / 2.0).collect();
+        assert_eq!(cold.execute(&e.name, &x).unwrap(), rebuilt.execute(&e.name, &x).unwrap());
+        let healed = NativeRuntime::build(&cfg);
+        assert_eq!(healed.plan_stats().artifact_hits, 2, "publish-on-fallback heals the store");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn seed_mismatched_artifacts_are_served_around_but_never_overwritten() {
+        let dir = temp_store_dir("seedkeep");
+        let cfg = NativeConfig {
+            precision: Some(Precision::F64),
+            plan_store: Some(dir.clone()),
+            ..tiny_cfg()
+        }; // weight seed 42 (the default)
+        NativeRuntime::build(&cfg);
+        let wino_path = dir.join("tiny/dcgan.winograd.f64.plan");
+        let before = std::fs::read(&wino_path).unwrap();
+        // a server misconfigured to another weight seed: every route falls
+        // back to compilation, but the seed-42 store must survive intact
+        let other = NativeRuntime::build(&NativeConfig { seed: 7, ..cfg.clone() });
+        let s = other.plan_stats();
+        assert_eq!(s.artifact_hits, 0);
+        assert_eq!(s.load_failures, 2);
+        assert_eq!(s.fallback_compiles, 2);
+        assert_eq!(s.published, 0, "a seed mismatch must not overwrite the store");
+        assert_eq!(std::fs::read(&wino_path).unwrap(), before, "artifact bytes untouched");
+        // and the original configuration still boots warm
+        let warm = NativeRuntime::build(&cfg);
+        assert_eq!(warm.plan_stats().artifact_hits, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shape_stale_artifacts_are_recompiled_not_served() {
+        let dir = temp_store_dir("stale");
+        // park a *Small*-scale plan under the Tiny winograd key: every
+        // decode/key check passes, but the geometry belongs to another zoo
+        // scale — serving it would panic at request time
+        let store = PlanStore::open(dir.clone());
+        let small = Planner::default().compile_seeded(&zoo::dcgan(Scale::Small), 42);
+        let key = PlanKey::new("dcgan", Scale::Tiny, Precision::F64, "winograd", 42);
+        store.publish(&key, &small).unwrap();
+        let cfg = NativeConfig {
+            precision: Some(Precision::F64),
+            plan_store: Some(dir.clone()),
+            ..tiny_cfg()
+        };
+        let rt = NativeRuntime::build(&cfg);
+        let s = rt.plan_stats();
+        assert_eq!(s.artifact_hits, 0, "a shape-stale artifact must never be served");
+        assert_eq!(s.load_failures, 1, "the stale winograd artifact is counted");
+        assert_eq!(s.fallback_compiles, 2, "both routes recompile (tdc was simply missing)");
+        // the fallback serves the *current* zoo's shapes
+        let e = rt.entries.get("dcgan_winograd_b1").unwrap().clone();
+        let out = rt.execute(&e.name, &vec![0.5; e.input_len()]).unwrap();
+        assert_eq!(out.len(), e.output_len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn forced_precision_store_round_trips_the_f32_tier() {
+        let dir = temp_store_dir("f32tier");
+        let cfg = NativeConfig {
+            precision: Some(Precision::F32),
+            plan_store: Some(dir.clone()),
+            ..tiny_cfg()
+        };
+        let cold = NativeRuntime::build(&cfg);
+        assert_eq!(cold.engine("dcgan", "winograd").unwrap().precision(), Precision::F32);
+        // the fast route's artifact is the lowered f32 plan; the tdc
+        // anchor's artifact is f64
+        assert!(dir.join("tiny/dcgan.winograd.f32.plan").exists());
+        assert!(dir.join("tiny/dcgan.tdc.f64.plan").exists());
+        let warm = NativeRuntime::build(&cfg);
+        assert_eq!(warm.plan_stats().artifact_hits, 2);
+        assert_eq!(warm.engine("dcgan", "winograd").unwrap().precision(), Precision::F32);
+        // loaded f32 plan == lowered-then-roundtripped plan, bit for bit
+        let e = cold.entries.get("dcgan_winograd_b1").unwrap().clone();
+        let x: Vec<f32> = (0..e.input_len()).map(|i| ((i % 9) as f32 - 4.0) / 4.0).collect();
+        assert_eq!(cold.execute(&e.name, &x).unwrap(), warm.execute(&e.name, &x).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -75,7 +75,11 @@ impl Activation {
 }
 
 /// One generator layer's geometry plus its hand-off activation.
-#[derive(Clone, Copy, Debug)]
+///
+/// `PartialEq` compares every field — the plan-artifact staleness guard
+/// (`engine::serve`) relies on that to track any future field
+/// automatically, so keep it derived.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Layer {
     pub kind: Kind,
     pub c_in: usize,
@@ -164,11 +168,33 @@ impl Gan {
 /// `Small` = channels / 8 (matches the AOT artifacts for the CPU box);
 /// `Tiny` = channels / 32 (rust-only: fast enough for debug-mode engine /
 /// serving tests that execute real whole-generator tensors).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Scale {
     Paper,
     Small,
     Tiny,
+}
+
+impl Scale {
+    /// Canonical lowercase label (`"paper"` / `"small"` / `"tiny"`) — the
+    /// name the CLI flags speak and the plan store's directory layout uses.
+    pub fn label(self) -> &'static str {
+        match self {
+            Scale::Paper => "paper",
+            Scale::Small => "small",
+            Scale::Tiny => "tiny",
+        }
+    }
+
+    /// Parse a user-facing scale name (the inverse of [`Scale::label`]).
+    pub fn parse(s: &str) -> Result<Scale, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "paper" => Ok(Scale::Paper),
+            "small" => Ok(Scale::Small),
+            "tiny" => Ok(Scale::Tiny),
+            other => Err(format!("unknown scale '{other}' (expected paper, small or tiny)")),
+        }
+    }
 }
 
 fn ch(c: usize, scale: Scale) -> usize {
@@ -338,6 +364,15 @@ mod tests {
             let (c, h, w) = prev.unwrap();
             assert_eq!((c, h, w), (3, 64, 64), "{}", g.name);
         }
+    }
+
+    #[test]
+    fn scale_labels_roundtrip() {
+        for s in [Scale::Paper, Scale::Small, Scale::Tiny] {
+            assert_eq!(Scale::parse(s.label()).unwrap(), s);
+        }
+        assert_eq!(Scale::parse(" TINY ").unwrap(), Scale::Tiny);
+        assert!(Scale::parse("huge").is_err());
     }
 
     #[test]

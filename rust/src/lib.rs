@@ -23,6 +23,7 @@
 //! | [`winograd`] | F(2×2, 3×3) transforms, Table-I sparsity, reordered layout (§II.B, §III.B) |
 //! | [`gan`] | Table-I model zoo + workload characterisation |
 //! | [`engine`] | plan compile → two-level parallel execute → native serving (§IV dataflow) |
+//! | [`artifact`] | versioned plan serialization + on-disk store (AOT compile → warm serve) |
 //! | [`coordinator`] | router, dynamic batcher, serving engine thread, metrics |
 //! | [`runtime`] | PJRT artifact manifest + (offline-gated) executor |
 //! | [`accel`] | line buffers, functional dataflow, cycle model (§IV.B, §V) |
@@ -40,6 +41,13 @@
 //! scheduling — bit-identical (f64) to the layer-composed `tdc`
 //! standard-DeConv reference on the exact datapath, and invariant, bit for
 //! bit, to worker count and batch schedule everywhere.
+//!
+//! Compiled plans are also **deployment artifacts** ([`artifact`]): a
+//! versioned, checksummed binary codec round-trips every plan bit-exactly,
+//! and an on-disk [`artifact::PlanStore`] turns serving cold-start into a
+//! file read — `wingan compile` ahead of time, `wingan serve --plan-store`
+//! boots without invoking the planner (falling back to in-process
+//! compilation, then publishing, when artifacts are missing).
 //!
 //! The execution datapath is **precision-tiered** ([`util::elem::Elem`],
 //! [`engine::Precision`]): every kernel is generic over the scalar
@@ -61,6 +69,7 @@
 #![allow(clippy::needless_range_loop, clippy::type_complexity)]
 
 pub mod accel;
+pub mod artifact;
 pub mod benchlib;
 pub mod cli;
 pub mod coordinator;

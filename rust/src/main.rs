@@ -6,18 +6,23 @@
 //!   dse                 design-space exploration (eq. 5-9 roofline sweep)
 //!   verify              load every artifact, execute, check vs jax goldens
 //!   serve               run the serving coordinator on a synthetic workload
+//!   compile             AOT-compile zoo plans into an on-disk plan store
+//!   plan inspect FILE   print the manifest view of one plan artifact
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use wingan::accel::{simulate_model, AccelConfig};
+use wingan::artifact::{describe, PlanKey, PlanStore};
 use wingan::cli::Args;
 use wingan::coordinator::{Coordinator, ServeConfig};
 use wingan::energy::EnergyParams;
+use wingan::engine::{NativeConfig, PlanOptions, Planner, Precision, ROUTE_METHODS};
 use wingan::gan::workload::Method;
 use wingan::gan::zoo::{self, Scale};
 use wingan::report;
 use wingan::runtime::{Manifest, Runtime};
+use wingan::util::json::{self, Json};
 use wingan::util::prng::Rng;
 
 const USAGE: &str = "\
@@ -32,6 +37,10 @@ USAGE: wingan <subcommand> [flags]
   serve  [--artifacts DIR] [--native] [--scale small|tiny] [--model dcgan]
          [--method winograd] [--requests 64] [--rate 200] [--max-wait-ms 20]
          [--seed 7] [--workers N] [--precision f32|f64|auto]
+         [--plan-store DIR] [--weight-seed 42] [--check-compile]
+  compile [--store DIR] [--scale small|tiny|all] [--models dcgan,gpgan]
+          [--seed 42]
+  plan   inspect <artifact-file>
 
 serve runs on the native precompiled-plan engine when --native is given or
 when the PJRT artifacts are unavailable (this offline build always is).
@@ -41,6 +50,17 @@ when the PJRT artifacts are unavailable (this offline build always is).
 memory traffic), f64 (the bit-exact reference tier), or auto/absent
 (WINGAN_PRECISION env, then the per-model dse recommendation). The tdc
 reference route always serves f64.
+--plan-store boots route plans from AOT artifacts (see `compile`) instead
+of compiling at startup; missing/corrupt artifacts fall back to in-process
+compilation and are (re)published. --weight-seed picks the native weight
+seed and must match the store's `compile --seed` to boot warm (both
+default 42; --seed only seeds the request workload). --check-compile
+additionally boots a store-free coordinator and asserts both serve
+bitwise-identical outputs.
+
+compile AOT-compiles zoo generator plans into a plan store: every model x
+route method (winograd + tdc) x precision tier (f64 always, f32 for the
+fast routes) at the serving scales, plus a human-readable manifest.json.
 ";
 
 fn main() {
@@ -51,6 +71,14 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // only `plan` takes positional arguments after the subcommand; a stray
+    // positional anywhere else is a typo, not a default to run with
+    if args.subcommand.as_deref() != Some("plan") {
+        if let Err(e) = args.reject_positionals() {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
     let rc = match args.subcommand.as_deref() {
         Some("tables") | Some("bench-tables") => cmd_tables(&args),
         Some("sim") => cmd_sim(&args),
@@ -60,6 +88,8 @@ fn main() {
         }
         Some("verify") => cmd_verify(&args),
         Some("serve") => cmd_serve(&args),
+        Some("compile") => cmd_compile(&args),
+        Some("plan") => cmd_plan(&args),
         Some("version") => {
             println!("wingan {}", wingan::version());
             Ok(())
@@ -167,42 +197,91 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_usize("seed", 7).map_err(anyhow::Error::msg)? as u64;
     let workers = args.get_workers().map_err(anyhow::Error::msg)?;
     let precision = args.get_precision().map_err(anyhow::Error::msg)?;
+    let plan_store = args.get("plan-store").map(PathBuf::from);
+    // weight seed for the native plans — must match `compile --seed` for a
+    // plan store to boot warm (both default to 42). Distinct from --seed,
+    // which seeds the synthetic request workload.
+    let weight_seed = args.get_usize("weight-seed", 42).map_err(anyhow::Error::msg)? as u64;
 
     let serve_cfg = ServeConfig {
         max_wait: Duration::from_millis(max_wait as u64),
         preload_models: Some(vec![model.clone()]),
     };
-    let use_native =
-        args.has("native") || !Path::new(dir).join("manifest.json").exists();
+    // a plan store only means something to the native backend
+    let use_native = args.has("native")
+        || plan_store.is_some()
+        || !Path::new(dir).join("manifest.json").exists();
     let t0 = Instant::now();
+    let mut native_cfg = None;
     let coord = if use_native {
-        let scale = match args.get_or("scale", "small") {
-            "tiny" => wingan::gan::zoo::Scale::Tiny,
-            "small" => wingan::gan::zoo::Scale::Small,
-            other => anyhow::bail!(
-                "--scale: '{other}' is not one of small|tiny (native serving executes \
-                 real tensors; paper-scale channels are cycle-model territory)"
-            ),
+        let scale = serving_scale(args)?;
+        let cfg = NativeConfig {
+            scale,
+            workers,
+            precision,
+            seed: weight_seed,
+            plan_store: plan_store.clone(),
+            ..Default::default()
         };
-        println!(
-            "compiling native engine plans for {model} ({scale:?} scale, pool of {} workers, \
-             precision policy {:?})...",
-            wingan::engine::resolve_workers(workers),
-            wingan::engine::resolve_precision(precision),
-        );
-        Coordinator::start_native(
-            wingan::engine::NativeConfig { scale, workers, precision, ..Default::default() },
-            serve_cfg,
-        )?
+        match &plan_store {
+            Some(store) => println!(
+                "booting native engine plans for {model} from plan store {} \
+                 ({scale:?} scale, pool of {} workers, precision policy {:?})...",
+                store.display(),
+                wingan::engine::resolve_workers(workers),
+                wingan::engine::resolve_precision(precision),
+            ),
+            None => println!(
+                "compiling native engine plans for {model} ({scale:?} scale, pool of {} workers, \
+                 precision policy {:?})...",
+                wingan::engine::resolve_workers(workers),
+                wingan::engine::resolve_precision(precision),
+            ),
+        }
+        native_cfg = Some(cfg.clone());
+        Coordinator::start_native(cfg, serve_cfg.clone())?
     } else {
         let manifest = Manifest::load(Path::new(dir))?;
         println!("loading + compiling {model} artifacts...");
-        Coordinator::start(manifest, serve_cfg)?
+        Coordinator::start(manifest, serve_cfg.clone())?
     };
     println!("engine ready in {:?}", t0.elapsed());
+    if plan_store.is_some() {
+        let s = coord.metrics().plan_cache;
+        println!(
+            "plan cache: {} artifact hits, {} fallback compiles, {} load failures, \
+             {} published",
+            s.artifact_hits, s.fallback_compiles, s.load_failures, s.published
+        );
+    }
 
     let route = coord.router().route(&model, &method).map_err(anyhow::Error::msg)?;
     let input_len = route.sample_input_len;
+
+    // CI round-trip gate: the store-backed coordinator must serve exactly
+    // what a compile-in-process coordinator serves
+    if args.has("check-compile") {
+        let cfg = native_cfg
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("--check-compile requires the native backend"))?;
+        let baseline =
+            Coordinator::start_native(NativeConfig { plan_store: None, ..cfg }, serve_cfg.clone())?;
+        let mut crng = Rng::new(seed ^ 0x5EED_C0DE);
+        for i in 0..4 {
+            let input = crng.normal_vec_f32(input_len);
+            let a = coord.generate(&model, &method, input.clone()).map_err(anyhow::Error::msg)?;
+            let b = baseline.generate(&model, &method, input).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(
+                a.output == b.output,
+                "request {i}: store-served output diverges from compile-in-process"
+            );
+        }
+        baseline.shutdown();
+        println!(
+            "check-compile: store-served outputs match in-process compilation bit for bit \
+             (4 probe requests are included in the serving report below)"
+        );
+    }
     let buckets = route.bucket_sizes();
     println!(
         "serving {n_requests} requests to {model}/{method} (Poisson {rate}/s, buckets {buckets:?})"
@@ -235,4 +314,144 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     );
     coord.shutdown();
     Ok(())
+}
+
+/// Parse `--scale` for commands that execute real tensors (native serving,
+/// AOT plan compilation): small|tiny only — paper-scale channel widths are
+/// cycle-model territory.
+fn serving_scale(args: &Args) -> anyhow::Result<Scale> {
+    match Scale::parse(args.get_or("scale", "small")) {
+        Ok(s) if s != Scale::Paper => Ok(s),
+        // paper is a valid Scale elsewhere but not here, so don't forward
+        // Scale::parse's generic message (which would suggest it)
+        _ => anyhow::bail!(
+            "--scale: '{}' is not one of small|tiny (native plans execute real tensors; \
+             paper-scale channels are cycle-model territory)",
+            args.get_or("scale", "small")
+        ),
+    }
+}
+
+/// `wingan compile` — AOT-compile zoo generator plans into a [`PlanStore`]:
+/// for each model at each serving scale, the `winograd` route plan (DSE
+/// Auto) at both precision tiers and the `tdc` reference plan at f64, plus
+/// a human-readable `manifest.json` at the store root. `wingan serve
+/// --plan-store <dir>` then boots from these files without invoking the
+/// planner.
+fn cmd_compile(args: &Args) -> anyhow::Result<()> {
+    let store = PlanStore::open(args.get_or("store", "planstore"));
+    let seed = args.get_usize("seed", 42).map_err(anyhow::Error::msg)? as u64;
+    let scales: Vec<Scale> = match args.get("scale") {
+        None | Some("all") => vec![Scale::Small, Scale::Tiny],
+        Some(_) => vec![serving_scale(args)?],
+    };
+    let models: Option<Vec<String>> = args
+        .get("models")
+        .map(|list| list.split(',').map(wingan::engine::model_id).collect());
+    if let Some(allow) = &models {
+        // a typo'd model name must fail loudly, not produce a store that
+        // silently cold-starts that model forever
+        let known: Vec<String> =
+            zoo::all(Scale::Tiny).iter().map(|g| wingan::engine::model_id(g.name)).collect();
+        for m in allow {
+            anyhow::ensure!(
+                known.contains(m),
+                "--models: unknown model '{m}' (known: {})",
+                known.join(", ")
+            );
+        }
+    }
+
+    println!("compiling plan artifacts into {} (seed {seed})", store.root().display());
+    let mut entries: Vec<Json> = Vec::new();
+    let t0 = Instant::now();
+    for &scale in &scales {
+        for g in zoo::all(scale) {
+            let id = wingan::engine::model_id(g.name);
+            if let Some(allow) = &models {
+                if !allow.contains(&id) {
+                    continue;
+                }
+            }
+            for (method, select) in ROUTE_METHODS {
+                let planner = Planner::new(PlanOptions { select, ..Default::default() });
+                let tc = Instant::now();
+                let plan = planner.compile_seeded(&g, seed);
+                let compile_time = tc.elapsed();
+                // the tdc reference route only ever serves f64; the fast
+                // route is published at both tiers so any resolved serving
+                // precision boots warm
+                let tiers: &[Precision] = if method == "tdc" {
+                    &[Precision::F64]
+                } else {
+                    &[Precision::F64, Precision::F32]
+                };
+                for &tier in tiers {
+                    let key = PlanKey::new(&id, scale, tier, method, seed);
+                    let path = match tier {
+                        Precision::F64 => store.publish(&key, &plan)?,
+                        Precision::F32 => store.publish(&key, &plan.lower::<f32>())?,
+                    };
+                    let bytes = std::fs::metadata(&path)?.len();
+                    println!(
+                        "  {id:<8} {:<5} {method:<8} {tier}  {bytes:>12} B  \
+                         (compiled in {compile_time:?})",
+                        scale.label(),
+                    );
+                    entries.push(json::obj(vec![
+                        ("model", json::s(&id)),
+                        ("scale", json::s(scale.label())),
+                        ("method", json::s(method)),
+                        ("precision", json::s(tier.label())),
+                        ("file", json::s(&key.rel_path().display().to_string())),
+                        ("bytes", json::num(bytes as f64)),
+                        ("layers", json::num(plan.layers.len() as f64)),
+                        ("winograd_layers", json::num(plan.n_winograd_layers() as f64)),
+                    ]));
+                }
+            }
+        }
+    }
+    anyhow::ensure!(!entries.is_empty(), "no models matched the --models filter");
+    let n = entries.len();
+    let manifest = json::obj(vec![
+        ("version", json::num(wingan::artifact::FORMAT_VERSION as f64)),
+        ("seed", json::num(seed as f64)),
+        ("artifacts", Json::Arr(entries)),
+    ]);
+    // same atomic write-then-rename contract the artifacts get: a reader
+    // polling the manifest never observes a torn file (and a failed write
+    // leaves no stray temp behind)
+    let manifest_path = store.root().join("manifest.json");
+    wingan::artifact::atomic_write(&manifest_path, json::to_string_pretty(&manifest).as_bytes())?;
+    println!(
+        "published {n} artifacts + {} in {:?}",
+        manifest_path.display(),
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+/// `wingan plan inspect <artifact>` — print one artifact's manifest view
+/// (model, scale, precision, per-layer method/geometry, payload sizes).
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    match args.positional(0) {
+        Some("inspect") => {
+            anyhow::ensure!(
+                args.n_positionals() == 2,
+                "usage: wingan plan inspect <artifact-file>"
+            );
+            let path = args
+                .positional(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: wingan plan inspect <artifact-file>"))?;
+            let bytes = std::fs::read(path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            print!("{}", describe(&bytes, path)?);
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown plan action {:?} (usage: wingan plan inspect <artifact-file>)",
+            other.unwrap_or("<none>")
+        ),
+    }
 }

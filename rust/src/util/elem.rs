@@ -110,6 +110,14 @@ pub trait Elem:
     fn to_f32(self) -> f32;
     /// Hyperbolic tangent at this precision (the `tanh` output layers).
     fn tanh(self) -> Self;
+    /// Append this value's IEEE-754 little-endian byte representation
+    /// (4 bytes for `f32`, 8 for `f64`) — the on-disk word encoding of the
+    /// plan-artifact codec ([`crate::artifact`]).
+    fn write_le(self, out: &mut Vec<u8>);
+    /// Decode one value from exactly [`Precision::word_bytes`] little-endian
+    /// bytes: the bit-exact inverse of [`Elem::write_le`] at either
+    /// precision (round-tripping a plan through the codec changes no bits).
+    fn from_le(bytes: &[u8]) -> Self;
 }
 
 impl Elem for f32 {
@@ -136,6 +144,14 @@ impl Elem for f32 {
     fn tanh(self) -> f32 {
         f32::tanh(self)
     }
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn from_le(bytes: &[u8]) -> f32 {
+        f32::from_le_bytes(bytes.try_into().expect("f32 word is 4 bytes"))
+    }
 }
 
 impl Elem for f64 {
@@ -161,6 +177,14 @@ impl Elem for f64 {
     #[inline]
     fn tanh(self) -> f64 {
         f64::tanh(self)
+    }
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn from_le(bytes: &[u8]) -> f64 {
+        f64::from_le_bytes(bytes.try_into().expect("f64 word is 8 bytes"))
     }
 }
 
@@ -192,6 +216,25 @@ mod tests {
         let x = 0.1f64;
         assert_eq!(<f32 as Elem>::from_f64(x), 0.1f32);
         assert_eq!(0.1f32.to_f64() as f32, 0.1f32);
+    }
+
+    #[test]
+    fn le_bytes_roundtrip_is_bit_exact() {
+        let mut buf = Vec::new();
+        for v in [0.0f64, -0.0, 0.1, -1.5e300, f64::MIN_POSITIVE] {
+            buf.clear();
+            v.write_le(&mut buf);
+            assert_eq!(buf.len(), Precision::F64.word_bytes());
+            let back = <f64 as Elem>::from_le(&buf);
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+        for v in [0.0f32, -0.0, 0.1, 3.4e38, f32::MIN_POSITIVE] {
+            buf.clear();
+            v.write_le(&mut buf);
+            assert_eq!(buf.len(), Precision::F32.word_bytes());
+            let back = <f32 as Elem>::from_le(&buf);
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! Integration tests for the plan-artifact subsystem's serving workflow:
+//! corrupt-artifact handling end to end (every failure typed, every
+//! fallback clean) and the AOT compile → warm-serve path through the
+//! coordinator, including the plan-cache metrics counters.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+use wingan::artifact::{AnyPlan, ArtifactError, PlanKey, PlanStore};
+use wingan::coordinator::{Coordinator, ServeConfig};
+use wingan::engine::{Engine, NativeConfig, NativeRuntime, Planner, Precision};
+use wingan::gan::zoo::{self, Scale};
+use wingan::util::prng::Rng;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("wingan_artifact_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn published_store(tag: &str) -> (PlanStore, PlanKey, Vec<u8>) {
+    let store = PlanStore::open(temp_dir(tag));
+    let plan = Planner::default().compile_seeded(&zoo::dcgan(Scale::Tiny), 7);
+    let key = PlanKey::new("dcgan", Scale::Tiny, Precision::F64, "winograd", 7);
+    let path = store.publish(&key, &plan).unwrap();
+    let bytes = std::fs::read(path).unwrap();
+    (store, key, bytes)
+}
+
+/// The corrupt-artifact matrix: truncation, bad magic, wrong format
+/// version, checksum damage, and a precision-tag/requested-tier mismatch
+/// must each surface as the matching typed error — no panics anywhere.
+#[test]
+fn corrupt_artifacts_return_typed_errors() {
+    let (store, key, good) = published_store("matrix");
+    let path = store.path(&key);
+    let reload = |bytes: &[u8]| {
+        std::fs::write(&path, bytes).unwrap();
+        store.load_uncached(&key)
+    };
+
+    // truncated file (several cut points, including mid-header)
+    for cut in [0usize, 5, 11, 40, good.len() / 3, good.len() - 1] {
+        match reload(&good[..cut]) {
+            Err(ArtifactError::Truncated { .. }) | Err(ArtifactError::BadMagic { .. }) => {}
+            other => panic!("cut {cut}: expected truncation-class error, got {other:?}"),
+        }
+    }
+
+    // bad magic
+    let mut bytes = good.clone();
+    bytes[..8].copy_from_slice(b"NOTAPLAN");
+    assert!(matches!(reload(&bytes), Err(ArtifactError::BadMagic { .. })));
+
+    // wrong format version (the version u32 follows the 8-byte magic)
+    let mut bytes = good.clone();
+    bytes[8..12].copy_from_slice(&2u32.to_le_bytes());
+    assert!(matches!(
+        reload(&bytes),
+        Err(ArtifactError::UnsupportedVersion { found: 2 })
+    ));
+
+    // checksum mismatch: flip a payload byte deep in the stream
+    let mut bytes = good.clone();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    assert!(matches!(reload(&bytes), Err(ArtifactError::ChecksumMismatch { .. })));
+
+    // precision-tag vs requested-tier mismatch: the intact f64 artifact
+    // requested under the f32 key
+    std::fs::write(&path, &good).unwrap();
+    let f32_key = PlanKey { precision: Precision::F32, ..key.clone() };
+    std::fs::copy(&path, store.path(&f32_key)).unwrap();
+    assert!(matches!(
+        store.load_uncached(&f32_key),
+        Err(ArtifactError::PrecisionMismatch {
+            artifact: Precision::F64,
+            requested: Precision::F32,
+        })
+    ));
+
+    // and the pristine file still loads
+    assert!(store.load_uncached(&key).is_ok());
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+/// `NativeRuntime::build` survives a store where every artifact is broken
+/// in a different way: each failure is counted, each route recompiles, and
+/// execution matches a store-free runtime bit for bit.
+#[test]
+fn native_runtime_falls_back_cleanly_from_a_poisoned_store() {
+    let dir = temp_dir("poisoned");
+    let cfg = NativeConfig {
+        scale: Scale::Tiny,
+        buckets: vec![1, 2],
+        workers: 2,
+        models: Some(vec!["dcgan".into()]),
+        plan_store: Some(dir.clone()),
+        ..Default::default()
+    };
+    // seed the store, then poison both route artifacts differently
+    let seeded = NativeRuntime::build(&cfg);
+    assert_eq!(seeded.plan_stats().published, 2);
+    let scale_dir = dir.join("tiny");
+    let mut files: Vec<PathBuf> =
+        std::fs::read_dir(&scale_dir).unwrap().map(|e| e.unwrap().path()).collect();
+    files.sort();
+    assert_eq!(files.len(), 2);
+    std::fs::write(&files[0], b"garbage, not even magic").unwrap();
+    let good = std::fs::read(&files[1]).unwrap();
+    std::fs::write(&files[1], &good[..good.len() - 9]).unwrap();
+
+    let rebuilt = NativeRuntime::build(&cfg);
+    let stats = rebuilt.plan_stats();
+    assert_eq!(stats.load_failures, 2);
+    assert_eq!(stats.fallback_compiles, 2);
+    assert_eq!(stats.artifact_hits, 0);
+    assert_eq!(stats.published, 2, "fallback republishes");
+
+    let clean = NativeRuntime::build(&NativeConfig { plan_store: None, ..cfg.clone() });
+    let mut rng = Rng::new(99);
+    for name in ["dcgan_winograd_b2", "dcgan_tdc_b1"] {
+        let engine = clean.engine("dcgan", name.split('_').nth(1).unwrap()).unwrap();
+        let batch = if name.ends_with("b2") { 2 } else { 1 };
+        let x = rng.normal_vec_f32(batch * engine.input_len());
+        assert_eq!(
+            rebuilt.execute(name, &x).unwrap(),
+            clean.execute(name, &x).unwrap(),
+            "{name}: fallback path must serve the same bits as a store-free build"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The AOT compile → warm-serve workflow through the coordinator: a store
+/// populated ahead of time boots the native server without invoking the
+/// planner (observable via the plan-cache metrics counters), and serves
+/// responses bitwise-identical to a compile-in-process coordinator.
+#[test]
+fn coordinator_boots_warm_from_a_populated_store_and_matches_in_process() {
+    let dir = temp_dir("warmserve");
+    // "wingan compile" equivalent: publish both route plans ahead of time
+    // (the fast route at both tiers, so any resolved precision boots warm)
+    let store = PlanStore::open(dir.clone());
+    for (method, select) in wingan::engine::ROUTE_METHODS {
+        let planner = Planner::new(wingan::engine::PlanOptions {
+            select,
+            ..Default::default()
+        });
+        let plan = planner.compile_seeded(&zoo::dcgan(Scale::Tiny), 42);
+        let k64 = PlanKey::new("dcgan", Scale::Tiny, Precision::F64, method, 42);
+        store.publish(&k64, &plan).unwrap();
+        if method == "winograd" {
+            let k32 = PlanKey::new("dcgan", Scale::Tiny, Precision::F32, method, 42);
+            store.publish(&k32, &plan.lower::<f32>()).unwrap();
+        }
+    }
+
+    let serve_cfg = ServeConfig {
+        max_wait: Duration::from_millis(5),
+        preload_models: Some(vec!["dcgan".into()]),
+    };
+    let native = NativeConfig {
+        scale: Scale::Tiny,
+        buckets: vec![1, 2],
+        workers: 2,
+        plan_store: Some(dir.clone()),
+        ..Default::default()
+    };
+    let warm = Coordinator::start_native(native.clone(), serve_cfg.clone()).unwrap();
+    let m = warm.metrics();
+    assert_eq!(m.plan_cache.artifact_hits, 2, "both routes must come off disk");
+    assert_eq!(m.plan_cache.fallback_compiles, 0, "a warm store never invokes the planner");
+    assert_eq!(m.plan_cache.load_failures, 0);
+    assert!(m.used_plan_store());
+
+    let cold =
+        Coordinator::start_native(NativeConfig { plan_store: None, ..native }, serve_cfg).unwrap();
+    assert!(!cold.metrics().used_plan_store());
+
+    let route = warm.router().route("dcgan", "winograd").unwrap();
+    let mut rng = Rng::new(4242);
+    for _ in 0..3 {
+        let input = rng.normal_vec_f32(route.sample_input_len);
+        let a = warm.generate("dcgan", "winograd", input.clone()).unwrap();
+        let b = cold.generate("dcgan", "winograd", input).unwrap();
+        assert_eq!(a.output, b.output, "warm boot must serve the exact compiled bits");
+    }
+    warm.shutdown();
+    cold.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The store cache hands every caller the same `Arc` — one deserialized
+/// plan shared by all consumers — and a shared-store `Engine` built from
+/// it executes the exact plan bits.
+#[test]
+fn loaded_plans_are_shared_and_executable() {
+    let (store, key, _) = published_store("shared");
+    let a = store.load(&key).unwrap();
+    let b = store.load(&key).unwrap();
+    let (pa, pb) = match (&a, &b) {
+        (AnyPlan::F64(x), AnyPlan::F64(y)) => (x.clone(), y.clone()),
+        _ => panic!("expected the f64 tier"),
+    };
+    assert!(Arc::ptr_eq(&pa, &pb));
+    let engine = Engine::with_workers(pa, 2);
+    let mut rng = Rng::new(5);
+    let (c, h, w) = engine.plan().input_shape;
+    let x = wingan::util::tensor::Tensor3::from_vec(c, h, w, rng.normal_vec(c * h * w));
+    let run = engine.run(&x);
+    assert_eq!((run.y.c, run.y.h, run.y.w), engine.plan().output_shape);
+    assert!(run.events.mults > 0);
+    let _ = std::fs::remove_dir_all(store.root());
+}

@@ -807,3 +807,100 @@ fn prop_json_roundtrip() {
         }
     }
 }
+
+/// PR-5 acceptance pin, f64 tier: for every zoo model at `Scale::Tiny`
+/// (both route methods — DSE-raced `winograd` plans and forced-`tdc`
+/// reference plans), a plan serialized to the artifact codec and loaded
+/// back produces **bitwise-identical** engine outputs and identical
+/// `Events` to the freshly compiled plan, on randomized inputs.
+#[test]
+fn prop_plan_artifact_roundtrip_is_bitwise_invisible_f64() {
+    use wingan::artifact::{AnyPlan, PlanKey, PlanStore};
+    use wingan::engine::Precision;
+
+    let dir = std::env::temp_dir()
+        .join(format!("wingan_prop_store_f64_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = PlanStore::open(dir.clone());
+    for g in zoo::all(Scale::Tiny) {
+        for (method, select) in wingan::engine::ROUTE_METHODS {
+            let planner = Planner::new(PlanOptions { select, ..Default::default() });
+            let compiled = Arc::new(planner.compile_seeded(&g, 23));
+            let key = PlanKey::new(g.name, Scale::Tiny, Precision::F64, method, 23);
+            store.publish(&key, &*compiled).unwrap();
+            let loaded = match store.load(&key).unwrap() {
+                AnyPlan::F64(p) => p,
+                AnyPlan::F32(_) => panic!("published f64"),
+            };
+            let fresh = Engine::with_workers(compiled.clone(), 2);
+            let warm = Engine::with_workers(loaded, 2);
+            let (c, h, w) = compiled.input_shape;
+            forall(
+                "loaded f64 plan executes bit-identically to the compiled plan",
+                8,
+                0xA27 ^ g.name.len() as u64 ^ method.len() as u64,
+                |rng| Tensor3::from_vec(c, h, w, rng.normal_vec(c * h * w)),
+                |x| {
+                    let a = fresh.run(x);
+                    let b = warm.run(x);
+                    if a.y.max_abs_diff(&b.y) != 0.0 {
+                        return Err(format!("{} {method}: round trip changed bits", g.name));
+                    }
+                    if a.events != b.events || a.per_layer != b.per_layer {
+                        return Err(format!("{} {method}: round trip changed events", g.name));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// PR-5 acceptance pin, f32 tier: the artifact of a *lowered* f32 plan
+/// round-trips bitwise — a loaded f32 artifact executes identically to the
+/// lowered-then-roundtripped plan (lowering itself quantizes, so the f64
+/// tier is not the comparison anchor here).
+#[test]
+fn prop_plan_artifact_roundtrip_is_bitwise_invisible_f32() {
+    use wingan::artifact::{AnyPlan, PlanKey, PlanStore};
+    use wingan::engine::Precision;
+
+    let dir = std::env::temp_dir()
+        .join(format!("wingan_prop_store_f32_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = PlanStore::open(dir.clone());
+    for g in zoo::all(Scale::Tiny) {
+        let lowered = Arc::new(Planner::default().compile_seeded(&g, 23).lower::<f32>());
+        let key = PlanKey::new(g.name, Scale::Tiny, Precision::F32, "winograd", 23);
+        store.publish(&key, &*lowered).unwrap();
+        let loaded = match store.load(&key).unwrap() {
+            AnyPlan::F32(p) => p,
+            AnyPlan::F64(_) => panic!("published f32"),
+        };
+        let fresh = Engine::with_workers(lowered.clone(), 2);
+        let warm = Engine::with_workers(loaded, 2);
+        let (c, h, w) = lowered.input_shape;
+        forall(
+            "loaded f32 plan executes bit-identically to the lowered plan",
+            8,
+            0xF32A ^ g.name.len() as u64,
+            |rng| {
+                let x64 = Tensor3::from_vec(c, h, w, rng.normal_vec(c * h * w));
+                x64.cast_to::<f32>()
+            },
+            |x| {
+                let a = fresh.run(x);
+                let b = warm.run(x);
+                if a.y.max_abs_diff(&b.y) != 0.0 {
+                    return Err(format!("{}: f32 round trip changed bits", g.name));
+                }
+                if a.events != b.events {
+                    return Err(format!("{}: f32 round trip changed events", g.name));
+                }
+                Ok(())
+            },
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
