@@ -22,6 +22,7 @@ use wingan::gan::zoo::{self, Scale};
 use wingan::tdc;
 use wingan::util::prng::Rng;
 use wingan::util::tensor::{Filter4, Tensor3};
+use wingan::winograd::kernel::{multiply_batch, simd_available, KernelKind, RunList};
 use wingan::winograd::layout::{engine_multiply, reorder_filter, reorder_input_tile};
 use wingan::winograd::transforms::{filter_transform, input_transform, inverse_transform, M};
 
@@ -271,6 +272,133 @@ fn main() {
     report.metric("f64_tiles_per_sec_1w", m_batch1.throughput(tiles_per_run as usize));
     report.metric("f64_tiles_per_sec_parallel", m_batchn.throughput(tiles_per_run as usize));
 
+    // --- kernel dispatch: explicit SIMD vs the blocked scalar loop -------
+    // PR 6's tentpole: the Winograd GEMM dispatches to an arch-specific
+    // micro-kernel (AVX2/NEON, mul-then-add in the same ascending-c_in
+    // order — no FMA) compiled into the plan. The contract is *bitwise*
+    // identity at f64, so the head-to-head is pure throughput: same plan,
+    // same data, scalar vs SIMD dispatch, at 1 and N workers.
+    let simd_kind = if simd_available() { KernelKind::Simd } else { KernelKind::Scalar };
+    if !simd_available() {
+        println!("(host has no AVX2/NEON: the simd legs below dispatch the scalar kernel)");
+    }
+    let kplanner = |kernel| {
+        Planner::new(PlanOptions {
+            select: Select::Force(Method::Winograd),
+            kernel: wingan::engine::KernelSelect::Force(kernel),
+            ..Default::default()
+        })
+    };
+    let kscalar = Arc::new(kplanner(KernelKind::Scalar).compile_seeded(&zoo::dcgan(Scale::Paper), 7));
+    let ksimd = Arc::new(kplanner(simd_kind).compile_seeded(&zoo::dcgan(Scale::Paper), 7));
+    // the acceptance gate, checked on every bench run: kernel choice must
+    // never change the f64 bits, at any worker count
+    for workers in [1usize, wen.workers()] {
+        let ys = Engine::with_workers(kscalar.clone(), workers).run(&wx).y;
+        let yv = Engine::with_workers(ksimd.clone(), workers).run(&wx).y;
+        assert_eq!(
+            ys.max_abs_diff(&yv),
+            0.0,
+            "scalar and simd kernels must agree bit for bit ({workers} workers)"
+        );
+    }
+    let ks1 = Engine::with_workers(kscalar.clone(), 1);
+    let kv1 = Engine::with_workers(ksimd.clone(), 1);
+    let ksn = Engine::new(kscalar.clone());
+    let kvn = Engine::new(ksimd.clone());
+    let m_ks1 = wb.run("kernel: DCGAN-paper f64, scalar dispatch, 1 worker", || {
+        black_box(ks1.run(&wx).y.data.len())
+    });
+    let m_kv1 = wb.run("kernel: DCGAN-paper f64, simd dispatch, 1 worker", || {
+        black_box(kv1.run(&wx).y.data.len())
+    });
+    let m_ksn = wb.run(
+        &format!("kernel: DCGAN-paper f64, scalar dispatch, {} workers", ksn.workers()),
+        || black_box(ksn.run(&wx).y.data.len()),
+    );
+    let m_kvn = wb.run(
+        &format!("kernel: DCGAN-paper f64, simd dispatch, {} workers", kvn.workers()),
+        || black_box(kvn.run(&wx).y.data.len()),
+    );
+    println!("{}", speedup_line("simd vs scalar kernel (1 worker)", &m_ks1, &m_kv1));
+    println!("{}", speedup_line("simd vs scalar kernel (parallel)", &m_ksn, &m_kvn));
+    report.record(&m_ks1);
+    report.record(&m_kv1);
+    report.metric("simd_vs_scalar_speedup_1w", speedup(&m_ks1, &m_kv1));
+    report.metric("simd_vs_scalar_speedup_parallel", speedup(&m_ksn, &m_kvn));
+    report.metric("simd_available", if simd_available() { 1.0 } else { 0.0 });
+
+    // micro head-to-head on one paper-scale slab: the dispatched GEMM alone
+    // (no transforms, no gather), scalar vs SIMD over the widest layer
+    let klp = wplan
+        .layers
+        .iter()
+        .filter(|lp| lp.method == Method::Winograd && !lp.reordered.is_empty())
+        .max_by_key(|lp| lp.layer.c_in * lp.layer.c_out)
+        .expect("paper DCGAN has winograd layers");
+    let krf = &klp.reordered[0];
+    let ktiles = klp.tiles.tiles_w;
+    let kv = rng.normal_vec(16 * krf.c_in * ktiles);
+    let mut km = vec![0.0f64; krf.c_out * 16 * ktiles];
+    let m_micro_s = wb.run(
+        &format!("kernel micro: multiply_batch scalar ({}x{}, {ktiles} tiles)", krf.c_in, krf.c_out),
+        || black_box(multiply_batch(KernelKind::Scalar, krf, &kv, ktiles, &mut km)),
+    );
+    let m_micro_v = wb.run(
+        &format!("kernel micro: multiply_batch simd ({}x{}, {ktiles} tiles)", krf.c_in, krf.c_out),
+        || black_box(multiply_batch(simd_kind, krf, &kv, ktiles, &mut km)),
+    );
+    println!("{}", speedup_line("simd vs scalar kernel (micro GEMM)", &m_micro_s, &m_micro_v));
+    report.metric("simd_vs_scalar_speedup_micro", speedup(&m_micro_s, &m_micro_v));
+
+    // --- runtime zero-skip: dense slab vs injected dead c_in runs --------
+    // PR 6's sparsity leg: the run-list lets the GEMM skip whole dead
+    // c_in ranges per (position, c_out block). Kill ~1/4 of each block's
+    // channels and compare against the dense walk over the *same* zeroed
+    // slab — values must match exactly, work must drop.
+    {
+        let mut sparse_rf = krf.clone();
+        let (c_in, c_out, n_live) = (sparse_rf.c_in, sparse_rf.c_out, sparse_rf.live.len());
+        let dead = c_in / 4;
+        for pi in 0..n_live {
+            let lo = (pi * 7) % (c_in - dead + 1);
+            for co in 0..c_out {
+                for ci in lo..lo + dead {
+                    sparse_rf.u[(pi * c_out + co) * c_in + ci] = 0.0;
+                }
+            }
+        }
+        let mut dense_rf = sparse_rf.clone();
+        dense_rf.skip = None;
+        sparse_rf.skip = RunList::build(n_live, c_out, c_in, &sparse_rf.u);
+        let sk = sparse_rf.skip.as_ref().expect("injected runs must surface");
+        let frac = sk.skipped_products(c_out, c_in) as f64 / (n_live * c_out * c_in) as f64;
+        let mut md = vec![0.0f64; c_out * 16 * ktiles];
+        let mut ms = vec![0.0f64; c_out * 16 * ktiles];
+        let dense_mults = multiply_batch(simd_kind, &dense_rf, &kv, ktiles, &mut md);
+        let sparse_mults = multiply_batch(simd_kind, &sparse_rf, &kv, ktiles, &mut ms);
+        assert_eq!(md, ms, "zero-skip must not change the values");
+        assert!(sparse_mults < dense_mults, "zero-skip must elide work");
+        let m_dense = wb.run(
+            &format!("kernel micro: dense walk over {:.0}%-dead slab", frac * 100.0),
+            || black_box(multiply_batch(simd_kind, &dense_rf, &kv, ktiles, &mut md)),
+        );
+        let m_sparse = wb.run("kernel micro: zero-skip over the same slab", || {
+            black_box(multiply_batch(simd_kind, &sparse_rf, &kv, ktiles, &mut ms))
+        });
+        println!("{}", speedup_line("zero-skip vs dense on a 1/4-dead slab", &m_dense, &m_sparse));
+        println!(
+            "  -> zero-skip elides {:.1}% of products ({} of {} per tile)",
+            frac * 100.0,
+            sk.skipped_products(c_out, c_in),
+            n_live * c_out * c_in,
+        );
+        report.record(&m_dense);
+        report.record(&m_sparse);
+        report.metric("sparse_vs_dense_speedup", speedup(&m_dense, &m_sparse));
+        report.metric("sparse_dead_fraction", frac);
+    }
+
     // --- plan artifacts: AOT compile vs warm artifact load ---------------
     // PR 5's cold-start story: `wingan serve --plan-store` replaces the
     // startup recompile (phase decomposition + G g Gᵀ transforms + reorder
@@ -429,7 +557,7 @@ fn main() {
     report.record(&m_seq);
     report.record(&m_smp);
     report.metric("batch8_sample_level_speedup", speedup(&m_seq, &m_smp));
-    let path = std::path::Path::new("BENCH_pr5.json");
+    let path = std::path::Path::new("BENCH_pr6.json");
     report.write(path).expect("write bench trajectory json");
     println!("wrote {} (perf trajectory)", path.display());
 }

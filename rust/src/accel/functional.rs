@@ -96,6 +96,12 @@ pub fn run_winograd_deconv(x: &Tensor3, w: &Filter4, s: usize, p: usize) -> Func
     for (idx, ph) in phases.iter().enumerate() {
         let (py, px) = (idx / s, idx % s);
         let rf = reorder_filter(ph);
+        if rf.live.is_empty() {
+            // degenerate zero-tap phase: identically zero sub-filter, so
+            // its output samples stay at the pre-zeroed y — skip the whole
+            // dataflow for this phase (the engine does the same)
+            continue;
+        }
         let xp = phase_padded(x, ph, ho_t, wo_t);
 
         // input line buffer: n+m lines of the phase-padded map (paper §IV.B)

@@ -1,4 +1,4 @@
-//! Self-describing binary codec for compiled plans — format v1.
+//! Self-describing binary codec for compiled plans — format v2 (reads v1).
 //!
 //! The paper's whole pipeline is ahead-of-time: phase decomposition,
 //! `G g Gᵀ` filter transforms, sparsity reordering and DSE method selection
@@ -13,7 +13,7 @@
 //!
 //! ```text
 //! [8]  magic  "WGANPLAN"
-//! [4]  u32    format version (currently 1)
+//! [4]  u32    format version (currently 2; v1 still decodes)
 //! [1]  u8     precision tag  (1 = f32, 2 = f64)
 //! then one META section followed by exactly `layer_count` LAYR sections:
 //!   [4]  u32  section tag ("META" / "LAYR" as LE ASCII)
@@ -21,6 +21,20 @@
 //!   [..]      payload
 //!   [8]  u64  FNV-1a 64 checksum of the payload
 //! ```
+//!
+//! **v2 additions** (absent from v1 payloads): each LAYR section carries a
+//! one-byte GEMM micro-kernel tag (0 = scalar, 1 = simd) right after the
+//! tile-geometry words, and each reordered slab carries its runtime
+//! zero-skip run-list ([`crate::winograd::kernel::RunList`]) — a one-byte
+//! presence flag, then the block-offset and run arrays. Decoding **v1**
+//! artifacts re-derives both: the kernel resolves from the loading host's
+//! capability probe and the run-lists rebuild from the decoded slab
+//! weights, so old artifacts execute on the new dispatched datapath
+//! unchanged. Decoding **v2** rebuilds the run-lists too and rejects any
+//! artifact whose stored lists disagree with the rebuild — a stale or
+//! tampered skip section can never elide live products. A v2 kernel tag of
+//! `simd` on a host without AVX2/NEON quietly clamps to `scalar` (the plan
+//! is otherwise identical; the tag only picks the dispatch route).
 //!
 //! The META payload carries the model/deployment metadata (model name +
 //! route id, zoo scale, route method, weight seed, input/output shapes,
@@ -49,6 +63,7 @@ use crate::gan::zoo::{Activation, Kind, Layer};
 use crate::tdc::{self, PhaseFilter};
 use crate::util::elem::{Elem, Precision};
 use crate::util::tensor::Filter4;
+use crate::winograd::kernel::{simd_available, KernelKind, RunList};
 use crate::winograd::layout::ReorderedFilter;
 use crate::winograd::sparsity::Case;
 use crate::winograd::transforms::M as M_TILE;
@@ -57,11 +72,15 @@ use std::path::PathBuf;
 
 /// Leading file magic: identifies a wingan plan artifact.
 pub const MAGIC: [u8; 8] = *b"WGANPLAN";
-/// Current (and only) on-disk format version. Bump on any wire-format
-/// change; readers reject every other version with
-/// [`ArtifactError::UnsupportedVersion`] (see README "Artifacts & cold
-/// start" for the versioning policy).
-pub const FORMAT_VERSION: u32 = 1;
+/// Current on-disk format version — what [`encode`] writes. Bump on any
+/// wire-format change; readers accept
+/// [`MIN_FORMAT_VERSION`]`..=FORMAT_VERSION` and reject everything else
+/// with [`ArtifactError::UnsupportedVersion`] (see README "Artifacts &
+/// cold start" for the versioning policy).
+pub const FORMAT_VERSION: u32 = 2;
+/// Oldest format version this build still decodes (v1: no kernel tags, no
+/// zero-skip sections — both re-derived at load time).
+pub const MIN_FORMAT_VERSION: u32 = 1;
 
 /// Section tag for the model-metadata section ("META" as LE ASCII).
 const TAG_META: u32 = u32::from_le_bytes(*b"META");
@@ -157,7 +176,11 @@ impl fmt::Display for ArtifactError {
                 write!(f, "not a plan artifact (magic {found:02x?})")
             }
             ArtifactError::UnsupportedVersion { found } => {
-                write!(f, "unsupported plan-artifact format version {found} (this build reads v{FORMAT_VERSION})")
+                write!(
+                    f,
+                    "unsupported plan-artifact format version {found} (this build reads \
+                     v{MIN_FORMAT_VERSION}..=v{FORMAT_VERSION})"
+                )
             }
             ArtifactError::Truncated { context } => {
                 write!(f, "plan artifact truncated while reading {context}")
@@ -429,10 +452,26 @@ fn case_tag(c: Case) -> u8 {
 
 fn case_from_tag(t: u8) -> ArtifactResult<Case> {
     match t {
+        0 => Ok(Case::Empty),
         1 => Ok(Case::Dense),
         2 => Ok(Case::OneLine),
         3 => Ok(Case::TwoLines),
         other => Err(ArtifactError::Malformed { detail: format!("unknown sparsity case tag {other}") }),
+    }
+}
+
+fn kernel_tag(k: KernelKind) -> u8 {
+    match k {
+        KernelKind::Scalar => 0,
+        KernelKind::Simd => 1,
+    }
+}
+
+fn kernel_from_tag(t: u8) -> ArtifactResult<KernelKind> {
+    match t {
+        0 => Ok(KernelKind::Scalar),
+        1 => Ok(KernelKind::Simd),
+        other => Err(ArtifactError::Malformed { detail: format!("unknown kernel tag {other}") }),
     }
 }
 
@@ -454,12 +493,21 @@ pub struct ArtifactMeta {
 }
 
 /// Serialize a compiled plan (at its native precision tier) plus its
-/// deployment metadata into the format-v1 byte stream. Every scalar word is
-/// written little-endian at `E`'s width; [`decode`] restores it bit-exactly.
+/// deployment metadata into the current-format byte stream. Every scalar
+/// word is written little-endian at `E`'s width; [`decode`] restores it
+/// bit-exactly.
 pub fn encode<E: Elem>(plan: &ModelPlan<E>, meta: &ArtifactMeta) -> Vec<u8> {
+    encode_with_version(plan, meta, FORMAT_VERSION)
+}
+
+/// Versioned encoder: `version` selects the wire layout (v1 omits the
+/// kernel tags and zero-skip sections). Only [`FORMAT_VERSION`] is written
+/// in production; older layouts stay encodable so the back-compat decode
+/// path is testable without fixture files.
+fn encode_with_version<E: Elem>(plan: &ModelPlan<E>, meta: &ArtifactMeta, version: u32) -> Vec<u8> {
     let mut out = Vec::new();
     out.extend_from_slice(&MAGIC);
-    put_u32(&mut out, FORMAT_VERSION);
+    put_u32(&mut out, version);
     put_u8(&mut out, precision_tag(E::PRECISION));
 
     let mut m = Vec::new();
@@ -478,13 +526,13 @@ pub fn encode<E: Elem>(plan: &ModelPlan<E>, meta: &ArtifactMeta) -> Vec<u8> {
     put_section(&mut out, TAG_META, &m);
 
     for lp in &plan.layers {
-        let payload = encode_layer(lp);
+        let payload = encode_layer(lp, version);
         put_section(&mut out, TAG_LAYER, &payload);
     }
     out
 }
 
-fn encode_layer<E: Elem>(lp: &LayerPlan<E>) -> Vec<u8> {
+fn encode_layer<E: Elem>(lp: &LayerPlan<E>, version: u32) -> Vec<u8> {
     let mut p = Vec::new();
     let l = &lp.layer;
     put_u8(&mut p, kind_tag(l.kind));
@@ -496,6 +544,11 @@ fn encode_layer<E: Elem>(lp: &LayerPlan<E>) -> Vec<u8> {
     put_usize(&mut p, lp.kc);
     for v in [lp.tiles.ho_t, lp.tiles.wo_t, lp.tiles.tiles_h, lp.tiles.tiles_w] {
         put_usize(&mut p, v);
+    }
+    if version >= 2 {
+        // non-winograd layers carry the default (scalar, tag 0): the tag
+        // only steers the winograd GEMM dispatch
+        put_u8(&mut p, kernel_tag(lp.tiles.kernel));
     }
     put_usize(&mut p, lp.linebuf_depth);
     put_usize(&mut p, lp.linebuf_words);
@@ -520,6 +573,23 @@ fn encode_layer<E: Elem>(lp: &LayerPlan<E>) -> Vec<u8> {
         put_elems(&mut p, &rf.u);
         put_i64(&mut p, rf.d0y as i64);
         put_i64(&mut p, rf.d0x as i64);
+        if version >= 2 {
+            match &rf.skip {
+                None => put_u8(&mut p, 0),
+                Some(sk) => {
+                    put_u8(&mut p, 1);
+                    put_usize(&mut p, sk.offsets.len());
+                    for &o in &sk.offsets {
+                        put_u32(&mut p, o);
+                    }
+                    put_usize(&mut p, sk.runs.len());
+                    for &(s, e) in &sk.runs {
+                        put_u32(&mut p, s);
+                        put_u32(&mut p, e);
+                    }
+                }
+            }
+        }
     }
     p
 }
@@ -533,8 +603,9 @@ fn encode_layer<E: Elem>(lp: &LayerPlan<E>) -> Vec<u8> {
 /// validates it against the requested key.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ArtifactHeader {
-    /// on-disk format version (always [`FORMAT_VERSION`] after a
-    /// successful decode)
+    /// on-disk format version (within
+    /// [`MIN_FORMAT_VERSION`]`..=`[`FORMAT_VERSION`] after a successful
+    /// decode)
     pub version: u32,
     /// precision tier of every scalar word in the payload
     pub precision: Precision,
@@ -607,7 +678,7 @@ fn decode_prologue(r: &mut Reader<'_>) -> ArtifactResult<(u32, Precision)> {
         return Err(ArtifactError::BadMagic { found });
     }
     let version = r.u32("format version")?;
-    if version != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         return Err(ArtifactError::UnsupportedVersion { found: version });
     }
     let precision = precision_from_tag(r.u8("precision tag")?)?;
@@ -696,7 +767,7 @@ fn decode_layers<E: Elem>(
         let name = format!("LAYR[{i}]");
         let payload = read_section(r, TAG_LAYER, &name)?;
         let mut lr = Reader::new(payload);
-        let lp = decode_layer::<E>(&mut lr, i)?;
+        let lp = decode_layer::<E>(&mut lr, i, header.version)?;
         if !lr.done() {
             return Err(ArtifactError::Malformed {
                 detail: format!("trailing bytes in layer {i} section"),
@@ -755,7 +826,11 @@ fn decode_layers<E: Elem>(
     Ok((plan, sections))
 }
 
-fn decode_layer<E: Elem>(r: &mut Reader<'_>, i: usize) -> ArtifactResult<LayerPlan<E>> {
+fn decode_layer<E: Elem>(
+    r: &mut Reader<'_>,
+    i: usize,
+    version: u32,
+) -> ArtifactResult<LayerPlan<E>> {
     let bad = |detail: String| ArtifactError::Malformed { detail: format!("layer {i}: {detail}") };
 
     let kind = kind_from_tag(r.u8("layer kind")?)?;
@@ -783,11 +858,25 @@ fn decode_layer<E: Elem>(r: &mut Reader<'_>, i: usize) -> ArtifactResult<LayerPl
 
     let method = method_from_tag(r.u8("layer method")?)?;
     let kc = r.usize("layer kc")?;
-    let tiles = TileGeometry {
+    let mut tiles = TileGeometry {
         ho_t: r.usize("tiles ho_t")?,
         wo_t: r.usize("tiles wo_t")?,
         tiles_h: r.usize("tiles tiles_h")?,
         tiles_w: r.usize("tiles tiles_w")?,
+        ..TileGeometry::default()
+    };
+    tiles.kernel = if version >= 2 {
+        // a simd tag from a capable publishing host clamps to scalar on a
+        // host without AVX2/NEON — the tag only picks the dispatch route,
+        // the plan data is identical either way
+        let k = kernel_from_tag(r.u8("kernel tag")?)?;
+        if k == KernelKind::Simd && !simd_available() { KernelKind::Scalar } else { k }
+    } else if method == Method::Winograd {
+        // v1 artifacts predate kernel dispatch: resolve from the loading
+        // host, exactly as a fresh Auto compile would
+        crate::dse::recommend_kernel()
+    } else {
+        KernelKind::default()
     };
     let linebuf_depth = r.usize("linebuf depth")?;
     let linebuf_words = r.usize("linebuf words")?;
@@ -894,7 +983,67 @@ fn decode_layer<E: Elem>(r: &mut Reader<'_>, i: usize) -> ArtifactResult<LayerPl
                 phases[ri].d0y, phases[ri].d0x
             )));
         }
-        reordered.push(ReorderedFilter { case, live, c_in: rf_cin, c_out: rf_cout, u, d0y, d0x });
+        // the zero-skip run-list is derived data: always rebuilt from the
+        // decoded weights (so v1 slabs gain skip for free), and a stored v2
+        // section must agree with the rebuild bit for bit — a stale or
+        // tampered list could otherwise elide live products at request time
+        let rebuilt = RunList::build(n_live, rf_cout, rf_cin, &u);
+        if version >= 2 {
+            let stored = match r.u8("skip flag")? {
+                0 => None,
+                1 => {
+                    let n_off = r.usize("skip offset count")?;
+                    let off_bytes = r.take(
+                        n_off.checked_mul(4).ok_or_else(|| {
+                            bad(format!("slab {ri}: skip offset count overflows"))
+                        })?,
+                        "skip offsets",
+                    )?;
+                    let offsets: Vec<u32> = off_bytes
+                        .chunks_exact(4)
+                        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    let n_runs = r.usize("skip run count")?;
+                    let run_bytes = r.take(
+                        n_runs.checked_mul(8).ok_or_else(|| {
+                            bad(format!("slab {ri}: skip run count overflows"))
+                        })?,
+                        "skip runs",
+                    )?;
+                    let runs: Vec<(u32, u32)> = run_bytes
+                        .chunks_exact(8)
+                        .map(|c| {
+                            (
+                                u32::from_le_bytes([c[0], c[1], c[2], c[3]]),
+                                u32::from_le_bytes([c[4], c[5], c[6], c[7]]),
+                            )
+                        })
+                        .collect();
+                    let sk = RunList { offsets, runs };
+                    if !sk.is_well_formed(n_live, rf_cout, rf_cin) {
+                        return Err(bad(format!("slab {ri}: malformed zero-skip run-list")));
+                    }
+                    Some(sk)
+                }
+                other => return Err(bad(format!("slab {ri}: unknown skip flag {other}"))),
+            };
+            if stored != rebuilt {
+                return Err(bad(format!(
+                    "slab {ri}: stored zero-skip run-list disagrees with a rebuild from the \
+                     slab weights"
+                )));
+            }
+        }
+        reordered.push(ReorderedFilter {
+            case,
+            live,
+            c_in: rf_cin,
+            c_out: rf_cout,
+            u,
+            skip: rebuilt,
+            d0y,
+            d0x,
+        });
     }
 
     // winograd layers execute through the precompiled tile geometry; it
@@ -902,7 +1051,15 @@ fn decode_layer<E: Elem>(r: &mut Reader<'_>, i: usize) -> ArtifactResult<LayerPl
     if method == Method::Winograd {
         let ho_t = h_in.div_ceil(M_TILE) * M_TILE;
         let wo_t = w_in.div_ceil(M_TILE) * M_TILE;
-        let want = TileGeometry { ho_t, wo_t, tiles_h: ho_t / M_TILE, tiles_w: wo_t / M_TILE };
+        // the kernel field is not derivable from the layer extent — it is
+        // whatever the (clamped) tag resolved to above
+        let want = TileGeometry {
+            ho_t,
+            wo_t,
+            tiles_h: ho_t / M_TILE,
+            tiles_w: wo_t / M_TILE,
+            kernel: tiles.kernel,
+        };
         if tiles != want {
             return Err(bad(format!("tile geometry {tiles:?} != derived {want:?}")));
         }
@@ -968,7 +1125,8 @@ pub fn describe(bytes: &[u8], origin: &str) -> ArtifactResult<String> {
 
 fn describe_layers<E: Elem>(plan: &ModelPlan<E>, sections: &[SectionInfo], out: &mut String) {
     out.push_str(
-        "layer  kind    geometry                     method    phases  live  tiles    payload\n",
+        "layer  kind    geometry                     method    kernel  phases  live  tiles    \
+         zskip    payload\n",
     );
     for (i, lp) in plan.layers.iter().enumerate() {
         let l = &lp.layer;
@@ -983,14 +1141,23 @@ fn describe_layers<E: Elem>(plan: &ModelPlan<E>, sections: &[SectionInfo], out: 
             l.h_out(),
             l.w_out()
         );
-        let tiles = if lp.method == Method::Winograd {
-            format!("{}x{}", lp.tiles.tiles_h, lp.tiles.tiles_w)
+        let (tiles, kernel) = if lp.method == Method::Winograd {
+            (format!("{}x{}", lp.tiles.tiles_h, lp.tiles.tiles_w), lp.tiles.kernel.label())
         } else {
-            "-".into()
+            ("-".into(), "-")
         };
+        // products the runtime zero-skip elides per tile on this layer
+        // (dead `c_in` runs across all slabs), out of the dense total
+        let skipped: usize = lp
+            .reordered
+            .iter()
+            .filter_map(|rf| rf.skip.as_ref().map(|sk| sk.skipped_products(rf.c_out, rf.c_in)))
+            .sum();
+        let zskip = if lp.method == Method::Winograd { format!("{skipped}") } else { "-".into() };
         let bytes = sections.get(i + 1).map(|s| s.bytes).unwrap_or(0);
         out.push_str(&format!(
-            "L{i:<5} {:<7} {geo:<28} {:<9} {:<7} {:<5} {tiles:<8} {bytes} B\n",
+            "L{i:<5} {:<7} {geo:<28} {:<9} {kernel:<7} {:<7} {:<5} {tiles:<8} {zskip:<8} \
+             {bytes} B\n",
             format!("{:?}", l.kind).to_ascii_lowercase(),
             format!("{:?}", lp.method).to_ascii_lowercase(),
             lp.phases.len(),
@@ -1037,6 +1204,7 @@ mod tests {
                 assert_eq!(ra.case, rb.case);
                 assert_eq!(ra.live, rb.live);
                 assert_eq!(ra.u, rb.u);
+                assert_eq!(ra.skip, rb.skip);
                 assert_eq!((ra.d0y, ra.d0x), (rb.d0y, rb.d0x));
             }
         }
@@ -1199,6 +1367,149 @@ mod tests {
         for i in 0..plan.layers.len() {
             assert!(text.contains(&format!("L{i}")), "{text}");
         }
+    }
+
+    /// Zero a `c_in` range of slab 0 on the first winograd layer (every
+    /// `(pos, c_out)` row) and rebuild its run-list, so the plan carries a
+    /// real `Some(skip)` section. Returns the edited layer's index.
+    fn inject_zero_run(plan: &mut ModelPlan) -> usize {
+        let li = plan
+            .layers
+            .iter()
+            .position(|lp| lp.method == Method::Winograd && !lp.reordered.is_empty())
+            .expect("tiny DCGAN compiles winograd layers");
+        let rf = &mut plan.layers[li].reordered[0];
+        let dead = rf.c_in.min(4);
+        for pi in 0..rf.live.len() {
+            for co in 0..rf.c_out {
+                for ci in 0..dead {
+                    rf.u[(pi * rf.c_out + co) * rf.c_in + ci] = 0.0;
+                }
+            }
+        }
+        rf.skip = RunList::build(rf.live.len(), rf.c_out, rf.c_in, &rf.u);
+        assert!(rf.skip.is_some(), "the injected dead run must surface in the run-list");
+        li
+    }
+
+    #[test]
+    fn v1_artifacts_still_decode_with_rederived_dispatch() {
+        // v1 predates kernel tags and skip sections; both re-derive at load
+        let mut plan = tiny_plan();
+        inject_zero_run(&mut plan);
+        let v1 = encode_with_version(&plan, &meta(), 1);
+        let v2 = encode(&plan, &meta());
+        assert!(v1.len() < v2.len(), "v1 layout must not carry the new sections");
+        let dec = decode(&v1).unwrap();
+        assert_eq!(dec.header.version, 1);
+        match dec.payload {
+            // kernel: the host probe, exactly what the Auto compile stamped;
+            // skip: rebuilt from the decoded weights, injected run included
+            PlanPayload::F64(back) => assert_plans_identical(&plan, &back),
+            PlanPayload::F32(_) => panic!("wrong tier decoded"),
+        }
+        assert_eq!(decode_header(&v1).unwrap().version, 1);
+    }
+
+    #[test]
+    fn roundtrip_preserves_injected_zero_skip() {
+        let mut plan = tiny_plan();
+        let li = inject_zero_run(&mut plan);
+        let dec = decode(&encode(&plan, &meta())).unwrap();
+        match dec.payload {
+            PlanPayload::F64(back) => {
+                assert_plans_identical(&plan, &back);
+                let rf = &back.layers[li].reordered[0];
+                let sk = rf.skip.as_ref().expect("skip section survives the roundtrip");
+                assert!(sk.skipped_products(rf.c_out, rf.c_in) > 0);
+            }
+            PlanPayload::F32(_) => panic!("wrong tier decoded"),
+        }
+    }
+
+    #[test]
+    fn stale_or_malformed_skip_sections_are_rejected() {
+        // a well-formed run-list that disagrees with the slab weights (here:
+        // built from a zeroed copy of a dense slab) is checksummed-valid on
+        // the wire but must fail the rebuild check — it would elide live
+        // products at request time
+        let mut plan = tiny_plan();
+        let li = inject_zero_run(&mut plan);
+        let rf = &mut plan.layers[li].reordered[0];
+        let mut u2 = rf.u.clone();
+        // extend position 0's dead c_in range (every c_out row, so the
+        // whole register block goes dead) beyond what the real weights have
+        let extra = rf.c_in.min(8);
+        for co in 0..rf.c_out {
+            for ci in 0..extra {
+                u2[co * rf.c_in + ci] = 0.0;
+            }
+        }
+        let stale = RunList::build(rf.live.len(), rf.c_out, rf.c_in, &u2);
+        assert_ne!(stale, rf.skip);
+        rf.skip = stale;
+        let err = decode(&encode(&plan, &meta())).unwrap_err();
+        assert!(
+            matches!(&err, ArtifactError::Malformed { detail } if detail.contains("rebuild")),
+            "{err:?}"
+        );
+        // structurally broken lists fail before the rebuild comparison
+        let mut plan = tiny_plan();
+        let li = inject_zero_run(&mut plan);
+        plan.layers[li].reordered[0].skip =
+            Some(RunList { offsets: vec![0], runs: Vec::new() });
+        let err = decode(&encode(&plan, &meta())).unwrap_err();
+        assert!(
+            matches!(&err, ArtifactError::Malformed { detail } if detail.contains("malformed zero-skip")),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn degenerate_phase_plan_roundtrips_with_empty_slabs() {
+        use crate::engine::plan::{PlanOptions, Select};
+        use crate::gan::zoo::Gan;
+        // K=1 S=2: phase (0,0) carries the single tap, the other three
+        // phases are zero-tap and compile to explicitly empty slabs
+        let g = Gan {
+            name: "DCGAN",
+            year: 2015,
+            layers: vec![Layer::deconv(3, 2, 1, 2, 4).with_act(Activation::Relu)],
+        };
+        let plan = Planner::new(PlanOptions {
+            select: Select::Force(Method::Winograd),
+            ..Default::default()
+        })
+        .compile_seeded(&g, 11);
+        let empties = plan.layers[0]
+            .reordered
+            .iter()
+            .filter(|rf| rf.case == Case::Empty)
+            .count();
+        assert_eq!(empties, 3, "three of the four S²=4 phases are degenerate");
+        let dec = decode(&encode(&plan, &meta())).unwrap();
+        match dec.payload {
+            PlanPayload::F64(back) => {
+                assert_plans_identical(&plan, &back);
+                for rf in &back.layers[0].reordered {
+                    if rf.case == Case::Empty {
+                        assert!(rf.live.is_empty() && rf.u.is_empty() && rf.skip.is_none());
+                    }
+                }
+            }
+            PlanPayload::F32(_) => panic!("wrong tier decoded"),
+        }
+    }
+
+    #[test]
+    fn describe_reports_kernel_and_zero_skip() {
+        let mut plan = tiny_plan();
+        inject_zero_run(&mut plan);
+        let text = describe(&encode(&plan, &meta()), "x.plan").unwrap();
+        assert!(text.contains("kernel"), "{text}");
+        assert!(text.contains("zskip"), "{text}");
+        let want = crate::dse::recommend_kernel().label();
+        assert!(text.contains(want), "{text}");
     }
 
     #[test]

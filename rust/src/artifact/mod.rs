@@ -35,6 +35,6 @@ pub mod store;
 pub use codec::{
     decode, decode_header, describe, encode, fnv1a64, ArtifactError, ArtifactHeader,
     ArtifactMeta, ArtifactResult, DecodedArtifact, PlanPayload, SectionInfo, FORMAT_VERSION,
-    MAGIC,
+    MAGIC, MIN_FORMAT_VERSION,
 };
 pub use store::{atomic_write, AnyPlan, PlanCacheStats, PlanKey, PlanStore};

@@ -2,6 +2,7 @@
 //! flags + `--bool-flag` switches.
 
 use crate::util::elem::Precision;
+use crate::winograd::kernel::KernelKind;
 use std::collections::BTreeMap;
 
 /// Parsed command line.
@@ -72,9 +73,18 @@ impl Args {
     /// absent — the "no explicit request" value every consumer resolves
     /// through [`crate::engine::resolve_workers`] (env `WINGAN_WORKERS`,
     /// then one thread per core), so CLI, env and default sizing share one
-    /// override path.
+    /// override path. An **explicit** `--workers 0` is rejected: a
+    /// zero-worker pool can never run anything, and silently treating it
+    /// as "unset" would mask the typo.
     pub fn get_workers(&self) -> Result<usize, String> {
-        self.get_usize("workers", 0)
+        match self.get_usize("workers", 0)? {
+            0 if self.get("workers").is_some() => {
+                Err("--workers: 0 is not a valid pool size (need at least 1 worker, \
+                     or omit the flag for one worker per core)"
+                    .into())
+            }
+            n => Ok(n),
+        }
     }
 
     /// The serving-precision flag, `--precision f32|f64|auto`. Returns
@@ -88,6 +98,19 @@ impl Args {
             None => Ok(None),
             Some(v) if v.eq_ignore_ascii_case("auto") => Ok(None),
             Some(v) => Precision::parse(v).map(Some).map_err(|e| format!("--precision: {e}")),
+        }
+    }
+
+    /// The GEMM micro-kernel flag, `--kernel scalar|simd|auto`. Returns
+    /// `None` when absent or `auto` — the "no explicit request" value
+    /// every consumer resolves through [`crate::engine::resolve_kernel`]
+    /// (env `WINGAN_KERNEL`, then the host capability probe), mirroring
+    /// [`Args::get_precision`].
+    pub fn get_kernel(&self) -> Result<Option<KernelKind>, String> {
+        match self.get("kernel") {
+            None => Ok(None),
+            Some(v) if v.eq_ignore_ascii_case("auto") => Ok(None),
+            Some(v) => KernelKind::parse(v).map(Some).map_err(|e| format!("--kernel: {e}")),
         }
     }
 
@@ -160,6 +183,29 @@ mod tests {
         assert_eq!(parse("serve").get_workers().unwrap(), 0);
         assert_eq!(parse("serve --workers 6").get_workers().unwrap(), 6);
         assert!(parse("serve --workers lots").get_workers().is_err());
+    }
+
+    #[test]
+    fn explicit_zero_workers_is_rejected() {
+        // regression: `--workers 0` used to parse as the "unset" sentinel
+        // and silently fall through to env/core sizing
+        let err = parse("serve --workers 0").get_workers().unwrap_err();
+        assert!(err.contains("at least 1"), "{err}");
+    }
+
+    #[test]
+    fn kernel_flag_defaults_to_unset() {
+        assert_eq!(parse("serve").get_kernel().unwrap(), None);
+        assert_eq!(parse("serve --kernel auto").get_kernel().unwrap(), None);
+        assert_eq!(
+            parse("serve --kernel simd").get_kernel().unwrap(),
+            Some(KernelKind::Simd)
+        );
+        assert_eq!(
+            parse("serve --kernel Scalar").get_kernel().unwrap(),
+            Some(KernelKind::Scalar)
+        );
+        assert!(parse("serve --kernel avx512").get_kernel().is_err());
     }
 
     #[test]

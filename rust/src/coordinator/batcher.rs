@@ -81,9 +81,20 @@ impl DynamicBatcher {
         self.queue.len()
     }
 
+    /// The release deadline of one request: its enqueue instant plus the
+    /// policy's `max_wait`. Both `next_deadline` and `poll` route through
+    /// this helper so the two can never disagree on the expression — they
+    /// used to duplicate it inline. `checked_add` guards the degenerate
+    /// `max_wait` that overflows `Instant` (e.g. `Duration::MAX` meaning
+    /// "never ship partials"): `None` then reads as "no deadline", so the
+    /// batch waits for a full bucket or a flush instead of panicking.
+    fn deadline(&self, r: &GenRequest) -> Option<Instant> {
+        r.enqueued.checked_add(self.policy.max_wait)
+    }
+
     /// Next instant at which `poll` would release a partial batch, if any.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.queue.front().map(|r| r.enqueued + self.policy.max_wait)
+        self.queue.front().and_then(|r| self.deadline(r))
     }
 
     /// Release a batch if policy says so at time `now`.
@@ -92,7 +103,8 @@ impl DynamicBatcher {
             return None;
         }
         let full = self.queue.len() >= self.policy.max_bucket();
-        let expired = now >= self.queue.front().unwrap().enqueued + self.policy.max_wait;
+        let expired =
+            self.queue.front().and_then(|r| self.deadline(r)).map_or(false, |d| now >= d);
         if full || expired {
             Some(self.take_batch())
         } else {
@@ -206,5 +218,26 @@ mod tests {
         let t = Instant::now();
         b.push(req(0, t));
         assert_eq!(b.next_deadline(), Some(t + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn unrepresentable_deadline_means_wait_for_full_or_flush() {
+        // regression: `max_wait: Duration::MAX` ("never ship partials")
+        // used to overflow-panic in both `next_deadline` and `poll` the
+        // moment anything queued. Now it reads as "no deadline": partials
+        // hold until the bucket fills or the stream flushes.
+        let mut b =
+            DynamicBatcher::new(BatchPolicy::new(vec![1, 4, 8], Duration::MAX));
+        let t = Instant::now();
+        b.push(req(0, t));
+        assert_eq!(b.next_deadline(), None);
+        assert!(b.poll(t + Duration::from_secs(3600)).is_none(), "no deadline release");
+        for i in 1..8 {
+            b.push(req(i, t));
+        }
+        let batch = b.poll(t).expect("full-bucket release still works");
+        assert_eq!(batch.requests.len(), 8);
+        b.push(req(8, t));
+        assert_eq!(b.flush().expect("flush release still works").requests.len(), 1);
     }
 }

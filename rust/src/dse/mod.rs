@@ -190,6 +190,25 @@ pub fn recommend_precision(g: &Gan, cfg: &AccelConfig) -> Precision {
     Precision::F64
 }
 
+/// Per-host GEMM micro-kernel recommendation — the third leg of the
+/// compile-time race next to the method and precision selections: the
+/// explicit SIMD kernel executes the identical IEEE operation sequence as
+/// the blocked scalar loop (see [`crate::winograd::kernel`]), so whenever
+/// the host has the instruction set there is no accuracy trade-off and the
+/// wider datapath wins outright.
+///
+/// This is [`crate::engine::Planner::resolve_kernel`]'s `Auto` policy;
+/// `wingan serve --kernel` / `WINGAN_KERNEL` / `NativeConfig::kernel`
+/// override it end to end.
+pub fn recommend_kernel() -> crate::winograd::kernel::KernelKind {
+    use crate::winograd::kernel::{simd_available, KernelKind};
+    if simd_available() {
+        KernelKind::Simd
+    } else {
+        KernelKind::Scalar
+    }
+}
+
 /// The paper's eq. 5 `C(K_C)/m^2` cycles-per-output constant, exposed for
 /// the docs/benches.
 pub fn eq5_constant(k: usize, s: usize, p: usize) -> f64 {
@@ -263,5 +282,13 @@ mod tests {
         // deterministic at any fixed config
         let cfg = AccelConfig::default();
         assert_eq!(recommend_precision(&g, &cfg), recommend_precision(&g, &cfg));
+    }
+
+    #[test]
+    fn kernel_recommendation_matches_host_capability() {
+        use crate::winograd::kernel::{simd_available, KernelKind};
+        let want = if simd_available() { KernelKind::Simd } else { KernelKind::Scalar };
+        assert_eq!(recommend_kernel(), want);
+        assert_eq!(recommend_kernel(), recommend_kernel(), "deterministic");
     }
 }

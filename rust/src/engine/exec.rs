@@ -44,7 +44,7 @@ use crate::gan::zoo::Kind;
 use crate::tdc;
 use crate::util::elem::{Elem, Precision};
 use crate::util::tensor::Tensor3;
-use crate::winograd::layout::engine_multiply_batch;
+use crate::winograd::kernel::multiply_batch;
 use crate::winograd::transforms::{input_transform, inverse_transform, Tile4, M, N};
 
 /// Result of running one model through the engine.
@@ -308,15 +308,20 @@ impl<E: Elem> Engine<E> {
     /// Winograd datapath, stripe-batched: precompiled reordered filters,
     /// pre-PE transforms *gathered* across all `tiles_w` tiles of a stripe
     /// into one position-major Winograd-domain matrix, one blocked com-PE
-    /// GEMM per stripe over live rows only ([`engine_multiply_batch`] — the
-    /// filter slab is streamed once per stripe instead of once per tile,
-    /// with register/cache blocking inside the kernel), post-PE inverse
-    /// transform, phase interleave. The per-output accumulation order is
-    /// exactly the per-tile path's, so the result is bit-identical to
-    /// `accel::functional::run_winograd_deconv` (at f64) and the
-    /// [`Events`] counters are unchanged. All intermediate buffers live in
-    /// per-worker [`Scratch`] arenas — the tile loop performs no heap
-    /// allocation.
+    /// GEMM per stripe over live rows only
+    /// ([`crate::winograd::kernel::multiply_batch`], dispatched to the
+    /// micro-kernel compiled into the plan's [`TileGeometry`] — the filter
+    /// slab is streamed once per stripe instead of once per tile, with
+    /// register/cache blocking and runtime zero-skip inside the kernel),
+    /// post-PE inverse transform, phase interleave. The per-output
+    /// accumulation order is exactly the per-tile path's, so the result is
+    /// bit-identical to `accel::functional::run_winograd_deconv` (at f64)
+    /// and the [`Events`] counters are unchanged on dense slabs. Empty
+    /// (degenerate zero-tap) phases are skipped outright. All intermediate
+    /// buffers live in per-worker [`Scratch`] arenas — the tile loop
+    /// performs no heap allocation.
+    ///
+    /// [`TileGeometry`]: crate::engine::plan::TileGeometry
     fn run_deconv_winograd(
         &self,
         lp: &LayerPlan<E>,
@@ -337,6 +342,13 @@ impl<E: Elem> Engine<E> {
         let tiles_w = geo.tiles_w;
 
         for (idx, rf) in lp.reordered.iter().enumerate() {
+            if rf.live.is_empty() {
+                // degenerate zero-tap phase: its sub-filter is identically
+                // zero, so the phase's output samples stay at the
+                // pre-zeroed y (every zoo activation fixes zero exactly) —
+                // no transforms, no GEMM, no line-buffer traffic
+                continue;
+            }
             let ph = &lp.phases[idx];
             let (py, px) = (idx / s, idx % s);
             // same phase-padded, tile-aligned view the functional simulator
@@ -379,8 +391,11 @@ impl<E: Elem> Engine<E> {
                             pev.linebuf_reads += (N * N * c_in) as u64;
                         }
                         // com-PE: one live-rows-only blocked GEMM for the
-                        // whole stripe — filter block read once per stripe
-                        pev.mults += engine_multiply_batch(rf, &scr.v, tiles_w, &mut scr.m) as u64;
+                        // whole stripe, dispatched to the plan's compiled
+                        // micro-kernel (scalar or SIMD, with runtime
+                        // zero-skip) — filter block read once per stripe
+                        pev.mults +=
+                            multiply_batch(geo.kernel, rf, &scr.v, tiles_w, &mut scr.m) as u64;
                         // post-PE: inverse transform into the local stripe
                         for co in 0..l.c_out {
                             for tx in 0..tiles_w {

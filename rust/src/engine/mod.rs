@@ -28,13 +28,15 @@
 //!   single requests and narrow batches split every layer across output
 //!   stripes ([`BatchSchedule::StripeLevel`]). The Winograd datapath
 //!   executes each stripe as one **register/cache-blocked tile-batched
-//!   Winograd-domain GEMM**
-//!   ([`crate::winograd::layout::engine_multiply_batch`]) over blocking
-//!   geometry precompiled on the plan ([`plan::TileGeometry`]), with every
-//!   intermediate buffer drawn from reusable per-worker **scratch arenas**
-//!   ([`scratch`], [`pool::ScratchStash`]) — zero per-tile heap
-//!   allocations, filter data streamed once per stripe instead of once per
-//!   tile.
+//!   Winograd-domain GEMM** ([`crate::winograd::kernel::multiply_batch`])
+//!   over blocking geometry precompiled on the plan
+//!   ([`plan::TileGeometry`]), dispatched to the **micro-kernel compiled
+//!   into the plan** ([`plan::KernelSelect`], [`KernelKind`]: explicit
+//!   AVX2/NEON SIMD or the blocked scalar fallback, with runtime zero-skip
+//!   over the slabs' dead `c_in` runs), with every intermediate buffer
+//!   drawn from reusable per-worker **scratch arenas** ([`scratch`],
+//!   [`pool::ScratchStash`]) — zero per-tile heap allocations, filter data
+//!   streamed once per stripe instead of once per tile.
 //! * **Serve** ([`serve`]): a [`NativeRuntime`] exposing compiled engines
 //!   behind the coordinator's artifact-manifest contract, so generation
 //!   requests batch and execute through precompiled plans — every route's
@@ -64,10 +66,11 @@ pub mod scratch;
 pub mod serve;
 
 pub use crate::util::elem::{Elem, Precision};
+pub use crate::winograd::kernel::{simd_available, KernelKind};
 pub use exec::{AnyEngine, BatchSchedule, Engine, EngineRun};
 pub use plan::{
-    resolve_precision, LayerPlan, ModelPlan, PlanOptions, Planner, PrecisionSelect, Select,
-    TileGeometry, PRECISION_ENV,
+    resolve_kernel, resolve_precision, KernelSelect, LayerPlan, ModelPlan, PlanOptions, Planner,
+    PrecisionSelect, Select, TileGeometry, KERNEL_ENV, PRECISION_ENV,
 };
 pub use pool::{resolve_workers, ScratchStash, WorkerPool};
 pub use scratch::Scratch;

@@ -29,6 +29,18 @@
 //! overrides ([`crate::engine::NativeConfig::precision`],
 //! `wingan serve --precision`, the [`PRECISION_ENV`] environment variable)
 //! all funnel through [`resolve_precision`].
+//!
+//! # Kernel dispatch
+//!
+//! The GEMM micro-kernel the Winograd datapath runs on is resolved the
+//! same way: an explicit [`KernelSelect::Force`] wins (CLI `--kernel`,
+//! [`crate::engine::NativeConfig::kernel`], the [`KERNEL_ENV`] variable),
+//! otherwise [`crate::dse::recommend_kernel`] picks SIMD whenever the host
+//! supports it. The decision is feature-checked **once** here and recorded
+//! on [`TileGeometry::kernel`], so dispatch is part of the compiled plan
+//! (visible in `wingan plan inspect`) rather than re-probed per request;
+//! forcing SIMD on a host without it falls back to the scalar kernel with
+//! a logged correction.
 
 use crate::accel::config::AccelConfig;
 use crate::accel::cycle::simulate_layer;
@@ -38,6 +50,7 @@ use crate::tdc::{self, PhaseFilter};
 use crate::util::elem::{Elem, Precision};
 use crate::util::prng::Rng;
 use crate::util::tensor::Filter4;
+use crate::winograd::kernel::{simd_available, KernelKind};
 use crate::winograd::layout::{reorder_filter, ReorderedFilter};
 use crate::winograd::transforms::{M as M_TILE, N as N_TILE};
 
@@ -65,10 +78,53 @@ pub enum PrecisionSelect {
     Force(Precision),
 }
 
+/// Compile-time GEMM micro-kernel selection policy (the kernel analogue
+/// of [`Select`] / [`PrecisionSelect`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelSelect {
+    /// Per-plan recommendation ([`crate::dse::recommend_kernel`]): the
+    /// SIMD kernel whenever the host supports it, scalar otherwise.
+    Auto,
+    /// Force one kernel for every plan this planner compiles. Forcing
+    /// [`KernelKind::Simd`] on a host without AVX2/NEON resolves to the
+    /// scalar kernel with a logged correction.
+    Force(KernelKind),
+}
+
 /// Environment variable consulted by [`resolve_precision`] when no
 /// explicit precision is requested (the precision analogue of
 /// `WINGAN_WORKERS`).
 pub const PRECISION_ENV: &str = "WINGAN_PRECISION";
+
+/// Environment variable consulted by [`resolve_kernel`] when no explicit
+/// kernel is requested (mirrors [`PRECISION_ENV`]; the CI matrix sets
+/// `WINGAN_KERNEL=scalar|simd` to pin both dispatch arms).
+pub const KERNEL_ENV: &str = "WINGAN_KERNEL";
+
+/// The single source of truth for micro-kernel resolution:
+///
+/// 1. `requested`, when set (an explicit CLI `--kernel` flag or
+///    [`crate::engine::NativeConfig::kernel`] field);
+/// 2. the [`KERNEL_ENV`] environment variable, when it parses as a kernel
+///    name;
+/// 3. [`KernelSelect::Auto`] — each plan asks the host capability probe.
+pub fn resolve_kernel(requested: Option<KernelKind>) -> KernelSelect {
+    resolve_kernel_with(requested, std::env::var(KERNEL_ENV).ok())
+}
+
+/// [`resolve_kernel`] with the environment injected, so the precedence
+/// rules are testable without mutating process-global state.
+fn resolve_kernel_with(requested: Option<KernelKind>, env: Option<String>) -> KernelSelect {
+    if let Some(k) = requested {
+        return KernelSelect::Force(k);
+    }
+    if let Some(v) = env {
+        if let Ok(k) = KernelKind::parse(&v) {
+            return KernelSelect::Force(k);
+        }
+    }
+    KernelSelect::Auto
+}
 
 /// The single source of truth for serving-precision resolution:
 ///
@@ -102,6 +158,8 @@ pub struct PlanOptions {
     pub select: Select,
     /// precision-selection policy (auto DSE recommendation, or forced)
     pub precision: PrecisionSelect,
+    /// GEMM micro-kernel selection policy (auto host probe, or forced)
+    pub kernel: KernelSelect,
     /// accelerator config the method race + precision recommendation +
     /// line-buffer geometry use
     pub cfg: AccelConfig,
@@ -112,6 +170,7 @@ impl Default for PlanOptions {
         PlanOptions {
             select: Select::Auto,
             precision: PrecisionSelect::Auto,
+            kernel: KernelSelect::Auto,
             cfg: AccelConfig::default(),
         }
     }
@@ -137,6 +196,10 @@ pub struct TileGeometry {
     pub tiles_h: usize,
     /// tiles per stripe — the GEMM batch width `T`: `wo_t / m`
     pub tiles_w: usize,
+    /// GEMM micro-kernel the stripe GEMMs dispatch to, resolved once at
+    /// plan-compile / artifact-load time (default: scalar; layers that
+    /// never run the Winograd datapath keep the default)
+    pub kernel: KernelKind,
 }
 
 /// One layer's precompiled execution plan, at element precision `E`
@@ -294,6 +357,26 @@ impl Planner {
         }
     }
 
+    /// The GEMM micro-kernel this planner stamps on Winograd-method layers
+    /// ([`TileGeometry::kernel`]): an explicit [`KernelSelect::Force`]
+    /// wins, subject to the host capability check (forcing SIMD on a host
+    /// without AVX2/NEON logs a correction and compiles the scalar
+    /// kernel); [`KernelSelect::Auto`] asks
+    /// [`crate::dse::recommend_kernel`].
+    pub fn resolve_kernel(&self) -> KernelKind {
+        match self.opts.kernel {
+            KernelSelect::Force(KernelKind::Simd) if !simd_available() => {
+                eprintln!(
+                    "wingan: kernel=simd requested but the host has no \
+                     AVX2/NEON; compiling the scalar kernel"
+                );
+                KernelKind::Scalar
+            }
+            KernelSelect::Force(k) => k,
+            KernelSelect::Auto => crate::dse::recommend_kernel(),
+        }
+    }
+
     /// Compile one layer.
     pub fn compile_layer(&self, l: &Layer, weights: Filter4) -> LayerPlan {
         assert_eq!(weights.c_in, l.c_in, "weight/layer C_in mismatch");
@@ -331,6 +414,7 @@ impl Planner {
                         wo_t,
                         tiles_h: ho_t / M_TILE,
                         tiles_w: wo_t / M_TILE,
+                        kernel: self.resolve_kernel(),
                     }
                 } else {
                     TileGeometry::default()
@@ -538,6 +622,67 @@ mod tests {
             "unparseable env -> auto"
         );
         assert_eq!(resolve_precision_with(None, None), PrecisionSelect::Auto);
+    }
+
+    #[test]
+    fn kernel_resolution_precedence() {
+        // injected env keeps this test free of process-global mutation
+        assert_eq!(
+            resolve_kernel_with(Some(KernelKind::Scalar), Some("simd".into())),
+            KernelSelect::Force(KernelKind::Scalar),
+            "explicit request wins"
+        );
+        assert_eq!(
+            resolve_kernel_with(None, Some("simd".into())),
+            KernelSelect::Force(KernelKind::Simd),
+            "env fills in"
+        );
+        assert_eq!(
+            resolve_kernel_with(None, Some(" Scalar ".into())),
+            KernelSelect::Force(KernelKind::Scalar),
+            "env is trimmed + case-insensitive"
+        );
+        assert_eq!(
+            resolve_kernel_with(None, Some("avx512".into())),
+            KernelSelect::Auto,
+            "unparseable env -> auto"
+        );
+        assert_eq!(resolve_kernel_with(None, None), KernelSelect::Auto);
+    }
+
+    #[test]
+    fn kernel_choice_is_stamped_on_winograd_geometry() {
+        let forced = Planner::new(PlanOptions {
+            kernel: KernelSelect::Force(KernelKind::Scalar),
+            ..Default::default()
+        });
+        let plan = forced.compile_seeded(&zoo::dcgan(Scale::Small), 7);
+        for lp in &plan.layers {
+            if lp.method == Method::Winograd {
+                assert_eq!(lp.tiles.kernel, KernelKind::Scalar);
+            } else {
+                assert_eq!(lp.tiles, TileGeometry::default());
+            }
+        }
+        // Auto and Force(Simd) both respect the host capability: the
+        // stamped kernel is Simd iff the host supports it
+        let auto = Planner::default();
+        let want = if crate::winograd::kernel::simd_available() {
+            KernelKind::Simd
+        } else {
+            KernelKind::Scalar
+        };
+        assert_eq!(auto.resolve_kernel(), want);
+        let forced_simd = Planner::new(PlanOptions {
+            kernel: KernelSelect::Force(KernelKind::Simd),
+            ..Default::default()
+        });
+        assert_eq!(forced_simd.resolve_kernel(), want, "simd falls back when absent");
+        // lowering preserves the stamped kernel
+        let plan32: ModelPlan<f32> = plan.lower();
+        for (l32, l64) in plan32.layers.iter().zip(&plan.layers) {
+            assert_eq!(l32.tiles.kernel, l64.tiles.kernel);
+        }
     }
 
     #[test]

@@ -79,8 +79,9 @@ pub const WORKERS_ENV: &str = "WINGAN_WORKERS";
 ///
 /// 1. `requested`, when non-zero (an explicit CLI `--workers` flag or
 ///    config field);
-/// 2. the [`WORKERS_ENV`] environment variable, when set to a positive
-///    integer;
+/// 2. the [`WORKERS_ENV`] environment variable, when it parses as an
+///    integer — `WINGAN_WORKERS=0` is clamped to one worker with a logged
+///    correction (a zero-worker pool can never run anything);
 /// 3. one worker per available core.
 pub fn resolve_workers(requested: usize) -> usize {
     resolve_with(requested, std::env::var(WORKERS_ENV).ok())
@@ -97,6 +98,8 @@ fn resolve_with(requested: usize, env: Option<String>) -> usize {
             if n > 0 {
                 return n;
             }
+            eprintln!("wingan: {WORKERS_ENV}=0 is not a valid pool size; using 1 worker");
+            return 1;
         }
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -498,7 +501,12 @@ mod tests {
         assert_eq!(resolve_with(0, Some("3".into())), 3, "env fills in for 0");
         assert_eq!(resolve_with(0, Some(" 7 ".into())), 7, "env is trimmed");
         assert!(resolve_with(0, Some("not-a-number".into())) >= 1, "garbage env -> cores");
-        assert!(resolve_with(0, Some("0".into())) >= 1, "zero env -> cores");
+        assert_eq!(
+            resolve_with(0, Some("0".into())),
+            1,
+            "zero env is clamped to one worker, not silently ignored"
+        );
+        assert_eq!(resolve_with(0, Some(" 0 ".into())), 1, "trimmed zero env clamps too");
         assert!(resolve_with(0, None) >= 1, "no env -> cores");
         assert!(resolve_workers(0) >= 1, "end-to-end default is at least one worker");
     }

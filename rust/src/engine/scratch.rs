@@ -17,10 +17,12 @@
 //!
 //! Scratch reuse is invisible to the numerics: every buffer is either
 //! fully rewritten before it is read (`v`), zeroed by the kernel that
-//! fills it (`m` in [`engine_multiply_batch`]), or zero-filled on resize
-//! (`xp` via [`Tensor3::pad_into`]).
+//! fills it (`m` in [`multiply_batch`] — every dispatched micro-kernel,
+//! scalar or SIMD, zero-initializes its accumulator block, and the
+//! zero-skip run-lists only elide *products*, never the zeroing), or
+//! zero-filled on resize (`xp` via [`Tensor3::pad_into`]).
 //!
-//! [`engine_multiply_batch`]: crate::winograd::layout::engine_multiply_batch
+//! [`multiply_batch`]: crate::winograd::kernel::multiply_batch
 //! [`Tensor3::pad_into`]: crate::util::tensor::Tensor3::pad_into
 //! [`ScratchStash`]: crate::engine::pool::ScratchStash
 
@@ -45,9 +47,9 @@ pub struct Scratch<E: Elem = f64> {
     pub xp: Tensor3<E>,
     /// Gathered Winograd-domain tile matrix for one stripe, position-major
     /// `[pos][c_in][tiles_w]` over all 16 positions — the left operand
-    /// gather feeding [`engine_multiply_batch`].
+    /// gather feeding [`multiply_batch`].
     ///
-    /// [`engine_multiply_batch`]: crate::winograd::layout::engine_multiply_batch
+    /// [`multiply_batch`]: crate::winograd::kernel::multiply_batch
     pub v: Vec<E>,
     /// Winograd-domain accumulators for one stripe, `[c_out][pos][tiles_w]`
     /// (zeroed by the batched kernel; skipped positions stay zero for the

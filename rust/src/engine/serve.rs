@@ -28,7 +28,7 @@ use std::sync::{Arc, Mutex};
 use crate::accel::functional::Events;
 use crate::artifact::{AnyPlan, ArtifactError, PlanCacheStats, PlanKey, PlanStore};
 use crate::engine::exec::{AnyEngine, Engine};
-use crate::engine::plan::{resolve_precision, PlanOptions, Planner, Select};
+use crate::engine::plan::{resolve_kernel, resolve_precision, PlanOptions, Planner, Select};
 use crate::engine::pool::{resolve_workers, WorkerPool};
 use crate::gan::workload::Method;
 use crate::gan::zoo::{self, Gan, Scale};
@@ -55,6 +55,12 @@ pub struct NativeConfig {
     /// ([`crate::engine::plan::resolve_precision`]). The `"tdc"` reference
     /// routes always serve f64 regardless.
     pub precision: Option<Precision>,
+    /// GEMM micro-kernel for Winograd-method plans: `Some(k)` forces one,
+    /// `None` resolves via the `WINGAN_KERNEL` environment variable and
+    /// then the host capability probe
+    /// ([`crate::engine::plan::resolve_kernel`]). Forcing SIMD on a host
+    /// without AVX2/NEON falls back to scalar with a logged correction.
+    pub kernel: Option<crate::winograd::kernel::KernelKind>,
     /// root of an on-disk [`PlanStore`] to boot from: route plans are
     /// loaded as artifacts when present (cold start becomes a file read),
     /// and any route that misses — or finds a corrupt/mismatched artifact
@@ -72,6 +78,7 @@ impl Default for NativeConfig {
             seed: 42,
             models: None,
             precision: None,
+            kernel: None,
             plan_store: None,
         }
     }
@@ -270,6 +277,8 @@ impl NativeRuntime {
         let zoo_models = zoo::all(cfg.scale);
         // explicit config > WINGAN_PRECISION env > per-model dse Auto
         let precision_policy = resolve_precision(cfg.precision);
+        // explicit config > WINGAN_KERNEL env > host capability Auto
+        let kernel_policy = resolve_kernel(cfg.kernel);
         let store = cfg.plan_store.as_ref().map(|root| PlanStore::open(root.clone()));
         let mut plan_stats = PlanCacheStats::default();
         let mut engines: BTreeMap<(String, String), AnyEngine> = BTreeMap::new();
@@ -289,6 +298,7 @@ impl NativeRuntime {
                 let planner = Planner::new(PlanOptions {
                     select,
                     precision: precision_policy,
+                    kernel: kernel_policy,
                     ..Default::default()
                 });
                 // the tdc route is the bit-exact f64 reference anchor; fast
@@ -652,8 +662,33 @@ mod tests {
 
     #[test]
     fn env_name_is_stable() {
-        // the documented override variable (exercised end-to-end by ops,
+        // the documented override variables (exercised end-to-end by ops,
         // not mutated here: tests share one process environment)
         assert_eq!(PRECISION_ENV, "WINGAN_PRECISION");
+        assert_eq!(crate::engine::plan::KERNEL_ENV, "WINGAN_KERNEL");
+    }
+
+    #[test]
+    fn kernel_choice_does_not_change_served_outputs() {
+        use crate::winograd::kernel::KernelKind;
+        // same route, both micro-kernels forced, f64 tier: the served
+        // bytes must be bitwise identical (the SIMD kernel's contract)
+        let scalar_rt = NativeRuntime::build(&NativeConfig {
+            precision: Some(Precision::F64),
+            kernel: Some(KernelKind::Scalar),
+            ..tiny_cfg()
+        });
+        let simd_rt = NativeRuntime::build(&NativeConfig {
+            precision: Some(Precision::F64),
+            kernel: Some(KernelKind::Simd),
+            ..tiny_cfg()
+        });
+        let e = scalar_rt.entries.get("dcgan_winograd_b2").unwrap().clone();
+        let x: Vec<f32> =
+            (0..2 * e.input_len()).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+        let a = scalar_rt.execute(&e.name, &x).unwrap();
+        let b = simd_rt.execute(&e.name, &x).unwrap();
+        assert!(a == b, "kernel dispatch must not change served outputs");
+        assert_eq!(scalar_rt.events(), simd_rt.events(), "same event accounting");
     }
 }

@@ -37,7 +37,8 @@ USAGE: wingan <subcommand> [flags]
   serve  [--artifacts DIR] [--native] [--scale small|tiny] [--model dcgan]
          [--method winograd] [--requests 64] [--rate 200] [--max-wait-ms 20]
          [--seed 7] [--workers N] [--precision f32|f64|auto]
-         [--plan-store DIR] [--weight-seed 42] [--check-compile]
+         [--kernel scalar|simd|auto] [--plan-store DIR] [--weight-seed 42]
+         [--check-compile]
   compile [--store DIR] [--scale small|tiny|all] [--models dcgan,gpgan]
           [--seed 42]
   plan   inspect <artifact-file>
@@ -50,6 +51,11 @@ when the PJRT artifacts are unavailable (this offline build always is).
 memory traffic), f64 (the bit-exact reference tier), or auto/absent
 (WINGAN_PRECISION env, then the per-model dse recommendation). The tdc
 reference route always serves f64.
+--kernel picks the Winograd GEMM micro-kernel compiled into the fast
+routes' plans: simd (explicit AVX2/NEON, bitwise-identical outputs), scalar
+(the blocked portable loop), or auto/absent (WINGAN_KERNEL env, then SIMD
+whenever the host supports it). Forcing simd on a host without it falls
+back to scalar with a logged correction.
 --plan-store boots route plans from AOT artifacts (see `compile`) instead
 of compiling at startup; missing/corrupt artifacts fall back to in-process
 compilation and are (re)published. --weight-seed picks the native weight
@@ -197,6 +203,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_usize("seed", 7).map_err(anyhow::Error::msg)? as u64;
     let workers = args.get_workers().map_err(anyhow::Error::msg)?;
     let precision = args.get_precision().map_err(anyhow::Error::msg)?;
+    let kernel = args.get_kernel().map_err(anyhow::Error::msg)?;
     let plan_store = args.get("plan-store").map(PathBuf::from);
     // weight seed for the native plans — must match `compile --seed` for a
     // plan store to boot warm (both default to 42). Distinct from --seed,
@@ -219,6 +226,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             scale,
             workers,
             precision,
+            kernel,
             seed: weight_seed,
             plan_store: plan_store.clone(),
             ..Default::default()
@@ -226,16 +234,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         match &plan_store {
             Some(store) => println!(
                 "booting native engine plans for {model} from plan store {} \
-                 ({scale:?} scale, pool of {} workers, precision policy {:?})...",
+                 ({scale:?} scale, pool of {} workers, precision policy {:?}, \
+                 kernel policy {:?})...",
                 store.display(),
                 wingan::engine::resolve_workers(workers),
                 wingan::engine::resolve_precision(precision),
+                wingan::engine::resolve_kernel(kernel),
             ),
             None => println!(
                 "compiling native engine plans for {model} ({scale:?} scale, pool of {} workers, \
-                 precision policy {:?})...",
+                 precision policy {:?}, kernel policy {:?})...",
                 wingan::engine::resolve_workers(workers),
                 wingan::engine::resolve_precision(precision),
+                wingan::engine::resolve_kernel(kernel),
             ),
         }
         native_cfg = Some(cfg.clone());

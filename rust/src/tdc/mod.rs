@@ -49,7 +49,13 @@ impl PhaseTaps {
 
 /// Derive the 1D tap plan for `phase` of a (K, S, P) deconv.
 ///
-/// Panics if the decomposition would need an offset outside
+/// A phase whose first candidate tap already falls past the kernel
+/// (`t0 >= K`, possible for exotic (K, S) combos like K=1, S=2) receives
+/// **zero real taps**: an all-padded plan with `d0 = 0`. Downstream,
+/// `reorder_filter` turns such degenerate phases into explicitly empty
+/// slabs the engine skips.
+///
+/// Panics if a non-degenerate decomposition would need an offset outside
 /// `[-(K_C-1), 0]` — i.e. the padding is too small for a uniform-K_C
 /// conversion (never the case for the paper's configs).
 pub fn phase_taps_1d(k: usize, s: usize, p: usize, phase: usize) -> PhaseTaps {
@@ -60,6 +66,11 @@ pub fn phase_taps_1d(k: usize, s: usize, p: usize, phase: usize) -> PhaseTaps {
     let kc_ = kc(k, s);
     let n_real = if t0 >= k { 0 } else { (k - t0).div_ceil(s) };
     assert!(n_real <= kc_);
+    if n_real == 0 {
+        // degenerate phase: every tap is implicit zero-pad, so the offset
+        // derivation below is vacuous (and its range assert would fire).
+        return PhaseTaps { taps: vec![None; kc_], d0: 0 };
+    }
     let num = phase as isize + t0 as isize - pad as isize;
     assert_eq!(num.rem_euclid(s as isize), 0);
     let d0 = num / s as isize;
@@ -393,6 +404,30 @@ mod tests {
         let w = rand_filter(&mut rng, 2, 2, k);
         let y0 = deconv_naive(&x, &w, s, p);
         let y1 = tdc_deconv(&x, &w, s, p);
+        assert!(y0.max_abs_diff(&y1) < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_phase_gets_zero_real_taps() {
+        // K=1, S=2, P=0: phase 1's first candidate tap (t0 = 1) is past the
+        // kernel, so the phase has no real taps. Before the fix this path
+        // panicked on the d0 range assert; now it returns an all-padded plan.
+        let t1 = phase_taps_1d(1, 2, 0, 1);
+        assert_eq!(t1.real_taps(), 0);
+        assert_eq!(t1.taps, vec![None]);
+        assert_eq!(t1.d0, 0);
+        let t0 = phase_taps_1d(1, 2, 0, 0);
+        assert_eq!(t0.real_taps(), 1);
+        // decompose marks the degenerate phases and the end-to-end TDC
+        // result still matches the naive scatter-add reference
+        let mut rng = Rng::new(104);
+        let x = rand_tensor(&mut rng, 2, 3, 4);
+        let w = rand_filter(&mut rng, 2, 3, 1);
+        let phases = decompose(&w, 2, 0);
+        let supports: Vec<(usize, usize)> = phases.iter().map(|p| (p.ry, p.rx)).collect();
+        assert_eq!(supports, vec![(1, 1), (1, 0), (0, 1), (0, 0)]);
+        let y0 = deconv_naive(&x, &w, 2, 0);
+        let y1 = tdc_deconv(&x, &w, 2, 0);
         assert!(y0.max_abs_diff(&y1) < 1e-12);
     }
 

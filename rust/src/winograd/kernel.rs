@@ -1,0 +1,831 @@
+//! Arch-dispatched SIMD micro-kernels for the Winograd-domain GEMM, with
+//! runtime zero-skip (PR 6).
+//!
+//! The blocked scalar kernel ([`engine_multiply_batch`]) leans on
+//! autovectorization and multiplies through every `c_in` lane. This module
+//! makes both decisions explicit:
+//!
+//! * **Kernel dispatch** ([`KernelKind`]): an AVX2 path (x86_64) and a NEON
+//!   path (aarch64) via `std::arch`, with the blocked scalar loop as the
+//!   portable fallback. The choice is feature-detected once at plan-compile
+//!   (or artifact-load) time and recorded on
+//!   [`crate::engine::TileGeometry::kernel`], so the dispatch decision is
+//!   part of the compiled plan — visible in `wingan plan inspect` — rather
+//!   than re-probed per call.
+//! * **Runtime zero-skip** ([`RunList`]): the reorder step already removes
+//!   the *structurally* zero rows (paper Fig. 5/6); a lowered f32 slab or a
+//!   pruned model can additionally carry all-zero runs along `c_in` inside
+//!   a live row. [`RunList::build`] scans each reordered slab once per
+//!   (position, `c_out` register block) and [`multiply_batch`] iterates
+//!   only the live runs.
+//!
+//! # Bitwise contract
+//!
+//! [`multiply_batch`] preserves [`engine_multiply_batch`]'s accumulation
+//! contract exactly: every output element accumulates over `c_in` in
+//! ascending order from `E::ZERO`, one `acc + u * v` rounding per step.
+//! The SIMD paths vectorize along the `tiles` dimension (each vector lane
+//! is a different output element) and use separate multiply and add
+//! instructions — **no FMA** — so each lane executes the identical IEEE
+//! operation sequence as the scalar loop. Consequently
+//! `multiply_batch(Scalar, ..)` and `multiply_batch(Simd, ..)` are
+//! **bit-identical to each other and to [`engine_multiply_batch`]** at both
+//! precisions (pinned by the proptests).
+//!
+//! Zero-skip keeps the same ascending order over the *surviving* channels.
+//! Skipping a channel whose weights are exactly `±0.0` removes terms of
+//! the form `acc + (±0.0 * v)`, which can only flip the sign of an exactly
+//! zero partial sum (`-0.0 + 0.0 == +0.0`) — the skip path is therefore
+//! value-equal (`==`) to the dense path everywhere, and bit-equal whenever
+//! no partial sum is a negative zero.
+//!
+//! [`engine_multiply_batch`]: crate::winograd::layout::engine_multiply_batch
+
+use crate::util::elem::Elem;
+use crate::winograd::layout::{ReorderedFilter, CI_BLOCK, GEMM_MR, GEMM_NR};
+use crate::winograd::transforms::N;
+use std::any::TypeId;
+
+/// Which micro-kernel family a compiled plan's Winograd GEMM runs on.
+///
+/// Recorded on [`crate::engine::TileGeometry`] at plan-compile /
+/// artifact-load time ([`crate::engine::Planner::resolve_kernel`]); the
+/// default is the portable blocked scalar kernel.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// The register/cache-blocked scalar loop (autovectorized; portable).
+    #[default]
+    Scalar,
+    /// Explicit `std::arch` SIMD: AVX2 on x86_64, NEON on aarch64. Falls
+    /// back to the scalar loop per edge block (ragged `tiles % GEMM_NR`)
+    /// and wholesale on hosts without the instruction set.
+    Simd,
+}
+
+impl KernelKind {
+    /// Parse a kernel name (`"scalar"` / `"simd"`, case-insensitive) — the
+    /// value space of the CLI `--kernel` flag and the `WINGAN_KERNEL`
+    /// environment variable.
+    pub fn parse(s: &str) -> Result<KernelKind, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(KernelKind::Scalar),
+            "simd" => Ok(KernelKind::Simd),
+            other => Err(format!("unknown kernel '{other}' (expected scalar or simd)")),
+        }
+    }
+
+    /// Stable lowercase label (artifact `describe` output, serve boot log).
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn simd_available_impl() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(target_arch = "aarch64")]
+fn simd_available_impl() -> bool {
+    true // NEON is baseline on aarch64
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn simd_available_impl() -> bool {
+    false
+}
+
+/// Whether this host can run the [`KernelKind::Simd`] paths: AVX2 on
+/// x86_64 (runtime-detected), always on aarch64 (NEON is baseline), never
+/// elsewhere. Requesting `Simd` where this is `false` resolves to `Scalar`
+/// (see [`crate::engine::Planner::resolve_kernel`]) — including for
+/// artifacts compiled on a different host.
+pub fn simd_available() -> bool {
+    simd_available_impl()
+}
+
+/// Compact per-slab run-list of the *live* `c_in` ranges, one list per
+/// (live position, `c_out` register block of [`GEMM_MR`] rows): the
+/// within-slab runtime sparsity that [`multiply_batch`] skips.
+///
+/// Block `b = pi * n_blocks_per_pos + cb` (position-major, `cb` the
+/// `c_out / GEMM_MR` block index) owns `runs[offsets[b]..offsets[b + 1]]`;
+/// each run `(s, e)` is a half-open `c_in` range in which at least one of
+/// the block's `GEMM_MR` rows has a non-zero Winograd-domain weight.
+/// Channels outside every run contribute only exact-zero products for the
+/// whole register block and are skipped.
+///
+/// A `RunList` is **derived data** — a pure function of the slab weights.
+/// It is built by [`crate::winograd::layout::reorder_filter`], rebuilt
+/// after precision lowering ([`ReorderedFilter::cast_to`]; f32 quantization
+/// can only create new zeros), and verified against a rebuild when decoded
+/// from a plan artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RunList {
+    /// `n_blocks + 1` cumulative run counts; block `b` owns
+    /// `runs[offsets[b]..offsets[b+1]]`.
+    pub offsets: Vec<u32>,
+    /// half-open `(start, end)` live `c_in` ranges, ascending and
+    /// non-overlapping within a block
+    pub runs: Vec<(u32, u32)>,
+}
+
+impl RunList {
+    /// `c_out` register blocks per live position.
+    pub fn blocks_per_pos(c_out: usize) -> usize {
+        c_out.div_ceil(GEMM_MR)
+    }
+
+    /// Scan a position-major slab `u[(pi * c_out + co) * c_in + ci]` for
+    /// all-zero `c_in` runs per (position, register block). Returns `None`
+    /// when every block is fully live (the common dense case — seeded
+    /// random weights have no exact zeros), so dense slabs pay nothing.
+    pub fn build<E: Elem>(n_live: usize, c_out: usize, c_in: usize, u: &[E]) -> Option<RunList> {
+        debug_assert_eq!(u.len(), n_live * c_out * c_in);
+        let n_cb = RunList::blocks_per_pos(c_out);
+        let mut offsets = Vec::with_capacity(n_live * n_cb + 1);
+        offsets.push(0u32);
+        let mut runs: Vec<(u32, u32)> = Vec::new();
+        let mut any_dead = false;
+        for pi in 0..n_live {
+            for cb in 0..n_cb {
+                let co0 = cb * GEMM_MR;
+                let mr = GEMM_MR.min(c_out - co0);
+                let mut run_start: Option<u32> = None;
+                for ci in 0..c_in {
+                    let live = (0..mr)
+                        .any(|mi| u[(pi * c_out + co0 + mi) * c_in + ci] != E::ZERO);
+                    if live {
+                        if run_start.is_none() {
+                            run_start = Some(ci as u32);
+                        }
+                    } else {
+                        any_dead = true;
+                        if let Some(s) = run_start.take() {
+                            runs.push((s, ci as u32));
+                        }
+                    }
+                }
+                if let Some(s) = run_start.take() {
+                    runs.push((s, c_in as u32));
+                }
+                offsets.push(runs.len() as u32);
+            }
+        }
+        if any_dead {
+            Some(RunList { offsets, runs })
+        } else {
+            None
+        }
+    }
+
+    /// Number of (position, register-block) entries.
+    pub fn n_blocks(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// The live runs of block `b`.
+    pub fn runs_for(&self, b: usize) -> &[(u32, u32)] {
+        &self.runs[self.offsets[b] as usize..self.offsets[b + 1] as usize]
+    }
+
+    /// Live channels covered by block `b` (sum of run lengths).
+    pub fn covered(&self, b: usize) -> usize {
+        self.runs_for(b).iter().map(|&(s, e)| (e - s) as usize).sum()
+    }
+
+    /// Total skipped (channel, row) products per tile across the whole
+    /// slab — the observability number `describe` and the benches report.
+    pub fn skipped_products(&self, c_out: usize, c_in: usize) -> usize {
+        let n_cb = RunList::blocks_per_pos(c_out);
+        let mut skipped = 0;
+        for b in 0..self.n_blocks() {
+            let co0 = (b % n_cb) * GEMM_MR;
+            let mr = GEMM_MR.min(c_out - co0);
+            skipped += (c_in - self.covered(b)) * mr;
+        }
+        skipped
+    }
+
+    /// Structural sanity for decoded run-lists: offsets are monotone and
+    /// sized `n_blocks + 1`, runs ascending / non-overlapping / non-empty
+    /// and inside `[0, c_in)`.
+    pub fn is_well_formed(&self, n_live: usize, c_out: usize, c_in: usize) -> bool {
+        let n_blocks = n_live * RunList::blocks_per_pos(c_out);
+        if self.offsets.len() != n_blocks + 1 || self.offsets[0] != 0 {
+            return false;
+        }
+        if self.offsets.windows(2).any(|w| w[0] > w[1]) {
+            return false;
+        }
+        if *self.offsets.last().unwrap() as usize != self.runs.len() {
+            return false;
+        }
+        for b in 0..n_blocks {
+            let mut prev_end = 0u32;
+            for &(s, e) in self.runs_for(b) {
+                if s >= e || e > c_in as u32 || s < prev_end {
+                    return false;
+                }
+                prev_end = e;
+            }
+        }
+        true
+    }
+}
+
+/// The arch-dispatched, sparsity-aware Winograd-domain GEMM: the blocked
+/// loop of [`engine_multiply_batch`] with (a) the inner register-tile
+/// update routed to the `kind` micro-kernel and (b) the `c_in` reduction
+/// iterating only the live runs of `rf.skip` (when present).
+///
+/// Layouts and blocking are identical to [`engine_multiply_batch`]:
+/// `v` is the gathered tile matrix `[pos][c_in][tiles]`, `m` the
+/// Winograd-domain accumulator `[c_out][pos][tiles]`, zeroed here.
+///
+/// Returns the number of multiplications actually issued:
+/// `live.len() * c_out * c_in * tiles` for a dense slab (exactly what
+/// [`engine_multiply_batch`] reports), minus `tiles *`
+/// [`RunList::skipped_products`] when zero runs are skipped.
+///
+/// See the module docs for the bitwise contract (SIMD == scalar at both
+/// precisions; zero-skip value-equal to dense).
+///
+/// [`engine_multiply_batch`]: crate::winograd::layout::engine_multiply_batch
+pub fn multiply_batch<E: Elem>(
+    kind: KernelKind,
+    rf: &ReorderedFilter<E>,
+    v: &[E],
+    tiles: usize,
+    m: &mut [E],
+) -> usize {
+    assert_eq!(v.len(), N * N * rf.c_in * tiles, "gathered tile matrix shape");
+    assert_eq!(m.len(), rf.c_out * N * N * tiles, "winograd accumulator shape");
+    let (c_in, c_out) = (rf.c_in, rf.c_out);
+    let simd = kind == KernelKind::Simd;
+    let n_cb = RunList::blocks_per_pos(c_out);
+    let dense_run = [(0u32, c_in as u32)];
+    m.fill(E::ZERO);
+    for (pi, &pos) in rf.live.iter().enumerate() {
+        let u_slab = &rf.u[pi * c_out * c_in..][..c_out * c_in];
+        let v_panel = &v[pos * c_in * tiles..][..c_in * tiles];
+        for ci0 in (0..c_in).step_by(CI_BLOCK) {
+            let ci1 = (ci0 + CI_BLOCK).min(c_in);
+            for co0 in (0..c_out).step_by(GEMM_MR) {
+                let mr = GEMM_MR.min(c_out - co0);
+                let runs: &[(u32, u32)] = match &rf.skip {
+                    Some(sk) => sk.runs_for(pi * n_cb + co0 / GEMM_MR),
+                    None => &dense_run,
+                };
+                for &(rs, re) in runs {
+                    // clip the run to this cache block; runs are ascending,
+                    // so per output element the `c_in` order stays ascending
+                    let (s, e) = ((rs as usize).max(ci0), (re as usize).min(ci1));
+                    if s >= e {
+                        continue;
+                    }
+                    for t0 in (0..tiles).step_by(GEMM_NR) {
+                        let nr = GEMM_NR.min(tiles - t0);
+                        // load the register tile with the partial sums of
+                        // the previous cache blocks / runs
+                        let mut acc = [[E::ZERO; GEMM_NR]; GEMM_MR];
+                        for (mi, a) in acc.iter_mut().take(mr).enumerate() {
+                            let row = &m[((co0 + mi) * N * N + pos) * tiles + t0..][..nr];
+                            a[..nr].copy_from_slice(row);
+                        }
+                        accumulate_run(
+                            &mut acc, mr, nr, u_slab, co0, c_in, v_panel, tiles, t0, s, e, simd,
+                        );
+                        for (mi, a) in acc.iter().take(mr).enumerate() {
+                            let out = &mut m[((co0 + mi) * N * N + pos) * tiles + t0..][..nr];
+                            out.copy_from_slice(&a[..nr]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    issued_mults(rf, tiles)
+}
+
+/// Multiplications [`multiply_batch`] issues for this slab at stripe width
+/// `tiles` — the dense count minus the zero-skipped products.
+pub fn issued_mults<E: Elem>(rf: &ReorderedFilter<E>, tiles: usize) -> usize {
+    let dense = rf.live.len() * rf.c_out * rf.c_in * tiles;
+    match &rf.skip {
+        Some(sk) => dense - sk.skipped_products(rf.c_out, rf.c_in) * tiles,
+        None => dense,
+    }
+}
+
+/// Accumulate `acc[mi][x] += u[co0+mi][ci] * v[ci][t0+x]` for
+/// `ci in ci_s..ci_e`, ascending — the register-tile inner loop. Dispatches
+/// to the arch SIMD path on full-width (`nr == GEMM_NR`) blocks when
+/// requested and available; otherwise runs the scalar sequence (which the
+/// SIMD paths replicate lane for lane).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn accumulate_run<E: Elem>(
+    acc: &mut [[E; GEMM_NR]; GEMM_MR],
+    mr: usize,
+    nr: usize,
+    u_slab: &[E],
+    co0: usize,
+    c_in: usize,
+    v_panel: &[E],
+    tiles: usize,
+    t0: usize,
+    ci_s: usize,
+    ci_e: usize,
+    simd: bool,
+) {
+    if simd && nr == GEMM_NR && simd_run(acc, mr, u_slab, co0, c_in, v_panel, tiles, t0, ci_s, ci_e)
+    {
+        return;
+    }
+    for ci in ci_s..ci_e {
+        let row = &v_panel[ci * tiles + t0..][..nr];
+        for (mi, a) in acc.iter_mut().take(mr).enumerate() {
+            let u = u_slab[(co0 + mi) * c_in + ci];
+            for (x, &vv) in a.iter_mut().zip(row) {
+                *x += u * vv;
+            }
+        }
+    }
+}
+
+/// Reinterpret a slice of `E` as `T`. Sound only when `E` and `T` are the
+/// same type (checked by `TypeId`); used to reach the monomorphic
+/// `f32`/`f64` SIMD kernels from the generic driver.
+#[inline]
+fn cast_slice<E: 'static, T: 'static>(s: &[E]) -> &[T] {
+    debug_assert_eq!(TypeId::of::<E>(), TypeId::of::<T>());
+    // SAFETY: E == T (TypeId equality above), so layout and validity match.
+    unsafe { std::slice::from_raw_parts(s.as_ptr().cast::<T>(), s.len()) }
+}
+
+/// [`cast_slice`] for the register-tile accumulator array.
+#[inline]
+fn cast_acc<E: 'static, T: 'static>(
+    a: &mut [[E; GEMM_NR]; GEMM_MR],
+) -> &mut [[T; GEMM_NR]; GEMM_MR] {
+    debug_assert_eq!(TypeId::of::<E>(), TypeId::of::<T>());
+    // SAFETY: E == T (TypeId equality above), so layout and validity match.
+    unsafe { &mut *(a as *mut [[E; GEMM_NR]; GEMM_MR]).cast::<[[T; GEMM_NR]; GEMM_MR]>() }
+}
+
+/// Try the arch SIMD path for one full-width register-tile update. Returns
+/// `false` (caller runs the scalar loop) off x86_64/aarch64, when AVX2 is
+/// absent, or for element types without a vector kernel.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn simd_run<E: Elem>(
+    acc: &mut [[E; GEMM_NR]; GEMM_MR],
+    mr: usize,
+    u_slab: &[E],
+    co0: usize,
+    c_in: usize,
+    v_panel: &[E],
+    tiles: usize,
+    t0: usize,
+    ci_s: usize,
+    ci_e: usize,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return false;
+        }
+        if TypeId::of::<E>() == TypeId::of::<f64>() {
+            // SAFETY: AVX2 detected above; E is f64; the caller guarantees
+            // a full-width block (t0 + GEMM_NR <= tiles) and in-bounds
+            // (co0 + mr, ci_e) indices.
+            unsafe {
+                avx2::run_f64(
+                    cast_acc::<E, f64>(acc),
+                    mr,
+                    cast_slice::<E, f64>(u_slab),
+                    co0,
+                    c_in,
+                    cast_slice::<E, f64>(v_panel),
+                    tiles,
+                    t0,
+                    ci_s,
+                    ci_e,
+                );
+            }
+            return true;
+        }
+        if TypeId::of::<E>() == TypeId::of::<f32>() {
+            // SAFETY: as above, with E == f32.
+            unsafe {
+                avx2::run_f32(
+                    cast_acc::<E, f32>(acc),
+                    mr,
+                    cast_slice::<E, f32>(u_slab),
+                    co0,
+                    c_in,
+                    cast_slice::<E, f32>(v_panel),
+                    tiles,
+                    t0,
+                    ci_s,
+                    ci_e,
+                );
+            }
+            return true;
+        }
+        false
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if TypeId::of::<E>() == TypeId::of::<f64>() {
+            // SAFETY: NEON is baseline on aarch64; E is f64; the caller
+            // guarantees a full-width block and in-bounds indices.
+            unsafe {
+                neon::run_f64(
+                    cast_acc::<E, f64>(acc),
+                    mr,
+                    cast_slice::<E, f64>(u_slab),
+                    co0,
+                    c_in,
+                    cast_slice::<E, f64>(v_panel),
+                    tiles,
+                    t0,
+                    ci_s,
+                    ci_e,
+                );
+            }
+            return true;
+        }
+        if TypeId::of::<E>() == TypeId::of::<f32>() {
+            // SAFETY: as above, with E == f32.
+            unsafe {
+                neon::run_f32(
+                    cast_acc::<E, f32>(acc),
+                    mr,
+                    cast_slice::<E, f32>(u_slab),
+                    co0,
+                    c_in,
+                    cast_slice::<E, f32>(v_panel),
+                    tiles,
+                    t0,
+                    ci_s,
+                    ci_e,
+                );
+            }
+            return true;
+        }
+        false
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = (acc, mr, u_slab, co0, c_in, v_panel, tiles, t0, ci_s, ci_e);
+        false
+    }
+}
+
+/// AVX2 register-tile kernels: 8 output tiles per vector step (`GEMM_NR`
+/// lanes along the contiguous `tiles` dimension), broadcast weight,
+/// separate `vmulp*` + `vaddp*` so every lane matches the scalar rounding
+/// sequence exactly (no FMA — see the module docs).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{GEMM_MR, GEMM_NR};
+    use std::arch::x86_64::*;
+
+    /// One full-width f64 register-tile update (`GEMM_MR x GEMM_NR` = two
+    /// `__m256d` per row).
+    ///
+    /// # Safety
+    /// AVX2 must be available; `t0 + GEMM_NR <= tiles`,
+    /// `ci_e * tiles <= v_panel.len()`, `(co0 + mr) * c_in <= u_slab.len()`.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    pub unsafe fn run_f64(
+        acc: &mut [[f64; GEMM_NR]; GEMM_MR],
+        mr: usize,
+        u_slab: &[f64],
+        co0: usize,
+        c_in: usize,
+        v_panel: &[f64],
+        tiles: usize,
+        t0: usize,
+        ci_s: usize,
+        ci_e: usize,
+    ) {
+        let mut r = [[_mm256_setzero_pd(); 2]; GEMM_MR];
+        for mi in 0..mr {
+            r[mi][0] = _mm256_loadu_pd(acc[mi].as_ptr());
+            r[mi][1] = _mm256_loadu_pd(acc[mi].as_ptr().add(4));
+        }
+        for ci in ci_s..ci_e {
+            let vp = v_panel.as_ptr().add(ci * tiles + t0);
+            let v0 = _mm256_loadu_pd(vp);
+            let v1 = _mm256_loadu_pd(vp.add(4));
+            for mi in 0..mr {
+                let u = _mm256_set1_pd(*u_slab.get_unchecked((co0 + mi) * c_in + ci));
+                r[mi][0] = _mm256_add_pd(r[mi][0], _mm256_mul_pd(u, v0));
+                r[mi][1] = _mm256_add_pd(r[mi][1], _mm256_mul_pd(u, v1));
+            }
+        }
+        for mi in 0..mr {
+            _mm256_storeu_pd(acc[mi].as_mut_ptr(), r[mi][0]);
+            _mm256_storeu_pd(acc[mi].as_mut_ptr().add(4), r[mi][1]);
+        }
+    }
+
+    /// One full-width f32 register-tile update (one `__m256` per row).
+    ///
+    /// # Safety
+    /// Same preconditions as [`run_f64`].
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    pub unsafe fn run_f32(
+        acc: &mut [[f32; GEMM_NR]; GEMM_MR],
+        mr: usize,
+        u_slab: &[f32],
+        co0: usize,
+        c_in: usize,
+        v_panel: &[f32],
+        tiles: usize,
+        t0: usize,
+        ci_s: usize,
+        ci_e: usize,
+    ) {
+        let mut r = [_mm256_setzero_ps(); GEMM_MR];
+        for mi in 0..mr {
+            r[mi] = _mm256_loadu_ps(acc[mi].as_ptr());
+        }
+        for ci in ci_s..ci_e {
+            let v0 = _mm256_loadu_ps(v_panel.as_ptr().add(ci * tiles + t0));
+            for mi in 0..mr {
+                let u = _mm256_set1_ps(*u_slab.get_unchecked((co0 + mi) * c_in + ci));
+                r[mi] = _mm256_add_ps(r[mi], _mm256_mul_ps(u, v0));
+            }
+        }
+        for mi in 0..mr {
+            _mm256_storeu_ps(acc[mi].as_mut_ptr(), r[mi]);
+        }
+    }
+}
+
+/// NEON register-tile kernels (aarch64): same lane discipline as the AVX2
+/// pair — broadcast weight, separate `fmul` + `fadd`, no FMA.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{GEMM_MR, GEMM_NR};
+    use std::arch::aarch64::*;
+
+    /// One full-width f64 register-tile update (four `float64x2_t` per row).
+    ///
+    /// # Safety
+    /// `t0 + GEMM_NR <= tiles`, `ci_e * tiles <= v_panel.len()`,
+    /// `(co0 + mr) * c_in <= u_slab.len()`.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    pub unsafe fn run_f64(
+        acc: &mut [[f64; GEMM_NR]; GEMM_MR],
+        mr: usize,
+        u_slab: &[f64],
+        co0: usize,
+        c_in: usize,
+        v_panel: &[f64],
+        tiles: usize,
+        t0: usize,
+        ci_s: usize,
+        ci_e: usize,
+    ) {
+        let mut r = [[vdupq_n_f64(0.0); 4]; GEMM_MR];
+        for mi in 0..mr {
+            for q in 0..4 {
+                r[mi][q] = vld1q_f64(acc[mi].as_ptr().add(2 * q));
+            }
+        }
+        for ci in ci_s..ci_e {
+            let vp = v_panel.as_ptr().add(ci * tiles + t0);
+            let v = [vld1q_f64(vp), vld1q_f64(vp.add(2)), vld1q_f64(vp.add(4)), vld1q_f64(vp.add(6))];
+            for mi in 0..mr {
+                let u = vdupq_n_f64(*u_slab.get_unchecked((co0 + mi) * c_in + ci));
+                for q in 0..4 {
+                    r[mi][q] = vaddq_f64(r[mi][q], vmulq_f64(u, v[q]));
+                }
+            }
+        }
+        for mi in 0..mr {
+            for q in 0..4 {
+                vst1q_f64(acc[mi].as_mut_ptr().add(2 * q), r[mi][q]);
+            }
+        }
+    }
+
+    /// One full-width f32 register-tile update (two `float32x4_t` per row).
+    ///
+    /// # Safety
+    /// Same preconditions as [`run_f64`].
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    pub unsafe fn run_f32(
+        acc: &mut [[f32; GEMM_NR]; GEMM_MR],
+        mr: usize,
+        u_slab: &[f32],
+        co0: usize,
+        c_in: usize,
+        v_panel: &[f32],
+        tiles: usize,
+        t0: usize,
+        ci_s: usize,
+        ci_e: usize,
+    ) {
+        let mut r = [[vdupq_n_f32(0.0); 2]; GEMM_MR];
+        for mi in 0..mr {
+            r[mi][0] = vld1q_f32(acc[mi].as_ptr());
+            r[mi][1] = vld1q_f32(acc[mi].as_ptr().add(4));
+        }
+        for ci in ci_s..ci_e {
+            let vp = v_panel.as_ptr().add(ci * tiles + t0);
+            let v0 = vld1q_f32(vp);
+            let v1 = vld1q_f32(vp.add(4));
+            for mi in 0..mr {
+                let u = vdupq_n_f32(*u_slab.get_unchecked((co0 + mi) * c_in + ci));
+                r[mi][0] = vaddq_f32(r[mi][0], vmulq_f32(u, v0));
+                r[mi][1] = vaddq_f32(r[mi][1], vmulq_f32(u, v1));
+            }
+        }
+        for mi in 0..mr {
+            vst1q_f32(acc[mi].as_mut_ptr(), r[mi][0]);
+            vst1q_f32(acc[mi].as_mut_ptr().add(4), r[mi][1]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tdc::{decompose, default_padding};
+    use crate::util::prng::Rng;
+    use crate::util::tensor::{Filter4, Tensor3};
+    use crate::winograd::layout::{
+        engine_multiply_batch, reorder_filter, reorder_input_tile,
+    };
+
+    #[test]
+    fn kernel_kind_parses_and_labels() {
+        assert_eq!(KernelKind::parse("scalar").unwrap(), KernelKind::Scalar);
+        assert_eq!(KernelKind::parse(" SIMD ").unwrap(), KernelKind::Simd);
+        assert!(KernelKind::parse("avx512").is_err());
+        assert_eq!(KernelKind::Scalar.label(), "scalar");
+        assert_eq!(KernelKind::Simd.label(), "simd");
+        assert_eq!(KernelKind::default(), KernelKind::Scalar);
+    }
+
+    #[test]
+    fn run_list_of_a_dense_slab_is_none() {
+        let mut rng = Rng::new(600);
+        let w = Filter4::from_vec(5, 3, 4, 4, rng.normal_vec(5 * 3 * 16));
+        let rf = reorder_filter(&decompose(&w, 2, default_padding(4, 2))[0]);
+        assert!(rf.skip.is_none(), "random normal weights have no exact zeros");
+        assert_eq!(issued_mults(&rf, 7), rf.live.len() * 3 * 5 * 7);
+    }
+
+    #[test]
+    fn run_list_finds_injected_zero_runs() {
+        // 1 live position, c_out = 2 (one register block), c_in = 10 with
+        // channels 3..6 zeroed across all rows of the block
+        let c_in = 10;
+        let mut u = vec![1.0f64; 2 * c_in];
+        for ci in 3..6 {
+            u[ci] = 0.0;
+            u[c_in + ci] = 0.0;
+        }
+        let sk = RunList::build(1, 2, c_in, &u).expect("zeros present");
+        assert_eq!(sk.n_blocks(), 1);
+        assert_eq!(sk.runs_for(0), &[(0, 3), (6, 10)]);
+        assert_eq!(sk.covered(0), 7);
+        assert_eq!(sk.skipped_products(2, c_in), 3 * 2);
+        assert!(sk.is_well_formed(1, 2, c_in));
+        // a channel dead in only one row of the block stays live
+        let mut u2 = vec![1.0f64; 2 * c_in];
+        u2[4] = 0.0;
+        assert!(RunList::build(1, 2, c_in, &u2).is_none());
+    }
+
+    #[test]
+    fn well_formedness_rejects_malformed_lists() {
+        let ok = RunList { offsets: vec![0, 1], runs: vec![(2, 5)] };
+        assert!(ok.is_well_formed(1, 4, 8));
+        let bad_order = RunList { offsets: vec![0, 2], runs: vec![(4, 6), (1, 3)] };
+        assert!(!bad_order.is_well_formed(1, 4, 8));
+        let bad_bounds = RunList { offsets: vec![0, 1], runs: vec![(2, 9)] };
+        assert!(!bad_bounds.is_well_formed(1, 4, 8));
+        let empty_run = RunList { offsets: vec![0, 1], runs: vec![(3, 3)] };
+        assert!(!empty_run.is_well_formed(1, 4, 8));
+        let bad_offsets = RunList { offsets: vec![0, 1], runs: vec![(0, 8)] };
+        assert!(!bad_offsets.is_well_formed(2, 4, 8));
+    }
+
+    /// Gather a one-stripe `[pos][ci][tiles]` matrix like the engine's
+    /// pre-PE does.
+    fn gather(x: &Tensor3, tiles: usize) -> Vec<f64> {
+        let c_in = x.c;
+        let mut v = vec![0.0; 16 * c_in * tiles];
+        for tx in 0..tiles {
+            let vt = reorder_input_tile(x, 0, tx);
+            for pos in 0..16 {
+                for ci in 0..c_in {
+                    v[(pos * c_in + ci) * tiles + tx] = vt.at(pos, ci);
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn simd_and_scalar_kernels_match_the_blocked_reference_bitwise() {
+        // geometry that crosses every blocking edge (cache block, register
+        // rows, ragged tiles) — both kernel kinds must equal the dense
+        // blocked reference bit for bit, in f64 and f32
+        let mut rng = Rng::new(601);
+        let (c_in, c_out, tiles) = (CI_BLOCK + 5, GEMM_MR + 3, 2 * GEMM_NR + 3);
+        let w = Filter4::from_vec(c_in, c_out, 4, 4, rng.normal_vec(c_in * c_out * 16));
+        let rf64 = reorder_filter(&decompose(&w, 2, default_padding(4, 2))[0]);
+        let rf32: ReorderedFilter<f32> = rf64.cast_to();
+        let wpix = 2 * tiles + 2;
+        let x64 = Tensor3::from_vec(c_in, 4, wpix, rng.normal_vec(c_in * 4 * wpix));
+        let v64 = gather(&x64, tiles);
+        let v32: Vec<f32> = v64.iter().map(|&v| v as f32).collect();
+
+        let mut want64 = vec![0.0f64; c_out * 16 * tiles];
+        let dense = engine_multiply_batch(&rf64, &v64, tiles, &mut want64);
+        for kind in [KernelKind::Scalar, KernelKind::Simd] {
+            let mut got = vec![1.0f64; c_out * 16 * tiles]; // dirty
+            let mults = multiply_batch(kind, &rf64, &v64, tiles, &mut got);
+            assert_eq!(mults, dense, "{kind:?} f64 mult count");
+            assert!(got == want64, "{kind:?} f64 must be bitwise dense-identical");
+        }
+
+        let mut want32 = vec![0.0f32; c_out * 16 * tiles];
+        engine_multiply_batch(&rf32, &v32, tiles, &mut want32);
+        for kind in [KernelKind::Scalar, KernelKind::Simd] {
+            let mut got = vec![1.0f32; c_out * 16 * tiles];
+            multiply_batch(kind, &rf32, &v32, tiles, &mut got);
+            assert!(got == want32, "{kind:?} f32 must be bitwise dense-identical");
+        }
+    }
+
+    #[test]
+    fn zero_skip_equals_dense_on_slabs_with_injected_runs() {
+        let mut rng = Rng::new(602);
+        let (c_in, c_out, tiles) = (24usize, 6usize, GEMM_NR + 1);
+        let w = Filter4::from_vec(c_in, c_out, 4, 4, rng.normal_vec(c_in * c_out * 16));
+        let mut rf = reorder_filter(&decompose(&w, 2, default_padding(4, 2))[0]);
+        // zero whole c_in runs across all c_out rows (prune-style sparsity)
+        for pi in 0..rf.live.len() {
+            for co in 0..c_out {
+                for ci in (pi % 3)..(pi % 3 + 5) {
+                    rf.u[(pi * c_out + co) * c_in + ci] = 0.0;
+                }
+            }
+        }
+        rf.skip = RunList::build(rf.live.len(), c_out, c_in, &rf.u);
+        let sk = rf.skip.as_ref().expect("injected zeros must be found");
+        assert!(sk.skipped_products(c_out, c_in) > 0);
+
+        let wpix = 2 * tiles + 2;
+        let x = Tensor3::from_vec(c_in, 4, wpix, rng.normal_vec(c_in * 4 * wpix));
+        let v = gather(&x, tiles);
+        // dense reference: same zeroed slab, no skip metadata
+        let mut dense_rf = rf.clone();
+        dense_rf.skip = None;
+        let mut want = vec![0.0f64; c_out * 16 * tiles];
+        let dense_mults = multiply_batch(KernelKind::Scalar, &dense_rf, &v, tiles, &mut want);
+        for kind in [KernelKind::Scalar, KernelKind::Simd] {
+            let mut got = vec![1.0f64; c_out * 16 * tiles];
+            let mults = multiply_batch(kind, &rf, &v, tiles, &mut got);
+            assert!(mults < dense_mults, "{kind:?} must actually skip work");
+            assert_eq!(mults, issued_mults(&rf, tiles));
+            // value-equal everywhere (bit-equal up to the ±0.0 caveat,
+            // which random data never hits)
+            assert!(got == want, "{kind:?} zero-skip must equal dense");
+        }
+    }
+
+    #[test]
+    fn simd_resolution_is_consistent_with_the_host() {
+        // simd_available() is a pure host property; multiply_batch(Simd, ..)
+        // must work either way (falling back to scalar lanes when absent)
+        let mut rng = Rng::new(603);
+        let w = Filter4::from_vec(3, 2, 4, 4, rng.normal_vec(3 * 2 * 16));
+        let rf = reorder_filter(&decompose(&w, 2, default_padding(4, 2))[0]);
+        let x = Tensor3::from_vec(3, 4, 2 * 4 + 2, rng.normal_vec(3 * 4 * 10));
+        let v = gather(&x, 4);
+        let mut a = vec![0.0f64; 2 * 16 * 4];
+        let mut b = vec![0.0f64; 2 * 16 * 4];
+        multiply_batch(KernelKind::Scalar, &rf, &v, 4, &mut a);
+        multiply_batch(KernelKind::Simd, &rf, &v, 4, &mut b);
+        assert!(a == b);
+        let _ = simd_available();
+    }
+}

@@ -14,20 +14,30 @@
 use crate::tdc::PhaseFilter;
 use crate::util::elem::Elem;
 use crate::util::tensor::Tensor3;
+use crate::winograd::kernel::RunList;
 use crate::winograd::sparsity::{classify, nonzero_positions, Case};
 use crate::winograd::transforms::{filter_bank_transform, input_transform, Tile4, M, N};
 
 /// One TDC phase's filters in the Winograd domain, reordered with zero rows
 /// removed: `u[p][co][ci]` for p over the *live* positions only.
+///
+/// A degenerate zero-tap phase (possible for exotic (K, S, P) combos where
+/// a phase receives no real taps) is represented as an **explicitly empty
+/// slab**: `case == Case::Empty`, `live.is_empty()`, `u.is_empty()`. The
+/// engine and the functional simulator skip such phases outright.
 #[derive(Clone, Debug)]
 pub struct ReorderedFilter<E: Elem = f64> {
     pub case: Case,
-    /// live position indices into the row-major 4x4 (len 16/12/9)
+    /// live position indices into the row-major 4x4 (len 16/12/9, or 0 for
+    /// an empty slab)
     pub live: Vec<usize>,
     pub c_in: usize,
     pub c_out: usize,
     /// `[live.len() * c_out * c_in]`, position-major
     pub u: Vec<E>,
+    /// runtime zero-skip run-list over `u` (see
+    /// [`crate::winograd::kernel::RunList`]); `None` when fully dense
+    pub skip: Option<RunList>,
     /// phase input offsets (from the TDC decomposition)
     pub d0y: isize,
     pub d0x: isize,
@@ -46,14 +56,20 @@ impl<E: Elem> ReorderedFilter<E> {
 
     /// The same reordered slab at another precision. Plan lowering uses
     /// this so the `G g Gᵀ` transform is always computed in f64 and only
-    /// the finished Winograd-domain weights are quantized.
+    /// the finished Winograd-domain weights are quantized. The zero-skip
+    /// run-list is **rebuilt** from the quantized weights (not copied):
+    /// f32 quantization can flush tiny weights to zero and create runs the
+    /// f64 slab did not have.
     pub fn cast_to<T: Elem>(&self) -> ReorderedFilter<T> {
+        let u: Vec<T> = self.u.iter().map(|&v| T::from_f64(v.to_f64())).collect();
+        let skip = RunList::build(self.live.len(), self.c_out, self.c_in, &u);
         ReorderedFilter {
             case: self.case,
             live: self.live.clone(),
             c_in: self.c_in,
             c_out: self.c_out,
-            u: self.u.iter().map(|&v| T::from_f64(v.to_f64())).collect(),
+            u,
+            skip,
             d0y: self.d0y,
             d0x: self.d0x,
         }
@@ -64,10 +80,26 @@ impl<E: Elem> ReorderedFilter<E> {
 /// f32 tier is produced by [`ReorderedFilter::cast_to`] *after* the exact
 /// transform).
 pub fn reorder_filter(ph: &PhaseFilter) -> ReorderedFilter {
-    let case = classify(ph.ry.clamp(1, 3), ph.rx.clamp(1, 3));
-    let live = nonzero_positions(ph.ry.clamp(1, 3), ph.rx.clamp(1, 3));
-    let bank = filter_bank_transform(&ph.g); // [ci*c_out] of Tile4
     let (c_in, c_out) = (ph.g.c_in, ph.g.c_out);
+    if ph.ry == 0 || ph.rx == 0 {
+        // degenerate zero-tap phase: the sub-filter is identically zero.
+        // The old `.clamp(1, 3)` silently promoted it to a 1-tap filter and
+        // produced a live slab of zeros; return an explicitly empty slab
+        // instead so the engine skips the phase outright.
+        return ReorderedFilter {
+            case: Case::Empty,
+            live: Vec::new(),
+            c_in,
+            c_out,
+            u: Vec::new(),
+            skip: None,
+            d0y: ph.d0y,
+            d0x: ph.d0x,
+        };
+    }
+    let case = classify(ph.ry.min(3), ph.rx.min(3));
+    let live = nonzero_positions(ph.ry.min(3), ph.rx.min(3));
+    let bank = filter_bank_transform(&ph.g); // [ci*c_out] of Tile4
     let mut u = vec![0.0; live.len() * c_out * c_in];
     for (pi, &pos) in live.iter().enumerate() {
         let (i, j) = (pos / N, pos % N);
@@ -77,7 +109,8 @@ pub fn reorder_filter(ph: &PhaseFilter) -> ReorderedFilter {
             }
         }
     }
-    ReorderedFilter { case, live, c_in, c_out, u, d0y: ph.d0y, d0x: ph.d0x }
+    let skip = RunList::build(live.len(), c_out, c_in, &u);
+    ReorderedFilter { case, live, c_in, c_out, u, skip, d0y: ph.d0y, d0x: ph.d0x }
 }
 
 /// Transformed input tiles for one tile position, reordered: `v[pos][ci]`
@@ -267,6 +300,34 @@ mod tests {
     // here. The geometry edge cases the register tiling must survive
     // (c_out % GEMM_MR, tiles % GEMM_NR, c_in % CI_BLOCK all non-zero) are
     // inside that generator's range.
+
+    #[test]
+    fn degenerate_phase_yields_empty_slab() {
+        // K=1, S=2, P=0: only phase (0,0) receives a real tap; the other
+        // three phases are zero-tap degenerate. Before the fix they were
+        // silently promoted to 1-tap filters (live slabs of zeros).
+        let mut rng = Rng::new(404);
+        let w = Filter4::from_vec(3, 2, 1, 1, rng.normal_vec(3 * 2));
+        let phases = decompose(&w, 2, default_padding(1, 2));
+        assert_eq!(phases.len(), 4);
+        let rf: Vec<ReorderedFilter> = phases.iter().map(reorder_filter).collect();
+        assert_eq!(rf[0].case, Case::TwoLines, "phase (0,0) carries the 1x1 tap");
+        assert_eq!(rf[0].live.len(), 9);
+        for (i, r) in rf.iter().enumerate().skip(1) {
+            assert_eq!(r.case, Case::Empty, "phase {i}");
+            assert!(r.live.is_empty() && r.u.is_empty(), "phase {i}");
+            assert_eq!(r.mults_per_tile(), 0);
+            // empty slabs survive precision lowering unchanged
+            let r32: ReorderedFilter<f32> = r.cast_to();
+            assert!(r32.live.is_empty() && r32.u.is_empty());
+        }
+        // the engine-side contract: an empty slab issues zero work
+        let x = Tensor3::from_vec(3, 4, 4, rng.normal_vec(3 * 16));
+        let vt = reorder_input_tile(&x, 0, 0);
+        let (m_acc, mults) = engine_multiply(&rf[1], &vt);
+        assert_eq!(mults, 0);
+        assert!(m_acc.iter().all(|t| t.iter().flatten().all(|&v| v == 0.0)));
+    }
 
     #[test]
     fn engine_multiply_equals_dense_math() {

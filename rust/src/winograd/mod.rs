@@ -12,15 +12,22 @@
 //!   (§III.B): filters are regrouped so the com-PE array multiplies only
 //!   live rows, which is what restores PE utilization after the
 //!   TDC × Winograd combination.
+//! * [`kernel`] — the arch-dispatched GEMM micro-kernels the engine's
+//!   stripe-batched datapath runs on: explicit AVX2/NEON paths with the
+//!   blocked scalar loop as fallback ([`KernelKind`]), plus the runtime
+//!   zero-skip [`RunList`] that extends the structural (vector-level)
+//!   sparsity with within-slab run sparsity.
 //!
 //! The python oracle (`python/tests/test_winograd.py`,
 //! `test_sparsity.py`) pins these kernels; the engine consumes them
 //! exclusively through precompiled plans.
 
 pub mod f43;
+pub mod kernel;
 pub mod layout;
 pub mod sparsity;
 pub mod transforms;
 
+pub use kernel::{multiply_batch, simd_available, KernelKind, RunList};
 pub use sparsity::{c_of_kc, classify, phase_cases, Case};
 pub use transforms::{M, N, R};

@@ -9,7 +9,7 @@
 
 use crate::winograd::transforms::N;
 
-/// Paper Fig. 6 case taxonomy.
+/// Paper Fig. 6 case taxonomy, extended with the degenerate empty case.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Case {
     /// 3x3 support: no structural zeros (16 live positions).
@@ -18,6 +18,10 @@ pub enum Case {
     OneLine,
     /// both dims have 2 taps: 2n-1 = 7 zero rows (9 live positions).
     TwoLines,
+    /// zero real taps in some dim: the sub-filter is identically zero and
+    /// the whole phase is skipped (0 live positions). Outside the paper's
+    /// taxonomy — reachable only for exotic (K, S, P) combos.
+    Empty,
 }
 
 impl Case {
@@ -26,6 +30,7 @@ impl Case {
             Case::Dense => 1,
             Case::OneLine => 2,
             Case::TwoLines => 3,
+            Case::Empty => 0,
         }
     }
 
@@ -35,6 +40,7 @@ impl Case {
             Case::Dense => 16,
             Case::OneLine => 12,
             Case::TwoLines => 9,
+            Case::Empty => 0,
         }
     }
 
@@ -45,8 +51,12 @@ impl Case {
 }
 
 /// Classify a sub-filter by its structural support (real taps per dim).
+/// Zero taps in either dim is the degenerate [`Case::Empty`].
 pub fn classify(ry: usize, rx: usize) -> Case {
-    assert!((1..=3).contains(&ry) && (1..=3).contains(&rx));
+    assert!(ry <= 3 && rx <= 3);
+    if ry == 0 || rx == 0 {
+        return Case::Empty;
+    }
     match (ry >= 3, rx >= 3) {
         (true, true) => Case::Dense,
         (true, false) | (false, true) => Case::OneLine,
@@ -81,8 +91,7 @@ pub fn c_of_kc(k: usize, s: usize, p: usize) -> usize {
         let ty = crate::tdc::phase_taps_1d(k, s, p, py);
         for px in 0..s {
             let tx = crate::tdc::phase_taps_1d(k, s, p, px);
-            total += classify(ty.real_taps().clamp(1, 3), tx.real_taps().clamp(1, 3))
-                .live_positions();
+            total += classify(ty.real_taps().min(3), tx.real_taps().min(3)).live_positions();
         }
     }
     total
@@ -105,7 +114,7 @@ pub fn phase_cases(k: usize, s: usize, p: usize) -> Vec<Case> {
         let ty = crate::tdc::phase_taps_1d(k, s, p, py);
         for px in 0..s {
             let tx = crate::tdc::phase_taps_1d(k, s, p, px);
-            out.push(classify(ty.real_taps().clamp(1, 3), tx.real_taps().clamp(1, 3)));
+            out.push(classify(ty.real_taps().min(3), tx.real_taps().min(3)));
         }
     }
     out
@@ -137,6 +146,23 @@ mod tests {
         assert_eq!(c_of_kc(5, 2, default_padding(5, 2)), 49);
         assert_eq!(c_of_kc(4, 2, default_padding(4, 2)), 36);
         assert_eq!(c_of_kc(3, 1, default_padding(3, 1)), 16);
+    }
+
+    #[test]
+    fn degenerate_phases_classify_as_empty() {
+        assert_eq!(classify(0, 2), Case::Empty);
+        assert_eq!(classify(2, 0), Case::Empty);
+        assert_eq!(Case::Empty.live_positions(), 0);
+        assert_eq!(Case::Empty.number(), 0);
+        assert_eq!(Case::Empty.zero_rows(), 16);
+        // K=1, S=2, P=0: only phase (0,0) carries the tap; the three
+        // degenerate phases contribute zero live positions
+        let cases = phase_cases(1, 2, default_padding(1, 2));
+        assert_eq!(
+            cases,
+            vec![Case::TwoLines, Case::Empty, Case::Empty, Case::Empty]
+        );
+        assert_eq!(c_of_kc(1, 2, default_padding(1, 2)), 9);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use wingan::tdc;
 use wingan::util::prng::Rng;
 use wingan::util::tensor::{Filter4, Tensor3};
 use wingan::winograd;
+use wingan::winograd::kernel::{multiply_batch, KernelKind, RunList};
 use wingan::winograd::layout::{
     engine_multiply, engine_multiply_batch, reorder_filter, reorder_input_tile,
 };
@@ -772,6 +773,163 @@ fn f32_zoo_bitwise_schedule_invariant_and_within_tolerance() {
             assert!(rel < 1e-3, "{} sample {i}: f32 vs f64 reference rel {rel}", g.name);
         }
     }
+}
+
+/// Gather a one-row stripe of `tiles` adjacent 4x4 windows into the
+/// position-major `[pos][c_in][tiles]` layout the engine's pre-PE builds.
+fn gather_stripe<E: wingan::engine::Elem>(x: &Tensor3<E>, tiles: usize) -> Vec<E> {
+    let c_in = x.c;
+    let mut v = vec![E::ZERO; 16 * c_in * tiles];
+    for tx in 0..tiles {
+        let vt = reorder_input_tile(x, 0, tx);
+        for pos in 0..16 {
+            for ci in 0..c_in {
+                v[(pos * c_in + ci) * tiles + tx] = vt.at(pos, ci);
+            }
+        }
+    }
+    v
+}
+
+/// PR-6 dispatch contract: for every phase of every kernel class, both
+/// dispatched micro-kernels (blocked scalar and explicit SIMD — the SIMD
+/// bodies accumulate mul-then-add in the same ascending-`c_in` order, no
+/// FMA) reproduce the blocked reference GEMM **bit for bit**, at both
+/// precision tiers, with the same issued-multiply count.
+#[test]
+fn prop_dispatched_kernels_bitwise_equal_blocked_reference() {
+    forall("scalar/simd kernels == blocked reference, bitwise", 32, 0x51D3, gen_stripe_case, |c| {
+        let c_out = c.w.c_out;
+        let x32: Tensor3<f32> = c.x.cast_to();
+        for ph in &tdc::decompose(&c.w, c.s, c.p) {
+            let rf = reorder_filter(ph);
+            let rf32: wingan::winograd::layout::ReorderedFilter<f32> = rf.cast_to();
+            let v = gather_stripe(&c.x, c.tiles);
+            let v32 = gather_stripe(&x32, c.tiles);
+            let mut want = vec![1.0f64; c_out * 16 * c.tiles];
+            let want_mults = engine_multiply_batch(&rf, &v, c.tiles, &mut want);
+            let mut want32 = vec![1.0f32; c_out * 16 * c.tiles];
+            let want_mults32 = engine_multiply_batch(&rf32, &v32, c.tiles, &mut want32);
+            for kind in [KernelKind::Scalar, KernelKind::Simd] {
+                let mut m = vec![1.0f64; c_out * 16 * c.tiles];
+                let mults = multiply_batch(kind, &rf, &v, c.tiles, &mut m);
+                if m != want {
+                    return Err(format!("f64 {kind:?} case {:?}: bits differ", rf.case));
+                }
+                if mults != want_mults {
+                    return Err(format!("f64 {kind:?}: mults {mults} != {want_mults}"));
+                }
+                let mut m32 = vec![1.0f32; c_out * 16 * c.tiles];
+                let mults32 = multiply_batch(kind, &rf32, &v32, c.tiles, &mut m32);
+                if m32 != want32 {
+                    return Err(format!("f32 {kind:?} case {:?}: bits differ", rf.case));
+                }
+                if mults32 != want_mults32 {
+                    return Err(format!("f32 {kind:?}: mults {mults32} != {want_mults32}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// PR-6 zero-skip contract: with dead `c_in` runs injected into the slab
+/// weights and the run-list rebuilt, both dispatched kernels produce the
+/// same values as the dense blocked reference over the same (zeroed)
+/// weights, while issuing strictly fewer multiplies.
+#[test]
+fn prop_zero_skip_equals_dense_with_injected_runs() {
+    forall("zero-skip == dense on injected dead runs", 32, 0x2E80, gen_stripe_case, |c| {
+        let c_out = c.w.c_out;
+        let v = gather_stripe(&c.x, c.tiles);
+        for ph in &tdc::decompose(&c.w, c.s, c.p) {
+            let mut rf = reorder_filter(ph);
+            if rf.live.is_empty() {
+                continue;
+            }
+            // kill a position-dependent c_in range across every c_out row,
+            // so each position's register blocks get a dead run
+            let (c_in, n_live) = (rf.c_in, rf.live.len());
+            for pi in 0..n_live {
+                let lo = pi % c_in;
+                let hi = (lo + 1 + pi % 3).min(c_in);
+                for co in 0..c_out {
+                    for ci in lo..hi {
+                        rf.u[(pi * c_out + co) * c_in + ci] = 0.0;
+                    }
+                }
+            }
+            rf.skip = RunList::build(n_live, c_out, c_in, &rf.u);
+            if rf.skip.is_none() {
+                return Err("injected runs must surface in the run-list".into());
+            }
+            let mut dense = vec![1.0f64; c_out * 16 * c.tiles];
+            let dense_mults = engine_multiply_batch(&rf, &v, c.tiles, &mut dense);
+            for kind in [KernelKind::Scalar, KernelKind::Simd] {
+                let mut m = vec![1.0f64; c_out * 16 * c.tiles];
+                let mults = multiply_batch(kind, &rf, &v, c.tiles, &mut m);
+                if m != dense {
+                    return Err(format!("{kind:?} case {:?}: skip changed values", rf.case));
+                }
+                if mults >= dense_mults {
+                    return Err(format!(
+                        "{kind:?}: skip issued {mults} >= dense {dense_mults}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// PR-6 degenerate-phase regression, end to end: a K=1 S=2 deconv layer
+/// compiles three of its four phases to explicitly empty slabs (this used
+/// to panic inside `phase_taps_1d` before any plan existed), executes
+/// through the engine against the composed reference, and survives an
+/// artifact round-trip bit for bit.
+#[test]
+fn degenerate_phase_plans_execute_and_roundtrip() {
+    use wingan::artifact::{decode, encode, ArtifactMeta, PlanPayload};
+    use wingan::winograd::sparsity::Case;
+
+    let g = Gan {
+        name: "degen-mini",
+        year: 2026,
+        layers: vec![
+            Layer::deconv(3, 4, 1, 2, 4).with_act(Activation::Relu),
+            Layer::deconv(4, 2, 3, 1, 8).with_act(Activation::Tanh),
+        ],
+    };
+    let planner = Planner::new(PlanOptions {
+        select: Select::Force(Method::Winograd),
+        ..Default::default()
+    });
+    let plan = Arc::new(planner.compile_seeded(&g, 5));
+    let empties = plan.layers[0]
+        .reordered
+        .iter()
+        .filter(|rf| rf.case == Case::Empty && rf.live.is_empty())
+        .count();
+    assert_eq!(empties, 3, "K=1 S=2 must compile three empty phases");
+
+    let mut rng = Rng::new(0xD367);
+    let (c, h, w) = plan.input_shape;
+    let x = Tensor3::from_vec(c, h, w, rng.normal_vec(c * h * w));
+    let want = engine::reference_forward(&plan, &x);
+    let run = Engine::with_workers(plan.clone(), 2).run(&x);
+    let scale = want.data.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    let rel = run.y.max_abs_diff(&want) / scale;
+    assert!(rel < 1e-9, "degenerate-phase engine relative diff {rel}");
+
+    let meta = ArtifactMeta { scale: "tiny".into(), method: "winograd".into(), seed: 5 };
+    let bytes = encode(&*plan, &meta);
+    let back = match decode(&bytes).unwrap().payload {
+        PlanPayload::F64(p) => Arc::new(p),
+        PlanPayload::F32(_) => panic!("published f64"),
+    };
+    let warm = Engine::with_workers(back, 2).run(&x);
+    assert_eq!(run.y.max_abs_diff(&warm.y), 0.0, "round trip changed bits");
+    assert_eq!(run.events, warm.events, "round trip changed events");
 }
 
 #[test]
