@@ -69,6 +69,7 @@ fn main() -> anyhow::Result<()> {
         ServeConfig {
             max_wait: Duration::from_millis(5),
             preload_models: Some(vec![model.clone()]),
+            ..Default::default()
         },
     )?;
     println!(

@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
         ServeConfig {
             max_wait: Duration::from_millis(10),
             preload_models: Some(vec![model.clone()]),
+            ..Default::default()
         },
     )?;
     println!("engine ready in {:?} (artifacts compiled once, cached)", t0.elapsed());

@@ -13,7 +13,7 @@ use wingan::engine::Precision;
 use wingan::benchlib::{black_box, speedup, speedup_line, Bench, BenchReport};
 use wingan::engine::pool::WorkerPool;
 use wingan::engine::BatchSchedule;
-use wingan::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use wingan::coordinator::batcher::{BatchPolicy, ContinuousBatcher, DynamicBatcher};
 use wingan::coordinator::request::GenRequest;
 use wingan::engine::plan::seeded_weights;
 use wingan::engine::{Engine, ModelPlan, PlanOptions, Planner, Select};
@@ -505,9 +505,46 @@ fn main() {
                 method: "winograd".into(),
                 input: Vec::new(),
                 enqueued: t,
+                deadline: None,
             });
             while let Some(ready) = batcher.poll(t) {
                 out += ready.requests.len();
+            }
+        }
+        while let Some(ready) = batcher.flush() {
+            out += ready.requests.len();
+        }
+        black_box(out)
+    });
+
+    // continuous scheduler state machine: same 256-request stream through
+    // admit + work-conserving poll (the PR-7 production path)
+    b.run("continuous batcher: admit+poll 256 requests (buckets 1/4/8)", || {
+        let mut batcher =
+            ContinuousBatcher::new(BatchPolicy::new(vec![1, 4, 8], Duration::ZERO), 512);
+        let t = Instant::now();
+        let mut out = 0usize;
+        for i in 0..256 {
+            batcher
+                .admit(
+                    GenRequest {
+                        id: i,
+                        model: "dcgan".into(),
+                        method: "winograd".into(),
+                        input: Vec::new(),
+                        enqueued: t,
+                        deadline: None,
+                    },
+                    t,
+                )
+                .unwrap();
+            loop {
+                let d = batcher.poll(t);
+                out += d.shed.len();
+                match d.batch {
+                    Some(ready) => out += ready.requests.len(),
+                    None => break,
+                }
             }
         }
         while let Some(ready) = batcher.flush() {

@@ -1,6 +1,7 @@
 //! Tiny CLI argument parser (no clap offline): subcommand + `--key value`
 //! flags + `--bool-flag` switches.
 
+use crate::coordinator::SchedulerKind;
 use crate::util::elem::Precision;
 use crate::winograd::kernel::KernelKind;
 use std::collections::BTreeMap;
@@ -114,6 +115,17 @@ impl Args {
         }
     }
 
+    /// The batch-scheduler flag, `--scheduler continuous|bucket`.
+    /// Defaults to [`SchedulerKind::Continuous`] when absent — the
+    /// production scheduler; `bucket` selects the PR-6 baseline the
+    /// loadgen harness A/Bs against.
+    pub fn get_scheduler(&self) -> Result<SchedulerKind, String> {
+        match self.get("scheduler") {
+            None => Ok(SchedulerKind::Continuous),
+            Some(v) => SchedulerKind::parse(v).map_err(|e| format!("--scheduler: {e}")),
+        }
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
     }
@@ -221,6 +233,21 @@ mod tests {
             Some(Precision::F64)
         );
         assert!(parse("serve --precision f16").get_precision().is_err());
+    }
+
+    #[test]
+    fn scheduler_flag_defaults_to_continuous() {
+        assert_eq!(parse("serve").get_scheduler().unwrap(), SchedulerKind::Continuous);
+        assert_eq!(
+            parse("serve --scheduler bucket").get_scheduler().unwrap(),
+            SchedulerKind::Bucket
+        );
+        assert_eq!(
+            parse("serve --scheduler Continuous").get_scheduler().unwrap(),
+            SchedulerKind::Continuous
+        );
+        let err = parse("serve --scheduler fifo").get_scheduler().unwrap_err();
+        assert!(err.contains("fifo"), "{err}");
     }
 
     #[test]

@@ -1,31 +1,44 @@
-//! Dynamic batcher: packs queued generation requests into the AOT batch
-//! buckets (vLLM-style bucketed continuous batching, adapted to fixed-shape
-//! PJRT executables).
+//! Batch schedulers for the serving coordinator.
 //!
-//! Policy: a batch is released when (a) the largest bucket fills, or
-//! (b) the oldest queued request has waited `max_wait`, or (c) `flush` is
-//! forced at stream end. The released batch uses the smallest bucket that
-//! fits the ready requests; missing slots are padded with zero samples
-//! (tracked, so batch-efficiency is observable).
+//! Two schedulers implement batch formation, and the engine loop can run
+//! either per route ([`crate::coordinator::SchedulerKind`]):
 //!
-//! The bucket width this batcher picks is what drives the execution-side
-//! scheduling decision downstream: on the native backend a wide bucket
-//! runs sample-parallel on the shared worker pool, a narrow one runs
-//! stripe-parallel inside each sample (see
-//! [`crate::engine::BatchSchedule`]).
+//! * [`ContinuousBatcher`] — **continuous batching with SLO-aware
+//!   admission** (the production scheduler). Arriving requests join the
+//!   not-yet-dispatched batch at the head of the queue up to the pool
+//!   width; whenever the engine is free the head batch ships immediately
+//!   (work-conserving — no fixed coalescing stall), so batch width grows
+//!   with load instead of with a timer. Admission is bounded
+//!   (`queue_cap`) and deadline-aware: a request whose SLO budget is
+//!   already smaller than the scheduler's service-time forecast is shed
+//!   at admission with a typed [`Rejected`], and a request whose deadline
+//!   passes while queued is shed at dispatch instead of wasting engine
+//!   time.
+//! * [`DynamicBatcher`] — the PR-6 bucket-and-deadline baseline: a batch
+//!   is released when the largest bucket fills or the oldest request has
+//!   waited `max_wait`. Kept as the A/B anchor the `wingan loadgen`
+//!   harness measures the continuous scheduler against.
 //!
-//! Pure state machine — time is passed in, so tests drive it deterministically.
+//! Both pick the executable shape with the smallest advertised bucket
+//! that fits the ready requests (missing slots are zero-padded and
+//! tracked), and both are **pure state machines** — time is passed in,
+//! so the deterministic-time unit tests below drive them with a mock
+//! clock and no real sleeps.
 
-use crate::coordinator::request::GenRequest;
+use crate::coordinator::request::{GenRequest, Rejected};
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-/// Batching policy knobs.
+/// Batching policy knobs shared by both schedulers.
 #[derive(Clone, Debug)]
 pub struct BatchPolicy {
     /// available batch buckets, ascending (from the artifact manifest)
     pub buckets: Vec<usize>,
-    /// max time the oldest request may wait before a partial batch ships
+    /// max time the oldest request may wait before a partial batch ships.
+    /// For the continuous scheduler `Duration::ZERO` means fully
+    /// work-conserving (ship whatever is queued the moment the engine is
+    /// free) and `Duration::MAX` means "never ship partials" (hold until
+    /// the width fills or the stream flushes) — preserved from PR 6.
     pub max_wait: Duration,
 }
 
@@ -45,6 +58,15 @@ impl BatchPolicy {
         assert!(n > 0);
         *self.buckets.iter().find(|&&b| b >= n).unwrap_or(self.buckets.last().unwrap())
     }
+
+    /// The hold deadline of one queued request: its enqueue instant plus
+    /// `max_wait`. `checked_add` guards the degenerate `max_wait` that
+    /// overflows `Instant` (e.g. `Duration::MAX` meaning "never ship
+    /// partials"): `None` then reads as "no hold deadline", so a partial
+    /// batch waits for a full width or a flush instead of panicking.
+    fn hold_deadline(&self, r: &GenRequest) -> Option<Instant> {
+        r.enqueued.checked_add(self.max_wait)
+    }
 }
 
 /// A batch ready for execution.
@@ -61,7 +83,9 @@ impl ReadyBatch {
     }
 }
 
-/// Per-(model, method) FIFO queue with deadline-based release.
+/// Per-(model, method) FIFO queue with deadline-based release — the PR-6
+/// bucket-and-deadline scheduler, kept as the measured baseline
+/// ([`crate::coordinator::SchedulerKind::Bucket`]).
 #[derive(Debug)]
 pub struct DynamicBatcher {
     policy: BatchPolicy,
@@ -81,20 +105,9 @@ impl DynamicBatcher {
         self.queue.len()
     }
 
-    /// The release deadline of one request: its enqueue instant plus the
-    /// policy's `max_wait`. Both `next_deadline` and `poll` route through
-    /// this helper so the two can never disagree on the expression — they
-    /// used to duplicate it inline. `checked_add` guards the degenerate
-    /// `max_wait` that overflows `Instant` (e.g. `Duration::MAX` meaning
-    /// "never ship partials"): `None` then reads as "no deadline", so the
-    /// batch waits for a full bucket or a flush instead of panicking.
-    fn deadline(&self, r: &GenRequest) -> Option<Instant> {
-        r.enqueued.checked_add(self.policy.max_wait)
-    }
-
     /// Next instant at which `poll` would release a partial batch, if any.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.queue.front().and_then(|r| self.deadline(r))
+        self.queue.front().and_then(|r| self.policy.hold_deadline(r))
     }
 
     /// Release a batch if policy says so at time `now`.
@@ -103,8 +116,11 @@ impl DynamicBatcher {
             return None;
         }
         let full = self.queue.len() >= self.policy.max_bucket();
-        let expired =
-            self.queue.front().and_then(|r| self.deadline(r)).map_or(false, |d| now >= d);
+        let expired = self
+            .queue
+            .front()
+            .and_then(|r| self.policy.hold_deadline(r))
+            .map_or(false, |d| now >= d);
         if full || expired {
             Some(self.take_batch())
         } else {
@@ -129,6 +145,180 @@ impl DynamicBatcher {
     }
 }
 
+/// What one continuous-batcher poll produced: at most one dispatchable
+/// batch, plus the requests whose deadline expired while queued (shed
+/// with a typed verdict instead of executed).
+#[derive(Debug, Default)]
+pub struct Dispatch {
+    pub batch: Option<ReadyBatch>,
+    pub shed: Vec<(GenRequest, Rejected)>,
+}
+
+/// EWMA smoothing factor for the batch service-time estimate. High enough
+/// to track warmup → steady-state quickly, low enough that one outlier
+/// batch does not swing admission verdicts.
+const SERVICE_EWMA_ALPHA: f64 = 0.3;
+
+/// Continuous batcher: the queue head *is* the forming batch. Arrivals
+/// join it up to the pool width ([`BatchPolicy::max_bucket`]); the engine
+/// takes the head the moment it is free (subject to the `max_wait` hold
+/// window, `ZERO` by default = fully work-conserving). Under load,
+/// requests arriving while a batch executes accumulate and ship as one
+/// wide batch next — batch width grows with pressure, not with a timer.
+///
+/// Admission is **SLO-aware**: [`ContinuousBatcher::admit`] rejects with
+/// a typed [`Rejected`] when the queue is at `queue_cap` (backpressure)
+/// or when the request's deadline budget is smaller than the estimated
+/// queue wait (an EWMA of observed batch service times, fed by
+/// [`ContinuousBatcher::observe`]). Requests whose deadline passes while
+/// queued are shed at dispatch ([`Dispatch::shed`]) instead of occupying
+/// engine time they can no longer use.
+///
+/// Like [`DynamicBatcher`], this is a pure state machine — `now` is
+/// always passed in, so tests drive it deterministically with a mock
+/// clock.
+#[derive(Debug)]
+pub struct ContinuousBatcher {
+    policy: BatchPolicy,
+    /// bound on queued (admitted, undispatched) requests
+    queue_cap: usize,
+    queue: VecDeque<GenRequest>,
+    /// EWMA of observed batch service time, seconds (None until the
+    /// first observation — admission then only sheds already-expired
+    /// deadlines, never forecast-based)
+    service_ewma: Option<f64>,
+}
+
+impl ContinuousBatcher {
+    pub fn new(policy: BatchPolicy, queue_cap: usize) -> ContinuousBatcher {
+        assert!(queue_cap > 0, "need a positive queue bound");
+        ContinuousBatcher { policy, queue_cap, queue: VecDeque::new(), service_ewma: None }
+    }
+
+    /// The join-in-flight limit: requests join the forming batch up to
+    /// this width (the widest executable bucket, i.e. the pool width the
+    /// engine fans a wide batch across).
+    pub fn width(&self) -> usize {
+        self.policy.max_bucket()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The current batch service-time forecast in seconds (0 until the
+    /// first [`ContinuousBatcher::observe`]).
+    pub fn service_estimate(&self) -> f64 {
+        self.service_ewma.unwrap_or(0.0)
+    }
+
+    /// Feed one observed batch service time into the admission forecast.
+    pub fn observe(&mut self, service: Duration) {
+        let s = service.as_secs_f64();
+        self.service_ewma = Some(match self.service_ewma {
+            None => s,
+            Some(e) => SERVICE_EWMA_ALPHA * s + (1.0 - SERVICE_EWMA_ALPHA) * e,
+        });
+    }
+
+    /// Estimated wait until a request admitted *now* would complete:
+    /// whole batches ahead of it (its own included) times the service
+    /// forecast.
+    fn estimated_wait(&self) -> Duration {
+        let batches_ahead = self.queue.len() / self.width() + 1;
+        Duration::from_secs_f64(self.service_estimate() * batches_ahead as f64)
+    }
+
+    /// Admit one request at time `now`, or return it with a typed
+    /// rejection: [`Rejected::QueueFull`] when the queue is at capacity,
+    /// [`Rejected::DeadlineInfeasible`] when the request carries a
+    /// deadline whose remaining budget is below the estimated wait (or
+    /// already zero). Best-effort requests (`deadline: None`) are only
+    /// ever rejected for capacity.
+    pub fn admit(&mut self, req: GenRequest, now: Instant) -> Result<(), (GenRequest, Rejected)> {
+        if self.queue.len() >= self.queue_cap {
+            let rej = Rejected::QueueFull { depth: self.queue.len(), cap: self.queue_cap };
+            return Err((req, rej));
+        }
+        if let Some(d) = req.deadline {
+            let remaining = d.saturating_duration_since(now);
+            let estimated_wait = self.estimated_wait();
+            if remaining.is_zero() || remaining < estimated_wait {
+                return Err((req, Rejected::DeadlineInfeasible { remaining, estimated_wait }));
+            }
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Next instant the engine should wake to act on this queue even if
+    /// no new request arrives: the head's hold deadline (when `max_wait`
+    /// is finite) or the earliest per-request deadline (to shed expired
+    /// work promptly). `None` = nothing to do until traffic or flush.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        let hold = self.queue.front().and_then(|r| self.policy.hold_deadline(r));
+        let slo = self.queue.iter().filter_map(|r| r.deadline).min();
+        match (hold, slo) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Poll at time `now`: shed queued requests whose deadline has
+    /// passed, then dispatch the head batch if the width is full or the
+    /// oldest request's hold window (`max_wait`) has elapsed. With
+    /// `max_wait == ZERO` a non-empty queue always dispatches — the
+    /// work-conserving continuous-batching default.
+    pub fn poll(&mut self, now: Instant) -> Dispatch {
+        let mut out = Dispatch::default();
+        // shed expired work first so it neither ships nor holds the batch
+        let estimated_wait = self.estimated_wait();
+        let mut live = VecDeque::with_capacity(self.queue.len());
+        for r in self.queue.drain(..) {
+            match r.deadline {
+                Some(d) if d <= now => out.shed.push((
+                    r,
+                    Rejected::DeadlineInfeasible { remaining: Duration::ZERO, estimated_wait },
+                )),
+                _ => live.push_back(r),
+            }
+        }
+        self.queue = live;
+
+        if self.queue.is_empty() {
+            return out;
+        }
+        let full = self.queue.len() >= self.width();
+        let held = self
+            .queue
+            .front()
+            .and_then(|r| self.policy.hold_deadline(r))
+            .map_or(false, |d| now >= d);
+        if full || held {
+            out.batch = Some(self.take_batch());
+        }
+        out
+    }
+
+    /// Force-release whatever is queued (stream end / shutdown drain):
+    /// every admitted request ships, even past its deadline — shutdown is
+    /// a drain, not a shed.
+    pub fn flush(&mut self) -> Option<ReadyBatch> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.take_batch())
+        }
+    }
+
+    fn take_batch(&mut self) -> ReadyBatch {
+        let n = self.queue.len().min(self.width());
+        let bucket = self.policy.bucket_for(n);
+        let requests: Vec<GenRequest> = self.queue.drain(..n).collect();
+        ReadyBatch { requests, bucket }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,11 +330,20 @@ mod tests {
             method: "winograd".into(),
             input: vec![0.0; 4],
             enqueued: t,
+            deadline: None,
         }
+    }
+
+    fn req_slo(id: u64, t: Instant, budget: Duration) -> GenRequest {
+        GenRequest { deadline: Some(t + budget), ..req(id, t) }
     }
 
     fn policy() -> BatchPolicy {
         BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(5))
+    }
+
+    fn greedy() -> ContinuousBatcher {
+        ContinuousBatcher::new(BatchPolicy::new(vec![1, 4, 8], Duration::ZERO), 32)
     }
 
     #[test]
@@ -239,5 +438,172 @@ mod tests {
         assert_eq!(batch.requests.len(), 8);
         b.push(req(8, t));
         assert_eq!(b.flush().expect("flush release still works").requests.len(), 1);
+    }
+
+    // ---- continuous batcher (deterministic mock-clock tests) ----
+
+    #[test]
+    fn continuous_dispatches_immediately_when_work_conserving() {
+        let mut b = greedy();
+        let t = Instant::now();
+        b.admit(req(0, t), t).unwrap();
+        b.admit(req(1, t), t).unwrap();
+        // max_wait == ZERO: the moment the engine polls, the partial ships
+        let d = b.poll(t);
+        assert!(d.shed.is_empty());
+        let batch = d.batch.expect("work-conserving dispatch");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.bucket, 4);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn continuous_joins_in_flight_up_to_width() {
+        let mut b = greedy();
+        let t = Instant::now();
+        // a batch is executing; 11 requests arrive meanwhile and join the
+        // forming batch — the next dispatch takes exactly the pool width,
+        // the overflow stays queued for the batch after
+        for i in 0..11 {
+            b.admit(req(i, t), t).unwrap();
+        }
+        let first = b.poll(t).batch.expect("head batch");
+        assert_eq!(first.requests.len(), b.width());
+        assert_eq!(first.requests.iter().map(|r| r.id).collect::<Vec<_>>(), (0..8).collect::<Vec<_>>());
+        let second = b.poll(t).batch.expect("overflow batch");
+        assert_eq!(second.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![8, 9, 10]);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn continuous_hold_window_coalesces_then_ships() {
+        // finite max_wait: a lone request holds for the window (letting
+        // batch-mates join), then ships at the deadline
+        let mut b =
+            ContinuousBatcher::new(BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(5)), 32);
+        let t = Instant::now();
+        b.admit(req(0, t), t).unwrap();
+        assert!(b.poll(t).batch.is_none(), "held for batch-mates");
+        assert_eq!(b.next_deadline(), Some(t + Duration::from_millis(5)));
+        b.admit(req(1, t + Duration::from_millis(2)), t + Duration::from_millis(2)).unwrap();
+        let batch = b.poll(t + Duration::from_millis(5)).batch.expect("hold window elapsed");
+        assert_eq!(batch.requests.len(), 2);
+    }
+
+    #[test]
+    fn continuous_preserves_duration_max_hold_from_pr6() {
+        // `max_wait: Duration::MAX` ("never ship partials") must not
+        // overflow-panic, and must hold partials until the width fills or
+        // the stream flushes — the PR-6 DynamicBatcher contract.
+        let mut b = ContinuousBatcher::new(BatchPolicy::new(vec![1, 4, 8], Duration::MAX), 32);
+        let t = Instant::now();
+        b.admit(req(0, t), t).unwrap();
+        assert_eq!(b.next_deadline(), None);
+        assert!(b.poll(t + Duration::from_secs(3600)).batch.is_none(), "no hold release");
+        for i in 1..8 {
+            b.admit(req(i, t), t).unwrap();
+        }
+        assert_eq!(b.poll(t).batch.expect("full width ships").requests.len(), 8);
+        b.admit(req(8, t), t).unwrap();
+        assert_eq!(b.flush().expect("flush ships the tail").requests.len(), 1);
+    }
+
+    #[test]
+    fn admission_rejects_at_queue_cap() {
+        let mut b = ContinuousBatcher::new(BatchPolicy::new(vec![1, 2], Duration::ZERO), 3);
+        let t = Instant::now();
+        for i in 0..3 {
+            b.admit(req(i, t), t).unwrap();
+        }
+        let (back, rej) = b.admit(req(3, t), t).unwrap_err();
+        assert_eq!(back.id, 3, "the rejected request comes back to the caller");
+        assert_eq!(rej, Rejected::QueueFull { depth: 3, cap: 3 });
+        assert_eq!(b.queued(), 3, "rejection must not disturb the queue");
+    }
+
+    #[test]
+    fn admission_rejects_infeasible_deadlines_from_the_forecast() {
+        let mut b = greedy();
+        let t = Instant::now();
+        // teach the forecast: batches take 10ms
+        b.observe(Duration::from_millis(10));
+        assert!((b.service_estimate() - 0.010).abs() < 1e-12);
+        // 50ms of budget against a ~10ms wait: feasible
+        b.admit(req_slo(0, t, Duration::from_millis(50)), t).unwrap();
+        // 5ms of budget against a ~10ms wait: shed at admission
+        let (_, rej) = b.admit(req_slo(1, t, Duration::from_millis(5)), t).unwrap_err();
+        match rej {
+            Rejected::DeadlineInfeasible { remaining, estimated_wait } => {
+                assert_eq!(remaining, Duration::from_millis(5));
+                assert_eq!(estimated_wait, Duration::from_millis(10));
+            }
+            other => panic!("expected DeadlineInfeasible, got {other:?}"),
+        }
+        // an already-expired deadline is always infeasible, forecast or not
+        let late = t + Duration::from_secs(1);
+        let (_, rej) = b.admit(req_slo(2, t, Duration::from_millis(100)), late).unwrap_err();
+        match rej {
+            Rejected::DeadlineInfeasible { remaining, .. } => {
+                assert_eq!(remaining, Duration::ZERO)
+            }
+            other => panic!("expected DeadlineInfeasible, got {other:?}"),
+        }
+        // without a deadline the forecast never sheds
+        b.admit(req(3, t), late).unwrap();
+    }
+
+    #[test]
+    fn expired_requests_shed_at_dispatch_not_served() {
+        let mut b = greedy();
+        let t = Instant::now();
+        b.admit(req_slo(0, t, Duration::from_millis(2)), t).unwrap();
+        b.admit(req(1, t), t).unwrap();
+        b.admit(req_slo(2, t, Duration::from_millis(100)), t).unwrap();
+        // 5ms later request 0's deadline has passed: it must shed, the
+        // live requests ship
+        let d = b.poll(t + Duration::from_millis(5));
+        assert_eq!(d.shed.len(), 1);
+        assert_eq!(d.shed[0].0.id, 0);
+        assert!(matches!(d.shed[0].1, Rejected::DeadlineInfeasible { .. }));
+        let batch = d.batch.expect("live requests dispatch");
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn next_deadline_wakes_for_slo_sheds() {
+        // even with max_wait == MAX (no hold deadline), a queued deadline
+        // must produce a wake-up so expired work is shed promptly
+        let mut b = ContinuousBatcher::new(BatchPolicy::new(vec![1, 4, 8], Duration::MAX), 32);
+        let t = Instant::now();
+        b.admit(req_slo(0, t, Duration::from_millis(7)), t).unwrap();
+        assert_eq!(b.next_deadline(), Some(t + Duration::from_millis(7)));
+    }
+
+    #[test]
+    fn service_forecast_is_an_ewma() {
+        let mut b = greedy();
+        b.observe(Duration::from_millis(10));
+        b.observe(Duration::from_millis(20));
+        // 0.3 * 20ms + 0.7 * 10ms = 13ms
+        assert!((b.service_estimate() - 0.013).abs() < 1e-12);
+    }
+
+    #[test]
+    fn continuous_fifo_conservation() {
+        let mut b = greedy();
+        let t = Instant::now();
+        for i in 0..13 {
+            b.admit(req(i, t), t).unwrap();
+        }
+        let mut ids = Vec::new();
+        loop {
+            let d = b.poll(t);
+            assert!(d.shed.is_empty());
+            match d.batch {
+                Some(batch) => ids.extend(batch.requests.iter().map(|r| r.id)),
+                None => break,
+            }
+        }
+        assert_eq!(ids, (0..13).collect::<Vec<_>>());
     }
 }

@@ -1,8 +1,12 @@
 //! Serving metrics: counters + latency histogram with percentile queries.
 //! No external deps; a fixed log-bucketed histogram keeps memory bounded
-//! regardless of request count, plus exact min/max/mean.
+//! regardless of request count, plus exact min/max/mean. Since PR 7 the
+//! snapshot also carries **per-route** counters ([`RouteMetrics`]): queue
+//! depth (gauge + high-water mark), admission/shed totals, and a
+//! per-route e2e latency histogram with p50/p99/p999.
 
 use crate::artifact::PlanCacheStats;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 /// Log-bucketed latency histogram: buckets of 10% growth from 1 µs to ~100 s.
@@ -78,15 +82,69 @@ impl Histogram {
         self.max
     }
 
+    /// The serving-SLO tail triple — p50/p99/p999 in seconds — read as one
+    /// tuple so report lines and the loadgen harness can never disagree on
+    /// which percentiles "the tail" means.
+    pub fn tail(&self) -> (f64, f64, f64) {
+        (self.percentile(50.0), self.percentile(99.0), self.percentile(99.9))
+    }
+
     pub fn summary(&self, label: &str) -> String {
+        let (p50, p99, p999) = self.tail();
         format!(
-            "{label}: n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            "{label}: n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms p999={:.3}ms max={:.3}ms",
             self.count,
             self.mean() * 1e3,
-            self.percentile(50.0) * 1e3,
+            p50 * 1e3,
             self.percentile(95.0) * 1e3,
-            self.percentile(99.0) * 1e3,
+            p99 * 1e3,
+            p999 * 1e3,
             if self.count > 0 { self.max * 1e3 } else { 0.0 },
+        )
+    }
+}
+
+/// Per-route serving counters: admission and shed totals, queue depth
+/// (instantaneous + high-water mark, folded in from the admission gate at
+/// snapshot time), dispatch counts, and the route's own e2e latency
+/// histogram.
+#[derive(Clone, Debug, Default)]
+pub struct RouteMetrics {
+    /// requests admitted past the gate (submitted and queued)
+    pub admitted: u64,
+    /// requests answered with an output
+    pub completed: u64,
+    /// typed sheds: admission gate at capacity
+    pub shed_queue_full: u64,
+    /// typed sheds: deadline infeasible at admission or expired in queue
+    pub shed_deadline: u64,
+    /// batches dispatched for this route
+    pub batches: u64,
+    /// queued-but-undispatched requests right now (gauge)
+    pub depth: usize,
+    /// high-water mark of `depth` over the coordinator's lifetime
+    pub peak_depth: usize,
+    /// end-to-end latency (submit → response) for this route's completions
+    pub e2e: Histogram,
+}
+
+impl RouteMetrics {
+    /// One compact report line for this route.
+    pub fn summary(&self, route: &str) -> String {
+        let (p50, p99, p999) = self.e2e.tail();
+        format!(
+            "route {route}: depth={} peak={} admitted={} completed={} \
+             shed_full={} shed_slo={} batches={} p50={:.3}ms p99={:.3}ms p999={:.3}ms",
+            self.depth,
+            self.peak_depth,
+            self.admitted,
+            self.completed,
+            self.shed_queue_full,
+            self.shed_deadline,
+            self.batches,
+            p50 * 1e3,
+            p99 * 1e3,
+            p999 * 1e3,
         )
     }
 }
@@ -99,6 +157,11 @@ pub struct Metrics {
     pub batches: u64,
     pub batched_samples: u64,
     pub padded_samples: u64,
+    /// total typed sheds at the admission gate (queue at capacity)
+    pub shed_queue_full: u64,
+    /// total typed sheds for deadline infeasibility (at admission or
+    /// expired while queued)
+    pub shed_deadline: u64,
     /// plan-cache counters from startup (warm-vs-cold: artifact hits,
     /// fallback compiles, load failures, republishes); all zeros when the
     /// server was built without a plan store
@@ -106,11 +169,24 @@ pub struct Metrics {
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub e2e_latency: Histogram,
+    /// per-route counters keyed "model/method"
+    pub routes: BTreeMap<String, RouteMetrics>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics { queue_latency: Histogram::new(), exec_latency: Histogram::new(), e2e_latency: Histogram::new(), ..Default::default() }
+    }
+
+    /// The per-route counters for `route` ("model/method"), created on
+    /// first touch.
+    pub fn route_mut(&mut self, route: &str) -> &mut RouteMetrics {
+        self.routes.entry(route.to_string()).or_default()
+    }
+
+    /// Total typed sheds across both causes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_queue_full + self.shed_deadline
     }
 
     /// Mean occupancy of executed batch slots (1.0 = no padding waste).
@@ -141,12 +217,19 @@ impl Metrics {
         } else {
             String::new()
         };
+        let routes: String = self
+            .routes
+            .iter()
+            .map(|(name, r)| format!("\n{}", r.summary(name)))
+            .collect();
         format!(
-            "requests={} responses={} batches={} batch_eff={:.2}{plans}\n{}\n{}\n{}",
+            "requests={} responses={} batches={} batch_eff={:.2} shed_full={} shed_slo={}{plans}\n{}\n{}\n{}{routes}",
             self.requests,
             self.responses,
             self.batches,
             self.batch_efficiency(),
+            self.shed_queue_full,
+            self.shed_deadline,
             self.queue_latency.summary("queue"),
             self.exec_latency.summary("exec "),
             self.e2e_latency.summary("e2e  "),
@@ -165,19 +248,46 @@ mod tests {
             h.record(Duration::from_millis(ms));
         }
         assert_eq!(h.count(), 100);
-        let p50 = h.percentile(50.0);
+        let (p50, p99, p999) = h.tail();
         let p95 = h.percentile(95.0);
-        let p99 = h.percentile(99.0);
-        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= p999);
         // log buckets have 10% resolution
         assert!((p50 - 0.050).abs() / 0.050 < 0.15, "p50={p50}");
         assert!((p95 - 0.095).abs() / 0.095 < 0.15, "p95={p95}");
     }
 
     #[test]
+    fn percentiles_exact_on_known_inputs() {
+        // pin the percentile arithmetic exactly: record counts directly at
+        // known magnitudes and assert the returned bucket bounds. 1ms and
+        // 100ms land in distinct log buckets whose bounds bracket the
+        // recorded value within the 10% growth factor.
+        let mut h = Histogram::new();
+        for _ in 0..99 {
+            h.record(Duration::from_millis(1));
+        }
+        h.record(Duration::from_millis(100));
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        let p999 = h.percentile(99.9);
+        // 99 of 100 samples are 1ms: p50 and p99 must report the same
+        // bucket bound, and it must bracket 1ms to one bucket's growth
+        assert_eq!(p50, p99, "p50 and p99 sit in the same bucket");
+        assert!(p50 >= 0.001 && p50 < 0.001 * 1.1 * 1.1, "p50={p50}");
+        // the single 100ms outlier is exactly the p999 sample
+        assert!(p999 >= 0.100 && p999 < 0.100 * 1.1 * 1.1, "p999={p999}");
+        // deterministic: querying again returns bit-identical values
+        assert_eq!(h.percentile(99.9), p999);
+        // and the extremes are exact, not bucketed
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - (99.0 * 0.001 + 0.100) / 100.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn empty_histogram_safe() {
         let h = Histogram::new();
         assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.percentile(99.9), 0.0);
         assert_eq!(h.mean(), 0.0);
     }
 
@@ -203,6 +313,28 @@ mod tests {
         assert!(r.contains("fallback_compiles=1"), "{r}");
         assert!(r.contains("load_failures=0"), "{r}");
         assert!(r.contains("published=1"), "{r}");
+    }
+
+    #[test]
+    fn route_counters_surface_in_the_report() {
+        let mut m = Metrics::new();
+        {
+            let r = m.route_mut("dcgan/winograd");
+            r.admitted = 10;
+            r.completed = 8;
+            r.shed_queue_full = 1;
+            r.shed_deadline = 1;
+            r.peak_depth = 5;
+            r.e2e.record(Duration::from_millis(3));
+        }
+        m.shed_queue_full = 1;
+        m.shed_deadline = 1;
+        assert_eq!(m.shed_total(), 2);
+        let rep = m.report();
+        assert!(rep.contains("route dcgan/winograd:"), "{rep}");
+        assert!(rep.contains("peak=5"), "{rep}");
+        assert!(rep.contains("shed_full=1 shed_slo=1"), "{rep}");
+        assert!(rep.contains("p999="), "{rep}");
     }
 
     #[test]

@@ -5,17 +5,23 @@
 //!
 //! 1. [`Router`] ([`router`]) — validates `(model, method)` against the
 //!    routes the artifact manifest advertises and checks sample shapes;
-//! 2. [`DynamicBatcher`] ([`batcher`]) — per-route FIFO that packs
-//!    requests into the advertised batch buckets, shipping a batch when
-//!    the largest bucket fills or the oldest request has waited
-//!    `max_wait`;
-//! 3. [`Coordinator`] ([`server`]) — the single-owner engine thread that
-//!    drains batchers into a pluggable [`ExecBackend`]: the native
+//! 2. a bounded **admission gate** ([`server`]) — per-route slot counter
+//!    ([`ServeConfig::queue_cap`]); at capacity the submit sheds with a
+//!    typed [`Rejected::QueueFull`] instead of queuing unboundedly;
+//! 3. a batch scheduler ([`batcher`]), per route, selected by
+//!    [`SchedulerKind`]: the production [`ContinuousBatcher`]
+//!    (work-conserving continuous batching — arrivals join the forming
+//!    batch up to the pool width — with SLO-aware admission and typed
+//!    deadline sheds) or the PR-6 [`DynamicBatcher`] baseline (bucket
+//!    fill or `max_wait` release), kept for A/B measurement;
+//! 4. [`Coordinator`] ([`server`]) — the single-owner engine thread that
+//!    drains schedulers into a pluggable [`ExecBackend`]: the native
 //!    precompiled-plan engine ([`crate::engine::NativeRuntime`], whose
 //!    routes all share one persistent worker pool) or PJRT
 //!    ([`crate::runtime::Runtime`], gated off in offline builds);
-//! 4. [`Metrics`] ([`metrics`]) — queue/exec/e2e latency histograms,
-//!    batch-efficiency counters, and a one-line serving report.
+//! 5. [`Metrics`] ([`metrics`]) — queue/exec/e2e latency histograms with
+//!    p50/p99/p999, shed counters, per-route depth/latency counters
+//!    ([`RouteMetrics`]), and a one-line serving report.
 //!
 //! Requests and replies cross threads over channels ([`request`] defines
 //! the wire types); python is never on this path.
@@ -26,8 +32,8 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{BatchPolicy, DynamicBatcher};
-pub use metrics::Metrics;
-pub use request::{GenRequest, GenResponse, ServeError};
+pub use batcher::{BatchPolicy, ContinuousBatcher, Dispatch, DynamicBatcher, ReadyBatch};
+pub use metrics::{Histogram, Metrics, RouteMetrics};
+pub use request::{GenRequest, GenResponse, Rejected, ServeError};
 pub use router::Router;
-pub use server::{Coordinator, ExecBackend, ServeConfig};
+pub use server::{Coordinator, ExecBackend, SchedulerKind, ServeConfig};

@@ -1,6 +1,6 @@
 //! Request/response types for the generation-serving coordinator.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Unique request id.
 pub type RequestId = u64;
@@ -16,6 +16,12 @@ pub struct GenRequest {
     /// flat f32 input of the model's per-sample input shape
     pub input: Vec<f32>,
     pub enqueued: Instant,
+    /// per-request completion deadline (SLO). `None` = best-effort: the
+    /// request is never deadline-shed. A request whose deadline is judged
+    /// unmeetable at admission — or has passed by dispatch time — gets a
+    /// typed [`Rejected::DeadlineInfeasible`] response instead of engine
+    /// time.
+    pub deadline: Option<Instant>,
 }
 
 /// The serving result for one request.
@@ -32,6 +38,41 @@ pub struct GenResponse {
     pub exec_time: std::time::Duration,
 }
 
+/// Why a request was shed instead of served. Shedding is the coordinator's
+/// overload contract: a request that cannot be served within its
+/// constraints gets a typed rejection *immediately* (at submit or at
+/// dispatch) rather than queuing unboundedly — callers can retry
+/// elsewhere, degrade, or surface the error, and the queue stays bounded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// The route's admission queue is at capacity (backpressure). `depth`
+    /// is the occupancy observed at rejection time, `cap` the configured
+    /// bound ([`crate::coordinator::ServeConfig::queue_cap`]).
+    QueueFull { depth: usize, cap: usize },
+    /// The request's deadline cannot be met: either the estimated queue
+    /// wait already exceeds the remaining budget at admission, or the
+    /// deadline passed while the request was queued. `remaining` is the
+    /// budget left when the verdict was reached (zero once expired),
+    /// `estimated_wait` the scheduler's service-time forecast at that
+    /// moment.
+    DeadlineInfeasible { remaining: Duration, estimated_wait: Duration },
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::QueueFull { depth, cap } => {
+                write!(f, "queue full ({depth}/{cap})")
+            }
+            Rejected::DeadlineInfeasible { remaining, estimated_wait } => write!(
+                f,
+                "deadline infeasible ({remaining:?} budget remaining, \
+                 estimated wait {estimated_wait:?})"
+            ),
+        }
+    }
+}
+
 /// Failure modes a request can observe.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServeError {
@@ -39,6 +80,9 @@ pub enum ServeError {
     BadInputLength { expected: usize, got: usize },
     EngineShutdown,
     Execution(String),
+    /// Typed shed-on-overload response (see [`Rejected`]); the request was
+    /// never executed.
+    Rejected(Rejected),
 }
 
 impl std::fmt::Display for ServeError {
@@ -50,8 +94,18 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::EngineShutdown => write!(f, "engine shut down"),
             ServeError::Execution(e) => write!(f, "execution failed: {e}"),
+            ServeError::Rejected(r) => write!(f, "request shed: {r}"),
         }
     }
 }
 
 impl std::error::Error for ServeError {}
+
+impl ServeError {
+    /// True for the typed shed responses ([`ServeError::Rejected`]) — the
+    /// load-shedding outcomes a client should count separately from hard
+    /// failures when computing goodput.
+    pub fn is_shed(&self) -> bool {
+        matches!(self, ServeError::Rejected(_))
+    }
+}

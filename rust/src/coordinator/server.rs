@@ -1,10 +1,10 @@
 //! The serving coordinator: an engine thread that owns an execution
-//! backend and drains per-route dynamic batchers; callers talk to it
+//! backend and drains per-route batch schedulers; callers talk to it
 //! through channels (`Coordinator::submit`). Python is never on this path.
 //!
 //! Shape:
-//!   caller -> mpsc -> engine thread [ batcher -> pack -> execute backend
-//!                                     -> unpack -> respond per-request ]
+//!   caller -> gate -> mpsc -> engine thread [ scheduler -> pack ->
+//!                       execute backend -> unpack -> respond per-request ]
 //!
 //! Two backends implement the same [`ExecBackend`] contract:
 //! * **PJRT** ([`Coordinator::start`]) — AOT artifacts compiled and
@@ -12,9 +12,21 @@
 //! * **native** ([`Coordinator::start_native`]) — whole generators run
 //!   through precompiled [`crate::engine`] plans, no artifacts needed.
 //!
+//! **Admission is bounded** (PR 7): every route has a fixed-capacity
+//! admission gate ([`ServeConfig::queue_cap`]) spanning the channel *and*
+//! the scheduler queue. `submit` sheds with a typed
+//! [`ServeError::Rejected`] ([`Rejected::QueueFull`]) instead of queuing
+//! unboundedly — the old path's OOM-shaped growth under overload is
+//! structurally gone. With an SLO configured ([`ServeConfig::slo`], or a
+//! per-request budget via [`Coordinator::submit_with_deadline`]) the
+//! continuous scheduler also sheds deadline-infeasible requests, typed
+//! [`Rejected::DeadlineInfeasible`].
+//!
 //! The engine blocks on the request channel with a timeout equal to the
-//! nearest batcher deadline, so partial batches ship on time without a
-//! busy loop.
+//! nearest scheduler deadline, so held batches and deadline sheds happen
+//! on time without a busy loop; after every wake it drains the whole
+//! channel before polling, so requests that arrived while a batch was
+//! executing join the next batch — continuous batching's join-in-flight.
 //!
 //! On the native backend, compute threading is *not* per request: the
 //! [`crate::engine::NativeRuntime`] built at startup owns one persistent
@@ -25,16 +37,18 @@
 //! out across samples, narrow ones across stripes inside each sample — so
 //! the pool stays busy without the spawn-per-phase threading of PR 1.
 
-use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher, ReadyBatch};
+use crate::coordinator::batcher::{
+    BatchPolicy, ContinuousBatcher, Dispatch, DynamicBatcher, ReadyBatch,
+};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{GenRequest, GenResponse, RequestId, ServeError};
+use crate::coordinator::request::{GenRequest, GenResponse, Rejected, RequestId, ServeError};
 use crate::coordinator::router::Router;
 use crate::engine::serve::{native_manifest, NativeConfig, NativeRuntime};
 use crate::runtime::{Manifest, Runtime};
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -63,27 +77,123 @@ enum Msg {
     Shutdown,
 }
 
+/// Which batch scheduler the engine runs per route.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Continuous batching with SLO-aware admission
+    /// ([`ContinuousBatcher`]) — the default production scheduler.
+    #[default]
+    Continuous,
+    /// The PR-6 bucket-and-deadline baseline ([`DynamicBatcher`]), kept
+    /// so `wingan loadgen` can A/B the schedulers under identical
+    /// traffic.
+    Bucket,
+}
+
+impl SchedulerKind {
+    /// Parse a `--scheduler` CLI value.
+    pub fn parse(s: &str) -> std::result::Result<SchedulerKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "continuous" => Ok(SchedulerKind::Continuous),
+            "bucket" => Ok(SchedulerKind::Bucket),
+            other => Err(format!("unknown scheduler '{other}' (continuous|bucket)")),
+        }
+    }
+}
+
+/// Per-route admission slot counter: the depth spans the request channel
+/// plus the scheduler queue, so the bound holds no matter where a request
+/// currently sits.
+struct RouteGate {
+    depth: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+/// The bounded admission gate shared by the caller-side `submit` and the
+/// engine thread: one slot counter per route, capacity
+/// [`ServeConfig::queue_cap`].
+struct Gate {
+    cap: usize,
+    routes: HashMap<(String, String), RouteGate>,
+}
+
+impl Gate {
+    fn new(router: &Router, cap: usize) -> Gate {
+        let routes = router
+            .models()
+            .into_iter()
+            .map(|key| (key, RouteGate { depth: AtomicUsize::new(0), peak: AtomicUsize::new(0) }))
+            .collect();
+        Gate { cap, routes }
+    }
+
+    /// Claim one slot for `key`, or report the queue full.
+    fn try_acquire(&self, key: &(String, String)) -> std::result::Result<(), Rejected> {
+        let g = self.routes.get(key).expect("gate covers every validated route");
+        loop {
+            let d = g.depth.load(Ordering::Acquire);
+            if d >= self.cap {
+                return Err(Rejected::QueueFull { depth: d, cap: self.cap });
+            }
+            if g.depth
+                .compare_exchange(d, d + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                g.peak.fetch_max(d + 1, Ordering::AcqRel);
+                return Ok(());
+            }
+        }
+    }
+
+    /// Release `n` slots (requests dispatched, shed, or failed).
+    fn release(&self, key: &(String, String), n: usize) {
+        if let Some(g) = self.routes.get(key) {
+            g.depth.fetch_sub(n, Ordering::AcqRel);
+        }
+    }
+}
+
 /// Handle to a running coordinator.
 pub struct Coordinator {
     tx: Sender<Msg>,
     next_id: AtomicU64,
     metrics: Arc<Mutex<Metrics>>,
     router: Router,
+    gate: Arc<Gate>,
+    slo: Option<Duration>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    /// max time a request may wait for batch-mates
+    /// max time a request may wait for batch-mates before a partial batch
+    /// ships. `ZERO` (the default) makes the continuous scheduler fully
+    /// work-conserving; the bucket baseline typically runs 5–20 ms here.
     pub max_wait: Duration,
     /// which artifacts to preload at startup (None = all generators)
     pub preload_models: Option<Vec<String>>,
+    /// batch scheduler per route (continuous by default)
+    pub scheduler: SchedulerKind,
+    /// per-route admission bound: at most this many requests may be
+    /// in flight (channel + scheduler queue) per route before `submit`
+    /// sheds with [`Rejected::QueueFull`]
+    pub queue_cap: usize,
+    /// default per-request SLO budget: requests get `now + slo` as their
+    /// deadline unless [`Coordinator::submit_with_deadline`] overrides it.
+    /// `None` = best-effort (no deadline shedding).
+    pub slo: Option<Duration>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_wait: Duration::from_millis(20), preload_models: None }
+        ServeConfig {
+            max_wait: Duration::ZERO,
+            preload_models: None,
+            scheduler: SchedulerKind::Continuous,
+            queue_cap: 256,
+            slo: None,
+        }
     }
 }
 
@@ -92,6 +202,7 @@ impl Coordinator {
     pub fn start(manifest: Manifest, cfg: ServeConfig) -> Result<Coordinator> {
         let router = Router::from_manifest(&manifest);
         let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let gate = Arc::new(Gate::new(&router, cfg.queue_cap));
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
 
@@ -100,6 +211,7 @@ impl Coordinator {
         // coordinator reports ready (first requests never pay compile time).
         let engine_router = router.clone();
         let engine_metrics = metrics.clone();
+        let engine_gate = gate.clone();
         let engine_cfg = cfg.clone();
         let handle = std::thread::Builder::new()
             .name("wingan-engine".into())
@@ -123,7 +235,7 @@ impl Coordinator {
                     }
                 }
                 let _ = ready_tx.send(Ok(()));
-                engine_loop(runtime, engine_router, engine_metrics, engine_cfg, rx)
+                engine_loop(runtime, engine_router, engine_metrics, engine_gate, engine_cfg, rx)
             })
             .expect("spawn engine");
         ready_rx
@@ -136,6 +248,8 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             metrics,
             router,
+            gate,
+            slo: cfg.slo,
             handle: Some(handle),
         })
     }
@@ -162,11 +276,13 @@ impl Coordinator {
         );
         let router = Router::from_manifest(&manifest);
         let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let gate = Arc::new(Gate::new(&router, cfg.queue_cap));
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
 
         let engine_router = router.clone();
         let engine_metrics = metrics.clone();
+        let engine_gate = gate.clone();
         let engine_cfg = cfg.clone();
         let handle = std::thread::Builder::new()
             .name("wingan-engine".into())
@@ -179,7 +295,7 @@ impl Coordinator {
                 // serving metrics snapshot
                 engine_metrics.lock().unwrap().plan_cache = runtime.plan_stats();
                 let _ = ready_tx.send(Ok(()));
-                engine_loop(runtime, engine_router, engine_metrics, engine_cfg, rx)
+                engine_loop(runtime, engine_router, engine_metrics, engine_gate, engine_cfg, rx)
             })
             .expect("spawn engine");
         ready_rx
@@ -192,6 +308,8 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             metrics,
             router,
+            gate,
+            slo: cfg.slo,
             handle: Some(handle),
         })
     }
@@ -200,25 +318,60 @@ impl Coordinator {
         &self.router
     }
 
-    /// Submit a request; returns a receiver for the response.
+    /// Submit a request with the configured default SLO (if any); returns
+    /// a receiver for the response. Sheds with
+    /// [`ServeError::Rejected`]`(`[`Rejected::QueueFull`]`)` when the
+    /// route's admission gate is at capacity — the queue is bounded, so
+    /// overload can never grow memory without bound.
     pub fn submit(
         &self,
         model: &str,
         method: &str,
         input: Vec<f32>,
     ) -> Result<Receiver<Result<GenResponse, ServeError>>, ServeError> {
+        self.submit_with_deadline(model, method, input, self.slo)
+    }
+
+    /// Submit a request with an explicit per-request SLO budget (`None` =
+    /// best-effort, overriding any configured default). The deadline is
+    /// stamped at submit time; an infeasible or expired deadline comes
+    /// back as a typed [`Rejected::DeadlineInfeasible`] response.
+    pub fn submit_with_deadline(
+        &self,
+        model: &str,
+        method: &str,
+        input: Vec<f32>,
+        budget: Option<Duration>,
+    ) -> Result<Receiver<Result<GenResponse, ServeError>>, ServeError> {
         self.router.validate(model, method, input.len())?;
+        let key = (model.to_string(), method.to_string());
+        if let Err(rej) = self.gate.try_acquire(&key) {
+            let mut m = self.metrics.lock().unwrap();
+            m.shed_queue_full += 1;
+            m.route_mut(&format!("{model}/{method}")).shed_queue_full += 1;
+            return Err(ServeError::Rejected(rej));
+        }
         let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
+        let now = Instant::now();
         let req = GenRequest {
             id,
             model: model.to_string(),
             method: method.to_string(),
             input,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: budget.and_then(|b| now.checked_add(b)),
         };
-        self.metrics.lock().unwrap().requests += 1;
-        self.tx.send(Msg::Request(req, reply_tx)).map_err(|_| ServeError::EngineShutdown)?;
+        {
+            let mut m = self.metrics.lock().unwrap();
+            m.requests += 1;
+            let r = m.route_mut(&format!("{model}/{method}"));
+            r.admitted += 1;
+        }
+        if self.tx.send(Msg::Request(req, reply_tx)).is_err() {
+            self.gate.release(&key, 1);
+            return Err(ServeError::EngineShutdown);
+        }
         Ok(reply_rx)
     }
 
@@ -234,8 +387,16 @@ impl Coordinator {
             .map_err(|_| ServeError::EngineShutdown)?
     }
 
+    /// Snapshot of the serving metrics, with per-route queue depth and
+    /// high-water marks folded in from the admission gate.
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        let mut m = self.metrics.lock().unwrap().clone();
+        for (key, g) in &self.gate.routes {
+            let r = m.route_mut(&format!("{}/{}", key.0, key.1));
+            r.depth = g.depth.load(Ordering::Acquire);
+            r.peak_depth = g.peak.load(Ordering::Acquire);
+        }
+        m
     }
 
     /// Graceful shutdown: flushes pending batches first.
@@ -256,8 +417,68 @@ impl Drop for Coordinator {
     }
 }
 
+/// The per-route scheduler the engine loop drives — continuous or the
+/// bucket baseline, behind one polling surface.
+enum RouteBatcher {
+    Bucket(DynamicBatcher),
+    Continuous(ContinuousBatcher),
+}
+
+impl RouteBatcher {
+    fn new(cfg: &ServeConfig, buckets: Vec<usize>) -> RouteBatcher {
+        let policy = BatchPolicy::new(buckets, cfg.max_wait);
+        match cfg.scheduler {
+            SchedulerKind::Bucket => RouteBatcher::Bucket(DynamicBatcher::new(policy)),
+            SchedulerKind::Continuous => {
+                RouteBatcher::Continuous(ContinuousBatcher::new(policy, cfg.queue_cap))
+            }
+        }
+    }
+
+    /// Admit one request (the bucket baseline never rejects — its bound
+    /// is enforced by the gate alone).
+    fn admit(&mut self, req: GenRequest, now: Instant) -> Result<(), (GenRequest, Rejected)> {
+        match self {
+            RouteBatcher::Bucket(b) => {
+                b.push(req);
+                Ok(())
+            }
+            RouteBatcher::Continuous(b) => b.admit(req, now),
+        }
+    }
+
+    fn poll(&mut self, now: Instant) -> Dispatch {
+        match self {
+            RouteBatcher::Bucket(b) => Dispatch { batch: b.poll(now), shed: Vec::new() },
+            RouteBatcher::Continuous(b) => b.poll(now),
+        }
+    }
+
+    fn next_deadline(&self) -> Option<Instant> {
+        match self {
+            RouteBatcher::Bucket(b) => b.next_deadline(),
+            RouteBatcher::Continuous(b) => b.next_deadline(),
+        }
+    }
+
+    fn flush(&mut self) -> Option<ReadyBatch> {
+        match self {
+            RouteBatcher::Bucket(b) => b.flush(),
+            RouteBatcher::Continuous(b) => b.flush(),
+        }
+    }
+
+    /// Feed an observed batch service time into the admission forecast
+    /// (no-op for the bucket baseline).
+    fn observe(&mut self, service: Duration) {
+        if let RouteBatcher::Continuous(b) = self {
+            b.observe(service);
+        }
+    }
+}
+
 struct RouteState {
-    batcher: DynamicBatcher,
+    batcher: RouteBatcher,
     replies: HashMap<RequestId, Reply>,
 }
 
@@ -265,17 +486,18 @@ fn engine_loop<E: ExecBackend>(
     runtime: E,
     router: Router,
     metrics: Arc<Mutex<Metrics>>,
+    gate: Arc<Gate>,
     cfg: ServeConfig,
     rx: Receiver<Msg>,
 ) {
     let mut states: HashMap<(String, String), RouteState> = HashMap::new();
     loop {
-        // wait for work, but never past the nearest batch deadline
+        // wait for work, but never past the nearest scheduler deadline
         let deadline = states
             .values()
             .filter_map(|s| s.batcher.next_deadline())
             .min();
-        let msg = match deadline {
+        let first = match deadline {
             Some(d) => {
                 let timeout = d.saturating_duration_since(Instant::now());
                 match rx.recv_timeout(timeout) {
@@ -290,43 +512,124 @@ fn engine_loop<E: ExecBackend>(
             },
         };
 
-        match msg {
-            Some(Msg::Request(req, reply)) => {
-                let key = (req.model.clone(), req.method.clone());
-                let state = states.entry(key.clone()).or_insert_with(|| {
-                    let route = router.route(&key.0, &key.1).expect("validated");
-                    RouteState {
-                        batcher: DynamicBatcher::new(BatchPolicy::new(
-                            route.bucket_sizes(),
-                            cfg.max_wait,
-                        )),
-                        replies: HashMap::new(),
-                    }
-                });
-                state.replies.insert(req.id, reply);
-                state.batcher.push(req);
-            }
-            Some(Msg::Shutdown) => {
-                // flush everything, then exit
-                for (key, state) in states.iter_mut() {
-                    while let Some(batch) = state.batcher.flush() {
-                        run_batch(&runtime, &router, &metrics, key, batch, &mut state.replies);
-                    }
+        // drain everything already in the channel before polling: requests
+        // that arrived while the previous batch executed all join the
+        // forming batch in one go (continuous batching's join-in-flight)
+        let mut shutdown = false;
+        let mut msg = first;
+        loop {
+            match msg {
+                Some(Msg::Request(req, reply)) => {
+                    handle_request(&mut states, &router, &metrics, &gate, &cfg, req, reply)
                 }
-                return;
+                Some(Msg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                None => {} // deadline tick: fall through to polling
             }
-            None => {} // deadline tick: fall through to polling
+            msg = match rx.try_recv() {
+                Ok(m) => Some(m),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => Some(Msg::Shutdown),
+            };
+        }
+
+        if shutdown {
+            // flush everything, then exit — shutdown is a drain, not a shed
+            for (key, state) in states.iter_mut() {
+                while let Some(batch) = state.batcher.flush() {
+                    gate.release(key, batch.requests.len());
+                    run_batch(&runtime, &router, &metrics, key, batch, &mut state.replies);
+                }
+            }
+            return;
         }
 
         let now = Instant::now();
         for (key, state) in states.iter_mut() {
-            while let Some(batch) = state.batcher.poll(now) {
-                run_batch(&runtime, &router, &metrics, key, batch, &mut state.replies);
+            loop {
+                let Dispatch { batch, shed } = state.batcher.poll(now);
+                if !shed.is_empty() {
+                    gate.release(key, shed.len());
+                    shed_requests(&metrics, key, shed, &mut state.replies);
+                }
+                let Some(batch) = batch else { break };
+                gate.release(key, batch.requests.len());
+                let service =
+                    run_batch(&runtime, &router, &metrics, key, batch, &mut state.replies);
+                state.batcher.observe(service);
             }
         }
     }
 }
 
+/// Admit one request into its route's scheduler, creating the route state
+/// on first touch; a typed admission rejection is answered immediately.
+fn handle_request(
+    states: &mut HashMap<(String, String), RouteState>,
+    router: &Router,
+    metrics: &Arc<Mutex<Metrics>>,
+    gate: &Arc<Gate>,
+    cfg: &ServeConfig,
+    req: GenRequest,
+    reply: Reply,
+) {
+    let key = (req.model.clone(), req.method.clone());
+    let state = states.entry(key.clone()).or_insert_with(|| {
+        let route = router.route(&key.0, &key.1).expect("validated");
+        RouteState {
+            batcher: RouteBatcher::new(cfg, route.bucket_sizes()),
+            replies: HashMap::new(),
+        }
+    });
+    let id = req.id;
+    match state.batcher.admit(req, Instant::now()) {
+        Ok(()) => {
+            state.replies.insert(id, reply);
+        }
+        Err((req, rej)) => {
+            gate.release(&key, 1);
+            count_shed(metrics, &key, &rej);
+            let _ = reply.send(Err(ServeError::Rejected(rej)));
+            drop(req);
+        }
+    }
+}
+
+/// Answer dispatch-time sheds (expired deadlines) with their typed
+/// verdicts and count them.
+fn shed_requests(
+    metrics: &Arc<Mutex<Metrics>>,
+    key: &(String, String),
+    shed: Vec<(GenRequest, Rejected)>,
+    replies: &mut HashMap<RequestId, Reply>,
+) {
+    for (req, rej) in shed {
+        count_shed(metrics, key, &rej);
+        if let Some(reply) = replies.remove(&req.id) {
+            let _ = reply.send(Err(ServeError::Rejected(rej)));
+        }
+    }
+}
+
+fn count_shed(metrics: &Arc<Mutex<Metrics>>, key: &(String, String), rej: &Rejected) {
+    let mut m = metrics.lock().unwrap();
+    let route = format!("{}/{}", key.0, key.1);
+    match rej {
+        Rejected::QueueFull { .. } => {
+            m.shed_queue_full += 1;
+            m.route_mut(&route).shed_queue_full += 1;
+        }
+        Rejected::DeadlineInfeasible { .. } => {
+            m.shed_deadline += 1;
+            m.route_mut(&route).shed_deadline += 1;
+        }
+    }
+}
+
+/// Execute one released batch and answer its requests; returns the batch
+/// service time (for the scheduler's admission forecast).
 fn run_batch<E: ExecBackend>(
     runtime: &E,
     router: &Router,
@@ -334,13 +637,13 @@ fn run_batch<E: ExecBackend>(
     key: &(String, String),
     batch: ReadyBatch,
     replies: &mut HashMap<RequestId, Reply>,
-) {
+) -> Duration {
     let route = router.route(&key.0, &key.1).expect("validated at submit");
     let artifact = match route.artifact_for_bucket(batch.bucket) {
         Some(a) => a,
         None => {
             fail_batch(&batch, replies, ServeError::UnknownModel(key.0.clone()));
-            return;
+            return Duration::ZERO;
         }
     };
     // pack: bucket x sample_len, zero-padded tail
@@ -357,16 +660,22 @@ fn run_batch<E: ExecBackend>(
     match out {
         Ok(out) => {
             let sample_out = route.sample_output_len;
+            let route_key = format!("{}/{}", key.0, key.1);
             let mut m = metrics.lock().unwrap();
             m.batches += 1;
             m.batched_samples += batch.requests.len() as u64;
             m.padded_samples += batch.padding() as u64;
             m.exec_latency.record(exec_time);
+            m.route_mut(&route_key).batches += 1;
             for (i, r) in batch.requests.iter().enumerate() {
                 let queue_time = t0.duration_since(r.enqueued);
+                let e2e = r.enqueued.elapsed();
                 m.queue_latency.record(queue_time);
-                m.e2e_latency.record(r.enqueued.elapsed());
+                m.e2e_latency.record(e2e);
                 m.responses += 1;
+                let rm = m.route_mut(&route_key);
+                rm.completed += 1;
+                rm.e2e.record(e2e);
                 if let Some(reply) = replies.remove(&r.id) {
                     let _ = reply.send(Ok(GenResponse {
                         id: r.id,
@@ -380,6 +689,7 @@ fn run_batch<E: ExecBackend>(
         }
         Err(e) => fail_batch(&batch, replies, ServeError::Execution(e.to_string())),
     }
+    exec_time
 }
 
 fn fail_batch(

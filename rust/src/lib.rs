@@ -30,6 +30,7 @@
 //! | [`dse`] | design-space exploration, eqs. 5–9 (§IV.C) |
 //! | [`resource`] / [`energy`] | Table II resource + Fig. 9 energy models |
 //! | [`report`] | the paper's tables/figures as printable reports |
+//! | [`loadgen`] | open-loop Poisson load harness: scheduler A/B under mixed traffic |
 //! | [`cli`] / [`benchlib`] / [`util`] / [`prop`] | flag parsing, bench harness, tensors/PRNG/JSON, property-test harness |
 //!
 //! The **plan-compile / execute split** is the load-bearing design: a
@@ -77,6 +78,7 @@ pub mod dse;
 pub mod energy;
 pub mod engine;
 pub mod gan;
+pub mod loadgen;
 pub mod prop;
 pub mod report;
 pub mod resource;

@@ -1,0 +1,596 @@
+//! `wingan loadgen` — open-loop load-generation harness for the serving
+//! coordinator.
+//!
+//! The harness answers the question the unit tests cannot: *what does the
+//! scheduler do under sustained, realistic traffic?* It drives a native
+//! coordinator with **open-loop Poisson arrivals** (arrival times are
+//! drawn up front and never slowed down by slow responses — the honest
+//! way to measure an overloaded server) over a **mixed traffic profile**
+//! (multiple zoo models and both route methods, which also mixes
+//! precision tiers: fast routes serve the resolved f32/f64 tier, the
+//! `tdc` reference route always serves f64), and reports
+//! achieved-vs-offered rate, shed fraction, and latency percentiles.
+//!
+//! The run is an **A/B at equal offered load**: the identical
+//! pre-generated arrival schedule (same seed → same arrival offsets,
+//! same route choices, same input tensors) is replayed against
+//! [`SchedulerKind::Continuous`] and [`SchedulerKind::Bucket`]
+//! coordinators, and both outcomes land in one
+//! [`crate::benchlib::BenchReport`] (`BENCH_pr7.json`) so the perf
+//! trajectory records the scheduler comparison machine-readably.
+//!
+//! Offered load is expressed relative to **calibrated capacity**: a
+//! short pre-run measures each route's full-width batch service time on
+//! a hold-forever bucket coordinator (submit exactly `width` requests →
+//! exactly one full batch → its `exec_time` is the service time), and
+//! the mix-weighted capacity follows. `--load 1.2` (the default) then
+//! means "offer 20% more than the engine can sustain" — the regime where
+//! admission control earns its keep.
+//!
+//! Every run **asserts conservation**: submitted = completed +
+//! typed-shed (client-observed), and the coordinator's shed counters
+//! must match what the client saw. A lost request fails the run.
+
+use crate::benchlib::BenchReport;
+use crate::coordinator::{Coordinator, SchedulerKind, ServeConfig};
+use crate::engine::serve::NativeConfig;
+use crate::gan::zoo::Scale;
+use crate::util::prng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// One route in the traffic mix, with its share of offered requests.
+#[derive(Clone, Debug)]
+pub struct RouteLoad {
+    /// zoo model id ("dcgan", "gpgan", ...)
+    pub model: String,
+    /// route method ("winograd" fast tier, "tdc" f64 reference tier)
+    pub method: String,
+    /// fraction of offered traffic on this route (weights sum to 1)
+    pub weight: f64,
+}
+
+/// The mixed model/method/precision traffic profile a loadgen run offers.
+#[derive(Clone, Debug)]
+pub struct TrafficProfile {
+    /// routes in the mix, weights summing to 1
+    pub routes: Vec<RouteLoad>,
+}
+
+impl TrafficProfile {
+    /// The standard serving mix: mostly the dcgan fast route, with a
+    /// second model and the f64 `tdc` reference route in the blend so
+    /// every run exercises cross-model and cross-precision batching.
+    pub fn standard() -> TrafficProfile {
+        TrafficProfile {
+            routes: vec![
+                RouteLoad { model: "dcgan".into(), method: "winograd".into(), weight: 0.6 },
+                RouteLoad { model: "gpgan".into(), method: "winograd".into(), weight: 0.2 },
+                RouteLoad { model: "dcgan".into(), method: "tdc".into(), weight: 0.2 },
+            ],
+        }
+    }
+
+    /// The distinct model ids in the mix (for `NativeConfig::models`).
+    pub fn models(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for r in &self.routes {
+            if !out.contains(&r.model) {
+                out.push(r.model.clone());
+            }
+        }
+        out
+    }
+
+    /// Pick a route index by weight from one uniform draw in `[0, 1)`.
+    pub fn pick(&self, u: f64) -> usize {
+        let mut acc = 0.0;
+        for (i, r) in self.routes.iter().enumerate() {
+            acc += r.weight;
+            if u < acc {
+                return i;
+            }
+        }
+        self.routes.len() - 1
+    }
+}
+
+/// Loadgen run options (see `wingan loadgen --help` text in `main.rs`).
+#[derive(Clone, Debug)]
+pub struct LoadgenOptions {
+    /// zoo scale the engines compile at (tiny default: fast, CI-friendly)
+    pub scale: Scale,
+    /// total requests offered per scheduler run
+    pub requests: usize,
+    /// explicit offered rate (req/s); `None` = `load` × calibrated capacity
+    pub rate: Option<f64>,
+    /// offered load as a multiple of calibrated capacity (default 1.2:
+    /// moderate overload, the regime admission control exists for)
+    pub load: f64,
+    /// explicit per-request SLO budget; `None` = 4 × the slowest route's
+    /// calibrated full-batch service time
+    pub slo: Option<Duration>,
+    /// per-route admission bound (queue + channel)
+    pub queue_cap: usize,
+    /// hold window for the bucket baseline (the continuous scheduler
+    /// always runs work-conserving, `max_wait = 0`)
+    pub bucket_max_wait: Duration,
+    /// workload + arrival-schedule seed (same seed → both schedulers see
+    /// byte-identical traffic)
+    pub seed: u64,
+    /// worker threads (0 = env/core default)
+    pub workers: usize,
+    /// where to write the machine-readable report
+    pub out: PathBuf,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        LoadgenOptions {
+            scale: Scale::Tiny,
+            requests: 800,
+            rate: None,
+            load: 1.2,
+            slo: None,
+            queue_cap: 256,
+            bucket_max_wait: Duration::from_millis(20),
+            seed: 7,
+            workers: 0,
+            out: PathBuf::from("BENCH_pr7.json"),
+        }
+    }
+}
+
+impl LoadgenOptions {
+    /// The short configuration behind `--quick`: enough traffic to fill
+    /// wide batches and trip admission control, small enough for a CI
+    /// smoke step.
+    pub fn quick() -> LoadgenOptions {
+        LoadgenOptions { requests: 200, ..Default::default() }
+    }
+}
+
+/// One request in the pre-generated open-loop schedule.
+#[derive(Clone, Debug)]
+struct Arrival {
+    /// offset from the run start at which this request is submitted
+    offset: Duration,
+    /// index into the profile's route list
+    route: usize,
+    /// the input tensor (identical across both scheduler runs)
+    input: Vec<f32>,
+}
+
+/// The full arrival schedule, generated once and replayed verbatim
+/// against each scheduler so the A/B compares at equal offered load.
+struct ArrivalPlan {
+    arrivals: Vec<Arrival>,
+    /// offered rate the schedule was drawn at (req/s)
+    rate: f64,
+}
+
+impl ArrivalPlan {
+    fn generate(
+        profile: &TrafficProfile,
+        input_lens: &[usize],
+        requests: usize,
+        rate: f64,
+        seed: u64,
+    ) -> ArrivalPlan {
+        let mut rng = Rng::new(seed);
+        let mut t = Duration::ZERO;
+        let mut arrivals = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            let route = profile.pick(rng.uniform());
+            arrivals.push(Arrival {
+                offset: t,
+                route,
+                input: rng.normal_vec_f32(input_lens[route]),
+            });
+            t += Duration::from_secs_f64(rng.exponential(rate));
+        }
+        ArrivalPlan { arrivals, rate }
+    }
+}
+
+/// What one scheduler run observed, client-side and coordinator-side.
+#[derive(Clone, Debug)]
+pub struct SchedulerOutcome {
+    /// which scheduler ran
+    pub scheduler: SchedulerKind,
+    /// requests offered (the full arrival plan)
+    pub offered: u64,
+    /// offered rate over the submission window (req/s)
+    pub offered_rate: f64,
+    /// requests answered with an output
+    pub completed: u64,
+    /// completions whose queue+exec time fit the SLO budget (goodput)
+    pub in_slo: u64,
+    /// typed sheds observed at `submit` (admission gate)
+    pub shed_submit: u64,
+    /// typed sheds observed on the reply channel (deadline sheds)
+    pub shed_reply: u64,
+    /// wall clock from first submit until every reply (or shed) arrived
+    pub wall: Duration,
+    /// e2e latency percentiles over completions, seconds (p50, p99, p999)
+    pub tail: (f64, f64, f64),
+}
+
+impl SchedulerOutcome {
+    /// Completions per wall-clock second (every answer, on-time or late).
+    pub fn achieved_rate(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64()
+    }
+
+    /// In-SLO completions per wall-clock second — the sustained
+    /// throughput of *useful* work, the number an SLO-bound deployment
+    /// actually gets to keep.
+    pub fn goodput(&self) -> f64 {
+        self.in_slo as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Fraction of offered requests shed with a typed rejection.
+    pub fn shed_fraction(&self) -> f64 {
+        (self.shed_submit + self.shed_reply) as f64 / self.offered as f64
+    }
+
+    /// One human-readable report block.
+    pub fn report(&self) -> String {
+        let (p50, p99, p999) = self.tail;
+        format!(
+            "{:?}: offered {:.0}/s  achieved {:.0}/s  goodput {:.0}/s  \
+             shed {:.1}% ({} gate + {} deadline)  \
+             p50={:.2}ms p99={:.2}ms p999={:.2}ms  wall={:.2}s",
+            self.scheduler,
+            self.offered_rate,
+            self.achieved_rate(),
+            self.goodput(),
+            self.shed_fraction() * 100.0,
+            self.shed_submit,
+            self.shed_reply,
+            p50 * 1e3,
+            p99 * 1e3,
+            p999 * 1e3,
+            self.wall.as_secs_f64(),
+        )
+    }
+}
+
+/// Per-route calibration: full-width batch service time.
+struct Calibration {
+    /// service time of one full-width batch per profile route
+    service: Vec<Duration>,
+    /// batch width per profile route
+    width: Vec<usize>,
+    /// per-sample input length per profile route (for schedule generation)
+    input_lens: Vec<usize>,
+}
+
+impl Calibration {
+    /// Mix-weighted sustainable rate: the engine spends
+    /// `weight × service / width` seconds per offered request on each
+    /// route, so capacity is the reciprocal of the weighted sum.
+    fn capacity(&self, profile: &TrafficProfile) -> f64 {
+        let cost_per_req: f64 = profile
+            .routes
+            .iter()
+            .zip(self.service.iter().zip(&self.width))
+            .map(|(r, (s, w))| r.weight * s.as_secs_f64() / *w as f64)
+            .sum();
+        1.0 / cost_per_req
+    }
+
+    /// The slowest route's full-batch service time (the SLO default's
+    /// anchor).
+    fn slowest(&self) -> Duration {
+        self.service.iter().copied().max().unwrap_or(Duration::from_millis(1))
+    }
+}
+
+fn native_config(opts: &LoadgenOptions, profile: &TrafficProfile) -> NativeConfig {
+    NativeConfig {
+        scale: opts.scale,
+        workers: opts.workers,
+        models: Some(profile.models()),
+        ..Default::default()
+    }
+}
+
+/// Measure each route's full-width batch service time: a hold-forever
+/// bucket coordinator (`max_wait = MAX`) dispatches nothing until the
+/// width fills, so submitting exactly `width` requests produces exactly
+/// one full batch whose `exec_time` is the service time. Two rounds per
+/// route; the warm second round is the measurement.
+fn calibrate(opts: &LoadgenOptions, profile: &TrafficProfile) -> Result<Calibration> {
+    let serve = ServeConfig {
+        scheduler: SchedulerKind::Bucket,
+        max_wait: Duration::MAX,
+        queue_cap: opts.queue_cap.max(64),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_native(native_config(opts, profile), serve)?;
+    let mut rng = Rng::new(opts.seed ^ 0xCA11_B8A7);
+    let mut service = Vec::with_capacity(profile.routes.len());
+    let mut width = Vec::with_capacity(profile.routes.len());
+    let mut input_lens = Vec::with_capacity(profile.routes.len());
+    for r in &profile.routes {
+        let route = coord.router().route(&r.model, &r.method).map_err(anyhow::Error::msg)?;
+        let w = *route.bucket_sizes().last().expect("route advertises buckets");
+        let input_len = route.sample_input_len;
+        input_lens.push(input_len);
+        let mut t_full = Duration::ZERO;
+        for _round in 0..2 {
+            let pending: Vec<_> = (0..w)
+                .map(|_| coord.submit(&r.model, &r.method, rng.normal_vec_f32(input_len)))
+                .collect::<std::result::Result<_, _>>()
+                .map_err(anyhow::Error::msg)?;
+            for rx in pending {
+                let resp = rx
+                    .recv()
+                    .context("engine died during calibration")?
+                    .map_err(anyhow::Error::msg)?;
+                ensure!(
+                    resp.batch_size == w,
+                    "calibration batch split: got bucket {} for width {w}",
+                    resp.batch_size
+                );
+                t_full = resp.exec_time;
+            }
+        }
+        service.push(t_full);
+        width.push(w);
+    }
+    coord.shutdown();
+    Ok(Calibration { service, width, input_lens })
+}
+
+/// Replay the arrival plan against one scheduler and tally the outcome.
+/// Asserts request conservation (client-side and against the
+/// coordinator's shed counters) — a lost request fails the run.
+fn run_one(
+    kind: SchedulerKind,
+    opts: &LoadgenOptions,
+    profile: &TrafficProfile,
+    plan: &ArrivalPlan,
+    slo: Duration,
+) -> Result<SchedulerOutcome> {
+    let serve = ServeConfig {
+        scheduler: kind,
+        max_wait: match kind {
+            SchedulerKind::Continuous => Duration::ZERO,
+            SchedulerKind::Bucket => opts.bucket_max_wait,
+        },
+        queue_cap: opts.queue_cap,
+        slo: Some(slo),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_native(native_config(opts, profile), serve)?;
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(plan.arrivals.len());
+    let mut shed_submit = 0u64;
+    for a in &plan.arrivals {
+        let target = t0 + a.offset;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let r = &profile.routes[a.route];
+        match coord.submit(&r.model, &r.method, a.input.clone()) {
+            Ok(rx) => pending.push(rx),
+            Err(e) if e.is_shed() => shed_submit += 1,
+            Err(e) => anyhow::bail!("submit failed hard (not a shed): {e}"),
+        }
+    }
+    let submit_window = t0.elapsed();
+
+    let mut completed = 0u64;
+    let mut in_slo = 0u64;
+    let mut shed_reply = 0u64;
+    for rx in pending {
+        match rx.recv().context("engine died mid-run")? {
+            Ok(resp) => {
+                completed += 1;
+                // queue+exec is the server-side e2e, measured per request
+                // without client-side recv-ordering skew
+                if resp.queue_time + resp.exec_time <= slo {
+                    in_slo += 1;
+                }
+            }
+            Err(e) if e.is_shed() => shed_reply += 1,
+            Err(e) => anyhow::bail!("request failed hard (not a shed): {e}"),
+        }
+    }
+    let wall = t0.elapsed();
+    let m = coord.metrics();
+    coord.shutdown();
+
+    let offered = plan.arrivals.len() as u64;
+    // conservation: every offered request is answered or typed-shed
+    ensure!(
+        completed + shed_submit + shed_reply == offered,
+        "lost requests: {completed} completed + {shed_submit} gate-shed + \
+         {shed_reply} reply-shed != {offered} offered"
+    );
+    // and the coordinator's typed-shed counters must agree with what the
+    // client observed
+    ensure!(
+        m.shed_total() == shed_submit + shed_reply,
+        "shed counters diverge: coordinator says {}, client saw {}",
+        m.shed_total(),
+        shed_submit + shed_reply
+    );
+
+    Ok(SchedulerOutcome {
+        scheduler: kind,
+        offered,
+        offered_rate: offered as f64 / submit_window.as_secs_f64().max(1e-9),
+        completed,
+        in_slo,
+        shed_submit,
+        shed_reply,
+        wall,
+        tail: m.e2e_latency.tail(),
+    })
+}
+
+/// Run the full loadgen A/B: calibrate capacity, generate one open-loop
+/// Poisson arrival plan, replay it against the continuous and bucket
+/// schedulers, print both outcomes, and write `BENCH_pr7.json`. Returns
+/// the (continuous, bucket) outcomes.
+pub fn run(opts: &LoadgenOptions) -> Result<(SchedulerOutcome, SchedulerOutcome)> {
+    let profile = TrafficProfile::standard();
+    println!(
+        "loadgen: calibrating {} route(s) at {:?} scale...",
+        profile.routes.len(),
+        opts.scale
+    );
+    let cal = calibrate(opts, &profile)?;
+    let capacity = cal.capacity(&profile);
+    let rate = opts.rate.unwrap_or(capacity * opts.load);
+    let slo = opts.slo.unwrap_or_else(|| cal.slowest() * 4);
+    for (r, (s, w)) in profile.routes.iter().zip(cal.service.iter().zip(&cal.width)) {
+        println!(
+            "  {}/{}: width {w}, full-batch service {:.3}ms",
+            r.model,
+            r.method,
+            s.as_secs_f64() * 1e3
+        );
+    }
+    println!(
+        "loadgen: capacity ~{capacity:.0} req/s; offering {rate:.0} req/s \
+         ({} requests, SLO {:.1}ms, queue cap {}, seed {})",
+        opts.requests,
+        slo.as_secs_f64() * 1e3,
+        opts.queue_cap,
+        opts.seed
+    );
+
+    let plan = ArrivalPlan::generate(&profile, &cal.input_lens, opts.requests, rate, opts.seed);
+
+    let continuous = run_one(SchedulerKind::Continuous, opts, &profile, &plan, slo)?;
+    println!("  {}", continuous.report());
+    let bucket = run_one(SchedulerKind::Bucket, opts, &profile, &plan, slo)?;
+    println!("  {}", bucket.report());
+
+    let mut rep = BenchReport::new("loadgen");
+    rep.metric("offered_rate_rps", plan.rate);
+    rep.metric("calibrated_capacity_rps", capacity);
+    rep.metric("slo_ms", slo.as_secs_f64() * 1e3);
+    for o in [&continuous, &bucket] {
+        let tag = match o.scheduler {
+            SchedulerKind::Continuous => "continuous",
+            SchedulerKind::Bucket => "bucket",
+        };
+        let (p50, p99, p999) = o.tail;
+        rep.metric(&format!("{tag}_achieved_rps"), o.achieved_rate());
+        rep.metric(&format!("{tag}_goodput_rps"), o.goodput());
+        rep.metric(&format!("{tag}_shed_fraction"), o.shed_fraction());
+        rep.metric(&format!("{tag}_p50_ms"), p50 * 1e3);
+        rep.metric(&format!("{tag}_p99_ms"), p99 * 1e3);
+        rep.metric(&format!("{tag}_p999_ms"), p999 * 1e3);
+        rep.metric(&format!("{tag}_completed"), o.completed as f64);
+        rep.metric(&format!("{tag}_lost"), 0.0); // conservation asserted above
+    }
+    // the headline A/B factors: sustained useful throughput and tail
+    // latency at equal offered load
+    rep.metric(
+        "throughput_vs_bucket",
+        continuous.achieved_rate() / bucket.achieved_rate().max(1e-9),
+    );
+    rep.metric(
+        "goodput_vs_bucket",
+        continuous.goodput() / bucket.goodput().max(1e-9),
+    );
+    rep.metric("p99_bucket_over_continuous", bucket.tail.1 / continuous.tail.1.max(1e-9));
+    rep.write(&opts.out).with_context(|| format!("writing {}", opts.out.display()))?;
+    println!(
+        "loadgen: wrote {} (throughput x{:.2}, goodput x{:.2}, bucket p99 {:.1}x higher)",
+        opts.out.display(),
+        continuous.achieved_rate() / bucket.achieved_rate().max(1e-9),
+        continuous.goodput() / bucket.goodput().max(1e-9),
+        bucket.tail.1 / continuous.tail.1.max(1e-9),
+    );
+    Ok((continuous, bucket))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_profile_weights_sum_to_one() {
+        let p = TrafficProfile::standard();
+        let sum: f64 = p.routes.iter().map(|r| r.weight).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert_eq!(p.models(), vec!["dcgan".to_string(), "gpgan".to_string()]);
+    }
+
+    #[test]
+    fn route_pick_respects_weights_and_covers_the_tail() {
+        let p = TrafficProfile::standard();
+        assert_eq!(p.pick(0.0), 0);
+        assert_eq!(p.pick(0.59), 0);
+        assert_eq!(p.pick(0.61), 1);
+        assert_eq!(p.pick(0.81), 2);
+        // u == 1.0 can't occur from uniform(), but the clamp must hold
+        assert_eq!(p.pick(1.0), 2);
+    }
+
+    #[test]
+    fn arrival_plan_is_deterministic_and_monotone() {
+        let p = TrafficProfile::standard();
+        let lens = [8usize, 8, 8];
+        let a = ArrivalPlan::generate(&p, &lens, 50, 500.0, 42);
+        let b = ArrivalPlan::generate(&p, &lens, 50, 500.0, 42);
+        assert_eq!(a.arrivals.len(), 50);
+        for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+            assert_eq!(x.offset, y.offset);
+            assert_eq!(x.route, y.route);
+            assert_eq!(x.input, y.input, "same seed must give identical inputs");
+        }
+        for w in a.arrivals.windows(2) {
+            assert!(w[0].offset <= w[1].offset, "arrival offsets must be sorted");
+        }
+        // a different seed gives a different schedule
+        let c = ArrivalPlan::generate(&p, &lens, 50, 500.0, 43);
+        assert!(a.arrivals.iter().zip(&c.arrivals).any(|(x, y)| x.offset != y.offset));
+    }
+
+    #[test]
+    fn capacity_is_the_weighted_reciprocal() {
+        // one route, width 8, 10ms per full batch -> 800 req/s
+        let profile = TrafficProfile {
+            routes: vec![RouteLoad { model: "m".into(), method: "w".into(), weight: 1.0 }],
+        };
+        let cal = Calibration {
+            service: vec![Duration::from_millis(10)],
+            width: vec![8],
+            input_lens: vec![8],
+        };
+        assert!((cal.capacity(&profile) - 800.0).abs() < 1e-6);
+        assert_eq!(cal.slowest(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn outcome_rates_and_shed_fraction() {
+        let o = SchedulerOutcome {
+            scheduler: SchedulerKind::Continuous,
+            offered: 100,
+            offered_rate: 100.0,
+            completed: 80,
+            in_slo: 60,
+            shed_submit: 15,
+            shed_reply: 5,
+            wall: Duration::from_secs(2),
+            tail: (0.010, 0.040, 0.080),
+        };
+        assert!((o.achieved_rate() - 40.0).abs() < 1e-9);
+        assert!((o.goodput() - 30.0).abs() < 1e-9);
+        assert!((o.shed_fraction() - 0.20).abs() < 1e-12);
+        let r = o.report();
+        assert!(r.contains("Continuous"), "{r}");
+        assert!(r.contains("p99=40.00ms"), "{r}");
+    }
+}

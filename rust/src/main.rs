@@ -6,6 +6,7 @@
 //!   dse                 design-space exploration (eq. 5-9 roofline sweep)
 //!   verify              load every artifact, execute, check vs jax goldens
 //!   serve               run the serving coordinator on a synthetic workload
+//!   loadgen             open-loop Poisson A/B of the batch schedulers
 //!   compile             AOT-compile zoo plans into an on-disk plan store
 //!   plan inspect FILE   print the manifest view of one plan artifact
 
@@ -38,7 +39,11 @@ USAGE: wingan <subcommand> [flags]
          [--method winograd] [--requests 64] [--rate 200] [--max-wait-ms 20]
          [--seed 7] [--workers N] [--precision f32|f64|auto]
          [--kernel scalar|simd|auto] [--plan-store DIR] [--weight-seed 42]
-         [--check-compile]
+         [--check-compile] [--scheduler continuous|bucket] [--queue-cap 256]
+         [--slo-ms N]
+  loadgen [--quick] [--scale tiny|small] [--requests 800] [--load 1.2]
+          [--rate R] [--slo-ms N] [--queue-cap 256] [--max-wait-ms 20]
+          [--seed 7] [--workers N] [--out BENCH_pr7.json]
   compile [--store DIR] [--scale small|tiny|all] [--models dcgan,gpgan]
           [--seed 42]
   plan   inspect <artifact-file>
@@ -63,6 +68,21 @@ seed and must match the store's `compile --seed` to boot warm (both
 default 42; --seed only seeds the request workload). --check-compile
 additionally boots a store-free coordinator and asserts both serve
 bitwise-identical outputs.
+
+serve's scheduler flags: --scheduler picks the batch scheduler (continuous
+= work-conserving continuous batching with SLO-aware admission, the
+default; bucket = the PR-6 bucket-and-deadline baseline), --queue-cap
+bounds each route's admission queue (typed queue-full sheds past it), and
+--slo-ms sets a default per-request deadline (infeasible/expired requests
+get typed deadline sheds; absent = best-effort, no deadline shedding).
+
+loadgen replays one open-loop Poisson arrival schedule (mixed models +
+methods, so mixed precision tiers) against BOTH schedulers at equal
+offered load and writes the A/B (achieved vs offered rate, shed fraction,
+p50/p99/p999) to --out. --load expresses the offered rate as a multiple
+of calibrated capacity (1.2 = 20% overload); --rate overrides it
+absolutely. --quick is the CI smoke preset. --max-wait-ms is the bucket
+baseline's hold window (continuous always runs work-conserving).
 
 compile AOT-compiles zoo generator plans into a plan store: every model x
 route method (winograd + tdc) x precision tier (f64 always, f32 for the
@@ -94,6 +114,7 @@ fn main() {
         }
         Some("verify") => cmd_verify(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("compile") => cmd_compile(&args),
         Some("plan") => cmd_plan(&args),
         Some("version") => {
@@ -210,9 +231,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // which seeds the synthetic request workload.
     let weight_seed = args.get_usize("weight-seed", 42).map_err(anyhow::Error::msg)? as u64;
 
+    let scheduler = args.get_scheduler().map_err(anyhow::Error::msg)?;
+    let queue_cap = args.get_usize("queue-cap", 256).map_err(anyhow::Error::msg)?;
+    let slo = match args.get_usize("slo-ms", 0).map_err(anyhow::Error::msg)? {
+        0 if args.get("slo-ms").is_some() => {
+            anyhow::bail!("--slo-ms: 0 would shed every request; omit the flag for best-effort")
+        }
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
     let serve_cfg = ServeConfig {
         max_wait: Duration::from_millis(max_wait as u64),
         preload_models: Some(vec![model.clone()]),
+        scheduler,
+        queue_cap,
+        slo,
     };
     // a plan store only means something to the native backend
     let use_native = args.has("native")
@@ -298,32 +331,90 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "serving {n_requests} requests to {model}/{method} (Poisson {rate}/s, buckets {buckets:?})"
     );
 
-    // open-loop Poisson arrivals
+    // open-loop Poisson arrivals; typed sheds (queue full / deadline
+    // infeasible under --queue-cap and --slo-ms) are counted, not fatal
     let mut rng = Rng::new(seed);
     let mut pending = Vec::new();
+    let mut shed = 0u64;
     let t_start = Instant::now();
     for i in 0..n_requests {
         let input = rng.normal_vec_f32(input_len);
-        pending.push(coord.submit(&model, &method, input).map_err(anyhow::Error::msg)?);
+        match coord.submit(&model, &method, input) {
+            Ok(rx) => pending.push(rx),
+            Err(e) if e.is_shed() => shed += 1,
+            Err(e) => return Err(anyhow::Error::msg(e)),
+        }
         if i + 1 < n_requests {
             std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
         }
     }
     let mut checksum = 0.0f64;
+    let mut completed = 0u64;
     for rx in pending {
-        let resp = rx.recv()?.map_err(anyhow::Error::msg)?;
-        checksum += resp.output.iter().map(|v| *v as f64).sum::<f64>();
+        match rx.recv()? {
+            Ok(resp) => {
+                completed += 1;
+                checksum += resp.output.iter().map(|v| *v as f64).sum::<f64>();
+            }
+            Err(e) if e.is_shed() => shed += 1,
+            Err(e) => return Err(anyhow::Error::msg(e)),
+        }
     }
     let wall = t_start.elapsed();
     let m = coord.metrics();
     println!("\n== serving report ==");
     println!("{}", m.report());
     println!(
-        "wall={:.3}s  throughput={:.1} img/s  output checksum={checksum:.3}",
+        "wall={:.3}s  completed={completed}/{n_requests} (shed {shed})  \
+         throughput={:.1} img/s  output checksum={checksum:.3}",
         wall.as_secs_f64(),
-        n_requests as f64 / wall.as_secs_f64()
+        completed as f64 / wall.as_secs_f64()
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// `wingan loadgen` — open-loop Poisson A/B of the batch schedulers: one
+/// pre-generated arrival schedule (mixed models + methods, so mixed
+/// precision tiers) replayed against the continuous and bucket
+/// coordinators at equal offered load; the machine-readable outcome goes
+/// to `--out` (default `BENCH_pr7.json`).
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    let mut opts = if args.has("quick") {
+        wingan::loadgen::LoadgenOptions::quick()
+    } else {
+        wingan::loadgen::LoadgenOptions::default()
+    };
+    if args.get("scale").is_some() {
+        opts.scale = serving_scale(args)?;
+    }
+    opts.requests = args.get_usize("requests", opts.requests).map_err(anyhow::Error::msg)?;
+    opts.load = args.get_f64("load", opts.load).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(opts.load > 0.0, "--load must be positive");
+    if args.get("rate").is_some() {
+        let r = args.get_f64("rate", 0.0).map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(r > 0.0, "--rate must be positive");
+        opts.rate = Some(r);
+    }
+    if args.get("slo-ms").is_some() {
+        let ms = args.get_usize("slo-ms", 0).map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(ms > 0, "--slo-ms: 0 would shed every request");
+        opts.slo = Some(Duration::from_millis(ms as u64));
+    }
+    opts.queue_cap = args.get_usize("queue-cap", opts.queue_cap).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(opts.queue_cap > 0, "--queue-cap must be at least 1");
+    let hold = args.get_usize("max-wait-ms", 20).map_err(anyhow::Error::msg)?;
+    opts.bucket_max_wait = Duration::from_millis(hold as u64);
+    opts.seed = args.get_usize("seed", opts.seed as usize).map_err(anyhow::Error::msg)? as u64;
+    opts.workers = args.get_workers().map_err(anyhow::Error::msg)?;
+    if let Some(out) = args.get("out") {
+        opts.out = PathBuf::from(out);
+    }
+    let (continuous, bucket) = wingan::loadgen::run(&opts)?;
+    anyhow::ensure!(
+        continuous.completed + bucket.completed > 0,
+        "loadgen completed zero requests"
+    );
     Ok(())
 }
 

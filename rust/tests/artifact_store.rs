@@ -159,6 +159,7 @@ fn coordinator_boots_warm_from_a_populated_store_and_matches_in_process() {
     let serve_cfg = ServeConfig {
         max_wait: Duration::from_millis(5),
         preload_models: Some(vec!["dcgan".into()]),
+        ..Default::default()
     };
     let native = NativeConfig {
         scale: Scale::Tiny,

@@ -27,7 +27,7 @@ const ZOO_IDS: [&str; 4] = ["dcgan", "artgan", "discogan", "gpgan"];
 fn serves_batched_requests_for_every_zoo_model() {
     let coord = Coordinator::start_native(
         tiny_cfg(),
-        ServeConfig { max_wait: Duration::from_millis(10), preload_models: None },
+        ServeConfig { max_wait: Duration::from_millis(10), preload_models: None, ..Default::default() },
     )
     .unwrap();
     let mut rng = Rng::new(31);
@@ -164,6 +164,7 @@ fn served_outputs_match_direct_engine_execution() {
         ServeConfig {
             max_wait: Duration::from_millis(2),
             preload_models: Some(vec!["gpgan".into()]),
+            ..Default::default()
         },
     )
     .unwrap();
@@ -180,7 +181,7 @@ fn tdc_route_is_the_reference_anchor() {
     // A/B the fast route against the bit-exact TDC route per model
     let coord = Coordinator::start_native(
         tiny_cfg(),
-        ServeConfig { max_wait: Duration::from_millis(2), preload_models: None },
+        ServeConfig { max_wait: Duration::from_millis(2), preload_models: None, ..Default::default() },
     )
     .unwrap();
     let mut rng = Rng::new(13);
@@ -206,7 +207,7 @@ fn f32_tier_serves_end_to_end_and_tracks_the_reference() {
             models: Some(vec!["dcgan".into()]),
             ..tiny_cfg()
         },
-        ServeConfig { max_wait: Duration::from_millis(2), preload_models: None },
+        ServeConfig { max_wait: Duration::from_millis(2), preload_models: None, ..Default::default() },
     )
     .unwrap();
     let mut rng = Rng::new(23);
@@ -226,7 +227,7 @@ fn f32_tier_serves_end_to_end_and_tracks_the_reference() {
 fn coordinator_rejects_invalid_native_requests() {
     let coord = Coordinator::start_native(
         NativeConfig { models: Some(vec!["dcgan".into()]), ..tiny_cfg() },
-        ServeConfig { max_wait: Duration::from_millis(1), preload_models: None },
+        ServeConfig { max_wait: Duration::from_millis(1), preload_models: None, ..Default::default() },
     )
     .unwrap();
     assert!(coord.submit("nope", "winograd", vec![0.0; 4]).is_err());

@@ -1,0 +1,214 @@
+//! Overload and shed behaviour of the serving coordinator under real
+//! concurrency: submitters racing past the admission gate on the native
+//! backend. These pin PR 7's overload contract:
+//!   * the per-route queue is **bounded** — depth never exceeds
+//!     `queue_cap` no matter how hard submitters push (the old unbounded
+//!     channel's OOM-shaped growth is structurally gone);
+//!   * every shed is **typed** — clients observe exactly as many
+//!     `ServeError::Rejected` responses as the coordinator counts;
+//!   * admitted requests are **served exactly** — outputs bitwise-equal
+//!     to a serial direct-engine reference, regardless of how batches
+//!     formed under pressure;
+//!   * shutdown is a **drain, not a shed** — admitted requests still get
+//!     answers.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+use wingan::coordinator::{Coordinator, Rejected, ServeConfig, ServeError};
+use wingan::engine::{NativeConfig, NativeRuntime};
+use wingan::gan::zoo::Scale;
+use wingan::util::bin;
+use wingan::util::prng::Rng;
+
+fn tiny_native() -> NativeConfig {
+    NativeConfig {
+        scale: Scale::Tiny,
+        buckets: vec![1, 2, 4],
+        workers: 2,
+        seed: 11,
+        models: Some(vec!["dcgan".into()]),
+        ..Default::default()
+    }
+}
+
+/// Deterministic per-(thread, request) input so reference outputs can be
+/// recomputed independently of scheduling.
+fn input_for(thread: usize, i: usize, len: usize) -> Vec<f32> {
+    Rng::new(0x5EED ^ ((thread as u64) << 32) ^ i as u64).normal_vec_f32(len)
+}
+
+#[test]
+fn concurrent_overload_sheds_typed_and_conserves() {
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 24;
+    const CAP: usize = 2;
+
+    let coord = Arc::new(
+        Coordinator::start_native(
+            tiny_native(),
+            ServeConfig { queue_cap: CAP, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let input_len = coord.router().route("dcgan", "winograd").unwrap().sample_input_len;
+
+    // submitters race a queue of capacity 2 with a tight burst: channel
+    // sends are microseconds, generator batches are not, so the gate must
+    // reject most of the burst — and every outcome must be typed
+    let mut joins = Vec::new();
+    for t in 0..THREADS {
+        let coord = coord.clone();
+        joins.push(thread::spawn(move || {
+            let mut pending = Vec::new();
+            let mut shed = 0u64;
+            for i in 0..PER_THREAD {
+                match coord.submit("dcgan", "winograd", input_for(t, i, input_len)) {
+                    Ok(rx) => pending.push((i, rx)),
+                    Err(e) => {
+                        assert!(e.is_shed(), "submit failed non-shed: {e}");
+                        assert!(
+                            matches!(e, ServeError::Rejected(Rejected::QueueFull { cap: CAP, .. })),
+                            "wrong shed type: {e}"
+                        );
+                        shed += 1;
+                    }
+                }
+            }
+            let mut served = Vec::new();
+            for (i, rx) in pending {
+                // no SLO configured: every admitted request must be served
+                let resp = rx.recv().unwrap().unwrap();
+                served.push((i, resp.output));
+            }
+            (served, shed)
+        }));
+    }
+    let results: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let served_total: u64 = results.iter().map(|(s, _)| s.len() as u64).sum();
+    let shed_total: u64 = results.iter().map(|(_, s)| *s).sum();
+
+    // conservation: every submission either served or typed-shed
+    assert_eq!(served_total + shed_total, (THREADS * PER_THREAD) as u64);
+    assert!(shed_total > 0, "a 96-request burst against a 2-deep queue must shed");
+    assert!(served_total > 0, "the engine must still serve under overload");
+
+    let m = coord.metrics();
+    assert_eq!(m.responses, served_total, "coordinator served-count matches clients");
+    assert_eq!(m.shed_queue_full, shed_total, "every client-observed shed is counted");
+    assert_eq!(m.shed_deadline, 0, "no SLO configured: no deadline sheds");
+    let r = &m.routes["dcgan/winograd"];
+    assert_eq!(r.admitted, served_total);
+    assert_eq!(r.completed, served_total);
+    assert_eq!(r.shed_queue_full, shed_total);
+    assert!(r.peak_depth <= CAP, "bounded queue: peak {} > cap {CAP}", r.peak_depth);
+    assert_eq!(r.depth, 0, "drained: nothing left in flight");
+
+    // bitwise check: whatever batches formed under pressure, each served
+    // output equals a serial single-sample reference execution (the engine
+    // is bit-invariant to batch schedule)
+    let reference = NativeRuntime::build(&tiny_native());
+    for (t, (served, _)) in results.iter().enumerate() {
+        for (i, output) in served {
+            let want = reference.execute("dcgan_winograd_b1", &input_for(t, *i, input_len)).unwrap();
+            assert_eq!(
+                bin::max_abs_diff(output, &want),
+                0.0,
+                "thread {t} request {i}: served output diverges from serial reference"
+            );
+        }
+    }
+    Arc::try_unwrap(coord).ok().expect("all clients joined").shutdown();
+}
+
+#[test]
+fn submit_bound_is_an_oom_regression_gate() {
+    // regression: `Coordinator::submit` used to push into an unbounded
+    // channel — overload grew memory without limit. Now a single-threaded
+    // flood sheds typed errors while in-flight depth stays pinned at the
+    // configured bound.
+    const CAP: usize = 8;
+    const FLOOD: usize = 5_000;
+    let coord = Coordinator::start_native(
+        tiny_native(),
+        ServeConfig { queue_cap: CAP, ..Default::default() },
+    )
+    .unwrap();
+    let input_len = coord.router().route("dcgan", "winograd").unwrap().sample_input_len;
+    let input = input_for(0, 0, input_len);
+
+    let mut pending = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..FLOOD {
+        match coord.submit("dcgan", "winograd", input.clone()) {
+            Ok(rx) => pending.push(rx),
+            Err(ServeError::Rejected(Rejected::QueueFull { depth, cap })) => {
+                assert_eq!(cap, CAP);
+                assert!(depth >= cap, "queue-full shed below capacity: {depth}/{cap}");
+                shed += 1;
+            }
+            Err(e) => panic!("flood produced a non-shed error: {e}"),
+        }
+    }
+    assert!(shed > 0, "a {FLOOD}-request flood must hit the {CAP}-slot bound");
+    assert_eq!(pending.len() as u64 + shed, FLOOD as u64);
+    for rx in pending {
+        assert!(rx.recv().unwrap().is_ok(), "admitted requests all complete");
+    }
+    let m = coord.metrics();
+    let r = &m.routes["dcgan/winograd"];
+    assert!(r.peak_depth <= CAP, "peak depth {} breached the bound {CAP}", r.peak_depth);
+    assert_eq!(m.shed_queue_full, shed);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_admitted_requests() {
+    // shutdown is a drain, not a shed: requests admitted before the
+    // shutdown signal still get real answers from the flush
+    let coord = Coordinator::start_native(
+        tiny_native(),
+        ServeConfig { queue_cap: 16, ..Default::default() },
+    )
+    .unwrap();
+    let input_len = coord.router().route("dcgan", "winograd").unwrap().sample_input_len;
+    let pending: Vec<_> = (0..4)
+        .map(|i| coord.submit("dcgan", "winograd", input_for(9, i, input_len)).unwrap())
+        .collect();
+    coord.shutdown();
+    for rx in pending {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(resp.output.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn expired_slo_comes_back_as_a_typed_reply() {
+    // a zero-budget SLO is expired by the time the engine sees it: the
+    // reply channel must carry the typed verdict, the shed must be
+    // counted, and the gate slot must come back (later submits succeed)
+    let coord = Coordinator::start_native(
+        tiny_native(),
+        ServeConfig { queue_cap: 4, ..Default::default() },
+    )
+    .unwrap();
+    let input_len = coord.router().route("dcgan", "winograd").unwrap().sample_input_len;
+    let input = input_for(3, 0, input_len);
+
+    let rx = coord
+        .submit_with_deadline("dcgan", "winograd", input.clone(), Some(Duration::ZERO))
+        .unwrap();
+    match rx.recv().unwrap() {
+        Err(ServeError::Rejected(Rejected::DeadlineInfeasible { .. })) => {}
+        other => panic!("expected a typed deadline shed, got {other:?}"),
+    }
+    let m = coord.metrics();
+    assert_eq!(m.shed_deadline, 1);
+    assert_eq!(m.routes["dcgan/winograd"].shed_deadline, 1);
+
+    // the slot came back: a best-effort request on the same route serves
+    let resp = coord.generate("dcgan", "winograd", input).unwrap();
+    assert!(resp.output.iter().all(|v| v.is_finite()));
+    assert_eq!(coord.metrics().routes["dcgan/winograd"].depth, 0);
+    coord.shutdown();
+}

@@ -6,14 +6,16 @@
 //!   * the Winograd dataflow through line buffers == standard DeConv
 //!   * sparse engine's skipped work == the structural zero count
 //!   * the cycle model's invariants (monotonicity, bandwidth-boundedness)
-//!   * batcher conservation (no loss, no dup, FIFO)
+//!   * batcher conservation (no loss, no dup, FIFO) — for both the bucket
+//!     baseline and the continuous scheduler under arbitrary
+//!     admit/poll/observe interleavings with typed sheds
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use wingan::accel::functional::{run_tdc_deconv, run_winograd_deconv};
 use wingan::accel::{simulate_layer, AccelConfig};
-use wingan::coordinator::batcher::{BatchPolicy, DynamicBatcher};
-use wingan::coordinator::request::GenRequest;
+use wingan::coordinator::batcher::{BatchPolicy, ContinuousBatcher, DynamicBatcher};
+use wingan::coordinator::request::{GenRequest, Rejected};
 use wingan::engine::{self, Engine, ModelPlan, PlanOptions, Planner, Select};
 use wingan::gan::workload::{layer_mults, Method};
 use wingan::gan::zoo::{self, Activation, Gan, Kind, Layer, Scale};
@@ -449,6 +451,7 @@ fn prop_batcher_conserves_requests_in_fifo_order() {
                     method: "w".into(),
                     input: Vec::new(),
                     enqueued: t,
+                    deadline: None,
                 });
                 while let Some(batch) = b.poll(t) {
                     if batch.requests.len() > batch.bucket {
@@ -466,6 +469,213 @@ fn prop_batcher_conserves_requests_in_fifo_order() {
             Ok(())
         },
     );
+}
+
+/// One scripted step against a per-route set of continuous batchers.
+#[derive(Debug, Clone)]
+enum ContOp {
+    /// submit a request to `route` with an optional SLO budget (ms)
+    Admit { route: usize, budget_ms: Option<u64> },
+    /// engine polls `route` for a dispatch
+    Poll { route: usize },
+    /// engine reports a batch service time for `route`
+    Observe { route: usize, service_ms: u64 },
+}
+
+/// A randomized continuous-batching scenario: shared policy knobs plus a
+/// time-stamped op script (offsets in ms from a mock epoch, monotone).
+#[derive(Debug)]
+struct ContCase {
+    buckets: Vec<usize>,
+    max_wait: Duration,
+    queue_cap: usize,
+    n_routes: usize,
+    ops: Vec<(u64, ContOp)>,
+}
+
+fn gen_cont_case(rng: &mut Rng) -> ContCase {
+    let buckets = match rng.below(3) {
+        0 => vec![1, 4, 8],
+        1 => vec![2, 16],
+        _ => vec![1],
+    };
+    // all three hold regimes: work-conserving, finite window, never-partial
+    let max_wait = match rng.below(3) {
+        0 => Duration::ZERO,
+        1 => Duration::from_millis(1),
+        _ => Duration::MAX,
+    };
+    let queue_cap = rng.int_in(1, 6);
+    let n_routes = rng.int_in(1, 3);
+    let n_ops = rng.int_in(1, 96);
+    let mut t = 0u64;
+    let mut ops = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        t += rng.below(3) as u64;
+        let route = rng.below(n_routes);
+        let op = match rng.below(8) {
+            0 => ContOp::Poll { route },
+            1 => ContOp::Observe { route, service_ms: rng.int_in(1, 20) as u64 },
+            // admit-heavy mix so small queue_caps actually overflow; a
+            // 0ms budget is an already-expired deadline at admission
+            _ => ContOp::Admit {
+                route,
+                budget_ms: if rng.below(2) == 0 { Some(rng.below(10) as u64) } else { None },
+            },
+        };
+        ops.push((t, op));
+    }
+    ContCase { buckets, max_wait, queue_cap, n_routes, ops }
+}
+
+#[test]
+fn prop_continuous_batcher_conserves_requests() {
+    forall("continuous batcher conservation", 64, 0xC0117, gen_cont_case, |case| {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut batchers: Vec<ContinuousBatcher> = (0..case.n_routes)
+            .map(|_| {
+                ContinuousBatcher::new(
+                    BatchPolicy::new(case.buckets.clone(), case.max_wait),
+                    case.queue_cap,
+                )
+            })
+            .collect();
+        // per-route FIFO of admitted-but-undecided ids, and the single
+        // recorded outcome per issued id
+        let mut pending: Vec<Vec<u64>> = vec![Vec::new(); case.n_routes];
+        let mut outcome: std::collections::BTreeMap<u64, &'static str> =
+            std::collections::BTreeMap::new();
+        let mut next_id = 0u64;
+        let mut decide = |id: u64, what: &'static str| -> Result<(), String> {
+            match outcome.insert(id, what) {
+                None => Ok(()),
+                Some(prev) => Err(format!("request {id} decided twice: {prev} then {what}")),
+            }
+        };
+
+        let width = *case.buckets.last().unwrap();
+        let consume = |route: usize,
+                           pending: &mut Vec<Vec<u64>>,
+                           batch: &wingan::coordinator::ReadyBatch,
+                           decide: &mut dyn FnMut(u64, &'static str) -> Result<(), String>,
+                           what: &'static str|
+         -> Result<(), String> {
+            if batch.requests.is_empty() || batch.requests.len() > batch.bucket {
+                return Err(format!(
+                    "illegal batch: {} requests in bucket {}",
+                    batch.requests.len(),
+                    batch.bucket
+                ));
+            }
+            if !case.buckets.contains(&batch.bucket) || batch.requests.len() > width {
+                return Err(format!("unadvertised shape: bucket {}", batch.bucket));
+            }
+            let model = format!("route{route}");
+            if batch.requests.iter().any(|r| r.model != model) {
+                return Err(format!("route mixing in a {model} batch"));
+            }
+            let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+            if pending[route].len() < ids.len() || pending[route][..ids.len()] != ids[..] {
+                return Err(format!(
+                    "batch {ids:?} is not the FIFO prefix of pending {:?}",
+                    pending[route]
+                ));
+            }
+            pending[route].drain(..ids.len());
+            for id in ids {
+                decide(id, what)?;
+            }
+            Ok(())
+        };
+
+        for (ms, op) in &case.ops {
+            let now = *ms;
+            match op {
+                ContOp::Admit { route, budget_ms } => {
+                    let id = next_id;
+                    next_id += 1;
+                    let req = GenRequest {
+                        id,
+                        model: format!("route{route}"),
+                        method: "w".into(),
+                        input: Vec::new(),
+                        enqueued: at(now),
+                        deadline: budget_ms.map(|b| at(now + b)),
+                    };
+                    match batchers[*route].admit(req, at(now)) {
+                        Ok(()) => pending[*route].push(id),
+                        Err((back, rej)) => {
+                            if back.id != id {
+                                return Err(format!(
+                                    "rejection returned request {} for submit {id}",
+                                    back.id
+                                ));
+                            }
+                            match rej {
+                                Rejected::QueueFull { depth, cap } => {
+                                    if cap != case.queue_cap || depth < cap {
+                                        return Err(format!(
+                                            "queue-full shed below capacity: {depth}/{cap}"
+                                        ));
+                                    }
+                                }
+                                Rejected::DeadlineInfeasible { .. } => {
+                                    if budget_ms.is_none() {
+                                        return Err(format!(
+                                            "best-effort request {id} deadline-shed"
+                                        ));
+                                    }
+                                }
+                            }
+                            decide(id, "rejected")?;
+                        }
+                    }
+                }
+                ContOp::Poll { route } => {
+                    let d = batchers[*route].poll(at(now));
+                    for (r, rej) in &d.shed {
+                        if !matches!(rej, Rejected::DeadlineInfeasible { .. }) {
+                            return Err(format!("dispatch shed with verdict {rej:?}"));
+                        }
+                        match pending[*route].iter().position(|&id| id == r.id) {
+                            Some(i) => {
+                                pending[*route].remove(i);
+                            }
+                            None => return Err(format!("shed unknown request {}", r.id)),
+                        }
+                        decide(r.id, "shed")?;
+                    }
+                    if let Some(batch) = &d.batch {
+                        consume(*route, &mut pending, batch, &mut decide, "batched")?;
+                    }
+                }
+                ContOp::Observe { route, service_ms } => {
+                    batchers[*route].observe(Duration::from_millis(*service_ms));
+                }
+            }
+        }
+
+        // stream end: flush drains every admitted survivor, FIFO, no sheds
+        for route in 0..case.n_routes {
+            while let Some(batch) = batchers[route].flush() {
+                consume(route, &mut pending, &batch, &mut decide, "flushed")?;
+            }
+            if !pending[route].is_empty() {
+                return Err(format!("route{route} lost requests: {:?}", pending[route]));
+            }
+            if batchers[route].queued() != 0 {
+                return Err(format!("route{route} still holds work after flush"));
+            }
+        }
+        // exactly-once: every issued id has exactly one recorded fate
+        if outcome.len() as u64 != next_id {
+            let missing: Vec<u64> =
+                (0..next_id).filter(|id| !outcome.contains_key(id)).collect();
+            return Err(format!("requests with no fate: {missing:?}"));
+        }
+        Ok(())
+    });
 }
 
 /// Random mini-generator: 1-3 chained deconv layers drawn from the paper's

@@ -137,6 +137,7 @@ fn coordinator_serves_and_matches_direct_execution() {
         ServeConfig {
             max_wait: Duration::from_millis(2),
             preload_models: Some(vec!["dcgan".into()]),
+            ..Default::default()
         },
     ) {
         Ok(c) => c,
@@ -166,7 +167,7 @@ fn coordinator_rejects_invalid_requests() {
     let manifest = Manifest::load(&dir).unwrap();
     let coord = match Coordinator::start(
         manifest,
-        ServeConfig { max_wait: Duration::from_millis(1), preload_models: Some(vec![]) },
+        ServeConfig { max_wait: Duration::from_millis(1), preload_models: Some(vec![]), ..Default::default() },
     ) {
         Ok(c) => c,
         Err(e) => {
