@@ -156,6 +156,9 @@ pub struct PlanCacheStats {
     pub load_failures: u64,
     /// freshly compiled plans published back into the store
     pub published: u64,
+    /// broken artifacts moved aside to `<file>.quarantined` instead of
+    /// being left in place to fail on every boot
+    pub quarantined: u64,
 }
 
 /// Write `bytes` to `path` atomically: parent directories are created, the
@@ -292,6 +295,33 @@ impl PlanStore {
             });
         }
         Ok(AnyPlan::from(codec::decode(&bytes)?.payload))
+    }
+
+    /// Move `key`'s artifact aside to `<file>.quarantined` (atomic
+    /// same-directory rename, replacing any previous quarantine for the
+    /// slot) and log why. Called when an artifact **exists but is
+    /// unusable** — corrupt bytes, stale format, a plan that no longer
+    /// matches the zoo — so the broken file stops failing on every boot
+    /// yet stays on disk for post-mortem instead of being silently
+    /// overwritten by the fallback republish. Returns `true` if a file was
+    /// actually moved. The cache entry (if any) is dropped and the publish
+    /// generation bumped, exactly like a publish.
+    pub fn quarantine(&self, key: &PlanKey, reason: &str) -> bool {
+        let path = self.path(key);
+        let mut quarantined = path.clone();
+        quarantined.set_file_name(format!("{}.quarantined", key.file_name()));
+        let moved = std::fs::rename(&path, &quarantined).is_ok();
+        if moved {
+            eprintln!(
+                "plan store: quarantined {} -> {} ({reason})",
+                path.display(),
+                quarantined.display()
+            );
+            let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+            cache.plans.remove(key);
+            cache.generation += 1;
+        }
+        moved
     }
 
     /// Publish a compiled plan under `key`: encode, write to a temporary
@@ -490,6 +520,28 @@ mod tests {
             .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
             .collect();
         assert!(entries.iter().all(|n| !n.contains(".tmp.")), "{entries:?}");
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn quarantine_moves_the_artifact_aside_and_invalidates_the_cache() {
+        let store = temp_store("quarantine");
+        let k = key(Precision::F64);
+        store.publish(&k, &plan()).unwrap();
+        store.load(&k).unwrap();
+        assert_eq!(store.cached(), 1);
+        assert!(store.quarantine(&k, "checksum mismatch in test"));
+        assert!(!store.path(&k).exists(), "original slot must be empty");
+        let q = store.path(&k).with_file_name("dcgan.winograd.f64.plan.quarantined");
+        assert!(q.exists(), "quarantined file must exist at {q:?}");
+        assert_eq!(store.cached(), 0, "quarantine must drop the cached plan");
+        assert!(matches!(store.load(&k), Err(ArtifactError::Missing { .. })));
+        // quarantining an already-empty slot is a quiet no-op
+        assert!(!store.quarantine(&k, "again"));
+        // a second quarantine after a republish replaces the parked file
+        store.publish(&k, &plan()).unwrap();
+        assert!(store.quarantine(&k, "second"));
+        assert!(q.exists());
         let _ = std::fs::remove_dir_all(store.root());
     }
 

@@ -1,0 +1,367 @@
+//! `wingan chaos` — deterministic fault-injection soak for the
+//! fault-isolated serving tier.
+//!
+//! The harness proves the containment story end to end, the way a unit
+//! test cannot: it drives a real supervised native coordinator with a
+//! seeded open-loop arrival schedule **twice** — once fault-free (the
+//! baseline), once with a [`crate::faultinject::FaultPlane`] injecting
+//! panics into batch execution and worker chunks — and asserts the three
+//! properties the serving tier promises under faults:
+//!
+//! 1. **Conservation** — every submitted request gets exactly one fate
+//!    (response, typed shed, or typed crash error). A request that never
+//!    hears back, or hears back twice, fails the run. A 30-second
+//!    per-request fate timeout doubles as the deadlock detector.
+//! 2. **Bitwise isolation** — every request that completes in *both*
+//!    runs returns bitwise-identical bytes. Containment bisects poisoned
+//!    batches and re-executes the survivors, and the engine's
+//!    batch-composition invariance means those re-executions must not
+//!    perturb a single bit of anyone else's output.
+//! 3. **Bounded recovery** — injected panic storms kill engine
+//!    incarnations, the supervisor restarts them (restart count > 0 under
+//!    the built-in spec), and every route is Healthy again by the end of
+//!    the run. The process itself never exits.
+//!
+//! The outcome lands in a [`crate::benchlib::BenchReport`]
+//! (`BENCH_pr8.json` by default) so CI's bench-trajectory artifact
+//! records the soak machine-readably, next to the perf reports.
+
+use crate::benchlib::BenchReport;
+use crate::coordinator::{Coordinator, Metrics, ServeConfig, SupervisorConfig};
+use crate::engine::serve::NativeConfig;
+use crate::faultinject::FaultPlane;
+use crate::gan::zoo::Scale;
+use crate::loadgen::{ArrivalPlan, TrafficProfile};
+use anyhow::{ensure, Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Chaos soak options (see `wingan chaos --help` text in `main.rs`).
+#[derive(Clone, Debug)]
+pub struct ChaosOptions {
+    /// zoo scale the engines compile at (tiny default: fast, CI-friendly)
+    pub scale: Scale,
+    /// requests offered per run (each spec runs the schedule twice:
+    /// baseline + faulted)
+    pub requests: usize,
+    /// offered arrival rate, req/s (moderate by default — chaos measures
+    /// fates under faults, not admission control under overload)
+    pub rate: f64,
+    /// per-route admission bound
+    pub queue_cap: usize,
+    /// schedule + fault seed (same seed → same arrivals, same faults)
+    pub seed: u64,
+    /// worker threads (0 = env/core default)
+    pub workers: usize,
+    /// fault spec override; `None` = [`ChaosOptions::default_spec`]
+    pub spec: Option<String>,
+    /// where to write the machine-readable report
+    pub out: PathBuf,
+}
+
+impl Default for ChaosOptions {
+    fn default() -> Self {
+        ChaosOptions {
+            scale: Scale::Tiny,
+            requests: 600,
+            rate: 300.0,
+            queue_cap: 512,
+            seed: 11,
+            workers: 0,
+            spec: None,
+            out: PathBuf::from("BENCH_pr8.json"),
+        }
+    }
+}
+
+impl ChaosOptions {
+    /// The short configuration behind `--quick`: enough traffic to form
+    /// real batches and ride out a storm, small enough for a CI smoke
+    /// step.
+    pub fn quick() -> ChaosOptions {
+        ChaosOptions { requests: 240, ..Default::default() }
+    }
+
+    /// The built-in fault spec: a deterministic four-panic burst at the
+    /// front (guaranteed to storm at least one route's engine, by
+    /// pigeonhole over the three-route mix, so recovery is always
+    /// exercised), a ~1% background panic rate over batch execution for
+    /// the rest of the run, and a capped dose of worker-chunk panics so
+    /// the pool's re-raise path is on the menu too.
+    pub fn default_spec(&self) -> String {
+        format!(
+            "seed={};batch_exec:panic*4@1;batch_exec:panic@0.01;worker_chunk:panic*2@0.01",
+            self.seed
+        )
+    }
+
+    /// Supervision tuned for a short soak: storms trip after two
+    /// contained panics, restarts back off in milliseconds (not seconds),
+    /// probation is short enough to reach Healthy before the final health
+    /// check, and the breaker's restart budget is effectively unbounded —
+    /// the soak asserts *recovery*, and the breaker's own behaviour has
+    /// dedicated unit tests.
+    fn supervisor(&self) -> SupervisorConfig {
+        SupervisorConfig {
+            watchdog: Duration::from_secs(10),
+            backoff_base: Duration::from_millis(2),
+            backoff_max: Duration::from_millis(50),
+            max_restarts: 1000,
+            restart_window: Duration::from_secs(1),
+            breaker_cooldown: Duration::from_millis(200),
+            probation: Duration::from_millis(100),
+            storm_panics: 2,
+            storm_window: Duration::from_secs(5),
+        }
+    }
+}
+
+/// What one replay of the schedule observed.
+struct Replay {
+    /// per-arrival-index output; `None` = typed shed or crash casualty
+    outputs: Vec<Option<Vec<f32>>>,
+    completed: u64,
+    /// typed admission/deadline/unhealthy sheds (submit + reply side)
+    shed: u64,
+    /// typed crash casualties ([`crate::coordinator::ServeError::Crashed`]
+    /// / `Execution` / `EngineShutdown`)
+    casualties: u64,
+    /// lifetime engine restarts summed over routes
+    restarts: u64,
+    /// every route Healthy at the end of the run
+    healthy: bool,
+    metrics: Metrics,
+}
+
+fn native_cfg(opts: &ChaosOptions, profile: &TrafficProfile) -> NativeConfig {
+    NativeConfig {
+        scale: opts.scale,
+        workers: opts.workers,
+        models: Some(profile.models()),
+        ..Default::default()
+    }
+}
+
+/// Replay the arrival plan against one freshly started coordinator and
+/// record every request's fate. Consumes (and shuts down) the
+/// coordinator; after all fates are in, polls route health for up to
+/// three seconds so in-flight restarts can finish probation.
+fn replay(
+    coord: Coordinator,
+    profile: &TrafficProfile,
+    plan: &ArrivalPlan,
+    label: &str,
+) -> Result<Replay> {
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(plan.arrivals.len());
+    let mut shed = 0u64;
+    for (i, a) in plan.arrivals.iter().enumerate() {
+        let target = t0 + a.offset;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let r = &profile.routes[a.route];
+        match coord.submit(&r.model, &r.method, a.input.clone()) {
+            Ok(rx) => pending.push((i, rx)),
+            Err(e) if e.is_shed() => shed += 1,
+            Err(e) => anyhow::bail!("{label}: submit failed hard (not a typed shed): {e}"),
+        }
+    }
+
+    let mut outputs: Vec<Option<Vec<f32>>> = vec![None; plan.arrivals.len()];
+    let mut completed = 0u64;
+    let mut casualties = 0u64;
+    for (i, rx) in pending {
+        // a generous per-fate timeout is the deadlock detector: if
+        // containment or supervision ever wedged, the run fails here
+        // instead of hanging CI
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(resp)) => {
+                outputs[i] = Some(resp.output);
+                completed += 1;
+            }
+            Ok(Err(e)) if e.is_shed() => shed += 1,
+            Ok(Err(crate::coordinator::ServeError::Crashed(_)))
+            | Ok(Err(crate::coordinator::ServeError::Execution(_)))
+            | Ok(Err(crate::coordinator::ServeError::EngineShutdown)) => casualties += 1,
+            Ok(Err(e)) => anyhow::bail!("{label}: request {i} failed unexpectedly: {e}"),
+            Err(RecvTimeoutError::Timeout) => {
+                anyhow::bail!("{label}: request {i} got no fate within 30s (deadlock?)")
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("{label}: request {i} lost — reply channel dropped without a fate")
+            }
+        }
+    }
+
+    // conservation: every offered request has exactly one recorded fate
+    let offered = plan.arrivals.len() as u64;
+    ensure!(
+        completed + shed + casualties == offered,
+        "{label}: lost requests — {completed} completed + {shed} shed + \
+         {casualties} crashed != {offered} offered"
+    );
+
+    // bounded recovery: give restarted incarnations time to clear
+    // probation, then read the final verdict
+    let settle = Instant::now();
+    let mut health = coord.health();
+    while !health.all_healthy() && settle.elapsed() < Duration::from_secs(3) {
+        std::thread::sleep(Duration::from_millis(20));
+        health = coord.health();
+    }
+    let restarts: u64 = health.routes.values().map(|r| r.restarts).sum();
+    let healthy = health.all_healthy();
+    let metrics = coord.metrics();
+    coord.shutdown();
+    Ok(Replay { outputs, completed, shed, casualties, restarts, healthy, metrics })
+}
+
+/// Run the full soak: baseline replay, faulted replay of the identical
+/// schedule, then the conservation / bitwise / recovery assertions and
+/// the machine-readable report. Any violated property returns an error
+/// (and a non-zero exit from `wingan chaos`).
+pub fn run(opts: &ChaosOptions) -> Result<()> {
+    let profile = TrafficProfile::standard();
+    let spec = opts.spec.clone().unwrap_or_else(|| opts.default_spec());
+    let plane =
+        Arc::new(FaultPlane::parse(&spec).map_err(|e| anyhow::anyhow!("bad fault spec: {e}"))?);
+    println!(
+        "chaos: {} requests at {:.0} req/s over {} route(s), seed {}, spec '{spec}'",
+        opts.requests,
+        opts.rate,
+        profile.routes.len(),
+        opts.seed
+    );
+
+    let serve = ServeConfig {
+        queue_cap: opts.queue_cap,
+        supervisor: opts.supervisor(),
+        ..Default::default()
+    };
+
+    // baseline: same schedule, no faults — the bitwise reference
+    let coord = Coordinator::start_native(native_cfg(opts, &profile), serve.clone())?;
+    let input_lens: Vec<usize> = profile
+        .routes
+        .iter()
+        .map(|r| {
+            coord
+                .router()
+                .route(&r.model, &r.method)
+                .map(|route| route.sample_input_len)
+                .map_err(anyhow::Error::msg)
+        })
+        .collect::<Result<_>>()?;
+    let plan = ArrivalPlan::generate(&profile, &input_lens, opts.requests, opts.rate, opts.seed);
+    let base = replay(coord, &profile, &plan, "baseline")?;
+    ensure!(
+        base.casualties == 0,
+        "baseline run crashed {} request(s) with no faults injected",
+        base.casualties
+    );
+    println!(
+        "chaos: baseline — {} completed, {} shed, every request accounted for",
+        base.completed, base.shed
+    );
+
+    // faulted: identical schedule, fault plane installed
+    let faulted_serve = ServeConfig { faults: Some(plane.clone()), ..serve };
+    let coord = Coordinator::start_native(native_cfg(opts, &profile), faulted_serve)?;
+    let fault = replay(coord, &profile, &plan, "faulted")?;
+    println!(
+        "chaos: faulted  — {} completed, {} shed, {} crashed ({} fault(s) fired)",
+        fault.completed,
+        fault.shed,
+        fault.casualties,
+        plane.total_fired()
+    );
+    println!("chaos: {}", plane.summary());
+
+    // bitwise isolation: everything that completed in both runs must
+    // match exactly — containment's bisected re-executions never perturb
+    // a surviving batch-mate's bytes
+    let mut compared = 0u64;
+    for (i, (b, f)) in base.outputs.iter().zip(&fault.outputs).enumerate() {
+        if let (Some(b), Some(f)) = (b, f) {
+            ensure!(
+                b == f,
+                "request {i} diverged bitwise between the baseline and faulted runs"
+            );
+            compared += 1;
+        }
+    }
+    ensure!(compared > 0, "no request completed in both runs; soak proved nothing");
+
+    // bounded recovery: the storm killed at least one incarnation, the
+    // supervisor brought it back, and the final verdict is Healthy
+    ensure!(fault.healthy, "route(s) still unhealthy after the recovery settle window");
+    if opts.spec.is_none() {
+        // the built-in spec guarantees a storm; a user-supplied spec may
+        // be delay-only, so these floors only apply to the default
+        ensure!(
+            fault.metrics.panics_contained >= 1,
+            "built-in spec fired no contained panics"
+        );
+        ensure!(fault.restarts >= 1, "storm never restarted an engine incarnation");
+    }
+
+    let mut rep = BenchReport::new("chaos");
+    rep.metric("offered", plan.arrivals.len() as f64);
+    rep.metric("baseline_completed", base.completed as f64);
+    rep.metric("faulted_completed", fault.completed as f64);
+    rep.metric("faulted_shed", fault.shed as f64);
+    rep.metric("faulted_crashed", fault.casualties as f64);
+    rep.metric("faults_fired", plane.total_fired() as f64);
+    rep.metric("panics_contained", fault.metrics.panics_contained as f64);
+    rep.metric("bisection_retries", fault.metrics.bisection_retries as f64);
+    rep.metric("requests_quarantined", fault.metrics.requests_quarantined as f64);
+    rep.metric("engine_restarts", fault.restarts as f64);
+    rep.metric("bitwise_compared", compared as f64);
+    rep.metric("bitwise_mismatches", 0.0); // ensured above
+    rep.metric("lost_requests", 0.0); // conservation ensured per replay
+    rep.write(&opts.out).with_context(|| format!("writing {}", opts.out.display()))?;
+    println!(
+        "chaos: PASS — conservation held twice, {compared} outputs bitwise-identical, \
+         {} restart(s), wrote {}",
+        fault.restarts,
+        opts.out.display()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_parses_and_targets_the_serving_sites() {
+        let opts = ChaosOptions::default();
+        let plane = FaultPlane::parse(&opts.default_spec()).expect("built-in spec must parse");
+        // the burst rule is first: four guaranteed batch panics
+        assert_eq!(
+            plane.check(crate::faultinject::FaultSite::BatchExec),
+            Some(crate::faultinject::FaultAction::Panic)
+        );
+    }
+
+    #[test]
+    fn quick_profile_is_smaller_but_same_shape() {
+        let q = ChaosOptions::quick();
+        let d = ChaosOptions::default();
+        assert!(q.requests < d.requests);
+        assert_eq!(q.seed, d.seed, "quick must stay on the replayable default seed");
+        assert_eq!(q.out, d.out);
+    }
+
+    #[test]
+    fn soak_supervision_is_tuned_for_fast_recovery() {
+        let s = ChaosOptions::default().supervisor();
+        assert_eq!(s.storm_panics, 2, "the four-panic burst must storm at least one route");
+        assert!(s.probation < Duration::from_secs(1), "probation must clear inside the settle");
+        assert!(s.max_restarts >= 100, "the soak asserts recovery, not breaker trips");
+    }
+}

@@ -118,6 +118,15 @@ pub struct RouteMetrics {
     pub shed_queue_full: u64,
     /// typed sheds: deadline infeasible at admission or expired in queue
     pub shed_deadline: u64,
+    /// typed sheds: route circuit breaker open (engine restart storm)
+    pub shed_unhealthy: u64,
+    /// engine panics contained at this route's batch boundary
+    pub panics_contained: u64,
+    /// requests failed with [`crate::coordinator::ServeError::Crashed`]
+    /// after bisection blamed them for a contained panic
+    pub requests_quarantined: u64,
+    /// sub-batch retries performed while bisecting a crashed batch
+    pub bisection_retries: u64,
     /// batches dispatched for this route
     pub batches: u64,
     /// queued-but-undispatched requests right now (gauge)
@@ -132,9 +141,21 @@ impl RouteMetrics {
     /// One compact report line for this route.
     pub fn summary(&self, route: &str) -> String {
         let (p50, p99, p999) = self.e2e.tail();
+        let faults = if self.panics_contained + self.requests_quarantined + self.shed_unhealthy > 0
+        {
+            format!(
+                " panics={} quarantined={} bisections={} shed_unhealthy={}",
+                self.panics_contained,
+                self.requests_quarantined,
+                self.bisection_retries,
+                self.shed_unhealthy,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "route {route}: depth={} peak={} admitted={} completed={} \
-             shed_full={} shed_slo={} batches={} p50={:.3}ms p99={:.3}ms p999={:.3}ms",
+             shed_full={} shed_slo={} batches={} p50={:.3}ms p99={:.3}ms p999={:.3}ms{faults}",
             self.depth,
             self.peak_depth,
             self.admitted,
@@ -162,6 +183,17 @@ pub struct Metrics {
     /// total typed sheds for deadline infeasibility (at admission or
     /// expired while queued)
     pub shed_deadline: u64,
+    /// total typed sheds because a route's circuit breaker was open
+    pub shed_unhealthy: u64,
+    /// engine panics contained at the batch boundary (total)
+    pub panics_contained: u64,
+    /// requests failed with a typed `Crashed` after bisection blamed them
+    pub requests_quarantined: u64,
+    /// sub-batch retries performed while bisecting crashed batches
+    pub bisection_retries: u64,
+    /// requests still queued when the shutdown drain deadline expired;
+    /// each was answered with a typed `EngineShutdown`, not silence
+    pub abandoned_at_shutdown: u64,
     /// plan-cache counters from startup (warm-vs-cold: artifact hits,
     /// fallback compiles, load failures, republishes); all zeros when the
     /// server was built without a plan store
@@ -184,9 +216,9 @@ impl Metrics {
         self.routes.entry(route.to_string()).or_default()
     }
 
-    /// Total typed sheds across both causes.
+    /// Total typed sheds across all causes.
     pub fn shed_total(&self) -> u64 {
-        self.shed_queue_full + self.shed_deadline
+        self.shed_queue_full + self.shed_deadline + self.shed_unhealthy
     }
 
     /// Mean occupancy of executed batch slots (1.0 = no padding waste).
@@ -217,13 +249,31 @@ impl Metrics {
         } else {
             String::new()
         };
+        let faults = if self.panics_contained
+            + self.requests_quarantined
+            + self.shed_unhealthy
+            + self.abandoned_at_shutdown
+            > 0
+        {
+            format!(
+                "\nfaults: panics_contained={} requests_quarantined={} bisection_retries={} \
+                 shed_unhealthy={} abandoned_at_shutdown={}",
+                self.panics_contained,
+                self.requests_quarantined,
+                self.bisection_retries,
+                self.shed_unhealthy,
+                self.abandoned_at_shutdown,
+            )
+        } else {
+            String::new()
+        };
         let routes: String = self
             .routes
             .iter()
             .map(|(name, r)| format!("\n{}", r.summary(name)))
             .collect();
         format!(
-            "requests={} responses={} batches={} batch_eff={:.2} shed_full={} shed_slo={}{plans}\n{}\n{}\n{}{routes}",
+            "requests={} responses={} batches={} batch_eff={:.2} shed_full={} shed_slo={}{plans}{faults}\n{}\n{}\n{}{routes}",
             self.requests,
             self.responses,
             self.batches,
@@ -335,6 +385,32 @@ mod tests {
         assert!(rep.contains("peak=5"), "{rep}");
         assert!(rep.contains("shed_full=1 shed_slo=1"), "{rep}");
         assert!(rep.contains("p999="), "{rep}");
+    }
+
+    #[test]
+    fn fault_counters_surface_only_when_nonzero() {
+        let mut m = Metrics::new();
+        assert!(!m.report().contains("faults:"), "quiet when nothing ever crashed");
+        m.panics_contained = 2;
+        m.requests_quarantined = 1;
+        m.bisection_retries = 2;
+        m.shed_unhealthy = 3;
+        m.abandoned_at_shutdown = 1;
+        {
+            let r = m.route_mut("dcgan/winograd");
+            r.panics_contained = 2;
+            r.requests_quarantined = 1;
+            r.bisection_retries = 2;
+            r.shed_unhealthy = 3;
+        }
+        assert_eq!(m.shed_total(), 3);
+        let rep = m.report();
+        assert!(rep.contains("panics_contained=2"), "{rep}");
+        assert!(rep.contains("requests_quarantined=1"), "{rep}");
+        assert!(rep.contains("bisection_retries=2"), "{rep}");
+        assert!(rep.contains("shed_unhealthy=3"), "{rep}");
+        assert!(rep.contains("abandoned_at_shutdown=1"), "{rep}");
+        assert!(rep.contains("panics=2 quarantined=1 bisections=2"), "{rep}");
     }
 
     #[test]

@@ -23,6 +23,15 @@
 //!    p50/p99/p999, shed counters, per-route depth/latency counters
 //!    ([`RouteMetrics`]), and a one-line serving report.
 //!
+//! The native path is **fault-isolated**: batch execution runs under
+//! panic containment (a poisoned batch is bisected so only the poison
+//! request fails, typed [`ServeError::Crashed`]), each route's engine
+//! thread is owned by a supervisor ([`supervise`]) that restarts dead
+//! incarnations with capped exponential backoff, detects panic storms and
+//! stuck batches, and trips a per-route circuit breaker (typed
+//! [`Rejected::Unhealthy`] sheds) when a route keeps dying —
+//! [`Coordinator::health`] reports the verdict per route.
+//!
 //! Requests and replies cross threads over channels ([`request`] defines
 //! the wire types); python is never on this path.
 
@@ -31,9 +40,13 @@ pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod supervise;
 
 pub use batcher::{BatchPolicy, ContinuousBatcher, Dispatch, DynamicBatcher, ReadyBatch};
 pub use metrics::{Histogram, Metrics, RouteMetrics};
 pub use request::{GenRequest, GenResponse, Rejected, ServeError};
 pub use router::Router;
 pub use server::{Coordinator, ExecBackend, SchedulerKind, ServeConfig};
+pub use supervise::{
+    HealthReport, RouteHealth, RouteHealthSnapshot, RoutePolicy, SupervisorConfig,
+};

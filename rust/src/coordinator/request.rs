@@ -56,6 +56,13 @@ pub enum Rejected {
     /// `estimated_wait` the scheduler's service-time forecast at that
     /// moment.
     DeadlineInfeasible { remaining: Duration, estimated_wait: Duration },
+    /// The route's circuit breaker is open: its engine died too many times
+    /// inside the restart window and the supervisor stopped restarting it
+    /// for a cooldown. Requests shed immediately (instead of hanging on a
+    /// dead engine) until the breaker half-opens and a probe incarnation
+    /// proves the route healthy again. `restarts` is the route's lifetime
+    /// restart count at shed time.
+    Unhealthy { restarts: u64 },
 }
 
 impl std::fmt::Display for Rejected {
@@ -69,6 +76,9 @@ impl std::fmt::Display for Rejected {
                 "deadline infeasible ({remaining:?} budget remaining, \
                  estimated wait {estimated_wait:?})"
             ),
+            Rejected::Unhealthy { restarts } => {
+                write!(f, "route unhealthy (circuit breaker open after {restarts} restarts)")
+            }
         }
     }
 }
@@ -80,6 +90,12 @@ pub enum ServeError {
     BadInputLength { expected: usize, got: usize },
     EngineShutdown,
     Execution(String),
+    /// The engine **panicked** while executing this request's batch and
+    /// the unwind was contained at the batch boundary. After bisection the
+    /// blame is narrowed to this request (or the batch was a single
+    /// request); batch-mates were retried and completed normally. The
+    /// string is the panic payload.
+    Crashed(String),
     /// Typed shed-on-overload response (see [`Rejected`]); the request was
     /// never executed.
     Rejected(Rejected),
@@ -94,6 +110,7 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::EngineShutdown => write!(f, "engine shut down"),
             ServeError::Execution(e) => write!(f, "execution failed: {e}"),
+            ServeError::Crashed(p) => write!(f, "engine crashed executing this request: {p}"),
             ServeError::Rejected(r) => write!(f, "request shed: {r}"),
         }
     }

@@ -1,6 +1,6 @@
-//! The serving coordinator: an engine thread that owns an execution
-//! backend and drains per-route batch schedulers; callers talk to it
-//! through channels (`Coordinator::submit`). Python is never on this path.
+//! The serving coordinator: engine threads that own an execution backend
+//! and drain per-route batch schedulers; callers talk to them through
+//! channels (`Coordinator::submit`). Python is never on this path.
 //!
 //! Shape:
 //!   caller -> gate -> mpsc -> engine thread [ scheduler -> pack ->
@@ -8,51 +8,81 @@
 //!
 //! Two backends implement the same [`ExecBackend`] contract:
 //! * **PJRT** ([`Coordinator::start`]) — AOT artifacts compiled and
-//!   executed via the `xla` runtime (gated off in offline builds);
+//!   executed via the `xla` runtime (gated off in offline builds). The
+//!   PJRT client is not `Send`, so this backend keeps the legacy
+//!   single-engine-thread loop: panic containment applies, supervision
+//!   does not.
 //! * **native** ([`Coordinator::start_native`]) — whole generators run
 //!   through precompiled [`crate::engine`] plans, no artifacts needed.
+//!   The runtime is shared (`Arc`) across **supervised per-route engine
+//!   threads** (see below).
 //!
 //! **Admission is bounded** (PR 7): every route has a fixed-capacity
 //! admission gate ([`ServeConfig::queue_cap`]) spanning the channel *and*
 //! the scheduler queue. `submit` sheds with a typed
 //! [`ServeError::Rejected`] ([`Rejected::QueueFull`]) instead of queuing
-//! unboundedly — the old path's OOM-shaped growth under overload is
-//! structurally gone. With an SLO configured ([`ServeConfig::slo`], or a
+//! unboundedly. With an SLO configured ([`ServeConfig::slo`], or a
 //! per-request budget via [`Coordinator::submit_with_deadline`]) the
 //! continuous scheduler also sheds deadline-infeasible requests, typed
 //! [`Rejected::DeadlineInfeasible`].
 //!
-//! The engine blocks on the request channel with a timeout equal to the
-//! nearest scheduler deadline, so held batches and deadline sheds happen
-//! on time without a busy loop; after every wake it drains the whole
-//! channel before polling, so requests that arrived while a batch was
-//! executing join the next batch — continuous batching's join-in-flight.
+//! **Faults are isolated** (PR 8), at three nested boundaries:
+//!
+//! 1. *Batch boundary* — [`ExecBackend::execute_artifact`] runs under
+//!    `catch_unwind`. A panic (or a wrong-shaped output) fails only the
+//!    offending batch, typed [`ServeError::Crashed`]; multi-request
+//!    batches are **bisected** so batch-mates of a poison request are
+//!    retried and complete normally (the engine's bitwise
+//!    batch-composition invariance makes the retried halves produce
+//!    outputs identical to a fault-free run). Counted per route as
+//!    `panics_contained` / `requests_quarantined` / `bisection_retries`.
+//! 2. *Engine boundary* — on the native path every route runs its own
+//!    supervised engine incarnation. A panic storm, an unwind that
+//!    escapes the batch boundary, or a stuck batch (watchdog) kills the
+//!    incarnation; the supervisor restarts it with capped exponential
+//!    backoff ([`SupervisorConfig`]).
+//! 3. *Route boundary* — too many deaths inside the restart window trip
+//!    the route's circuit breaker: requests shed immediately with a typed
+//!    [`Rejected::Unhealthy`] (instead of hanging on a dead engine) until
+//!    a cooldown passes and a probe incarnation proves the route healthy.
+//!    [`Coordinator::health`] reports per-route state.
+//!
+//! Deterministic fault injection ([`crate::faultinject`]) hooks the batch
+//! boundary here (site `batch_exec`); `ServeConfig::faults` carries the
+//! plane. Shutdown is bounded: [`Coordinator::shutdown`] drains pending
+//! work up to [`ServeConfig::drain_deadline`], then answers anything left
+//! with typed [`ServeError::EngineShutdown`] — no silent request loss,
+//! no unbounded hang.
 //!
 //! On the native backend, compute threading is *not* per request: the
 //! [`crate::engine::NativeRuntime`] built at startup owns one persistent
 //! [`crate::engine::WorkerPool`] (sized by
 //! [`NativeConfig::workers`](crate::engine::NativeConfig), default one
-//! thread per core) that every route's engine dispatches to. A released
-//! batch executes via the engine's two-level scheduler — wide buckets fan
-//! out across samples, narrow ones across stripes inside each sample — so
-//! the pool stays busy without the spawn-per-phase threading of PR 1.
+//! thread per core) that every route's engine dispatches to.
 
 use crate::coordinator::batcher::{
     BatchPolicy, ContinuousBatcher, Dispatch, DynamicBatcher, ReadyBatch,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{GenRequest, GenResponse, Rejected, RequestId, ServeError};
-use crate::coordinator::router::Router;
+use crate::coordinator::router::{Route, Router};
+use crate::coordinator::supervise::{
+    DeathVerdict, HealthReport, RouteHealth, RouteHealthSnapshot, RoutePolicy, SupervisorAction,
+    SupervisorConfig,
+};
 use crate::engine::serve::{native_manifest, NativeConfig, NativeRuntime};
+use crate::faultinject::{FaultAction, FaultPlane, FaultSite};
 use crate::runtime::{Manifest, Runtime};
+use crate::util::lock_unpoisoned;
 use anyhow::Result;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::collections::{BTreeMap, HashMap};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, TryLockError};
 use std::time::{Duration, Instant};
 
-/// What the engine thread needs from an execution backend: run one packed
+/// What an engine thread needs from an execution backend: run one packed
 /// batch buffer against a named route artifact.
 pub trait ExecBackend {
     fn execute_artifact(&self, name: &str, input: &[f32]) -> std::result::Result<Vec<f32>, String>;
@@ -110,7 +140,7 @@ struct RouteGate {
 }
 
 /// The bounded admission gate shared by the caller-side `submit` and the
-/// engine thread: one slot counter per route, capacity
+/// engine threads: one slot counter per route, capacity
 /// [`ServeConfig::queue_cap`].
 struct Gate {
     cap: usize,
@@ -153,17 +183,6 @@ impl Gate {
     }
 }
 
-/// Handle to a running coordinator.
-pub struct Coordinator {
-    tx: Sender<Msg>,
-    next_id: AtomicU64,
-    metrics: Arc<Mutex<Metrics>>,
-    router: Router,
-    gate: Arc<Gate>,
-    slo: Option<Duration>,
-    handle: Option<std::thread::JoinHandle<()>>,
-}
-
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -183,6 +202,17 @@ pub struct ServeConfig {
     /// deadline unless [`Coordinator::submit_with_deadline`] overrides it.
     /// `None` = best-effort (no deadline shedding).
     pub slo: Option<Duration>,
+    /// deterministic fault-injection plane for the `batch_exec` site
+    /// ([`crate::faultinject`]). `None` (the default, production) costs
+    /// one branch per batch.
+    pub faults: Option<Arc<FaultPlane>>,
+    /// restart/backoff/breaker/watchdog policy for the supervised native
+    /// path ([`Coordinator::start_native`] / [`Coordinator::start_supervised`]).
+    pub supervisor: SupervisorConfig,
+    /// how long [`Coordinator::shutdown`] (and `Drop`) waits for pending
+    /// work to drain before answering what's left with typed
+    /// [`ServeError::EngineShutdown`] and detaching the engine threads.
+    pub drain_deadline: Duration,
 }
 
 impl Default for ServeConfig {
@@ -193,8 +223,110 @@ impl Default for ServeConfig {
             scheduler: SchedulerKind::Continuous,
             queue_cap: 256,
             slo: None,
+            faults: None,
+            supervisor: SupervisorConfig::default(),
+            drain_deadline: Duration::from_secs(5),
         }
     }
+}
+
+/// Sentinel for "no batch executing" in [`RouteShared::busy_gen`].
+const IDLE_GEN: u64 = u64::MAX;
+
+/// Milliseconds since the coordinator's epoch — the watchdog's clock.
+fn elapsed_ms(epoch: Instant) -> u64 {
+    epoch.elapsed().as_millis() as u64
+}
+
+/// State shared between one route's engine incarnations, the supervisor,
+/// and `submit`. The receiver lives *here* (not in the engine thread) so
+/// queued requests survive an engine death: the replacement incarnation —
+/// or, with the breaker open, the supervisor — picks them up and every
+/// request still gets exactly one fate.
+struct RouteShared {
+    rx: Mutex<Receiver<Msg>>,
+    /// currently authorized incarnation; bumped to retire (watchdog,
+    /// death) so stale incarnations see they were superseded
+    generation: AtomicU64,
+    /// generation currently executing a batch, [`IDLE_GEN`] when idle
+    busy_gen: AtomicU64,
+    /// when that batch started (ms since epoch) — watchdog deadline base
+    busy_since_ms: AtomicU64,
+    shutdown: AtomicBool,
+    policy: Mutex<RoutePolicy>,
+}
+
+struct SupRoute {
+    tx: Sender<Msg>,
+    shared: Arc<RouteShared>,
+}
+
+struct Supervised {
+    routes: BTreeMap<(String, String), SupRoute>,
+    /// live engine incarnation count (for bounded shutdown)
+    live: AtomicUsize,
+    shutdown: AtomicBool,
+    epoch: Instant,
+}
+
+/// Engine-death notification to the supervisor.
+enum SupEvent {
+    Died { key: (String, String), generation: u64 },
+}
+
+/// Everything an engine incarnation / the supervisor thread needs;
+/// cheaply cloneable (all `Arc`s plus the config).
+struct SupEnv<E> {
+    backend: Arc<E>,
+    router: Router,
+    metrics: Arc<Mutex<Metrics>>,
+    gate: Arc<Gate>,
+    cfg: ServeConfig,
+    sup: Arc<Supervised>,
+    sup_tx: Sender<SupEvent>,
+}
+
+impl<E> Clone for SupEnv<E> {
+    fn clone(&self) -> Self {
+        SupEnv {
+            backend: self.backend.clone(),
+            router: self.router.clone(),
+            metrics: self.metrics.clone(),
+            gate: self.gate.clone(),
+            cfg: self.cfg.clone(),
+            sup: self.sup.clone(),
+            sup_tx: self.sup_tx.clone(),
+        }
+    }
+}
+
+/// Decrements the live-incarnation count however the thread exits —
+/// including by panic.
+struct LiveGuard(Arc<Supervised>);
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        self.0.live.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+enum Mode {
+    /// One engine thread owns the backend (PJRT: the client is not
+    /// `Send`). Containment applies; supervision does not.
+    Legacy { tx: Sender<Msg>, handle: Option<std::thread::JoinHandle<()>> },
+    /// Per-route supervised engine incarnations over a shared backend.
+    Supervised { sup: Arc<Supervised>, supervisor: Option<std::thread::JoinHandle<()>> },
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    next_id: AtomicU64,
+    metrics: Arc<Mutex<Metrics>>,
+    router: Router,
+    gate: Arc<Gate>,
+    slo: Option<Duration>,
+    drain_deadline: Duration,
+    mode: Mode,
 }
 
 impl Coordinator {
@@ -244,22 +376,21 @@ impl Coordinator {
             .map_err(|e| anyhow::anyhow!("engine startup failed: {e}"))?;
 
         Ok(Coordinator {
-            tx,
             next_id: AtomicU64::new(1),
             metrics,
             router,
             gate,
             slo: cfg.slo,
-            handle: Some(handle),
+            drain_deadline: cfg.drain_deadline,
+            mode: Mode::Legacy { tx, handle: Some(handle) },
         })
     }
 
-    /// Start the engine thread on the native execution backend: every
+    /// Start supervised serving on the native execution backend: every
     /// route's [`crate::engine`] plan is compiled — and the one worker
     /// pool all routes share is spawned — before the coordinator reports
-    /// ready, then generation requests batch and execute through the
-    /// precompiled plans — no PJRT, no artifacts on disk, no thread
-    /// spawns on the request path.
+    /// ready, then each route gets its own supervised engine incarnation
+    /// (restart-on-death, circuit breaker, stuck-batch watchdog).
     ///
     /// `cfg.preload_models`, when set, restricts which zoo models get
     /// compiled (same semantics as the PJRT path); `native.workers` sizes
@@ -268,49 +399,90 @@ impl Coordinator {
         if let Some(models) = &cfg.preload_models {
             native.models = Some(models.clone());
         }
+        if native.faults.is_none() {
+            native.faults = cfg.faults.clone();
+        }
         let manifest = native_manifest(&native);
         anyhow::ensure!(
             !manifest.entries.is_empty(),
             "native backend: no routes to serve (model filter {:?})",
             native.models
         );
-        let router = Router::from_manifest(&manifest);
+        // plan compilation happens here, once, before any request — a
+        // compile-time panic is a startup error, not an engine death
+        let runtime = catch_unwind(AssertUnwindSafe(|| NativeRuntime::build(&native)))
+            .map_err(|p| anyhow::anyhow!("native runtime build panicked: {}", panic_message(p)))?;
+        let plan_stats = runtime.plan_stats();
+        let coord = Coordinator::start_supervised(Arc::new(runtime), &manifest, cfg)?;
+        // surface the warm-vs-cold startup accounting through the serving
+        // metrics snapshot
+        lock_unpoisoned(&coord.metrics).plan_cache = plan_stats;
+        Ok(coord)
+    }
+
+    /// Start supervised serving over an arbitrary `Send + Sync` backend
+    /// (shared by every route's engine incarnations). This is the
+    /// fault-isolated production path; `start_native` delegates here, and
+    /// tests use it with mock backends to exercise containment,
+    /// bisection, and supervision deterministically.
+    pub fn start_supervised<E>(
+        backend: Arc<E>,
+        manifest: &Manifest,
+        cfg: ServeConfig,
+    ) -> Result<Coordinator>
+    where
+        E: ExecBackend + Send + Sync + 'static,
+    {
+        let router = Router::from_manifest(manifest);
+        anyhow::ensure!(!router.models().is_empty(), "supervised backend: no routes to serve");
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let gate = Arc::new(Gate::new(&router, cfg.queue_cap));
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
-
-        let engine_router = router.clone();
-        let engine_metrics = metrics.clone();
-        let engine_gate = gate.clone();
-        let engine_cfg = cfg.clone();
-        let handle = std::thread::Builder::new()
-            .name("wingan-engine".into())
-            .spawn(move || {
-                // plan compilation happens here, once, before ready — the
-                // request path only ever executes precompiled plans (or,
-                // with `native.plan_store`, loads them from artifacts)
-                let runtime = NativeRuntime::build(&native);
-                // surface the warm-vs-cold startup accounting through the
-                // serving metrics snapshot
-                engine_metrics.lock().unwrap().plan_cache = runtime.plan_stats();
-                let _ = ready_tx.send(Ok(()));
-                engine_loop(runtime, engine_router, engine_metrics, engine_gate, engine_cfg, rx)
-            })
-            .expect("spawn engine");
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))?
-            .map_err(|e| anyhow::anyhow!("engine startup failed: {e}"))?;
+        let mut routes = BTreeMap::new();
+        for key in router.models() {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let shared = Arc::new(RouteShared {
+                rx: Mutex::new(rx),
+                generation: AtomicU64::new(0),
+                busy_gen: AtomicU64::new(IDLE_GEN),
+                busy_since_ms: AtomicU64::new(0),
+                shutdown: AtomicBool::new(false),
+                policy: Mutex::new(RoutePolicy::new(cfg.supervisor.clone())),
+            });
+            routes.insert(key, SupRoute { tx, shared });
+        }
+        let sup = Arc::new(Supervised {
+            routes,
+            live: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            epoch: Instant::now(),
+        });
+        let (sup_tx, sup_rx) = mpsc::channel::<SupEvent>();
+        let env = SupEnv {
+            backend,
+            router: router.clone(),
+            metrics: metrics.clone(),
+            gate: gate.clone(),
+            cfg: cfg.clone(),
+            sup: sup.clone(),
+            sup_tx,
+        };
+        let keys: Vec<(String, String)> = env.sup.routes.keys().cloned().collect();
+        for key in &keys {
+            spawn_incarnation(&env, key);
+        }
+        let supervisor = std::thread::Builder::new()
+            .name("wingan-supervisor".into())
+            .spawn(move || supervisor_loop(env, sup_rx))
+            .expect("spawn supervisor");
 
         Ok(Coordinator {
-            tx,
             next_id: AtomicU64::new(1),
             metrics,
             router,
             gate,
             slo: cfg.slo,
-            handle: Some(handle),
+            drain_deadline: cfg.drain_deadline,
+            mode: Mode::Supervised { sup, supervisor: Some(supervisor) },
         })
     }
 
@@ -321,8 +493,8 @@ impl Coordinator {
     /// Submit a request with the configured default SLO (if any); returns
     /// a receiver for the response. Sheds with
     /// [`ServeError::Rejected`]`(`[`Rejected::QueueFull`]`)` when the
-    /// route's admission gate is at capacity — the queue is bounded, so
-    /// overload can never grow memory without bound.
+    /// route's admission gate is at capacity, and with
+    /// [`Rejected::Unhealthy`] when the route's circuit breaker is open.
     pub fn submit(
         &self,
         model: &str,
@@ -345,10 +517,23 @@ impl Coordinator {
     ) -> Result<Receiver<Result<GenResponse, ServeError>>, ServeError> {
         self.router.validate(model, method, input.len())?;
         let key = (model.to_string(), method.to_string());
+        // a route with an open breaker sheds immediately: queuing on an
+        // engine the supervisor refuses to restart would just hang
+        if let Mode::Supervised { sup, .. } = &self.mode {
+            if let Some(r) = sup.routes.get(&key) {
+                let (open, restarts) = {
+                    let pol = lock_unpoisoned(&r.shared.policy);
+                    (pol.is_open(), pol.restarts())
+                };
+                if open {
+                    let rej = Rejected::Unhealthy { restarts };
+                    count_shed(&self.metrics, &key, &rej);
+                    return Err(ServeError::Rejected(rej));
+                }
+            }
+        }
         if let Err(rej) = self.gate.try_acquire(&key) {
-            let mut m = self.metrics.lock().unwrap();
-            m.shed_queue_full += 1;
-            m.route_mut(&format!("{model}/{method}")).shed_queue_full += 1;
+            count_shed(&self.metrics, &key, &rej);
             return Err(ServeError::Rejected(rej));
         }
         let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -363,12 +548,21 @@ impl Coordinator {
             deadline: budget.and_then(|b| now.checked_add(b)),
         };
         {
-            let mut m = self.metrics.lock().unwrap();
+            let mut m = lock_unpoisoned(&self.metrics);
             m.requests += 1;
             let r = m.route_mut(&format!("{model}/{method}"));
             r.admitted += 1;
         }
-        if self.tx.send(Msg::Request(req, reply_tx)).is_err() {
+        let sent = match &self.mode {
+            Mode::Legacy { tx, .. } => tx.send(Msg::Request(req, reply_tx)).is_ok(),
+            Mode::Supervised { sup, .. } => match sup.routes.get(&key) {
+                // the receiver lives in RouteShared, so this succeeds even
+                // across an engine death — the replacement drains it
+                Some(r) => r.tx.send(Msg::Request(req, reply_tx)).is_ok(),
+                None => false,
+            },
+        };
+        if !sent {
             self.gate.release(&key, 1);
             return Err(ServeError::EngineShutdown);
         }
@@ -390,7 +584,7 @@ impl Coordinator {
     /// Snapshot of the serving metrics, with per-route queue depth and
     /// high-water marks folded in from the admission gate.
     pub fn metrics(&self) -> Metrics {
-        let mut m = self.metrics.lock().unwrap().clone();
+        let mut m = lock_unpoisoned(&self.metrics).clone();
         for (key, g) in &self.gate.routes {
             let r = m.route_mut(&format!("{}/{}", key.0, key.1));
             r.depth = g.depth.load(Ordering::Acquire);
@@ -399,21 +593,105 @@ impl Coordinator {
         m
     }
 
-    /// Graceful shutdown: flushes pending batches first.
+    /// Per-route supervision health: breaker state, restart counts, death
+    /// counts. On the legacy (PJRT) path every route reports `Healthy`
+    /// with a closed breaker — there is no supervisor to say otherwise.
+    pub fn health(&self) -> HealthReport {
+        let now = Instant::now();
+        let mut report = HealthReport::default();
+        match &self.mode {
+            Mode::Supervised { sup, .. } => {
+                for (key, r) in &sup.routes {
+                    report.routes.insert(
+                        format!("{}/{}", key.0, key.1),
+                        lock_unpoisoned(&r.shared.policy).snapshot(now),
+                    );
+                }
+            }
+            Mode::Legacy { .. } => {
+                for key in self.router.models() {
+                    report.routes.insert(
+                        format!("{}/{}", key.0, key.1),
+                        RouteHealthSnapshot {
+                            health: RouteHealth::Healthy,
+                            breaker: "closed",
+                            restarts: 0,
+                            recent_deaths: 0,
+                            total_deaths: 0,
+                            watchdog_fires: 0,
+                        },
+                    );
+                }
+            }
+        }
+        report
+    }
+
+    /// Graceful bounded shutdown: flushes pending batches, waiting at
+    /// most [`ServeConfig::drain_deadline`]; anything still queued past
+    /// the deadline is answered with typed [`ServeError::EngineShutdown`]
+    /// and counted as `abandoned_at_shutdown`.
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        let deadline = self.drain_deadline;
+        self.shutdown_impl(deadline);
+    }
+
+    /// [`Coordinator::shutdown`] with an explicit drain deadline.
+    pub fn shutdown_within(mut self, deadline: Duration) {
+        self.shutdown_impl(deadline);
+    }
+
+    fn shutdown_impl(&mut self, deadline: Duration) {
+        let t0 = Instant::now();
+        match &mut self.mode {
+            Mode::Legacy { tx, handle } => {
+                let Some(h) = handle.take() else { return };
+                let _ = tx.send(Msg::Shutdown);
+                while !h.is_finished() && t0.elapsed() < deadline {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                if h.is_finished() {
+                    let _ = h.join();
+                } else {
+                    eprintln!(
+                        "coordinator: drain deadline {deadline:?} expired; detaching engine thread"
+                    );
+                }
+            }
+            Mode::Supervised { sup, supervisor } => {
+                let Some(h) = supervisor.take() else { return };
+                sup.shutdown.store(true, Ordering::SeqCst);
+                for r in sup.routes.values() {
+                    r.shared.shutdown.store(true, Ordering::SeqCst);
+                    let _ = r.tx.send(Msg::Shutdown);
+                }
+                while !(h.is_finished() && sup.live.load(Ordering::SeqCst) == 0)
+                    && t0.elapsed() < deadline
+                {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                if h.is_finished() {
+                    let _ = h.join();
+                } else {
+                    eprintln!(
+                        "coordinator: drain deadline {deadline:?} expired; detaching supervisor"
+                    );
+                }
+                // anything still queued gets a typed answer, never silence
+                // (idempotent with the supervisor's own exit drain)
+                let sup = sup.clone();
+                for (key, r) in &sup.routes {
+                    abandon_queue(&self.metrics, &self.gate, key, r);
+                }
+            }
         }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        let deadline = self.drain_deadline;
+        self.shutdown_impl(deadline);
     }
 }
 
@@ -480,8 +758,241 @@ impl RouteBatcher {
 struct RouteState {
     batcher: RouteBatcher,
     replies: HashMap<RequestId, Reply>,
+    /// admission-gate slots held by requests currently *inside* the
+    /// batcher — the exact amount to release if this engine dies with
+    /// work queued, so the gate never leaks across restarts
+    slots_held: usize,
 }
 
+impl RouteState {
+    fn new(cfg: &ServeConfig, buckets: Vec<usize>) -> RouteState {
+        RouteState {
+            batcher: RouteBatcher::new(cfg, buckets),
+            replies: HashMap::new(),
+            slots_held: 0,
+        }
+    }
+}
+
+/// What one contained batch execution produced.
+enum ExecResult {
+    Done(Vec<f32>),
+    /// typed backend error — fails the whole batch, no bisection
+    Failed(String),
+    /// a panic was caught at the batch boundary (or the output shape was
+    /// wrong, which is the same trust violation)
+    Crashed(String),
+}
+
+struct BatchOutcome {
+    service: Duration,
+    /// panics contained during this batch (bisection can contain several)
+    contained: u32,
+}
+
+/// Everything needed to execute batches for one route, bundled so the
+/// recursive bisection path stays at sane arity.
+struct BatchCtx<'a, E: ExecBackend> {
+    runtime: &'a E,
+    router: &'a Router,
+    metrics: &'a Mutex<Metrics>,
+    faults: Option<&'a FaultPlane>,
+    key: &'a (String, String),
+}
+
+impl<E: ExecBackend> BatchCtx<'_, E> {
+    /// Execute one released batch and answer its requests; panics from the
+    /// backend are contained here and bisected down to the poison request.
+    fn run_batch(&self, batch: ReadyBatch, replies: &mut HashMap<RequestId, Reply>) -> BatchOutcome {
+        let mut contained = 0u32;
+        let bucket = batch.bucket;
+        let service = self.exec_requests(batch.requests, bucket, replies, &mut contained);
+        BatchOutcome { service, contained }
+    }
+
+    fn exec_requests(
+        &self,
+        requests: Vec<GenRequest>,
+        bucket: usize,
+        replies: &mut HashMap<RequestId, Reply>,
+        contained: &mut u32,
+    ) -> Duration {
+        let route = self.router.route(&self.key.0, &self.key.1).expect("validated at submit");
+        let artifact = match route.artifact_for_bucket(bucket) {
+            Some(a) => a,
+            None => {
+                fail_requests(&requests, replies, ServeError::UnknownModel(self.key.0.clone()));
+                return Duration::ZERO;
+            }
+        };
+        // pack: bucket x sample_len, zero-padded tail
+        let sample_in = route.sample_input_len;
+        let sample_out = route.sample_output_len;
+        let mut input = vec![0.0f32; bucket * sample_in];
+        for (i, r) in requests.iter().enumerate() {
+            input[i * sample_in..(i + 1) * sample_in].copy_from_slice(&r.input);
+        }
+
+        let t0 = Instant::now();
+        let result = self.exec_contained(artifact, &input);
+        let exec_time = t0.elapsed();
+
+        match result {
+            ExecResult::Done(out) if out.len() == bucket * sample_out => {
+                let route_key = format!("{}/{}", self.key.0, self.key.1);
+                let mut m = lock_unpoisoned(self.metrics);
+                m.batches += 1;
+                m.batched_samples += requests.len() as u64;
+                m.padded_samples += (bucket - requests.len()) as u64;
+                m.exec_latency.record(exec_time);
+                m.route_mut(&route_key).batches += 1;
+                for (i, r) in requests.iter().enumerate() {
+                    let queue_time = t0.duration_since(r.enqueued);
+                    let e2e = r.enqueued.elapsed();
+                    m.queue_latency.record(queue_time);
+                    m.e2e_latency.record(e2e);
+                    m.responses += 1;
+                    let rm = m.route_mut(&route_key);
+                    rm.completed += 1;
+                    rm.e2e.record(e2e);
+                    if let Some(reply) = replies.remove(&r.id) {
+                        let _ = reply.send(Ok(GenResponse {
+                            id: r.id,
+                            output: out[i * sample_out..(i + 1) * sample_out].to_vec(),
+                            batch_size: bucket,
+                            queue_time,
+                            exec_time,
+                        }));
+                    }
+                }
+                exec_time
+            }
+            ExecResult::Done(out) => {
+                // a wrong-shaped output is the same trust violation as a
+                // panic: contain, bisect, quarantine
+                let msg = format!(
+                    "wrong output shape: got {} values, expected {}",
+                    out.len(),
+                    bucket * sample_out
+                );
+                exec_time + self.contain_crash(requests, replies, contained, msg)
+            }
+            ExecResult::Crashed(msg) => {
+                exec_time + self.contain_crash(requests, replies, contained, msg)
+            }
+            ExecResult::Failed(e) => {
+                fail_requests(&requests, replies, ServeError::Execution(e));
+                exec_time
+            }
+        }
+    }
+
+    /// Run the backend under `catch_unwind`, with the deterministic
+    /// fault-injection hook for site `batch_exec` inside the same
+    /// containment boundary.
+    fn exec_contained(&self, artifact: &str, input: &[f32]) -> ExecResult {
+        let faults = self.faults;
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let mut truncate = false;
+            if let Some(plane) = faults {
+                match plane.check(FaultSite::BatchExec) {
+                    Some(FaultAction::Panic) => panic!("fault injected: batch_exec panic"),
+                    Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+                    Some(FaultAction::WrongShape) => truncate = true,
+                    Some(FaultAction::Error) => {
+                        return Err("fault injected: batch_exec error".to_string())
+                    }
+                    None => {}
+                }
+            }
+            let mut out = self.runtime.execute_artifact(artifact, input)?;
+            if truncate {
+                out.truncate(out.len() / 2);
+            }
+            Ok(out)
+        }));
+        match caught {
+            Ok(Ok(out)) => ExecResult::Done(out),
+            Ok(Err(e)) => ExecResult::Failed(e),
+            Err(p) => ExecResult::Crashed(panic_message(p)),
+        }
+    }
+
+    /// A batch crashed: count the contained panic, then either quarantine
+    /// (single request — it *is* the poison) or bisect so innocent
+    /// batch-mates get retried. The engine's bitwise batch-composition
+    /// invariance means the retried halves produce outputs identical to a
+    /// fault-free run.
+    fn contain_crash(
+        &self,
+        requests: Vec<GenRequest>,
+        replies: &mut HashMap<RequestId, Reply>,
+        contained: &mut u32,
+        msg: String,
+    ) -> Duration {
+        *contained += 1;
+        let route_key = format!("{}/{}", self.key.0, self.key.1);
+        {
+            let mut m = lock_unpoisoned(self.metrics);
+            m.panics_contained += 1;
+            m.route_mut(&route_key).panics_contained += 1;
+        }
+        if requests.len() <= 1 {
+            let n = requests.len() as u64;
+            let mut m = lock_unpoisoned(self.metrics);
+            m.requests_quarantined += n;
+            m.route_mut(&route_key).requests_quarantined += n;
+            drop(m);
+            fail_requests(&requests, replies, ServeError::Crashed(msg));
+            return Duration::ZERO;
+        }
+        {
+            let mut m = lock_unpoisoned(self.metrics);
+            m.bisection_retries += 1;
+            m.route_mut(&route_key).bisection_retries += 1;
+        }
+        let route = self.router.route(&self.key.0, &self.key.1).expect("validated at submit");
+        let mut head = requests;
+        let tail = head.split_off(head.len() / 2);
+        let head_bucket = smallest_bucket(route, head.len());
+        let tail_bucket = smallest_bucket(route, tail.len());
+        self.exec_requests(head, head_bucket, replies, contained)
+            + self.exec_requests(tail, tail_bucket, replies, contained)
+    }
+}
+
+/// Smallest configured bucket that fits `n` requests (bisection halves
+/// are smaller than the original bucket, which always exists).
+fn smallest_bucket(route: &Route, n: usize) -> usize {
+    route.buckets.range(n..).next().map(|(b, _)| *b).unwrap_or(n)
+}
+
+/// Render a caught panic payload for typed error reporting.
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+fn fail_requests(
+    requests: &[GenRequest],
+    replies: &mut HashMap<RequestId, Reply>,
+    err: ServeError,
+) {
+    for r in requests {
+        if let Some(reply) = replies.remove(&r.id) {
+            let _ = reply.send(Err(err.clone()));
+        }
+    }
+}
+
+/// Legacy single-engine loop (PJRT path, and any backend that is not
+/// `Send`): one thread owns the backend and drains every route. Panic
+/// containment and bisection apply; supervision does not.
 fn engine_loop<E: ExecBackend>(
     runtime: E,
     router: Router,
@@ -538,27 +1049,39 @@ fn engine_loop<E: ExecBackend>(
         if shutdown {
             // flush everything, then exit — shutdown is a drain, not a shed
             for (key, state) in states.iter_mut() {
-                while let Some(batch) = state.batcher.flush() {
-                    gate.release(key, batch.requests.len());
-                    run_batch(&runtime, &router, &metrics, key, batch, &mut state.replies);
-                }
+                let ctx = BatchCtx {
+                    runtime: &runtime,
+                    router: &router,
+                    metrics: &metrics,
+                    faults: cfg.faults.as_deref(),
+                    key,
+                };
+                drain_state(&ctx, &gate, state);
             }
             return;
         }
 
         let now = Instant::now();
         for (key, state) in states.iter_mut() {
+            let ctx = BatchCtx {
+                runtime: &runtime,
+                router: &router,
+                metrics: &metrics,
+                faults: cfg.faults.as_deref(),
+                key,
+            };
             loop {
                 let Dispatch { batch, shed } = state.batcher.poll(now);
                 if !shed.is_empty() {
                     gate.release(key, shed.len());
+                    state.slots_held = state.slots_held.saturating_sub(shed.len());
                     shed_requests(&metrics, key, shed, &mut state.replies);
                 }
                 let Some(batch) = batch else { break };
                 gate.release(key, batch.requests.len());
-                let service =
-                    run_batch(&runtime, &router, &metrics, key, batch, &mut state.replies);
-                state.batcher.observe(service);
+                state.slots_held = state.slots_held.saturating_sub(batch.requests.len());
+                let outcome = ctx.run_batch(batch, &mut state.replies);
+                state.batcher.observe(outcome.service);
             }
         }
     }
@@ -569,8 +1092,8 @@ fn engine_loop<E: ExecBackend>(
 fn handle_request(
     states: &mut HashMap<(String, String), RouteState>,
     router: &Router,
-    metrics: &Arc<Mutex<Metrics>>,
-    gate: &Arc<Gate>,
+    metrics: &Mutex<Metrics>,
+    gate: &Gate,
     cfg: &ServeConfig,
     req: GenRequest,
     reply: Reply,
@@ -578,19 +1101,30 @@ fn handle_request(
     let key = (req.model.clone(), req.method.clone());
     let state = states.entry(key.clone()).or_insert_with(|| {
         let route = router.route(&key.0, &key.1).expect("validated");
-        RouteState {
-            batcher: RouteBatcher::new(cfg, route.bucket_sizes()),
-            replies: HashMap::new(),
-        }
+        RouteState::new(cfg, route.bucket_sizes())
     });
+    admit_to_state(state, metrics, gate, &key, req, reply);
+}
+
+/// Admit one request into an existing route state, answering a typed
+/// rejection immediately and keeping the gate-slot ledger exact.
+fn admit_to_state(
+    state: &mut RouteState,
+    metrics: &Mutex<Metrics>,
+    gate: &Gate,
+    key: &(String, String),
+    req: GenRequest,
+    reply: Reply,
+) {
     let id = req.id;
     match state.batcher.admit(req, Instant::now()) {
         Ok(()) => {
             state.replies.insert(id, reply);
+            state.slots_held += 1;
         }
         Err((req, rej)) => {
-            gate.release(&key, 1);
-            count_shed(metrics, &key, &rej);
+            gate.release(key, 1);
+            count_shed(metrics, key, &rej);
             let _ = reply.send(Err(ServeError::Rejected(rej)));
             drop(req);
         }
@@ -600,7 +1134,7 @@ fn handle_request(
 /// Answer dispatch-time sheds (expired deadlines) with their typed
 /// verdicts and count them.
 fn shed_requests(
-    metrics: &Arc<Mutex<Metrics>>,
+    metrics: &Mutex<Metrics>,
     key: &(String, String),
     shed: Vec<(GenRequest, Rejected)>,
     replies: &mut HashMap<RequestId, Reply>,
@@ -613,8 +1147,8 @@ fn shed_requests(
     }
 }
 
-fn count_shed(metrics: &Arc<Mutex<Metrics>>, key: &(String, String), rej: &Rejected) {
-    let mut m = metrics.lock().unwrap();
+fn count_shed(metrics: &Mutex<Metrics>, key: &(String, String), rej: &Rejected) {
+    let mut m = lock_unpoisoned(metrics);
     let route = format!("{}/{}", key.0, key.1);
     match rej {
         Rejected::QueueFull { .. } => {
@@ -625,81 +1159,391 @@ fn count_shed(metrics: &Arc<Mutex<Metrics>>, key: &(String, String), rej: &Rejec
             m.shed_deadline += 1;
             m.route_mut(&route).shed_deadline += 1;
         }
+        Rejected::Unhealthy { .. } => {
+            m.shed_unhealthy += 1;
+            m.route_mut(&route).shed_unhealthy += 1;
+        }
     }
 }
 
-/// Execute one released batch and answer its requests; returns the batch
-/// service time (for the scheduler's admission forecast).
-fn run_batch<E: ExecBackend>(
-    runtime: &E,
-    router: &Router,
-    metrics: &Arc<Mutex<Metrics>>,
-    key: &(String, String),
-    batch: ReadyBatch,
-    replies: &mut HashMap<RequestId, Reply>,
-) -> Duration {
-    let route = router.route(&key.0, &key.1).expect("validated at submit");
-    let artifact = match route.artifact_for_bucket(batch.bucket) {
-        Some(a) => a,
-        None => {
-            fail_batch(&batch, replies, ServeError::UnknownModel(key.0.clone()));
-            return Duration::ZERO;
-        }
-    };
-    // pack: bucket x sample_len, zero-padded tail
-    let sample_in = route.sample_input_len;
-    let mut input = vec![0.0f32; batch.bucket * sample_in];
-    for (i, r) in batch.requests.iter().enumerate() {
-        input[i * sample_in..(i + 1) * sample_in].copy_from_slice(&r.input);
+/// Flush and execute everything still queued in a route's batcher —
+/// shutdown and engine-handoff are *drains*, not sheds: every queued
+/// request completes (bitwise identical to normal service).
+fn drain_state<E: ExecBackend>(ctx: &BatchCtx<'_, E>, gate: &Gate, state: &mut RouteState) {
+    while let Some(batch) = state.batcher.flush() {
+        gate.release(ctx.key, batch.requests.len());
+        state.slots_held = state.slots_held.saturating_sub(batch.requests.len());
+        let _ = ctx.run_batch(batch, &mut state.replies);
     }
+}
 
-    let t0 = Instant::now();
-    let out = runtime.execute_artifact(artifact, &input);
-    let exec_time = t0.elapsed();
+/// Fail every request this engine still holds (used when an unwind
+/// escapes the batch boundary: scheduler state is suspect, so the work is
+/// answered typed rather than retried) and zero the gate ledger.
+fn abandon_state(
+    metrics: &Mutex<Metrics>,
+    gate: &Gate,
+    key: &(String, String),
+    state: &mut RouteState,
+    err: ServeError,
+) {
+    let n = state.replies.len() as u64;
+    if n > 0 {
+        let mut m = lock_unpoisoned(metrics);
+        m.requests_quarantined += n;
+        m.route_mut(&format!("{}/{}", key.0, key.1)).requests_quarantined += n;
+    }
+    for (_, reply) in state.replies.drain() {
+        let _ = reply.send(Err(err.clone()));
+    }
+    gate.release(key, state.slots_held);
+    state.slots_held = 0;
+}
 
-    match out {
-        Ok(out) => {
-            let sample_out = route.sample_output_len;
-            let route_key = format!("{}/{}", key.0, key.1);
-            let mut m = metrics.lock().unwrap();
-            m.batches += 1;
-            m.batched_samples += batch.requests.len() as u64;
-            m.padded_samples += batch.padding() as u64;
-            m.exec_latency.record(exec_time);
-            m.route_mut(&route_key).batches += 1;
-            for (i, r) in batch.requests.iter().enumerate() {
-                let queue_time = t0.duration_since(r.enqueued);
-                let e2e = r.enqueued.elapsed();
-                m.queue_latency.record(queue_time);
-                m.e2e_latency.record(e2e);
-                m.responses += 1;
-                let rm = m.route_mut(&route_key);
-                rm.completed += 1;
-                rm.e2e.record(e2e);
-                if let Some(reply) = replies.remove(&r.id) {
-                    let _ = reply.send(Ok(GenResponse {
-                        id: r.id,
-                        output: out[i * sample_out..(i + 1) * sample_out].to_vec(),
-                        batch_size: batch.bucket,
-                        queue_time,
-                        exec_time,
-                    }));
+/// Spawn one engine incarnation for `key` at a fresh generation.
+fn spawn_incarnation<E>(env: &SupEnv<E>, key: &(String, String))
+where
+    E: ExecBackend + Send + Sync + 'static,
+{
+    let Some(r) = env.sup.routes.get(key) else { return };
+    let my_gen = r.shared.generation.fetch_add(1, Ordering::SeqCst) + 1;
+    env.sup.live.fetch_add(1, Ordering::SeqCst);
+    let sup = env.sup.clone();
+    let thread_env = env.clone();
+    let thread_key = key.clone();
+    let spawned = std::thread::Builder::new()
+        .name(format!("wingan-engine-{}", key.0))
+        .spawn(move || {
+            let _live = LiveGuard(thread_env.sup.clone());
+            run_incarnation(thread_env, thread_key, my_gen);
+        });
+    if spawned.is_err() {
+        sup.live.fetch_sub(1, Ordering::SeqCst);
+        eprintln!("supervisor: failed to spawn engine thread for {}/{}", key.0, key.1);
+    }
+}
+
+/// One supervised engine incarnation: drains its route's shared channel,
+/// schedules and executes batches with containment, and reports its own
+/// death (panic storm or escaped unwind) to the supervisor. Exits
+/// silently when superseded (watchdog bumped the generation) or on
+/// shutdown — both after *completing* queued work, so every admitted
+/// request gets exactly one fate.
+fn run_incarnation<E>(env: SupEnv<E>, key: (String, String), my_gen: u64)
+where
+    E: ExecBackend + Send + Sync + 'static,
+{
+    let Some(shared) = env.sup.routes.get(&key).map(|r| r.shared.clone()) else { return };
+    let Ok(route) = env.router.route(&key.0, &key.1) else { return };
+    let mut state = RouteState::new(&env.cfg, route.bucket_sizes());
+    let ctx = BatchCtx {
+        runtime: env.backend.as_ref(),
+        router: &env.router,
+        metrics: &env.metrics,
+        faults: env.cfg.faults.as_deref(),
+        key: &key,
+    };
+    let epoch = env.sup.epoch;
+    let idle_tick = Duration::from_millis(20);
+    loop {
+        if shared.generation.load(Ordering::SeqCst) != my_gen {
+            // superseded (watchdog): complete what we hold, exit quietly —
+            // the death was already charged by the supervisor
+            drain_state(&ctx, &env.gate, &mut state);
+            return;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            // graceful shutdown: pull everything still in the channel into
+            // the batcher, then drain — shutdown completes work
+            let mut msgs = Vec::new();
+            {
+                let rx = lock_unpoisoned(&shared.rx);
+                while let Ok(m) = rx.try_recv() {
+                    msgs.push(m);
+                }
+            }
+            for m in msgs {
+                if let Msg::Request(req, reply) = m {
+                    admit_to_state(&mut state, &env.metrics, &env.gate, &key, req, reply);
+                }
+            }
+            drain_state(&ctx, &env.gate, &mut state);
+            return;
+        }
+        // wait for work, but never past the nearest scheduler deadline and
+        // never past the idle tick (shutdown/supersession must be noticed)
+        let timeout = state
+            .batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(idle_tick)
+            .min(idle_tick);
+        let mut msgs = Vec::new();
+        {
+            let rx = lock_unpoisoned(&shared.rx);
+            match rx.recv_timeout(timeout) {
+                Ok(m) => {
+                    msgs.push(m);
+                    while let Ok(m) = rx.try_recv() {
+                        msgs.push(m);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    continue;
                 }
             }
         }
-        Err(e) => fail_batch(&batch, replies, ServeError::Execution(e.to_string())),
+        let mut saw_shutdown = false;
+        for m in msgs {
+            match m {
+                Msg::Request(req, reply) => {
+                    admit_to_state(&mut state, &env.metrics, &env.gate, &key, req, reply)
+                }
+                Msg::Shutdown => saw_shutdown = true,
+            }
+        }
+        if saw_shutdown {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            continue; // the shutdown branch above drains and exits
+        }
+        // the dispatch round itself runs under catch_unwind: a bug in the
+        // scheduler/accounting path (not just the backend) still cannot
+        // take the process down
+        let round = catch_unwind(AssertUnwindSafe(|| {
+            dispatch_round(&ctx, &env.gate, &mut state, &shared, my_gen, epoch)
+        }));
+        match round {
+            Ok(0) => {}
+            Ok(contained) => {
+                let now = Instant::now();
+                let storm = {
+                    let mut pol = lock_unpoisoned(&shared.policy);
+                    let mut s = false;
+                    for _ in 0..contained {
+                        s |= pol.note_contained_panic(now);
+                    }
+                    s
+                };
+                if storm {
+                    // panic storm: containment is working but something is
+                    // systematically wrong — finish what we hold (every
+                    // request a fate), then die and let the supervisor
+                    // apply backoff / the breaker
+                    drain_state(&ctx, &env.gate, &mut state);
+                    let _ = env
+                        .sup_tx
+                        .send(SupEvent::Died { key: key.clone(), generation: my_gen });
+                    return;
+                }
+            }
+            Err(p) => {
+                // an unwind escaped the batch boundary: scheduler state is
+                // suspect; answer everything typed and report the death
+                let msg = panic_message(p);
+                abandon_state(
+                    &env.metrics,
+                    &env.gate,
+                    &key,
+                    &mut state,
+                    ServeError::Crashed(format!("engine incarnation died: {msg}")),
+                );
+                let _ = shared.busy_gen.compare_exchange(
+                    my_gen,
+                    IDLE_GEN,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                );
+                let _ = env.sup_tx.send(SupEvent::Died { key: key.clone(), generation: my_gen });
+                return;
+            }
+        }
     }
-    exec_time
 }
 
-fn fail_batch(
-    batch: &ReadyBatch,
-    replies: &mut HashMap<RequestId, Reply>,
-    err: ServeError,
-) {
-    for r in &batch.requests {
-        if let Some(reply) = replies.remove(&r.id) {
-            let _ = reply.send(Err(err.clone()));
+/// Poll the batcher until it has nothing dispatchable, executing released
+/// batches with the watchdog heartbeat set; returns how many panics were
+/// contained this round.
+fn dispatch_round<E: ExecBackend>(
+    ctx: &BatchCtx<'_, E>,
+    gate: &Gate,
+    state: &mut RouteState,
+    shared: &RouteShared,
+    my_gen: u64,
+    epoch: Instant,
+) -> u32 {
+    let mut contained = 0u32;
+    loop {
+        let now = Instant::now();
+        let Dispatch { batch, shed } = state.batcher.poll(now);
+        if !shed.is_empty() {
+            gate.release(ctx.key, shed.len());
+            state.slots_held = state.slots_held.saturating_sub(shed.len());
+            shed_requests(ctx.metrics, ctx.key, shed, &mut state.replies);
         }
+        let Some(batch) = batch else { break };
+        gate.release(ctx.key, batch.requests.len());
+        state.slots_held = state.slots_held.saturating_sub(batch.requests.len());
+        // heartbeat: the supervisor's watchdog sees (generation, since)
+        // and supersedes us if a batch wedges past the deadline
+        shared.busy_since_ms.store(elapsed_ms(epoch), Ordering::SeqCst);
+        shared.busy_gen.store(my_gen, Ordering::SeqCst);
+        let outcome = ctx.run_batch(batch, &mut state.replies);
+        let _ = shared.busy_gen.compare_exchange(my_gen, IDLE_GEN, Ordering::SeqCst, Ordering::SeqCst);
+        contained += outcome.contained;
+        state.batcher.observe(outcome.service);
+    }
+    contained
+}
+
+/// The supervisor: owns restart policy for every route. Death events and
+/// a periodic tick drive per-route [`RoutePolicy`] state machines —
+/// backoff-scheduled restarts, breaker trips, the stuck-batch watchdog —
+/// and an open breaker's queue is shed typed instead of hanging.
+fn supervisor_loop<E>(env: SupEnv<E>, sup_rx: Receiver<SupEvent>)
+where
+    E: ExecBackend + Send + Sync + 'static,
+{
+    let tick = Duration::from_millis(2);
+    let watchdog_ms = env.cfg.supervisor.watchdog.as_millis() as u64;
+    loop {
+        match sup_rx.recv_timeout(tick) {
+            Ok(SupEvent::Died { key, generation }) => {
+                if let Some(r) = env.sup.routes.get(&key) {
+                    // only a *current* incarnation's death counts: a stale
+                    // one was already superseded (and charged) by the
+                    // watchdog. Retiring the generation here also stops a
+                    // half-dead incarnation from racing its replacement.
+                    if r.shared
+                        .generation
+                        .compare_exchange(generation, generation + 1, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        let _ = r.shared.busy_gen.compare_exchange(
+                            generation,
+                            IDLE_GEN,
+                            Ordering::SeqCst,
+                            Ordering::SeqCst,
+                        );
+                        let verdict = lock_unpoisoned(&r.shared.policy).note_death(Instant::now());
+                        if verdict == DeathVerdict::BreakerOpen {
+                            eprintln!(
+                                "supervisor: route {}/{} circuit breaker OPEN (too many engine deaths)",
+                                key.0, key.1
+                            );
+                        }
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            // unreachable while env holds a sender clone; exit defensively
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+        let now = Instant::now();
+        let now_ms = elapsed_ms(env.sup.epoch);
+        let shutting = env.sup.shutdown.load(Ordering::SeqCst);
+        for (key, r) in &env.sup.routes {
+            // stuck-batch watchdog: a batch executing past the deadline
+            // retires its incarnation (which exits at its next loop check)
+            // and charges a death
+            let gen = r.shared.generation.load(Ordering::SeqCst);
+            let busy = r.shared.busy_gen.load(Ordering::SeqCst);
+            if busy == gen
+                && now_ms.saturating_sub(r.shared.busy_since_ms.load(Ordering::SeqCst))
+                    > watchdog_ms
+                && r.shared
+                    .generation
+                    .compare_exchange(gen, gen + 1, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                let _ = r.shared.busy_gen.compare_exchange(
+                    busy,
+                    IDLE_GEN,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                );
+                eprintln!(
+                    "supervisor: route {}/{} stuck batch (watchdog {watchdog_ms}ms); superseding engine",
+                    key.0, key.1
+                );
+                let _ = lock_unpoisoned(&r.shared.policy).note_stuck(now);
+            }
+            if shutting {
+                continue;
+            }
+            // an open breaker has no engine: shed its queue typed so
+            // callers never hang on a dead route
+            let (open, restarts) = {
+                let pol = lock_unpoisoned(&r.shared.policy);
+                (pol.is_open(), pol.restarts())
+            };
+            if open {
+                shed_unhealthy_queue(&env.metrics, &env.gate, key, r, restarts);
+            }
+            // due restarts (backoff expiry, breaker half-open probe)
+            let action = lock_unpoisoned(&r.shared.policy).poll(now);
+            if action == Some(SupervisorAction::Restart) {
+                spawn_incarnation(&env, key);
+            }
+        }
+        if shutting && env.sup.live.load(Ordering::SeqCst) == 0 {
+            // every incarnation has exited; whatever is still in a channel
+            // (e.g. a breaker-open route with no engine) is answered typed
+            for (key, r) in &env.sup.routes {
+                abandon_queue(&env.metrics, &env.gate, key, r);
+            }
+            return;
+        }
+    }
+}
+
+/// Drain a breaker-open route's channel, answering each request with a
+/// typed [`Rejected::Unhealthy`] shed.
+fn shed_unhealthy_queue(
+    metrics: &Mutex<Metrics>,
+    gate: &Gate,
+    key: &(String, String),
+    r: &SupRoute,
+    restarts: u64,
+) {
+    let rx = match r.shared.rx.try_lock() {
+        Ok(g) => g,
+        Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        Err(TryLockError::WouldBlock) => return,
+    };
+    while let Ok(m) = rx.try_recv() {
+        if let Msg::Request(_, reply) = m {
+            gate.release(key, 1);
+            let rej = Rejected::Unhealthy { restarts };
+            count_shed(metrics, key, &rej);
+            let _ = reply.send(Err(ServeError::Rejected(rej)));
+        }
+    }
+}
+
+/// Answer whatever is still queued on a route with typed
+/// [`ServeError::EngineShutdown`] and count it — the drain deadline
+/// passed (or the route had no engine); requests are never silently lost.
+fn abandon_queue(metrics: &Mutex<Metrics>, gate: &Gate, key: &(String, String), r: &SupRoute) {
+    let rx = match r.shared.rx.try_lock() {
+        Ok(g) => g,
+        Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        Err(TryLockError::WouldBlock) => return,
+    };
+    let mut abandoned = 0u64;
+    while let Ok(m) = rx.try_recv() {
+        if let Msg::Request(_, reply) = m {
+            gate.release(key, 1);
+            abandoned += 1;
+            let _ = reply.send(Err(ServeError::EngineShutdown));
+        }
+    }
+    if abandoned > 0 {
+        lock_unpoisoned(metrics).abandoned_at_shutdown += abandoned;
+        eprintln!(
+            "coordinator: abandoned {abandoned} queued requests on {}/{} at shutdown",
+            key.0, key.1
+        );
     }
 }

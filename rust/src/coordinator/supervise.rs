@@ -1,0 +1,540 @@
+//! Supervision policy for route engine threads: restart backoff, circuit
+//! breaker, stuck-batch watchdog, and the health-report types.
+//!
+//! Following the batcher's design rule, the policy here is a **pure state
+//! machine over injected time**: [`RoutePolicy`] never reads the clock or
+//! touches a thread — the supervisor thread in
+//! [`crate::coordinator::server`] feeds it observations
+//! ([`RoutePolicy::note_contained_panic`], [`RoutePolicy::note_death`],
+//! [`RoutePolicy::note_stuck`]) and polls it for due actions
+//! ([`RoutePolicy::poll`]), all stamped with an explicit `now: Instant`.
+//! That keeps the breaker schedule unit-testable on a mock clock, exactly
+//! like the continuous batcher's admission logic.
+//!
+//! Lifecycle of a route under faults:
+//!
+//! 1. A contained panic is just a counter — until `storm_panics` of them
+//!    land inside `storm_window`, which declares a **panic storm**: the
+//!    engine incarnation is asked to drain and exit, counting as a death.
+//! 2. Each death (storm, unwind that escaped the batch boundary, or a
+//!    watchdog-declared stuck batch) schedules a restart after a **capped
+//!    exponential backoff** (`backoff_base · 2^(recent deaths − 1)`, capped
+//!    at `backoff_max`).
+//! 3. `max_restarts` deaths inside `restart_window` **trip the breaker**:
+//!    the route goes [`RouteHealth::Unhealthy`] and sheds with a typed
+//!    [`crate::coordinator::Rejected::Unhealthy`] instead of queueing onto
+//!    a dead engine.
+//! 4. After `breaker_cooldown` the breaker **half-opens**: one probe
+//!    incarnation starts, and the route is [`RouteHealth::Degraded`] for a
+//!    `probation` period. Surviving probation closes the breaker and
+//!    clears the death window; dying during probation re-opens it.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Tunables for the per-route supervision policy. The defaults suit the
+/// serving binary; the chaos tests shrink every window to milliseconds.
+#[derive(Clone, Debug)]
+pub struct SupervisorConfig {
+    /// A batch executing longer than this is declared stuck: the zombie
+    /// incarnation is superseded (its results discarded) and the death is
+    /// charged to the route.
+    pub watchdog: Duration,
+    /// Backoff before the first restart; doubles per recent death.
+    pub backoff_base: Duration,
+    /// Cap on the exponential backoff.
+    pub backoff_max: Duration,
+    /// Deaths inside `restart_window` that trip the circuit breaker.
+    pub max_restarts: u32,
+    /// Sliding window the breaker counts deaths over.
+    pub restart_window: Duration,
+    /// How long a tripped breaker stays open before half-opening a probe
+    /// incarnation.
+    pub breaker_cooldown: Duration,
+    /// How long the probe incarnation must survive to close the breaker.
+    pub probation: Duration,
+    /// Contained panics inside `storm_window` that count as a death (the
+    /// incarnation drains and exits rather than grinding through a
+    /// poisoned stream one contained panic at a time).
+    pub storm_panics: u32,
+    /// Sliding window the storm detector counts contained panics over.
+    pub storm_window: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            watchdog: Duration::from_secs(10),
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_secs(2),
+            max_restarts: 5,
+            restart_window: Duration::from_secs(30),
+            breaker_cooldown: Duration::from_secs(5),
+            probation: Duration::from_secs(5),
+            storm_panics: 8,
+            storm_window: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Probe-surface health of one route (the tri-state the scale-out
+/// ROADMAP item's readiness probes need).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteHealth {
+    /// Breaker closed; engine serving normally.
+    Healthy,
+    /// Engine restarting (backoff) or on probation after a half-open.
+    Degraded,
+    /// Breaker open: requests shed with [`crate::coordinator::Rejected::Unhealthy`].
+    Unhealthy,
+}
+
+impl fmt::Display for RouteHealth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            RouteHealth::Healthy => "healthy",
+            RouteHealth::Degraded => "degraded",
+            RouteHealth::Unhealthy => "unhealthy",
+        })
+    }
+}
+
+/// Breaker position (internal; surfaced as a label in the snapshot).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Breaker {
+    Closed,
+    /// Restart scheduled at the instant.
+    Backoff { until: Instant },
+    /// Tripped; half-opens at the instant.
+    Open { until: Instant },
+    /// Probe incarnation running; closes at the instant if it survives.
+    Probation { until: Instant },
+}
+
+/// What the policy tells the supervisor after a death is recorded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeathVerdict {
+    /// Spawn a replacement when [`RoutePolicy::poll`] says so (at the
+    /// given instant).
+    RestartAt(Instant),
+    /// Too many deaths in the window — the breaker is now open; shed
+    /// instead of restarting until it half-opens.
+    BreakerOpen,
+}
+
+/// A due action from [`RoutePolicy::poll`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SupervisorAction {
+    /// Spawn a new engine incarnation now (backoff elapsed, or the open
+    /// breaker half-opened a probe).
+    Restart,
+    /// The probe survived probation: the breaker closed and the death
+    /// window was cleared. Nothing to spawn.
+    BreakerClosed,
+}
+
+/// Pure supervision state machine for one route. All methods take an
+/// explicit `now`; nothing here reads the clock.
+#[derive(Debug)]
+pub struct RoutePolicy {
+    cfg: SupervisorConfig,
+    breaker: Breaker,
+    /// death instants inside `restart_window` (pruned on observation)
+    deaths: VecDeque<Instant>,
+    /// contained-panic instants inside `storm_window`
+    storm: VecDeque<Instant>,
+    restarts: u64,
+    watchdog_fires: u64,
+    total_deaths: u64,
+}
+
+impl RoutePolicy {
+    pub fn new(cfg: SupervisorConfig) -> RoutePolicy {
+        RoutePolicy {
+            cfg,
+            breaker: Breaker::Closed,
+            deaths: VecDeque::new(),
+            storm: VecDeque::new(),
+            restarts: 0,
+            watchdog_fires: 0,
+            total_deaths: 0,
+        }
+    }
+
+    pub fn config(&self) -> &SupervisorConfig {
+        &self.cfg
+    }
+
+    /// Record a contained panic at `now`. Returns `true` when this panic
+    /// completes a storm (`storm_panics` inside `storm_window`) — the
+    /// caller should have the incarnation drain and exit, then report the
+    /// death via [`RoutePolicy::note_death`]. The storm window resets on a
+    /// verdict so the replacement incarnation starts clean.
+    pub fn note_contained_panic(&mut self, now: Instant) -> bool {
+        let cutoff = now.checked_sub(self.cfg.storm_window);
+        while let Some(&t) = self.storm.front() {
+            match cutoff {
+                Some(c) if t < c => {
+                    self.storm.pop_front();
+                }
+                _ => break,
+            }
+        }
+        self.storm.push_back(now);
+        if self.storm.len() as u32 >= self.cfg.storm_panics {
+            self.storm.clear();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record an engine death (panic storm, escaped unwind, or watchdog
+    /// supersession) at `now` and decide what happens next.
+    pub fn note_death(&mut self, now: Instant) -> DeathVerdict {
+        self.total_deaths += 1;
+        let cutoff = now.checked_sub(self.cfg.restart_window);
+        while let Some(&t) = self.deaths.front() {
+            match cutoff {
+                Some(c) if t < c => {
+                    self.deaths.pop_front();
+                }
+                _ => break,
+            }
+        }
+        self.deaths.push_back(now);
+        let died_on_probation = matches!(self.breaker, Breaker::Probation { .. });
+        if died_on_probation || self.deaths.len() as u32 >= self.cfg.max_restarts {
+            self.breaker = Breaker::Open { until: now + self.cfg.breaker_cooldown };
+            return DeathVerdict::BreakerOpen;
+        }
+        // capped exponential: base · 2^(recent deaths − 1)
+        let exp = (self.deaths.len() as u32).saturating_sub(1).min(20);
+        let backoff = self
+            .cfg
+            .backoff_base
+            .saturating_mul(1u32 << exp)
+            .min(self.cfg.backoff_max);
+        let until = now + backoff;
+        self.breaker = Breaker::Backoff { until };
+        DeathVerdict::RestartAt(until)
+    }
+
+    /// Record a watchdog firing (stuck batch) at `now`. The zombie
+    /// incarnation is superseded by the caller (generation bump); the
+    /// policy charges it as a death.
+    pub fn note_stuck(&mut self, now: Instant) -> DeathVerdict {
+        self.watchdog_fires += 1;
+        self.note_death(now)
+    }
+
+    /// Pop the action that is due at `now`, if any.
+    pub fn poll(&mut self, now: Instant) -> Option<SupervisorAction> {
+        match self.breaker {
+            Breaker::Closed => None,
+            Breaker::Backoff { until } if now >= until => {
+                self.breaker = Breaker::Closed;
+                self.restarts += 1;
+                Some(SupervisorAction::Restart)
+            }
+            Breaker::Open { until } if now >= until => {
+                // half-open: one probe incarnation, on probation
+                self.breaker = Breaker::Probation { until: now + self.cfg.probation };
+                self.restarts += 1;
+                Some(SupervisorAction::Restart)
+            }
+            Breaker::Probation { until } if now >= until => {
+                self.breaker = Breaker::Closed;
+                self.deaths.clear();
+                Some(SupervisorAction::BreakerClosed)
+            }
+            _ => None,
+        }
+    }
+
+    /// True when the breaker is open (requests should shed with
+    /// [`crate::coordinator::Rejected::Unhealthy`]).
+    pub fn is_open(&self) -> bool {
+        matches!(self.breaker, Breaker::Open { .. })
+    }
+
+    /// Probe-surface health of this route.
+    pub fn health(&self) -> RouteHealth {
+        match self.breaker {
+            Breaker::Closed => RouteHealth::Healthy,
+            Breaker::Backoff { .. } | Breaker::Probation { .. } => RouteHealth::Degraded,
+            Breaker::Open { .. } => RouteHealth::Unhealthy,
+        }
+    }
+
+    /// Lifetime restarts actually performed (spawned replacements).
+    pub fn restarts(&self) -> u64 {
+        self.restarts
+    }
+
+    /// Lifetime watchdog (stuck-batch) firings.
+    pub fn watchdog_fires(&self) -> u64 {
+        self.watchdog_fires
+    }
+
+    /// Point-in-time snapshot for the health report.
+    pub fn snapshot(&self, now: Instant) -> RouteHealthSnapshot {
+        let cutoff = now.checked_sub(self.cfg.restart_window);
+        let recent = self
+            .deaths
+            .iter()
+            .filter(|&&t| match cutoff {
+                Some(c) => t >= c,
+                None => true,
+            })
+            .count() as u32;
+        RouteHealthSnapshot {
+            health: self.health(),
+            breaker: match self.breaker {
+                Breaker::Closed => "closed",
+                Breaker::Backoff { .. } => "backoff",
+                Breaker::Open { .. } => "open",
+                Breaker::Probation { .. } => "probation",
+            },
+            restarts: self.restarts,
+            recent_deaths: recent,
+            total_deaths: self.total_deaths,
+            watchdog_fires: self.watchdog_fires,
+        }
+    }
+}
+
+/// One route's entry in the health report.
+#[derive(Clone, Debug)]
+pub struct RouteHealthSnapshot {
+    pub health: RouteHealth,
+    /// breaker position label: `closed` / `backoff` / `open` / `probation`
+    pub breaker: &'static str,
+    /// lifetime engine restarts
+    pub restarts: u64,
+    /// deaths inside the current restart window
+    pub recent_deaths: u32,
+    /// lifetime engine deaths
+    pub total_deaths: u64,
+    /// lifetime stuck-batch watchdog firings
+    pub watchdog_fires: u64,
+}
+
+/// The probe surface: per-route health snapshots, from
+/// [`crate::coordinator::Coordinator::health`].
+#[derive(Clone, Debug, Default)]
+pub struct HealthReport {
+    /// keyed `"model/method"`, like the metrics routes
+    pub routes: BTreeMap<String, RouteHealthSnapshot>,
+}
+
+impl HealthReport {
+    /// True when every route is [`RouteHealth::Healthy`] — the readiness
+    /// verdict a fleet router would gate traffic on.
+    pub fn all_healthy(&self) -> bool {
+        self.routes.values().all(|r| r.health == RouteHealth::Healthy)
+    }
+
+    /// One route's snapshot.
+    pub fn route(&self, name: &str) -> Option<&RouteHealthSnapshot> {
+        self.routes.get(name)
+    }
+
+    /// Multi-line human report (one line per route).
+    pub fn report(&self) -> String {
+        if self.routes.is_empty() {
+            return "health: no supervised routes".to_string();
+        }
+        self.routes
+            .iter()
+            .map(|(name, r)| {
+                format!(
+                    "health {name}: {} breaker={} restarts={} recent_deaths={} \
+                     total_deaths={} watchdog_fires={}",
+                    r.health, r.breaker, r.restarts, r.recent_deaths, r.total_deaths,
+                    r.watchdog_fires,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SupervisorConfig {
+        SupervisorConfig {
+            watchdog: Duration::from_millis(100),
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_millis(80),
+            max_restarts: 4,
+            restart_window: Duration::from_secs(10),
+            breaker_cooldown: Duration::from_millis(500),
+            probation: Duration::from_millis(300),
+            storm_panics: 3,
+            storm_window: Duration::from_millis(200),
+        }
+    }
+
+    #[test]
+    fn backoff_schedule_doubles_and_caps() {
+        let mut p = RoutePolicy::new(cfg());
+        let t0 = Instant::now();
+        // deaths at the same mock instant: backoff 10, 20, then breaker at
+        // the 4th... use max_restarts 10 here to see the cap
+        let mut c = cfg();
+        c.max_restarts = 10;
+        let mut p2 = RoutePolicy::new(c);
+        let expect = [10u64, 20, 40, 80, 80, 80];
+        let mut now = t0;
+        for (i, ms) in expect.iter().enumerate() {
+            match p2.note_death(now) {
+                DeathVerdict::RestartAt(at) => {
+                    assert_eq!(at - now, Duration::from_millis(*ms), "death #{i}");
+                    // restart exactly when due, not before
+                    assert_eq!(p2.poll(at - Duration::from_millis(1)), None);
+                    assert_eq!(p2.poll(at), Some(SupervisorAction::Restart));
+                    assert_eq!(p2.health(), RouteHealth::Healthy);
+                    now = at;
+                }
+                v => panic!("death #{i}: unexpected {v:?}"),
+            }
+        }
+        assert_eq!(p2.restarts(), 6);
+        // and the default-config policy starts Healthy with no restarts
+        assert_eq!(p.health(), RouteHealth::Healthy);
+        assert_eq!(p.poll(t0), None);
+        assert_eq!(p.restarts(), 0);
+    }
+
+    #[test]
+    fn breaker_trips_half_opens_and_resets() {
+        let mut p = RoutePolicy::new(cfg());
+        let t0 = Instant::now();
+        let mut now = t0;
+        // 3 deaths restart; the 4th (max_restarts) trips the breaker
+        for _ in 0..3 {
+            match p.note_death(now) {
+                DeathVerdict::RestartAt(at) => {
+                    assert_eq!(p.poll(at), Some(SupervisorAction::Restart));
+                    now = at;
+                }
+                v => panic!("unexpected {v:?}"),
+            }
+        }
+        assert_eq!(p.note_death(now), DeathVerdict::BreakerOpen);
+        assert_eq!(p.health(), RouteHealth::Unhealthy);
+        assert!(p.is_open());
+        // nothing due while the cooldown runs
+        assert_eq!(p.poll(now + Duration::from_millis(499)), None);
+        // half-open: a probe restarts and the route is Degraded
+        now += Duration::from_millis(500);
+        assert_eq!(p.poll(now), Some(SupervisorAction::Restart));
+        assert_eq!(p.health(), RouteHealth::Degraded);
+        assert!(!p.is_open());
+        assert_eq!(p.snapshot(now).breaker, "probation");
+        // surviving probation closes the breaker and clears the window
+        now += Duration::from_millis(300);
+        assert_eq!(p.poll(now), Some(SupervisorAction::BreakerClosed));
+        assert_eq!(p.health(), RouteHealth::Healthy);
+        assert_eq!(p.snapshot(now).recent_deaths, 0, "probation survival clears the window");
+        // a fresh death after reset is an ordinary first-death backoff
+        assert_eq!(
+            p.note_death(now),
+            DeathVerdict::RestartAt(now + Duration::from_millis(10))
+        );
+    }
+
+    #[test]
+    fn death_during_probation_reopens_the_breaker() {
+        let mut p = RoutePolicy::new(cfg());
+        let mut now = Instant::now();
+        for _ in 0..3 {
+            if let DeathVerdict::RestartAt(at) = p.note_death(now) {
+                p.poll(at);
+                now = at;
+            }
+        }
+        assert_eq!(p.note_death(now), DeathVerdict::BreakerOpen);
+        now += Duration::from_millis(500);
+        assert_eq!(p.poll(now), Some(SupervisorAction::Restart));
+        // probe dies mid-probation → straight back to open, no backoff
+        now += Duration::from_millis(100);
+        assert_eq!(p.note_death(now), DeathVerdict::BreakerOpen);
+        assert_eq!(p.health(), RouteHealth::Unhealthy);
+    }
+
+    #[test]
+    fn deaths_outside_the_window_do_not_trip() {
+        let mut p = RoutePolicy::new(cfg());
+        let mut now = Instant::now();
+        // 3 deaths, then the window slides past them
+        for _ in 0..3 {
+            if let DeathVerdict::RestartAt(at) = p.note_death(now) {
+                p.poll(at);
+                now = at;
+            }
+        }
+        now += Duration::from_secs(11); // > restart_window
+        // this 4th death is alone in its window: backoff, not breaker —
+        // and at the first-death exponent again
+        assert_eq!(
+            p.note_death(now),
+            DeathVerdict::RestartAt(now + Duration::from_millis(10))
+        );
+    }
+
+    #[test]
+    fn storm_detector_counts_inside_the_window_only() {
+        let mut p = RoutePolicy::new(cfg());
+        let t0 = Instant::now();
+        assert!(!p.note_contained_panic(t0));
+        assert!(!p.note_contained_panic(t0 + Duration::from_millis(50)));
+        // third inside 200ms → storm
+        assert!(p.note_contained_panic(t0 + Duration::from_millis(100)));
+        // verdict resets the window: the next panic starts a fresh count
+        assert!(!p.note_contained_panic(t0 + Duration::from_millis(110)));
+        // spaced-out panics never storm
+        let mut q = RoutePolicy::new(cfg());
+        for i in 0..10u64 {
+            assert!(!q.note_contained_panic(t0 + Duration::from_millis(300 * i)));
+        }
+    }
+
+    #[test]
+    fn watchdog_counts_as_a_death_and_is_tracked() {
+        let mut p = RoutePolicy::new(cfg());
+        let now = Instant::now();
+        match p.note_stuck(now) {
+            DeathVerdict::RestartAt(_) => {}
+            v => panic!("unexpected {v:?}"),
+        }
+        assert_eq!(p.watchdog_fires(), 1);
+        assert_eq!(p.snapshot(now).total_deaths, 1);
+        assert_eq!(p.snapshot(now).recent_deaths, 1);
+    }
+
+    #[test]
+    fn health_report_surface() {
+        let mut p = RoutePolicy::new(cfg());
+        let now = Instant::now();
+        let mut report = HealthReport::default();
+        report.routes.insert("dcgan/winograd".into(), p.snapshot(now));
+        assert!(report.all_healthy());
+        assert!(report.report().contains("health dcgan/winograd: healthy breaker=closed"));
+        for _ in 0..4 {
+            p.note_death(now);
+        }
+        report.routes.insert("dcgan/winograd".into(), p.snapshot(now));
+        assert!(!report.all_healthy());
+        let r = report.route("dcgan/winograd").unwrap();
+        assert_eq!(r.health, RouteHealth::Unhealthy);
+        assert_eq!(r.breaker, "open");
+        assert_eq!(r.recent_deaths, 4);
+        assert!(report.report().contains("unhealthy breaker=open"), "{}", report.report());
+        assert_eq!(HealthReport::default().report(), "health: no supervised routes");
+    }
+}

@@ -47,13 +47,28 @@
 //! then the `WINGAN_WORKERS` environment variable, then one thread per
 //! available core.
 //!
+//! # Fault isolation
+//!
+//! A panicking chunk is caught on the worker, reported to its dispatcher,
+//! and re-raised there after every sibling chunk is accounted for — the
+//! worker thread itself survives, and so does the dispatch protocol. The
+//! pool's internal locks are taken through
+//! [`lock_unpoisoned`](crate::util::lock_unpoisoned), so a panic while
+//! holding one cannot brick every other route sharing the pool. For
+//! deterministic chaos testing, [`WorkerPool::set_fault_plane`] installs a
+//! [`crate::faultinject::FaultPlane`] whose `worker_chunk` site fires
+//! panics/delays inside chunk tasks; when no plane is installed the hot
+//! path pays one relaxed atomic load per dispatch.
+//!
 //! [`NativeConfig::workers`]: crate::engine::NativeConfig#structfield.workers
 
+use crate::faultinject::{FaultAction, FaultPlane, FaultSite};
+use crate::util::lock_unpoisoned;
 use std::any::Any;
 use std::cell::Cell;
 use std::fmt;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -121,6 +136,11 @@ pub struct WorkerPool {
     threads: usize,
     /// unique per pool; workers tag themselves with it (reentrancy guard)
     id: u64,
+    /// deterministic fault-injection plane (`worker_chunk` site); `None`
+    /// in production
+    faults: Mutex<Option<Arc<FaultPlane>>>,
+    /// fast-path flag so undisturbed dispatches never touch the mutex
+    faults_set: AtomicBool,
 }
 
 impl WorkerPool {
@@ -142,7 +162,25 @@ impl WorkerPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        WorkerPool { tx: Mutex::new(Some(tx)), handles: Mutex::new(handles), threads, id }
+        WorkerPool {
+            tx: Mutex::new(Some(tx)),
+            handles: Mutex::new(handles),
+            threads,
+            id,
+            faults: Mutex::new(None),
+            faults_set: AtomicBool::new(false),
+        }
+    }
+
+    /// Install (or clear) a deterministic fault-injection plane. Chunk
+    /// tasks consult the plane's `worker_chunk` site: a firing rule panics
+    /// inside the chunk (contained and re-raised by the dispatcher, like
+    /// any real chunk bug) or delays it. Production servers never call
+    /// this; `wingan chaos` and the chaos tests do.
+    pub fn set_fault_plane(&self, plane: Option<Arc<FaultPlane>>) {
+        let set = plane.is_some();
+        *lock_unpoisoned(&self.faults) = plane;
+        self.faults_set.store(set, Ordering::Release);
     }
 
     /// `Arc`-wrapped pool, ready to share across engines (one pool serves
@@ -181,16 +219,34 @@ impl WorkerPool {
         if n == 0 {
             return Vec::new();
         }
+        // fault hook (chaos testing): fetched once per dispatch; a firing
+        // `worker_chunk` rule panics or delays inside the chunk task, so
+        // it exercises exactly the containment path a real chunk bug would
+        let plane = if self.faults_set.load(Ordering::Acquire) {
+            lock_unpoisoned(&self.faults).clone()
+        } else {
+            None
+        };
+        let run = |s: usize, e: usize| {
+            if let Some(p) = &plane {
+                match p.check(FaultSite::WorkerChunk) {
+                    Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+                    Some(_) => panic!("fault injected: worker_chunk panic"),
+                    None => {}
+                }
+            }
+            f(s, e)
+        };
         let n_chunks = max_chunks.max(1).min(n);
         if n_chunks == 1 || WORKER_OF.with(|w| w.get()) == self.id {
-            return vec![f(0, n)];
+            return vec![run(0, n)];
         }
         let bounds = chunk_bounds(n_chunks, n);
 
         // one queue-lock acquisition per dispatch, not per job (Sender is
         // Clone and send() itself needs no lock here)
         let queue = {
-            let tx = self.tx.lock().expect("pool queue lock poisoned");
+            let tx = lock_unpoisoned(&self.tx);
             tx.as_ref().expect("worker pool used after shutdown").clone()
         };
 
@@ -199,13 +255,13 @@ impl WorkerPool {
         let (done_tx, done_rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
         for (i, &(s, e)) in bounds.iter().enumerate().skip(1) {
             let tx = done_tx.clone();
-            let f = &f;
+            let f = &run;
             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                 let r = catch_unwind(AssertUnwindSafe(|| f(s, e)));
                 let _ = tx.send((i, r));
             });
-            // SAFETY: the job borrows `f` (and, through `T`, possibly the
-            // caller's stack). We erase that lifetime to put it on the
+            // SAFETY: the job borrows `run` (which borrows `f` and the
+            // fault plane, and, through `T`, possibly the caller's stack). We erase that lifetime to put it on the
             // 'static queue, which is sound because this function does not
             // return — normally or by unwinding — until each queued job has
             // either completed (its message was received) or been dropped
@@ -227,7 +283,7 @@ impl WorkerPool {
         let mut slots: Vec<Option<T>> = Vec::with_capacity(n_chunks);
         slots.resize_with(n_chunks, || None);
         let mut panicked: Option<Box<dyn Any + Send>> = None;
-        match catch_unwind(AssertUnwindSafe(|| f(bounds[0].0, bounds[0].1))) {
+        match catch_unwind(AssertUnwindSafe(|| run(bounds[0].0, bounds[0].1))) {
             Ok(v) => slots[0] = Some(v),
             Err(p) => panicked = Some(p),
         }
@@ -300,18 +356,18 @@ impl<S: Default> ScratchStash<S> {
     /// Check a scratch out: a previously returned one when available,
     /// otherwise a fresh `S::default()`.
     pub fn take(&self) -> S {
-        self.free.lock().expect("scratch stash poisoned").pop().unwrap_or_default()
+        lock_unpoisoned(&self.free).pop().unwrap_or_default()
     }
 
     /// Return a scratch for the next task to reuse.
     pub fn put(&self, s: S) {
-        self.free.lock().expect("scratch stash poisoned").push(s);
+        lock_unpoisoned(&self.free).push(s);
     }
 
     /// Number of scratches currently parked in the stash (observability /
     /// tests — the steady state equals the peak concurrent-task count).
     pub fn idle(&self) -> usize {
-        self.free.lock().expect("scratch stash poisoned").len()
+        lock_unpoisoned(&self.free).len()
     }
 }
 
@@ -323,7 +379,7 @@ impl<S: Default> Default for ScratchStash<S> {
 
 impl<S> fmt::Debug for ScratchStash<S> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let idle = self.free.lock().map(|v| v.len()).unwrap_or(0);
+        let idle = lock_unpoisoned(&self.free).len();
         f.debug_struct("ScratchStash").field("idle", &idle).finish()
     }
 }
@@ -336,13 +392,11 @@ impl fmt::Debug for WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        if let Ok(mut tx) = self.tx.lock() {
-            tx.take(); // closing the queue ends every worker's recv loop
-        }
-        if let Ok(mut handles) = self.handles.lock() {
-            for h in handles.drain(..) {
-                let _ = h.join();
-            }
+        // a poisoned queue lock must not leave the sender alive: the
+        // workers would block on recv forever and the joins would hang
+        lock_unpoisoned(&self.tx).take(); // closing the queue ends every worker
+        for h in lock_unpoisoned(&self.handles).drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -351,7 +405,7 @@ fn worker_loop(rx: &Mutex<Receiver<Job>>) {
     loop {
         // hold the lock only while receiving, never while running a job
         let job = {
-            let rx = rx.lock().expect("pool receiver lock poisoned");
+            let rx = lock_unpoisoned(rx);
             rx.recv()
         };
         match job {
@@ -509,6 +563,49 @@ mod tests {
         assert_eq!(resolve_with(0, Some(" 0 ".into())), 1, "trimmed zero env clamps too");
         assert!(resolve_with(0, None) >= 1, "no env -> cores");
         assert!(resolve_workers(0) >= 1, "end-to-end default is at least one worker");
+    }
+
+    #[test]
+    fn locks_recover_after_a_poisoning_panic() {
+        // poison the scratch-stash lock the only way possible: panic while
+        // holding it
+        let stash: ScratchStash<Vec<u8>> = ScratchStash::new();
+        stash.put(vec![1]);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = stash.free.lock().unwrap();
+            panic!("poison the stash lock");
+        }));
+        assert!(stash.free.lock().is_err(), "the mutex really is poisoned");
+        assert_eq!(stash.take(), vec![1], "stash still serves after poisoning");
+
+        // same for the pool's queue lock: a poisoned lock must not turn
+        // one contained panic into a permanent denial of service
+        let pool = WorkerPool::new(2);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = pool.tx.lock().unwrap();
+            panic!("poison the queue lock");
+        }));
+        assert!(pool.tx.lock().is_err(), "the queue lock really is poisoned");
+        let chunks = pool.run_chunked(2, 8, |s, e| e - s);
+        assert_eq!(chunks.iter().sum::<usize>(), 8, "dispatch survives a poisoned queue lock");
+        // Drop must also get through the poisoned lock to close the queue,
+        // or the worker joins below would hang the test
+    }
+
+    #[test]
+    fn worker_chunk_faults_fire_deterministically_then_stop() {
+        let pool = WorkerPool::new(2);
+        let plane = Arc::new(FaultPlane::parse("seed=7;worker_chunk:panic*2@1").unwrap());
+        pool.set_fault_plane(Some(plane.clone()));
+        let r = catch_unwind(AssertUnwindSafe(|| pool.run_chunked(2, 4, |s, e| e - s)));
+        assert!(r.is_err(), "injected chunk panic must reach the dispatcher");
+        assert_eq!(plane.fired_at(FaultSite::WorkerChunk), 2, "both chunks of the burst fired");
+        // the burst cap (*2) is exhausted: the pool serves normally again
+        let chunks = pool.run_chunked(2, 8, |s, e| e - s);
+        assert_eq!(chunks.iter().sum::<usize>(), 8);
+        pool.set_fault_plane(None);
+        let chunks = pool.run_chunked(2, 8, |s, e| e - s);
+        assert_eq!(chunks.iter().sum::<usize>(), 8);
     }
 
     #[test]

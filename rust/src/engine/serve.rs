@@ -67,6 +67,11 @@ pub struct NativeConfig {
     /// — falls back to in-process compilation and publishes the result.
     /// `None` compiles every route in-process, as before.
     pub plan_store: Option<PathBuf>,
+    /// deterministic fault-injection plane ([`crate::faultinject`]),
+    /// installed on the shared worker pool (`worker_chunk` site) and
+    /// consulted at plan-store loads (`artifact_load` site). `None` in
+    /// production; `wingan chaos` and the chaos tests set it.
+    pub faults: Option<Arc<crate::faultinject::FaultPlane>>,
 }
 
 impl Default for NativeConfig {
@@ -80,6 +85,7 @@ impl Default for NativeConfig {
             precision: None,
             kernel: None,
             plan_store: None,
+            faults: None,
         }
     }
 }
@@ -170,7 +176,10 @@ fn plan_matches_zoo<E: crate::util::elem::Elem>(plan: &ModelPlan<E>, g: &Gan) ->
 /// Bring up one route's engine through the plan store: artifact hit when a
 /// valid artifact exists for the key, otherwise in-process compilation
 /// followed by a best-effort publish so the *next* startup is warm. Every
-/// load failure is typed, counted, and logged — never fatal.
+/// load failure is typed, counted, and logged — never fatal — and a
+/// corrupt or zoo-stale artifact is **quarantined** (renamed aside, see
+/// [`PlanStore::quarantine`]) so later boots never re-parse known-bad
+/// bytes and the poison artifact is preserved for forensics.
 fn engine_via_store(
     store: &PlanStore,
     stats: &mut PlanCacheStats,
@@ -178,6 +187,7 @@ fn engine_via_store(
     planner: &Planner,
     key: &PlanKey,
     pool: Arc<WorkerPool>,
+    faults: Option<&crate::faultinject::FaultPlane>,
 ) -> AnyEngine {
     // whether a fallback compile may publish over the existing slot: true
     // for everything except a weight-seed mismatch — a different-seed
@@ -185,43 +195,83 @@ fn engine_via_store(
     // overwriting it would let one misconfigured server destroy (and
     // thrash) an AOT-compiled store
     let mut overwrite = true;
-    let loaded = match store.load(key) {
-        Ok(plan) => {
-            // a decode-valid artifact must still match — layer for layer —
-            // the generator this binary's zoo advertises for the route:
-            // zoo geometry can change without a wire-format bump, and a
-            // stale plan would serve the old architecture (or panic the
-            // engine thread at request time)
-            let matches = match &plan {
-                AnyPlan::F32(p) => plan_matches_zoo(p, g),
-                AnyPlan::F64(p) => plan_matches_zoo(p, g),
-            };
-            if matches {
-                Some(plan)
-            } else {
-                stats.load_failures += 1;
-                eprintln!(
-                    "plan-store: {} is stale for the current zoo; recompiling",
-                    key.file_name()
-                );
-                None
+    // Deterministic fault hook (ArtifactLoad site): a panic here unwinds the
+    // whole startup — the coordinator's boot-time containment turns it into
+    // a typed error instead of a crash; an injected load error exercises the
+    // exact quarantine + recompile path a corrupt artifact takes.
+    let mut injected_failure = false;
+    if let Some(plane) = faults {
+        match plane.check(crate::faultinject::FaultSite::ArtifactLoad) {
+            Some(crate::faultinject::FaultAction::Panic) => {
+                panic!("fault injected: artifact_load panic")
             }
+            Some(crate::faultinject::FaultAction::Delay(d)) => std::thread::sleep(d),
+            Some(_) => injected_failure = true,
+            None => {}
         }
-        Err(err) => {
-            let seed_mismatch =
-                matches!(err, ArtifactError::KeyMismatch { field: "weight seed", .. });
-            if !matches!(err, ArtifactError::Missing { .. }) {
-                stats.load_failures += 1;
-                // the seed-mismatch arm below prints its own (more
-                // specific) message; don't log the same event twice
-                if !seed_mismatch {
-                    eprintln!("plan-store: {} unusable ({err}); recompiling", key.file_name());
+    }
+    let loaded = if injected_failure {
+        stats.load_failures += 1;
+        eprintln!(
+            "plan-store: {} unusable (fault injected: artifact_load); recompiling",
+            key.file_name()
+        );
+        if store.quarantine(key, "fault injected: artifact_load") {
+            stats.quarantined += 1;
+        }
+        None
+    } else {
+        match store.load(key) {
+            Ok(plan) => {
+                // a decode-valid artifact must still match — layer for
+                // layer — the generator this binary's zoo advertises for
+                // the route: zoo geometry can change without a wire-format
+                // bump, and a stale plan would serve the old architecture
+                // (or panic the engine thread at request time)
+                let matches = match &plan {
+                    AnyPlan::F32(p) => plan_matches_zoo(p, g),
+                    AnyPlan::F64(p) => plan_matches_zoo(p, g),
+                };
+                if matches {
+                    Some(plan)
+                } else {
+                    stats.load_failures += 1;
+                    eprintln!(
+                        "plan-store: {} is stale for the current zoo; recompiling",
+                        key.file_name()
+                    );
+                    if store.quarantine(key, "stale for the current zoo") {
+                        stats.quarantined += 1;
+                    }
+                    None
                 }
             }
-            if seed_mismatch {
-                overwrite = false;
+            Err(err) => {
+                let seed_mismatch =
+                    matches!(err, ArtifactError::KeyMismatch { field: "weight seed", .. });
+                if !matches!(err, ArtifactError::Missing { .. }) {
+                    stats.load_failures += 1;
+                    // the seed-mismatch arm below prints its own (more
+                    // specific) message; don't log the same event twice
+                    if !seed_mismatch {
+                        eprintln!(
+                            "plan-store: {} unusable ({err}); recompiling",
+                            key.file_name()
+                        );
+                        // a seed-mismatched artifact is a *valid* plan for
+                        // a different configuration, and a missing one has
+                        // no bytes to preserve — only genuinely unusable
+                        // bytes get moved aside
+                        if store.quarantine(key, &format!("{err}")) {
+                            stats.quarantined += 1;
+                        }
+                    }
+                }
+                if seed_mismatch {
+                    overwrite = false;
+                }
+                None
             }
-            None
         }
     };
     match loaded {
@@ -274,6 +324,9 @@ impl NativeRuntime {
     pub fn build(cfg: &NativeConfig) -> NativeRuntime {
         let manifest = native_manifest(cfg);
         let pool = WorkerPool::shared(resolve_workers(cfg.workers));
+        // fault plane reaches the data plane in exactly two places: worker
+        // chunk dispatch (here) and artifact loads (engine_via_store below)
+        pool.set_fault_plane(cfg.faults.clone());
         let zoo_models = zoo::all(cfg.scale);
         // explicit config > WINGAN_PRECISION env > per-model dse Auto
         let precision_policy = resolve_precision(cfg.precision);
@@ -319,6 +372,7 @@ impl NativeRuntime {
                             &planner,
                             &plan_key,
                             pool.clone(),
+                            cfg.faults.as_deref(),
                         )
                     }
                     // one Arc'd compiled f64 plan per route: every engine
@@ -361,7 +415,7 @@ impl NativeRuntime {
 
     /// Snapshot of the cumulative events.
     pub fn events(&self) -> Events {
-        self.events.lock().unwrap().clone()
+        crate::util::lock_unpoisoned(&self.events).clone()
     }
 
     /// The route engine for `(model, method)`, at whatever precision tier
@@ -391,7 +445,7 @@ impl NativeRuntime {
             .get(&(entry.model.clone(), entry.method.clone()))
             .ok_or_else(|| format!("no engine for route {}/{}", entry.model, entry.method))?;
         let (out, batch_events) = engine.run_packed(entry.batch, input);
-        self.events.lock().unwrap().merge(&batch_events);
+        crate::util::lock_unpoisoned(&self.events).merge(&batch_events);
         Ok(out)
     }
 }
@@ -573,6 +627,14 @@ mod tests {
         let s = rebuilt.plan_stats();
         assert_eq!(s.load_failures, 2, "both corrupt artifacts must be counted");
         assert_eq!(s.fallback_compiles, 2, "and both routes must recompile");
+        assert_eq!(s.quarantined, 2, "both corrupt artifacts must be moved aside");
+        let parked = std::fs::read_dir(dir.join("tiny"))
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().path().extension().is_some_and(|x| x == "quarantined")
+            })
+            .count();
+        assert_eq!(parked, 2, "quarantined bytes stay on disk for forensics");
         // the fallback republished valid artifacts and still serves
         // correct, bit-identical outputs
         let e = cold.entries.get("dcgan_winograd_b1").unwrap().clone();
@@ -580,6 +642,33 @@ mod tests {
         assert_eq!(cold.execute(&e.name, &x).unwrap(), rebuilt.execute(&e.name, &x).unwrap());
         let healed = NativeRuntime::build(&cfg);
         assert_eq!(healed.plan_stats().artifact_hits, 2, "publish-on-fallback heals the store");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_artifact_load_faults_quarantine_and_recompile() {
+        let dir = temp_store_dir("inject");
+        let cfg = NativeConfig { plan_store: Some(dir.clone()), ..tiny_cfg() };
+        // warm the store with two valid artifacts
+        assert_eq!(NativeRuntime::build(&cfg).plan_stats().published, 2);
+        // one injected load error: the first route's (perfectly valid)
+        // artifact is treated exactly like corrupt bytes — counted,
+        // quarantined, recompiled around — and the second loads normally
+        let plane = crate::faultinject::FaultPlane::parse("seed=3;artifact_load:error*1@1")
+            .expect("valid fault spec");
+        let plane = Arc::new(plane);
+        let faulted =
+            NativeRuntime::build(&NativeConfig { faults: Some(plane.clone()), ..cfg.clone() });
+        assert_eq!(plane.fired_at(crate::faultinject::FaultSite::ArtifactLoad), 1);
+        let s = faulted.plan_stats();
+        assert_eq!(s.load_failures, 1);
+        assert_eq!(s.quarantined, 1);
+        assert_eq!(s.artifact_hits, 1);
+        assert_eq!(s.fallback_compiles, 1);
+        // publish-on-fallback healed the quarantined slot: the next boot
+        // (no faults) is fully warm again
+        let healed = NativeRuntime::build(&cfg);
+        assert_eq!(healed.plan_stats().artifact_hits, 2);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -602,6 +691,7 @@ mod tests {
         assert_eq!(s.load_failures, 2);
         assert_eq!(s.fallback_compiles, 2);
         assert_eq!(s.published, 0, "a seed mismatch must not overwrite the store");
+        assert_eq!(s.quarantined, 0, "a seed mismatch must not quarantine a valid artifact");
         assert_eq!(std::fs::read(&wino_path).unwrap(), before, "artifact bytes untouched");
         // and the original configuration still boots warm
         let warm = NativeRuntime::build(&cfg);
@@ -629,6 +719,7 @@ mod tests {
         assert_eq!(s.artifact_hits, 0, "a shape-stale artifact must never be served");
         assert_eq!(s.load_failures, 1, "the stale winograd artifact is counted");
         assert_eq!(s.fallback_compiles, 2, "both routes recompile (tdc was simply missing)");
+        assert_eq!(s.quarantined, 1, "the stale artifact is moved aside, not re-parsed forever");
         // the fallback serves the *current* zoo's shapes
         let e = rt.entries.get("dcgan_winograd_b1").unwrap().clone();
         let out = rt.execute(&e.name, &vec![0.5; e.input_len()]).unwrap();

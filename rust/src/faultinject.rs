@@ -1,0 +1,419 @@
+//! Deterministic fault-injection plane for the serving path.
+//!
+//! Chaos tooling only earns its keep when a failure found once can be
+//! replayed forever, so everything here is **seeded and counter-driven**:
+//! a [`FaultPlane`] is parsed from a spec string (CLI `serve
+//! --inject-faults`, env `WINGAN_FAULTS`, or built programmatically in
+//! tests), and every instrumented site asks [`FaultPlane::check`] whether
+//! this particular *check* — the k-th time that rule has ever been
+//! consulted — should fire. The decision is a pure hash of
+//! `(seed, rule, k)`, so the same spec replays the same fault schedule on
+//! every run, independent of wall-clock timing.
+//!
+//! # Spec grammar
+//!
+//! ```text
+//! spec   := part (';' part)*
+//! part   := 'seed=' <u64>  |  rule
+//! rule   := site ':' action [ '*' <max-fires> ] [ '@' <rate> ]
+//! site   := 'worker_chunk' | 'batch_exec' | 'artifact_load'
+//! action := 'panic' | 'wrong_shape' | 'error' | 'delay=' <millis> [ 'ms' ]
+//! ```
+//!
+//! `@rate` (default `1.0`) is the per-check firing probability under the
+//! seeded hash; `*N` (default unlimited) caps how many times the rule may
+//! fire in total. `batch_exec:panic*5@1` is a deterministic five-panic
+//! burst (the storm used to trip the circuit breaker in tests);
+//! `batch_exec:panic@0.01` injects a panic into ~1% of batches forever.
+//!
+//! # Instrumented sites
+//!
+//! * [`FaultSite::WorkerChunk`] — inside [`crate::engine::WorkerPool`]
+//!   chunk dispatch (both the inline and queued paths), before the chunk
+//!   closure runs.
+//! * [`FaultSite::BatchExec`] — in the coordinator's `run_batch`, around
+//!   the [`crate::coordinator::ExecBackend`] call.
+//! * [`FaultSite::ArtifactLoad`] — in the plan-store load path of
+//!   [`crate::engine::NativeRuntime::build`], corrupting the load result.
+//!
+//! # Cost when disabled
+//!
+//! There is no global registry and no feature flag: a plane is an explicit
+//! `Option<Arc<FaultPlane>>` threaded through
+//! [`crate::coordinator::ServeConfig`] / [`crate::engine::NativeConfig`].
+//! When it is `None` (every production configuration), the hot paths pay
+//! one already-predicted branch per batch or chunk dispatch and touch no
+//! shared state — the closest "compiled out" a library crate without
+//! feature gates can get.
+//!
+//! # Determinism caveat
+//!
+//! A rule's k-th check decision is a pure function of `(seed, rule, k)`,
+//! and check indices are allocated atomically — so the *number* of fires
+//! after N checks is exactly reproducible. At the one concurrent site
+//! (`WorkerChunk`, checked from pool workers) *which thread* draws a
+//! firing index may vary run to run; the single-threaded serving sites
+//! (`BatchExec`, `ArtifactLoad`) replay bit-identically.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A named injection point in the serving path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Worker-pool chunk dispatch ([`crate::engine::WorkerPool`]).
+    WorkerChunk,
+    /// Batch execution in the coordinator engine loop.
+    BatchExec,
+    /// Plan-artifact load in [`crate::engine::NativeRuntime::build`].
+    ArtifactLoad,
+}
+
+impl FaultSite {
+    /// All sites, in spec-grammar order.
+    pub const ALL: [FaultSite; 3] =
+        [FaultSite::WorkerChunk, FaultSite::BatchExec, FaultSite::ArtifactLoad];
+
+    /// The spec-grammar name (`worker_chunk` / `batch_exec` /
+    /// `artifact_load`).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::WorkerChunk => "worker_chunk",
+            FaultSite::BatchExec => "batch_exec",
+            FaultSite::ArtifactLoad => "artifact_load",
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultSite, String> {
+        match s {
+            "worker_chunk" => Ok(FaultSite::WorkerChunk),
+            "batch_exec" => Ok(FaultSite::BatchExec),
+            "artifact_load" => Ok(FaultSite::ArtifactLoad),
+            other => Err(format!(
+                "unknown fault site '{other}' (expected worker_chunk, batch_exec or artifact_load)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What a firing rule does at its site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Unwind with a panic (`fault injected: ...` payload).
+    Panic,
+    /// Sleep for the given duration before proceeding (exercises the
+    /// stuck-batch watchdog without corrupting any result).
+    Delay(Duration),
+    /// Corrupt the result shape (the site truncates or garbles its
+    /// output so downstream validation must catch it).
+    WrongShape,
+    /// Return a typed error instead of a result.
+    Error,
+}
+
+impl FaultAction {
+    fn parse(s: &str) -> Result<FaultAction, String> {
+        if let Some(ms) = s.strip_prefix("delay=") {
+            let ms = ms.strip_suffix("ms").unwrap_or(ms);
+            let ms: u64 = ms
+                .parse()
+                .map_err(|_| format!("bad delay '{s}' (expected delay=<millis>[ms])"))?;
+            return Ok(FaultAction::Delay(Duration::from_millis(ms)));
+        }
+        match s {
+            "panic" => Ok(FaultAction::Panic),
+            "wrong_shape" => Ok(FaultAction::WrongShape),
+            "error" => Ok(FaultAction::Error),
+            other => Err(format!(
+                "unknown fault action '{other}' (expected panic, wrong_shape, error or delay=<ms>)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for FaultAction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultAction::Panic => f.write_str("panic"),
+            FaultAction::Delay(d) => write!(f, "delay={}ms", d.as_millis()),
+            FaultAction::WrongShape => f.write_str("wrong_shape"),
+            FaultAction::Error => f.write_str("error"),
+        }
+    }
+}
+
+/// One parsed rule plus its live counters.
+#[derive(Debug)]
+struct Rule {
+    site: FaultSite,
+    action: FaultAction,
+    /// Per-check firing probability in `[0, 1]`, pre-scaled to a u64
+    /// threshold: the rule is hash-eligible when
+    /// `hash(seed, rule, k) < threshold`.
+    threshold: u64,
+    /// Cap on total fires (`u64::MAX` when the spec gave no `*N`).
+    max_fires: u64,
+    /// Times this rule has been consulted.
+    checks: AtomicU64,
+    /// Times this rule has fired.
+    fired: AtomicU64,
+}
+
+impl Rule {
+    fn parse(part: &str) -> Result<Rule, String> {
+        let (site, rest) = part
+            .split_once(':')
+            .ok_or_else(|| format!("bad fault rule '{part}' (expected site:action[*N][@rate])"))?;
+        let site = FaultSite::parse(site.trim())?;
+        let (rest, rate) = match rest.rsplit_once('@') {
+            Some((head, rate)) => {
+                let rate: f64 = rate
+                    .parse()
+                    .map_err(|_| format!("bad fault rate '@{rate}' in '{part}'"))?;
+                if !(0.0..=1.0).contains(&rate) {
+                    return Err(format!("fault rate {rate} out of [0,1] in '{part}'"));
+                }
+                (head, rate)
+            }
+            None => (rest, 1.0),
+        };
+        let (action, max_fires) = match rest.rsplit_once('*') {
+            Some((head, n)) => {
+                let n: u64 = n
+                    .parse()
+                    .map_err(|_| format!("bad fault fire cap '*{n}' in '{part}'"))?;
+                (head, n)
+            }
+            None => (rest, u64::MAX),
+        };
+        let action = FaultAction::parse(action.trim())?;
+        // rate 1.0 must always fire: (1.0 * 2^64) saturates to u64::MAX and
+        // the comparison below is strict, so nudge it to all-ones exactly.
+        let threshold = if rate >= 1.0 {
+            u64::MAX
+        } else {
+            (rate * (u64::MAX as f64)) as u64
+        };
+        Ok(Rule {
+            site,
+            action,
+            threshold,
+            max_fires,
+            checks: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+        })
+    }
+
+    fn eligible(&self, seed: u64, rule_idx: u64, k: u64) -> bool {
+        if self.threshold == u64::MAX {
+            return true;
+        }
+        hash64(seed ^ rule_idx.wrapping_mul(0x9e37_79b9_7f4a_7c15), k) < self.threshold
+    }
+}
+
+/// splitmix64 finalizer — a well-mixed pure hash of `(stream, k)`.
+fn hash64(stream: u64, k: u64) -> u64 {
+    let mut z = stream.wrapping_add(k.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A seeded set of injection rules. Build with [`FaultPlane::parse`] or
+/// [`FaultPlane::from_env`], share as `Arc<FaultPlane>`, consult with
+/// [`FaultPlane::check`].
+#[derive(Debug)]
+pub struct FaultPlane {
+    seed: u64,
+    rules: Vec<Rule>,
+}
+
+impl FaultPlane {
+    /// Parse a spec string (see the module-level grammar). Errors carry
+    /// the offending fragment.
+    pub fn parse(spec: &str) -> Result<FaultPlane, String> {
+        let mut seed = 0u64;
+        let mut rules = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(s) = part.strip_prefix("seed=") {
+                seed = s.parse().map_err(|_| format!("bad fault seed '{part}'"))?;
+            } else {
+                rules.push(Rule::parse(part)?);
+            }
+        }
+        if rules.is_empty() {
+            return Err(format!("fault spec '{spec}' contains no rules"));
+        }
+        Ok(FaultPlane { seed, rules })
+    }
+
+    /// Read the `WINGAN_FAULTS` env var: `Ok(None)` when unset or empty,
+    /// `Ok(Some(plane))` on a valid spec, `Err` on a malformed one.
+    pub fn from_env() -> Result<Option<Arc<FaultPlane>>, String> {
+        match std::env::var("WINGAN_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => {
+                FaultPlane::parse(&spec).map(|p| Some(Arc::new(p)))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Consult the plane at `site`. Every rule bound to the site advances
+    /// its check counter; the first rule that is hash-eligible for its
+    /// check index *and* under its fire cap fires and returns its action.
+    pub fn check(&self, site: FaultSite) -> Option<FaultAction> {
+        let mut hit = None;
+        for (idx, rule) in self.rules.iter().enumerate() {
+            if rule.site != site {
+                continue;
+            }
+            let k = rule.checks.fetch_add(1, Ordering::Relaxed);
+            if hit.is_some() || !rule.eligible(self.seed, idx as u64, k) {
+                continue;
+            }
+            // claim a fire slot; lose the race past the cap and stay quiet
+            let claimed = rule
+                .fired
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |f| {
+                    (f < rule.max_fires).then_some(f + 1)
+                })
+                .is_ok();
+            if claimed {
+                hit = Some(rule.action);
+            }
+        }
+        hit
+    }
+
+    /// Total fires at `site` so far, across all rules.
+    pub fn fired_at(&self, site: FaultSite) -> u64 {
+        self.rules
+            .iter()
+            .filter(|r| r.site == site)
+            .map(|r| r.fired.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Total fires across all sites.
+    pub fn total_fired(&self) -> u64 {
+        self.rules.iter().map(|r| r.fired.load(Ordering::Relaxed)).sum()
+    }
+
+    /// One-line observability summary (`site:action fired/checks` per
+    /// rule), for the chaos report.
+    pub fn summary(&self) -> String {
+        let mut out = format!("faults(seed={})", self.seed);
+        for r in &self.rules {
+            out.push_str(&format!(
+                " {}:{} fired={}/{}",
+                r.site,
+                r.action,
+                r.fired.load(Ordering::Relaxed),
+                r.checks.load(Ordering::Relaxed)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlane::parse(
+            "seed=7; batch_exec:panic*5@1; worker_chunk:delay=50ms@0.25; \
+             artifact_load:wrong_shape; batch_exec:error*1",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.rules.len(), 4);
+        assert_eq!(p.rules[0].site, FaultSite::BatchExec);
+        assert_eq!(p.rules[0].action, FaultAction::Panic);
+        assert_eq!(p.rules[0].max_fires, 5);
+        assert_eq!(p.rules[1].action, FaultAction::Delay(Duration::from_millis(50)));
+        assert!(p.rules[1].threshold < u64::MAX / 2);
+        assert_eq!(p.rules[2].max_fires, u64::MAX);
+        assert_eq!(p.rules[3].max_fires, 1);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "seed=7",                 // no rules
+            "batch_exec",             // no action
+            "nowhere:panic",          // bad site
+            "batch_exec:explode",     // bad action
+            "batch_exec:panic@1.5",   // rate out of range
+            "batch_exec:panic@lots",  // non-numeric rate
+            "batch_exec:panic*many",  // non-numeric cap
+            "batch_exec:delay=soon",  // non-numeric delay
+            "seed=green; batch_exec:panic",
+        ] {
+            assert!(FaultPlane::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn burst_fires_exactly_n_then_stops() {
+        let p = FaultPlane::parse("batch_exec:panic*3@1").unwrap();
+        let fires: Vec<bool> =
+            (0..10).map(|_| p.check(FaultSite::BatchExec).is_some()).collect();
+        assert_eq!(fires, [true, true, true, false, false, false, false, false, false, false]);
+        assert_eq!(p.fired_at(FaultSite::BatchExec), 3);
+        // other sites never see it
+        assert!(p.check(FaultSite::WorkerChunk).is_none());
+        assert!(p.check(FaultSite::ArtifactLoad).is_none());
+    }
+
+    #[test]
+    fn rate_is_seed_deterministic_and_roughly_proportional() {
+        let run = |seed: u64| -> Vec<bool> {
+            let p = FaultPlane::parse(&format!("seed={seed}; batch_exec:panic@0.1")).unwrap();
+            (0..2000).map(|_| p.check(FaultSite::BatchExec).is_some()).collect()
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a, b, "same seed must replay the same fault schedule");
+        let fired = a.iter().filter(|&&f| f).count();
+        assert!((100..400).contains(&fired), "~10% of 2000 checks, got {fired}");
+        let c = run(43);
+        assert_ne!(a, c, "different seeds should differ somewhere");
+    }
+
+    #[test]
+    fn first_eligible_rule_wins_but_all_counters_advance() {
+        let p = FaultPlane::parse("batch_exec:panic*1@1; batch_exec:error@1").unwrap();
+        assert_eq!(p.check(FaultSite::BatchExec), Some(FaultAction::Panic));
+        // panic rule is capped out; the error rule (whose counter also
+        // advanced on check 0) fires from its own index
+        assert_eq!(p.check(FaultSite::BatchExec), Some(FaultAction::Error));
+        assert_eq!(p.rules[1].checks.load(Ordering::Relaxed), 2);
+        assert_eq!(p.rules[1].fired.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn summary_reports_counters() {
+        let p = FaultPlane::parse("seed=9; batch_exec:panic*1").unwrap();
+        p.check(FaultSite::BatchExec);
+        p.check(FaultSite::BatchExec);
+        let s = p.summary();
+        assert!(s.contains("seed=9"), "{s}");
+        assert!(s.contains("batch_exec:panic fired=1/2"), "{s}");
+    }
+}

@@ -31,6 +31,8 @@
 //! | [`resource`] / [`energy`] | Table II resource + Fig. 9 energy models |
 //! | [`report`] | the paper's tables/figures as printable reports |
 //! | [`loadgen`] | open-loop Poisson load harness: scheduler A/B under mixed traffic |
+//! | [`faultinject`] | seeded deterministic fault-injection plane (panic/delay/corrupt sites) |
+//! | [`chaos`] | fault-injection soak: conservation, bitwise isolation, bounded recovery |
 //! | [`cli`] / [`benchlib`] / [`util`] / [`prop`] | flag parsing, bench harness, tensors/PRNG/JSON, property-test harness |
 //!
 //! The **plan-compile / execute split** is the load-bearing design: a
@@ -72,11 +74,13 @@
 pub mod accel;
 pub mod artifact;
 pub mod benchlib;
+pub mod chaos;
 pub mod cli;
 pub mod coordinator;
 pub mod dse;
 pub mod energy;
 pub mod engine;
+pub mod faultinject;
 pub mod gan;
 pub mod loadgen;
 pub mod prop;

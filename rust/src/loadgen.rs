@@ -152,26 +152,32 @@ impl LoadgenOptions {
 }
 
 /// One request in the pre-generated open-loop schedule.
+///
+/// Public so the chaos harness ([`crate::chaos`]) can replay the exact
+/// schedule a fault-free baseline saw under fault injection.
 #[derive(Clone, Debug)]
-struct Arrival {
+pub struct Arrival {
     /// offset from the run start at which this request is submitted
-    offset: Duration,
+    pub offset: Duration,
     /// index into the profile's route list
-    route: usize,
+    pub route: usize,
     /// the input tensor (identical across both scheduler runs)
-    input: Vec<f32>,
+    pub input: Vec<f32>,
 }
 
 /// The full arrival schedule, generated once and replayed verbatim
 /// against each scheduler so the A/B compares at equal offered load.
-struct ArrivalPlan {
-    arrivals: Vec<Arrival>,
+pub struct ArrivalPlan {
+    /// the schedule, sorted by offset
+    pub arrivals: Vec<Arrival>,
     /// offered rate the schedule was drawn at (req/s)
-    rate: f64,
+    pub rate: f64,
 }
 
 impl ArrivalPlan {
-    fn generate(
+    /// Draw a deterministic open-loop Poisson schedule: same seed → same
+    /// arrival offsets, route choices, and input tensors.
+    pub fn generate(
         profile: &TrafficProfile,
         input_lens: &[usize],
         requests: usize,

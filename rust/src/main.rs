@@ -7,6 +7,7 @@
 //!   verify              load every artifact, execute, check vs jax goldens
 //!   serve               run the serving coordinator on a synthetic workload
 //!   loadgen             open-loop Poisson A/B of the batch schedulers
+//!   chaos               deterministic fault-injection soak of the serving tier
 //!   compile             AOT-compile zoo plans into an on-disk plan store
 //!   plan inspect FILE   print the manifest view of one plan artifact
 
@@ -40,10 +41,13 @@ USAGE: wingan <subcommand> [flags]
          [--seed 7] [--workers N] [--precision f32|f64|auto]
          [--kernel scalar|simd|auto] [--plan-store DIR] [--weight-seed 42]
          [--check-compile] [--scheduler continuous|bucket] [--queue-cap 256]
-         [--slo-ms N]
+         [--slo-ms N] [--inject-faults SPEC]
   loadgen [--quick] [--scale tiny|small] [--requests 800] [--load 1.2]
           [--rate R] [--slo-ms N] [--queue-cap 256] [--max-wait-ms 20]
           [--seed 7] [--workers N] [--out BENCH_pr7.json]
+  chaos  [--quick] [--scale tiny|small] [--requests 600] [--rate 300]
+         [--queue-cap 512] [--seed 11] [--workers N] [--spec SPEC]
+         [--out BENCH_pr8.json]
   compile [--store DIR] [--scale small|tiny|all] [--models dcgan,gpgan]
           [--seed 42]
   plan   inspect <artifact-file>
@@ -76,6 +80,17 @@ bounds each route's admission queue (typed queue-full sheds past it), and
 --slo-ms sets a default per-request deadline (infeasible/expired requests
 get typed deadline sheds; absent = best-effort, no deadline shedding).
 
+serve's fault tooling: --inject-faults installs a deterministic seeded
+fault plane (grammar: 'seed=N;site:action[*count][@rate]' with sites
+worker_chunk|batch_exec|artifact_load and actions
+panic|error|wrong_shape|delay=MSms — e.g.
+'seed=7;batch_exec:panic@0.01'); the WINGAN_FAULTS env var is the
+flagless equivalent. Injected panics are contained at the batch
+boundary, poisoned batches are bisected so only the poison request
+fails, and the per-route supervisor restarts dead engines (capped
+backoff, circuit breaker, stuck-batch watchdog) — the serving report
+ends with the per-route health verdict.
+
 loadgen replays one open-loop Poisson arrival schedule (mixed models +
 methods, so mixed precision tiers) against BOTH schedulers at equal
 offered load and writes the A/B (achieved vs offered rate, shed fraction,
@@ -83,6 +98,13 @@ p50/p99/p999) to --out. --load expresses the offered rate as a multiple
 of calibrated capacity (1.2 = 20% overload); --rate overrides it
 absolutely. --quick is the CI smoke preset. --max-wait-ms is the bucket
 baseline's hold window (continuous always runs work-conserving).
+
+chaos replays one seeded arrival schedule twice — fault-free, then under
+--spec (default: a guaranteed panic burst + ~1% background batch panics)
+— and asserts the fault-isolation contract: every request gets exactly
+one fate, requests completing in both runs are bitwise identical, storms
+restart engines and every route is Healthy again by the end. The outcome
+goes to --out (default BENCH_pr8.json). --quick is the CI smoke preset.
 
 compile AOT-compiles zoo generator plans into a plan store: every model x
 route method (winograd + tdc) x precision tier (f64 always, f32 for the
@@ -115,6 +137,7 @@ fn main() {
         Some("verify") => cmd_verify(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("compile") => cmd_compile(&args),
         Some("plan") => cmd_plan(&args),
         Some("version") => {
@@ -240,12 +263,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         0 => None,
         ms => Some(Duration::from_millis(ms as u64)),
     };
+    // explicit --inject-faults wins; WINGAN_FAULTS env is the flagless
+    // equivalent; production runs carry neither and pay one branch per batch
+    let faults = match args.get("inject-faults") {
+        Some(spec) => Some(std::sync::Arc::new(
+            wingan::faultinject::FaultPlane::parse(spec)
+                .map_err(|e| anyhow::anyhow!("--inject-faults: {e}"))?,
+        )),
+        None => wingan::faultinject::FaultPlane::from_env()
+            .map_err(|e| anyhow::anyhow!("WINGAN_FAULTS: {e}"))?,
+    };
     let serve_cfg = ServeConfig {
         max_wait: Duration::from_millis(max_wait as u64),
         preload_models: Some(vec![model.clone()]),
         scheduler,
         queue_cap,
         slo,
+        faults: faults.clone(),
+        ..Default::default()
     };
     // a plan store only means something to the native backend
     let use_native = args.has("native")
@@ -364,6 +399,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let m = coord.metrics();
     println!("\n== serving report ==");
     println!("{}", m.report());
+    println!("{}", coord.health().report());
+    if let Some(plane) = &faults {
+        println!("{}", plane.summary());
+    }
     println!(
         "wall={:.3}s  completed={completed}/{n_requests} (shed {shed})  \
          throughput={:.1} img/s  output checksum={checksum:.3}",
@@ -416,6 +455,39 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         "loadgen completed zero requests"
     );
     Ok(())
+}
+
+/// `wingan chaos` — deterministic fault-injection soak: one seeded arrival
+/// schedule replayed fault-free and then under a fault plane, with the
+/// conservation / bitwise-isolation / bounded-recovery contract asserted
+/// and the outcome written to `--out` (default `BENCH_pr8.json`).
+fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    let mut opts = if args.has("quick") {
+        wingan::chaos::ChaosOptions::quick()
+    } else {
+        wingan::chaos::ChaosOptions::default()
+    };
+    if args.get("scale").is_some() {
+        opts.scale = serving_scale(args)?;
+    }
+    opts.requests = args.get_usize("requests", opts.requests).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(opts.requests > 0, "--requests must be at least 1");
+    if args.get("rate").is_some() {
+        let r = args.get_f64("rate", 0.0).map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(r > 0.0, "--rate must be positive");
+        opts.rate = r;
+    }
+    opts.queue_cap = args.get_usize("queue-cap", opts.queue_cap).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(opts.queue_cap > 0, "--queue-cap must be at least 1");
+    opts.seed = args.get_usize("seed", opts.seed as usize).map_err(anyhow::Error::msg)? as u64;
+    opts.workers = args.get_workers().map_err(anyhow::Error::msg)?;
+    if let Some(spec) = args.get("spec") {
+        opts.spec = Some(spec.to_string());
+    }
+    if let Some(out) = args.get("out") {
+        opts.out = PathBuf::from(out);
+    }
+    wingan::chaos::run(&opts)
 }
 
 /// Parse `--scale` for commands that execute real tensors (native serving,

@@ -9,3 +9,17 @@ pub mod elem;
 pub mod json;
 pub mod prng;
 pub mod tensor;
+
+/// Lock a mutex, recovering the data if a previous holder panicked.
+///
+/// The serving tier contains engine panics at the batch boundary
+/// ([`crate::coordinator`]); a shared lock that turns one contained panic
+/// into poison for every *other* route would defeat that isolation, so the
+/// pool queue, metrics, and supervisor locks all take the guard through
+/// here. The protected values are counters, queues of owned messages, and
+/// pure state machines — each individual mutation is complete-or-absent
+/// under unwinding, so the data is still coherent after a panicking
+/// holder.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}

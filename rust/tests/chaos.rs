@@ -1,0 +1,358 @@
+//! Fault-isolation integration tests (PR 8): panic containment,
+//! bisection, supervision, and the chaos soak, exercised end to end.
+//!
+//! These pin the fault contract from the outside, the way an operator
+//! would observe it:
+//!   * a poison request in a multi-request batch fails **alone** — its
+//!     batch-mates complete with outputs bitwise identical to a
+//!     fault-free run, and the containment counters account for every
+//!     bisection step exactly;
+//!   * a panic storm kills the route's engine incarnation, the
+//!     supervisor restarts it, repeated deaths trip the circuit breaker
+//!     (typed `Rejected::Unhealthy` sheds), and the half-open probe
+//!     recovers the route — the process never exits;
+//!   * the `wingan chaos --quick` soak holds all three harness
+//!     properties (conservation, bitwise isolation, bounded recovery)
+//!     on the real native backend with ~1% injected batch panics;
+//!   * property: under *any* seeded fault script, every submitted
+//!     request gets exactly one fate — no lost requests, no hangs.
+
+use std::path::PathBuf;
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+use wingan::chaos::{self, ChaosOptions};
+use wingan::coordinator::{
+    Coordinator, ExecBackend, Rejected, SchedulerKind, ServeConfig, ServeError, SupervisorConfig,
+};
+use wingan::faultinject::{FaultPlane, FaultSite};
+use wingan::prop;
+use wingan::runtime::{ArtifactEntry, Manifest};
+use wingan::util::prng::Rng;
+
+/// Mock route geometry: small enough that expected outputs are obvious.
+const IN: usize = 8;
+const OUT: usize = 6;
+/// Sentinel input value the mock backend panics on — far outside anything
+/// `Rng::normal_vec_f32` can produce.
+const POISON: f32 = 1.0e9;
+
+/// What the mock backend computes per sample — pure function of that
+/// sample's own input, so outputs are invariant to batch composition
+/// (the same contract the real engine keeps, and what makes bisected
+/// re-execution bitwise safe).
+fn expected_output(sample: &[f32]) -> Vec<f32> {
+    (0..OUT).map(|j| sample[j % IN] * 2.0 + j as f32).collect()
+}
+
+/// Deterministic backend that panics iff a poison sample is present in
+/// the packed batch — the trust violation containment exists for.
+struct MockBackend;
+
+impl ExecBackend for MockBackend {
+    fn execute_artifact(&self, _name: &str, input: &[f32]) -> Result<Vec<f32>, String> {
+        assert_eq!(input.len() % IN, 0, "packed batch must be whole samples");
+        if input.contains(&POISON) {
+            panic!("poison sample in batch");
+        }
+        Ok(input.chunks(IN).flat_map(expected_output).collect())
+    }
+}
+
+/// A one-route manifest (`mock/gen`) over the given batch buckets, enough
+/// for the router/batcher/supervisor stack without compiling anything.
+fn mock_manifest(buckets: &[usize]) -> Manifest {
+    Manifest {
+        dir: PathBuf::new(),
+        scale: "mock".into(),
+        entries: buckets
+            .iter()
+            .map(|&b| ArtifactEntry {
+                name: format!("mock_gen_b{b}"),
+                kind: "generator".into(),
+                model: "mock".into(),
+                method: "gen".into(),
+                batch: b,
+                hlo: PathBuf::new(),
+                input_shape: vec![b, IN],
+                output_shape: vec![b, OUT],
+                golden_input: PathBuf::new(),
+                golden_output: PathBuf::new(),
+            })
+            .collect(),
+    }
+}
+
+/// One poison request in a full batch of four: bisection must fail
+/// exactly the poison request (typed `Crashed`) while its three
+/// batch-mates complete bitwise-exact, and the containment counters must
+/// account for every step of the bisection tree.
+#[test]
+fn bisection_fails_only_the_poison_request() {
+    let serve = ServeConfig {
+        // the bucket scheduler holds until the largest bucket (4) fills,
+        // so all four requests deterministically share one batch
+        scheduler: SchedulerKind::Bucket,
+        max_wait: Duration::from_secs(10),
+        // containment alone must handle this: storms stay out of reach
+        supervisor: SupervisorConfig { storm_panics: 100, ..Default::default() },
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start_supervised(Arc::new(MockBackend), &mock_manifest(&[1, 2, 4]), serve)
+            .expect("mock coordinator starts");
+
+    let inputs: Vec<Vec<f32>> = (0..4)
+        .map(|i| {
+            if i == 2 {
+                let mut v = vec![0.5f32; IN];
+                v[3] = POISON;
+                v
+            } else {
+                Rng::new(100 + i as u64).normal_vec_f32(IN)
+            }
+        })
+        .collect();
+    let receivers: Vec<_> = inputs
+        .iter()
+        .map(|inp| coord.submit("mock", "gen", inp.clone()).expect("admitted"))
+        .collect();
+
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let fate = rx.recv_timeout(Duration::from_secs(10)).expect("every request gets a fate");
+        if i == 2 {
+            match fate {
+                Err(ServeError::Crashed(msg)) => {
+                    assert!(msg.contains("poison"), "crash carries the panic message: {msg}")
+                }
+                Ok(_) => panic!("the poison request completed"),
+                Err(e) => panic!("poison request got the wrong fate: {e}"),
+            }
+        } else {
+            match fate {
+                Ok(resp) => assert_eq!(
+                    resp.output,
+                    expected_output(&inputs[i]),
+                    "batch-mate {i} must be bitwise identical to a fault-free run"
+                ),
+                Err(e) => panic!("innocent batch-mate {i} failed: {e}"),
+            }
+        }
+    }
+
+    // the bisection tree: [0,1,2,3] crashes -> [0,1] ok, [2,3] crashes
+    // -> [2] crashes (quarantined), [3] ok. Three contained panics, two
+    // bisection splits, one quarantined request.
+    let m = coord.metrics();
+    assert_eq!(m.panics_contained, 3, "batch + poisoned half + poisoned single");
+    assert_eq!(m.bisection_retries, 2, "two splits isolate one poison among four");
+    assert_eq!(m.requests_quarantined, 1);
+    assert_eq!(m.responses, 3);
+
+    // containment never killed the engine: no storm, no restart
+    let health = coord.health();
+    assert!(health.all_healthy(), "containment must not cost the route:\n{}", health.report());
+    assert_eq!(health.route("mock/gen").expect("route reported").restarts, 0);
+    coord.shutdown();
+}
+
+/// Two injected batch panics with `storm_panics = 1` and
+/// `max_restarts = 2`: the first death restarts the engine, the second
+/// trips the breaker (typed `Unhealthy` sheds at submit), and after the
+/// cooldown the half-open probe — its fault budget spent — serves again
+/// and the route settles back to Healthy. The process survives it all.
+#[test]
+fn storm_trips_the_breaker_and_the_probe_recovers() {
+    let plane = Arc::new(FaultPlane::parse("seed=5;batch_exec:panic*2@1").expect("spec parses"));
+    let serve = ServeConfig {
+        faults: Some(plane.clone()),
+        supervisor: SupervisorConfig {
+            watchdog: Duration::from_secs(10),
+            backoff_base: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(5),
+            max_restarts: 2,
+            restart_window: Duration::from_secs(60),
+            breaker_cooldown: Duration::from_millis(300),
+            probation: Duration::from_millis(20),
+            storm_panics: 1,
+            storm_window: Duration::from_secs(60),
+        },
+        ..Default::default()
+    };
+    let coord =
+        Coordinator::start_supervised(Arc::new(MockBackend), &mock_manifest(&[1, 2, 4]), serve)
+            .expect("mock coordinator starts");
+    let input = Rng::new(7).normal_vec_f32(IN);
+
+    // each guaranteed panic is contained (single-request batch ->
+    // quarantined, typed Crashed), storms its incarnation, and charges a
+    // death; the second death inside the window trips the breaker
+    for i in 0..2 {
+        let rx = coord.submit("mock", "gen", input.clone()).expect("admitted");
+        match rx.recv_timeout(Duration::from_secs(10)).expect("fate") {
+            Err(ServeError::Crashed(msg)) => {
+                assert!(msg.contains("fault injected"), "request {i}: {msg}")
+            }
+            Ok(_) => panic!("request {i} should have crashed"),
+            Err(e) => panic!("request {i} got the wrong fate: {e}"),
+        }
+    }
+    assert_eq!(plane.fired_at(FaultSite::BatchExec), 2, "the fault budget is spent");
+
+    // the supervisor registers the second death asynchronously; wait for
+    // the breaker to open
+    let t0 = Instant::now();
+    loop {
+        let h = coord.health();
+        if h.route("mock/gen").expect("route reported").breaker == "open" {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "breaker never opened:\n{}", h.report());
+        thread::sleep(Duration::from_millis(2));
+    }
+
+    // an open breaker sheds typed at submit — nothing queues onto an
+    // engine the supervisor refuses to restart
+    match coord.submit("mock", "gen", input.clone()) {
+        Err(ServeError::Rejected(Rejected::Unhealthy { .. })) => {}
+        Ok(_) => panic!("open breaker admitted a request"),
+        Err(e) => panic!("open breaker shed with the wrong type: {e}"),
+    }
+
+    // cooldown elapses, the half-open probe survives (no fires left),
+    // and the route serves correct bytes again
+    let t0 = Instant::now();
+    let resp = loop {
+        assert!(t0.elapsed() < Duration::from_secs(10), "route never recovered");
+        match coord.submit("mock", "gen", input.clone()) {
+            Ok(rx) => match rx.recv_timeout(Duration::from_secs(10)).expect("fate") {
+                Ok(resp) => break resp,
+                Err(e) => panic!("post-recovery request failed: {e}"),
+            },
+            Err(e) if e.is_shed() => thread::sleep(Duration::from_millis(5)),
+            Err(e) => panic!("hard submit failure during recovery: {e}"),
+        }
+    };
+    assert_eq!(resp.output, expected_output(&input), "recovered route serves exact bytes");
+
+    // probation passes and the ledger reads like the story above
+    let t0 = Instant::now();
+    let health = loop {
+        let h = coord.health();
+        if h.all_healthy() {
+            break h;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "never Healthy again:\n{}", h.report());
+        thread::sleep(Duration::from_millis(5));
+    };
+    let r = health.route("mock/gen").expect("route reported");
+    assert_eq!(r.breaker, "closed");
+    assert_eq!(r.total_deaths, 2, "storm death + breaker-tripping death");
+    assert!(r.restarts >= 2, "backoff restart + probe restart, got {}", r.restarts);
+    coord.shutdown();
+}
+
+/// The ISSUE's acceptance scenario on the real native backend: a seeded
+/// chaos run (guaranteed storm burst + ~1% background batch panics)
+/// against the identical fault-free schedule. `chaos::run` itself
+/// enforces conservation (zero lost requests, 30 s deadlock detector),
+/// bitwise identity for everything that completed in both runs, at least
+/// one engine restart, and a final all-Healthy verdict — reaching this
+/// function's `Ok` *is* the acceptance checklist, and the process never
+/// exited along the way.
+#[test]
+fn chaos_quick_soak_holds_conservation_bitwise_and_recovery() {
+    let out = std::env::temp_dir().join(format!("wingan_chaos_test_{}.json", std::process::id()));
+    let opts = ChaosOptions {
+        requests: 160,
+        rate: 400.0,
+        out: out.clone(),
+        ..ChaosOptions::quick()
+    };
+    chaos::run(&opts).expect("chaos soak holds all three properties");
+    let report = std::fs::read_to_string(&out).expect("machine-readable report written");
+    assert!(report.contains("engine_restarts"), "report carries the recovery ledger: {report}");
+    assert!(report.contains("bitwise_compared"), "report carries the isolation ledger: {report}");
+    let _ = std::fs::remove_file(&out);
+}
+
+/// Generate a random-but-valid fault script: 1–3 rules over random
+/// sites, actions, optional fire caps, and rates.
+fn gen_script(rng: &mut Rng) -> String {
+    let mut parts = vec![format!("seed={}", rng.next_u64() % 1000)];
+    for _ in 0..(1 + rng.below(3)) {
+        let site = ["batch_exec", "worker_chunk", "artifact_load"][rng.below(3)];
+        let action = ["panic", "error", "wrong_shape", "delay=3"][rng.below(4)];
+        let mut rule = format!("{site}:{action}");
+        if rng.below(2) == 0 {
+            rule.push_str(&format!("*{}", 1 + rng.below(3)));
+        }
+        rule.push_str(&format!("@{}", [0.05, 0.25, 1.0][rng.below(3)]));
+        parts.push(rule);
+    }
+    parts.join(";")
+}
+
+/// Property: whatever a seeded fault script throws at the serving stack
+/// — panics, typed errors, wrong shapes, delays, at any rate, including
+/// storms that trip the breaker — every submitted request gets exactly
+/// one fate: a response, a typed shed, or a typed crash. Never zero
+/// (lost/hung), never two.
+#[test]
+fn every_request_gets_exactly_one_fate_under_any_fault_script() {
+    const REQS: usize = 10;
+    prop::forall("one_fate_per_request", 10, 0xFA17, gen_script, |spec| {
+        let plane = FaultPlane::parse(spec)
+            .map_err(|e| format!("generated spec '{spec}' must parse: {e}"))?;
+        let serve = ServeConfig {
+            faults: Some(Arc::new(plane)),
+            supervisor: SupervisorConfig {
+                watchdog: Duration::from_secs(10),
+                backoff_base: Duration::from_millis(1),
+                backoff_max: Duration::from_millis(10),
+                max_restarts: 5,
+                restart_window: Duration::from_secs(2),
+                breaker_cooldown: Duration::from_millis(50),
+                probation: Duration::from_millis(20),
+                storm_panics: 3,
+                storm_window: Duration::from_secs(1),
+            },
+            ..Default::default()
+        };
+        let coord =
+            Coordinator::start_supervised(Arc::new(MockBackend), &mock_manifest(&[1, 2, 4]), serve)
+                .map_err(|e| format!("start: {e}"))?;
+
+        let mut receivers = Vec::new();
+        let mut fates = 0usize;
+        for i in 0..REQS {
+            match coord.submit("mock", "gen", Rng::new(i as u64).normal_vec_f32(IN)) {
+                Ok(rx) => receivers.push(rx),
+                // a typed shed at submit (open breaker) is a legal fate
+                Err(e) if e.is_shed() => fates += 1,
+                Err(e) => return Err(format!("hard submit failure under '{spec}': {e}")),
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        for (i, rx) in receivers.into_iter().enumerate() {
+            match rx.recv_timeout(Duration::from_secs(15)) {
+                // any reply — response, typed shed, typed crash — is
+                // exactly one fate; which one is the fault plane's call
+                Ok(_) => fates += 1,
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(format!("request {i}: no fate within 15s under '{spec}'"))
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(format!("request {i}: reply channel dropped without a fate"))
+                }
+            }
+        }
+        coord.shutdown();
+        if fates == REQS {
+            Ok(())
+        } else {
+            Err(format!("{fates} fates for {REQS} requests under '{spec}'"))
+        }
+    });
+}
