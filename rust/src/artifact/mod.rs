@@ -37,4 +37,4 @@ pub use codec::{
     ArtifactMeta, ArtifactResult, DecodedArtifact, PlanPayload, SectionInfo, FORMAT_VERSION,
     MAGIC, MIN_FORMAT_VERSION,
 };
-pub use store::{atomic_write, AnyPlan, PlanCacheStats, PlanKey, PlanStore};
+pub use store::{atomic_write, read_generation, AnyPlan, PlanCacheStats, PlanKey, PlanStore};

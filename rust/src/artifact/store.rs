@@ -185,6 +185,25 @@ pub fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
     result
 }
 
+/// Name of the store-root file holding the on-disk generation tag.
+pub const GENERATION_FILE: &str = "GENERATION";
+
+/// Read a store's on-disk **generation tag**: a monotonic counter kept in
+/// an ASCII `GENERATION` file at the store root, bumped by `wingan
+/// compile` after it republishes a plan set. Fleet replicas record the
+/// generation they warm-booted from and the fleet router watches this
+/// file to roll a republish through the fleet one replica at a time — so
+/// the tag, not file mtimes, is the coordination point. A missing or
+/// unparsable file reads as generation `0` (a store that has never been
+/// republished), never an error: the tag is advisory for rolling, not
+/// load-bearing for correctness.
+pub fn read_generation(root: &Path) -> u64 {
+    std::fs::read_to_string(root.join(GENERATION_FILE))
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .unwrap_or(0)
+}
+
 /// The in-process cache plus its publish generation: the counter bumps
 /// (under the same lock) whenever a publish invalidates, so a load that
 /// read its bytes *before* a concurrent publish can detect that and
@@ -223,6 +242,23 @@ impl PlanStore {
     /// Number of plans currently held by the in-process cache.
     pub fn cached(&self) -> usize {
         self.cache.lock().unwrap().plans.len()
+    }
+
+    /// The store's current **generation tag** (see [`read_generation`]).
+    pub fn generation(&self) -> u64 {
+        read_generation(&self.root)
+    }
+
+    /// Advance the store's generation tag by one (atomic replace of the
+    /// `GENERATION` file) and return the new value. Called by `wingan
+    /// compile` after a full republish; deliberately **not** called from
+    /// [`PlanStore::publish`], so a replica's self-healing fallback
+    /// publish can never kick off a fleet-wide rolling reload by itself.
+    pub fn bump_generation(&self) -> std::io::Result<u64> {
+        let next = read_generation(&self.root) + 1;
+        std::fs::create_dir_all(&self.root)?;
+        atomic_write(&self.root.join(GENERATION_FILE), next.to_string().as_bytes())?;
+        Ok(next)
     }
 
     /// Load `key`'s plan, serving repeats from the in-process cache: every

@@ -333,6 +333,249 @@ pub fn run(opts: &ChaosOptions) -> Result<()> {
     Ok(())
 }
 
+/// `wingan chaos --fleet`: the kill-a-replica soak over the fleet tier.
+///
+/// One seeded open-loop schedule runs twice: first against a
+/// single-process coordinator (the bitwise baseline — it also populates
+/// a fresh shared [`PlanStore`](crate::artifact::PlanStore) via fallback
+/// compile-and-publish), then through a
+/// [`FleetRouter`](crate::fleet::FleetRouter) fronting **three**
+/// warm-booted replicas while faults fly:
+///
+/// * replica 0 randomly **drops connections** (`conn_drop`) — the router
+///   must fail those requests over without losing them;
+/// * replica 2 randomly **stalls** (`replica_stall`) — slow, not dead;
+/// * replica 1 is **killed abruptly** mid-run at a deterministic point
+///   in the schedule, then replaced (new ephemeral port) and readmitted.
+///
+/// The run asserts the fleet promises: **conservation** (completed +
+/// typed-shed + typed-casualty = offered; no request without a fate),
+/// **bitwise equality** (every request completing in both runs matches
+/// the single-process baseline exactly — determinism is what makes
+/// cross-replica re-execution safe), and **bounded recovery** (the
+/// replacement replica joins and the fleet reports all-ready again,
+/// timed). Results land in `BENCH_pr9.json`.
+pub fn run_fleet(opts: &ChaosOptions) -> Result<()> {
+    use crate::fleet::{drive_open_loop, FleetConfig, FleetRouter, ReplicaConfig, ReplicaServer};
+
+    let profile = TrafficProfile::standard();
+    let store_root =
+        std::env::temp_dir().join(format!("wingan-fleet-chaos-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_root);
+    std::fs::create_dir_all(&store_root)
+        .with_context(|| format!("creating {}", store_root.display()))?;
+    println!(
+        "chaos --fleet: {} requests at {:.0} req/s, seed {}, store {}",
+        opts.requests,
+        opts.rate,
+        opts.seed,
+        store_root.display()
+    );
+
+    let native = NativeConfig {
+        plan_store: Some(store_root.clone()),
+        ..native_cfg(opts, &profile)
+    };
+    let serve = ServeConfig {
+        queue_cap: opts.queue_cap,
+        supervisor: opts.supervisor(),
+        // kills must not block on a long drain
+        drain_deadline: Duration::from_secs(2),
+        ..Default::default()
+    };
+
+    // ---- baseline: single process, no faults; populates the store ----
+    let coord = Coordinator::start_native(native.clone(), serve.clone())?;
+    let input_lens: Vec<usize> = profile
+        .routes
+        .iter()
+        .map(|r| {
+            coord
+                .router()
+                .route(&r.model, &r.method)
+                .map(|route| route.sample_input_len)
+                .map_err(anyhow::Error::msg)
+        })
+        .collect::<Result<_>>()?;
+    let plan = ArrivalPlan::generate(&profile, &input_lens, opts.requests, opts.rate, opts.seed);
+    let base = replay(coord, &profile, &plan, "fleet-baseline")?;
+    ensure!(
+        base.casualties == 0,
+        "fleet baseline crashed {} request(s) with no faults injected",
+        base.casualties
+    );
+    println!(
+        "chaos --fleet: baseline — {} completed, {} shed, store populated",
+        base.completed, base.shed
+    );
+
+    // tag the generation the fleet serves, then boot the fleet from it
+    let store = crate::artifact::PlanStore::open(&store_root);
+    let generation = store.bump_generation().context("tagging the store generation")?;
+
+    let replica_cfg = |spec: Option<String>| -> Result<ReplicaConfig> {
+        let fleet_faults = match spec {
+            Some(s) => Some(Arc::new(
+                FaultPlane::parse(&s).map_err(|e| anyhow::anyhow!("bad fleet fault spec: {e}"))?,
+            )),
+            None => None,
+        };
+        Ok(ReplicaConfig { native: native.clone(), serve: serve.clone(), fleet_faults })
+    };
+    // replica 0 drops connections, replica 2 stalls, replica 1 is clean
+    // (it dies the hard way instead)
+    let specs = [
+        Some(format!("seed={};conn_drop:error*2@0.05", opts.seed)),
+        None,
+        Some(format!("seed={};replica_stall:delay=20ms*2@0.05", opts.seed.wrapping_add(1))),
+    ];
+    let mut replicas = Vec::new();
+    for spec in specs {
+        replicas.push(ReplicaServer::spawn("127.0.0.1:0", replica_cfg(spec)?)?);
+    }
+    for r in &replicas {
+        ensure!(
+            r.wait_ready(Duration::from_secs(60)),
+            "replica {} never became ready: {:?}",
+            r.addr(),
+            r.boot_error()
+        );
+    }
+    let addrs: Vec<String> = replicas.iter().map(|r| r.addr().to_string()).collect();
+    let router = FleetRouter::new(FleetConfig {
+        replicas: addrs.clone(),
+        store: Some(store_root.clone()),
+        ..FleetConfig::default()
+    })
+    .map_err(anyhow::Error::msg)?;
+    ensure!(router.wait_all_ready(Duration::from_secs(30)), "fleet never became all-ready");
+
+    // ---- faulted fleet run: kill replica 1 mid-schedule ----
+    let kill_at = plan.arrivals.len() * 2 / 5;
+    let victim_addr = addrs[1].clone();
+    let mut drained = replicas.drain(..);
+    let (conn_dropper, victim, staller) = (
+        drained.next().expect("replica 0"),
+        drained.next().expect("replica 1"),
+        drained.next().expect("replica 2"),
+    );
+    drop(drained);
+    let victim = std::sync::Mutex::new(Some(victim));
+    let fates = drive_open_loop(
+        &plan,
+        8,
+        Some((kill_at, || {
+            if let Some(v) = crate::util::lock_unpoisoned(&victim).take() {
+                println!("chaos --fleet: killing replica {victim_addr} at arrival {kill_at}");
+                v.kill();
+            }
+        })),
+        |_i, a| {
+            let r = &profile.routes[a.route];
+            router.submit(&r.model, &r.method, a.input.clone(), None)
+        },
+    );
+
+    // ---- conservation: every arrival has exactly one typed fate ----
+    let mut completed = 0u64;
+    let mut shed = 0u64;
+    let mut casualties = 0u64;
+    let mut outputs: Vec<Option<Vec<f32>>> = vec![None; plan.arrivals.len()];
+    for (i, fate) in fates.into_iter().enumerate() {
+        match fate {
+            Some(Ok(resp)) => {
+                outputs[i] = Some(resp.output);
+                completed += 1;
+            }
+            Some(Err(e)) if e.is_shed() => shed += 1,
+            Some(Err(
+                crate::coordinator::ServeError::Crashed(_)
+                | crate::coordinator::ServeError::Execution(_)
+                | crate::coordinator::ServeError::EngineShutdown,
+            )) => casualties += 1,
+            Some(Err(e)) => anyhow::bail!("fleet request {i} failed hard (not typed): {e}"),
+            None => anyhow::bail!("fleet request {i} was never dispatched — lost"),
+        }
+    }
+    let offered = plan.arrivals.len() as u64;
+    ensure!(
+        completed + shed + casualties == offered,
+        "fleet run lost requests: {completed} completed + {shed} shed + \
+         {casualties} casualties != {offered} offered"
+    );
+    println!(
+        "chaos --fleet: fleet — {completed} completed, {shed} shed, {casualties} \
+         casualties; every request accounted for"
+    );
+
+    // ---- bitwise equality against the single-process baseline ----
+    let mut compared = 0u64;
+    for (i, (b, f)) in base.outputs.iter().zip(&outputs).enumerate() {
+        if let (Some(b), Some(f)) = (b, f) {
+            ensure!(
+                b == f,
+                "request {i} diverged bitwise between single-process and fleet serving"
+            );
+            compared += 1;
+        }
+    }
+    ensure!(compared > 0, "no request completed in both runs; soak proved nothing");
+
+    // ---- bounded recovery: replace the dead replica, refill the fleet ----
+    let t_recover = Instant::now();
+    router.remove_replica(&victim_addr);
+    let replacement = ReplicaServer::spawn("127.0.0.1:0", replica_cfg(None)?)?;
+    ensure!(
+        replacement.wait_ready(Duration::from_secs(60)),
+        "replacement replica never became ready: {:?}",
+        replacement.boot_error()
+    );
+    router.add_replica(&replacement.addr().to_string()).map_err(anyhow::Error::msg)?;
+    ensure!(
+        router.wait_all_ready(Duration::from_secs(20)),
+        "fleet never recovered to all-ready after the replacement joined"
+    );
+    let recovery = t_recover.elapsed();
+    let status = router.status();
+    println!(
+        "chaos --fleet: recovered to all-ready in {:.0}ms ({} failovers, {} shed \
+         unavailable, generation {})",
+        recovery.as_secs_f64() * 1e3,
+        status.failovers,
+        status.shed_unavailable,
+        generation
+    );
+
+    let mut rep = BenchReport::new("chaos-fleet");
+    rep.metric("offered", offered as f64);
+    rep.metric("baseline_completed", base.completed as f64);
+    rep.metric("fleet_completed", completed as f64);
+    rep.metric("fleet_shed", shed as f64);
+    rep.metric("fleet_casualties", casualties as f64);
+    rep.metric("failovers", status.failovers as f64);
+    rep.metric("shed_unavailable", status.shed_unavailable as f64);
+    rep.metric("bitwise_compared", compared as f64);
+    rep.metric("bitwise_mismatches", 0.0); // ensured above
+    rep.metric("lost_requests", 0.0); // conservation ensured above
+    rep.metric("recovery_ms", recovery.as_secs_f64() * 1e3);
+    rep.metric("replicas", 3.0);
+    rep.metric("store_generation", generation as f64);
+    rep.write(&opts.out).with_context(|| format!("writing {}", opts.out.display()))?;
+    println!(
+        "chaos --fleet: PASS — zero lost, {compared} outputs bitwise-identical to the \
+         single-process baseline, recovery {:.0}ms, wrote {}",
+        recovery.as_secs_f64() * 1e3,
+        opts.out.display()
+    );
+
+    conn_dropper.shutdown();
+    staller.shutdown();
+    replacement.shutdown();
+    drop(router);
+    let _ = std::fs::remove_dir_all(&store_root);
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -6,6 +6,7 @@
 //! per-route e2e latency histogram with p50/p99/p999.
 
 use crate::artifact::PlanCacheStats;
+use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
 use std::time::Duration;
 
@@ -89,6 +90,21 @@ impl Histogram {
         (self.percentile(50.0), self.percentile(99.0), self.percentile(99.9))
     }
 
+    /// Machine-readable snapshot: count, mean and the tail percentiles,
+    /// all in **milliseconds** (the unit every report line prints).
+    pub fn to_json(&self) -> Json {
+        let (p50, p99, p999) = self.tail();
+        json::obj(vec![
+            ("count", json::num(self.count as f64)),
+            ("mean_ms", json::num(self.mean() * 1e3)),
+            ("p50_ms", json::num(p50 * 1e3)),
+            ("p95_ms", json::num(self.percentile(95.0) * 1e3)),
+            ("p99_ms", json::num(p99 * 1e3)),
+            ("p999_ms", json::num(p999 * 1e3)),
+            ("max_ms", json::num(if self.count > 0 { self.max * 1e3 } else { 0.0 })),
+        ])
+    }
+
     pub fn summary(&self, label: &str) -> String {
         let (p50, p99, p999) = self.tail();
         format!(
@@ -138,6 +154,26 @@ pub struct RouteMetrics {
 }
 
 impl RouteMetrics {
+    /// Machine-readable snapshot of this route's counters; consumed by
+    /// the fleet health endpoint and CI smoke checks, so the key set is a
+    /// stable surface — add keys freely, never rename or remove.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("admitted", json::num(self.admitted as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("shed_queue_full", json::num(self.shed_queue_full as f64)),
+            ("shed_deadline", json::num(self.shed_deadline as f64)),
+            ("shed_unhealthy", json::num(self.shed_unhealthy as f64)),
+            ("panics_contained", json::num(self.panics_contained as f64)),
+            ("requests_quarantined", json::num(self.requests_quarantined as f64)),
+            ("bisection_retries", json::num(self.bisection_retries as f64)),
+            ("batches", json::num(self.batches as f64)),
+            ("depth", json::num(self.depth as f64)),
+            ("peak_depth", json::num(self.peak_depth as f64)),
+            ("e2e", self.e2e.to_json()),
+        ])
+    }
+
     /// One compact report line for this route.
     pub fn summary(&self, route: &str) -> String {
         let (p50, p99, p999) = self.e2e.tail();
@@ -235,6 +271,41 @@ impl Metrics {
     /// counters are all zero when serving without one).
     pub fn used_plan_store(&self) -> bool {
         self.plan_cache != PlanCacheStats::default()
+    }
+
+    /// The whole snapshot as stable machine-readable JSON (the fleet
+    /// health endpoint and CI smoke both parse this — same stability
+    /// contract as [`RouteMetrics::to_json`]).
+    pub fn to_json(&self) -> Json {
+        let routes: BTreeMap<String, Json> =
+            self.routes.iter().map(|(name, r)| (name.clone(), r.to_json())).collect();
+        json::obj(vec![
+            ("requests", json::num(self.requests as f64)),
+            ("responses", json::num(self.responses as f64)),
+            ("batches", json::num(self.batches as f64)),
+            ("batch_efficiency", json::num(self.batch_efficiency())),
+            ("shed_queue_full", json::num(self.shed_queue_full as f64)),
+            ("shed_deadline", json::num(self.shed_deadline as f64)),
+            ("shed_unhealthy", json::num(self.shed_unhealthy as f64)),
+            ("shed_total", json::num(self.shed_total() as f64)),
+            ("panics_contained", json::num(self.panics_contained as f64)),
+            ("requests_quarantined", json::num(self.requests_quarantined as f64)),
+            ("bisection_retries", json::num(self.bisection_retries as f64)),
+            ("abandoned_at_shutdown", json::num(self.abandoned_at_shutdown as f64)),
+            (
+                "plan_cache",
+                json::obj(vec![
+                    ("artifact_hits", json::num(self.plan_cache.artifact_hits as f64)),
+                    ("fallback_compiles", json::num(self.plan_cache.fallback_compiles as f64)),
+                    ("load_failures", json::num(self.plan_cache.load_failures as f64)),
+                    ("published", json::num(self.plan_cache.published as f64)),
+                ]),
+            ),
+            ("queue_latency", self.queue_latency.to_json()),
+            ("exec_latency", self.exec_latency.to_json()),
+            ("e2e_latency", self.e2e_latency.to_json()),
+            ("routes", Json::Obj(routes)),
+        ])
     }
 
     pub fn report(&self) -> String {

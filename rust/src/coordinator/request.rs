@@ -63,6 +63,12 @@ pub enum Rejected {
     /// proves the route healthy again. `restarts` is the route's lifetime
     /// restart count at shed time.
     Unhealthy { restarts: u64 },
+    /// No fleet replica can take the request right now: every replica the
+    /// router knows is unready, draining, rolling, or behind an open
+    /// circuit breaker. The fleet sheds immediately instead of hanging —
+    /// same contract as the in-process sheds, one level up. `replicas` is
+    /// the fleet size the verdict was reached over.
+    FleetUnavailable { replicas: usize },
 }
 
 impl std::fmt::Display for Rejected {
@@ -78,6 +84,9 @@ impl std::fmt::Display for Rejected {
             ),
             Rejected::Unhealthy { restarts } => {
                 write!(f, "route unhealthy (circuit breaker open after {restarts} restarts)")
+            }
+            Rejected::FleetUnavailable { replicas } => {
+                write!(f, "fleet unavailable (no healthy replica among {replicas})")
             }
         }
     }

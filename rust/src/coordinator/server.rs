@@ -1163,6 +1163,12 @@ fn count_shed(metrics: &Mutex<Metrics>, key: &(String, String), rej: &Rejected) 
             m.shed_unhealthy += 1;
             m.route_mut(&route).shed_unhealthy += 1;
         }
+        // fleet-tier verdict; if one ever reaches an in-process coordinator
+        // it still lands in a shed counter rather than vanishing
+        Rejected::FleetUnavailable { .. } => {
+            m.shed_unhealthy += 1;
+            m.route_mut(&route).shed_unhealthy += 1;
+        }
     }
 }
 

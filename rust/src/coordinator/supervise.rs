@@ -341,6 +341,34 @@ impl HealthReport {
         self.routes.get(name)
     }
 
+    /// Machine-readable report: the probe surface the fleet router and CI
+    /// smoke consume. Stable-key contract: add keys freely, never rename
+    /// or remove.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{self, Json};
+        let routes: std::collections::BTreeMap<String, Json> = self
+            .routes
+            .iter()
+            .map(|(name, r)| {
+                (
+                    name.clone(),
+                    json::obj(vec![
+                        ("health", json::s(&r.health.to_string())),
+                        ("breaker", json::s(r.breaker)),
+                        ("restarts", json::num(r.restarts as f64)),
+                        ("recent_deaths", json::num(r.recent_deaths as f64)),
+                        ("total_deaths", json::num(r.total_deaths as f64)),
+                        ("watchdog_fires", json::num(r.watchdog_fires as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            ("all_healthy", Json::Bool(self.all_healthy())),
+            ("routes", Json::Obj(routes)),
+        ])
+    }
+
     /// Multi-line human report (one line per route).
     pub fn report(&self) -> String {
         if self.routes.is_empty() {

@@ -17,6 +17,7 @@
 //! part   := 'seed=' <u64>  |  rule
 //! rule   := site ':' action [ '*' <max-fires> ] [ '@' <rate> ]
 //! site   := 'worker_chunk' | 'batch_exec' | 'artifact_load'
+//!         | 'conn_drop' | 'replica_stall' | 'replica_exit'
 //! action := 'panic' | 'wrong_shape' | 'error' | 'delay=' <millis> [ 'ms' ]
 //! ```
 //!
@@ -35,6 +36,15 @@
 //!   the [`crate::coordinator::ExecBackend`] call.
 //! * [`FaultSite::ArtifactLoad`] — in the plan-store load path of
 //!   [`crate::engine::NativeRuntime::build`], corrupting the load result.
+//! * [`FaultSite::ConnDrop`] — in a fleet replica's connection loop
+//!   ([`crate::fleet::replica`]): the connection is dropped without a
+//!   reply, as if the process vanished mid-request.
+//! * [`FaultSite::ReplicaStall`] — in the replica's request path: the
+//!   reply is delayed (default 50 ms, or the rule's `delay=` duration),
+//!   simulating a stalled peer the router must route around.
+//! * [`FaultSite::ReplicaExit`] — in the replica's request path: the
+//!   whole replica stops serving abruptly (accept loop exits, live
+//!   connections drop), the fleet equivalent of a process kill.
 //!
 //! # Cost when disabled
 //!
@@ -69,20 +79,36 @@ pub enum FaultSite {
     BatchExec,
     /// Plan-artifact load in [`crate::engine::NativeRuntime::build`].
     ArtifactLoad,
+    /// Fleet replica connection handling: drop the connection mid-request
+    /// without a reply ([`crate::fleet::replica`]).
+    ConnDrop,
+    /// Fleet replica request path: stall the reply (a slow peer).
+    ReplicaStall,
+    /// Fleet replica request path: the replica stops serving abruptly.
+    ReplicaExit,
 }
 
 impl FaultSite {
     /// All sites, in spec-grammar order.
-    pub const ALL: [FaultSite; 3] =
-        [FaultSite::WorkerChunk, FaultSite::BatchExec, FaultSite::ArtifactLoad];
+    pub const ALL: [FaultSite; 6] = [
+        FaultSite::WorkerChunk,
+        FaultSite::BatchExec,
+        FaultSite::ArtifactLoad,
+        FaultSite::ConnDrop,
+        FaultSite::ReplicaStall,
+        FaultSite::ReplicaExit,
+    ];
 
     /// The spec-grammar name (`worker_chunk` / `batch_exec` /
-    /// `artifact_load`).
+    /// `artifact_load` / `conn_drop` / `replica_stall` / `replica_exit`).
     pub fn name(self) -> &'static str {
         match self {
             FaultSite::WorkerChunk => "worker_chunk",
             FaultSite::BatchExec => "batch_exec",
             FaultSite::ArtifactLoad => "artifact_load",
+            FaultSite::ConnDrop => "conn_drop",
+            FaultSite::ReplicaStall => "replica_stall",
+            FaultSite::ReplicaExit => "replica_exit",
         }
     }
 
@@ -91,8 +117,12 @@ impl FaultSite {
             "worker_chunk" => Ok(FaultSite::WorkerChunk),
             "batch_exec" => Ok(FaultSite::BatchExec),
             "artifact_load" => Ok(FaultSite::ArtifactLoad),
+            "conn_drop" => Ok(FaultSite::ConnDrop),
+            "replica_stall" => Ok(FaultSite::ReplicaStall),
+            "replica_exit" => Ok(FaultSite::ReplicaExit),
             other => Err(format!(
-                "unknown fault site '{other}' (expected worker_chunk, batch_exec or artifact_load)"
+                "unknown fault site '{other}' (expected worker_chunk, batch_exec, \
+                 artifact_load, conn_drop, replica_stall or replica_exit)"
             )),
         }
     }
@@ -405,6 +435,28 @@ mod tests {
         assert_eq!(p.check(FaultSite::BatchExec), Some(FaultAction::Error));
         assert_eq!(p.rules[1].checks.load(Ordering::Relaxed), 2);
         assert_eq!(p.rules[1].fired.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn fleet_sites_parse_and_fire_independently() {
+        let p = FaultPlane::parse(
+            "seed=3; conn_drop:error*1@1; replica_stall:delay=20ms*1@1; replica_exit:error*1@1",
+        )
+        .unwrap();
+        assert_eq!(p.check(FaultSite::ConnDrop), Some(FaultAction::Error));
+        assert_eq!(
+            p.check(FaultSite::ReplicaStall),
+            Some(FaultAction::Delay(Duration::from_millis(20)))
+        );
+        assert_eq!(p.check(FaultSite::ReplicaExit), Some(FaultAction::Error));
+        // caps exhausted; engine-tier sites never see fleet rules
+        assert!(p.check(FaultSite::ConnDrop).is_none());
+        assert!(p.check(FaultSite::BatchExec).is_none());
+        assert_eq!(p.total_fired(), 3);
+        // every site name round-trips through the parser
+        for site in FaultSite::ALL {
+            assert_eq!(FaultSite::parse(site.name()), Ok(site));
+        }
     }
 
     #[test]

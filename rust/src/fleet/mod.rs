@@ -1,0 +1,200 @@
+//! Fleet-tier serving: health-probed replicas behind a failover router.
+//!
+//! The serving tier so far scales *within* one process: a
+//! [`crate::coordinator::Coordinator`] batches across requests, contains
+//! panics, and supervises engine incarnations. This module scales it
+//! *across* processes — and makes the whole-process failure domain
+//! survivable:
+//!
+//! ```text
+//!                         ┌────────────────────────┐
+//!   clients ── wire ────► │ wingan router          │
+//!                         │  · health prober       │
+//!                         │  · least-loaded pick   │
+//!                         │  · breaker + failover  │
+//!                         │  · rolling republish   │
+//!                         └───┬──────┬──────┬──────┘
+//!                        wire │      │      │
+//!                      ┌──────▼─┐ ┌──▼─────┐ ┌─▼──────┐
+//!                      │replica │ │replica │ │replica │   wingan replica
+//!                      │ coord. │ │ coord. │ │ coord. │   (one Coordinator
+//!                      └───┬────┘ └───┬────┘ └───┬────┘    each)
+//!                          └──────────┼──────────┘
+//!                                ┌────▼────┐
+//!                                │PlanStore│  shared artifact store,
+//!                                └─────────┘  generation-tagged
+//! ```
+//!
+//! * [`wire`] — the std-only length-prefixed TCP protocol both hops
+//!   speak: bounds-checked, panic-free decode with typed errors, the
+//!   same hostile-bytes discipline as [`crate::artifact::codec`].
+//! * [`replica`] — [`ReplicaServer`]: one coordinator behind the wire,
+//!   warm-booting from the shared [`crate::artifact::PlanStore`], not
+//!   *ready* until warm-boot completes, health/readiness exported as
+//!   machine-readable JSON, drain/reload/shutdown control verbs, and a
+//!   request-id **fate cache** making retries idempotent (at most one
+//!   execution per id; a replayed fate is bitwise identical).
+//! * [`router`] — [`FleetRouter`] / [`RouterServer`]: EWMA-probed
+//!   least-loaded routing, per-replica circuit breakers,
+//!   retry-with-backoff failover inside the request's deadline budget,
+//!   typed [`crate::coordinator::Rejected::FleetUnavailable`] when the
+//!   whole fleet is out, and one-replica-at-a-time rolling reload when
+//!   the store's generation tag moves.
+//!
+//! The engine's bitwise determinism (same seed + weights → identical
+//! bytes, regardless of worker count or batch composition) is what makes
+//! fleet failover *safe*, not just available: a request re-executed on a
+//! different replica after a crash returns the same bits the dead
+//! replica would have — so `wingan chaos --fleet` can kill a replica
+//! mid-run and still assert bitwise equality against a single-process
+//! baseline.
+
+pub mod replica;
+pub mod router;
+pub mod wire;
+
+pub use replica::{FateCache, ReplicaConfig, ReplicaServer};
+pub use router::{
+    Breaker, FleetConfig, FleetRouter, FleetStatus, ReplicaStatus, RouteInfo, RouterServer,
+};
+pub use wire::{RecvError, WireError, WireMsg};
+
+use crate::coordinator::{GenResponse, ServeError};
+use crate::loadgen::{Arrival, ArrivalPlan};
+use crate::util::lock_unpoisoned;
+use std::sync::{mpsc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+/// Replay an open-loop arrival schedule through a blocking `submit`
+/// (e.g. [`FleetRouter::submit`]) with a pool of client threads, so slow
+/// responses never slow the offered rate — the same open-loop honesty as
+/// [`crate::loadgen`], adapted to a synchronous RPC path.
+///
+/// The dispatcher (the calling thread) paces arrivals by their planned
+/// offsets and hands them to `workers` client threads; `mid_run`, when
+/// given, is a `(arrival_index, callback)` pair fired on the dispatcher
+/// exactly once, just before that arrival is dispatched — the chaos and
+/// failover harnesses use it to kill a replica mid-run at a
+/// deterministic point in the schedule.
+///
+/// Returns one slot per arrival: `Some(fate)` for every request that was
+/// dispatched (success or typed error), in arrival order. Conservation
+/// is the caller's assertion; this driver just guarantees every arrival
+/// gets exactly one slot.
+pub fn drive_open_loop<F, M>(
+    plan: &ArrivalPlan,
+    workers: usize,
+    mid_run: Option<(usize, M)>,
+    submit: F,
+) -> Vec<Option<Result<GenResponse, ServeError>>>
+where
+    F: Fn(usize, &Arrival) -> Result<GenResponse, ServeError> + Sync,
+    M: FnOnce(),
+{
+    let n = plan.arrivals.len();
+    let results: Mutex<Vec<Option<Result<GenResponse, ServeError>>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    let (tx, rx) = mpsc::channel::<(usize, &Arrival)>();
+    let rx = Mutex::new(rx);
+    let workers = workers.max(1);
+    thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                // hold the receiver lock only for the dequeue itself
+                let msg = { lock_unpoisoned(&rx).recv() };
+                let Ok((i, a)) = msg else { break };
+                let fate = submit(i, a);
+                lock_unpoisoned(&results)[i] = Some(fate);
+            });
+        }
+        let t0 = Instant::now();
+        let mut mid = mid_run;
+        for (i, a) in plan.arrivals.iter().enumerate() {
+            if mid.as_ref().is_some_and(|(at, _)| i >= *at) {
+                if let Some((_, f)) = mid.take() {
+                    f();
+                }
+            }
+            let target = t0 + a.offset;
+            let now = Instant::now();
+            if target > now {
+                thread::sleep(target - now);
+            }
+            if tx.send((i, a)).is_err() {
+                break;
+            }
+        }
+        // a mid-run event planned past the end of the schedule still fires
+        if let Some((_, f)) = mid {
+            f();
+        }
+        drop(tx);
+    });
+    match results.into_inner() {
+        Ok(v) => v,
+        Err(p) => p.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadgen::{RouteLoad, TrafficProfile};
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    fn tiny_plan(n: usize) -> ArrivalPlan {
+        let profile = TrafficProfile {
+            routes: vec![RouteLoad { model: "m".into(), method: "w".into(), weight: 1.0 }],
+        };
+        ArrivalPlan::generate(&profile, &[4], n, 50_000.0, 9)
+    }
+
+    #[test]
+    fn open_loop_driver_gives_every_arrival_exactly_one_fate() {
+        let plan = tiny_plan(24);
+        let calls = AtomicUsize::new(0);
+        let fates = drive_open_loop(&plan, 4, None::<(usize, fn())>, |i, a| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            Ok(GenResponse {
+                id: i as u64,
+                output: a.input.clone(),
+                batch_size: 1,
+                queue_time: Duration::ZERO,
+                exec_time: Duration::ZERO,
+            })
+        });
+        assert_eq!(fates.len(), 24);
+        assert_eq!(calls.load(Ordering::Relaxed), 24);
+        for (i, fate) in fates.iter().enumerate() {
+            let resp = fate.as_ref().expect("every arrival dispatched").as_ref().unwrap();
+            assert_eq!(resp.id, i as u64, "fates land in arrival order slots");
+            assert_eq!(resp.output, plan.arrivals[i].input);
+        }
+    }
+
+    #[test]
+    fn mid_run_callback_fires_exactly_once_at_its_index() {
+        let plan = tiny_plan(12);
+        let fired = AtomicBool::new(false);
+        let seen_after = AtomicUsize::new(usize::MAX);
+        let fates = drive_open_loop(
+            &plan,
+            2,
+            Some((6usize, || {
+                assert!(!fired.swap(true, Ordering::SeqCst), "fires once");
+            })),
+            |i, _a| {
+                if fired.load(Ordering::SeqCst) {
+                    seen_after.fetch_min(i, Ordering::SeqCst);
+                }
+                Err(ServeError::EngineShutdown)
+            },
+        );
+        assert!(fired.load(Ordering::SeqCst));
+        assert_eq!(fates.iter().filter(|f| f.is_some()).count(), 12);
+        // arrivals at or past the trigger index always see the event
+        assert!(seen_after.load(Ordering::SeqCst) <= 6);
+    }
+}

@@ -1,0 +1,708 @@
+//! One fleet replica: a [`Coordinator`] served over the fleet wire
+//! protocol ([`crate::fleet::wire`]).
+//!
+//! A replica **warm-boots** from a shared [`PlanStore`]
+//! (`NativeConfig::plan_store`): startup is artifact loads, not compiles,
+//! and the store's on-disk generation tag
+//! ([`crate::artifact::read_generation`]) is recorded at boot so the
+//! fleet router can tell which plan set each replica is serving.
+//!
+//! # Readiness and health
+//!
+//! A replica is not **ready** until warm-boot completes — requests that
+//! arrive earlier get a typed `NOT_READY` wire error (retryable: the
+//! router fails them over). **Health** is a machine-readable JSON
+//! document served to any [`WireMsg::HealthQuery`]: readiness, plan
+//! generation, in-flight count, the route table, and the full
+//! [`Coordinator::health`] / [`Coordinator::metrics`] snapshots
+//! ([`HealthReport::to_json`](crate::coordinator::HealthReport::to_json),
+//! [`Metrics::to_json`](crate::coordinator::Metrics::to_json)).
+//!
+//! # Fates and retry idempotency
+//!
+//! Every **executed** outcome (a completion, a contained crash, an
+//! execution error) is recorded in a bounded [`FateCache`] keyed by the
+//! router-assigned request id. A resent id is answered from the cache —
+//! bitwise identical bytes, no second execution — so router retries are
+//! idempotent: one execution per fate, ever. Outcomes that never reached
+//! the engine (typed sheds, not-ready, draining) are deliberately *not*
+//! cached: they are the retryable verdicts.
+//!
+//! # Graceful shutdown and rolling reload
+//!
+//! `Drain` stops admission (typed `DRAINING` replies) while in-flight
+//! requests finish; `Reload` drains, reboots the coordinator from the
+//! store (picking up its current generation), and answers `Ok` only once
+//! the replica is ready again — the `Ok` *is* the readiness gate the
+//! router's rolling republish waits on. `Shutdown` (or SIGTERM via
+//! [`ReplicaServer::shutdown`]) drains through the coordinator's
+//! bounded `drain_deadline` path — leftovers get typed `EngineShutdown`,
+//! never silence — and leaves the replica reporting `draining` so the
+//! router's prober deregisters it *before* connections close: a clean
+//! roll never looks like a crash.
+
+use crate::artifact::read_generation;
+use crate::coordinator::{Coordinator, ServeConfig};
+use crate::engine::NativeConfig;
+use crate::faultinject::{FaultAction, FaultPlane, FaultSite};
+use crate::fleet::wire::{self, RecvError, WireMsg};
+use crate::util::json::{self, Json};
+use crate::util::lock_unpoisoned;
+use anyhow::{anyhow, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// How a replica is built: the coordinator's own configs plus the
+/// fleet-tier fault plane (sites `conn_drop` / `replica_stall` /
+/// `replica_exit`; the engine-tier sites keep riding inside
+/// `native.faults` / `serve.faults` as before).
+#[derive(Clone)]
+pub struct ReplicaConfig {
+    /// engine/runtime configuration; set `plan_store` to warm-boot
+    pub native: NativeConfig,
+    /// coordinator serving configuration
+    pub serve: ServeConfig,
+    /// fleet-tier fault plane consulted in the connection loop
+    pub fleet_faults: Option<Arc<FaultPlane>>,
+}
+
+/// Bounded first-fate-wins cache of executed request outcomes, keyed by
+/// the router-assigned request id. `put` refuses to overwrite: the first
+/// fate recorded for an id is the only fate that id will ever have, and
+/// FIFO eviction bounds memory regardless of request count.
+pub struct FateCache {
+    cap: usize,
+    map: HashMap<u64, WireMsg>,
+    order: VecDeque<u64>,
+}
+
+impl FateCache {
+    /// A cache remembering at most `cap` fates (oldest evicted first).
+    pub fn new(cap: usize) -> FateCache {
+        FateCache { cap: cap.max(1), map: HashMap::new(), order: VecDeque::new() }
+    }
+
+    /// The recorded fate for `id`, if any.
+    pub fn get(&self, id: u64) -> Option<&WireMsg> {
+        self.map.get(&id)
+    }
+
+    /// Record `id`'s fate. Returns `false` (and changes nothing) when the
+    /// id already has one — first fate wins, always.
+    pub fn put(&mut self, id: u64, fate: WireMsg) -> bool {
+        if self.map.contains_key(&id) {
+            return false;
+        }
+        while self.order.len() >= self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+        self.order.push_back(id);
+        self.map.insert(id, fate);
+        true
+    }
+
+    /// Fates currently held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no fate is held.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Replica lifecycle. `Ready`/`Draining` own the coordinator; everything
+/// else is coordinator-free by construction.
+enum Phase {
+    /// warm-boot in progress
+    Booting,
+    /// serving
+    Ready {
+        coord: Arc<Coordinator>,
+        generation: u64,
+    },
+    /// admission stopped; in-flight requests finishing
+    Draining {
+        coord: Arc<Coordinator>,
+        generation: u64,
+    },
+    /// boot or reload failed (terminal until a new `Reload`)
+    Failed(String),
+    /// drained and exited
+    Stopped,
+}
+
+/// State shared by the accept loop, connection threads, and the handle.
+struct Shared {
+    phase: Mutex<Phase>,
+    /// ends the accept loop and makes connection loops exit after their
+    /// current frame
+    stop: AtomicBool,
+    /// requests currently between phase-gate and reply
+    in_flight: AtomicUsize,
+    fates: Mutex<FateCache>,
+    /// live connections (dup'd handles), so an abrupt kill can sever them
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    conn_seq: AtomicU64,
+    /// serializes Reload/Drain/Shutdown transitions
+    control: Mutex<()>,
+    cfg: ReplicaConfig,
+    store_root: Option<PathBuf>,
+}
+
+impl Shared {
+    fn store_generation(&self) -> u64 {
+        self.store_root.as_deref().map(read_generation).unwrap_or(0)
+    }
+}
+
+/// Boot a coordinator from the replica config, recording the store
+/// generation it loaded under. If a republish lands *while* we are
+/// booting (generation moved between start and finish), the boot is
+/// thrown away and retried once so a fresh replica never reports a
+/// generation it only half-loaded.
+fn boot(cfg: &ReplicaConfig, store_root: &Option<PathBuf>) -> Result<(Arc<Coordinator>, u64), String> {
+    for attempt in 0..2 {
+        let before = store_root.as_deref().map(read_generation).unwrap_or(0);
+        let coord = Coordinator::start_native(cfg.native.clone(), cfg.serve.clone())
+            .map_err(|e| format!("warm-boot failed: {e}"))?;
+        let after = store_root.as_deref().map(read_generation).unwrap_or(0);
+        if before == after || attempt == 1 {
+            return Ok((Arc::new(coord), after));
+        }
+        // republish raced the boot — drain this coordinator and retry
+        drop(coord);
+    }
+    unreachable!("loop returns on attempt 1");
+}
+
+/// What a connection loop should do after handling one frame.
+enum Verdict {
+    Reply(WireMsg),
+    /// drop the connection silently (hostile bytes, or `conn_drop` fault)
+    Drop,
+    /// reply, then close this connection (clean `Shutdown` handshake)
+    ReplyClose(WireMsg),
+}
+
+/// Decrements `in_flight` on scope exit, whatever path the handler takes.
+struct InFlightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+fn handle_request(
+    shared: &Shared,
+    id: u64,
+    model: &str,
+    method: &str,
+    deadline_us: u64,
+    input: Vec<f32>,
+) -> Verdict {
+    // 1. fates first: a resent id is answered with its recorded outcome,
+    //    bitwise identical, no second execution — even across faults
+    if let Some(fate) = lock_unpoisoned(&shared.fates).get(id).cloned() {
+        return Verdict::Reply(fate);
+    }
+    // 2. fleet fault plane (deterministic, seeded)
+    if let Some(plane) = &shared.cfg.fleet_faults {
+        if plane.check(FaultSite::ConnDrop).is_some() {
+            return Verdict::Drop;
+        }
+        if let Some(action) = plane.check(FaultSite::ReplicaStall) {
+            let dwell = match action {
+                FaultAction::Delay(d) => d,
+                _ => Duration::from_millis(50),
+            };
+            thread::sleep(dwell);
+        }
+        if plane.check(FaultSite::ReplicaExit).is_some() {
+            abrupt_stop(shared, "replica_exit fault injected");
+            return Verdict::Drop;
+        }
+    }
+    // 3. phase gate — the coordinator Arc is cloned and in_flight
+    //    incremented under the same lock, so a drain that later observes
+    //    in_flight == 0 knows no handler still holds the engine
+    let (coord, _guard) = {
+        let phase = lock_unpoisoned(&shared.phase);
+        match &*phase {
+            Phase::Booting => {
+                return Verdict::Reply(WireMsg::Error {
+                    id,
+                    code: wire::code::NOT_READY,
+                    a: 0,
+                    b: 0,
+                    detail: String::new(),
+                })
+            }
+            Phase::Draining { .. } | Phase::Stopped => {
+                return Verdict::Reply(WireMsg::Error {
+                    id,
+                    code: wire::code::DRAINING,
+                    a: 0,
+                    b: 0,
+                    detail: String::new(),
+                })
+            }
+            Phase::Failed(e) => {
+                return Verdict::Reply(WireMsg::Error {
+                    id,
+                    code: wire::code::EXECUTION,
+                    a: 0,
+                    b: 0,
+                    detail: format!("replica failed: {e}"),
+                })
+            }
+            Phase::Ready { coord, .. } => {
+                shared.in_flight.fetch_add(1, Ordering::AcqRel);
+                (Arc::clone(coord), InFlightGuard(&shared.in_flight))
+            }
+        }
+    };
+    let budget = (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
+    // generous wait cap: the coordinator sheds or answers long before
+    // this; it only exists so a wedged engine can't wedge the connection
+    let wait =
+        budget.map_or(Duration::from_secs(120), |b| b + Duration::from_secs(5));
+    let outcome = match coord.submit_with_deadline(model, method, input, budget) {
+        Ok(rx) => match rx.recv_timeout(wait) {
+            Ok(fate) => fate,
+            Err(_) => Err(crate::coordinator::ServeError::Execution(
+                "replica timed out waiting for the engine".to_string(),
+            )),
+        },
+        Err(shed) => Err(shed),
+    };
+    drop(coord);
+    let (reply, executed) = match outcome {
+        Ok(resp) => (
+            WireMsg::Response {
+                id,
+                batch_size: resp.batch_size as u32,
+                queue_us: resp.queue_time.as_micros() as u64,
+                exec_us: resp.exec_time.as_micros() as u64,
+                output: resp.output,
+            },
+            true,
+        ),
+        Err(e) => {
+            use crate::coordinator::ServeError as SE;
+            // cache only outcomes the engine actually produced; sheds and
+            // shutdown verdicts are retryable and must stay uncached
+            let executed = matches!(e, SE::Crashed(_) | SE::Execution(_));
+            (wire::error_to_wire(id, &e), executed)
+        }
+    };
+    if executed {
+        lock_unpoisoned(&shared.fates).put(id, reply.clone());
+    }
+    Verdict::Reply(reply)
+}
+
+/// The replica's health/readiness document (see the module docs).
+fn health_json(shared: &Shared) -> String {
+    let (ready, draining, generation, coord) = {
+        let phase = lock_unpoisoned(&shared.phase);
+        match &*phase {
+            Phase::Ready { coord, generation } => (true, false, *generation, Some(Arc::clone(coord))),
+            Phase::Draining { coord, generation } => {
+                (false, true, *generation, Some(Arc::clone(coord)))
+            }
+            Phase::Booting => (false, false, 0, None),
+            Phase::Failed(_) | Phase::Stopped => (false, true, 0, None),
+        }
+    };
+    let mut routes = Vec::new();
+    let coordinator = match &coord {
+        Some(c) => {
+            for (model, method) in c.router().models() {
+                if let Ok(r) = c.router().route(&model, &method) {
+                    routes.push(json::obj(vec![
+                        ("model", json::s(&model)),
+                        ("method", json::s(&method)),
+                        ("input_len", json::num(r.sample_input_len as f64)),
+                        ("output_len", json::num(r.sample_output_len as f64)),
+                    ]));
+                }
+            }
+            json::obj(vec![
+                ("health", c.health().to_json()),
+                ("metrics", c.metrics().to_json()),
+            ])
+        }
+        None => Json::Null,
+    };
+    json::to_string_pretty(&json::obj(vec![
+        ("role", json::s("replica")),
+        ("ready", Json::Bool(ready)),
+        ("draining", Json::Bool(draining)),
+        ("generation", json::num(generation as f64)),
+        ("store_generation", json::num(shared.store_generation() as f64)),
+        ("in_flight", json::num(shared.in_flight.load(Ordering::Acquire) as f64)),
+        ("fates_cached", json::num(lock_unpoisoned(&shared.fates).len() as f64)),
+        ("routes", Json::Arr(routes)),
+        ("coordinator", coordinator),
+    ]))
+}
+
+/// Move a `Ready` replica to `Draining` (idempotent; no-op in any other
+/// phase). Returns once the phase is set — in-flight requests are still
+/// finishing when this returns.
+fn start_drain(shared: &Shared) {
+    let mut phase = lock_unpoisoned(&shared.phase);
+    if let Phase::Ready { coord, generation } = &*phase {
+        let (coord, generation) = (Arc::clone(coord), *generation);
+        *phase = Phase::Draining { coord, generation };
+    }
+}
+
+/// Wait (bounded) until no handler holds the engine.
+fn wait_in_flight_zero(shared: &Shared, deadline: Duration) -> bool {
+    let t0 = Instant::now();
+    while shared.in_flight.load(Ordering::Acquire) > 0 {
+        if t0.elapsed() > deadline {
+            return false;
+        }
+        thread::sleep(Duration::from_millis(2));
+    }
+    true
+}
+
+/// Take the coordinator out of the phase (leaving `Booting`) and shut it
+/// down through the bounded drain path.
+fn retire_coordinator(shared: &Shared) {
+    let taken = {
+        let mut phase = lock_unpoisoned(&shared.phase);
+        match std::mem::replace(&mut *phase, Phase::Booting) {
+            Phase::Ready { coord, .. } | Phase::Draining { coord, .. } => Some(coord),
+            other => {
+                *phase = other;
+                None
+            }
+        }
+    };
+    if let Some(coord) = taken {
+        // sole owner: drain explicitly with the configured deadline. A
+        // straggler handler still holding a clone keeps the Err side, and
+        // its drop runs the same bounded drain.
+        if let Ok(c) = Arc::try_unwrap(coord) {
+            c.shutdown_within(shared.cfg.serve.drain_deadline);
+        }
+    }
+}
+
+/// Drain → reboot from the store → ready. The caller already holds the
+/// control lock. Returns the new generation.
+fn reload(shared: &Shared) -> Result<u64, String> {
+    start_drain(shared);
+    wait_in_flight_zero(shared, shared.cfg.serve.drain_deadline + Duration::from_secs(5));
+    retire_coordinator(shared);
+    match boot(&shared.cfg, &shared.store_root) {
+        Ok((coord, generation)) => {
+            *lock_unpoisoned(&shared.phase) = Phase::Ready { coord, generation };
+            Ok(generation)
+        }
+        Err(e) => {
+            *lock_unpoisoned(&shared.phase) = Phase::Failed(e.clone());
+            Err(e)
+        }
+    }
+}
+
+/// Graceful stop: drain, retire the coordinator (leftovers answered
+/// `EngineShutdown` by its bounded drain), mark `Stopped`, end the
+/// accept loop. Live connections keep getting typed `DRAINING` replies
+/// until their peers close — deregistration, not conn-drop.
+fn graceful_stop(shared: &Shared) {
+    let _ctl = lock_unpoisoned(&shared.control);
+    start_drain(shared);
+    wait_in_flight_zero(shared, shared.cfg.serve.drain_deadline + Duration::from_secs(5));
+    retire_coordinator(shared);
+    *lock_unpoisoned(&shared.phase) = Phase::Stopped;
+    shared.stop.store(true, Ordering::Release);
+}
+
+/// Abrupt stop (process-kill semantics, used by the `replica_exit` fault
+/// and [`ReplicaServer::kill`]): no drain, connections severed.
+fn abrupt_stop(shared: &Shared, reason: &str) {
+    shared.stop.store(true, Ordering::Release);
+    let prev = {
+        let mut phase = lock_unpoisoned(&shared.phase);
+        std::mem::replace(&mut *phase, Phase::Failed(reason.to_string()))
+    };
+    // drop any owned coordinator outside the phase lock: its Drop runs a
+    // bounded drain, and health queries must not block behind it
+    drop(prev);
+    let conns = std::mem::take(&mut *lock_unpoisoned(&shared.conns));
+    for (_, stream) in conns {
+        let _ = stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// One connection's serve loop: recv → handle → send until the peer
+/// closes, the bytes turn hostile, or the replica stops.
+fn serve_conn(shared: &Arc<Shared>, mut stream: TcpStream, conn_id: u64) {
+    loop {
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        // hostile bytes, a clean close, and a torn frame all end the
+        // connection the same way: no reply a parser could misread
+        let Ok(msg) = wire::recv(&mut stream) else { break };
+        let verdict = match msg {
+            WireMsg::Request { id, model, method, deadline_us, input } => {
+                handle_request(shared, id, &model, &method, deadline_us, input)
+            }
+            WireMsg::HealthQuery => {
+                Verdict::Reply(WireMsg::HealthReply { json: health_json(shared) })
+            }
+            WireMsg::Drain => {
+                let _ctl = lock_unpoisoned(&shared.control);
+                start_drain(shared);
+                Verdict::Reply(WireMsg::Ok)
+            }
+            WireMsg::Reload => {
+                let _ctl = lock_unpoisoned(&shared.control);
+                match reload(shared) {
+                    Ok(_) => Verdict::Reply(WireMsg::Ok),
+                    Err(e) => Verdict::Reply(WireMsg::Error {
+                        id: 0,
+                        code: wire::code::EXECUTION,
+                        a: 0,
+                        b: 0,
+                        detail: e,
+                    }),
+                }
+            }
+            WireMsg::Shutdown => {
+                graceful_stop(shared);
+                Verdict::ReplyClose(WireMsg::Ok)
+            }
+            // replies arriving at a replica are a protocol violation
+            WireMsg::Response { .. }
+            | WireMsg::Error { .. }
+            | WireMsg::HealthReply { .. }
+            | WireMsg::Ok => Verdict::Drop,
+        };
+        match verdict {
+            Verdict::Reply(reply) => {
+                if wire::send(&mut stream, &reply).is_err() {
+                    break;
+                }
+            }
+            Verdict::ReplyClose(reply) => {
+                let _ = wire::send(&mut stream, &reply);
+                break;
+            }
+            Verdict::Drop => break,
+        }
+    }
+    lock_unpoisoned(&shared.conns).remove(&conn_id);
+}
+
+/// A running replica: TCP listener + warm-booting coordinator. Binding
+/// is synchronous (the address is known immediately); the boot happens on
+/// a background thread, and the replica answers `NOT_READY` until it
+/// lands. See the module docs for the full lifecycle.
+pub struct ReplicaServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl ReplicaServer {
+    /// Bind `bind` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving. Returns as soon as the socket is bound.
+    pub fn spawn(bind: &str, cfg: ReplicaConfig) -> Result<ReplicaServer> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        listener.set_nonblocking(true).map_err(|e| anyhow!("set_nonblocking: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| anyhow!("local_addr: {e}"))?;
+        let store_root = cfg.native.plan_store.clone();
+        let shared = Arc::new(Shared {
+            phase: Mutex::new(Phase::Booting),
+            stop: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            fates: Mutex::new(FateCache::new(1024)),
+            conns: Mutex::new(HashMap::new()),
+            conn_seq: AtomicU64::new(0),
+            control: Mutex::new(()),
+            cfg,
+            store_root,
+        });
+        // warm-boot off-thread so the listener (and health endpoint) are
+        // up immediately; requests in the gap get typed NOT_READY
+        {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || {
+                let booted = boot(&shared.cfg, &shared.store_root);
+                let mut phase = lock_unpoisoned(&shared.phase);
+                if matches!(&*phase, Phase::Booting) {
+                    *phase = match booted {
+                        Ok((coord, generation)) => Phase::Ready { coord, generation },
+                        Err(e) => Phase::Failed(e),
+                    };
+                }
+            });
+        }
+        let accept = {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || loop {
+                if shared.stop.load(Ordering::Acquire) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let _ = stream.set_nonblocking(false);
+                        let conn_id = shared.conn_seq.fetch_add(1, Ordering::Relaxed);
+                        if let Ok(dup) = stream.try_clone() {
+                            lock_unpoisoned(&shared.conns).insert(conn_id, dup);
+                        }
+                        let shared = Arc::clone(&shared);
+                        thread::spawn(move || serve_conn(&shared, stream, conn_id));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(5)),
+                }
+            })
+        };
+        Ok(ReplicaServer { addr, shared, accept: Some(accept) })
+    }
+
+    /// The bound address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once warm-boot completed and the replica is admitting.
+    pub fn ready(&self) -> bool {
+        matches!(&*lock_unpoisoned(&self.shared.phase), Phase::Ready { .. })
+    }
+
+    /// True while the serve loop is running (stops after a graceful or
+    /// abrupt stop, local or remote).
+    pub fn alive(&self) -> bool {
+        !self.shared.stop.load(Ordering::Acquire)
+    }
+
+    /// Block until [`ReplicaServer::ready`] or the timeout. Returns the
+    /// readiness verdict.
+    pub fn wait_ready(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < timeout {
+            match &*lock_unpoisoned(&self.shared.phase) {
+                Phase::Ready { .. } => return true,
+                Phase::Failed(_) | Phase::Stopped => return false,
+                _ => {}
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        false
+    }
+
+    /// If warm-boot failed, the error.
+    pub fn boot_error(&self) -> Option<String> {
+        match &*lock_unpoisoned(&self.shared.phase) {
+            Phase::Failed(e) => Some(e.clone()),
+            _ => None,
+        }
+    }
+
+    /// Graceful shutdown: drain in-flight work (bounded by the serve
+    /// config's `drain_deadline`; leftovers answered `EngineShutdown`),
+    /// report `draining` to the prober so the router deregisters first,
+    /// then stop.
+    pub fn shutdown(mut self) {
+        graceful_stop(&self.shared);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Abrupt kill (process-death semantics, for chaos drills): no drain,
+    /// live connections severed mid-request.
+    pub fn kill(mut self) {
+        abrupt_stop(&self.shared, "killed");
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block the calling thread until the serve loop ends (remote
+    /// `Shutdown`, `replica_exit` fault, or [`ReplicaServer::shutdown`]
+    /// from another thread).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ReplicaServer {
+    fn drop(&mut self) {
+        // dropped without an explicit verdict: stop accepting; the
+        // retired coordinator's own Drop runs its bounded drain
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        retire_coordinator(&self.shared);
+        *lock_unpoisoned(&self.shared.phase) = Phase::Stopped;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fate_cache_first_fate_wins_and_is_bitwise_stable() {
+        let mut c = FateCache::new(8);
+        let first = WireMsg::Response {
+            id: 1,
+            batch_size: 4,
+            queue_us: 10,
+            exec_us: 20,
+            output: vec![1.0, 2.0],
+        };
+        let second = WireMsg::Response {
+            id: 1,
+            batch_size: 8,
+            queue_us: 99,
+            exec_us: 99,
+            output: vec![9.0],
+        };
+        assert!(c.put(1, first.clone()));
+        assert!(!c.put(1, second), "second fate for one id must be refused");
+        let got = c.get(1).unwrap();
+        assert_eq!(got, &first);
+        assert_eq!(got.encode(), first.encode(), "replayed frame is bitwise identical");
+        assert!(c.get(2).is_none());
+    }
+
+    #[test]
+    fn fate_cache_evicts_fifo_and_stays_bounded() {
+        let mut c = FateCache::new(3);
+        for id in 0..10u64 {
+            assert!(c.put(id, WireMsg::Ok));
+            assert!(c.len() <= 3, "cap violated at id {id}");
+        }
+        assert!(!c.is_empty());
+        // the three newest survive; the oldest are gone
+        assert!(c.get(9).is_some() && c.get(8).is_some() && c.get(7).is_some());
+        assert!(c.get(0).is_none() && c.get(6).is_none());
+    }
+}

@@ -1,0 +1,1044 @@
+//! The fleet router: least-loaded failover routing over N replicas.
+//!
+//! A [`FleetRouter`] fronts a set of [`crate::fleet::replica`] processes
+//! (or in-process [`ReplicaServer`](crate::fleet::replica::ReplicaServer)s
+//! — the wire doesn't care) with:
+//!
+//! * a background **prober** polling every replica's health JSON on an
+//!   interval: readiness, drain state, plan generation, and the route
+//!   table (cached for clients that want to know what the fleet serves);
+//! * **least-loaded routing**: among admitting replicas, pick the one
+//!   with the fewest in-flight requests, EWMA latency as the tie-break;
+//! * a per-replica **circuit breaker** (consecutive transport failures
+//!   open it; after a cooldown a single half-open probe request decides
+//!   whether it closes again);
+//! * **retry-with-backoff failover** under the request's deadline
+//!   budget: transport failures and never-executed typed verdicts
+//!   ([`wire::retryable`]) fail over to another replica with capped
+//!   exponential backoff. The router assigns each request one wire id
+//!   and reuses it across every attempt, so replicas recognise resends
+//!   and replay the recorded fate — a retried completion is bitwise
+//!   identical and never executes twice;
+//! * **graceful degradation**: when no replica admits, requests shed
+//!   *immediately* with typed
+//!   [`Rejected::FleetUnavailable`] — the fleet never hangs a client on
+//!   capacity it doesn't have;
+//! * **rolling republish** ([`FleetRouter::roll_to_generation`]): when
+//!   the shared store's generation tag moves, replicas are rolled one at
+//!   a time — quiesce → `Drain` → `Reload` → readiness-gate (the reload
+//!   `Ok` plus a health probe confirming the new generation) → readmit —
+//!   so clients never see mixed-generation outputs and the fleet never
+//!   loses more than one replica of capacity to a republish.
+
+use crate::coordinator::{GenResponse, Rejected, ServeError};
+use crate::fleet::wire::{self, RecvError, WireMsg};
+use crate::util::json::{self, Json};
+use crate::util::lock_unpoisoned;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Router tuning. The defaults suit loopback test fleets; production
+/// would stretch the probe interval and timeouts.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// replica addresses (`host:port`) to front at startup
+    pub replicas: Vec<String>,
+    /// health-probe period
+    pub probe_interval: Duration,
+    /// EWMA smoothing factor for per-replica latency, in `(0, 1]`
+    pub ewma_alpha: f64,
+    /// consecutive transport failures that open a replica's breaker
+    pub breaker_threshold: u32,
+    /// how long an open breaker rejects before a half-open probe
+    pub breaker_cooldown: Duration,
+    /// first retry backoff (doubles per attempt)
+    pub backoff_base: Duration,
+    /// backoff cap
+    pub backoff_max: Duration,
+    /// attempts per request (first try + failovers)
+    pub max_attempts: u32,
+    /// TCP connect timeout per attempt
+    pub connect_timeout: Duration,
+    /// request round-trip cap when the request carries no deadline
+    pub default_timeout: Duration,
+    /// plan-store root to watch: when its generation tag moves past what
+    /// the replicas are serving, a rolling reload starts automatically
+    pub store: Option<std::path::PathBuf>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            replicas: Vec::new(),
+            probe_interval: Duration::from_millis(100),
+            ewma_alpha: 0.3,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(400),
+            backoff_base: Duration::from_millis(5),
+            backoff_max: Duration::from_millis(160),
+            max_attempts: 4,
+            connect_timeout: Duration::from_millis(500),
+            default_timeout: Duration::from_secs(30),
+            store: None,
+        }
+    }
+}
+
+/// Per-replica circuit breaker: a pure state machine (no clock of its
+/// own — every transition takes `now`), so the trip/half-open/close
+/// choreography is unit-testable without sleeping.
+#[derive(Clone, Debug)]
+pub struct Breaker {
+    threshold: u32,
+    cooldown: Duration,
+    consecutive: u32,
+    open_until: Option<Instant>,
+    half_open: bool,
+}
+
+impl Breaker {
+    /// Closed breaker tripping after `threshold` consecutive failures,
+    /// cooling down for `cooldown` before the half-open probe.
+    pub fn new(threshold: u32, cooldown: Duration) -> Breaker {
+        Breaker { threshold: threshold.max(1), cooldown, consecutive: 0, open_until: None, half_open: false }
+    }
+
+    /// A request (or probe) succeeded: close fully.
+    pub fn on_success(&mut self) {
+        self.consecutive = 0;
+        self.open_until = None;
+        self.half_open = false;
+    }
+
+    /// A transport failure. A failure while half-open re-opens
+    /// immediately (the probe failed); otherwise the consecutive count
+    /// advances and trips the breaker at the threshold.
+    pub fn on_failure(&mut self, now: Instant) {
+        if self.half_open {
+            self.half_open = false;
+            self.open_until = now.checked_add(self.cooldown);
+            return;
+        }
+        self.consecutive = self.consecutive.saturating_add(1);
+        if self.consecutive >= self.threshold {
+            self.open_until = now.checked_add(self.cooldown);
+        }
+    }
+
+    /// May a request be routed here right now? Once the cooldown
+    /// expires this admits exactly **one** half-open probe; further
+    /// requests are rejected until that probe's verdict arrives.
+    pub fn admits(&mut self, now: Instant) -> bool {
+        match self.open_until {
+            None => true,
+            Some(t) if now >= t => {
+                if self.half_open {
+                    false
+                } else {
+                    self.half_open = true;
+                    true
+                }
+            }
+            Some(_) => false,
+        }
+    }
+
+    /// Position label for status reporting.
+    pub fn state(&self, now: Instant) -> &'static str {
+        match self.open_until {
+            None => "closed",
+            Some(t) if self.half_open || now >= t => "half-open",
+            Some(_) => "open",
+        }
+    }
+
+    /// Fully close (used when a rolled replica passes its readiness gate).
+    pub fn reset(&mut self) {
+        self.on_success();
+    }
+}
+
+/// One route the fleet serves, as learned from replica health probes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteInfo {
+    /// zoo model id
+    pub model: String,
+    /// compute path ("winograd" / "tdc")
+    pub method: String,
+    /// per-sample flat input length
+    pub input_len: usize,
+    /// per-sample flat output length
+    pub output_len: usize,
+}
+
+struct ReplicaSlot {
+    addr: String,
+    sock: SocketAddr,
+    ready: bool,
+    draining: bool,
+    /// quiesced for a rolling reload; not routable until readmitted
+    rolling: bool,
+    generation: u64,
+    /// EWMA request latency in ms (0 = no sample yet)
+    ewma_ms: f64,
+    in_flight: Arc<AtomicUsize>,
+    breaker: Breaker,
+    completed: u64,
+    transport_failures: u64,
+}
+
+#[derive(Default)]
+struct RouterStats {
+    requests: AtomicU64,
+    completed: AtomicU64,
+    failovers: AtomicU64,
+    shed_unavailable: AtomicU64,
+}
+
+struct Inner {
+    cfg: FleetConfig,
+    slots: Mutex<Vec<ReplicaSlot>>,
+    routes: Mutex<Vec<RouteInfo>>,
+    stop: AtomicBool,
+    next_id: AtomicU64,
+    stats: RouterStats,
+    /// serializes rolling reloads (manual and store-watch triggered)
+    roll_lock: Mutex<()>,
+}
+
+/// One replica's row in [`FleetStatus`].
+#[derive(Clone, Debug)]
+pub struct ReplicaStatus {
+    /// replica address
+    pub addr: String,
+    /// admitting requests (probe verdict)
+    pub ready: bool,
+    /// drain in progress on the replica
+    pub draining: bool,
+    /// quiesced by a rolling reload
+    pub rolling: bool,
+    /// plan generation the replica serves
+    pub generation: u64,
+    /// breaker position label
+    pub breaker: &'static str,
+    /// EWMA request latency in ms
+    pub ewma_ms: f64,
+    /// requests in flight via this router
+    pub in_flight: usize,
+    /// completions via this router
+    pub completed: u64,
+    /// transport failures via this router
+    pub transport_failures: u64,
+}
+
+/// Snapshot of the fleet as the router sees it.
+#[derive(Clone, Debug)]
+pub struct FleetStatus {
+    /// per-replica rows
+    pub replicas: Vec<ReplicaStatus>,
+    /// routes learned from the fleet
+    pub routes: Vec<RouteInfo>,
+    /// requests submitted via this router
+    pub requests: u64,
+    /// completions via this router
+    pub completed: u64,
+    /// failover attempts (retries on another pick)
+    pub failovers: u64,
+    /// requests shed with [`Rejected::FleetUnavailable`]
+    pub shed_unavailable: u64,
+}
+
+impl FleetStatus {
+    /// Every replica admitting, none draining or mid-roll.
+    pub fn all_ready(&self) -> bool {
+        !self.replicas.is_empty()
+            && self.replicas.iter().all(|r| r.ready && !r.draining && !r.rolling)
+    }
+
+    /// Replicas currently admitting.
+    pub fn ready_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.ready && !r.draining && !r.rolling).count()
+    }
+
+    /// Machine-readable form (CI smoke and `wingan probe` parse this;
+    /// stable-key contract as elsewhere).
+    pub fn to_json(&self) -> Json {
+        let replicas: Vec<Json> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("addr", json::s(&r.addr)),
+                    ("ready", Json::Bool(r.ready)),
+                    ("draining", Json::Bool(r.draining)),
+                    ("rolling", Json::Bool(r.rolling)),
+                    ("generation", json::num(r.generation as f64)),
+                    ("breaker", json::s(r.breaker)),
+                    ("ewma_ms", json::num(r.ewma_ms)),
+                    ("in_flight", json::num(r.in_flight as f64)),
+                    ("completed", json::num(r.completed as f64)),
+                    ("transport_failures", json::num(r.transport_failures as f64)),
+                ])
+            })
+            .collect();
+        let routes: Vec<Json> = self
+            .routes
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("model", json::s(&r.model)),
+                    ("method", json::s(&r.method)),
+                    ("input_len", json::num(r.input_len as f64)),
+                    ("output_len", json::num(r.output_len as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("role", json::s("router")),
+            ("all_ready", Json::Bool(self.all_ready())),
+            ("ready_count", json::num(self.ready_count() as f64)),
+            ("replicas", Json::Arr(replicas)),
+            ("routes", Json::Arr(routes)),
+            ("requests", json::num(self.requests as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("failovers", json::num(self.failovers as f64)),
+            ("shed_unavailable", json::num(self.shed_unavailable as f64)),
+        ])
+    }
+}
+
+/// One wire round-trip: connect, send, receive, with every stage under a
+/// timeout so a stalled replica costs bounded time, never a hang.
+fn call(sock: SocketAddr, msg: &WireMsg, connect: Duration, io: Duration) -> Result<WireMsg, String> {
+    let mut stream =
+        TcpStream::connect_timeout(&sock, connect).map_err(|e| format!("connect {sock}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(io));
+    let _ = stream.set_write_timeout(Some(io));
+    wire::send(&mut stream, msg).map_err(|e| format!("send {sock}: {e}"))?;
+    match wire::recv(&mut stream) {
+        Ok(reply) => Ok(reply),
+        Err(RecvError::Closed) => Err(format!("{sock} closed the connection")),
+        Err(RecvError::Io(e)) => Err(format!("recv {sock}: {e}")),
+        Err(RecvError::Wire(e)) => Err(format!("protocol error from {sock}: {e}")),
+    }
+}
+
+fn parse_sock(addr: &str) -> Result<SocketAddr, String> {
+    addr.to_socket_addrs()
+        .map_err(|e| format!("bad replica address '{addr}': {e}"))?
+        .next()
+        .ok_or_else(|| format!("replica address '{addr}' resolves to nothing"))
+}
+
+impl Inner {
+    /// Apply one health probe result to a slot.
+    fn note_probe(&self, addr: &str, verdict: Option<&Json>) {
+        let mut slots = lock_unpoisoned(&self.slots);
+        let Some(slot) = slots.iter_mut().find(|s| s.addr == addr) else { return };
+        match verdict {
+            Some(doc) => {
+                slot.ready = matches!(doc.get("ready"), Some(Json::Bool(true)));
+                slot.draining = matches!(doc.get("draining"), Some(Json::Bool(true)));
+                if let Some(g) = doc.get("generation").and_then(Json::as_usize) {
+                    slot.generation = g as u64;
+                }
+            }
+            None => {
+                slot.ready = false;
+            }
+        }
+    }
+
+    /// Cache the fleet's route table from the first ready replica's doc.
+    fn note_routes(&self, doc: &Json) {
+        let Some(arr) = doc.get("routes").and_then(Json::as_arr) else { return };
+        if arr.is_empty() {
+            return;
+        }
+        let mut parsed = Vec::new();
+        for r in arr {
+            let (Some(model), Some(method), Some(input_len), Some(output_len)) = (
+                r.get("model").and_then(Json::as_str),
+                r.get("method").and_then(Json::as_str),
+                r.get("input_len").and_then(Json::as_usize),
+                r.get("output_len").and_then(Json::as_usize),
+            ) else {
+                return;
+            };
+            parsed.push(RouteInfo {
+                model: model.to_string(),
+                method: method.to_string(),
+                input_len,
+                output_len,
+            });
+        }
+        *lock_unpoisoned(&self.routes) = parsed;
+    }
+
+    /// One prober sweep: health-query every replica, then check the
+    /// watched store for a generation the fleet hasn't rolled to yet.
+    fn probe_once(self: &Arc<Self>) {
+        let addrs: Vec<(String, SocketAddr)> = lock_unpoisoned(&self.slots)
+            .iter()
+            .map(|s| (s.addr.clone(), s.sock))
+            .collect();
+        for (addr, sock) in addrs {
+            let reply = call(
+                sock,
+                &WireMsg::HealthQuery,
+                self.cfg.connect_timeout,
+                Duration::from_secs(1),
+            );
+            match reply {
+                Ok(WireMsg::HealthReply { json: text }) => match json::parse(&text) {
+                    Ok(doc) => {
+                        self.note_probe(&addr, Some(&doc));
+                        if matches!(doc.get("ready"), Some(Json::Bool(true))) {
+                            self.note_routes(&doc);
+                        }
+                    }
+                    Err(_) => self.note_probe(&addr, None),
+                },
+                _ => self.note_probe(&addr, None),
+            }
+        }
+        if let Some(store) = &self.cfg.store {
+            let store_gen = crate::artifact::read_generation(store);
+            let stale = lock_unpoisoned(&self.slots)
+                .iter()
+                .any(|s| s.ready && !s.rolling && s.generation < store_gen);
+            if stale {
+                // best-effort: a failed roll is retried on the next sweep
+                let _ = self.roll_to_generation(store_gen, Duration::from_secs(300));
+            }
+        }
+    }
+
+    /// Pick the least-loaded admitting replica. `None` = fleet out.
+    fn pick(&self) -> Option<(String, SocketAddr, Arc<AtomicUsize>)> {
+        let now = Instant::now();
+        let mut slots = lock_unpoisoned(&self.slots);
+        let mut best: Option<(usize, usize, f64)> = None; // (idx, in_flight, ewma)
+        for (idx, slot) in slots.iter_mut().enumerate() {
+            if !slot.ready || slot.draining || slot.rolling || !slot.breaker.admits(now) {
+                continue;
+            }
+            let load = slot.in_flight.load(Ordering::Acquire);
+            let better = match best {
+                None => true,
+                Some((_, b_load, b_ewma)) => {
+                    load < b_load || (load == b_load && slot.ewma_ms.total_cmp(&b_ewma).is_lt())
+                }
+            };
+            if better {
+                best = Some((idx, load, slot.ewma_ms));
+            }
+        }
+        best.map(|(idx, _, _)| {
+            let s = &slots[idx];
+            (s.addr.clone(), s.sock, Arc::clone(&s.in_flight))
+        })
+    }
+
+    fn fleet_size(&self) -> usize {
+        lock_unpoisoned(&self.slots).len()
+    }
+
+    fn note_outcome(&self, addr: &str, latency: Option<Duration>, transport_failure: bool) {
+        let now = Instant::now();
+        let mut slots = lock_unpoisoned(&self.slots);
+        let Some(slot) = slots.iter_mut().find(|s| s.addr == addr) else { return };
+        if transport_failure {
+            slot.transport_failures += 1;
+            slot.breaker.on_failure(now);
+        } else {
+            slot.breaker.on_success();
+        }
+        if let Some(lat) = latency {
+            let ms = lat.as_secs_f64() * 1e3;
+            slot.completed += 1;
+            slot.ewma_ms = if slot.ewma_ms == 0.0 {
+                ms
+            } else {
+                self.cfg.ewma_alpha * ms + (1.0 - self.cfg.ewma_alpha) * slot.ewma_ms
+            };
+        }
+    }
+
+    fn submit(
+        &self,
+        model: &str,
+        method: &str,
+        input: Vec<f32>,
+        budget: Option<Duration>,
+    ) -> Result<GenResponse, ServeError> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let deadline = budget.and_then(|b| t0.checked_add(b));
+        let mut backoff = self.cfg.backoff_base;
+        let mut last_shed: Option<ServeError> = None;
+        for attempt in 0..self.cfg.max_attempts {
+            if attempt > 0 {
+                self.stats.failovers.fetch_add(1, Ordering::Relaxed);
+            }
+            let remaining = match deadline {
+                Some(d) => {
+                    let rem = d.saturating_duration_since(Instant::now());
+                    if rem.is_zero() {
+                        return Err(ServeError::Rejected(Rejected::DeadlineInfeasible {
+                            remaining: Duration::ZERO,
+                            estimated_wait: Duration::ZERO,
+                        }));
+                    }
+                    Some(rem)
+                }
+                None => None,
+            };
+            let Some((addr, sock, in_flight)) = self.pick() else {
+                self.stats.shed_unavailable.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::Rejected(Rejected::FleetUnavailable {
+                    replicas: self.fleet_size(),
+                }));
+            };
+            let io_timeout = remaining
+                .map_or(self.cfg.default_timeout, |r| r + Duration::from_secs(2));
+            let msg = WireMsg::Request {
+                id,
+                model: model.to_string(),
+                method: method.to_string(),
+                deadline_us: remaining.map_or(0, |r| r.as_micros() as u64),
+                input: input.clone(),
+            };
+            in_flight.fetch_add(1, Ordering::AcqRel);
+            let sent = Instant::now();
+            let reply = call(sock, &msg, self.cfg.connect_timeout, io_timeout);
+            in_flight.fetch_sub(1, Ordering::AcqRel);
+            match reply {
+                Ok(WireMsg::Response { id: _, batch_size, queue_us, exec_us, output }) => {
+                    self.note_outcome(&addr, Some(sent.elapsed()), false);
+                    self.stats.completed.fetch_add(1, Ordering::Relaxed);
+                    return Ok(GenResponse {
+                        id,
+                        output,
+                        batch_size: batch_size as usize,
+                        queue_time: Duration::from_micros(queue_us),
+                        exec_time: Duration::from_micros(exec_us),
+                    });
+                }
+                Ok(WireMsg::Error { code, a, b, detail, .. }) => {
+                    // a typed verdict is a *transport success*: the
+                    // replica is alive and talking
+                    self.note_outcome(&addr, None, false);
+                    let err = wire::error_from_wire(code, a, b, &detail);
+                    if !wire::retryable(code) {
+                        return Err(err);
+                    }
+                    if code == wire::code::NOT_READY || code == wire::code::DRAINING {
+                        // route around it until the prober re-admits it
+                        let mut slots = lock_unpoisoned(&self.slots);
+                        if let Some(s) = slots.iter_mut().find(|s| s.addr == addr) {
+                            if code == wire::code::NOT_READY {
+                                s.ready = false;
+                            } else {
+                                s.draining = true;
+                            }
+                        }
+                    }
+                    last_shed = Some(err);
+                }
+                Ok(_) => {
+                    // protocol violation; treat like a transport failure
+                    self.note_outcome(&addr, None, true);
+                }
+                Err(_) => {
+                    self.note_outcome(&addr, None, true);
+                }
+            }
+            // capped exponential backoff, never past the deadline
+            let mut dwell = backoff;
+            if let Some(d) = deadline {
+                dwell = dwell.min(d.saturating_duration_since(Instant::now()));
+            }
+            if !dwell.is_zero() {
+                thread::sleep(dwell);
+            }
+            backoff = (backoff * 2).min(self.cfg.backoff_max);
+        }
+        // attempts exhausted: surface the last typed shed if we have one
+        Err(last_shed.unwrap_or_else(|| {
+            self.stats.shed_unavailable.fetch_add(1, Ordering::Relaxed);
+            ServeError::Rejected(Rejected::FleetUnavailable { replicas: self.fleet_size() })
+        }))
+    }
+
+    /// Roll every replica not already on `generation` through
+    /// drain → reload → readiness-gate → readmit, **one at a time**.
+    fn roll_to_generation(&self, generation: u64, deadline: Duration) -> Result<(), String> {
+        let _roll = lock_unpoisoned(&self.roll_lock);
+        let t0 = Instant::now();
+        let addrs: Vec<(String, SocketAddr)> = lock_unpoisoned(&self.slots)
+            .iter()
+            .map(|s| (s.addr.clone(), s.sock))
+            .collect();
+        for (addr, sock) in addrs {
+            let (needs_roll, in_flight) = {
+                let slots = lock_unpoisoned(&self.slots);
+                match slots.iter().find(|s| s.addr == addr) {
+                    Some(s) => (s.generation < generation, Arc::clone(&s.in_flight)),
+                    None => continue,
+                }
+            };
+            if !needs_roll {
+                continue;
+            }
+            // 1. quiesce: stop routing here, wait for our in-flight to land
+            self.set_rolling(&addr, true);
+            while in_flight.load(Ordering::Acquire) > 0 {
+                if t0.elapsed() > deadline {
+                    self.set_rolling(&addr, false);
+                    return Err(format!("roll of {addr}: quiesce timed out"));
+                }
+                thread::sleep(Duration::from_millis(2));
+            }
+            // 2. drain + reload; the reload Ok is the replica saying it
+            //    warm-booted the new generation and is admitting again
+            let step = |msg: &WireMsg, label: &str, io: Duration| -> Result<(), String> {
+                match call(sock, msg, self.cfg.connect_timeout, io) {
+                    Ok(WireMsg::Ok) => Ok(()),
+                    Ok(WireMsg::Error { detail, .. }) => {
+                        Err(format!("roll of {addr}: {label} failed: {detail}"))
+                    }
+                    Ok(other) => Err(format!("roll of {addr}: {label} got {other:?}")),
+                    Err(e) => Err(format!("roll of {addr}: {label}: {e}")),
+                }
+            };
+            let budget = deadline.saturating_sub(t0.elapsed()).max(Duration::from_secs(1));
+            if let Err(e) = step(&WireMsg::Drain, "drain", Duration::from_secs(5))
+                .and_then(|()| step(&WireMsg::Reload, "reload", budget))
+            {
+                self.set_rolling(&addr, false);
+                return Err(e);
+            }
+            // 3. readiness gate: confirm via the health document that the
+            //    replica is admitting *and* serving the target generation
+            match call(sock, &WireMsg::HealthQuery, self.cfg.connect_timeout, Duration::from_secs(2))
+            {
+                Ok(WireMsg::HealthReply { json: text }) => {
+                    let doc = json::parse(&text)
+                        .map_err(|e| format!("roll of {addr}: bad health JSON: {e}"))?;
+                    let ready = matches!(doc.get("ready"), Some(Json::Bool(true)));
+                    let gen =
+                        doc.get("generation").and_then(Json::as_usize).unwrap_or(0) as u64;
+                    if !ready || gen != generation {
+                        self.set_rolling(&addr, false);
+                        return Err(format!(
+                            "roll of {addr}: readiness gate failed (ready={ready}, \
+                             generation={gen}, want {generation})"
+                        ));
+                    }
+                }
+                other => {
+                    self.set_rolling(&addr, false);
+                    return Err(format!("roll of {addr}: readiness probe failed: {other:?}"));
+                }
+            }
+            // 4. readmit with a clean slate
+            {
+                let mut slots = lock_unpoisoned(&self.slots);
+                if let Some(s) = slots.iter_mut().find(|s| s.addr == addr) {
+                    s.rolling = false;
+                    s.ready = true;
+                    s.draining = false;
+                    s.generation = generation;
+                    s.breaker.reset();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn set_rolling(&self, addr: &str, rolling: bool) {
+        let mut slots = lock_unpoisoned(&self.slots);
+        if let Some(s) = slots.iter_mut().find(|s| s.addr == addr) {
+            s.rolling = rolling;
+        }
+    }
+
+    fn status(&self) -> FleetStatus {
+        let now = Instant::now();
+        let replicas = lock_unpoisoned(&self.slots)
+            .iter()
+            .map(|s| ReplicaStatus {
+                addr: s.addr.clone(),
+                ready: s.ready,
+                draining: s.draining,
+                rolling: s.rolling,
+                generation: s.generation,
+                breaker: s.breaker.state(now),
+                ewma_ms: s.ewma_ms,
+                in_flight: s.in_flight.load(Ordering::Acquire),
+                completed: s.completed,
+                transport_failures: s.transport_failures,
+            })
+            .collect();
+        FleetStatus {
+            replicas,
+            routes: lock_unpoisoned(&self.routes).clone(),
+            requests: self.stats.requests.load(Ordering::Relaxed),
+            completed: self.stats.completed.load(Ordering::Relaxed),
+            failovers: self.stats.failovers.load(Ordering::Relaxed),
+            shed_unavailable: self.stats.shed_unavailable.load(Ordering::Relaxed),
+        }
+    }
+
+    fn make_slot(&self, addr: String, sock: SocketAddr) -> ReplicaSlot {
+        ReplicaSlot {
+            addr,
+            sock,
+            ready: false,
+            draining: false,
+            rolling: false,
+            generation: 0,
+            ewma_ms: 0.0,
+            in_flight: Arc::new(AtomicUsize::new(0)),
+            breaker: Breaker::new(self.cfg.breaker_threshold, self.cfg.breaker_cooldown),
+            completed: 0,
+            transport_failures: 0,
+        }
+    }
+}
+
+/// The fleet router handle (see the module docs). Cheap to share behind
+/// an `Arc`; dropping the last handle stops the prober.
+pub struct FleetRouter {
+    inner: Arc<Inner>,
+    prober: Option<thread::JoinHandle<()>>,
+}
+
+impl FleetRouter {
+    /// Build a router over `cfg.replicas` and start the health prober.
+    /// Replicas are born unready; the first probe sweep (immediate)
+    /// admits the live ones.
+    pub fn new(cfg: FleetConfig) -> Result<FleetRouter, String> {
+        let mut slots = Vec::new();
+        let inner = Arc::new(Inner {
+            cfg: cfg.clone(),
+            slots: Mutex::new(Vec::new()),
+            routes: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+            stats: RouterStats::default(),
+            roll_lock: Mutex::new(()),
+        });
+        for addr in &cfg.replicas {
+            let sock = parse_sock(addr)?;
+            slots.push(inner.make_slot(addr.clone(), sock));
+        }
+        *lock_unpoisoned(&inner.slots) = slots;
+        let prober = {
+            let inner = Arc::clone(&inner);
+            thread::spawn(move || {
+                while !inner.stop.load(Ordering::Acquire) {
+                    inner.probe_once();
+                    let mut slept = Duration::ZERO;
+                    while slept < inner.cfg.probe_interval {
+                        if inner.stop.load(Ordering::Acquire) {
+                            return;
+                        }
+                        let step = Duration::from_millis(10).min(inner.cfg.probe_interval);
+                        thread::sleep(step);
+                        slept += step;
+                    }
+                }
+            })
+        };
+        Ok(FleetRouter { inner, prober: Some(prober) })
+    }
+
+    /// Route one request (see the module docs for the failover contract).
+    /// `budget` is the request's total deadline across all attempts.
+    pub fn submit(
+        &self,
+        model: &str,
+        method: &str,
+        input: Vec<f32>,
+        budget: Option<Duration>,
+    ) -> Result<GenResponse, ServeError> {
+        self.inner.submit(model, method, input, budget)
+    }
+
+    /// Current fleet snapshot.
+    pub fn status(&self) -> FleetStatus {
+        self.inner.status()
+    }
+
+    /// Routes the fleet serves (learned from health probes; empty until
+    /// the first ready replica has been probed).
+    pub fn routes(&self) -> Vec<RouteInfo> {
+        lock_unpoisoned(&self.inner.routes).clone()
+    }
+
+    /// Roll the fleet to `generation`, one replica at a time.
+    pub fn roll_to_generation(&self, generation: u64, deadline: Duration) -> Result<(), String> {
+        self.inner.roll_to_generation(generation, deadline)
+    }
+
+    /// Front an additional replica (born unready; the prober admits it).
+    pub fn add_replica(&self, addr: &str) -> Result<(), String> {
+        let sock = parse_sock(addr)?;
+        let slot = self.inner.make_slot(addr.to_string(), sock);
+        lock_unpoisoned(&self.inner.slots).push(slot);
+        Ok(())
+    }
+
+    /// Stop fronting `addr` (a dead or decommissioned replica).
+    pub fn remove_replica(&self, addr: &str) {
+        lock_unpoisoned(&self.inner.slots).retain(|s| s.addr != addr);
+    }
+
+    /// Block until [`FleetStatus::all_ready`] or the timeout; returns the
+    /// final verdict.
+    pub fn wait_all_ready(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < timeout {
+            if self.status().all_ready() {
+                return true;
+            }
+            thread::sleep(Duration::from_millis(20));
+        }
+        self.status().all_ready()
+    }
+}
+
+impl Drop for FleetRouter {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::Release);
+        if let Some(h) = self.prober.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A TCP front-end for a [`FleetRouter`]: clients speak the same wire
+/// protocol to the router as the router speaks to replicas. `Request`
+/// frames are routed with failover (the reply echoes the *client's*
+/// request id; the router's own fleet-idempotency ids stay internal);
+/// `HealthQuery` answers the fleet status JSON.
+pub struct RouterServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl RouterServer {
+    /// Bind and serve. The router handle is shared with the caller, who
+    /// keeps using it directly (status, rolls) while clients connect.
+    pub fn spawn(bind: &str, router: Arc<FleetRouter>) -> anyhow::Result<RouterServer> {
+        use anyhow::Context as _;
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow::anyhow!("set_nonblocking: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| anyhow::anyhow!("local_addr: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || loop {
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let _ = stream.set_nonblocking(false);
+                        let router = Arc::clone(&router);
+                        let stop = Arc::clone(&stop);
+                        thread::spawn(move || serve_client(&router, &stop, stream));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(5)),
+                }
+            })
+        };
+        Ok(RouterServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the accept loop ends.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RouterServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_client(router: &FleetRouter, stop: &AtomicBool, mut stream: TcpStream) {
+    loop {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        let Ok(msg) = wire::recv(&mut stream) else { break };
+        let reply = match msg {
+            WireMsg::Request { id, model, method, deadline_us, input } => {
+                let budget = (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
+                match router.submit(&model, &method, input, budget) {
+                    Ok(resp) => WireMsg::Response {
+                        id,
+                        batch_size: resp.batch_size as u32,
+                        queue_us: resp.queue_time.as_micros() as u64,
+                        exec_us: resp.exec_time.as_micros() as u64,
+                        output: resp.output,
+                    },
+                    Err(e) => wire::error_to_wire(id, &e),
+                }
+            }
+            WireMsg::HealthQuery => WireMsg::HealthReply {
+                json: json::to_string_pretty(&router.status().to_json()),
+            },
+            // the router front-end takes requests and probes, nothing else
+            _ => break,
+        };
+        if wire::send(&mut stream, &reply).is_err() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breaker_trips_after_threshold_consecutive_failures() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(3, Duration::from_millis(100));
+        assert!(b.admits(t0));
+        b.on_failure(t0);
+        b.on_failure(t0);
+        assert!(b.admits(t0), "below threshold stays closed");
+        assert_eq!(b.state(t0), "closed");
+        b.on_failure(t0);
+        assert!(!b.admits(t0), "third consecutive failure opens it");
+        assert_eq!(b.state(t0), "open");
+    }
+
+    #[test]
+    fn breaker_success_resets_the_consecutive_count() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(3, Duration::from_millis(100));
+        b.on_failure(t0);
+        b.on_failure(t0);
+        b.on_success();
+        b.on_failure(t0);
+        b.on_failure(t0);
+        assert!(b.admits(t0), "count restarted after a success");
+    }
+
+    #[test]
+    fn breaker_half_open_admits_exactly_one_probe() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(1, Duration::from_millis(100));
+        b.on_failure(t0);
+        assert!(!b.admits(t0), "open during cooldown");
+        let later = t0 + Duration::from_millis(150);
+        assert!(b.admits(later), "cooldown expiry admits the probe");
+        assert_eq!(b.state(later), "half-open");
+        assert!(!b.admits(later), "only one probe until a verdict");
+        // probe succeeds → fully closed
+        b.on_success();
+        assert!(b.admits(later) && b.admits(later), "closed again");
+        assert_eq!(b.state(later), "closed");
+    }
+
+    #[test]
+    fn breaker_failed_probe_reopens_immediately() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(1, Duration::from_millis(100));
+        b.on_failure(t0);
+        let later = t0 + Duration::from_millis(150);
+        assert!(b.admits(later));
+        b.on_failure(later);
+        assert!(!b.admits(later), "failed probe reopens without a new threshold count");
+        assert_eq!(b.state(later), "open");
+        let much_later = later + Duration::from_millis(150);
+        assert!(b.admits(much_later), "and cools down again");
+    }
+
+    #[test]
+    fn empty_fleet_sheds_immediately_with_a_typed_verdict() {
+        let router = FleetRouter::new(FleetConfig::default()).unwrap();
+        let t0 = Instant::now();
+        let err = router.submit("dcgan", "winograd", vec![0.0; 4], None).unwrap_err();
+        assert_eq!(err, ServeError::Rejected(Rejected::FleetUnavailable { replicas: 0 }));
+        assert!(t0.elapsed() < Duration::from_secs(2), "shed, don't hang");
+        assert!(err.is_shed());
+        let status = router.status();
+        assert_eq!(status.shed_unavailable, 1);
+        assert!(!status.all_ready());
+    }
+
+    #[test]
+    fn unreachable_replicas_shed_after_bounded_failover() {
+        // a parseable but dead address: breakers absorb the failures and
+        // the request comes back typed, not hung
+        let cfg = FleetConfig {
+            replicas: vec!["127.0.0.1:1".to_string()],
+            connect_timeout: Duration::from_millis(50),
+            backoff_base: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(2),
+            max_attempts: 2,
+            ..FleetConfig::default()
+        };
+        let router = FleetRouter::new(cfg).unwrap();
+        let err = router.submit("dcgan", "winograd", vec![0.0; 4], None).unwrap_err();
+        assert!(
+            matches!(err, ServeError::Rejected(Rejected::FleetUnavailable { .. })),
+            "got {err:?}"
+        );
+    }
+
+    #[test]
+    fn status_json_has_the_stable_keys() {
+        let router = FleetRouter::new(FleetConfig {
+            replicas: vec!["127.0.0.1:1".to_string()],
+            ..FleetConfig::default()
+        })
+        .unwrap();
+        let doc = router.status().to_json();
+        let text = json::to_string_pretty(&doc);
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.get("role").and_then(Json::as_str), Some("router"));
+        assert!(matches!(back.get("all_ready"), Some(Json::Bool(_))));
+        let replicas = back.get("replicas").and_then(Json::as_arr).unwrap();
+        assert_eq!(replicas.len(), 1);
+        assert_eq!(replicas[0].get("addr").and_then(Json::as_str), Some("127.0.0.1:1"));
+        assert!(replicas[0].get("breaker").and_then(Json::as_str).is_some());
+    }
+}

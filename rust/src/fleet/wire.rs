@@ -1,0 +1,726 @@
+//! Length-prefixed TCP wire protocol for the fleet tier (std-only).
+//!
+//! Every frame is `[u32 LE body-len][u8 version][u8 tag][payload]`. The
+//! codec holds the same hostile-bytes discipline as
+//! [`crate::artifact::codec`]: decoding is panic-free and bounds-checked
+//! end to end, every malformed input returns a typed [`WireError`], and
+//! no length field can cause an allocation larger than the bytes actually
+//! present on the wire (the frame length itself is capped at
+//! [`MAX_BODY`] before any buffer is sized).
+//!
+//! # Message inventory
+//!
+//! | tag | message | direction |
+//! |---|---|---|
+//! | 1 | [`WireMsg::Request`] | client → replica/router |
+//! | 2 | [`WireMsg::Response`] | replica/router → client |
+//! | 3 | [`WireMsg::Error`] | replica/router → client |
+//! | 4 | [`WireMsg::HealthQuery`] | prober → replica/router |
+//! | 5 | [`WireMsg::HealthReply`] | replica/router → prober |
+//! | 6 | [`WireMsg::Drain`] | router → replica |
+//! | 7 | [`WireMsg::Reload`] | router → replica |
+//! | 8 | [`WireMsg::Shutdown`] | operator → replica |
+//! | 9 | [`WireMsg::Ok`] | replica → router |
+//!
+//! # Retry idempotency
+//!
+//! [`WireMsg::Request::id`] is assigned once per logical request by the
+//! fleet router and reused verbatim on every retry attempt, so a replica
+//! can recognise a resent request and answer it from its fate cache
+//! ([`crate::fleet::replica::FateCache`]) — the retried completion is the
+//! bitwise-identical frame the first execution produced.
+//!
+//! Typed serving errors cross the wire as `(code, a, b, detail)` tuples
+//! ([`code`]) and round-trip losslessly through
+//! [`error_to_wire`] / [`error_from_wire`].
+
+use crate::coordinator::{Rejected, ServeError};
+use std::fmt;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Protocol version byte carried in every frame.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Hard cap on a frame body (version + tag + payload). A length prefix
+/// beyond this is rejected *before* any allocation — a hostile peer
+/// cannot make a replica reserve gigabytes with four bytes.
+pub const MAX_BODY: usize = 32 * 1024 * 1024;
+
+const TAG_REQUEST: u8 = 1;
+const TAG_RESPONSE: u8 = 2;
+const TAG_ERROR: u8 = 3;
+const TAG_HEALTH_QUERY: u8 = 4;
+const TAG_HEALTH_REPLY: u8 = 5;
+const TAG_DRAIN: u8 = 6;
+const TAG_RELOAD: u8 = 7;
+const TAG_SHUTDOWN: u8 = 8;
+const TAG_OK: u8 = 9;
+
+/// Typed wire error codes (the `code` byte of [`WireMsg::Error`]).
+///
+/// Codes 1–9 mirror [`ServeError`] variants; 10/11 are fleet-local
+/// verdicts a replica can return before a request ever reaches its
+/// coordinator (warm-boot incomplete, drain in progress).
+pub mod code {
+    /// [`crate::coordinator::ServeError::UnknownModel`]
+    pub const UNKNOWN_MODEL: u8 = 1;
+    /// [`crate::coordinator::ServeError::BadInputLength`]
+    pub const BAD_INPUT_LENGTH: u8 = 2;
+    /// [`crate::coordinator::ServeError::EngineShutdown`]
+    pub const ENGINE_SHUTDOWN: u8 = 3;
+    /// [`crate::coordinator::ServeError::Execution`]
+    pub const EXECUTION: u8 = 4;
+    /// [`crate::coordinator::ServeError::Crashed`]
+    pub const CRASHED: u8 = 5;
+    /// [`crate::coordinator::Rejected::QueueFull`]
+    pub const QUEUE_FULL: u8 = 6;
+    /// [`crate::coordinator::Rejected::DeadlineInfeasible`]
+    pub const DEADLINE_INFEASIBLE: u8 = 7;
+    /// [`crate::coordinator::Rejected::Unhealthy`]
+    pub const UNHEALTHY: u8 = 8;
+    /// [`crate::coordinator::Rejected::FleetUnavailable`]
+    pub const FLEET_UNAVAILABLE: u8 = 9;
+    /// replica accepted the connection but warm-boot has not finished
+    pub const NOT_READY: u8 = 10;
+    /// replica is draining (clean roll or graceful shutdown in progress)
+    pub const DRAINING: u8 = 11;
+}
+
+/// True for error codes a router may fail over to another replica: the
+/// request was **never executed** (admission shed, breaker open, boot or
+/// drain in progress, engine handed off), so a retry cannot double-spend
+/// work. Execution verdicts (`EXECUTION`, `CRASHED`), request-shape
+/// errors, and per-request deadline verdicts are terminal.
+pub fn retryable(code: u8) -> bool {
+    matches!(
+        code,
+        code::ENGINE_SHUTDOWN
+            | code::QUEUE_FULL
+            | code::UNHEALTHY
+            | code::FLEET_UNAVAILABLE
+            | code::NOT_READY
+            | code::DRAINING
+    )
+}
+
+/// What went wrong decoding hostile or truncated bytes. Every variant is
+/// a *verdict*, not a panic: the codec can be pointed at arbitrary bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// the buffer ended before a field did
+    Truncated {
+        /// bytes the next field needed
+        needed: usize,
+        /// bytes actually remaining
+        have: usize,
+    },
+    /// the length prefix exceeds [`MAX_BODY`]
+    Oversized {
+        /// declared body length
+        len: usize,
+        /// the cap it violated
+        max: usize,
+    },
+    /// unknown protocol version byte
+    BadVersion(u8),
+    /// unknown message tag byte
+    BadTag(u8),
+    /// a string field was not valid UTF-8
+    BadUtf8,
+    /// the payload decoded cleanly but bytes were left over
+    Trailing {
+        /// leftover byte count
+        extra: usize,
+    },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { needed, have } => {
+                write!(f, "truncated frame: field needs {needed} bytes, {have} remain")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} bytes declared, cap is {max}")
+            }
+            WireError::BadVersion(v) => write!(f, "bad protocol version {v}"),
+            WireError::BadTag(t) => write!(f, "bad message tag {t}"),
+            WireError::BadUtf8 => write!(f, "string field is not valid UTF-8"),
+            WireError::Trailing { extra } => {
+                write!(f, "{extra} trailing byte(s) after a complete payload")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Why [`recv`] failed to produce a message.
+#[derive(Debug)]
+pub enum RecvError {
+    /// the peer closed the connection cleanly at a frame boundary
+    Closed,
+    /// transport error (includes mid-frame EOF)
+    Io(std::io::Error),
+    /// the frame arrived but its bytes are malformed
+    Wire(WireError),
+}
+
+impl fmt::Display for RecvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RecvError::Closed => write!(f, "connection closed"),
+            RecvError::Io(e) => write!(f, "transport error: {e}"),
+            RecvError::Wire(e) => write!(f, "protocol error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+/// One fleet protocol message (see the module table for tags).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    /// one generation request, carrying its router-assigned id and the
+    /// remaining deadline budget in µs (0 = best-effort)
+    Request {
+        /// router-assigned id, stable across retry attempts
+        id: u64,
+        /// zoo model id
+        model: String,
+        /// route method ("winograd" / "tdc")
+        method: String,
+        /// remaining deadline budget in µs; 0 = best-effort
+        deadline_us: u64,
+        /// flat f32 input tensor
+        input: Vec<f32>,
+    },
+    /// a completed request
+    Response {
+        /// echoed request id
+        id: u64,
+        /// batch bucket the request executed in
+        batch_size: u32,
+        /// queue wait in µs
+        queue_us: u64,
+        /// batch execution time in µs
+        exec_us: u64,
+        /// flat f32 output tensor
+        output: Vec<f32>,
+    },
+    /// a typed failure (see [`code`]; `a`/`b` carry the variant's
+    /// numeric fields so the error round-trips losslessly)
+    Error {
+        /// echoed request id (0 when not request-scoped)
+        id: u64,
+        /// error code ([`code`])
+        code: u8,
+        /// first numeric field of the typed variant (0 if unused)
+        a: u64,
+        /// second numeric field of the typed variant (0 if unused)
+        b: u64,
+        /// human-readable detail / string payload of the variant
+        detail: String,
+    },
+    /// ask for the health/readiness document
+    HealthQuery,
+    /// the health document as one JSON string (see
+    /// [`crate::fleet::replica`] for the replica schema)
+    HealthReply {
+        /// machine-readable health JSON
+        json: String,
+    },
+    /// stop admitting new requests; in-flight requests finish
+    Drain,
+    /// drain, then reboot the coordinator from the plan store (picks up
+    /// the store's current generation); `Ok` is sent once ready again
+    Reload,
+    /// drain, answer leftovers, and exit the serve loop
+    Shutdown,
+    /// generic acknowledgement
+    Ok,
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len() as u32);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+impl WireMsg {
+    /// Encode as one full frame (length prefix included), ready to write.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(64);
+        body.push(WIRE_VERSION);
+        match self {
+            WireMsg::Request { id, model, method, deadline_us, input } => {
+                body.push(TAG_REQUEST);
+                put_u64(&mut body, *id);
+                put_str(&mut body, model);
+                put_str(&mut body, method);
+                put_u64(&mut body, *deadline_us);
+                put_f32s(&mut body, input);
+            }
+            WireMsg::Response { id, batch_size, queue_us, exec_us, output } => {
+                body.push(TAG_RESPONSE);
+                put_u64(&mut body, *id);
+                put_u32(&mut body, *batch_size);
+                put_u64(&mut body, *queue_us);
+                put_u64(&mut body, *exec_us);
+                put_f32s(&mut body, output);
+            }
+            WireMsg::Error { id, code, a, b, detail } => {
+                body.push(TAG_ERROR);
+                put_u64(&mut body, *id);
+                body.push(*code);
+                put_u64(&mut body, *a);
+                put_u64(&mut body, *b);
+                put_str(&mut body, detail);
+            }
+            WireMsg::HealthQuery => body.push(TAG_HEALTH_QUERY),
+            WireMsg::HealthReply { json } => {
+                body.push(TAG_HEALTH_REPLY);
+                put_str(&mut body, json);
+            }
+            WireMsg::Drain => body.push(TAG_DRAIN),
+            WireMsg::Reload => body.push(TAG_RELOAD),
+            WireMsg::Shutdown => body.push(TAG_SHUTDOWN),
+            WireMsg::Ok => body.push(TAG_OK),
+        }
+        let mut frame = Vec::with_capacity(4 + body.len());
+        put_u32(&mut frame, body.len() as u32);
+        frame.extend_from_slice(&body);
+        frame
+    }
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked read cursor: every take is verified against the bytes
+/// that actually exist, so no hostile length field can read or allocate
+/// past the frame.
+struct Cur<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.b.len() < n {
+            return Err(WireError::Truncated { needed: n, have: self.b.len() });
+        }
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let count = self.u32()? as usize;
+        // reject before allocating: count * 4 must already be on the wire
+        let needed = count.checked_mul(4).ok_or(WireError::Truncated {
+            needed: usize::MAX,
+            have: self.b.len(),
+        })?;
+        let bytes = self.take(needed)?;
+        let mut out = Vec::with_capacity(count);
+        for chunk in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(out)
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.b.is_empty() {
+            Ok(())
+        } else {
+            Err(WireError::Trailing { extra: self.b.len() })
+        }
+    }
+}
+
+/// Validate a frame's 4-byte length prefix; returns the body length.
+/// An oversized declaration is rejected here, before any allocation.
+pub fn frame_len(header: [u8; 4]) -> Result<usize, WireError> {
+    let len = u32::from_le_bytes(header) as usize;
+    if len > MAX_BODY {
+        return Err(WireError::Oversized { len, max: MAX_BODY });
+    }
+    Ok(len)
+}
+
+impl WireMsg {
+    /// Decode one frame body (the bytes after the length prefix). Any
+    /// malformed input — truncation at any cut, bad tag or version, bad
+    /// UTF-8, trailing bytes — returns a typed [`WireError`]; nothing
+    /// panics and nothing allocates beyond the bytes provided.
+    pub fn decode(body: &[u8]) -> Result<WireMsg, WireError> {
+        let mut c = Cur { b: body };
+        let version = c.u8()?;
+        if version != WIRE_VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let tag = c.u8()?;
+        let msg = match tag {
+            TAG_REQUEST => WireMsg::Request {
+                id: c.u64()?,
+                model: c.string()?,
+                method: c.string()?,
+                deadline_us: c.u64()?,
+                input: c.f32s()?,
+            },
+            TAG_RESPONSE => WireMsg::Response {
+                id: c.u64()?,
+                batch_size: c.u32()?,
+                queue_us: c.u64()?,
+                exec_us: c.u64()?,
+                output: c.f32s()?,
+            },
+            TAG_ERROR => WireMsg::Error {
+                id: c.u64()?,
+                code: c.u8()?,
+                a: c.u64()?,
+                b: c.u64()?,
+                detail: c.string()?,
+            },
+            TAG_HEALTH_QUERY => WireMsg::HealthQuery,
+            TAG_HEALTH_REPLY => WireMsg::HealthReply { json: c.string()? },
+            TAG_DRAIN => WireMsg::Drain,
+            TAG_RELOAD => WireMsg::Reload,
+            TAG_SHUTDOWN => WireMsg::Shutdown,
+            TAG_OK => WireMsg::Ok,
+            other => return Err(WireError::BadTag(other)),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+}
+
+// ------------------------------------------------------------- transport
+
+/// Write one message as a frame and flush.
+pub fn send(w: &mut impl Write, msg: &WireMsg) -> std::io::Result<()> {
+    w.write_all(&msg.encode())?;
+    w.flush()
+}
+
+/// Read one frame and decode it. A clean EOF *between* frames is
+/// [`RecvError::Closed`]; an EOF mid-frame is a transport error; a frame
+/// with hostile bytes is a typed [`RecvError::Wire`].
+pub fn recv(r: &mut impl Read) -> Result<WireMsg, RecvError> {
+    let mut header = [0u8; 4];
+    // the first byte distinguishes a clean close from a torn frame
+    let mut got = 0usize;
+    while got == 0 {
+        match r.read(&mut header[..1]) {
+            Ok(0) => return Err(RecvError::Closed),
+            Ok(n) => got = n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(RecvError::Io(e)),
+        }
+    }
+    r.read_exact(&mut header[1..]).map_err(RecvError::Io)?;
+    let len = frame_len(header).map_err(RecvError::Wire)?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(RecvError::Io)?;
+    WireMsg::decode(&body).map_err(RecvError::Wire)
+}
+
+// --------------------------------------------------- ServeError mapping
+
+/// Map a [`ServeError`] onto its wire `(code, a, b, detail)` encoding.
+pub fn error_to_wire(id: u64, e: &ServeError) -> WireMsg {
+    let (code, a, b, detail) = match e {
+        ServeError::UnknownModel(m) => (code::UNKNOWN_MODEL, 0, 0, m.clone()),
+        ServeError::BadInputLength { expected, got } => {
+            (code::BAD_INPUT_LENGTH, *expected as u64, *got as u64, String::new())
+        }
+        ServeError::EngineShutdown => (code::ENGINE_SHUTDOWN, 0, 0, String::new()),
+        ServeError::Execution(m) => (code::EXECUTION, 0, 0, m.clone()),
+        ServeError::Crashed(m) => (code::CRASHED, 0, 0, m.clone()),
+        ServeError::Rejected(Rejected::QueueFull { depth, cap }) => {
+            (code::QUEUE_FULL, *depth as u64, *cap as u64, String::new())
+        }
+        ServeError::Rejected(Rejected::DeadlineInfeasible { remaining, estimated_wait }) => (
+            code::DEADLINE_INFEASIBLE,
+            remaining.as_micros() as u64,
+            estimated_wait.as_micros() as u64,
+            String::new(),
+        ),
+        ServeError::Rejected(Rejected::Unhealthy { restarts }) => {
+            (code::UNHEALTHY, *restarts, 0, String::new())
+        }
+        ServeError::Rejected(Rejected::FleetUnavailable { replicas }) => {
+            (code::FLEET_UNAVAILABLE, *replicas as u64, 0, String::new())
+        }
+    };
+    WireMsg::Error { id, code, a, b, detail }
+}
+
+/// Reconstruct the typed [`ServeError`] from its wire encoding. The
+/// fleet-local codes map to typed sheds a client can count and retry:
+/// `NOT_READY`/`DRAINING` become
+/// [`Rejected::FleetUnavailable`]`{ replicas: 1 }` (one replica counting
+/// itself out). An unknown code degrades to [`ServeError::Execution`]
+/// with the raw code in the message — never a panic.
+pub fn error_from_wire(code: u8, a: u64, b: u64, detail: &str) -> ServeError {
+    match code {
+        code::UNKNOWN_MODEL => ServeError::UnknownModel(detail.to_string()),
+        code::BAD_INPUT_LENGTH => {
+            ServeError::BadInputLength { expected: a as usize, got: b as usize }
+        }
+        code::ENGINE_SHUTDOWN => ServeError::EngineShutdown,
+        code::EXECUTION => ServeError::Execution(detail.to_string()),
+        code::CRASHED => ServeError::Crashed(detail.to_string()),
+        code::QUEUE_FULL => ServeError::Rejected(Rejected::QueueFull {
+            depth: a as usize,
+            cap: b as usize,
+        }),
+        code::DEADLINE_INFEASIBLE => ServeError::Rejected(Rejected::DeadlineInfeasible {
+            remaining: Duration::from_micros(a),
+            estimated_wait: Duration::from_micros(b),
+        }),
+        code::UNHEALTHY => ServeError::Rejected(Rejected::Unhealthy { restarts: a }),
+        code::FLEET_UNAVAILABLE => {
+            ServeError::Rejected(Rejected::FleetUnavailable { replicas: a as usize })
+        }
+        code::NOT_READY | code::DRAINING => {
+            ServeError::Rejected(Rejected::FleetUnavailable { replicas: 1 })
+        }
+        other => ServeError::Execution(format!("unknown wire error code {other}: {detail}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<WireMsg> {
+        vec![
+            WireMsg::Request {
+                id: 7,
+                model: "dcgan".into(),
+                method: "winograd".into(),
+                deadline_us: 250_000,
+                input: vec![0.5, -1.25, 3.0],
+            },
+            WireMsg::Response {
+                id: 7,
+                batch_size: 4,
+                queue_us: 1200,
+                exec_us: 880,
+                output: vec![1.0f32; 6],
+            },
+            WireMsg::Error {
+                id: 9,
+                code: code::QUEUE_FULL,
+                a: 256,
+                b: 256,
+                detail: String::new(),
+            },
+            WireMsg::HealthQuery,
+            WireMsg::HealthReply { json: "{\"ready\":true}".into() },
+            WireMsg::Drain,
+            WireMsg::Reload,
+            WireMsg::Shutdown,
+            WireMsg::Ok,
+        ]
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        for msg in samples() {
+            let frame = msg.encode();
+            let len = frame_len([frame[0], frame[1], frame[2], frame[3]]).unwrap();
+            assert_eq!(len, frame.len() - 4);
+            let back = WireMsg::decode(&frame[4..]).unwrap_or_else(|e| {
+                panic!("decode failed for {msg:?}: {e}");
+            });
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_cut_is_a_typed_error() {
+        for msg in samples() {
+            let frame = msg.encode();
+            let body = &frame[4..];
+            for cut in 0..body.len() {
+                match WireMsg::decode(&body[..cut]) {
+                    Err(_) => {}
+                    Ok(m) => panic!("prefix of len {cut} of {msg:?} decoded as {m:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let err = frame_len(u32::MAX.to_le_bytes()).unwrap_err();
+        assert_eq!(err, WireError::Oversized { len: u32::MAX as usize, max: MAX_BODY });
+        // and through the stream path too
+        let mut stream: &[u8] = &[0xFF, 0xFF, 0xFF, 0xFF, 0, 0];
+        match recv(&mut stream) {
+            Err(RecvError::Wire(WireError::Oversized { .. })) => {}
+            other => panic!("expected oversized verdict, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_f32_count_cannot_over_allocate() {
+        // a Request whose input count claims u32::MAX floats in a tiny body
+        let mut body = vec![WIRE_VERSION, 1];
+        body.extend_from_slice(&7u64.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.push(b'm');
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.push(b'w');
+        body.extend_from_slice(&0u64.to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // hostile count
+        match WireMsg::decode(&body) {
+            Err(WireError::Truncated { .. }) => {}
+            other => panic!("expected truncated verdict, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_tag_version_utf8_and_trailing_are_typed() {
+        assert_eq!(WireMsg::decode(&[9, TAG_OK]), Err(WireError::BadVersion(9)));
+        assert_eq!(WireMsg::decode(&[WIRE_VERSION, 200]), Err(WireError::BadTag(200)));
+        assert_eq!(
+            WireMsg::decode(&[WIRE_VERSION, TAG_OK, 0xAA]),
+            Err(WireError::Trailing { extra: 1 })
+        );
+        // HealthReply carrying invalid UTF-8
+        let mut body = vec![WIRE_VERSION, TAG_HEALTH_REPLY];
+        body.extend_from_slice(&2u32.to_le_bytes());
+        body.extend_from_slice(&[0xC3, 0x28]); // invalid 2-byte sequence
+        assert_eq!(WireMsg::decode(&body), Err(WireError::BadUtf8));
+        // empty body
+        assert_eq!(WireMsg::decode(&[]), Err(WireError::Truncated { needed: 1, have: 0 }));
+    }
+
+    #[test]
+    fn random_bytes_never_panic_the_decoder() {
+        use crate::util::prng::Rng;
+        crate::prop::forall(
+            "wire_decode_total",
+            200,
+            0x11EE,
+            |r: &mut Rng| {
+                let n = r.below(96);
+                (0..n).map(|_| (r.next_u64() & 0xFF) as u8).collect::<Vec<u8>>()
+            },
+            |bytes| {
+                // any outcome is fine; reaching here without a panic is the property
+                let _ = WireMsg::decode(bytes);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn serve_errors_round_trip_losslessly() {
+        let cases = vec![
+            ServeError::UnknownModel("nope/xyz".into()),
+            ServeError::BadInputLength { expected: 32, got: 7 },
+            ServeError::EngineShutdown,
+            ServeError::Execution("exec boom".into()),
+            ServeError::Crashed("panic payload".into()),
+            ServeError::Rejected(Rejected::QueueFull { depth: 12, cap: 8 }),
+            ServeError::Rejected(Rejected::DeadlineInfeasible {
+                remaining: Duration::from_micros(1500),
+                estimated_wait: Duration::from_micros(9000),
+            }),
+            ServeError::Rejected(Rejected::Unhealthy { restarts: 3 }),
+            ServeError::Rejected(Rejected::FleetUnavailable { replicas: 5 }),
+        ];
+        for e in cases {
+            let msg = error_to_wire(42, &e);
+            let WireMsg::Error { id, code, a, b, detail } = &msg else {
+                panic!("error_to_wire produced {msg:?}");
+            };
+            assert_eq!(*id, 42);
+            let back = error_from_wire(*code, *a, *b, detail);
+            assert_eq!(back, e, "code {code} did not round-trip");
+            // and the frame itself round-trips
+            let frame = msg.encode();
+            assert_eq!(WireMsg::decode(&frame[4..]).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn retryability_is_never_executed_semantics() {
+        for c in [
+            code::NOT_READY,
+            code::DRAINING,
+            code::QUEUE_FULL,
+            code::UNHEALTHY,
+            code::ENGINE_SHUTDOWN,
+            code::FLEET_UNAVAILABLE,
+        ] {
+            assert!(retryable(c), "code {c} must be retryable");
+        }
+        for c in [
+            code::UNKNOWN_MODEL,
+            code::BAD_INPUT_LENGTH,
+            code::EXECUTION,
+            code::CRASHED,
+            code::DEADLINE_INFEASIBLE,
+        ] {
+            assert!(!retryable(c), "code {c} must be terminal");
+        }
+    }
+
+    #[test]
+    fn recv_distinguishes_clean_close_from_torn_frame() {
+        let mut empty: &[u8] = &[];
+        match recv(&mut empty) {
+            Err(RecvError::Closed) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        let frame = WireMsg::Ok.encode();
+        let mut torn: &[u8] = &frame[..frame.len() - 1];
+        match recv(&mut torn) {
+            Err(RecvError::Io(_)) => {}
+            other => panic!("expected Io (mid-frame EOF), got {other:?}"),
+        }
+        let mut whole: &[u8] = &frame;
+        assert_eq!(recv(&mut whole).unwrap(), WireMsg::Ok);
+    }
+}

@@ -33,6 +33,7 @@
 //! | [`loadgen`] | open-loop Poisson load harness: scheduler A/B under mixed traffic |
 //! | [`faultinject`] | seeded deterministic fault-injection plane (panic/delay/corrupt sites) |
 //! | [`chaos`] | fault-injection soak: conservation, bitwise isolation, bounded recovery |
+//! | [`fleet`] | multi-process serving: wire protocol, replicas, failover router, rolling republish |
 //! | [`cli`] / [`benchlib`] / [`util`] / [`prop`] | flag parsing, bench harness, tensors/PRNG/JSON, property-test harness |
 //!
 //! The **plan-compile / execute split** is the load-bearing design: a
@@ -81,6 +82,7 @@ pub mod dse;
 pub mod energy;
 pub mod engine;
 pub mod faultinject;
+pub mod fleet;
 pub mod gan;
 pub mod loadgen;
 pub mod prop;

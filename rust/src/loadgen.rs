@@ -123,6 +123,9 @@ pub struct LoadgenOptions {
     pub workers: usize,
     /// where to write the machine-readable report
     pub out: PathBuf,
+    /// drive a remote fleet router (`host:port`) over the wire protocol
+    /// instead of an in-process coordinator (see [`run_remote`])
+    pub connect: Option<String>,
 }
 
 impl Default for LoadgenOptions {
@@ -138,6 +141,7 @@ impl Default for LoadgenOptions {
             seed: 7,
             workers: 0,
             out: PathBuf::from("BENCH_pr7.json"),
+            connect: None,
         }
     }
 }
@@ -519,6 +523,184 @@ pub fn run(opts: &LoadgenOptions) -> Result<(SchedulerOutcome, SchedulerOutcome)
         bucket.tail.1 / continuous.tail.1.max(1e-9),
     );
     Ok((continuous, bucket))
+}
+
+/// `wingan loadgen --connect <router>`: drive a remote fleet router over
+/// the wire protocol instead of an in-process coordinator.
+///
+/// The traffic mix is [`TrafficProfile::standard`] filtered to the
+/// routes the fleet actually advertises (learned from the router's
+/// status document, weights renormalised), replayed open-loop by a pool
+/// of client threads — one TCP connection per request, the same
+/// stateless pattern the router itself uses toward replicas. There is no
+/// local engine to calibrate against, so `--rate` is required, and the
+/// SLO (default 500 ms) rides along as the wire deadline budget.
+///
+/// Asserts the same conservation contract as the in-process harness:
+/// every offered request completes or sheds typed; a transport failure
+/// or untyped error fails the run. Latency is client-observed RTT
+/// through router + replica + engine.
+pub fn run_remote(opts: &LoadgenOptions, addr: &str) -> Result<()> {
+    use crate::coordinator::{GenResponse, Histogram, ServeError};
+    use crate::fleet::wire::{self, WireMsg};
+    use crate::util::json::{self, Json};
+    use crate::util::lock_unpoisoned;
+    use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    let sock: SocketAddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("bad router address '{addr}'"))?
+        .next()
+        .with_context(|| format!("router address '{addr}' resolves to nothing"))?;
+    let rate = opts
+        .rate
+        .context("--connect needs an explicit --rate: there is no local engine to calibrate")?;
+
+    let rpc = |msg: &WireMsg, timeout: Duration| -> std::result::Result<WireMsg, String> {
+        let mut s = TcpStream::connect_timeout(&sock, Duration::from_secs(2))
+            .map_err(|e| format!("connect {sock}: {e}"))?;
+        let _ = s.set_nodelay(true);
+        let _ = s.set_read_timeout(Some(timeout));
+        let _ = s.set_write_timeout(Some(timeout));
+        wire::send(&mut s, msg).map_err(|e| format!("send: {e}"))?;
+        wire::recv(&mut s).map_err(|e| format!("recv: {e}"))
+    };
+
+    // discover what the fleet serves from the router status document
+    let reply = rpc(&WireMsg::HealthQuery, Duration::from_secs(5))
+        .map_err(|e| anyhow::anyhow!("router health query failed: {e}"))?;
+    let WireMsg::HealthReply { json: text } = reply else {
+        anyhow::bail!("router answered the health query with a non-health frame")
+    };
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("bad router status JSON: {e}"))?;
+    let advertised = doc
+        .get("routes")
+        .and_then(Json::as_arr)
+        .context("router status carries no routes")?;
+    let mut available: Vec<(String, String, usize)> = Vec::new();
+    for r in advertised {
+        if let (Some(model), Some(method), Some(input_len)) = (
+            r.get("model").and_then(Json::as_str),
+            r.get("method").and_then(Json::as_str),
+            r.get("input_len").and_then(Json::as_usize),
+        ) {
+            available.push((model.to_string(), method.to_string(), input_len));
+        }
+    }
+    ensure!(!available.is_empty(), "fleet advertises no routes (replicas not ready yet?)");
+
+    // standard mix filtered to advertised routes, weights renormalised
+    let mut routes = Vec::new();
+    let mut input_lens = Vec::new();
+    for r in TrafficProfile::standard().routes {
+        if let Some((_, _, len)) =
+            available.iter().find(|(m, me, _)| *m == r.model && *me == r.method)
+        {
+            input_lens.push(*len);
+            routes.push(r);
+        }
+    }
+    ensure!(!routes.is_empty(), "no overlap between the standard mix and the fleet's routes");
+    let total: f64 = routes.iter().map(|r| r.weight).sum();
+    for r in &mut routes {
+        r.weight /= total;
+    }
+    let profile = TrafficProfile { routes };
+
+    let slo = opts.slo.unwrap_or(Duration::from_millis(500));
+    let plan = ArrivalPlan::generate(&profile, &input_lens, opts.requests, rate, opts.seed);
+    println!(
+        "loadgen: driving router {addr} with {} requests at {rate:.0} req/s over {} \
+         route(s), SLO {:.0}ms, seed {}",
+        opts.requests,
+        profile.routes.len(),
+        slo.as_secs_f64() * 1e3,
+        opts.seed
+    );
+
+    let lat = Mutex::new(Histogram::new());
+    let in_slo = AtomicU64::new(0);
+    let clients = if opts.workers == 0 { 8 } else { opts.workers };
+    let t0 = Instant::now();
+    let fates = crate::fleet::drive_open_loop(&plan, clients, None::<(usize, fn())>, |i, a| {
+        let r = &profile.routes[a.route];
+        let msg = WireMsg::Request {
+            id: i as u64,
+            model: r.model.clone(),
+            method: r.method.clone(),
+            deadline_us: slo.as_micros() as u64,
+            input: a.input.clone(),
+        };
+        let sent = Instant::now();
+        match rpc(&msg, slo + Duration::from_secs(10)) {
+            Ok(WireMsg::Response { batch_size, queue_us, exec_us, output, .. }) => {
+                let rtt = sent.elapsed();
+                lock_unpoisoned(&lat).record(rtt);
+                if rtt <= slo {
+                    in_slo.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(GenResponse {
+                    id: i as u64,
+                    output,
+                    batch_size: batch_size as usize,
+                    queue_time: Duration::from_micros(queue_us),
+                    exec_time: Duration::from_micros(exec_us),
+                })
+            }
+            Ok(WireMsg::Error { code, a: ea, b: eb, detail, .. }) => {
+                Err(wire::error_from_wire(code, ea, eb, &detail))
+            }
+            Ok(_) => Err(ServeError::Execution("router sent an unexpected frame".into())),
+            Err(e) => Err(ServeError::Execution(format!("router transport failed: {e}"))),
+        }
+    });
+    let wall = t0.elapsed();
+
+    let mut completed = 0u64;
+    let mut shed = 0u64;
+    for (i, fate) in fates.iter().enumerate() {
+        match fate {
+            Some(Ok(_)) => completed += 1,
+            Some(Err(e)) if e.is_shed() => shed += 1,
+            Some(Err(e)) => anyhow::bail!("request {i} failed hard (not a typed shed): {e}"),
+            None => anyhow::bail!("request {i} was never dispatched — lost"),
+        }
+    }
+    let offered = plan.arrivals.len() as u64;
+    ensure!(
+        completed + shed == offered,
+        "lost requests: {completed} completed + {shed} shed != {offered} offered"
+    );
+
+    let in_slo = in_slo.load(Ordering::Relaxed);
+    let (p50, p99, p999) = lock_unpoisoned(&lat).tail();
+    println!(
+        "loadgen: remote — offered {offered}, completed {completed} ({in_slo} in SLO), \
+         shed {shed}, p50={:.2}ms p99={:.2}ms p999={:.2}ms, wall={:.2}s",
+        p50 * 1e3,
+        p99 * 1e3,
+        p999 * 1e3,
+        wall.as_secs_f64()
+    );
+
+    let mut rep = BenchReport::new("loadgen-remote");
+    rep.metric("offered_rate_rps", rate);
+    rep.metric("offered", offered as f64);
+    rep.metric("completed", completed as f64);
+    rep.metric("in_slo", in_slo as f64);
+    rep.metric("shed", shed as f64);
+    rep.metric("shed_fraction", shed as f64 / offered as f64);
+    rep.metric("achieved_rps", completed as f64 / wall.as_secs_f64().max(1e-9));
+    rep.metric("slo_ms", slo.as_secs_f64() * 1e3);
+    rep.metric("rtt_p50_ms", p50 * 1e3);
+    rep.metric("rtt_p99_ms", p99 * 1e3);
+    rep.metric("rtt_p999_ms", p999 * 1e3);
+    rep.metric("lost", 0.0); // conservation ensured above
+    rep.write(&opts.out).with_context(|| format!("writing {}", opts.out.display()))?;
+    println!("loadgen: wrote {}", opts.out.display());
+    Ok(())
 }
 
 #[cfg(test)]

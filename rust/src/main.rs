@@ -10,6 +10,9 @@
 //!   chaos               deterministic fault-injection soak of the serving tier
 //!   compile             AOT-compile zoo plans into an on-disk plan store
 //!   plan inspect FILE   print the manifest view of one plan artifact
+//!   replica             serve one coordinator behind the fleet wire protocol
+//!   router              front N replicas with health-probed failover routing
+//!   probe               query a replica/router health endpoint (CI gate)
 
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
@@ -45,12 +48,21 @@ USAGE: wingan <subcommand> [flags]
   loadgen [--quick] [--scale tiny|small] [--requests 800] [--load 1.2]
           [--rate R] [--slo-ms N] [--queue-cap 256] [--max-wait-ms 20]
           [--seed 7] [--workers N] [--out BENCH_pr7.json]
-  chaos  [--quick] [--scale tiny|small] [--requests 600] [--rate 300]
-         [--queue-cap 512] [--seed 11] [--workers N] [--spec SPEC]
-         [--out BENCH_pr8.json]
+          [--connect HOST:PORT]
+  chaos  [--quick] [--fleet] [--scale tiny|small] [--requests 600]
+         [--rate 300] [--queue-cap 512] [--seed 11] [--workers N]
+         [--spec SPEC] [--out BENCH_pr8.json]
   compile [--store DIR] [--scale small|tiny|all] [--models dcgan,gpgan]
           [--seed 42]
   plan   inspect <artifact-file>
+  replica [--bind 127.0.0.1:7411] [--plan-store DIR] [--scale small|tiny]
+          [--models dcgan,gpgan] [--workers N] [--precision f32|f64|auto]
+          [--kernel scalar|simd|auto] [--scheduler continuous|bucket]
+          [--queue-cap 256] [--slo-ms N] [--weight-seed 42]
+          [--inject-faults SPEC] [--watch-stdin]
+  router [--bind 127.0.0.1:7410] --replicas HOST:PORT[,HOST:PORT...]
+         [--store DIR]
+  probe  --addr HOST:PORT [--wait-ready SECS]
 
 serve runs on the native precompiled-plan engine when --native is given or
 when the PJRT artifacts are unavailable (this offline build always is).
@@ -109,6 +121,30 @@ goes to --out (default BENCH_pr8.json). --quick is the CI smoke preset.
 compile AOT-compiles zoo generator plans into a plan store: every model x
 route method (winograd + tdc) x precision tier (f64 always, f32 for the
 fast routes) at the serving scales, plus a human-readable manifest.json.
+Each compile run also bumps the store's monotonic GENERATION tag, which a
+running `router --store` notices and answers with a rolling reload.
+
+Fleet tier: `replica` serves one coordinator behind a std-only
+length-prefixed TCP wire protocol, warm-booting from --plan-store and
+answering typed NOT_READY until the boot lands; `router` fronts N
+replicas with least-loaded routing over a health prober, per-replica
+circuit breakers, and retry-with-backoff failover (request ids make
+retries idempotent — a replayed completion is bitwise identical). When
+every replica is out, requests shed immediately with a typed
+fleet-unavailable verdict. `probe --addr X --wait-ready S` polls the
+health JSON until ready/all-ready (non-zero exit on timeout) — the CI
+readiness gate. Replicas drain gracefully on SIGTERM/SIGINT (or stdin
+EOF with --watch-stdin): in-flight work finishes inside the drain
+deadline, the prober sees `draining` so the router deregisters first,
+and leftovers get typed EngineShutdown — never an abrupt connection
+drop. `chaos --fleet` is the kill-a-replica soak: one seeded schedule
+against a single-process baseline and then a 3-replica fleet (with
+conn-drop and stall faults) whose middle replica is killed mid-run;
+asserts zero lost requests, bitwise equality with the baseline, and
+timed recovery to all-ready after a replacement joins (BENCH_pr9.json).
+`loadgen --connect HOST:PORT` drives a remote router instead of an
+in-process coordinator (requires an explicit --rate; no local engine to
+calibrate against).
 ";
 
 fn main() {
@@ -140,6 +176,9 @@ fn main() {
         Some("chaos") => cmd_chaos(&args),
         Some("compile") => cmd_compile(&args),
         Some("plan") => cmd_plan(&args),
+        Some("replica") => cmd_replica(&args),
+        Some("router") => cmd_router(&args),
+        Some("probe") => cmd_probe(&args),
         Some("version") => {
             println!("wingan {}", wingan::version());
             Ok(())
@@ -449,6 +488,19 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     if let Some(out) = args.get("out") {
         opts.out = PathBuf::from(out);
     }
+    // --connect: drive a remote fleet router instead of in-process engines
+    if let Some(router_addr) = args.get("connect") {
+        anyhow::ensure!(
+            opts.rate.is_some(),
+            "--connect needs an explicit --rate (no local engine to calibrate against)"
+        );
+        opts.connect = Some(router_addr.to_string());
+        if args.get("out").is_none() {
+            // don't clobber the local A/B report with the remote run's
+            opts.out = PathBuf::from("BENCH_pr9_fleet_loadgen.json");
+        }
+        return wingan::loadgen::run_remote(&opts, router_addr);
+    }
     let (continuous, bucket) = wingan::loadgen::run(&opts)?;
     anyhow::ensure!(
         continuous.completed + bucket.completed > 0,
@@ -487,7 +539,266 @@ fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
     if let Some(out) = args.get("out") {
         opts.out = PathBuf::from(out);
     }
+    if args.has("fleet") {
+        if args.get("out").is_none() {
+            // the fleet soak is the PR-9 bench artifact
+            opts.out = PathBuf::from("BENCH_pr9.json");
+        }
+        return wingan::chaos::run_fleet(&opts);
+    }
     wingan::chaos::run(&opts)
+}
+
+/// Process-wide graceful-shutdown latch: SIGTERM/SIGINT (unix) and the
+/// optional stdin-EOF watcher all funnel into one atomic the serve loops
+/// poll, so a clean roll never ends in an abrupt connection drop.
+mod shutdown {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static STOP: AtomicBool = AtomicBool::new(false);
+
+    pub fn request() {
+        STOP.store(true, Ordering::SeqCst);
+    }
+
+    pub fn requested() -> bool {
+        STOP.load(Ordering::SeqCst)
+    }
+
+    /// Route SIGTERM and SIGINT into the latch. The handler only stores
+    /// an atomic — async-signal-safe by construction.
+    #[cfg(unix)]
+    pub fn install_signal_handlers() {
+        extern "C" fn on_term(_sig: i32) {
+            STOP.store(true, Ordering::SeqCst);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_term as usize);
+            signal(SIGINT, on_term as usize);
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub fn install_signal_handlers() {}
+
+    /// Trip the latch when stdin reaches EOF — the idiom for a replica
+    /// supervised through a pipe (the parent closing its end is the
+    /// drain request).
+    pub fn watch_stdin() {
+        std::thread::spawn(|| {
+            use std::io::Read;
+            let mut stdin = std::io::stdin();
+            let mut buf = [0u8; 256];
+            loop {
+                match stdin.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+            request();
+        });
+    }
+}
+
+/// `wingan replica` — one serving coordinator behind the fleet wire
+/// protocol: binds immediately, warm-boots from `--plan-store` in the
+/// background (typed `NOT_READY` in the gap), then serves requests and
+/// drain/reload/shutdown control verbs until stopped. SIGTERM/SIGINT
+/// (and stdin EOF under `--watch-stdin`) trigger the graceful path:
+/// drain bounded by the serve config's drain deadline, `draining`
+/// visible to the router's prober, leftovers answered `EngineShutdown`.
+fn cmd_replica(args: &Args) -> anyhow::Result<()> {
+    let bind = args.get_or("bind", "127.0.0.1:7411").to_string();
+    let scale = serving_scale(args)?;
+    let workers = args.get_workers().map_err(anyhow::Error::msg)?;
+    let precision = args.get_precision().map_err(anyhow::Error::msg)?;
+    let kernel = args.get_kernel().map_err(anyhow::Error::msg)?;
+    let scheduler = args.get_scheduler().map_err(anyhow::Error::msg)?;
+    let plan_store = args.get("plan-store").map(PathBuf::from);
+    let weight_seed = args.get_usize("weight-seed", 42).map_err(anyhow::Error::msg)? as u64;
+    let queue_cap = args.get_usize("queue-cap", 256).map_err(anyhow::Error::msg)?;
+    let slo = match args.get_usize("slo-ms", 0).map_err(anyhow::Error::msg)? {
+        0 if args.get("slo-ms").is_some() => {
+            anyhow::bail!("--slo-ms: 0 would shed every request; omit the flag for best-effort")
+        }
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
+    let models: Option<Vec<String>> = args
+        .get("models")
+        .map(|list| list.split(',').map(wingan::engine::model_id).collect());
+    // one fault spec covers both layers: engine/serving sites act inside
+    // the coordinator, fleet sites (conn_drop/replica_stall/replica_exit)
+    // act at the wire — the sites are disjoint, so sharing the plane is
+    // exact, not approximate
+    let faults = match args.get("inject-faults") {
+        Some(spec) => Some(std::sync::Arc::new(
+            wingan::faultinject::FaultPlane::parse(spec)
+                .map_err(|e| anyhow::anyhow!("--inject-faults: {e}"))?,
+        )),
+        None => wingan::faultinject::FaultPlane::from_env()
+            .map_err(|e| anyhow::anyhow!("WINGAN_FAULTS: {e}"))?,
+    };
+    let cfg = wingan::fleet::ReplicaConfig {
+        native: NativeConfig {
+            scale,
+            workers,
+            precision,
+            kernel,
+            seed: weight_seed,
+            models,
+            plan_store: plan_store.clone(),
+            ..Default::default()
+        },
+        serve: ServeConfig {
+            scheduler,
+            queue_cap,
+            slo,
+            faults: faults.clone(),
+            ..Default::default()
+        },
+        fleet_faults: faults,
+    };
+    let server = wingan::fleet::ReplicaServer::spawn(&bind, cfg)?;
+    match &plan_store {
+        Some(s) => println!(
+            "replica listening on {} (warm-booting from {}...)",
+            server.addr(),
+            s.display()
+        ),
+        None => println!("replica listening on {} (compiling plans...)", server.addr()),
+    }
+    shutdown::install_signal_handlers();
+    if args.has("watch-stdin") {
+        shutdown::watch_stdin();
+    }
+    let mut announced = false;
+    while server.alive() && !shutdown::requested() {
+        if !announced && server.ready() {
+            println!("replica ready on {}", server.addr());
+            announced = true;
+        }
+        if let Some(e) = server.boot_error() {
+            anyhow::bail!("replica boot failed: {e}");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    if server.alive() {
+        println!("replica: shutdown requested — draining...");
+        server.shutdown();
+    } else {
+        // stopped over the wire (Shutdown verb) or by a replica_exit
+        // fault; the serve loop is already winding down
+        server.join();
+    }
+    println!("replica: stopped");
+    Ok(())
+}
+
+/// `wingan router` — front N replicas with the fleet router: health
+/// prober, least-loaded pick, circuit breakers, retry-with-backoff
+/// failover, and (with `--store`) automatic rolling reloads when the
+/// plan store's generation tag moves.
+fn cmd_router(args: &Args) -> anyhow::Result<()> {
+    let bind = args.get_or("bind", "127.0.0.1:7410").to_string();
+    let replicas: Vec<String> = args
+        .get("replicas")
+        .ok_or_else(|| anyhow::anyhow!("--replicas HOST:PORT[,HOST:PORT...] is required"))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!replicas.is_empty(), "--replicas lists no addresses");
+    let store = args.get("store").map(PathBuf::from);
+    let n = replicas.len();
+    let router = std::sync::Arc::new(
+        wingan::fleet::FleetRouter::new(wingan::fleet::FleetConfig {
+            replicas,
+            store: store.clone(),
+            ..Default::default()
+        })
+        .map_err(anyhow::Error::msg)?,
+    );
+    let server = wingan::fleet::RouterServer::spawn(&bind, std::sync::Arc::clone(&router))?;
+    match &store {
+        Some(s) => println!(
+            "router listening on {} fronting {n} replica(s), watching {} for republishes",
+            server.addr(),
+            s.display()
+        ),
+        None => println!("router listening on {} fronting {n} replica(s)", server.addr()),
+    }
+    shutdown::install_signal_handlers();
+    while !shutdown::requested() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    println!("router: shutdown requested — stopping");
+    server.shutdown();
+    Ok(())
+}
+
+/// `wingan probe` — one health query against a replica or router,
+/// printed as JSON. With `--wait-ready SECS`, polls until the target
+/// reports ready (replica) / all-ready (router), exiting non-zero on
+/// timeout: the CI readiness gate for fleet smoke tests.
+fn cmd_probe(args: &Args) -> anyhow::Result<()> {
+    use wingan::fleet::{wire, WireMsg};
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("--addr HOST:PORT is required"))?;
+    let sock: std::net::SocketAddr = {
+        use std::net::ToSocketAddrs;
+        addr.to_socket_addrs()
+            .map_err(|e| anyhow::anyhow!("bad address '{addr}': {e}"))?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("address '{addr}' resolves to nothing"))?
+    };
+    let query = || -> anyhow::Result<Json> {
+        let mut s = std::net::TcpStream::connect_timeout(&sock, Duration::from_secs(2))
+            .map_err(|e| anyhow::anyhow!("connect {sock}: {e}"))?;
+        let _ = s.set_read_timeout(Some(Duration::from_secs(2)));
+        let _ = s.set_write_timeout(Some(Duration::from_secs(2)));
+        wire::send(&mut s, &WireMsg::HealthQuery)?;
+        match wire::recv(&mut s) {
+            Ok(WireMsg::HealthReply { json: text }) => json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("unparsable health JSON from {addr}: {e}")),
+            Ok(other) => anyhow::bail!("{addr} answered with a non-health frame: {other:?}"),
+            Err(e) => anyhow::bail!("health query to {addr} failed: {e}"),
+        }
+    };
+    let is_ready = |doc: &Json| {
+        matches!(doc.get("ready"), Some(Json::Bool(true)))
+            || matches!(doc.get("all_ready"), Some(Json::Bool(true)))
+    };
+    let wait = args.get_usize("wait-ready", 0).map_err(anyhow::Error::msg)?;
+    if wait == 0 {
+        let doc = query()?;
+        println!("{}", json::to_string_pretty(&doc));
+        return Ok(());
+    }
+    let deadline = Instant::now() + Duration::from_secs(wait as u64);
+    loop {
+        match query() {
+            Ok(doc) if is_ready(&doc) => {
+                println!("{}", json::to_string_pretty(&doc));
+                println!("probe: {addr} ready");
+                return Ok(());
+            }
+            Ok(_) | Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(200));
+            }
+            Ok(doc) => {
+                println!("{}", json::to_string_pretty(&doc));
+                anyhow::bail!("probe: {addr} not ready within {wait}s");
+            }
+            Err(e) => anyhow::bail!("probe: {addr} unreachable within {wait}s: {e}"),
+        }
+    }
 }
 
 /// Parse `--scale` for commands that execute real tensors (native serving,
@@ -598,8 +909,12 @@ fn cmd_compile(args: &Args) -> anyhow::Result<()> {
     // leaves no stray temp behind)
     let manifest_path = store.root().join("manifest.json");
     wingan::artifact::atomic_write(&manifest_path, json::to_string_pretty(&manifest).as_bytes())?;
+    // a full republish moves the store's monotonic generation tag — the
+    // signal a running `router --store` answers with a rolling reload.
+    // (Serve-time fallback publishes deliberately do NOT bump it.)
+    let generation = store.bump_generation()?;
     println!(
-        "published {n} artifacts + {} in {:?}",
+        "published {n} artifacts + {} (store generation {generation}) in {:?}",
         manifest_path.display(),
         t0.elapsed()
     );

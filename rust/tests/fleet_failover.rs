@@ -1,0 +1,292 @@
+//! Fleet failover integration tests (PR 9): a [`FleetRouter`] fronting
+//! real in-process [`ReplicaServer`]s over real TCP, driven by the same
+//! open-loop arrival plans the loadgen uses.
+//!
+//! The contract under test is the acceptance bar of the fleet tier:
+//! killing a replica mid-load loses **zero** requests (every arrival gets
+//! exactly one fate: a completion bitwise identical to a single-process
+//! reference, or a typed shed — never a hang, never corrupted bytes), a
+//! rolling republish marches every replica to the new store generation
+//! one at a time and leaves the fleet all-ready, a fully dead fleet sheds
+//! a typed `FleetUnavailable` verdict fast, and the `replica_exit` fault
+//! site has real process-death semantics.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+use wingan::artifact::PlanStore;
+use wingan::coordinator::{Coordinator, Rejected, ServeConfig, ServeError};
+use wingan::engine::NativeConfig;
+use wingan::faultinject::FaultPlane;
+use wingan::fleet::wire::{self, WireMsg};
+use wingan::fleet::{drive_open_loop, FleetConfig, FleetRouter, ReplicaConfig, ReplicaServer};
+use wingan::gan::zoo::Scale;
+use wingan::loadgen::{ArrivalPlan, RouteLoad, TrafficProfile};
+use wingan::util::lock_unpoisoned;
+
+/// A fresh per-test plan-store root (pid-scoped so parallel test
+/// processes never collide).
+fn fresh_store(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("wingan-fleet-failover-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("store dir");
+    dir
+}
+
+/// The one engine config every party in a test shares — baseline
+/// coordinator and replicas alike — so bitwise comparisons are
+/// meaningful: same scale, same weight seed, same store.
+fn native(store: &Path) -> NativeConfig {
+    NativeConfig {
+        scale: Scale::Tiny,
+        workers: 2,
+        models: Some(vec!["dcgan".into()]),
+        plan_store: Some(store.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+fn rep_cfg(store: &Path) -> ReplicaConfig {
+    ReplicaConfig {
+        native: native(store),
+        serve: ServeConfig {
+            drain_deadline: Duration::from_secs(2),
+            ..Default::default()
+        },
+        fleet_faults: None,
+    }
+}
+
+/// Boot a single-process baseline coordinator (its fallback compiles
+/// populate the store the replicas warm-boot from), draw the arrival
+/// plan, and execute every arrival serially for the reference outputs.
+fn reference_run(store: &Path, n: usize, rate: f64, seed: u64) -> (ArrivalPlan, Vec<Vec<f32>>) {
+    let coord =
+        Coordinator::start_native(native(store), ServeConfig::default()).expect("baseline boots");
+    let input_len =
+        coord.router().route("dcgan", "winograd").expect("route exists").sample_input_len;
+    let profile = TrafficProfile {
+        routes: vec![RouteLoad { model: "dcgan".into(), method: "winograd".into(), weight: 1.0 }],
+    };
+    let plan = ArrivalPlan::generate(&profile, &[input_len], n, rate, seed);
+    let refs = plan
+        .arrivals
+        .iter()
+        .map(|a| {
+            coord
+                .generate("dcgan", "winograd", a.input.clone())
+                .expect("reference generate")
+                .output
+        })
+        .collect();
+    coord.shutdown();
+    (plan, refs)
+}
+
+/// The acceptance drill: two replicas behind the router, one killed
+/// mid-load (process-death semantics: connections severed, no drain).
+/// Zero requests lost, every completion bitwise identical to the serial
+/// single-process reference, and the fleet recovers to all-ready once a
+/// replacement replica is admitted.
+#[test]
+fn killing_a_replica_mid_load_loses_nothing_and_stays_bitwise_faithful() {
+    let store = fresh_store("kill");
+    let (plan, refs) = reference_run(&store, 48, 300.0, 7);
+
+    let a = ReplicaServer::spawn("127.0.0.1:0", rep_cfg(&store)).expect("replica a");
+    let b = ReplicaServer::spawn("127.0.0.1:0", rep_cfg(&store)).expect("replica b");
+    assert!(a.wait_ready(Duration::from_secs(120)), "replica a boots");
+    assert!(b.wait_ready(Duration::from_secs(120)), "replica b boots");
+    let victim_addr = a.addr().to_string();
+
+    let router = FleetRouter::new(FleetConfig {
+        replicas: vec![victim_addr.clone(), b.addr().to_string()],
+        ..Default::default()
+    })
+    .expect("router");
+    assert!(router.wait_all_ready(Duration::from_secs(30)), "fleet admits");
+
+    let kill_at = plan.arrivals.len() / 3;
+    let victim = Mutex::new(Some(a));
+    let fates = drive_open_loop(
+        &plan,
+        4,
+        Some((kill_at, || {
+            if let Some(v) = lock_unpoisoned(&victim).take() {
+                v.kill();
+            }
+        })),
+        |_i, arr| router.submit("dcgan", "winograd", arr.input.clone(), None),
+    );
+
+    let offered = plan.arrivals.len();
+    let (mut completed, mut shed) = (0usize, 0usize);
+    for (i, fate) in fates.iter().enumerate() {
+        match fate.as_ref().expect("zero lost: every arrival has exactly one fate") {
+            Ok(resp) => {
+                assert_eq!(
+                    resp.output, refs[i],
+                    "request {i}: fleet output must be bitwise identical to the reference"
+                );
+                completed += 1;
+            }
+            Err(e) if e.is_shed() => shed += 1,
+            Err(other) => {
+                panic!("request {i}: a mid-run kill must never surface as a hard error: {other}")
+            }
+        }
+    }
+    assert_eq!(completed + shed, offered, "conservation: completed + shed == offered");
+    assert!(
+        completed > offered / 2,
+        "most requests survive the kill via failover (completed {completed}/{offered}, shed {shed})"
+    );
+
+    // recovery: deregister the corpse, admit a replacement, all-ready again
+    router.remove_replica(&victim_addr);
+    let replacement = ReplicaServer::spawn("127.0.0.1:0", rep_cfg(&store)).expect("replacement");
+    assert!(replacement.wait_ready(Duration::from_secs(120)), "replacement boots");
+    router.add_replica(&replacement.addr().to_string()).expect("admit replacement");
+    assert!(router.wait_all_ready(Duration::from_secs(30)), "fleet recovers to all-ready");
+
+    b.shutdown();
+    replacement.shutdown();
+    drop(router);
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+/// Rolling republish: bump the store's generation tag and roll — every
+/// replica ends on the new generation with its breaker closed, the fleet
+/// is all-ready afterwards, and the republished plans produce the same
+/// bits for the same input.
+#[test]
+fn rolling_republish_marches_every_replica_to_the_new_generation() {
+    let store = fresh_store("roll");
+    let (plan, refs) = reference_run(&store, 1, 100.0, 11);
+    let probe_input = plan.arrivals[0].input.clone();
+
+    let store_handle = PlanStore::open(&store);
+    let g1 = store_handle.bump_generation().expect("publish g1");
+
+    let a = ReplicaServer::spawn("127.0.0.1:0", rep_cfg(&store)).expect("replica a");
+    let b = ReplicaServer::spawn("127.0.0.1:0", rep_cfg(&store)).expect("replica b");
+    assert!(a.wait_ready(Duration::from_secs(120)), "replica a boots");
+    assert!(b.wait_ready(Duration::from_secs(120)), "replica b boots");
+
+    let router = FleetRouter::new(FleetConfig {
+        replicas: vec![a.addr().to_string(), b.addr().to_string()],
+        ..Default::default()
+    })
+    .expect("router");
+    assert!(router.wait_all_ready(Duration::from_secs(30)), "fleet admits");
+    for r in &router.status().replicas {
+        assert_eq!(r.generation, g1, "{}: boots at the published generation", r.addr);
+    }
+
+    let pre = router.submit("dcgan", "winograd", probe_input.clone(), None).expect("pre-roll");
+    assert_eq!(pre.output, refs[0], "pre-roll output matches the reference");
+
+    let g2 = store_handle.bump_generation().expect("publish g2");
+    router.roll_to_generation(g2, Duration::from_secs(300)).expect("roll completes");
+
+    let status = router.status();
+    assert!(status.all_ready(), "a completed roll leaves the fleet all-ready");
+    for r in &status.replicas {
+        assert_eq!(r.generation, g2, "{}: rolled to the new generation", r.addr);
+        assert_eq!(r.breaker, "closed", "{}: readmitted with a closed breaker", r.addr);
+        assert!(!r.rolling, "{}: roll flag cleared", r.addr);
+    }
+
+    let post = router.submit("dcgan", "winograd", probe_input, None).expect("post-roll");
+    assert_eq!(post.output, refs[0], "the republished plans produce the same bits");
+
+    a.shutdown();
+    b.shutdown();
+    drop(router);
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+/// Graceful degradation: when every replica is out, the router sheds a
+/// typed [`Rejected::FleetUnavailable`] verdict quickly — it never hangs
+/// a client on a dead fleet.
+#[test]
+fn a_fully_dead_fleet_sheds_typed_fleet_unavailable() {
+    let store = fresh_store("dead");
+    let (plan, _refs) = reference_run(&store, 1, 100.0, 3);
+    let input = plan.arrivals[0].input.clone();
+
+    let only = ReplicaServer::spawn("127.0.0.1:0", rep_cfg(&store)).expect("replica");
+    assert!(only.wait_ready(Duration::from_secs(120)), "replica boots");
+    let router = FleetRouter::new(FleetConfig {
+        replicas: vec![only.addr().to_string()],
+        ..Default::default()
+    })
+    .expect("router");
+    assert!(router.wait_all_ready(Duration::from_secs(30)), "fleet admits");
+
+    only.kill();
+    let t0 = Instant::now();
+    while router.status().ready_count() > 0 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(router.status().ready_count(), 0, "the prober evicts the dead replica");
+
+    let t1 = Instant::now();
+    match router.submit("dcgan", "winograd", input, None) {
+        Err(ServeError::Rejected(Rejected::FleetUnavailable { replicas })) => {
+            assert_eq!(replicas, 1, "the verdict names the fleet size");
+        }
+        Ok(_) => panic!("a dead fleet cannot complete requests"),
+        Err(other) => panic!("expected FleetUnavailable, got {other}"),
+    }
+    assert!(
+        t1.elapsed() < Duration::from_secs(10),
+        "graceful degradation sheds fast, never hangs"
+    );
+    assert!(router.status().shed_unavailable >= 1, "the shed is counted");
+
+    drop(router);
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+/// The `replica_exit` fault site has process-death semantics: the first
+/// request trips it, the connection is severed with no reply, and the
+/// replica's serve loop is down — the drill `wingan chaos --fleet` leans
+/// on, pinned in isolation.
+#[test]
+fn replica_exit_fault_site_kills_the_replica_abruptly() {
+    use std::net::TcpStream;
+    let store = fresh_store("exit");
+    let (plan, _refs) = reference_run(&store, 1, 100.0, 5);
+
+    let mut cfg = rep_cfg(&store);
+    cfg.fleet_faults =
+        Some(Arc::new(FaultPlane::parse("seed=1;replica_exit:error*1@1").expect("fault plane")));
+    let server = ReplicaServer::spawn("127.0.0.1:0", cfg).expect("replica");
+    assert!(server.wait_ready(Duration::from_secs(120)), "replica boots");
+    let addr = server.addr();
+
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+    wire::send(
+        &mut s,
+        &WireMsg::Request {
+            id: 1,
+            model: "dcgan".into(),
+            method: "winograd".into(),
+            deadline_us: 0,
+            input: plan.arrivals[0].input.clone(),
+        },
+    )
+    .expect("send");
+    assert!(wire::recv(&mut s).is_err(), "an exiting replica severs the connection, no reply");
+
+    let t0 = Instant::now();
+    while server.alive() && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(!server.alive(), "replica_exit stops the serve loop (process-death semantics)");
+    server.join();
+    let _ = std::fs::remove_dir_all(&store);
+}

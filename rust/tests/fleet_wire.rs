@@ -1,0 +1,276 @@
+//! Fleet wire-protocol integration tests (PR 9): the replica server
+//! exercised over real TCP, the way the router (or a hostile peer)
+//! actually reaches it.
+//!
+//! The pure codec properties — truncation at every cut, oversized
+//! length prefixes, bad tags, random bytes never panicking the decoder
+//! — live inline in `fleet::wire`; the fate-cache and breaker state
+//! machines are pinned in their own modules. These tests cover what
+//! only a socket can: lifecycle phases observable on the wire
+//! (NOT_READY → ready → DRAINING → stopped), the health document served
+//! to provers, retry idempotency across *connections*, and a torn frame
+//! from one client never taking the server down for the next.
+
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+use wingan::coordinator::ServeConfig;
+use wingan::engine::NativeConfig;
+use wingan::fleet::wire::{self, RecvError, WireMsg};
+use wingan::fleet::{ReplicaConfig, ReplicaServer};
+use wingan::gan::zoo::Scale;
+use wingan::util::json::{self, Json};
+use wingan::util::prng::Rng;
+
+/// A tiny-scale single-model replica config: fast to boot, real engine.
+fn tiny_cfg() -> ReplicaConfig {
+    ReplicaConfig {
+        native: NativeConfig {
+            scale: Scale::Tiny,
+            workers: 2,
+            models: Some(vec!["dcgan".into()]),
+            ..Default::default()
+        },
+        serve: ServeConfig {
+            drain_deadline: Duration::from_secs(2),
+            ..Default::default()
+        },
+        fleet_faults: None,
+    }
+}
+
+/// One connect-send-recv round trip with bounded timeouts.
+fn rpc(addr: SocketAddr, msg: &WireMsg) -> Result<WireMsg, String> {
+    let mut s = TcpStream::connect_timeout(&addr, Duration::from_secs(2))
+        .map_err(|e| format!("connect: {e}"))?;
+    let _ = s.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = s.set_write_timeout(Some(Duration::from_secs(5)));
+    wire::send(&mut s, msg).map_err(|e| format!("send: {e}"))?;
+    wire::recv(&mut s).map_err(|e| format!("recv: {e}"))
+}
+
+/// Ask the replica's health document for the first route's input length
+/// — the tests stay agnostic to zoo geometry.
+fn first_route_input_len(addr: SocketAddr) -> usize {
+    let WireMsg::HealthReply { json: text } = rpc(addr, &WireMsg::HealthQuery).expect("health")
+    else {
+        panic!("health query answered with a non-health frame")
+    };
+    let doc = json::parse(&text).expect("health JSON parses");
+    let routes = doc.get("routes").and_then(Json::as_arr).expect("routes array");
+    routes[0].get("input_len").and_then(Json::as_usize).expect("input_len")
+}
+
+fn request(id: u64, input: Vec<f32>) -> WireMsg {
+    WireMsg::Request {
+        id,
+        model: "dcgan".into(),
+        method: "winograd".into(),
+        deadline_us: 0,
+        input,
+    }
+}
+
+/// The boot gap is observable and typed: a replica still compiling (four
+/// models makes the gap wide) answers `NOT_READY` — a retryable verdict,
+/// never a hang or a dropped connection — and serves normally once the
+/// boot lands.
+#[test]
+fn requests_in_the_boot_gap_get_typed_not_ready() {
+    let mut cfg = tiny_cfg();
+    // all four zoo models: the boot is guaranteed to outlast our probe
+    cfg.native.models = None;
+    let server = ReplicaServer::spawn("127.0.0.1:0", cfg).expect("binds");
+    let addr = server.addr();
+
+    // immediately after bind, before the warm-boot lands
+    match rpc(addr, &request(1, vec![0.0; 4])) {
+        Ok(WireMsg::Error { code, .. }) if code == wire::code::NOT_READY => {
+            assert!(wire::retryable(code), "NOT_READY must be retryable");
+        }
+        // on a fast machine the boot can win the race; the deliberately
+        // wrong input length then gets the shape verdict instead
+        Ok(WireMsg::Error { code, .. }) if code == wire::code::BAD_INPUT_LENGTH => {}
+        other => panic!("boot-gap request got {other:?}"),
+    }
+
+    assert!(server.wait_ready(Duration::from_secs(120)), "boot eventually lands");
+    let input_len = first_route_input_len(addr);
+    match rpc(addr, &request(2, Rng::new(3).normal_vec_f32(input_len))) {
+        Ok(WireMsg::Response { id, output, .. }) => {
+            assert_eq!(id, 2);
+            assert!(!output.is_empty());
+        }
+        other => panic!("post-boot request got {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// The health document is machine-readable and carries the contract
+/// keys: role, readiness, generation, the route table, and the
+/// coordinator's own health + metrics once booted.
+#[test]
+fn health_document_parses_and_carries_the_stable_keys() {
+    let server = ReplicaServer::spawn("127.0.0.1:0", tiny_cfg()).expect("binds");
+    assert!(server.wait_ready(Duration::from_secs(120)), "boot lands");
+    let WireMsg::HealthReply { json: text } =
+        rpc(server.addr(), &WireMsg::HealthQuery).expect("health")
+    else {
+        panic!("non-health frame")
+    };
+    let doc = json::parse(&text).expect("health JSON parses");
+    assert_eq!(doc.get("role").and_then(Json::as_str), Some("replica"));
+    assert!(matches!(doc.get("ready"), Some(Json::Bool(true))));
+    assert!(matches!(doc.get("draining"), Some(Json::Bool(false))));
+    assert!(doc.get("generation").and_then(Json::as_usize).is_some());
+    let routes = doc.get("routes").and_then(Json::as_arr).expect("routes");
+    assert!(!routes.is_empty(), "a ready replica advertises its routes");
+    for r in routes {
+        assert!(r.get("model").and_then(Json::as_str).is_some());
+        assert!(r.get("method").and_then(Json::as_str).is_some());
+        assert!(r.get("input_len").and_then(Json::as_usize).is_some());
+        assert!(r.get("output_len").and_then(Json::as_usize).is_some());
+    }
+    let coord = doc.get("coordinator").expect("coordinator block");
+    assert!(
+        matches!(coord.get("health").and_then(|h| h.get("all_healthy")), Some(Json::Bool(true))),
+        "booted replica reports a healthy coordinator"
+    );
+    assert!(coord.get("metrics").and_then(|m| m.get("requests")).is_some());
+    server.shutdown();
+}
+
+/// Retry idempotency end to end: the identical `Request` frame sent
+/// twice — on two separate connections, the way a router retry actually
+/// arrives — executes once and replays the recorded fate, bitwise
+/// identical down to the encoded frame.
+#[test]
+fn resent_request_frames_replay_the_fate_bitwise_identically() {
+    let server = ReplicaServer::spawn("127.0.0.1:0", tiny_cfg()).expect("binds");
+    assert!(server.wait_ready(Duration::from_secs(120)), "boot lands");
+    let addr = server.addr();
+    let input_len = first_route_input_len(addr);
+    let msg = request(77, Rng::new(11).normal_vec_f32(input_len));
+
+    let first = rpc(addr, &msg).expect("first send");
+    assert!(matches!(first, WireMsg::Response { .. }), "got {first:?}");
+    for round in 0..2 {
+        let again = rpc(addr, &msg).expect("resend");
+        assert_eq!(
+            again.encode(),
+            first.encode(),
+            "resend {round}: replayed fate must be bitwise identical"
+        );
+    }
+    server.shutdown();
+}
+
+/// Drain over the wire: after `Drain`, new requests answer typed
+/// `DRAINING` (retryable — the router routes around it), and the health
+/// document flips its `draining` flag so the prober deregisters the
+/// replica before shutdown.
+#[test]
+fn drained_replica_sheds_typed_and_reports_draining() {
+    let server = ReplicaServer::spawn("127.0.0.1:0", tiny_cfg()).expect("binds");
+    assert!(server.wait_ready(Duration::from_secs(120)), "boot lands");
+    let addr = server.addr();
+    let input_len = first_route_input_len(addr);
+
+    assert_eq!(rpc(addr, &WireMsg::Drain).expect("drain"), WireMsg::Ok);
+    match rpc(addr, &request(5, Rng::new(5).normal_vec_f32(input_len))) {
+        Ok(WireMsg::Error { code, .. }) => {
+            assert_eq!(code, wire::code::DRAINING);
+            assert!(wire::retryable(code), "DRAINING must be retryable");
+        }
+        other => panic!("request to a draining replica got {other:?}"),
+    }
+    let WireMsg::HealthReply { json: text } = rpc(addr, &WireMsg::HealthQuery).expect("health")
+    else {
+        panic!("non-health frame")
+    };
+    let doc = json::parse(&text).expect("parses");
+    assert!(matches!(doc.get("draining"), Some(Json::Bool(true))));
+    assert!(
+        matches!(doc.get("ready"), Some(Json::Bool(false))),
+        "a draining replica is not ready for new work"
+    );
+    server.shutdown();
+}
+
+/// The remote `Shutdown` verb is acknowledged and stops the serve loop
+/// — the graceful path a rolling decommission takes.
+#[test]
+fn shutdown_verb_is_acknowledged_and_stops_the_replica() {
+    let server = ReplicaServer::spawn("127.0.0.1:0", tiny_cfg()).expect("binds");
+    assert!(server.wait_ready(Duration::from_secs(120)), "boot lands");
+    assert_eq!(rpc(server.addr(), &WireMsg::Shutdown).expect("shutdown verb"), WireMsg::Ok);
+    let t0 = Instant::now();
+    while server.alive() && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(!server.alive(), "remote Shutdown stops the serve loop");
+    server.join();
+}
+
+/// Hostile peers cost one connection, never the server: a torn frame
+/// (length prefix promising more than is sent) and raw garbage bytes are
+/// both absorbed, and the next well-formed client is served normally.
+#[test]
+fn torn_frames_and_garbage_never_take_the_server_down() {
+    use std::io::Write;
+    let server = ReplicaServer::spawn("127.0.0.1:0", tiny_cfg()).expect("binds");
+    assert!(server.wait_ready(Duration::from_secs(120)), "boot lands");
+    let addr = server.addr();
+
+    // torn frame: header promises 100 bytes, the peer hangs up after 3
+    {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(&100u32.to_le_bytes()).expect("header");
+        s.write_all(&[1, 1, 0]).expect("partial body");
+    } // dropped: mid-frame EOF on the server side
+
+    // raw garbage: not even a plausible header
+    {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(&[0xFF; 64]).expect("garbage");
+    }
+
+    // the server shrugs both off and keeps serving
+    let input_len = first_route_input_len(addr);
+    match rpc(addr, &request(9, Rng::new(9).normal_vec_f32(input_len))) {
+        Ok(WireMsg::Response { id, .. }) => assert_eq!(id, 9),
+        other => panic!("post-hostility request got {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// Clean close vs torn frame is distinguishable client-side too: a
+/// well-formed query followed by our own clean close leaves the server
+/// running, and `recv` on a socket the server never writes to times out
+/// as an Io error, not a panic.
+#[test]
+fn reply_frames_to_the_server_cost_the_connection_not_the_process() {
+    let server = ReplicaServer::spawn("127.0.0.1:0", tiny_cfg()).expect("binds");
+    assert!(server.wait_ready(Duration::from_secs(120)), "boot lands");
+    let addr = server.addr();
+
+    // sending a reply-type frame to a server is a protocol violation:
+    // it drops the connection (no reply) rather than answering
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+    wire::send(
+        &mut s,
+        &WireMsg::Response { id: 1, batch_size: 1, queue_us: 0, exec_us: 0, output: vec![] },
+    )
+    .expect("send");
+    match wire::recv(&mut s) {
+        Err(RecvError::Closed) | Err(RecvError::Io(_)) => {}
+        other => panic!("protocol violation should cost the connection, got {other:?}"),
+    }
+
+    // and the server is still alive for legitimate clients
+    assert!(server.alive());
+    let WireMsg::HealthReply { .. } = rpc(addr, &WireMsg::HealthQuery).expect("health") else {
+        panic!("non-health frame")
+    };
+    server.shutdown();
+}
