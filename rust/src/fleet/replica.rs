@@ -24,9 +24,13 @@
 //! execution error) is recorded in a bounded [`FateCache`] keyed by the
 //! router-assigned request id. A resent id is answered from the cache —
 //! bitwise identical bytes, no second execution — so router retries are
-//! idempotent: one execution per fate, ever. Outcomes that never reached
-//! the engine (typed sheds, not-ready, draining) are deliberately *not*
-//! cached: they are the retryable verdicts.
+//! idempotent: one execution per fate, ever. Ids are *reserved* at
+//! admission, before execution starts, so the invariant also holds for a
+//! duplicate arriving while the first execution is still in flight: the
+//! duplicate waits for the original's fate instead of starting a second
+//! execution. Outcomes that never reached the engine (typed sheds,
+//! not-ready, draining, a failed boot) are deliberately *not* cached:
+//! they are the retryable verdicts.
 //!
 //! # Graceful shutdown and rolling reload
 //!
@@ -49,7 +53,7 @@ use crate::fleet::wire::{self, RecvError, WireMsg};
 use crate::util::json::{self, Json};
 use crate::util::lock_unpoisoned;
 use anyhow::{anyhow, Context, Result};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -75,16 +79,30 @@ pub struct ReplicaConfig {
 /// the router-assigned request id. `put` refuses to overwrite: the first
 /// fate recorded for an id is the only fate that id will ever have, and
 /// FIFO eviction bounds memory regardless of request count.
+///
+/// The cache also tracks **pending** ids — reserved at admission, before
+/// the execution starts — so "at most one execution per id" holds even
+/// when a duplicate arrives *while* the first execution is still in
+/// flight (a router io timeout on a stalled replica can resend an id the
+/// original handler is still working on). A duplicate of a pending id
+/// must wait for the original's fate, never start a second execution.
 pub struct FateCache {
     cap: usize,
     map: HashMap<u64, WireMsg>,
     order: VecDeque<u64>,
+    /// ids admitted to execution whose fate is not yet recorded
+    pending: HashSet<u64>,
 }
 
 impl FateCache {
     /// A cache remembering at most `cap` fates (oldest evicted first).
     pub fn new(cap: usize) -> FateCache {
-        FateCache { cap: cap.max(1), map: HashMap::new(), order: VecDeque::new() }
+        FateCache {
+            cap: cap.max(1),
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            pending: HashSet::new(),
+        }
     }
 
     /// The recorded fate for `id`, if any.
@@ -92,9 +110,33 @@ impl FateCache {
         self.map.get(&id)
     }
 
-    /// Record `id`'s fate. Returns `false` (and changes nothing) when the
-    /// id already has one — first fate wins, always.
+    /// Reserve `id` for execution. `false` when the id already has a fate
+    /// or another execution of it is in flight — the caller must replay
+    /// the fate or wait for it, never execute.
+    pub fn reserve(&mut self, id: u64) -> bool {
+        if self.map.contains_key(&id) {
+            return false;
+        }
+        self.pending.insert(id)
+    }
+
+    /// Drop a reservation that produced no fate (the request never
+    /// executed — shed, fault drop, phase gate); a waiting duplicate may
+    /// then claim the id itself.
+    pub fn release(&mut self, id: u64) {
+        self.pending.remove(&id);
+    }
+
+    /// True while `id` is reserved with its fate still unrecorded.
+    pub fn pending(&self, id: u64) -> bool {
+        self.pending.contains(&id)
+    }
+
+    /// Record `id`'s fate (clearing any reservation). Returns `false`
+    /// (and changes nothing else) when the id already has one — first
+    /// fate wins, always.
     pub fn put(&mut self, id: u64, fate: WireMsg) -> bool {
+        self.pending.remove(&id);
         if self.map.contains_key(&id) {
             return false;
         }
@@ -202,6 +244,21 @@ impl Drop for InFlightGuard<'_> {
     }
 }
 
+/// Releases a fate reservation on scope exit. Recording a fate via
+/// [`FateCache::put`] clears the pending mark itself (making this drop a
+/// no-op); every *non-executed* exit path — fault drop, phase gate,
+/// admission shed — relies on the drop to unblock waiting duplicates.
+struct FateReservation<'a> {
+    fates: &'a Mutex<FateCache>,
+    id: u64,
+}
+
+impl Drop for FateReservation<'_> {
+    fn drop(&mut self) {
+        lock_unpoisoned(self.fates).release(self.id);
+    }
+}
+
 fn handle_request(
     shared: &Shared,
     id: u64,
@@ -210,11 +267,41 @@ fn handle_request(
     deadline_us: u64,
     input: Vec<f32>,
 ) -> Verdict {
+    let budget = (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
+    // generous wait cap: the coordinator sheds or answers long before
+    // this; it only exists so a wedged engine can't wedge the connection
+    let wait = budget.map_or(Duration::from_secs(120), |b| b + Duration::from_secs(5));
     // 1. fates first: a resent id is answered with its recorded outcome,
-    //    bitwise identical, no second execution — even across faults
-    if let Some(fate) = lock_unpoisoned(&shared.fates).get(id).cloned() {
-        return Verdict::Reply(fate);
+    //    bitwise identical, no second execution — even across faults. An
+    //    id whose first execution is still in flight is *reserved*: the
+    //    duplicate waits for that execution's fate (or for the
+    //    reservation to release without one) instead of executing again.
+    let t0 = Instant::now();
+    loop {
+        {
+            let mut fates = lock_unpoisoned(&shared.fates);
+            if let Some(fate) = fates.get(id).cloned() {
+                return Verdict::Reply(fate);
+            }
+            if fates.reserve(id) {
+                break;
+            }
+        }
+        if t0.elapsed() > wait {
+            // the original execution outlived even the generous cap;
+            // this handler executed nothing, so the verdict is retryable
+            return Verdict::Reply(WireMsg::Error {
+                id,
+                code: wire::code::NOT_READY,
+                a: 0,
+                b: 0,
+                detail: "duplicate of an in-flight request id; original still executing"
+                    .to_string(),
+            });
+        }
+        thread::sleep(Duration::from_millis(2));
     }
+    let _reservation = FateReservation { fates: &shared.fates, id };
     // 2. fleet fault plane (deterministic, seeded)
     if let Some(plane) = &shared.cfg.fleet_faults {
         if plane.check(FaultSite::ConnDrop).is_some() {
@@ -257,9 +344,13 @@ fn handle_request(
                 })
             }
             Phase::Failed(e) => {
+                // retryable (FAILED, not EXECUTION): nothing executed
+                // here, and the router must fail over to a healthy
+                // replica instead of surfacing a replica-local boot
+                // failure to the client as terminal
                 return Verdict::Reply(WireMsg::Error {
                     id,
-                    code: wire::code::EXECUTION,
+                    code: wire::code::FAILED,
                     a: 0,
                     b: 0,
                     detail: format!("replica failed: {e}"),
@@ -271,11 +362,6 @@ fn handle_request(
             }
         }
     };
-    let budget = (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
-    // generous wait cap: the coordinator sheds or answers long before
-    // this; it only exists so a wedged engine can't wedge the connection
-    let wait =
-        budget.map_or(Duration::from_secs(120), |b| b + Duration::from_secs(5));
     let outcome = match coord.submit_with_deadline(model, method, input, budget) {
         Ok(rx) => match rx.recv_timeout(wait) {
             Ok(fate) => fate,
@@ -691,6 +777,29 @@ mod tests {
         assert_eq!(got, &first);
         assert_eq!(got.encode(), first.encode(), "replayed frame is bitwise identical");
         assert!(c.get(2).is_none());
+    }
+
+    #[test]
+    fn fate_cache_reservation_admits_one_executor_per_id() {
+        let mut c = FateCache::new(8);
+        assert!(c.reserve(1), "first executor claims the id");
+        assert!(!c.reserve(1), "a duplicate of an in-flight id must wait, not execute");
+        assert!(c.pending(1));
+        // fate recorded: the reservation clears and the replay path opens
+        assert!(c.put(1, WireMsg::Ok));
+        assert!(!c.pending(1));
+        assert!(!c.reserve(1), "a fated id can never be re-reserved");
+        assert_eq!(c.get(1), Some(&WireMsg::Ok));
+    }
+
+    #[test]
+    fn fate_cache_release_without_a_fate_reopens_the_id() {
+        let mut c = FateCache::new(8);
+        assert!(c.reserve(2));
+        c.release(2);
+        assert!(!c.pending(2));
+        assert!(c.reserve(2), "a never-executed id can be claimed again");
+        assert!(c.get(2).is_none(), "release records no fate");
     }
 
     #[test]

@@ -128,6 +128,20 @@ impl Breaker {
         }
     }
 
+    /// Would [`Breaker::admits`] say yes right now, **without** consuming
+    /// the half-open probe token? Candidate scans must peek with this and
+    /// spend the token (via `admits`) only on the slot actually routed
+    /// to — a cooled-down replica that merely loses a load comparison
+    /// would otherwise burn its single probe with no request ever sent,
+    /// ejecting it from routing forever.
+    pub fn would_admit(&self, now: Instant) -> bool {
+        match self.open_until {
+            None => true,
+            Some(t) if now >= t => !self.half_open,
+            Some(_) => false,
+        }
+    }
+
     /// May a request be routed here right now? Once the cooldown
     /// expires this admits exactly **one** half-open probe; further
     /// requests are rejected until that probe's verdict arrives.
@@ -207,6 +221,8 @@ struct Inner {
     stats: RouterStats,
     /// serializes rolling reloads (manual and store-watch triggered)
     roll_lock: Mutex<()>,
+    /// an auto-roll thread is running (one in flight at a time)
+    auto_roll: AtomicBool,
 }
 
 /// One replica's row in [`FleetStatus`].
@@ -411,9 +427,19 @@ impl Inner {
             let stale = lock_unpoisoned(&self.slots)
                 .iter()
                 .any(|s| s.ready && !s.rolling && s.generation < store_gen);
-            if stale {
-                // best-effort: a failed roll is retried on the next sweep
-                let _ = self.roll_to_generation(store_gen, Duration::from_secs(300));
+            // the roll runs on its own thread: a rolling reload can take
+            // minutes (drain + warm-boot per replica), and the prober
+            // must keep sweeping health the whole time — a replica that
+            // crashes or drains mid-roll has to lose its ready bit on
+            // schedule, not after the roll lands. `auto_roll` keeps one
+            // roll in flight; a failed roll re-arms on a later sweep.
+            if stale && !self.auto_roll.swap(true, Ordering::AcqRel) {
+                let inner = Arc::clone(self);
+                thread::spawn(move || {
+                    // best-effort: a failed roll is retried on a later sweep
+                    let _ = inner.roll_to_generation(store_gen, Duration::from_secs(300));
+                    inner.auto_roll.store(false, Ordering::Release);
+                });
             }
         }
     }
@@ -423,8 +449,11 @@ impl Inner {
         let now = Instant::now();
         let mut slots = lock_unpoisoned(&self.slots);
         let mut best: Option<(usize, usize, f64)> = None; // (idx, in_flight, ewma)
-        for (idx, slot) in slots.iter_mut().enumerate() {
-            if !slot.ready || slot.draining || slot.rolling || !slot.breaker.admits(now) {
+        for (idx, slot) in slots.iter().enumerate() {
+            // peek only: the half-open probe token is consumed below, for
+            // the winner alone — a candidate that loses the comparison
+            // must keep its token or it can never be probed back in
+            if !slot.ready || slot.draining || slot.rolling || !slot.breaker.would_admit(now) {
                 continue;
             }
             let load = slot.in_flight.load(Ordering::Acquire);
@@ -439,7 +468,11 @@ impl Inner {
             }
         }
         best.map(|(idx, _, _)| {
-            let s = &slots[idx];
+            let s = &mut slots[idx];
+            // same lock, same `now`: the winner's admits() must agree
+            // with the would_admit() that nominated it
+            let admitted = s.breaker.admits(now);
+            debug_assert!(admitted);
             (s.addr.clone(), s.sock, Arc::clone(&s.in_flight))
         })
     }
@@ -477,6 +510,13 @@ impl Inner {
         budget: Option<Duration>,
     ) -> Result<GenResponse, ServeError> {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        // request-shape gate: an input too large for one wire frame can
+        // never be served — verdict here, typed, instead of every replica
+        // dropping the oversized frame and eating a breaker failure
+        let max_floats = wire::max_request_floats(model, method);
+        if input.len() > max_floats {
+            return Err(ServeError::BadInputLength { expected: max_floats, got: input.len() });
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
         let deadline = budget.and_then(|b| t0.checked_add(b));
@@ -538,14 +578,17 @@ impl Inner {
                     if !wire::retryable(code) {
                         return Err(err);
                     }
-                    if code == wire::code::NOT_READY || code == wire::code::DRAINING {
+                    if code == wire::code::NOT_READY
+                        || code == wire::code::DRAINING
+                        || code == wire::code::FAILED
+                    {
                         // route around it until the prober re-admits it
                         let mut slots = lock_unpoisoned(&self.slots);
                         if let Some(s) = slots.iter_mut().find(|s| s.addr == addr) {
-                            if code == wire::code::NOT_READY {
-                                s.ready = false;
-                            } else {
+                            if code == wire::code::DRAINING {
                                 s.draining = true;
+                            } else {
+                                s.ready = false;
                             }
                         }
                     }
@@ -586,6 +629,9 @@ impl Inner {
             .map(|s| (s.addr.clone(), s.sock))
             .collect();
         for (addr, sock) in addrs {
+            if self.stop.load(Ordering::Acquire) {
+                return Err("router stopping, roll abandoned".to_string());
+            }
             let (needs_roll, in_flight) = {
                 let slots = lock_unpoisoned(&self.slots);
                 match slots.iter().find(|s| s.addr == addr) {
@@ -602,6 +648,10 @@ impl Inner {
                 if t0.elapsed() > deadline {
                     self.set_rolling(&addr, false);
                     return Err(format!("roll of {addr}: quiesce timed out"));
+                }
+                if self.stop.load(Ordering::Acquire) {
+                    self.set_rolling(&addr, false);
+                    return Err(format!("roll of {addr}: router stopping"));
                 }
                 thread::sleep(Duration::from_millis(2));
             }
@@ -734,6 +784,7 @@ impl FleetRouter {
             next_id: AtomicU64::new(1),
             stats: RouterStats::default(),
             roll_lock: Mutex::new(()),
+            auto_roll: AtomicBool::new(false),
         });
         for addr in &cfg.replicas {
             let sock = parse_sock(addr)?;
@@ -989,6 +1040,40 @@ mod tests {
         assert_eq!(b.state(later), "open");
         let much_later = later + Duration::from_millis(150);
         assert!(b.admits(much_later), "and cools down again");
+    }
+
+    #[test]
+    fn would_admit_peeks_without_consuming_the_half_open_token() {
+        let t0 = Instant::now();
+        let mut b = Breaker::new(1, Duration::from_millis(100));
+        b.on_failure(t0);
+        assert!(!b.would_admit(t0), "open during cooldown");
+        let later = t0 + Duration::from_millis(150);
+        assert!(b.would_admit(later));
+        assert!(b.would_admit(later), "peeking is side-effect free");
+        assert!(b.admits(later), "the probe token is still there after peeks");
+        assert!(!b.would_admit(later), "token consumed: no second probe until a verdict");
+        assert!(!b.admits(later));
+        // a losing candidate's token survives the scan, so the next pick
+        // that actually routes to it can still half-open it
+        b.on_success();
+        assert!(b.would_admit(later) && b.admits(later), "closed again");
+    }
+
+    #[test]
+    fn oversized_input_is_a_typed_shape_error_before_any_routing() {
+        // empty fleet: if the gate ran *after* pick(), this would shed
+        // FleetUnavailable instead of naming the request's real defect
+        let router = FleetRouter::new(FleetConfig::default()).unwrap();
+        let cap = wire::max_request_floats("dcgan", "winograd");
+        let err = router.submit("dcgan", "winograd", vec![0.0; cap + 1], None).unwrap_err();
+        match err {
+            ServeError::BadInputLength { expected, got } => {
+                assert_eq!(expected, cap);
+                assert_eq!(got, cap + 1);
+            }
+            other => panic!("expected BadInputLength, got {other:?}"),
+        }
     }
 
     #[test]

@@ -59,9 +59,10 @@ const TAG_OK: u8 = 9;
 
 /// Typed wire error codes (the `code` byte of [`WireMsg::Error`]).
 ///
-/// Codes 1–9 mirror [`ServeError`] variants; 10/11 are fleet-local
+/// Codes 1–9 mirror [`ServeError`] variants; 10–12 are fleet-local
 /// verdicts a replica can return before a request ever reaches its
-/// coordinator (warm-boot incomplete, drain in progress).
+/// coordinator (warm-boot incomplete, drain in progress, boot/reload
+/// failed).
 pub mod code {
     /// [`crate::coordinator::ServeError::UnknownModel`]
     pub const UNKNOWN_MODEL: u8 = 1;
@@ -85,13 +86,17 @@ pub mod code {
     pub const NOT_READY: u8 = 10;
     /// replica is draining (clean roll or graceful shutdown in progress)
     pub const DRAINING: u8 = 11;
+    /// replica's warm-boot or reload failed: terminal for the *replica*
+    /// (until a new `Reload`), but retryable for the *fleet* — the
+    /// request never executed, so the router fails it over
+    pub const FAILED: u8 = 12;
 }
 
 /// True for error codes a router may fail over to another replica: the
-/// request was **never executed** (admission shed, breaker open, boot or
-/// drain in progress, engine handed off), so a retry cannot double-spend
-/// work. Execution verdicts (`EXECUTION`, `CRASHED`), request-shape
-/// errors, and per-request deadline verdicts are terminal.
+/// request was **never executed** (admission shed, breaker open, boot,
+/// drain or reload trouble, engine handed off), so a retry cannot
+/// double-spend work. Execution verdicts (`EXECUTION`, `CRASHED`),
+/// request-shape errors, and per-request deadline verdicts are terminal.
 pub fn retryable(code: u8) -> bool {
     matches!(
         code,
@@ -101,6 +106,7 @@ pub fn retryable(code: u8) -> bool {
             | code::FLEET_UNAVAILABLE
             | code::NOT_READY
             | code::DRAINING
+            | code::FAILED
     )
 }
 
@@ -265,6 +271,38 @@ fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
 }
 
 impl WireMsg {
+    /// The body length (version byte + tag + payload) this message
+    /// encodes to, computed without encoding it.
+    pub fn body_len(&self) -> usize {
+        let payload = match self {
+            WireMsg::Request { model, method, input, .. } => {
+                28 + model.len() + method.len() + input.len().saturating_mul(4)
+            }
+            WireMsg::Response { output, .. } => 32 + output.len().saturating_mul(4),
+            WireMsg::Error { detail, .. } => 29 + detail.len(),
+            WireMsg::HealthReply { json } => 4 + json.len(),
+            WireMsg::HealthQuery
+            | WireMsg::Drain
+            | WireMsg::Reload
+            | WireMsg::Shutdown
+            | WireMsg::Ok => 0,
+        };
+        2 + payload
+    }
+
+    /// Reject a message whose frame would exceed [`MAX_BODY`] *before*
+    /// it is encoded or written. The peer would refuse the frame as
+    /// [`WireError::Oversized`] and drop the connection anyway, so the
+    /// verdict belongs at the sender — typed, not a severed connection
+    /// the router would count against a healthy replica's breaker.
+    pub fn validate(&self) -> Result<(), WireError> {
+        let len = self.body_len();
+        if len > MAX_BODY {
+            return Err(WireError::Oversized { len, max: MAX_BODY });
+        }
+        Ok(())
+    }
+
     /// Encode as one full frame (length prefix included), ready to write.
     pub fn encode(&self) -> Vec<u8> {
         let mut body = Vec::with_capacity(64);
@@ -433,8 +471,23 @@ impl WireMsg {
 
 // ------------------------------------------------------------- transport
 
-/// Write one message as a frame and flush.
+/// The largest flat f32 input a [`WireMsg::Request`] naming `model` and
+/// `method` can carry without its frame exceeding [`MAX_BODY`]. The
+/// router gates requests on this *before* routing, so an oversized input
+/// surfaces as a typed request-shape error instead of a dropped frame.
+pub fn max_request_floats(model: &str, method: &str) -> usize {
+    let overhead = 2 + 28 + model.len() + method.len();
+    MAX_BODY.saturating_sub(overhead) / 4
+}
+
+/// Write one message as a frame and flush. A message that would encode
+/// past [`MAX_BODY`] is refused here ([`std::io::ErrorKind::InvalidInput`]
+/// wrapping the typed [`WireError::Oversized`]) — nothing the peer must
+/// reject is ever put on the wire.
 pub fn send(w: &mut impl Write, msg: &WireMsg) -> std::io::Result<()> {
+    if let Err(e) = msg.validate() {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidInput, e));
+    }
     w.write_all(&msg.encode())?;
     w.flush()
 }
@@ -494,7 +547,7 @@ pub fn error_to_wire(id: u64, e: &ServeError) -> WireMsg {
 
 /// Reconstruct the typed [`ServeError`] from its wire encoding. The
 /// fleet-local codes map to typed sheds a client can count and retry:
-/// `NOT_READY`/`DRAINING` become
+/// `NOT_READY`/`DRAINING`/`FAILED` become
 /// [`Rejected::FleetUnavailable`]`{ replicas: 1 }` (one replica counting
 /// itself out). An unknown code degrades to [`ServeError::Execution`]
 /// with the raw code in the message — never a panic.
@@ -519,7 +572,7 @@ pub fn error_from_wire(code: u8, a: u64, b: u64, detail: &str) -> ServeError {
         code::FLEET_UNAVAILABLE => {
             ServeError::Rejected(Rejected::FleetUnavailable { replicas: a as usize })
         }
-        code::NOT_READY | code::DRAINING => {
+        code::NOT_READY | code::DRAINING | code::FAILED => {
             ServeError::Rejected(Rejected::FleetUnavailable { replicas: 1 })
         }
         other => ServeError::Execution(format!("unknown wire error code {other}: {detail}")),
@@ -689,6 +742,7 @@ mod tests {
         for c in [
             code::NOT_READY,
             code::DRAINING,
+            code::FAILED,
             code::QUEUE_FULL,
             code::UNHEALTHY,
             code::ENGINE_SHUTDOWN,
@@ -705,6 +759,56 @@ mod tests {
         ] {
             assert!(!retryable(c), "code {c} must be terminal");
         }
+    }
+
+    #[test]
+    fn body_len_matches_the_encoder_exactly() {
+        for msg in samples() {
+            assert_eq!(msg.body_len(), msg.encode().len() - 4, "for {msg:?}");
+            assert!(msg.validate().is_ok(), "samples are all within MAX_BODY");
+        }
+    }
+
+    #[test]
+    fn failed_code_maps_to_a_retryable_fleet_shed() {
+        let back = error_from_wire(code::FAILED, 0, 0, "replica failed: boot exploded");
+        assert_eq!(back, ServeError::Rejected(Rejected::FleetUnavailable { replicas: 1 }));
+        assert!(retryable(code::FAILED));
+    }
+
+    #[test]
+    fn oversized_requests_are_refused_at_the_sender_not_the_wire() {
+        let cap = max_request_floats("dcgan", "winograd");
+        // at the cap exactly the frame is legal…
+        let fits = WireMsg::Request {
+            id: 1,
+            model: "dcgan".into(),
+            method: "winograd".into(),
+            deadline_us: 0,
+            input: vec![0.0; cap],
+        };
+        assert!(fits.validate().is_ok());
+        assert!(fits.body_len() <= MAX_BODY);
+        // …one float past it, validation yields the typed verdict…
+        let over = WireMsg::Request {
+            id: 1,
+            model: "dcgan".into(),
+            method: "winograd".into(),
+            deadline_us: 0,
+            input: vec![0.0; cap + 1],
+        };
+        match over.validate() {
+            Err(WireError::Oversized { len, max }) => {
+                assert!(len > max);
+                assert_eq!(max, MAX_BODY);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // …and send() refuses to put the frame on the wire at all
+        let mut sink = Vec::new();
+        let err = send(&mut sink, &over).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        assert!(sink.is_empty(), "nothing written for a refused frame");
     }
 
     #[test]

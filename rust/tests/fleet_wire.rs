@@ -12,9 +12,11 @@
 //! from one client never taking the server down for the next.
 
 use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 use wingan::coordinator::ServeConfig;
 use wingan::engine::NativeConfig;
+use wingan::faultinject::FaultPlane;
 use wingan::fleet::wire::{self, RecvError, WireMsg};
 use wingan::fleet::{ReplicaConfig, ReplicaServer};
 use wingan::gan::zoo::Scale;
@@ -161,6 +163,57 @@ fn resent_request_frames_replay_the_fate_bitwise_identically() {
             "resend {round}: replayed fate must be bitwise identical"
         );
     }
+    server.shutdown();
+}
+
+/// "At most one execution per id" also holds when the duplicate arrives
+/// *while* the first execution is still in flight — the router's io
+/// timeout can resend an id a stalled replica is still working on. The
+/// duplicate must wait for the original's fate and replay it bitwise,
+/// never start a second execution.
+#[test]
+fn duplicate_id_in_flight_waits_and_shares_the_single_execution() {
+    let mut cfg = tiny_cfg();
+    // stall the first request 500 ms between admission and execution, so
+    // the duplicate provably lands while the original is in flight
+    cfg.fleet_faults = Some(Arc::new(
+        FaultPlane::parse("seed=1;replica_stall:delay=500ms*1@1").expect("fault plane"),
+    ));
+    let server = ReplicaServer::spawn("127.0.0.1:0", cfg).expect("binds");
+    assert!(server.wait_ready(Duration::from_secs(120)), "boot lands");
+    let addr = server.addr();
+    let input_len = first_route_input_len(addr);
+    let msg = request(42, Rng::new(13).normal_vec_f32(input_len));
+
+    let (first, second) = std::thread::scope(|s| {
+        let m = &msg;
+        let a = s.spawn(move || rpc(addr, m));
+        std::thread::sleep(Duration::from_millis(150));
+        let b = rpc(addr, m);
+        (a.join().expect("first sender"), b)
+    });
+    let first = first.expect("first reply");
+    let second = second.expect("duplicate reply");
+    assert!(matches!(first, WireMsg::Response { .. }), "got {first:?}");
+    assert_eq!(
+        second.encode(),
+        first.encode(),
+        "the waiting duplicate shares the original's fate, bitwise"
+    );
+
+    // the engine saw exactly one request: the duplicate never executed
+    let WireMsg::HealthReply { json: text } = rpc(addr, &WireMsg::HealthQuery).expect("health")
+    else {
+        panic!("non-health frame")
+    };
+    let doc = json::parse(&text).expect("parses");
+    let requests = doc
+        .get("coordinator")
+        .and_then(|c| c.get("metrics"))
+        .and_then(|m| m.get("requests"))
+        .and_then(Json::as_usize)
+        .expect("requests metric");
+    assert_eq!(requests, 1, "one id, one execution — however many times it is sent");
     server.shutdown();
 }
 
