@@ -506,6 +506,7 @@ fn main() {
                 input: Vec::new(),
                 enqueued: t,
                 deadline: None,
+                trace: 0,
             });
             while let Some(ready) = batcher.poll(t) {
                 out += ready.requests.len();
@@ -534,6 +535,7 @@ fn main() {
                         input: Vec::new(),
                         enqueued: t,
                         deadline: None,
+                        trace: 0,
                     },
                     t,
                 )

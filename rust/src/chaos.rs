@@ -323,6 +323,12 @@ pub fn run(opts: &ChaosOptions) -> Result<()> {
     rep.metric("bitwise_compared", compared as f64);
     rep.metric("bitwise_mismatches", 0.0); // ensured above
     rep.metric("lost_requests", 0.0); // conservation ensured per replay
+    // trace-derived stage breakdown (present only when the recorder was
+    // armed via --trace-sample; tracing never perturbs the bitwise
+    // assertions above — it only reads clocks)
+    for (key, value) in crate::telemetry::bench_stage_metrics() {
+        rep.metric(&key, value);
+    }
     rep.write(&opts.out).with_context(|| format!("writing {}", opts.out.display()))?;
     println!(
         "chaos: PASS — conservation held twice, {compared} outputs bitwise-identical, \
@@ -560,6 +566,9 @@ pub fn run_fleet(opts: &ChaosOptions) -> Result<()> {
     rep.metric("recovery_ms", recovery.as_secs_f64() * 1e3);
     rep.metric("replicas", 3.0);
     rep.metric("store_generation", generation as f64);
+    for (key, value) in crate::telemetry::bench_stage_metrics() {
+        rep.metric(&key, value);
+    }
     rep.write(&opts.out).with_context(|| format!("writing {}", opts.out.display()))?;
     println!(
         "chaos --fleet: PASS — zero lost, {compared} outputs bitwise-identical to the \

@@ -331,6 +331,7 @@ mod tests {
             input: vec![0.0; 4],
             enqueued: t,
             deadline: None,
+            trace: 0,
         }
     }
 

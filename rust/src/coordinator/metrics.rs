@@ -55,6 +55,27 @@ impl Histogram {
         self.max = self.max.max(s);
     }
 
+    /// Fold `other` into `self` bucket-by-bucket. Both histograms share
+    /// the same construction-time bucket bounds (1 µs, 10% growth), so the
+    /// merge is an element-wise add that preserves every percentile query
+    /// a scrape would have seen on the union of the two recorders — this
+    /// is how per-worker and per-replica stage histograms aggregate into
+    /// fleet rollups without shipping raw samples.
+    ///
+    /// The exact-tail property survives the merge: the top bucket's
+    /// percentile still reports the exact observed maximum (now the max of
+    /// both sides), not a bucket bound.
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.buckets.len(), other.buckets.len());
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -482,6 +503,67 @@ mod tests {
         assert!(rep.contains("shed_unhealthy=3"), "{rep}");
         assert!(rep.contains("abandoned_at_shutdown=1"), "{rep}");
         assert!(rep.contains("panics=2 quarantined=1 bisections=2"), "{rep}");
+    }
+
+    #[test]
+    fn merge_is_elementwise_and_preserves_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for ms in 1..=50u64 {
+            a.record(Duration::from_millis(ms));
+        }
+        for ms in 51..=100u64 {
+            b.record(Duration::from_millis(ms));
+        }
+        // reference: everything recorded into one histogram
+        let mut whole = Histogram::new();
+        for ms in 1..=100u64 {
+            whole.record(Duration::from_millis(ms));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.buckets, whole.buckets, "merge must be element-wise bucket addition");
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        // every percentile query agrees with the single-recorder reference
+        for p in [50.0, 95.0, 99.0, 99.9] {
+            assert_eq!(a.percentile(p), whole.percentile(p), "p{p} diverged under merge");
+        }
+    }
+
+    #[test]
+    fn merge_preserves_the_exact_tail() {
+        // the top-bucket percentile reports the exact observed max, not a
+        // bucket bound — that exactness must survive a merge in both
+        // directions (max on the left, max on the right).
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(Duration::from_millis(1));
+        b.record(Duration::from_secs(200)); // beyond the last bound -> overflow bucket
+        a.merge(&b);
+        assert_eq!(a.percentile(100.0), 200.0, "overflow-bucket tail must stay exact");
+        let mut c = Histogram::new();
+        let mut d = Histogram::new();
+        c.record(Duration::from_secs(300));
+        d.record(Duration::from_millis(1));
+        c.merge(&d);
+        assert_eq!(c.percentile(100.0), 300.0);
+        // min/max fold across the merge too
+        assert!((c.mean() - (300.0 + 0.001) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = Histogram::new();
+        for ms in [2u64, 4, 8] {
+            a.record(Duration::from_millis(ms));
+        }
+        let before = (a.count(), a.mean(), a.tail());
+        a.merge(&Histogram::new());
+        assert_eq!((a.count(), a.mean(), a.tail()), before);
+        let mut empty = Histogram::new();
+        empty.merge(&a);
+        assert_eq!(empty.count(), a.count());
+        assert_eq!(empty.tail(), a.tail());
     }
 
     #[test]

@@ -22,6 +22,10 @@ pub struct GenRequest {
     /// typed [`Rejected::DeadlineInfeasible`] response instead of engine
     /// time.
     pub deadline: Option<Instant>,
+    /// telemetry trace id ([`crate::telemetry::TraceId`]); `0` =
+    /// untraced. Minted at admission when sampling picks the request, or
+    /// carried in from the fleet wire when the router minted it.
+    pub trace: u64,
 }
 
 /// The serving result for one request.

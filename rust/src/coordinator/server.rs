@@ -73,6 +73,7 @@ use crate::coordinator::supervise::{
 use crate::engine::serve::{native_manifest, NativeConfig, NativeRuntime};
 use crate::faultinject::{FaultAction, FaultPlane, FaultSite};
 use crate::runtime::{Manifest, Runtime};
+use crate::telemetry::{self, Stage};
 use crate::util::lock_unpoisoned;
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap};
@@ -515,7 +516,29 @@ impl Coordinator {
         input: Vec<f32>,
         budget: Option<Duration>,
     ) -> Result<Receiver<Result<GenResponse, ServeError>>, ServeError> {
+        self.submit_traced(model, method, input, budget, 0)
+    }
+
+    /// [`Coordinator::submit_with_deadline`] with an explicit telemetry
+    /// trace id. `trace == 0` asks this process's flight-recorder sampler
+    /// ([`crate::telemetry::FlightRecorder::maybe_mint`]) whether the
+    /// admission should be traced; a nonzero id (minted by the fleet
+    /// router, carried in over the wire) is adopted as-is so the
+    /// cross-process trace stays one tree. The admission verdict —
+    /// admitted or the typed shed — is recorded as a
+    /// [`Stage::Admission`](crate::telemetry::Stage) span.
+    pub fn submit_traced(
+        &self,
+        model: &str,
+        method: &str,
+        input: Vec<f32>,
+        budget: Option<Duration>,
+        trace: u64,
+    ) -> Result<Receiver<Result<GenResponse, ServeError>>, ServeError> {
+        let t_sub = Instant::now();
         self.router.validate(model, method, input.len())?;
+        let rec = telemetry::recorder();
+        let trace = if trace != 0 { trace } else { rec.maybe_mint() };
         let key = (model.to_string(), method.to_string());
         // a route with an open breaker sheds immediately: queuing on an
         // engine the supervisor refuses to restart would just hang
@@ -528,12 +551,14 @@ impl Coordinator {
                 if open {
                     let rej = Rejected::Unhealthy { restarts };
                     count_shed(&self.metrics, &key, &rej);
+                    rec.stamp(trace, Stage::Admission, t_sub, 0, shed_code(&rej), model);
                     return Err(ServeError::Rejected(rej));
                 }
             }
         }
         if let Err(rej) = self.gate.try_acquire(&key) {
             count_shed(&self.metrics, &key, &rej);
+            rec.stamp(trace, Stage::Admission, t_sub, 0, shed_code(&rej), model);
             return Err(ServeError::Rejected(rej));
         }
         let id: RequestId = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -546,6 +571,7 @@ impl Coordinator {
             input,
             enqueued: now,
             deadline: budget.and_then(|b| now.checked_add(b)),
+            trace,
         };
         {
             let mut m = lock_unpoisoned(&self.metrics);
@@ -565,6 +591,15 @@ impl Coordinator {
         if !sent {
             self.gate.release(&key, 1);
             return Err(ServeError::EngineShutdown);
+        }
+        if trace != 0 {
+            let depth = self
+                .gate
+                .routes
+                .get(&key)
+                .map(|g| g.depth.load(Ordering::Acquire) as u64)
+                .unwrap_or(0);
+            rec.stamp(trace, Stage::Admission, t_sub, depth, 0, model);
         }
         Ok(reply_rx)
     }
@@ -833,8 +868,26 @@ impl<E: ExecBackend> BatchCtx<'_, E> {
             input[i * sample_in..(i + 1) * sample_in].copy_from_slice(&r.input);
         }
 
+        // one representative trace carries the batch-level spans (and the
+        // thread-local trace context for the engine's per-layer stages);
+        // per-request Queue/Dispatch spans attach to each member's own id
+        let rep_trace = requests.iter().map(|r| r.trace).find(|&t| t != 0).unwrap_or(0);
+        if rep_trace != 0 {
+            let now = Instant::now();
+            let oldest = requests.iter().map(|r| r.enqueued).min().unwrap_or(now);
+            telemetry::record_span(
+                rep_trace,
+                Stage::BatchAssemble,
+                oldest,
+                now.duration_since(oldest),
+                requests.len() as u64,
+                bucket as u64,
+                &self.key.0,
+            );
+        }
+
         let t0 = Instant::now();
-        let result = self.exec_contained(artifact, &input);
+        let result = telemetry::with_trace(rep_trace, || self.exec_contained(artifact, &input));
         let exec_time = t0.elapsed();
 
         match result {
@@ -855,6 +908,16 @@ impl<E: ExecBackend> BatchCtx<'_, E> {
                     let rm = m.route_mut(&route_key);
                     rm.completed += 1;
                     rm.e2e.record(e2e);
+                    if r.trace != 0 {
+                        telemetry::record_span(
+                            r.trace, Stage::Queue, r.enqueued, queue_time,
+                            bucket as u64, 0, &route_key,
+                        );
+                        telemetry::record_span(
+                            r.trace, Stage::Dispatch, t0, exec_time,
+                            bucket as u64, 0, &route_key,
+                        );
+                    }
                     if let Some(reply) = replies.remove(&r.id) {
                         let _ = reply.send(Ok(GenResponse {
                             id: r.id,
@@ -943,6 +1006,16 @@ impl<E: ExecBackend> BatchCtx<'_, E> {
             m.requests_quarantined += n;
             m.route_mut(&route_key).requests_quarantined += n;
             drop(m);
+            // a quarantined crash is exactly what the flight recorder is
+            // for: leave a Dispatch span (b = 1) naming the panic
+            for r in &requests {
+                if r.trace != 0 {
+                    telemetry::record_span(
+                        r.trace, Stage::Dispatch, Instant::now(), Duration::ZERO,
+                        0, 1, &format!("crashed: {msg}"),
+                    );
+                }
+            }
             fail_requests(&requests, replies, ServeError::Crashed(msg));
             return Duration::ZERO;
         }
@@ -1140,10 +1213,27 @@ fn shed_requests(
     replies: &mut HashMap<RequestId, Reply>,
 ) {
     for (req, rej) in shed {
+        if req.trace != 0 {
+            telemetry::record_span(
+                req.trace, Stage::Queue, req.enqueued, req.enqueued.elapsed(),
+                0, shed_code(&rej), &format!("shed: {rej}"),
+            );
+        }
         count_shed(metrics, key, &rej);
         if let Some(reply) = replies.remove(&req.id) {
             let _ = reply.send(Err(ServeError::Rejected(rej)));
         }
+    }
+}
+
+/// Compact shed-verdict code for the `b` detail of telemetry spans
+/// (`0` = admitted/served; see [`Stage::Admission`]).
+fn shed_code(rej: &Rejected) -> u64 {
+    match rej {
+        Rejected::QueueFull { .. } => 1,
+        Rejected::DeadlineInfeasible { .. } => 2,
+        Rejected::Unhealthy { .. } => 3,
+        Rejected::FleetUnavailable { .. } => 4,
     }
 }
 

@@ -42,6 +42,7 @@ use crate::engine::scratch::Scratch;
 use crate::gan::workload::Method;
 use crate::gan::zoo::Kind;
 use crate::tdc;
+use crate::telemetry::{self, Stage, TraceId};
 use crate::util::elem::{Elem, Precision};
 use crate::util::tensor::Tensor3;
 use crate::winograd::kernel::multiply_batch;
@@ -164,8 +165,14 @@ impl<E: Elem> Engine<E> {
         let mut cur: Option<Tensor3<E>> = None;
         let mut per_layer = Vec::with_capacity(self.plan.layers.len());
         let mut total = Events::default();
-        for lp in &self.plan.layers {
-            let (y, ev) = self.run_layer(lp, cur.as_ref().unwrap_or(x), chunks, &mut scratch);
+        // the trace id rides the thread-local set by the coordinator's
+        // dispatch path (telemetry::with_trace); 0 = untraced, and every
+        // timing site below is guarded on it, so the untraced hot path
+        // pays a branch per layer, never a clock read
+        let trace = telemetry::current_trace();
+        for (li, lp) in self.plan.layers.iter().enumerate() {
+            let (y, ev) =
+                self.run_layer(lp, cur.as_ref().unwrap_or(x), chunks, &mut scratch, trace, li);
             total.merge(&ev);
             per_layer.push(ev);
             cur = Some(y);
@@ -201,15 +208,21 @@ impl<E: Elem> Engine<E> {
             BatchSchedule::StripeLevel => xs.iter().map(|x| self.run(x)).collect(),
             // one chunk per sample normally; honoring the full (s, e) range
             // keeps this correct under the pool's reentrancy fallback, which
-            // may hand the whole batch to one inline chunk
-            BatchSchedule::SampleLevel => self
-                .pool
-                .run_chunked(xs.len(), xs.len(), |s, e| {
-                    xs[s..e].iter().map(|x| self.run_with_chunks(x, 1)).collect::<Vec<_>>()
-                })
-                .into_iter()
-                .flatten()
-                .collect(),
+            // may hand the whole batch to one inline chunk. The dispatching
+            // thread's trace context is re-established inside each pool
+            // task so per-layer spans still attach to the request's trace.
+            BatchSchedule::SampleLevel => {
+                let trace = telemetry::current_trace();
+                self.pool
+                    .run_chunked(xs.len(), xs.len(), |s, e| {
+                        telemetry::with_trace(trace, || {
+                            xs[s..e].iter().map(|x| self.run_with_chunks(x, 1)).collect::<Vec<_>>()
+                        })
+                    })
+                    .into_iter()
+                    .flatten()
+                    .collect()
+            }
         }
     }
 
@@ -221,20 +234,36 @@ impl<E: Elem> Engine<E> {
     /// bitwise identical to activating the assembled output —
     /// worker-count/schedule invariance is untouched, and
     /// [`crate::engine::reference_forward`] applies the same function.
+    /// The Winograd datapath reports the four per-layer telemetry stages
+    /// (input transform / GEMM / inverse transform / activation) itself;
+    /// the TDC and conv datapaths get a single whole-layer
+    /// [`Stage::LayerExec`] span. `trace == 0` (the untraced fast path)
+    /// skips every clock read.
     fn run_layer(
         &self,
         lp: &LayerPlan<E>,
         x: &Tensor3<E>,
         chunks: usize,
         scratch: &mut Scratch<E>,
+        trace: TraceId,
+        li: usize,
     ) -> (Tensor3<E>, Events) {
-        match lp.layer.kind {
+        let mark = (trace != 0).then(Instant::now);
+        let out = match lp.layer.kind {
             Kind::Conv => self.run_conv(lp, x, chunks, scratch),
             Kind::Deconv => match lp.method {
-                Method::Winograd => self.run_deconv_winograd(lp, x, chunks, scratch),
+                Method::Winograd => {
+                    return self.run_deconv_winograd(lp, x, chunks, scratch, trace, li)
+                }
                 _ => self.run_deconv_tdc(lp, x, chunks, scratch),
             },
+        };
+        if let Some(t) = mark {
+            telemetry::record_span(
+                trace, Stage::LayerExec, t, t.elapsed(), li as u64, 0, &self.plan.model,
+            );
         }
+        out
     }
 
     /// TDC datapath: S² phase correlations over phase-padded inputs.
@@ -328,11 +357,20 @@ impl<E: Elem> Engine<E> {
         x: &Tensor3<E>,
         n_chunks: usize,
         scratch: &mut Scratch<E>,
+        trace: TraceId,
+        li: usize,
     ) -> (Tensor3<E>, Events) {
         let l = &lp.layer;
         let s = l.s;
         let mut y = Tensor3::zeros(l.c_out, s * x.h, s * x.w);
         let mut ev = Events::default();
+        // per-stage µs accumulated across every stripe task of every phase
+        // (gather / GEMM / inverse / activation); clocks only tick for a
+        // traced request — the timing never touches the arithmetic, so
+        // outputs and Events stay bit-identical tracing on or off
+        let trc = trace != 0;
+        let t_layer = trc.then(Instant::now);
+        let mut stage_us = [0u64; 4];
 
         // blocking geometry precompiled on the plan (matches the runtime
         // input by the engine's shape contract)
@@ -365,10 +403,12 @@ impl<E: Elem> Engine<E> {
                 |scr: &mut Scratch<E>, ty_s, ty_e| {
                     let mut part = Tensor3::zeros(l.c_out, M * (ty_e - ty_s), geo.wo_t);
                     let mut pev = Events::default();
+                    let mut us = [0u64; 4];
                     let c_in = xp.c;
                     scr.ensure_winograd(c_in, l.c_out, tiles_w);
                     for ty in ty_s..ty_e {
                         pev.stripes += 1;
+                        let mut mark = trc.then(Instant::now);
                         // pre-PE gather: window select + B^T Z B + n² x N
                         // reorder for every tile of the stripe, laid out
                         // position-major [pos][c_in][tiles_w]
@@ -390,12 +430,14 @@ impl<E: Elem> Engine<E> {
                             }
                             pev.linebuf_reads += (N * N * c_in) as u64;
                         }
+                        mark = lap(mark, &mut us[0]);
                         // com-PE: one live-rows-only blocked GEMM for the
                         // whole stripe, dispatched to the plan's compiled
                         // micro-kernel (scalar or SIMD, with runtime
                         // zero-skip) — filter block read once per stripe
                         pev.mults +=
                             multiply_batch(geo.kernel, rf, &scr.v, tiles_w, &mut scr.m) as u64;
+                        mark = lap(mark, &mut us[1]);
                         // post-PE: inverse transform into the local stripe
                         for co in 0..l.c_out {
                             for tx in 0..tiles_w {
@@ -413,16 +455,19 @@ impl<E: Elem> Engine<E> {
                                 }
                             }
                         }
+                        lap(mark, &mut us[2]);
                     }
                     // hand-off activation on the task-local stripe (see
                     // run_layer); tile-padding rows beyond x.h are
                     // activated too but discarded by the merge below
+                    let mark = trc.then(Instant::now);
                     l.act.apply(&mut part);
-                    (part, pev)
+                    lap(mark, &mut us[3]);
+                    (part, pev, us)
                 },
             );
             let mut ty_base = 0;
-            for (part, pev) in chunks {
+            for (part, pev, us) in chunks {
                 let rows = part.h / M;
                 for co in 0..l.c_out {
                     for r in 0..part.h {
@@ -437,10 +482,32 @@ impl<E: Elem> Engine<E> {
                 }
                 ty_base += rows;
                 ev.merge(&pev);
+                for (acc, v) in stage_us.iter_mut().zip(us) {
+                    *acc += v;
+                }
             }
             // line-buffer ingest (matches run_winograd_deconv): n prologue
             // rows + m rows per stripe of the phase-padded map
             ev.linebuf_writes += ((geo.ho_t - M + N) * xp.c * xp.w) as u64;
+        }
+        if let Some(t0) = t_layer {
+            const WINO_STAGES: [Stage; 4] = [
+                Stage::InputTransform,
+                Stage::WinogradGemm,
+                Stage::InverseTransform,
+                Stage::Activation,
+            ];
+            for (st, &us) in WINO_STAGES.iter().zip(&stage_us) {
+                telemetry::record_span(
+                    trace,
+                    *st,
+                    t0,
+                    Duration::from_micros(us),
+                    li as u64,
+                    0,
+                    &self.plan.model,
+                );
+            }
         }
         (y, ev)
     }
@@ -507,6 +574,16 @@ impl<E: Elem> Engine<E> {
         ev.linebuf_writes += ((s * (ho - 1) + k).min(xp.h) * xp.c * xp.w) as u64;
         (y, ev)
     }
+}
+
+/// Advance a conditional stage clock: add the time since `mark` to
+/// `acc_us` and return a fresh mark. `None` stays `None` — the untraced
+/// path threads it through without ever reading the clock.
+fn lap(mark: Option<Instant>, acc_us: &mut u64) -> Option<Instant> {
+    mark.map(|t| {
+        *acc_us += t.elapsed().as_micros() as u64;
+        Instant::now()
+    })
 }
 
 /// A compiled engine at a runtime-chosen [`Precision`] — the handle the

@@ -50,6 +50,7 @@ use crate::coordinator::{Coordinator, ServeConfig};
 use crate::engine::NativeConfig;
 use crate::faultinject::{FaultAction, FaultPlane, FaultSite};
 use crate::fleet::wire::{self, RecvError, WireMsg};
+use crate::telemetry;
 use crate::util::json::{self, Json};
 use crate::util::lock_unpoisoned;
 use anyhow::{anyhow, Context, Result};
@@ -266,6 +267,7 @@ fn handle_request(
     method: &str,
     deadline_us: u64,
     input: Vec<f32>,
+    trace: u64,
 ) -> Verdict {
     let budget = (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
     // generous wait cap: the coordinator sheds or answers long before
@@ -362,7 +364,9 @@ fn handle_request(
             }
         }
     };
-    let outcome = match coord.submit_with_deadline(model, method, input, budget) {
+    // the wire-carried trace id (router-minted) keeps the cross-process
+    // trace one tree; 0 lets this replica's own sampler decide
+    let outcome = match coord.submit_traced(model, method, input, budget, trace) {
         Ok(rx) => match rx.recv_timeout(wait) {
             Ok(fate) => fate,
             Err(_) => Err(crate::coordinator::ServeError::Execution(
@@ -395,6 +399,44 @@ fn handle_request(
         lock_unpoisoned(&shared.fates).put(id, reply.clone());
     }
     Verdict::Reply(reply)
+}
+
+/// The replica's scrapeable metrics document: readiness, the coordinator
+/// metrics snapshot, and the flight recorder's per-stage latency rollup.
+/// The `MetricsQuery` wire verb serves this as stable-key JSON or as
+/// Prometheus text exposition ([`crate::telemetry::export`]), and
+/// `wingan replica --stats-every` prints it periodically.
+fn metrics_doc(shared: &Shared) -> Json {
+    let (ready, generation, coord) = {
+        let phase = lock_unpoisoned(&shared.phase);
+        match &*phase {
+            Phase::Ready { coord, generation } => (true, *generation, Some(Arc::clone(coord))),
+            Phase::Draining { coord, generation } => (false, *generation, Some(Arc::clone(coord))),
+            _ => (false, 0, None),
+        }
+    };
+    let rec = telemetry::recorder();
+    json::obj(vec![
+        ("role", json::s("replica")),
+        ("node", json::s(&rec.node())),
+        ("ready", Json::Bool(ready)),
+        ("generation", json::num(generation as f64)),
+        ("in_flight", json::num(shared.in_flight.load(Ordering::Acquire) as f64)),
+        ("metrics", coord.map(|c| c.metrics().to_json()).unwrap_or(Json::Null)),
+        ("stages", rec.stages_json()),
+    ])
+}
+
+/// Serve one `MetricsQuery`: an unknown format byte degrades to JSON so
+/// newer scrapers stay compatible with older replicas and vice versa.
+fn metrics_reply(shared: &Shared, format: u8) -> WireMsg {
+    let doc = metrics_doc(shared);
+    let body = if format == wire::format::PROMETHEUS {
+        telemetry::export::prometheus(&doc)
+    } else {
+        json::to_string_pretty(&doc)
+    };
+    WireMsg::MetricsReply { body }
 }
 
 /// The replica's health/readiness document (see the module docs).
@@ -548,11 +590,17 @@ fn serve_conn(shared: &Arc<Shared>, mut stream: TcpStream, conn_id: u64) {
         // connection the same way: no reply a parser could misread
         let Ok(msg) = wire::recv(&mut stream) else { break };
         let verdict = match msg {
-            WireMsg::Request { id, model, method, deadline_us, input } => {
-                handle_request(shared, id, &model, &method, deadline_us, input)
+            WireMsg::Request { id, model, method, deadline_us, input, trace } => {
+                handle_request(shared, id, &model, &method, deadline_us, input, trace)
             }
             WireMsg::HealthQuery => {
                 Verdict::Reply(WireMsg::HealthReply { json: health_json(shared) })
+            }
+            WireMsg::MetricsQuery { format } => Verdict::Reply(metrics_reply(shared, format)),
+            WireMsg::TraceQuery { trace } => {
+                let filter = (trace != 0).then_some(trace);
+                let doc = telemetry::recorder().trace_json(filter, wire::TRACE_DUMP_LIMIT);
+                Verdict::Reply(WireMsg::TraceReply { json: json::to_string_pretty(&doc) })
             }
             WireMsg::Drain => {
                 let _ctl = lock_unpoisoned(&shared.control);
@@ -580,6 +628,8 @@ fn serve_conn(shared: &Arc<Shared>, mut stream: TcpStream, conn_id: u64) {
             WireMsg::Response { .. }
             | WireMsg::Error { .. }
             | WireMsg::HealthReply { .. }
+            | WireMsg::MetricsReply { .. }
+            | WireMsg::TraceReply { .. }
             | WireMsg::Ok => Verdict::Drop,
         };
         match verdict {
@@ -697,6 +747,13 @@ impl ReplicaServer {
             thread::sleep(Duration::from_millis(10));
         }
         false
+    }
+
+    /// The replica's scrapeable metrics document — the same content the
+    /// `MetricsQuery` wire verb serves (`wingan replica --stats-every`
+    /// prints this periodically).
+    pub fn metrics_json(&self) -> Json {
+        metrics_doc(&self.shared)
     }
 
     /// If warm-boot failed, the error.

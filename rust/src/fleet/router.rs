@@ -32,6 +32,7 @@
 
 use crate::coordinator::{GenResponse, Rejected, ServeError};
 use crate::fleet::wire::{self, RecvError, WireMsg};
+use crate::telemetry::{self, Stage};
 use crate::util::json::{self, Json};
 use crate::util::lock_unpoisoned;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -481,6 +482,10 @@ impl Inner {
         lock_unpoisoned(&self.slots).len()
     }
 
+    fn replica_socks(&self) -> Vec<(String, SocketAddr)> {
+        lock_unpoisoned(&self.slots).iter().map(|s| (s.addr.clone(), s.sock)).collect()
+    }
+
     fn note_outcome(&self, addr: &str, latency: Option<Duration>, transport_failure: bool) {
         let now = Instant::now();
         let mut slots = lock_unpoisoned(&self.slots);
@@ -508,8 +513,12 @@ impl Inner {
         method: &str,
         input: Vec<f32>,
         budget: Option<Duration>,
+        trace: u64,
     ) -> Result<GenResponse, ServeError> {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        // adopt the client-supplied trace id, or mint one here if the
+        // router is the admission point and this request was sampled
+        let trace = if trace != 0 { trace } else { telemetry::recorder().maybe_mint() };
         // request-shape gate: an input too large for one wire frame can
         // never be served — verdict here, typed, instead of every replica
         // dropping the oversized frame and eating a breaker failure
@@ -553,13 +562,26 @@ impl Inner {
                 method: method.to_string(),
                 deadline_us: remaining.map_or(0, |r| r.as_micros() as u64),
                 input: input.clone(),
+                trace,
             };
             in_flight.fetch_add(1, Ordering::AcqRel);
             let sent = Instant::now();
             let reply = call(sock, &msg, self.cfg.connect_timeout, io_timeout);
             in_flight.fetch_sub(1, Ordering::AcqRel);
+            // attempt-level spans: one Wire span per round-trip and one
+            // Attempt span carrying the verdict code (0 = ok, typed wire
+            // codes as-is, 100 = transport failure, 101 = protocol
+            // violation) so a trace shows every replica the request hit
+            let span = |verdict: u64| {
+                if trace != 0 {
+                    let rtt = sent.elapsed();
+                    telemetry::record_span(trace, Stage::Wire, sent, rtt, (attempt + 1) as u64, 0, &addr);
+                    telemetry::record_span(trace, Stage::Attempt, sent, rtt, (attempt + 1) as u64, verdict, &addr);
+                }
+            };
             match reply {
                 Ok(WireMsg::Response { id: _, batch_size, queue_us, exec_us, output }) => {
+                    span(0);
                     self.note_outcome(&addr, Some(sent.elapsed()), false);
                     self.stats.completed.fetch_add(1, Ordering::Relaxed);
                     return Ok(GenResponse {
@@ -571,6 +593,7 @@ impl Inner {
                     });
                 }
                 Ok(WireMsg::Error { code, a, b, detail, .. }) => {
+                    span(code as u64);
                     // a typed verdict is a *transport success*: the
                     // replica is alive and talking
                     self.note_outcome(&addr, None, false);
@@ -595,10 +618,12 @@ impl Inner {
                     last_shed = Some(err);
                 }
                 Ok(_) => {
+                    span(101);
                     // protocol violation; treat like a transport failure
                     self.note_outcome(&addr, None, true);
                 }
                 Err(_) => {
+                    span(100);
                     self.note_outcome(&addr, None, true);
                 }
             }
@@ -820,7 +845,73 @@ impl FleetRouter {
         input: Vec<f32>,
         budget: Option<Duration>,
     ) -> Result<GenResponse, ServeError> {
-        self.inner.submit(model, method, input, budget)
+        self.inner.submit(model, method, input, budget, 0)
+    }
+
+    /// [`FleetRouter::submit`] with an explicit trace id. `trace == 0`
+    /// means "untraced so far": the router's flight recorder may still
+    /// sample the request and mint one. A nonzero id (e.g. carried in on
+    /// the wire from a client) is adopted as-is, so one id names the
+    /// request across every process it touches.
+    pub fn submit_traced(
+        &self,
+        model: &str,
+        method: &str,
+        input: Vec<f32>,
+        budget: Option<Duration>,
+        trace: u64,
+    ) -> Result<GenResponse, ServeError> {
+        self.inner.submit(model, method, input, budget, trace)
+    }
+
+    /// Router telemetry document (stable keys: `role`, `node`, `fleet`,
+    /// `stages`): the fleet status snapshot plus the router-side stage
+    /// histograms from the flight recorder. This is what the wire
+    /// `MetricsQuery` verb serves.
+    pub fn metrics_json(&self) -> Json {
+        let rec = telemetry::recorder();
+        json::obj(vec![
+            ("role", json::s("router")),
+            ("node", json::s(&rec.node())),
+            ("fleet", self.status().to_json()),
+            ("stages", rec.stages_json()),
+        ])
+    }
+
+    /// Cross-process trace document: the router's own recent spans merged
+    /// with every replica's (each replica is asked over the wire with
+    /// [`WireMsg::TraceQuery`]; unreachable replicas are skipped). With
+    /// `trace == 0` this dumps recent spans from everywhere; nonzero
+    /// filters to one request's end-to-end tree.
+    pub fn trace_json(&self, trace: u64) -> Json {
+        let rec = telemetry::recorder();
+        let filter = (trace != 0).then_some(trace);
+        let local = rec.trace_json(filter, wire::TRACE_DUMP_LIMIT);
+        let mut spans: Vec<Json> = match local.get("spans").and_then(Json::as_arr) {
+            Some(arr) => arr.to_vec(),
+            None => Vec::new(),
+        };
+        for (_, sock) in self.inner.replica_socks() {
+            let reply = call(
+                sock,
+                &WireMsg::TraceQuery { trace },
+                self.inner.cfg.connect_timeout,
+                Duration::from_secs(2),
+            );
+            if let Ok(WireMsg::TraceReply { json: text }) = reply {
+                if let Ok(doc) = json::parse(&text) {
+                    if let Some(arr) = doc.get("spans").and_then(Json::as_arr) {
+                        spans.extend(arr.iter().cloned());
+                    }
+                }
+            }
+        }
+        json::obj(vec![
+            ("node", json::s(&rec.node())),
+            ("trace", local.get("trace").cloned().unwrap_or(Json::Null)),
+            ("sampled", local.get("sampled").cloned().unwrap_or(Json::Null)),
+            ("spans", Json::Arr(spans)),
+        ])
     }
 
     /// Current fleet snapshot.
@@ -957,9 +1048,9 @@ fn serve_client(router: &FleetRouter, stop: &AtomicBool, mut stream: TcpStream) 
         }
         let Ok(msg) = wire::recv(&mut stream) else { break };
         let reply = match msg {
-            WireMsg::Request { id, model, method, deadline_us, input } => {
+            WireMsg::Request { id, model, method, deadline_us, input, trace } => {
                 let budget = (deadline_us > 0).then(|| Duration::from_micros(deadline_us));
-                match router.submit(&model, &method, input, budget) {
+                match router.submit_traced(&model, &method, input, budget, trace) {
                     Ok(resp) => WireMsg::Response {
                         id,
                         batch_size: resp.batch_size as u32,
@@ -973,7 +1064,20 @@ fn serve_client(router: &FleetRouter, stop: &AtomicBool, mut stream: TcpStream) 
             WireMsg::HealthQuery => WireMsg::HealthReply {
                 json: json::to_string_pretty(&router.status().to_json()),
             },
-            // the router front-end takes requests and probes, nothing else
+            WireMsg::MetricsQuery { format } => {
+                let doc = router.metrics_json();
+                let body = if format == wire::format::PROMETHEUS {
+                    telemetry::export::prometheus(&doc)
+                } else {
+                    json::to_string_pretty(&doc)
+                };
+                WireMsg::MetricsReply { body }
+            }
+            WireMsg::TraceQuery { trace } => WireMsg::TraceReply {
+                json: json::to_string_pretty(&router.trace_json(trace)),
+            },
+            // the router front-end takes requests, probes, and telemetry
+            // scrapes, nothing else
             _ => break,
         };
         if wire::send(&mut stream, &reply).is_err() {

@@ -21,6 +21,22 @@
 //! | 7 | [`WireMsg::Reload`] | router → replica |
 //! | 8 | [`WireMsg::Shutdown`] | operator → replica |
 //! | 9 | [`WireMsg::Ok`] | replica → router |
+//! | 10 | [`WireMsg::MetricsQuery`] | scraper → replica/router |
+//! | 11 | [`WireMsg::MetricsReply`] | replica/router → scraper |
+//! | 12 | [`WireMsg::TraceQuery`] | scraper → replica/router |
+//! | 13 | [`WireMsg::TraceReply`] | replica/router → scraper |
+//!
+//! # Trace propagation (version-tolerant)
+//!
+//! A sampled request carries its [`crate::telemetry::TraceId`] as an
+//! **optional trailing field** on [`WireMsg::Request`]: untraced requests
+//! (`trace == 0`) encode byte-identically to the pre-telemetry frame
+//! format, and the decoder accepts both forms — a frame with no trailing
+//! field decodes with `trace = 0`, a frame with exactly 8 trailing bytes
+//! decodes them as the trace id. Old peers therefore interoperate with
+//! new ones as long as tracing is off, and a new decoder never rejects an
+//! old frame. (Anything other than 0 or 8 leftover bytes is still the
+//! usual typed [`WireError::Trailing`] verdict.)
 //!
 //! # Retry idempotency
 //!
@@ -56,6 +72,22 @@ const TAG_DRAIN: u8 = 6;
 const TAG_RELOAD: u8 = 7;
 const TAG_SHUTDOWN: u8 = 8;
 const TAG_OK: u8 = 9;
+const TAG_METRICS_QUERY: u8 = 10;
+const TAG_METRICS_REPLY: u8 = 11;
+const TAG_TRACE_QUERY: u8 = 12;
+const TAG_TRACE_REPLY: u8 = 13;
+
+/// Scrape formats a [`WireMsg::MetricsQuery`] can ask for.
+pub mod format {
+    /// stable-key JSON (the default)
+    pub const JSON: u8 = 0;
+    /// Prometheus text exposition ([`crate::telemetry::export::prometheus`])
+    pub const PROMETHEUS: u8 = 1;
+}
+
+/// Span cap for one [`WireMsg::TraceReply`] document — keeps a full
+/// flight-recorder dump comfortably under [`MAX_BODY`].
+pub const TRACE_DUMP_LIMIT: usize = 4096;
 
 /// Typed wire error codes (the `code` byte of [`WireMsg::Error`]).
 ///
@@ -201,6 +233,9 @@ pub enum WireMsg {
         deadline_us: u64,
         /// flat f32 input tensor
         input: Vec<f32>,
+        /// telemetry trace id (0 = untraced; encoded as an optional
+        /// trailing field, see the module docs on trace propagation)
+        trace: u64,
     },
     /// a completed request
     Response {
@@ -246,6 +281,31 @@ pub enum WireMsg {
     Shutdown,
     /// generic acknowledgement
     Ok,
+    /// ask for the telemetry document (metrics + stage histograms) in
+    /// the given scrape format ([`format`])
+    MetricsQuery {
+        /// [`format::JSON`] or [`format::PROMETHEUS`]; unknown values
+        /// degrade to JSON at the serving side, never an error
+        format: u8,
+    },
+    /// the telemetry document in the requested format
+    MetricsReply {
+        /// the document text (JSON or Prometheus exposition)
+        body: String,
+    },
+    /// ask for recorded spans: one trace's (`trace != 0`) or a dump of
+    /// the recent flight-recorder contents (`trace == 0`). A router
+    /// answering this fans the query out to its replicas and merges the
+    /// spans into one cross-process document.
+    TraceQuery {
+        /// trace id to fetch, or 0 for "recent spans"
+        trace: u64,
+    },
+    /// the trace document as one JSON string
+    TraceReply {
+        /// machine-readable trace JSON (`{node, spans: [...]}`)
+        json: String,
+    },
 }
 
 // ---------------------------------------------------------------- encode
@@ -275,12 +335,17 @@ impl WireMsg {
     /// encodes to, computed without encoding it.
     pub fn body_len(&self) -> usize {
         let payload = match self {
-            WireMsg::Request { model, method, input, .. } => {
-                28 + model.len() + method.len() + input.len().saturating_mul(4)
+            WireMsg::Request { model, method, input, trace, .. } => {
+                let trace_field = if *trace != 0 { 8 } else { 0 };
+                28 + model.len() + method.len() + input.len().saturating_mul(4) + trace_field
             }
             WireMsg::Response { output, .. } => 32 + output.len().saturating_mul(4),
             WireMsg::Error { detail, .. } => 29 + detail.len(),
             WireMsg::HealthReply { json } => 4 + json.len(),
+            WireMsg::MetricsQuery { .. } => 1,
+            WireMsg::MetricsReply { body } => 4 + body.len(),
+            WireMsg::TraceQuery { .. } => 8,
+            WireMsg::TraceReply { json } => 4 + json.len(),
             WireMsg::HealthQuery
             | WireMsg::Drain
             | WireMsg::Reload
@@ -308,13 +373,19 @@ impl WireMsg {
         let mut body = Vec::with_capacity(64);
         body.push(WIRE_VERSION);
         match self {
-            WireMsg::Request { id, model, method, deadline_us, input } => {
+            WireMsg::Request { id, model, method, deadline_us, input, trace } => {
                 body.push(TAG_REQUEST);
                 put_u64(&mut body, *id);
                 put_str(&mut body, model);
                 put_str(&mut body, method);
                 put_u64(&mut body, *deadline_us);
                 put_f32s(&mut body, input);
+                // optional trailing trace field: omitted entirely for
+                // untraced requests so their frames stay byte-identical
+                // to the pre-telemetry encoding
+                if *trace != 0 {
+                    put_u64(&mut body, *trace);
+                }
             }
             WireMsg::Response { id, batch_size, queue_us, exec_us, output } => {
                 body.push(TAG_RESPONSE);
@@ -341,6 +412,22 @@ impl WireMsg {
             WireMsg::Reload => body.push(TAG_RELOAD),
             WireMsg::Shutdown => body.push(TAG_SHUTDOWN),
             WireMsg::Ok => body.push(TAG_OK),
+            WireMsg::MetricsQuery { format } => {
+                body.push(TAG_METRICS_QUERY);
+                body.push(*format);
+            }
+            WireMsg::MetricsReply { body: text } => {
+                body.push(TAG_METRICS_REPLY);
+                put_str(&mut body, text);
+            }
+            WireMsg::TraceQuery { trace } => {
+                body.push(TAG_TRACE_QUERY);
+                put_u64(&mut body, *trace);
+            }
+            WireMsg::TraceReply { json } => {
+                body.push(TAG_TRACE_REPLY);
+                put_str(&mut body, json);
+            }
         }
         let mut frame = Vec::with_capacity(4 + body.len());
         put_u32(&mut frame, body.len() as u32);
@@ -403,6 +490,10 @@ impl<'a> Cur<'a> {
         Ok(out)
     }
 
+    fn remaining(&self) -> usize {
+        self.b.len()
+    }
+
     fn done(&self) -> Result<(), WireError> {
         if self.b.is_empty() {
             Ok(())
@@ -435,13 +526,19 @@ impl WireMsg {
         }
         let tag = c.u8()?;
         let msg = match tag {
-            TAG_REQUEST => WireMsg::Request {
-                id: c.u64()?,
-                model: c.string()?,
-                method: c.string()?,
-                deadline_us: c.u64()?,
-                input: c.f32s()?,
-            },
+            TAG_REQUEST => {
+                let id = c.u64()?;
+                let model = c.string()?;
+                let method = c.string()?;
+                let deadline_us = c.u64()?;
+                let input = c.f32s()?;
+                // version tolerance: the trailing trace field is present
+                // iff exactly 8 bytes remain; an old-format frame (0
+                // bytes left) decodes as untraced, anything else falls
+                // through to the usual Trailing verdict in done()
+                let trace = if c.remaining() == 8 { c.u64()? } else { 0 };
+                WireMsg::Request { id, model, method, deadline_us, input, trace }
+            }
             TAG_RESPONSE => WireMsg::Response {
                 id: c.u64()?,
                 batch_size: c.u32()?,
@@ -462,6 +559,10 @@ impl WireMsg {
             TAG_RELOAD => WireMsg::Reload,
             TAG_SHUTDOWN => WireMsg::Shutdown,
             TAG_OK => WireMsg::Ok,
+            TAG_METRICS_QUERY => WireMsg::MetricsQuery { format: c.u8()? },
+            TAG_METRICS_REPLY => WireMsg::MetricsReply { body: c.string()? },
+            TAG_TRACE_QUERY => WireMsg::TraceQuery { trace: c.u64()? },
+            TAG_TRACE_REPLY => WireMsg::TraceReply { json: c.string()? },
             other => return Err(WireError::BadTag(other)),
         };
         c.done()?;
@@ -475,8 +576,10 @@ impl WireMsg {
 /// `method` can carry without its frame exceeding [`MAX_BODY`]. The
 /// router gates requests on this *before* routing, so an oversized input
 /// surfaces as a typed request-shape error instead of a dropped frame.
+/// The bound reserves room for the optional trailing trace field, so a
+/// request that fits untraced still fits when sampling picks it.
 pub fn max_request_floats(model: &str, method: &str) -> usize {
-    let overhead = 2 + 28 + model.len() + method.len();
+    let overhead = 2 + 28 + 8 + model.len() + method.len();
     MAX_BODY.saturating_sub(overhead) / 4
 }
 
@@ -591,6 +694,15 @@ mod tests {
                 method: "winograd".into(),
                 deadline_us: 250_000,
                 input: vec![0.5, -1.25, 3.0],
+                trace: 0,
+            },
+            WireMsg::Request {
+                id: 8,
+                model: "dcgan".into(),
+                method: "winograd".into(),
+                deadline_us: 0,
+                input: vec![1.5; 4],
+                trace: 0x0001_0000_0042,
             },
             WireMsg::Response {
                 id: 7,
@@ -612,6 +724,10 @@ mod tests {
             WireMsg::Reload,
             WireMsg::Shutdown,
             WireMsg::Ok,
+            WireMsg::MetricsQuery { format: format::PROMETHEUS },
+            WireMsg::MetricsReply { body: "# TYPE wingan_requests gauge\nwingan_requests 3\n".into() },
+            WireMsg::TraceQuery { trace: 0x0001_0000_0042 },
+            WireMsg::TraceReply { json: "{\"node\":\"r1\",\"spans\":[]}".into() },
         ]
     }
 
@@ -633,12 +749,64 @@ mod tests {
         for msg in samples() {
             let frame = msg.encode();
             let body = &frame[4..];
+            // one deliberate exception: a traced Request cut exactly at
+            // the optional trailing trace field is a *valid old-format
+            // frame* — that prefix-decodability is the version-tolerance
+            // contract, so pin it as such instead of as an error
+            let tolerated_cut = match &msg {
+                WireMsg::Request { trace, .. } if *trace != 0 => Some(body.len() - 8),
+                _ => None,
+            };
             for cut in 0..body.len() {
+                if Some(cut) == tolerated_cut {
+                    let WireMsg::Request { trace, .. } = WireMsg::decode(&body[..cut])
+                        .expect("cut at the trace field is an untraced frame")
+                    else {
+                        panic!("tolerated cut must still decode as a Request");
+                    };
+                    assert_eq!(trace, 0, "the shortened frame decodes as untraced");
+                    continue;
+                }
                 match WireMsg::decode(&body[..cut]) {
                     Err(_) => {}
                     Ok(m) => panic!("prefix of len {cut} of {msg:?} decoded as {m:?}"),
                 }
             }
+        }
+    }
+
+    #[test]
+    fn trace_field_is_tail_optional_and_version_tolerant() {
+        let untraced = WireMsg::Request {
+            id: 5,
+            model: "dcgan".into(),
+            method: "winograd".into(),
+            deadline_us: 100,
+            input: vec![2.0, 4.0],
+            trace: 0,
+        };
+        let traced = WireMsg::Request {
+            trace: 0x0001_0000_0007,
+            ..untraced.clone()
+        };
+        // the traced frame is exactly the untraced frame + 8 bytes
+        let uf = untraced.encode();
+        let tf = traced.encode();
+        assert_eq!(tf.len(), uf.len() + 8);
+        assert_eq!(&tf[4..uf.len()], &uf[4..], "shared prefix is byte-identical");
+        // both round-trip
+        assert_eq!(WireMsg::decode(&uf[4..]).unwrap(), untraced);
+        assert_eq!(WireMsg::decode(&tf[4..]).unwrap(), traced);
+        // an old-format frame (no trailing field) decodes as untraced —
+        // and a partial trace field is still a typed Trailing verdict
+        for extra in 1..8usize {
+            let mut body = uf[4..].to_vec();
+            body.extend_from_slice(&vec![0xABu8; extra]);
+            assert_eq!(
+                WireMsg::decode(&body),
+                Err(WireError::Trailing { extra }),
+                "{extra} stray bytes"
+            );
         }
     }
 
@@ -779,13 +947,16 @@ mod tests {
     #[test]
     fn oversized_requests_are_refused_at_the_sender_not_the_wire() {
         let cap = max_request_floats("dcgan", "winograd");
-        // at the cap exactly the frame is legal…
+        // the bound reserves the trailing trace field, so the boundary
+        // case is a *traced* request: at the cap exactly the frame is
+        // legal even when sampling picked this request…
         let fits = WireMsg::Request {
             id: 1,
             model: "dcgan".into(),
             method: "winograd".into(),
             deadline_us: 0,
             input: vec![0.0; cap],
+            trace: 0x0001_0000_0001,
         };
         assert!(fits.validate().is_ok());
         assert!(fits.body_len() <= MAX_BODY);
@@ -796,6 +967,7 @@ mod tests {
             method: "winograd".into(),
             deadline_us: 0,
             input: vec![0.0; cap + 1],
+            trace: 0x0001_0000_0001,
         };
         match over.validate() {
             Err(WireError::Oversized { len, max }) => {

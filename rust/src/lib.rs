@@ -34,6 +34,7 @@
 //! | [`faultinject`] | seeded deterministic fault-injection plane (panic/delay/corrupt sites) |
 //! | [`chaos`] | fault-injection soak: conservation, bitwise isolation, bounded recovery |
 //! | [`fleet`] | multi-process serving: wire protocol, replicas, failover router, rolling republish |
+//! | [`telemetry`] | end-to-end request tracing, flight recorder, scrapeable JSON/Prometheus exports |
 //! | [`cli`] / [`benchlib`] / [`util`] / [`prop`] | flag parsing, bench harness, tensors/PRNG/JSON, property-test harness |
 //!
 //! The **plan-compile / execute split** is the load-bearing design: a
@@ -90,6 +91,7 @@ pub mod report;
 pub mod resource;
 pub mod runtime;
 pub mod tdc;
+pub mod telemetry;
 pub mod util;
 pub mod winograd;
 

@@ -514,6 +514,12 @@ pub fn run(opts: &LoadgenOptions) -> Result<(SchedulerOutcome, SchedulerOutcome)
         continuous.goodput() / bucket.goodput().max(1e-9),
     );
     rep.metric("p99_bucket_over_continuous", bucket.tail.1 / continuous.tail.1.max(1e-9));
+    // trace-derived stage breakdown (empty unless sampling was armed via
+    // --trace-sample: the default A/B stays untraced so its numbers are
+    // comparable run over run)
+    for (key, value) in crate::telemetry::bench_stage_metrics() {
+        rep.metric(&key, value);
+    }
     rep.write(&opts.out).with_context(|| format!("writing {}", opts.out.display()))?;
     println!(
         "loadgen: wrote {} (throughput x{:.2}, goodput x{:.2}, bucket p99 {:.1}x higher)",
@@ -626,15 +632,38 @@ pub fn run_remote(opts: &LoadgenOptions, addr: &str) -> Result<()> {
     let t0 = Instant::now();
     let fates = crate::fleet::drive_open_loop(&plan, clients, None::<(usize, fn())>, |i, a| {
         let r = &profile.routes[a.route];
+        // the client is the outermost admission point: if this process's
+        // recorder is armed (--trace-sample), the minted id rides the
+        // wire and names the request in every downstream recorder too
+        let trace = crate::telemetry::recorder().maybe_mint();
         let msg = WireMsg::Request {
             id: i as u64,
             model: r.model.clone(),
             method: r.method.clone(),
             deadline_us: slo.as_micros() as u64,
             input: a.input.clone(),
+            trace,
         };
         let sent = Instant::now();
-        match rpc(&msg, slo + Duration::from_secs(10)) {
+        let reply = rpc(&msg, slo + Duration::from_secs(10));
+        if trace != 0 {
+            let verdict = match &reply {
+                Ok(WireMsg::Response { .. }) => 0,
+                Ok(WireMsg::Error { code, .. }) => *code as u64,
+                Ok(_) => 101,
+                Err(_) => 100,
+            };
+            crate::telemetry::record_span(
+                trace,
+                crate::telemetry::Stage::Wire,
+                sent,
+                sent.elapsed(),
+                i as u64,
+                verdict,
+                addr,
+            );
+        }
+        match reply {
             Ok(WireMsg::Response { batch_size, queue_us, exec_us, output, .. }) => {
                 let rtt = sent.elapsed();
                 lock_unpoisoned(&lat).record(rtt);
@@ -698,6 +727,11 @@ pub fn run_remote(opts: &LoadgenOptions, addr: &str) -> Result<()> {
     rep.metric("rtt_p99_ms", p99 * 1e3);
     rep.metric("rtt_p999_ms", p999 * 1e3);
     rep.metric("lost", 0.0); // conservation ensured above
+    // client-side stage breakdown (Wire spans land here only if this
+    // process's recorder was armed with --trace-sample)
+    for (key, value) in crate::telemetry::bench_stage_metrics() {
+        rep.metric(&key, value);
+    }
     rep.write(&opts.out).with_context(|| format!("writing {}", opts.out.display()))?;
     println!("loadgen: wrote {}", opts.out.display());
     Ok(())

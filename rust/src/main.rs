@@ -13,6 +13,8 @@
 //!   replica             serve one coordinator behind the fleet wire protocol
 //!   router              front N replicas with health-probed failover routing
 //!   probe               query a replica/router health endpoint (CI gate)
+//!   trace               dump/follow flight-recorder spans from a node
+//!   top                 live per-stage latency table scraped from a node
 
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
@@ -44,14 +46,16 @@ USAGE: wingan <subcommand> [flags]
          [--seed 7] [--workers N] [--precision f32|f64|auto]
          [--kernel scalar|simd|auto] [--plan-store DIR] [--weight-seed 42]
          [--check-compile] [--scheduler continuous|bucket] [--queue-cap 256]
-         [--slo-ms N] [--inject-faults SPEC]
+         [--slo-ms N] [--inject-faults SPEC] [--stats-every SECS]
+         [--trace-sample N] [--trace-seed S]
   loadgen [--quick] [--scale tiny|small] [--requests 800] [--load 1.2]
           [--rate R] [--slo-ms N] [--queue-cap 256] [--max-wait-ms 20]
           [--seed 7] [--workers N] [--out BENCH_pr7.json]
-          [--connect HOST:PORT]
+          [--connect HOST:PORT] [--trace-sample N] [--trace-seed S]
   chaos  [--quick] [--fleet] [--scale tiny|small] [--requests 600]
          [--rate 300] [--queue-cap 512] [--seed 11] [--workers N]
-         [--spec SPEC] [--out BENCH_pr8.json]
+         [--spec SPEC] [--out BENCH_pr8.json] [--trace-sample N]
+         [--trace-seed S]
   compile [--store DIR] [--scale small|tiny|all] [--models dcgan,gpgan]
           [--seed 42]
   plan   inspect <artifact-file>
@@ -59,10 +63,15 @@ USAGE: wingan <subcommand> [flags]
           [--models dcgan,gpgan] [--workers N] [--precision f32|f64|auto]
           [--kernel scalar|simd|auto] [--scheduler continuous|bucket]
           [--queue-cap 256] [--slo-ms N] [--weight-seed 42]
-          [--inject-faults SPEC] [--watch-stdin]
+          [--inject-faults SPEC] [--watch-stdin] [--stats-every SECS]
+          [--trace-sample N] [--trace-seed S]
   router [--bind 127.0.0.1:7410] --replicas HOST:PORT[,HOST:PORT...]
-         [--store DIR]
-  probe  --addr HOST:PORT [--wait-ready SECS]
+         [--store DIR] [--trace-sample N] [--trace-seed S]
+  probe  --addr HOST:PORT [--wait-ready SECS] [--metrics]
+         [--format json|prometheus]
+  trace  <HOST:PORT | --addr HOST:PORT> [--id TRACE_ID] [--limit N]
+         [--follow]
+  top    <HOST:PORT | --addr HOST:PORT> [--interval SECS] [--count N]
 
 serve runs on the native precompiled-plan engine when --native is given or
 when the PJRT artifacts are unavailable (this offline build always is).
@@ -145,6 +154,20 @@ timed recovery to all-ready after a replacement joins (BENCH_pr9.json).
 `loadgen --connect HOST:PORT` drives a remote router instead of an
 in-process coordinator (requires an explicit --rate; no local engine to
 calibrate against).
+
+Observability: --trace-sample N arms the in-process flight recorder on
+serve/replica/router (1 = trace every request, N = one in N, seeded by
+--trace-seed so a deterministic load replays with the same requests
+traced; 0/absent = off, ~zero cost). Traced requests carry one id across
+the wire, so a routed request's spans (admission, queue, batch, per-layer
+input-transform/GEMM/inverse/activation, wire round-trips, per-attempt
+failover verdicts) stitch into one cross-process tree. Scrape with:
+`probe --metrics` (the telemetry document; --format prometheus for text
+exposition), `trace HOST:PORT` (recent spans; --id for one request's
+tree — ask the router and the reply merges every replica's spans;
+--follow to tail), `top HOST:PORT` (per-stage latency table, refreshed
+every --interval seconds). serve/replica additionally emit one compact
+JSON metrics line to stderr every --stats-every seconds.
 ";
 
 fn main() {
@@ -155,9 +178,10 @@ fn main() {
             std::process::exit(2);
         }
     };
-    // only `plan` takes positional arguments after the subcommand; a stray
-    // positional anywhere else is a typo, not a default to run with
-    if args.subcommand.as_deref() != Some("plan") {
+    // only `plan` (an action word) and `trace`/`top` (a bare HOST:PORT)
+    // take positional arguments after the subcommand; a stray positional
+    // anywhere else is a typo, not a default to run with
+    if !matches!(args.subcommand.as_deref(), Some("plan") | Some("trace") | Some("top")) {
         if let Err(e) = args.reject_positionals() {
             eprintln!("error: {e}\n{USAGE}");
             std::process::exit(2);
@@ -179,6 +203,8 @@ fn main() {
         Some("replica") => cmd_replica(&args),
         Some("router") => cmd_router(&args),
         Some("probe") => cmd_probe(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("top") => cmd_top(&args),
         Some("version") => {
             println!("wingan {}", wingan::version());
             Ok(())
@@ -312,6 +338,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         None => wingan::faultinject::FaultPlane::from_env()
             .map_err(|e| anyhow::anyhow!("WINGAN_FAULTS: {e}"))?,
     };
+    // observability: arm the flight recorder (0/absent = sampling off,
+    // ~zero cost) and the periodic machine-readable stats line
+    configure_recorder(args, "serve")?;
+    let stats_every = args.get_usize("stats-every", 0).map_err(anyhow::Error::msg)?;
     let serve_cfg = ServeConfig {
         max_wait: Duration::from_millis(max_wait as u64),
         preload_models: Some(vec![model.clone()]),
@@ -411,12 +441,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut pending = Vec::new();
     let mut shed = 0u64;
     let t_start = Instant::now();
+    let mut last_stats = Instant::now();
     for i in 0..n_requests {
         let input = rng.normal_vec_f32(input_len);
         match coord.submit(&model, &method, input) {
             Ok(rx) => pending.push(rx),
             Err(e) if e.is_shed() => shed += 1,
             Err(e) => return Err(anyhow::Error::msg(e)),
+        }
+        if stats_every > 0 && last_stats.elapsed() >= Duration::from_secs(stats_every as u64) {
+            emit_stats_line("serve", coord.metrics().to_json());
+            last_stats = Instant::now();
         }
         if i + 1 < n_requests {
             std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
@@ -448,8 +483,37 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         wall.as_secs_f64(),
         completed as f64 / wall.as_secs_f64()
     );
+    if stats_every > 0 {
+        // one closing line so short runs still leave a scrapeable record
+        emit_stats_line("serve", coord.metrics().to_json());
+    }
     coord.shutdown();
     Ok(())
+}
+
+/// Wire up the process-global flight recorder from `--trace-sample N`
+/// (0/absent = tracing off) and `--trace-seed S`, labelling this
+/// process's spans with `node` so merged cross-process traces say where
+/// each span ran.
+fn configure_recorder(args: &Args, node: &str) -> anyhow::Result<()> {
+    let sample = args.get_usize("trace-sample", 0).map_err(anyhow::Error::msg)? as u64;
+    let seed = args.get_usize("trace-seed", 0).map_err(anyhow::Error::msg)? as u64;
+    wingan::telemetry::recorder().configure(sample, seed, node);
+    Ok(())
+}
+
+/// One compact machine-readable stats line on **stderr** (stdout stays
+/// the human report): role, node, the coordinator metrics document, and
+/// the flight recorder's per-stage histograms.
+fn emit_stats_line(role: &str, metrics: Json) {
+    let rec = wingan::telemetry::recorder();
+    let doc = json::obj(vec![
+        ("role", json::s(role)),
+        ("node", json::s(&rec.node())),
+        ("metrics", metrics),
+        ("stages", rec.stages_json()),
+    ]);
+    eprintln!("{}", json::to_string(&doc));
 }
 
 /// `wingan loadgen` — open-loop Poisson A/B of the batch schedulers: one
@@ -458,6 +522,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// coordinators at equal offered load; the machine-readable outcome goes
 /// to `--out` (default `BENCH_pr7.json`).
 fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    // armed only on request: the A/B's headline numbers stay untraced
+    // (and run-over-run comparable) unless --trace-sample asks for the
+    // stage breakdown in the BENCH report
+    configure_recorder(args, "loadgen")?;
     let mut opts = if args.has("quick") {
         wingan::loadgen::LoadgenOptions::quick()
     } else {
@@ -514,6 +582,7 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
 /// conservation / bitwise-isolation / bounded-recovery contract asserted
 /// and the outcome written to `--out` (default `BENCH_pr8.json`).
 fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    configure_recorder(args, "chaos")?;
     let mut opts = if args.has("quick") {
         wingan::chaos::ChaosOptions::quick()
     } else {
@@ -664,6 +733,10 @@ fn cmd_replica(args: &Args) -> anyhow::Result<()> {
         },
         fleet_faults: faults,
     };
+    // the bind address is the natural node label: it's what the router's
+    // merged traces and the CI scrape will call this process
+    configure_recorder(args, &format!("replica:{bind}"))?;
+    let stats_every = args.get_usize("stats-every", 0).map_err(anyhow::Error::msg)?;
     let server = wingan::fleet::ReplicaServer::spawn(&bind, cfg)?;
     match &plan_store {
         Some(s) => println!(
@@ -678,6 +751,7 @@ fn cmd_replica(args: &Args) -> anyhow::Result<()> {
         shutdown::watch_stdin();
     }
     let mut announced = false;
+    let mut last_stats = Instant::now();
     while server.alive() && !shutdown::requested() {
         if !announced && server.ready() {
             println!("replica ready on {}", server.addr());
@@ -685,6 +759,11 @@ fn cmd_replica(args: &Args) -> anyhow::Result<()> {
         }
         if let Some(e) = server.boot_error() {
             anyhow::bail!("replica boot failed: {e}");
+        }
+        if stats_every > 0 && last_stats.elapsed() >= Duration::from_secs(stats_every as u64) {
+            // the replica document already carries role/node/stages
+            eprintln!("{}", json::to_string(&server.metrics_json()));
+            last_stats = Instant::now();
         }
         std::thread::sleep(Duration::from_millis(50));
     }
@@ -715,6 +794,7 @@ fn cmd_router(args: &Args) -> anyhow::Result<()> {
         .collect();
     anyhow::ensure!(!replicas.is_empty(), "--replicas lists no addresses");
     let store = args.get("store").map(PathBuf::from);
+    configure_recorder(args, &format!("router:{bind}"))?;
     let n = replicas.len();
     let router = std::sync::Arc::new(
         wingan::fleet::FleetRouter::new(wingan::fleet::FleetConfig {
@@ -758,6 +838,27 @@ fn cmd_probe(args: &Args) -> anyhow::Result<()> {
             .next()
             .ok_or_else(|| anyhow::anyhow!("address '{addr}' resolves to nothing"))?
     };
+    // --metrics: scrape the telemetry document instead of the health one
+    if args.has("metrics") {
+        let format = match args.get_or("format", "json") {
+            "json" => wire::format::JSON,
+            "prometheus" | "prom" => wire::format::PROMETHEUS,
+            other => anyhow::bail!("--format: '{other}' is not one of json|prometheus"),
+        };
+        let mut s = std::net::TcpStream::connect_timeout(&sock, Duration::from_secs(2))
+            .map_err(|e| anyhow::anyhow!("connect {sock}: {e}"))?;
+        let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+        let _ = s.set_write_timeout(Some(Duration::from_secs(5)));
+        wire::send(&mut s, &WireMsg::MetricsQuery { format })?;
+        return match wire::recv(&mut s) {
+            Ok(WireMsg::MetricsReply { body }) => {
+                println!("{body}");
+                Ok(())
+            }
+            Ok(other) => anyhow::bail!("{addr} answered with a non-metrics frame: {other:?}"),
+            Err(e) => anyhow::bail!("metrics query to {addr} failed: {e}"),
+        };
+    }
     let query = || -> anyhow::Result<Json> {
         let mut s = std::net::TcpStream::connect_timeout(&sock, Duration::from_secs(2))
             .map_err(|e| anyhow::anyhow!("connect {sock}: {e}"))?;
@@ -798,6 +899,158 @@ fn cmd_probe(args: &Args) -> anyhow::Result<()> {
             }
             Err(e) => anyhow::bail!("probe: {addr} unreachable within {wait}s: {e}"),
         }
+    }
+}
+
+/// Target address for `trace`/`top`: `--addr HOST:PORT` or the bare
+/// positional (`wingan trace 127.0.0.1:7410`).
+fn telemetry_addr(args: &Args) -> anyhow::Result<String> {
+    anyhow::ensure!(
+        args.n_positionals() <= 1,
+        "at most one positional HOST:PORT is accepted"
+    );
+    args.get("addr")
+        .or_else(|| args.positional(0))
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("an address is required (HOST:PORT or --addr HOST:PORT)"))
+}
+
+/// One wire round-trip against a replica or router telemetry endpoint.
+fn telemetry_call(addr: &str, msg: &wingan::fleet::WireMsg) -> anyhow::Result<wingan::fleet::WireMsg> {
+    use std::net::ToSocketAddrs;
+    use wingan::fleet::wire;
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| anyhow::anyhow!("bad address '{addr}': {e}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("address '{addr}' resolves to nothing"))?;
+    let mut s = std::net::TcpStream::connect_timeout(&sock, Duration::from_secs(2))
+        .map_err(|e| anyhow::anyhow!("connect {sock}: {e}"))?;
+    let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = s.set_write_timeout(Some(Duration::from_secs(5)));
+    wire::send(&mut s, msg)?;
+    match wire::recv(&mut s) {
+        Ok(reply) => Ok(reply),
+        Err(e) => anyhow::bail!("query to {addr} failed: {e}"),
+    }
+}
+
+/// One human-readable span row.
+fn span_line(sp: &Json) -> String {
+    let s = |k: &str| sp.get(k).and_then(Json::as_str).unwrap_or("?");
+    let n = |k: &str| sp.get(k).and_then(Json::as_usize).unwrap_or(0);
+    format!(
+        "{:<22} trace={:<16} {:<16} +{:>10}us {:>9}us a={:<4} b={:<3} {}",
+        s("node"),
+        n("trace"),
+        s("stage"),
+        n("start_us"),
+        n("dur_us"),
+        n("a"),
+        n("b"),
+        s("label"),
+    )
+}
+
+/// `wingan trace` — dump recent flight-recorder spans from a replica or
+/// router. `--id TRACE_ID` filters to one request's tree (a router's
+/// reply already merges every replica's spans, so the tree is
+/// cross-process); `--limit N` keeps only the newest N rows; `--follow`
+/// polls twice a second, printing spans not seen yet.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use wingan::fleet::WireMsg;
+    let addr = telemetry_addr(args)?;
+    let id = args.get_usize("id", 0).map_err(anyhow::Error::msg)? as u64;
+    let limit = args.get_usize("limit", 0).map_err(anyhow::Error::msg)?;
+    let follow = args.has("follow");
+    // (node, seq) names a span uniquely across the merged document
+    let mut seen: std::collections::BTreeSet<(String, usize)> = Default::default();
+    loop {
+        let reply = telemetry_call(&addr, &WireMsg::TraceQuery { trace: id })?;
+        let text = match reply {
+            WireMsg::TraceReply { json: text } => text,
+            other => anyhow::bail!("{addr} answered with a non-trace frame: {other:?}"),
+        };
+        let doc = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("unparsable trace JSON from {addr}: {e}"))?;
+        let spans = doc.get("spans").and_then(Json::as_arr).unwrap_or(&[]);
+        let start = if limit > 0 && spans.len() > limit { spans.len() - limit } else { 0 };
+        let mut printed = 0usize;
+        for sp in &spans[start..] {
+            let node = sp.get("node").and_then(Json::as_str).unwrap_or("?").to_string();
+            let seq = sp.get("seq").and_then(Json::as_usize).unwrap_or(0);
+            if !seen.insert((node, seq)) {
+                continue;
+            }
+            println!("{}", span_line(sp));
+            printed += 1;
+        }
+        if !follow {
+            if printed == 0 {
+                println!(
+                    "(no spans recorded{}; is --trace-sample armed on the target?)",
+                    if id != 0 { " for that trace id" } else { "" }
+                );
+            }
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(500));
+    }
+}
+
+/// `wingan top` — live per-stage latency table scraped from a replica or
+/// router's `MetricsQuery` verb, refreshed every `--interval` seconds
+/// (`--count N` stops after N refreshes; 0 = until interrupted).
+fn cmd_top(args: &Args) -> anyhow::Result<()> {
+    use wingan::fleet::{wire, WireMsg};
+    let addr = telemetry_addr(args)?;
+    let interval = args.get_f64("interval", 2.0).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(interval > 0.0, "--interval must be positive");
+    let count = args.get_usize("count", 0).map_err(anyhow::Error::msg)?;
+    let mut refreshes = 0usize;
+    loop {
+        let reply = telemetry_call(&addr, &WireMsg::MetricsQuery { format: wire::format::JSON })?;
+        let body = match reply {
+            WireMsg::MetricsReply { body } => body,
+            other => anyhow::bail!("{addr} answered with a non-metrics frame: {other:?}"),
+        };
+        let doc = json::parse(&body)
+            .map_err(|e| anyhow::anyhow!("unparsable metrics JSON from {addr}: {e}"))?;
+        let role = doc.get("role").and_then(Json::as_str).unwrap_or("?");
+        let node = doc.get("node").and_then(Json::as_str).unwrap_or("?");
+        println!("== {role} {node} @ {addr} ==");
+        println!(
+            "{:<18} {:>8} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            "stage", "count", "mean_ms", "p50_ms", "p95_ms", "p99_ms", "max_ms"
+        );
+        let mut rows = 0usize;
+        if let Some(stages) = doc.get("stages").and_then(Json::as_obj) {
+            for (name, h) in stages {
+                let f = |k: &str| h.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                if f("count") == 0.0 {
+                    continue;
+                }
+                println!(
+                    "{:<18} {:>8} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+                    name,
+                    f("count"),
+                    f("mean_ms"),
+                    f("p50_ms"),
+                    f("p95_ms"),
+                    f("p99_ms"),
+                    f("max_ms"),
+                );
+                rows += 1;
+            }
+        }
+        if rows == 0 {
+            println!("(no stage samples yet; is --trace-sample armed on the target?)");
+        }
+        refreshes += 1;
+        if count > 0 && refreshes >= count {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_secs_f64(interval));
     }
 }
 

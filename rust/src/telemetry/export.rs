@@ -1,0 +1,162 @@
+//! Scrape formats for the telemetry plane.
+//!
+//! Every scrapeable endpoint (the `MetricsQuery` wire verb on replica and
+//! router) serves the same underlying document in two formats:
+//!
+//! * **stable-key JSON** — the [`crate::util::json::Json`] document
+//!   assembled by the serving tier (metrics snapshot + stage histograms +
+//!   role/health fields); BTreeMap ordering makes the key order, and
+//!   therefore the serialized bytes for a given state, deterministic;
+//! * **Prometheus text exposition** — [`prometheus`] flattens that same
+//!   document into `wingan_*` gauge lines, so any Prometheus-compatible
+//!   scraper can ingest the fleet without a sidecar.
+//!
+//! The Prometheus view is a *projection*: numeric and boolean leaves are
+//! kept (path segments joined with `_`, sanitized to the metric-name
+//! alphabet), strings and arrays are dropped (they are reachable through
+//! the JSON view). Stage histograms therefore surface as
+//! `wingan_stages_<stage>_{count,mean_ms,p50_ms,p95_ms,p99_ms,p999_ms,max_ms}`
+//! — the stage-latency keys the CI smoke asserts on.
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Flatten `doc` into Prometheus text exposition format.
+///
+/// Each numeric (or boolean, as 0/1) leaf becomes one gauge sample named
+/// `wingan_<path>` where `<path>` joins the object keys from the root
+/// with `_`, lowercased, with every character outside `[a-z0-9_]`
+/// replaced by `_`. A `# TYPE <name> gauge` comment precedes every
+/// sample, in the document's (stable) key order. Non-finite numbers,
+/// strings, nulls, and arrays are omitted.
+pub fn prometheus(doc: &Json) -> String {
+    let mut out = String::new();
+    flatten("wingan", doc, &mut out);
+    out
+}
+
+fn flatten(path: &str, v: &Json, out: &mut String) {
+    match v {
+        Json::Num(n) => {
+            if n.is_finite() {
+                let _ = writeln!(out, "# TYPE {path} gauge");
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    let _ = writeln!(out, "{path} {}", *n as i64);
+                } else {
+                    let _ = writeln!(out, "{path} {n}");
+                }
+            }
+        }
+        Json::Bool(b) => {
+            let _ = writeln!(out, "# TYPE {path} gauge");
+            let _ = writeln!(out, "{path} {}", u8::from(*b));
+        }
+        Json::Obj(map) => {
+            for (k, val) in map {
+                flatten(&format!("{path}_{}", sanitize(k)), val, out);
+            }
+        }
+        Json::Null | Json::Str(_) | Json::Arr(_) => {}
+    }
+}
+
+/// Map an arbitrary JSON key into the Prometheus metric-name alphabet.
+fn sanitize(key: &str) -> String {
+    key.chars()
+        .map(|c| match c.to_ascii_lowercase() {
+            c if c.is_ascii_lowercase() || c.is_ascii_digit() => c,
+            _ => '_',
+        })
+        .collect()
+}
+
+/// True when `text` is well-formed Prometheus text exposition: every
+/// line is either a `#`-prefixed comment or `<name> <float>` with a
+/// valid metric name. The CI smoke and the unit tests share this
+/// definition of "parses".
+pub fn prometheus_well_formed(text: &str) -> bool {
+    if text.trim().is_empty() {
+        return false;
+    }
+    text.lines().all(|line| {
+        if line.is_empty() || line.starts_with('#') {
+            return true;
+        }
+        let Some((name, value)) = line.split_once(' ') else {
+            return false;
+        };
+        let name_ok = !name.is_empty()
+            && !name.starts_with(|c: char| c.is_ascii_digit())
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':');
+        name_ok && value.parse::<f64>().is_ok()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{self, parse};
+
+    #[test]
+    fn flattens_nested_numeric_leaves_in_stable_order() {
+        let doc = parse(
+            r#"{"requests": 7, "stages": {"winograd_gemm": {"count": 2, "p99_ms": 1.5}},
+                "role": "replica", "ready": true}"#,
+        )
+        .unwrap();
+        let text = prometheus(&doc);
+        let lines: Vec<&str> = text.lines().filter(|l| !l.starts_with('#')).collect();
+        assert_eq!(
+            lines,
+            vec![
+                "wingan_ready 1",
+                "wingan_requests 7",
+                "wingan_stages_winograd_gemm_count 2",
+                "wingan_stages_winograd_gemm_p99_ms 1.5",
+            ],
+            "BTreeMap order makes the exposition deterministic"
+        );
+        assert!(text.contains("# TYPE wingan_requests gauge"));
+        assert!(prometheus_well_formed(&text), "{text}");
+    }
+
+    #[test]
+    fn strings_arrays_and_nulls_are_projected_out() {
+        let doc = parse(r#"{"role": "router", "routes": [1, 2], "x": null, "n": 3}"#).unwrap();
+        let text = prometheus(&doc);
+        assert!(text.contains("wingan_n 3"));
+        assert!(!text.contains("router"), "{text}");
+        assert!(!text.contains("routes"), "{text}");
+        assert!(prometheus_well_formed(&text));
+    }
+
+    #[test]
+    fn hostile_keys_are_sanitized() {
+        let doc = json::obj(vec![(
+            "dcgan/winograd p99 (ms)",
+            json::num(2.0),
+        )]);
+        let text = prometheus(&doc);
+        assert!(text.contains("wingan_dcgan_winograd_p99__ms_ 2"), "{text}");
+        assert!(prometheus_well_formed(&text), "sanitized names must stay well-formed: {text}");
+    }
+
+    #[test]
+    fn non_finite_numbers_are_skipped() {
+        let doc = json::obj(vec![("ok", json::num(1.0)), ("bad", json::num(f64::NAN))]);
+        let text = prometheus(&doc);
+        assert!(text.contains("wingan_ok 1"));
+        assert!(!text.contains("bad"), "{text}");
+        assert!(prometheus_well_formed(&text));
+    }
+
+    #[test]
+    fn well_formedness_rejects_garbage() {
+        assert!(!prometheus_well_formed(""));
+        assert!(!prometheus_well_formed("   \n"));
+        assert!(!prometheus_well_formed("not a metric line at all"));
+        assert!(!prometheus_well_formed("1leading_digit 3"));
+        assert!(!prometheus_well_formed("name not_a_number"));
+        assert!(prometheus_well_formed("# HELP x\nwingan_x 1\n"));
+    }
+}

@@ -1,0 +1,642 @@
+//! End-to-end request tracing and the in-process flight recorder.
+//!
+//! The serving tiers (PRs 7–9) answer *whether* the fleet is healthy;
+//! this module answers *where the time went*. It gives every sampled
+//! request a [`TraceId`] minted at admission (router or coordinator),
+//! records compact [`SpanEvent`]s at each stage of the datapath —
+//! admission, queue, batch-assemble, dispatch, the per-layer Winograd
+//! engine stages (input transform / Winograd-domain GEMM / inverse
+//! transform / activation), wire round-trips, and per-attempt failover
+//! verdicts — and exposes the result through the scrapeable telemetry
+//! plane ([`export`], the `MetricsQuery`/`TraceQuery` wire verbs, and the
+//! `wingan trace` / `wingan top` CLI frontends).
+//!
+//! # Design constraints
+//!
+//! * **~Zero cost when disabled.** Sampling defaults to off; every
+//!   recording site guards on one relaxed atomic load (the same idiom as
+//!   the fault-injection plane's enable flag) and the trace id `0` means
+//!   "untraced" everywhere, so the hot path pays a branch, not a lock.
+//! * **Never perturbs outputs.** Recording only reads clocks and appends
+//!   to ring buffers; it runs strictly outside the arithmetic, so f64
+//!   outputs and [`crate::accel::functional::Events`] counts are
+//!   bit-identical with tracing on or off (pinned by proptest).
+//! * **Lock-light and poison-safe.** Span events land in fixed-size
+//!   per-worker ring buffers (each thread hashes to its own slot, so the
+//!   per-ring mutexes are effectively uncontended) taken through
+//!   [`crate::util::lock_unpoisoned`] — a contained engine panic cannot
+//!   poison the recorder, which is exactly when the rings are most
+//!   valuable: a `Crashed`/bisection incident can be reconstructed
+//!   post-mortem from the events that led up to it.
+//! * **Seeded-sampleable.** The 1-in-N sampling decision and the minted
+//!   trace ids are a pure function of the configured `(sample_every,
+//!   seed)` and the admission counter, so a given load replays with the
+//!   same requests traced.
+//!
+//! Trace ids are minted below 2^53 so they survive the JSON number
+//! round-trip (the wire carries them as `u64`, the telemetry docs as
+//! f64-exact integers).
+
+pub mod export;
+
+use crate::coordinator::metrics::Histogram;
+use crate::util::json::{self, Json};
+use crate::util::lock_unpoisoned;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// A request's end-to-end trace identity. `0` means "untraced" — every
+/// recording site treats it as "do nothing", and the wire omits the
+/// optional trace field entirely for untraced requests so their frames
+/// are byte-identical to the pre-telemetry encoding.
+pub type TraceId = u64;
+
+/// Number of ring buffers the recorder shards events over. Threads hash
+/// to a slot by arrival order; 16 slots keep the per-ring mutexes
+/// effectively private to one worker under typical pool widths.
+const N_RINGS: usize = 16;
+
+/// Per-ring event capacity. The recorder is a *flight recorder*: old
+/// events are overwritten, post-mortems see the most recent
+/// `N_RINGS * RING_CAP` spans.
+const RING_CAP: usize = 4096;
+
+/// The datapath stages a span can describe, in request-lifecycle order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Admission verdict at a coordinator (`a` = admitted route queue
+    /// depth, `b` = shed code, 0 = admitted).
+    Admission,
+    /// Time spent queued in the batcher (`a` = batch size it left in).
+    Queue,
+    /// A batch was assembled and released (`a` = requests, `b` = padded
+    /// bucket size; duration = oldest member's wait).
+    BatchAssemble,
+    /// Batch execution at the dispatch boundary (`a` = bucket).
+    Dispatch,
+    /// Per-layer Winograd input-transform gather (`a` = layer index).
+    InputTransform,
+    /// Per-layer Winograd-domain GEMM (`a` = layer index).
+    WinogradGemm,
+    /// Per-layer inverse transform (`a` = layer index).
+    InverseTransform,
+    /// Per-layer activation application (`a` = layer index).
+    Activation,
+    /// Whole-layer execution for non-Winograd layers (`a` = layer index).
+    LayerExec,
+    /// One wire round-trip as observed by the router (`label` = replica
+    /// address).
+    Wire,
+    /// One routing attempt and its verdict (`a` = attempt ordinal,
+    /// `b` = verdict code: 0 ok, otherwise the wire error code;
+    /// `label` = replica address).
+    Attempt,
+}
+
+/// Every stage, in declaration (request-lifecycle) order.
+pub const STAGES: [Stage; 11] = [
+    Stage::Admission,
+    Stage::Queue,
+    Stage::BatchAssemble,
+    Stage::Dispatch,
+    Stage::InputTransform,
+    Stage::WinogradGemm,
+    Stage::InverseTransform,
+    Stage::Activation,
+    Stage::LayerExec,
+    Stage::Wire,
+    Stage::Attempt,
+];
+
+impl Stage {
+    /// Stable snake_case name — the key used in telemetry JSON and the
+    /// `stage` label in the Prometheus exposition. Never rename.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Queue => "queue",
+            Stage::BatchAssemble => "batch_assemble",
+            Stage::Dispatch => "dispatch",
+            Stage::InputTransform => "input_transform",
+            Stage::WinogradGemm => "winograd_gemm",
+            Stage::InverseTransform => "inverse_transform",
+            Stage::Activation => "activation",
+            Stage::LayerExec => "layer_exec",
+            Stage::Wire => "wire",
+            Stage::Attempt => "attempt",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Stage::Admission => 0,
+            Stage::Queue => 1,
+            Stage::BatchAssemble => 2,
+            Stage::Dispatch => 3,
+            Stage::InputTransform => 4,
+            Stage::WinogradGemm => 5,
+            Stage::InverseTransform => 6,
+            Stage::Activation => 7,
+            Stage::LayerExec => 8,
+            Stage::Wire => 9,
+            Stage::Attempt => 10,
+        }
+    }
+}
+
+/// One compact span: a stage of one traced request's life, with a
+/// start offset (µs since this process's recorder epoch), a duration,
+/// and two stage-specific integer details plus an optional short label
+/// (replica address, shed cause, ...). Cross-process times are relative
+/// to each node's own epoch — the tree shows per-node stage breakdowns,
+/// not a global clock.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// The trace this span belongs to.
+    pub trace: TraceId,
+    /// Global record order within this process (total order tiebreak).
+    pub seq: u64,
+    /// Which datapath stage this span measures.
+    pub stage: Stage,
+    /// Start, µs since the recorder epoch of the emitting process.
+    pub start_us: u64,
+    /// Duration in µs.
+    pub dur_us: u64,
+    /// Stage-specific detail (see [`Stage`] docs).
+    pub a: u64,
+    /// Stage-specific detail (see [`Stage`] docs).
+    pub b: u64,
+    /// Short free-form detail: replica address, verdict, ...
+    pub label: String,
+}
+
+impl SpanEvent {
+    /// Stable-key JSON for trace dumps; `node` identifies the emitting
+    /// process (set via [`FlightRecorder::configure`]).
+    pub fn to_json(&self, node: &str) -> Json {
+        json::obj(vec![
+            ("node", json::s(node)),
+            ("trace", json::num(self.trace as f64)),
+            ("seq", json::num(self.seq as f64)),
+            ("stage", json::s(self.stage.name())),
+            ("start_us", json::num(self.start_us as f64)),
+            ("dur_us", json::num(self.dur_us as f64)),
+            ("a", json::num(self.a as f64)),
+            ("b", json::num(self.b as f64)),
+            ("label", json::s(&self.label)),
+        ])
+    }
+}
+
+/// One ring: the newest `RING_CAP` events recorded by the threads that
+/// hash here, plus per-stage latency histograms accumulated since the
+/// last reset (scrapes merge the rings' histograms into the rollup).
+struct Ring {
+    events: VecDeque<SpanEvent>,
+    hists: Vec<Histogram>,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring {
+            events: VecDeque::with_capacity(RING_CAP),
+            hists: (0..STAGES.len()).map(|_| Histogram::new()).collect(),
+        }
+    }
+}
+
+/// The process-wide flight recorder: sampling policy + sharded span
+/// rings. One per process, reached through [`recorder`].
+pub struct FlightRecorder {
+    enabled: AtomicBool,
+    /// 1-in-N sampling at trace mint; 0 = tracing off.
+    sample_every: AtomicU64,
+    seed: AtomicU64,
+    /// Admissions seen by [`FlightRecorder::maybe_mint`] (sampled or not).
+    admissions: AtomicU64,
+    /// Global event sequence (total order across rings).
+    seq: AtomicU64,
+    node: Mutex<String>,
+    epoch: Instant,
+    rings: Vec<Mutex<Ring>>,
+}
+
+static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+static NEXT_SLOT: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
+    static CURRENT: Cell<TraceId> = const { Cell::new(0) };
+}
+
+/// The process-wide recorder (created on first use, tracing off).
+pub fn recorder() -> &'static FlightRecorder {
+    RECORDER.get_or_init(FlightRecorder::new)
+}
+
+/// The trace id the current thread is executing under (`0` = none).
+/// Set per batch by the coordinator's dispatch path so the engine's
+/// per-layer stage spans attach to the request's trace without
+/// threading a parameter through [`crate::coordinator::ExecBackend`].
+pub fn current_trace() -> TraceId {
+    CURRENT.with(|c| c.get())
+}
+
+/// Run `f` with the thread's current trace set to `trace`, restoring
+/// the previous value afterwards — including across unwinds, so a
+/// contained engine panic cannot leak a stale trace id onto the
+/// dispatch thread.
+pub fn with_trace<R>(trace: TraceId, f: impl FnOnce() -> R) -> R {
+    struct Restore(TraceId);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            CURRENT.with(|c| c.set(self.0));
+        }
+    }
+    let prev = CURRENT.with(|c| {
+        let p = c.get();
+        c.set(trace);
+        p
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
+impl FlightRecorder {
+    fn new() -> FlightRecorder {
+        FlightRecorder {
+            enabled: AtomicBool::new(false),
+            sample_every: AtomicU64::new(0),
+            seed: AtomicU64::new(0),
+            admissions: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            node: Mutex::new("node".to_string()),
+            epoch: Instant::now(),
+            rings: (0..N_RINGS).map(|_| Mutex::new(Ring::new())).collect(),
+        }
+    }
+
+    /// Set the sampling policy and this process's node label.
+    /// `sample_every = 0` disables tracing entirely; `1` traces every
+    /// request; `N` traces one in `N`, with the seed choosing *which*
+    /// residue is sampled (deterministic for a deterministic load).
+    pub fn configure(&self, sample_every: u64, seed: u64, node: &str) {
+        *lock_unpoisoned(&self.node) = node.to_string();
+        self.seed.store(seed, Ordering::Relaxed);
+        self.sample_every.store(sample_every, Ordering::Relaxed);
+        self.enabled.store(sample_every > 0, Ordering::Release);
+    }
+
+    /// Whether any sampling is configured — the one-load fast guard
+    /// every recording site checks first.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// This process's node label (as set by [`FlightRecorder::configure`]).
+    pub fn node(&self) -> String {
+        lock_unpoisoned(&self.node).clone()
+    }
+
+    /// Admission-time sampling decision: returns a fresh nonzero
+    /// [`TraceId`] for a sampled request, `0` otherwise. Ids encode the
+    /// seed (high bits) and the admission ordinal (low bits) and stay
+    /// below 2^53 for f64-exact JSON transport.
+    pub fn maybe_mint(&self) -> TraceId {
+        if !self.enabled() {
+            return 0;
+        }
+        let every = self.sample_every.load(Ordering::Relaxed).max(1);
+        let seed = self.seed.load(Ordering::Relaxed);
+        let n = self.admissions.fetch_add(1, Ordering::Relaxed);
+        if n % every != seed % every {
+            return 0;
+        }
+        (((seed & 0xF_FFFF) + 1) << 32) | ((n + 1) & 0xFFFF_FFFF)
+    }
+
+    /// Record one span. No-op when tracing is disabled or `trace == 0`.
+    pub fn record(
+        &self,
+        trace: TraceId,
+        stage: Stage,
+        start: Instant,
+        dur: Duration,
+        a: u64,
+        b: u64,
+        label: &str,
+    ) {
+        if trace == 0 || !self.enabled() {
+            return;
+        }
+        let start_us =
+            start.checked_duration_since(self.epoch).unwrap_or_default().as_micros() as u64;
+        let ev = SpanEvent {
+            trace,
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            stage,
+            start_us,
+            dur_us: dur.as_micros() as u64,
+            a,
+            b,
+            label: label.to_string(),
+        };
+        let slot = SLOT.with(|s| {
+            let mut v = s.get();
+            if v == usize::MAX {
+                v = NEXT_SLOT.fetch_add(1, Ordering::Relaxed);
+                s.set(v);
+            }
+            v % N_RINGS
+        });
+        let mut ring = lock_unpoisoned(&self.rings[slot]);
+        if ring.events.len() == RING_CAP {
+            ring.events.pop_front();
+        }
+        ring.events.push_back(ev);
+        ring.hists[stage.index()].record(dur);
+    }
+
+    /// Record a span that started at `t0` and ends now.
+    pub fn stamp(&self, trace: TraceId, stage: Stage, t0: Instant, a: u64, b: u64, label: &str) {
+        if trace == 0 || !self.enabled() {
+            return;
+        }
+        self.record(trace, stage, t0, t0.elapsed(), a, b, label);
+    }
+
+    /// Snapshot the recorded spans — all of them, or one trace's —
+    /// ordered by `(start_us, seq)`.
+    pub fn spans(&self, trace: Option<TraceId>) -> Vec<SpanEvent> {
+        let mut out = Vec::new();
+        for ring in &self.rings {
+            let ring = lock_unpoisoned(ring);
+            let wanted = ring.events.iter().filter(|e| match trace {
+                Some(t) => e.trace == t,
+                None => true,
+            });
+            out.extend(wanted.cloned());
+        }
+        out.sort_by_key(|e| (e.start_us, e.seq));
+        out
+    }
+
+    /// Per-stage latency histograms merged across every ring (stages
+    /// with no samples are omitted).
+    pub fn stage_histograms(&self) -> Vec<(Stage, Histogram)> {
+        let mut merged: Vec<Histogram> = (0..STAGES.len()).map(|_| Histogram::new()).collect();
+        for ring in &self.rings {
+            let ring = lock_unpoisoned(ring);
+            for (m, h) in merged.iter_mut().zip(&ring.hists) {
+                m.merge(h);
+            }
+        }
+        STAGES
+            .iter()
+            .zip(merged)
+            .filter(|(_, h)| h.count() > 0)
+            .map(|(&s, h)| (s, h))
+            .collect()
+    }
+
+    /// The stage histograms as a stable-key JSON object
+    /// (`stage name -> histogram snapshot`).
+    pub fn stages_json(&self) -> Json {
+        Json::Obj(
+            self.stage_histograms()
+                .into_iter()
+                .map(|(s, h)| (s.name().to_string(), h.to_json()))
+                .collect(),
+        )
+    }
+
+    /// A trace dump document: `{node, sampled, spans: [...]}` — the
+    /// whole flight recorder, or one trace when `trace` is given.
+    /// `limit` caps the span count (newest kept).
+    pub fn trace_json(&self, trace: Option<TraceId>, limit: usize) -> Json {
+        let node = self.node();
+        let mut spans = self.spans(trace);
+        if spans.len() > limit {
+            spans.drain(..spans.len() - limit);
+        }
+        json::obj(vec![
+            ("node", json::s(&node)),
+            (
+                "trace",
+                match trace {
+                    Some(t) => json::num(t as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("sampled", json::num(self.seq.load(Ordering::Relaxed) as f64)),
+            ("spans", Json::Arr(spans.iter().map(|e| e.to_json(&node)).collect())),
+        ])
+    }
+
+    /// Forget every recorded span and histogram and restart the
+    /// admission counter. Sampling policy and node label are kept.
+    /// Test/bench plumbing — scrapes never reset.
+    pub fn reset(&self) {
+        for ring in &self.rings {
+            let mut ring = lock_unpoisoned(ring);
+            ring.events.clear();
+            ring.hists = (0..STAGES.len()).map(|_| Histogram::new()).collect();
+        }
+        self.admissions.store(0, Ordering::Relaxed);
+        self.seq.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Convenience wrapper over `recorder().record(...)` — the form the
+/// datapath call sites use.
+#[inline]
+pub fn record_span(
+    trace: TraceId,
+    stage: Stage,
+    start: Instant,
+    dur: Duration,
+    a: u64,
+    b: u64,
+    label: &str,
+) {
+    if trace != 0 {
+        recorder().record(trace, stage, start, dur, a, b, label);
+    }
+}
+
+/// Stage-latency key/value pairs for a BENCH report: for every pipeline
+/// stage with at least one sample in the process-global recorder,
+/// `stage_<name>_count`, `stage_<name>_p50_ms`, and `stage_<name>_p99_ms`.
+/// Empty when sampling is off, so bench harnesses attach whatever tracing
+/// saw without paying for (or polluting the report of) an untraced run.
+pub fn bench_stage_metrics() -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for (stage, h) in recorder().stage_histograms() {
+        let (p50, p99, _) = h.tail();
+        out.push((format!("stage_{}_count", stage.name()), h.count() as f64));
+        out.push((format!("stage_{}_p50_ms", stage.name()), p50 * 1e3));
+        out.push((format!("stage_{}_p99_ms", stage.name()), p99 * 1e3));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests construct private local recorders so they can run in
+    // parallel with anything else in the binary; only the thread-local
+    // trace-context tests touch process-global state (their own
+    // thread's cell).
+
+    #[test]
+    fn disabled_recorder_mints_nothing_and_records_nothing() {
+        let r = FlightRecorder::new();
+        r.configure(0, 7, "t0");
+        assert_eq!(r.maybe_mint(), 0);
+        r.record(42, Stage::Queue, Instant::now(), Duration::from_millis(1), 0, 0, "");
+        assert!(r.spans(None).is_empty(), "disabled recorder must stay empty");
+        assert!(r.stage_histograms().is_empty());
+    }
+
+    #[test]
+    fn sampling_is_seeded_and_deterministic() {
+        let r = FlightRecorder::new();
+        r.configure(4, 2, "t1");
+        let first: Vec<TraceId> = (0..8).map(|_| r.maybe_mint()).collect();
+        r.reset();
+        let second: Vec<TraceId> = (0..8).map(|_| r.maybe_mint()).collect();
+        assert_eq!(first, second, "same (every, seed) must sample the same admissions");
+        let minted: Vec<&TraceId> = first.iter().filter(|&&t| t != 0).collect();
+        assert_eq!(minted.len(), 2, "1-in-4 over 8 admissions mints twice: {first:?}");
+        // seed picks a different residue
+        r.configure(4, 3, "t1");
+        r.reset();
+        let shifted: Vec<TraceId> = (0..8).map(|_| r.maybe_mint()).collect();
+        let pos = |v: &[TraceId]| v.iter().position(|&t| t != 0).unwrap();
+        assert_ne!(pos(&first), pos(&shifted), "seed must move the sampled residue");
+    }
+
+    #[test]
+    fn minted_ids_are_nonzero_unique_and_f64_exact() {
+        let r = FlightRecorder::new();
+        r.configure(1, 999, "t2");
+        let ids: Vec<TraceId> = (0..100).map(|_| r.maybe_mint()).collect();
+        for &id in &ids {
+            assert_ne!(id, 0);
+            assert!(id < (1 << 53), "trace id must survive f64 transport: {id}");
+            assert_eq!((id as f64) as u64, id);
+        }
+        let mut dedup = ids.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "ids must be unique");
+    }
+
+    #[test]
+    fn rings_wrap_and_spans_sort_by_start() {
+        let r = FlightRecorder::new();
+        r.configure(1, 0, "t3");
+        let t0 = Instant::now();
+        // overfill from this one thread: its ring keeps the newest RING_CAP
+        for i in 0..(RING_CAP + 10) {
+            r.record(5, Stage::Queue, t0, Duration::from_micros(i as u64), i as u64, 0, "");
+        }
+        let spans = r.spans(Some(5));
+        assert_eq!(spans.len(), RING_CAP, "ring must cap at RING_CAP");
+        // the oldest events were overwritten, the newest survive
+        assert_eq!(spans.last().unwrap().a, (RING_CAP + 9) as u64);
+        assert!(spans.windows(2).all(|w| (w[0].start_us, w[0].seq) <= (w[1].start_us, w[1].seq)));
+    }
+
+    #[test]
+    fn stage_histograms_merge_across_rings_and_filter_empties() {
+        let r = FlightRecorder::new();
+        r.configure(1, 0, "t4");
+        let t0 = Instant::now();
+        r.record(9, Stage::WinogradGemm, t0, Duration::from_millis(2), 0, 0, "");
+        // record from another thread so a second ring is populated
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                r.record(9, Stage::WinogradGemm, t0, Duration::from_millis(4), 1, 0, "");
+            });
+        });
+        let hists = r.stage_histograms();
+        assert_eq!(hists.len(), 1, "only the recorded stage appears");
+        assert_eq!(hists[0].0, Stage::WinogradGemm);
+        assert_eq!(hists[0].1.count(), 2, "merge must fold both rings");
+        let doc = r.stages_json();
+        assert!(doc.get("winograd_gemm").is_some());
+        assert!(doc.get("queue").is_none());
+    }
+
+    #[test]
+    fn recorder_survives_a_panicking_recorder_thread() {
+        let r = FlightRecorder::new();
+        r.configure(1, 0, "t5");
+        r.record(7, Stage::Dispatch, Instant::now(), Duration::from_millis(1), 0, 0, "pre");
+        // poison every ring mutex the hard way: panic while holding it
+        std::thread::scope(|s| {
+            for ring in &r.rings {
+                let h = s.spawn(move || {
+                    let _guard = ring.lock().unwrap();
+                    panic!("poison the ring");
+                });
+                assert!(h.join().is_err(), "the poisoning thread must have panicked");
+            }
+        });
+        // the flight recorder still records and still dumps — that is
+        // the whole point of a post-mortem recorder
+        r.record(7, Stage::Dispatch, Instant::now(), Duration::from_millis(1), 1, 0, "post");
+        let spans = r.spans(Some(7));
+        assert!(spans.iter().any(|e| e.label == "post"), "recording after poison must work");
+        assert!(spans.iter().any(|e| e.label == "pre"), "pre-poison events must survive");
+    }
+
+    #[test]
+    fn with_trace_restores_across_unwinds() {
+        assert_eq!(current_trace(), 0);
+        with_trace(11, || {
+            assert_eq!(current_trace(), 11);
+            with_trace(22, || assert_eq!(current_trace(), 22));
+            assert_eq!(current_trace(), 11);
+            let _ = std::panic::catch_unwind(|| with_trace(33, || panic!("boom")));
+            assert_eq!(current_trace(), 11, "unwind must restore the previous trace");
+        });
+        assert_eq!(current_trace(), 0);
+    }
+
+    #[test]
+    fn trace_json_filters_limits_and_labels_the_node() {
+        let r = FlightRecorder::new();
+        r.configure(1, 0, "nodeX");
+        let t0 = Instant::now();
+        for i in 0..5 {
+            r.record(100, Stage::Queue, t0, Duration::from_micros(i), i, 0, "");
+            r.record(200, Stage::Wire, t0, Duration::from_micros(i), i, 0, "r1");
+        }
+        let doc = r.trace_json(Some(200), 3);
+        assert_eq!(doc.get("node").and_then(Json::as_str), Some("nodeX"));
+        assert_eq!(doc.get("trace").and_then(Json::as_f64), Some(200.0));
+        let spans = doc.get("spans").and_then(Json::as_arr).unwrap();
+        assert_eq!(spans.len(), 3, "limit keeps the newest spans");
+        for sp in spans {
+            assert_eq!(sp.get("trace").and_then(Json::as_f64), Some(200.0));
+            assert_eq!(sp.get("stage").and_then(Json::as_str), Some("wire"));
+            assert_eq!(sp.get("node").and_then(Json::as_str), Some("nodeX"));
+        }
+    }
+
+    #[test]
+    fn stage_names_are_stable_and_indexed() {
+        for (i, s) in STAGES.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert!(!s.name().is_empty());
+            assert!(s.name().chars().all(|c| c.is_ascii_lowercase() || c == '_'));
+        }
+    }
+}

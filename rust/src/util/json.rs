@@ -254,6 +254,43 @@ pub fn to_string_pretty(v: &Json) -> String {
     s
 }
 
+/// Serialize compactly on one line (stable key order via BTreeMap) — the
+/// format for machine-tailable outputs like `--stats-every` stderr lines,
+/// where one document per line is the contract.
+pub fn to_string(v: &Json) -> String {
+    let mut s = String::new();
+    write_compact(v, &mut s);
+    s
+}
+
+fn write_compact(v: &Json, out: &mut String) {
+    match v {
+        Json::Null | Json::Bool(_) | Json::Num(_) | Json::Str(_) => write_value(v, 0, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_compact(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_compact(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
 fn write_value(v: &Json, indent: usize, out: &mut String) {
     match v {
         Json::Null => out.push_str("null"),
@@ -372,6 +409,17 @@ mod tests {
         let v = parse(doc).unwrap();
         let s = to_string_pretty(&v);
         assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn compact_is_one_line_and_round_trips() {
+        let doc = r#"{"name": "dcgan_b1", "shape": [1, 32], "ok": true, "f": 1.5, "e": {}}"#;
+        let v = parse(doc).unwrap();
+        let c = to_string(&v);
+        assert!(!c.contains('\n'), "compact output must be a single line: {c}");
+        assert!(!c.contains(": "), "compact output has no cosmetic spaces: {c}");
+        assert_eq!(parse(&c).unwrap(), v);
+        assert_eq!(c, r#"{"e":{},"f":1.5,"name":"dcgan_b1","ok":true,"shape":[1,32]}"#);
     }
 
     #[test]

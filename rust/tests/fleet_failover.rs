@@ -277,6 +277,7 @@ fn replica_exit_fault_site_kills_the_replica_abruptly() {
             method: "winograd".into(),
             deadline_us: 0,
             input: plan.arrivals[0].input.clone(),
+            trace: 0,
         },
     )
     .expect("send");

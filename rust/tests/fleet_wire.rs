@@ -69,6 +69,7 @@ fn request(id: u64, input: Vec<f32>) -> WireMsg {
         method: "winograd".into(),
         deadline_us: 0,
         input,
+        trace: 0,
     }
 }
 

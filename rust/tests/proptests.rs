@@ -452,6 +452,7 @@ fn prop_batcher_conserves_requests_in_fifo_order() {
                     input: Vec::new(),
                     enqueued: t,
                     deadline: None,
+                    trace: 0,
                 });
                 while let Some(batch) = b.poll(t) {
                     if batch.requests.len() > batch.bucket {
@@ -602,6 +603,7 @@ fn prop_continuous_batcher_conserves_requests() {
                         input: Vec::new(),
                         enqueued: at(now),
                         deadline: budget_ms.map(|b| at(now + b)),
+                        trace: 0,
                     };
                     match batchers[*route].admit(req, at(now)) {
                         Ok(()) => pending[*route].push(id),

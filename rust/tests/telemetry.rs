@@ -1,0 +1,375 @@
+//! Telemetry-plane integration tests (PR 10): end-to-end request tracing
+//! and the scrapeable metrics plane, exercised over real TCP against
+//! in-process [`ReplicaServer`]s and a [`FleetRouter`].
+//!
+//! Three contracts are pinned here:
+//!
+//! * **one trace per request, attempt-level failover detail** — a routed
+//!   request whose first attempt dies on the wire (deterministic
+//!   `conn_drop` fault) leaves exactly one retrievable trace covering
+//!   admission → queue → batch → per-layer engine stages → wire, with an
+//!   `attempt` span per try carrying the replica address and verdict;
+//! * **golden scrape formats** — the `MetricsQuery` wire verb serves
+//!   stable-key JSON (byte-stable under parse → re-serialize, BTreeMap
+//!   key order) and well-formed Prometheus text exposition with the
+//!   `wingan_stages_*` stage-latency keys;
+//! * **tracing is bitwise invisible** — engine outputs and every
+//!   [`Events`] counter are identical with sampling off or on, at every
+//!   worker count (property test over random Winograd-able layers).
+//!
+//! The flight recorder is process-global, so every test in this binary
+//! serializes on one mutex and restores sampling-off before exiting.
+
+use std::collections::BTreeSet;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+use wingan::coordinator::ServeConfig;
+use wingan::engine::{Engine, ModelPlan, NativeConfig, PlanOptions, Planner, Select};
+use wingan::faultinject::FaultPlane;
+use wingan::fleet::wire::{self, WireMsg};
+use wingan::fleet::{FleetConfig, FleetRouter, ReplicaConfig, ReplicaServer};
+use wingan::gan::workload::Method;
+use wingan::gan::zoo::{Activation, Kind, Layer, Scale};
+use wingan::prop::forall;
+use wingan::tdc;
+use wingan::telemetry::{self, export};
+use wingan::util::json::{self, Json};
+use wingan::util::prng::Rng;
+use wingan::util::tensor::{Filter4, Tensor3};
+
+/// The flight recorder is one per process; tests that configure it must
+/// not interleave. Poison is survivable — a failed test must not cascade.
+static RECORDER_GUARD: Mutex<()> = Mutex::new(());
+
+fn recorder_lock() -> MutexGuard<'static, ()> {
+    RECORDER_GUARD.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// A tiny-scale single-model replica config: fast to boot, real engine.
+fn tiny_cfg(faults: Option<&str>) -> ReplicaConfig {
+    ReplicaConfig {
+        native: NativeConfig {
+            scale: Scale::Tiny,
+            workers: 2,
+            models: Some(vec!["dcgan".into()]),
+            ..Default::default()
+        },
+        serve: ServeConfig {
+            drain_deadline: Duration::from_secs(2),
+            ..Default::default()
+        },
+        fleet_faults: faults.map(|spec| Arc::new(FaultPlane::parse(spec).expect("fault spec"))),
+    }
+}
+
+/// One connect-send-recv round trip with bounded timeouts.
+fn rpc(addr: SocketAddr, msg: &WireMsg) -> WireMsg {
+    let mut s =
+        TcpStream::connect_timeout(&addr, Duration::from_secs(2)).expect("connect to replica");
+    let _ = s.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = s.set_write_timeout(Some(Duration::from_secs(5)));
+    wire::send(&mut s, msg).expect("send");
+    wire::recv(&mut s).expect("recv")
+}
+
+/// Ask the replica's health document for the first route's input length
+/// — the tests stay agnostic to zoo geometry.
+fn first_route_input_len(addr: SocketAddr) -> usize {
+    let WireMsg::HealthReply { json: text } = rpc(addr, &WireMsg::HealthQuery) else {
+        panic!("health query answered with a non-health frame")
+    };
+    let doc = json::parse(&text).expect("health JSON parses");
+    let routes = doc.get("routes").and_then(Json::as_arr).expect("routes array");
+    routes[0].get("input_len").and_then(Json::as_usize).expect("input_len")
+}
+
+/// Deduplicate a merged trace dump on `(node, seq)` — the router's
+/// cross-process merge fans the `TraceQuery` verb out to every replica,
+/// and in these single-process tests the replica shares the router's
+/// recorder, so every span arrives twice (once local, once scraped).
+fn dedup_spans(spans: &[Json]) -> Vec<Json> {
+    let mut seen: BTreeSet<(String, i64)> = BTreeSet::new();
+    spans
+        .iter()
+        .filter(|sp| {
+            let node = sp.get("node").and_then(Json::as_str).unwrap_or("").to_string();
+            let seq = sp.get("seq").and_then(Json::as_f64).unwrap_or(-1.0) as i64;
+            seen.insert((node, seq))
+        })
+        .cloned()
+        .collect()
+}
+
+fn stage_of(sp: &Json) -> String {
+    sp.get("stage").and_then(Json::as_str).unwrap_or("").to_string()
+}
+
+/// The acceptance bar of the tracing tentpole: one routed request whose
+/// first attempt is dropped on the wire (deterministic `conn_drop` fault,
+/// exactly one fire) produces **one** retrievable trace that covers the
+/// whole datapath and names every attempt with its replica and verdict
+/// (100 = transport failure, 0 = served).
+#[test]
+fn a_retried_request_leaves_one_trace_with_every_attempt_replica_and_verdict() {
+    let _guard = recorder_lock();
+    let rec = telemetry::recorder();
+    rec.configure(1, 0, "itest-fleet");
+    rec.reset();
+
+    // drop the first *request* connection without a reply; health probes
+    // never consult the fault plane, so readiness is undisturbed
+    let server = ReplicaServer::spawn("127.0.0.1:0", tiny_cfg(Some("seed=1;conn_drop:error*1@1")))
+        .expect("replica");
+    assert!(server.wait_ready(Duration::from_secs(120)), "replica boots");
+    let addr = server.addr();
+    let input_len = first_route_input_len(addr);
+
+    let router = FleetRouter::new(FleetConfig {
+        replicas: vec![addr.to_string()],
+        ..Default::default()
+    })
+    .expect("router");
+    assert!(router.wait_all_ready(Duration::from_secs(30)), "fleet admits the replica");
+
+    let trace: u64 = 0x00AB_0000_0001;
+    let resp = router
+        .submit_traced("dcgan", "winograd", vec![0.25; input_len], None, trace)
+        .expect("the retry serves the request");
+    assert!(!resp.output.is_empty(), "a served request has output");
+
+    let doc = router.trace_json(trace);
+    assert_eq!(doc.get("trace").and_then(Json::as_f64), Some(trace as f64));
+    let merged = doc.get("spans").and_then(Json::as_arr).expect("spans array");
+    let spans = dedup_spans(merged);
+    assert!(!spans.is_empty(), "a traced request must leave spans");
+    for sp in &spans {
+        assert_eq!(
+            sp.get("trace").and_then(Json::as_f64),
+            Some(trace as f64),
+            "a trace dump filtered by id holds that trace only: {sp:?}"
+        );
+    }
+
+    // attempt-level failover detail, in wall-clock order: the dropped
+    // first attempt, then the served retry — both naming the replica
+    let attempts: Vec<(u64, u64, String)> = spans
+        .iter()
+        .filter(|sp| stage_of(sp) == "attempt")
+        .map(|sp| {
+            (
+                sp.get("a").and_then(Json::as_f64).expect("attempt ordinal") as u64,
+                sp.get("b").and_then(Json::as_f64).expect("attempt verdict") as u64,
+                sp.get("label").and_then(Json::as_str).expect("replica label").to_string(),
+            )
+        })
+        .collect();
+    assert_eq!(attempts.len(), 2, "exactly two attempts must be recorded: {attempts:?}");
+    assert_eq!(
+        attempts[0],
+        (1, 100, addr.to_string()),
+        "first attempt: transport failure at the replica"
+    );
+    assert_eq!(attempts[1], (2, 0, addr.to_string()), "second attempt: served");
+
+    // the one trace covers the whole datapath, across the wire
+    let stages: BTreeSet<String> = spans.iter().map(stage_of).collect();
+    for want in ["admission", "queue", "batch_assemble", "dispatch", "wire", "attempt"] {
+        assert!(stages.contains(want), "stage '{want}' missing from the trace: {stages:?}");
+    }
+    assert!(
+        stages.contains("winograd_gemm") || stages.contains("layer_exec"),
+        "per-layer engine stages must attach to the trace: {stages:?}"
+    );
+
+    // the router's own scrape carries the fleet rollup and the attempt
+    // stage histogram the trace fed
+    let m = router.metrics_json();
+    assert_eq!(m.get("role").and_then(Json::as_str), Some("router"));
+    assert!(m.get("fleet").is_some(), "router metrics nest the fleet status");
+    let stages_obj = m.get("stages").and_then(Json::as_obj).expect("stage histograms");
+    assert!(stages_obj.contains_key("attempt"), "attempt histogram present: {stages_obj:?}");
+
+    drop(router);
+    server.shutdown();
+    rec.configure(0, 0, "itest-fleet");
+    rec.reset();
+}
+
+/// Golden scrape formats over the wire verb: stable-key JSON that
+/// byte-round-trips through the parser, and well-formed Prometheus text
+/// with the stage-latency keys the CI smoke asserts on.
+#[test]
+fn metrics_scrape_serves_stable_key_json_and_well_formed_prometheus() {
+    let _guard = recorder_lock();
+    let rec = telemetry::recorder();
+    rec.configure(1, 0, "itest-scrape");
+    rec.reset();
+
+    let server = ReplicaServer::spawn("127.0.0.1:0", tiny_cfg(None)).expect("replica");
+    assert!(server.wait_ready(Duration::from_secs(120)), "replica boots");
+    let addr = server.addr();
+    let input_len = first_route_input_len(addr);
+
+    // serve one traced request so the stage histograms are non-empty
+    match rpc(
+        addr,
+        &WireMsg::Request {
+            id: 1,
+            model: "dcgan".into(),
+            method: "winograd".into(),
+            deadline_us: 0,
+            input: vec![0.5; input_len],
+            trace: 0x00AB_0000_0002,
+        },
+    ) {
+        WireMsg::Response { .. } => {}
+        other => panic!("traced request failed: {other:?}"),
+    }
+
+    // JSON view: golden top-level shape, byte-stable serialization
+    let WireMsg::MetricsReply { body } = rpc(addr, &WireMsg::MetricsQuery { format: wire::format::JSON })
+    else {
+        panic!("metrics query answered with a non-metrics frame")
+    };
+    let doc = json::parse(&body).expect("metrics JSON parses");
+    for key in ["role", "node", "ready", "generation", "in_flight", "metrics", "stages"] {
+        assert!(doc.get(key).is_some(), "metrics doc missing '{key}':\n{body}");
+    }
+    assert_eq!(doc.get("role").and_then(Json::as_str), Some("replica"));
+    assert_eq!(doc.get("node").and_then(Json::as_str), Some("itest-scrape"));
+    assert_eq!(doc.get("ready"), Some(&Json::Bool(true)));
+    assert_eq!(
+        json::to_string_pretty(&doc),
+        body,
+        "BTreeMap key order + shortest-roundtrip floats make the scrape byte-stable"
+    );
+    let stages = doc.get("stages").and_then(Json::as_obj).expect("stage histograms");
+    assert!(
+        stages.contains_key("winograd_gemm") || stages.contains_key("layer_exec"),
+        "a traced request must feed the stage histograms: {stages:?}"
+    );
+
+    // Prometheus view: well-formed exposition carrying the stage-latency
+    // keys; string leaves are projected out
+    let WireMsg::MetricsReply { body: prom } =
+        rpc(addr, &WireMsg::MetricsQuery { format: wire::format::PROMETHEUS })
+    else {
+        panic!("metrics query answered with a non-metrics frame")
+    };
+    assert!(export::prometheus_well_formed(&prom), "exposition must parse:\n{prom}");
+    for key in ["wingan_ready 1", "wingan_in_flight 0"] {
+        assert!(prom.contains(key), "'{key}' missing:\n{prom}");
+    }
+    assert!(
+        prom.lines().any(|l| l.starts_with("wingan_stages_") && l.contains("_p99_ms ")),
+        "stage-latency keys missing:\n{prom}"
+    );
+    assert!(!prom.contains("itest-scrape"), "string leaves are JSON-only:\n{prom}");
+
+    server.shutdown();
+    rec.configure(0, 0, "itest-scrape");
+    rec.reset();
+}
+
+/// Random Winograd-able deconv layer (the paper's K_C <= 3 classes).
+#[derive(Debug)]
+struct TraceCase {
+    x: Tensor3,
+    w: Filter4,
+    s: usize,
+    p: usize,
+}
+
+fn gen_winograd_case(rng: &mut Rng) -> TraceCase {
+    let configs = [(5usize, 2usize), (4, 2), (3, 1), (6, 3), (2, 2), (6, 2)];
+    loop {
+        let (k, s) = configs[rng.below(configs.len())];
+        if tdc::kc(k, s) > 3 {
+            continue;
+        }
+        let p = tdc::default_padding(k, s);
+        let c_in = rng.int_in(1, 4);
+        let c_out = rng.int_in(1, 3);
+        let h = rng.int_in(1, 7);
+        let w = rng.int_in(1, 7);
+        return TraceCase {
+            x: Tensor3::from_vec(c_in, h, w, rng.normal_vec(c_in * h * w)),
+            w: Filter4::from_vec(c_in, c_out, k, k, rng.normal_vec(c_in * c_out * k * k)),
+            s,
+            p,
+        };
+    }
+}
+
+/// The no-perturbation pillar: with sampling on, under a live trace
+/// context, the engine's f64 outputs and every [`Events`] counter are
+/// bitwise identical to the untraced run — at every worker count.
+/// Recording reads clocks and appends to rings, never touches the
+/// arithmetic; this pins that claim on randomized layers.
+#[test]
+fn prop_tracing_on_or_off_is_bitwise_invisible_at_every_worker_count() {
+    let _guard = recorder_lock();
+    let rec = telemetry::recorder();
+    forall(
+        "tracing on == tracing off, bitwise + events",
+        12,
+        0x7E1E,
+        gen_winograd_case,
+        |c| {
+            let l = Layer {
+                kind: Kind::Deconv,
+                c_in: c.x.c,
+                c_out: c.w.c_out,
+                k: c.w.kh,
+                s: c.s,
+                p: c.p,
+                h_in: c.x.h,
+                w_in: c.x.w,
+                act: Activation::Linear,
+            };
+            let planner = Planner::new(PlanOptions {
+                select: Select::Force(Method::Winograd),
+                ..Default::default()
+            });
+            let lp = planner.compile_layer(&l, c.w.clone());
+            if lp.method != Method::Winograd {
+                return Err("expected a winograd-method plan".into());
+            }
+            let plan = Arc::new(ModelPlan {
+                model: "prop-trace".into(),
+                input_shape: (c.x.c, c.x.h, c.x.w),
+                output_shape: (c.w.c_out, c.s * c.x.h, c.s * c.x.w),
+                layers: vec![lp],
+            });
+            // baseline: sampling off, no trace context
+            rec.configure(0, 0, "prop-trace");
+            let base = Engine::with_workers(plan.clone(), 2).run(&c.x);
+            // sampling on, every run under a live trace
+            rec.configure(1, 0, "prop-trace");
+            for workers in [1usize, 2, 5] {
+                let traced = telemetry::with_trace(77, || {
+                    Engine::with_workers(plan.clone(), workers).run(&c.x)
+                });
+                let d = traced.y.max_abs_diff(&base.y);
+                if d != 0.0 {
+                    return Err(format!("workers={workers}: traced diff {d} (must be 0)"));
+                }
+                if traced.events != base.events {
+                    return Err(format!(
+                        "workers={workers}: events {:?} != untraced {:?}",
+                        traced.events, base.events
+                    ));
+                }
+            }
+            // non-vacuous: the traced runs really recorded per-layer spans
+            let spans = rec.spans(Some(77));
+            if spans.is_empty() {
+                return Err("traced runs recorded no spans — the property is vacuous".into());
+            }
+            rec.configure(0, 0, "prop-trace");
+            rec.reset();
+            Ok(())
+        },
+    );
+}
